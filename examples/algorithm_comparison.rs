@@ -1,0 +1,59 @@
+//! Algorithm comparison on one dataset — a compact Fig. 2 panel.
+//!
+//!     cargo run --release --example algorithm_comparison [scale]
+//!
+//! Runs the paper's six algorithms on experiment C (near-Gaussian
+//! mixtures — the hard case where the elementary quasi-Newton loses its
+//! quadratic rate and preconditioned L-BFGS shines) and prints the
+//! convergence table plus a terminal log-log sparkline per algorithm.
+
+use faster_ica::backend::NativeBackend;
+use faster_ica::ica::{solve, Algorithm, SolverConfig, Trace};
+use faster_ica::linalg::Mat;
+use faster_ica::preprocessing::{preprocess, Whitener};
+use faster_ica::signal;
+
+fn sparkline(trace: &Trace, cols: usize) -> String {
+    const BARS: &[char] = &['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let max_iter = trace.last().map(|r| r.iter).unwrap_or(0);
+    (0..cols)
+        .map(|c| {
+            let it = max_iter * c / cols.max(1);
+            let g = trace.grad_at_iter(it).unwrap_or(f64::NAN).max(1e-12);
+            // Map log10 in [-9, 0] onto the bar heights.
+            let z = ((g.log10() + 9.0) / 9.0).clamp(0.0, 1.0);
+            BARS[(z * (BARS.len() - 1) as f64).round() as usize]
+        })
+        .collect()
+}
+
+fn main() {
+    let scale: f64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(0.5);
+    let n = ((40.0 * scale) as usize).max(8);
+    let t = ((5000.0 * scale) as usize).max(1000);
+    println!("experiment C at N={n}, T={t} (α ramps 0.5→1, σ=0.1)\n");
+    let data = signal::experiment_c(n, t, 1);
+    let pre = preprocess(&data.x, Whitener::Sphering);
+
+    println!(
+        "{:>10} {:>7} {:>12} {:>12}   convergence (log |G|inf, left→right = iterations)",
+        "algorithm", "iters", "final |G|", "time"
+    );
+    for id in Algorithm::paper_suite() {
+        let algo = Algorithm::from_id(id).unwrap();
+        let cfg = SolverConfig::new(algo).with_tol(1e-8).with_max_iters(150);
+        let mut be = NativeBackend::new(pre.x.clone());
+        let res = solve(&mut be, &Mat::eye(n), &cfg);
+        let last = res.trace.last().unwrap();
+        println!(
+            "{:>10} {:>7} {:>12.2e} {:>12}   {}",
+            id,
+            res.iters,
+            last.grad_inf,
+            faster_ica::bench::fmt_duration(last.time),
+            sparkline(&res.trace, 40)
+        );
+    }
+    println!("\npaper shape: solid (preconditioned) methods reach 1e-8; infomax plateaus;");
+    println!("elementary qn loses its quadratic rate here but still beats gd.");
+}

@@ -1,0 +1,102 @@
+"""AOT lowering: JAX graphs -> HLO *text* artifacts for the Rust runtime.
+
+HLO text (not `lowered.compile()` / serialized HloModuleProto) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which xla_extension 0.5.1 (behind the published `xla` crate 0.1.6)
+rejects; the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/gen_hlo.py and its README.
+
+Usage (from the repo's python/ directory, as the Makefile does):
+
+    python -m compile.aot --out-dir ../artifacts [--shapes compile/shapes.json]
+
+Emits one `<graph>_n{N}_t{T}.hlo.txt` per (shape, graph) pair plus a
+`manifest.json` the Rust artifact registry loads.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from . import model
+
+
+def to_hlo_text(lowered):
+    """Lowered JAX computation -> HLO text.
+
+    `compiler_ir(dialect="hlo")` hands back the XlaComputation directly;
+    the StableHLO-text route (mlir_module_to_xla_computation) breaks on
+    version skew between jax's emitted StableHLO and the converter's
+    parser (e.g. `stablehlo.dynamic_slice` attribute renames), so we stay
+    in HLO land end-to-end. Multi-output graphs get a tuple root, single
+    outputs stay bare — the Rust loader handles both.
+    """
+    return lowered.compiler_ir(dialect="hlo").as_hlo_text()
+
+
+def lower_graph(name, n, t):
+    fn = model.GRAPHS[name]
+    w = jax.ShapeDtypeStruct((n, n), jnp.float64)
+    x = jax.ShapeDtypeStruct((n, t), jnp.float64)
+    return to_hlo_text(jax.jit(fn).lower(w, x))
+
+
+def artifact_name(graph, n, t):
+    return f"{graph}_n{n}_t{t}.hlo.txt"
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--shapes",
+        default=os.path.join(os.path.dirname(__file__), "shapes.json"),
+    )
+    ap.add_argument("--only-tag", default=None,
+                    help="restrict to shapes with this tag (faster CI)")
+    args = ap.parse_args()
+
+    with open(args.shapes) as f:
+        registry = json.load(f)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"dtype": "f64", "artifacts": []}
+    total = 0
+    for entry in registry["shapes"]:
+        if args.only_tag and entry.get("tag") != args.only_tag:
+            continue
+        n, t = entry["n"], entry["t"]
+        for graph in entry["graphs"]:
+            fname = artifact_name(graph, n, t)
+            path = os.path.join(args.out_dir, fname)
+            text = lower_graph(graph, n, t)
+            with open(path, "w") as f:
+                f.write(text)
+            digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+            manifest["artifacts"].append(
+                {
+                    "graph": graph,
+                    "n": n,
+                    "t": t,
+                    "file": fname,
+                    "sha256_16": digest,
+                    "tag": entry.get("tag", ""),
+                }
+            )
+            total += 1
+            print(f"  wrote {fname} ({len(text)} chars)", file=sys.stderr)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"AOT: {total} artifacts -> {args.out_dir}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,209 @@
+"""Layer-1 Pallas kernel: fused single-sweep ICA moments.
+
+The Theta(N^2 T) per-iteration hot spot of the paper. One sweep over the
+sample axis of Y = WX produces, per T-tile held in VMEM:
+
+    psi  = tanh(y/2)            -> G partial    psi @ y^T      (MXU matmul)
+    psi' = (1 - psi^2)/2        -> h_ij partial psi' @ (y*y)^T (MXU matmul)
+    logcosh loss partial, h_i partial, sigma^2 partial         (VPU reduce)
+
+The tanh is evaluated exactly once per element and feeds every statistic
+— the same cache-blocking idea the paper implements with numexpr/MKL, here
+expressed as a BlockSpec over the T axis: `grid=(T/TB,)`, the Y tile
+`(N, TB)` streams HBM->VMEM while the (N,N)/(N,1) accumulators stay
+resident across grid steps (Pallas keeps same-index output blocks in VMEM,
+so `ref[...] +=` accumulates without HBM round-trips).
+
+TPU adaptation notes (DESIGN.md "Hardware adaptation"): the two rank-TB
+contractions map onto the MXU; everything else is elementwise VPU work on
+the same tile. VMEM budget per step = (3 tiles of N x TB + accumulators)
+* 8 bytes; TB is chosen by `pick_tb` to stay under ~4 MiB so double
+buffering fits in 16 MiB VMEM. interpret=True everywhere on CPU — the
+structure, not the wallclock, is what carries to real TPUs.
+
+Padding: T may not be a multiple of TB. The final tile is zero-padded by
+the caller; zeros are harmless for loss/G/h_ij/sigma^2 (psi(0)=0, y^2=0)
+but psi'(0)=1/2 would pollute h_i, so the kernel masks psi' with the
+global column index (static T_real baked in at trace time).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LN2 = 0.6931471805599453
+
+# Statistics levels, mirroring rust's backend::StatsLevel.
+LEVEL_BASIC = "basic"  # loss + G
+LEVEL_H1 = "h1"        # + h_i, sigma^2
+LEVEL_H2 = "h2"        # + h_ij
+
+
+def pick_tb(n, t, vmem_bytes=4 * 1024 * 1024, dtype_bytes=8):
+    """Largest power-of-two tile size TB such that the working set
+    (three N x TB tiles + the N x N / N-vector accumulators) fits the
+    VMEM budget, clamped to [128, t]."""
+    acc = (2 * n * n + 3 * n) * dtype_bytes
+    tb = 128
+    while True:
+        nxt = tb * 2
+        if nxt > t or 3 * n * nxt * dtype_bytes + acc > vmem_bytes:
+            break
+        tb = nxt
+    return min(tb, max(t, 1))
+
+
+def _moments_kernel(y_ref, g_ref, h_ref, hi_ref, sig_ref, loss_ref, *,
+                    t_real, tb, level):
+    """One grid step: consume a (N, TB) tile of Y, update accumulators."""
+    y = y_ref[...]
+    u = 0.5 * y
+    a = jnp.abs(u)
+    psi = jnp.tanh(u)
+
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        loss_ref[...] = jnp.zeros_like(loss_ref)
+        if level in (LEVEL_H1, LEVEL_H2):
+            hi_ref[...] = jnp.zeros_like(hi_ref)
+            sig_ref[...] = jnp.zeros_like(sig_ref)
+        if level == LEVEL_H2:
+            h_ref[...] = jnp.zeros_like(h_ref)
+
+    # Column mask: global sample index < T (zero-padding guard).
+    col = step * tb + jax.lax.broadcasted_iota(jnp.int32, y.shape, 1)
+    valid = col < t_real
+
+    loss_tile = jnp.sum(2.0 * (a + jnp.log1p(jnp.exp(-2.0 * a)) - LN2))
+    loss_ref[...] += loss_tile
+
+    # G partial: psi @ y^T. Padded columns contribute psi(0)*0 = 0.
+    g_ref[...] += jax.lax.dot_general(
+        psi, y, (((1,), (1,)), ((), ())),
+        preferred_element_type=y.dtype)
+
+    if level in (LEVEL_H1, LEVEL_H2):
+        psip = jnp.where(valid, 0.5 * (1.0 - psi * psi), 0.0)
+        ysq = y * y
+        hi_ref[...] += jnp.sum(psip, axis=1)
+        sig_ref[...] += jnp.sum(ysq, axis=1)
+        if level == LEVEL_H2:
+            h_ref[...] += jax.lax.dot_general(
+                psip, ysq, (((1,), (1,)), ((), ())),
+                preferred_element_type=y.dtype)
+
+
+def moments(y, t_real=None, tb=None, level=LEVEL_H2, interpret=True):
+    """Fused ICA moments of Y (already padded to a TB multiple by the
+    caller, or padded here if needed).
+
+    Returns (loss_data, G, h_ij, h_i, sigma^2) with the trailing entries
+    present per `level` (absent ones are None). All are *averaged* over
+    t_real samples and G has the identity subtracted.
+    """
+    n, t_pad = y.shape
+    if t_real is None:
+        t_real = t_pad
+    if tb is None:
+        tb = pick_tb(n, t_pad)
+    if t_pad % tb:
+        pad = tb - t_pad % tb
+        y = jnp.pad(y, ((0, 0), (0, pad)))
+        t_pad += pad
+    grid = (t_pad // tb,)
+    dtype = y.dtype
+
+    out_shapes = (
+        jax.ShapeDtypeStruct((n, n), dtype),   # g sum
+        jax.ShapeDtypeStruct((n, n), dtype),   # h sum
+        jax.ShapeDtypeStruct((n,), dtype),     # hi sum
+        jax.ShapeDtypeStruct((n,), dtype),     # sig sum
+        jax.ShapeDtypeStruct((), dtype),       # loss sum
+    )
+    # Accumulators live at block (0, 0) for every grid step.
+    out_specs = (
+        pl.BlockSpec((n, n), lambda i: (0, 0)),
+        pl.BlockSpec((n, n), lambda i: (0, 0)),
+        pl.BlockSpec((n,), lambda i: (0,)),
+        pl.BlockSpec((n,), lambda i: (0,)),
+        pl.BlockSpec((), lambda i: ()),
+    )
+    kernel = functools.partial(
+        _moments_kernel, t_real=t_real, tb=tb, level=level)
+    gsum, hsum, hisum, sigsum, losssum = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((n, tb), lambda i: (0, i))],
+        out_shape=out_shapes,
+        out_specs=out_specs,
+        interpret=interpret,
+    )(y)
+
+    inv_t = 1.0 / t_real
+    loss = losssum * inv_t
+    g = gsum * inv_t - jnp.eye(n, dtype=dtype)
+    h = hsum * inv_t if level == LEVEL_H2 else None
+    hi = hisum * inv_t if level in (LEVEL_H1, LEVEL_H2) else None
+    sig = sigsum * inv_t if level in (LEVEL_H1, LEVEL_H2) else None
+    return loss, g, h, hi, sig
+
+
+def _loss_kernel(y_ref, loss_ref):
+    """Loss-only sweep (line-search probe): no psi, no matmuls."""
+    y = y_ref[...]
+    a = jnp.abs(0.5 * y)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        loss_ref[...] = jnp.zeros_like(loss_ref)
+
+    loss_ref[...] += jnp.sum(2.0 * (a + jnp.log1p(jnp.exp(-2.0 * a)) - LN2))
+
+
+def loss_only(y, t_real=None, tb=None, interpret=True):
+    """Data-part loss of Y through the Pallas loss kernel."""
+    n, t_pad = y.shape
+    if t_real is None:
+        t_real = t_pad
+    if tb is None:
+        tb = pick_tb(n, t_pad)
+    if t_pad % tb:
+        pad = tb - t_pad % tb
+        y = jnp.pad(y, ((0, 0), (0, pad)))
+        t_pad += pad
+    losssum = pl.pallas_call(
+        _loss_kernel,
+        grid=(t_pad // tb,),
+        in_specs=[pl.BlockSpec((n, tb), lambda i: (0, i))],
+        out_shape=jax.ShapeDtypeStruct((), y.dtype),
+        out_specs=pl.BlockSpec((), lambda i: ()),
+        interpret=interpret,
+    )(y)
+    return losssum / t_real
+
+
+def vmem_report(n, t, tb=None, dtype_bytes=8):
+    """Estimated VMEM working set + MXU utilization for DESIGN.md Perf.
+
+    Returns a dict with the per-grid-step VMEM bytes and the fraction of
+    kernel FLOPs that land on the MXU (the two rank-TB contractions)
+    versus the VPU (elementwise tanh/log1p sweeps).
+    """
+    if tb is None:
+        tb = pick_tb(n, t)
+    tiles = 3 * n * tb * dtype_bytes          # y, psi/psip, ysq
+    accs = (2 * n * n + 3 * n) * dtype_bytes
+    mxu_flops = 2 * 2 * n * n * tb            # two (N,TB)x(TB,N) matmuls
+    # elementwise: tanh(~10 flop-equiv), log1p/exp(~10), squares/sums (~6)
+    vpu_flops = 26 * n * tb
+    return {
+        "tb": tb,
+        "vmem_bytes": tiles + accs,
+        "mxu_fraction": mxu_flops / (mxu_flops + vpu_flops),
+        "flops_per_tile": mxu_flops + vpu_flops,
+    }

@@ -1,0 +1,70 @@
+"""Pure-jnp oracle for the ICA per-iteration statistics (Layer-1 reference).
+
+These are the textbook formulas from the paper, written with no fusion or
+tiling tricks. The Pallas kernels in `moments.py` must match these to
+near-machine precision; pytest + hypothesis enforce it.
+
+Quantities (paper eqs. 2-4), for Y in R^{N x T}:
+
+    loss_data = E[sum_i 2 log cosh(y_i/2)]          (data term of eq. 2)
+    G         = E[psi(Y) Y^T] - I, psi = tanh(./2)  (eq. 3)
+    h_ij      = E[psi'(y_i) y_j^2]                  (eq. 4)
+    h_i       = E[psi'(y_i)]                        (eq. 4)
+    sigma_j^2 = E[y_j^2]                            (eq. 4)
+"""
+
+import jax.numpy as jnp
+
+LN2 = 0.6931471805599453
+
+
+def neg_log_density(y):
+    """2 log cosh(y/2), computed overflow-safely."""
+    a = jnp.abs(0.5 * y)
+    return 2.0 * (a + jnp.log1p(jnp.exp(-2.0 * a)) - LN2)
+
+
+def psi(y):
+    """Score function tanh(y/2)."""
+    return jnp.tanh(0.5 * y)
+
+
+def psi_prime(y):
+    """psi'(y) = (1 - tanh^2(y/2)) / 2."""
+    t = jnp.tanh(0.5 * y)
+    return 0.5 * (1.0 - t * t)
+
+
+def loss_data(y):
+    """Per-sample averaged data loss."""
+    t = y.shape[1]
+    return jnp.sum(neg_log_density(y)) / t
+
+
+def gradient(y):
+    """Relative gradient G = psi(Y) Y^T / T - I."""
+    n, t = y.shape
+    return psi(y) @ y.T / t - jnp.eye(n, dtype=y.dtype)
+
+
+def h2_moments(y):
+    """h_ij = psi'(Y) (Y*Y)^T / T."""
+    t = y.shape[1]
+    return psi_prime(y) @ (y * y).T / t
+
+
+def h1_moments(y):
+    """(h_i, sigma_j^2)."""
+    return jnp.mean(psi_prime(y), axis=1), jnp.mean(y * y, axis=1)
+
+
+def stats_h2(y):
+    """Full statistics tuple: (loss_data, G, h_ij, h_i, sigma^2)."""
+    hi, sig = h1_moments(y)
+    return loss_data(y), gradient(y), h2_moments(y), hi, sig
+
+
+def stats_h1(y):
+    """Theta(NT)-moment statistics: (loss_data, G, h_i, sigma^2)."""
+    hi, sig = h1_moments(y)
+    return loss_data(y), gradient(y), hi, sig

@@ -1,0 +1,66 @@
+"""Layer-2 JAX model: the compute graphs the Rust coordinator executes.
+
+Each graph takes the unmixing matrix W and the (preprocessed) data X,
+forms Y = W @ X (one MXU matmul) and feeds the fused Pallas moments
+kernel. Everything is f64 — convergence to gradient-inf-norm 1e-8 and the
+quadratic tail of the quasi-Newton methods need it.
+
+`log|det W|` is deliberately NOT in these graphs: on the CPU PJRT plugin
+of xla_extension 0.5.1 it would lower to a LAPACK custom-call that the
+runtime cannot serve. Rust adds it with its own LU (Theta(N^3), trivial
+next to the Theta(N^2 T) sweeps here).
+
+Graphs (all return flat tuples, lowered with return_tuple=True):
+
+    stats_h2(w, x)  -> (loss_data, G, h_ij, h_i, sigma2)
+    stats_h1(w, x)  -> (loss_data, G, h_i, sigma2)
+    stats_basic(w,x)-> (loss_data, G)
+    loss_only(w, x) -> (loss_data,)
+    grad(w, x)      -> (G,)          # Infomax minibatch step
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from .kernels import moments as mk
+
+
+def _y(w, x):
+    return jnp.dot(w, x, preferred_element_type=x.dtype)
+
+
+def stats_h2(w, x):
+    loss, g, h, hi, sig = mk.moments(_y(w, x), level=mk.LEVEL_H2)
+    return loss, g, h, hi, sig
+
+
+def stats_h1(w, x):
+    loss, g, _, hi, sig = mk.moments(_y(w, x), level=mk.LEVEL_H1)
+    return loss, g, hi, sig
+
+
+def stats_basic(w, x):
+    loss, g, _, _, _ = mk.moments(_y(w, x), level=mk.LEVEL_BASIC)
+    return loss, g
+
+
+def loss_only(w, x):
+    return (mk.loss_only(_y(w, x)),)
+
+
+def grad(w, x):
+    _, g, _, _, _ = mk.moments(_y(w, x), level=mk.LEVEL_BASIC)
+    return (g,)
+
+
+#: name -> (callable, which outputs it produces); single source of truth
+#: for aot.py and the tests.
+GRAPHS = {
+    "stats_h2": stats_h2,
+    "stats_h1": stats_h1,
+    "stats_basic": stats_basic,
+    "loss_only": loss_only,
+    "grad": grad,
+}

@@ -1,0 +1,88 @@
+"""Consistency of the emitted artifact set (artifacts/ after `make
+artifacts`): manifest <-> files <-> HLO parameter shapes.
+
+These are regression tests for the Rust runtime's contract; they skip
+cleanly when artifacts have not been generated yet.
+"""
+
+import json
+import os
+import re
+
+import pytest
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART_DIR, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="run `make artifacts` first"
+)
+
+
+def load_manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_manifest_is_f64():
+    assert load_manifest()["dtype"] == "f64"
+
+
+def test_every_entry_has_a_file():
+    m = load_manifest()
+    assert m["artifacts"], "manifest empty"
+    for a in m["artifacts"]:
+        path = os.path.join(ART_DIR, a["file"])
+        assert os.path.exists(path), a["file"]
+        assert os.path.getsize(path) > 100, f"{a['file']} suspiciously small"
+
+
+def test_hlo_parameter_shapes_match_manifest():
+    m = load_manifest()
+    for a in m["artifacts"]:
+        n, t = a["n"], a["t"]
+        with open(os.path.join(ART_DIR, a["file"])) as f:
+            text = f.read()
+        assert text.startswith("HloModule"), a["file"]
+        # ENTRY computation signature carries both parameter shapes.
+        layout = re.search(r"entry_computation_layout=\{(.*)\}", text)
+        assert layout, f"{a['file']}: no entry layout"
+        sig = layout.group(1)
+        assert f"f64[{n},{n}]" in sig, f"{a['file']}: W shape missing in {sig}"
+        assert f"f64[{n},{t}]" in sig, f"{a['file']}: X shape missing in {sig}"
+
+
+def test_no_unservable_custom_calls():
+    # LAPACK/FFI custom-calls cannot be served by the xla crate's CPU
+    # client (xla_extension 0.5.1); artifacts must be pure HLO.
+    m = load_manifest()
+    for a in m["artifacts"]:
+        with open(os.path.join(ART_DIR, a["file"])) as f:
+            text = f.read()
+        assert "custom-call" not in text, f"{a['file']} contains a custom-call"
+
+
+def test_manifest_matches_shape_registry():
+    # Every (shape, graph) pair in shapes.json must be represented
+    # (the Rust registry trusts the manifest; this guards aot.py drift).
+    with open(
+        os.path.join(os.path.dirname(__file__), "..", "compile", "shapes.json")
+    ) as f:
+        registry = json.load(f)
+    m = load_manifest()
+    have = {(a["graph"], a["n"], a["t"]) for a in m["artifacts"]}
+    for entry in registry["shapes"]:
+        for graph in entry["graphs"]:
+            key = (graph, entry["n"], entry["t"])
+            assert key in have, f"missing artifact for {key}"
+
+
+def test_digests_match_files():
+    import hashlib
+
+    m = load_manifest()
+    for a in m["artifacts"]:
+        with open(os.path.join(ART_DIR, a["file"])) as f:
+            text = f.read()
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        assert digest == a["sha256_16"], f"{a['file']} digest drift"

@@ -1,0 +1,104 @@
+//! Ablation: why the paper's Hessian *approximations* beat the truth.
+//!
+//! §2.2.2 argues the full Newton method (true Hessian, Θ(N³T) build +
+//! dense solve) is possible but slow; §2.2.3 motivates H̃¹/H̃². This
+//! bench quantifies that design decision: per-iteration cost and
+//! time-to-tolerance of full Newton vs elementary quasi-Newton vs
+//! preconditioned L-BFGS, and the λ_min sensitivity of Alg. 1.
+
+use faster_ica::backend::{ComputeBackend, NativeBackend, StatsLevel};
+use faster_ica::bench::Bencher;
+use faster_ica::ica::newton::{dense_hessian, h3_tensor, solve_newton};
+use faster_ica::ica::{solve, Algorithm, HessianApprox, SolverConfig};
+use faster_ica::linalg::{matmul, Mat};
+use faster_ica::rng::{Laplace, Pcg64, Sample};
+
+fn laplace_mix(n: usize, t: usize, seed: u64) -> Mat {
+    let mut rng = Pcg64::new(seed);
+    let lap = Laplace::standard();
+    let s = Mat::from_fn(n, t, |_, _| lap.sample(&mut rng));
+    let a = faster_ica::testkit::gen::well_conditioned(&mut rng, n);
+    matmul(&a, &s)
+}
+
+fn main() {
+    let fast = std::env::var("FICA_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let (n, t) = if fast { (6, 1500) } else { (10, 4000) };
+    let b = Bencher::default();
+
+    println!("== per-iteration Hessian cost (N={n}, T={t}) ==");
+    let x = laplace_mix(n, t, 1);
+    let w = Mat::eye(n);
+    let mut be = NativeBackend::new(x.clone());
+    let stats = b.run("H1 moments (via stats H1)", || be.stats(&w, StatsLevel::H1));
+    let _ = stats;
+    let stats2 = b.run("H2 moments (via stats H2)", || be.stats(&w, StatsLevel::H2));
+    let _ = stats2;
+    let y = matmul(&w, &x);
+    let m_h3 = b.run("true Hessian tensor h_ijl (Θ(N³T))", || h3_tensor(&y));
+    let h3 = h3_tensor(&y);
+    let m_dense = b.run("dense assembly + spectral floor (Θ(N⁶))", || {
+        faster_ica::ica::newton::spectral_floor(&dense_hessian(&h3), 1e-2)
+    });
+    println!(
+        "  true-Hessian overhead vs H̃² build: {:.1}x",
+        (m_h3.median() + m_dense.median())
+            / b.run("H2 stats again", || be.stats(&w, StatsLevel::H2)).median()
+    );
+
+    println!("\n== time-to-1e-8 (N={n}, T={t}) ==");
+    let run_algo = |label: &str, algo: Algorithm| {
+        let mut be = NativeBackend::new(x.clone());
+        let cfg = SolverConfig::new(algo).with_tol(1e-8).with_max_iters(100);
+        let t0 = std::time::Instant::now();
+        let res = solve(&mut be, &Mat::eye(n), &cfg);
+        println!(
+            "  {label:>12}: {} iters, {:.3}s, converged={}",
+            res.iters,
+            t0.elapsed().as_secs_f64(),
+            res.converged
+        );
+    };
+    run_algo("qn-h1", Algorithm::QuasiNewton { approx: HessianApprox::H1 });
+    run_algo("qn-h2", Algorithm::QuasiNewton { approx: HessianApprox::H2 });
+    run_algo(
+        "plbfgs-h2",
+        Algorithm::Lbfgs { precond: Some(HessianApprox::H2), memory: 7 },
+    );
+    let t0 = std::time::Instant::now();
+    let res = solve_newton(x.clone(), &Mat::eye(n), 1e-8, 100, 1e-2);
+    println!(
+        "  {:>12}: {} iters, {:.3}s, converged={}",
+        "full-newton",
+        res.iters,
+        t0.elapsed().as_secs_f64(),
+        res.converged
+    );
+
+    println!("\n== λ_min sensitivity of Alg. 1 (plbfgs-h2, hard data) ==");
+    // Experiment-B-like data (Gaussian block ⇒ singular Hessian blocks).
+    let xb = {
+        let d = faster_ica::signal::experiment_b(9, 3000, 3);
+        faster_ica::preprocessing::preprocess(&d.x, faster_ica::preprocessing::Whitener::Sphering)
+            .x
+    };
+    for lam in [1e-4, 1e-2, 1e-1, 0.5] {
+        let mut be = NativeBackend::new(xb.clone());
+        let mut cfg = SolverConfig::new(Algorithm::Lbfgs {
+            precond: Some(HessianApprox::H2),
+            memory: 7,
+        })
+        .with_tol(1e-7)
+        .with_max_iters(200);
+        cfg.lambda_min = lam;
+        let t0 = std::time::Instant::now();
+        let res = solve(&mut be, &Mat::eye(9), &cfg);
+        println!(
+            "  λ_min = {lam:>6}: {} iters, {:.3}s, converged={}, fallbacks={}",
+            res.iters,
+            t0.elapsed().as_secs_f64(),
+            res.converged,
+            res.gradient_fallbacks
+        );
+    }
+}

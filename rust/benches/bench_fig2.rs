@@ -1,0 +1,53 @@
+//! Fig. 2 regeneration: experiments A, B, C — the six-algorithm suite,
+//! median over seeds, reporting time/iterations-to-tolerance per
+//! algorithm (the bench-scale version of the paper's central figure).
+//!
+//! Env knobs: FICA_BENCH_FAST=1 (tiny), FICA_BENCH_SEEDS, FICA_BENCH_SCALE.
+
+use faster_ica::experiments::fig2::{run_suite, SuiteConfig};
+use faster_ica::experiments::ExperimentId;
+
+fn env_f64(name: &str, default: f64) -> f64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let fast = std::env::var("FICA_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let seeds = env_usize("FICA_BENCH_SEEDS", if fast { 2 } else { 3 });
+    let scale = env_f64("FICA_BENCH_SCALE", if fast { 0.12 } else { 0.25 });
+
+    for (exp, label) in [
+        (ExperimentId::Fig2A, "experiment A (Laplace, model holds)"),
+        (ExperimentId::Fig2B, "experiment B (Laplace+Gaussian+sub-Gaussian)"),
+        (ExperimentId::Fig2C, "experiment C (near-Gaussian mixtures)"),
+    ] {
+        println!("\n=== Fig. 2 {label} — {seeds} seeds, scale {scale} ===");
+        let mut cfg = SuiteConfig::new(exp);
+        cfg.seeds = seeds;
+        cfg.scale = scale;
+        cfg.max_iters = if fast { 60 } else { 150 };
+        cfg.summary_tol = 1e-6;
+        let t0 = std::time::Instant::now();
+        let res = run_suite(&cfg);
+        println!(
+            "{:>10} {:>14} {:>14} {:>16}",
+            "algorithm", "iters->1e-6", "time->1e-6", "final |G| median"
+        );
+        for a in &res.per_algo {
+            println!(
+                "{:>10} {:>14} {:>14} {:>16.2e}",
+                a.algo,
+                a.iters_to_tol.map(|v| v.to_string()).unwrap_or_else(|| "-".into()),
+                a.time_to_tol
+                    .map(faster_ica::bench::fmt_duration)
+                    .unwrap_or_else(|| "-".into()),
+                a.final_grad
+            );
+        }
+        println!("suite wall time: {:.1}s", t0.elapsed().as_secs_f64());
+    }
+}

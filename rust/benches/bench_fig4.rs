@@ -1,0 +1,51 @@
+//! Fig. 4 regeneration: initialization-independence as the gradient
+//! vanishes — off-diagonal mass of the normalized `U_sph · U_PCA⁻¹`
+//! against the gradient tolerance ladder.
+//!
+//! The paper observed the striking convergence-to-identity on **4 of
+//! 13** recordings; on the others the two initializations settle in
+//! distinct local optima. We reproduce exactly that: several synthetic
+//! recordings, reporting per-recording mass collapse and how many align.
+
+use faster_ica::experiments::fig4::{run, Fig4Config};
+
+fn main() {
+    let fast = std::env::var("FICA_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let scale = if fast { 0.3 } else { 0.5 };
+    let seeds: &[u64] = if fast { &[2] } else { &[0, 1, 2, 3] };
+    let t0 = std::time::Instant::now();
+    println!("=== Fig. 4 (scale {scale}) — off-diagonal mass vs gradient tolerance ===");
+    let mut aligned = 0;
+    for &seed in seeds {
+        let cfg = Fig4Config {
+            seed,
+            scale,
+            tolerances: vec![1e-2, 1e-3, 1e-4, 1e-5, 1e-6],
+            max_iters: 400,
+        };
+        let r = run(&cfg);
+        let first = r.levels.first().unwrap().off_diag_mean;
+        let last = r.levels.last().unwrap().off_diag_mean;
+        let verdict = if last < 0.05 && last < 0.5 * first {
+            aligned += 1;
+            "ALIGNED (identity)"
+        } else {
+            "distinct local optima"
+        };
+        print!("  recording {seed}: mass");
+        for l in &r.levels {
+            print!(" {:.3}@{:.0e}", l.off_diag_mean, l.tol);
+        }
+        println!("  -> {verdict}");
+    }
+    println!("wall time: {:.1}s", t0.elapsed().as_secs_f64());
+    println!(
+        "{aligned}/{} recordings converge to the same solution as grad -> 0 \
+         (paper: 4/13 strikingly aligned, the rest did not)",
+        seeds.len()
+    );
+    assert!(
+        aligned >= 1,
+        "at least one recording must show the paper's identity-convergence"
+    );
+}

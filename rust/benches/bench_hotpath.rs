@@ -1,0 +1,85 @@
+//! Hot-path micro-benchmarks: the Θ(N²T) per-iteration statistics on the
+//! native and XLA backends, the complexity hierarchy (Basic < H1 < H2),
+//! and the matmul kernels underneath. Regenerates the paper's implicit
+//! per-iteration cost table (§2.2.3).
+//!
+//! Run: `cargo bench --bench bench_hotpath` (FICA_BENCH_FAST=1 for CI).
+
+use faster_ica::backend::{ComputeBackend, NativeBackend, StatsLevel};
+use faster_ica::bench::Bencher;
+use faster_ica::linalg::{matmul, matmul_a_bt, Mat};
+use faster_ica::rng::{Laplace, Pcg64, Sample};
+use faster_ica::runtime::{default_artifact_dir, Engine, XlaBackend};
+use std::rc::Rc;
+
+fn data(n: usize, t: usize, seed: u64) -> Mat {
+    let mut rng = Pcg64::new(seed);
+    let lap = Laplace::standard();
+    Mat::from_fn(n, t, |_, _| lap.sample(&mut rng))
+}
+
+fn main() {
+    let b = Bencher::default();
+    println!("== hot path: per-iteration statistics ==");
+
+    for &(n, t) in &[(8usize, 2000usize), (40, 10_000)] {
+        let x = data(n, t, 1);
+        let w = Mat::eye(n);
+        let mut native = NativeBackend::new(x.clone());
+
+        let basic = b.run(&format!("native stats Basic   N={n} T={t}"), || {
+            native.stats(&w, StatsLevel::Basic)
+        });
+        let h1 = b.run(&format!("native stats H1      N={n} T={t}"), || {
+            native.stats(&w, StatsLevel::H1)
+        });
+        let h2 = b.run(&format!("native stats H2      N={n} T={t}"), || {
+            native.stats(&w, StatsLevel::H2)
+        });
+        let loss =
+            b.run(&format!("native loss_only     N={n} T={t}"), || native.loss_data(&w));
+        println!(
+            "  complexity ratios: H1/Basic = {:.2}, H2/Basic = {:.2}, loss/Basic = {:.2}",
+            h1.median() / basic.median(),
+            h2.median() / basic.median(),
+            loss.median() / basic.median()
+        );
+
+        // XLA backend (requires artifacts for this shape).
+        if let Ok(engine) = Engine::new(default_artifact_dir()).map(Rc::new) {
+            if let Ok(mut xla) = XlaBackend::new(engine, x.clone()) {
+                let _ = xla.stats(&w, StatsLevel::H2); // compile outside timing
+                b.run(&format!("xla    stats H2      N={n} T={t}"), || {
+                    xla.stats(&w, StatsLevel::H2)
+                });
+                let _ = xla.loss_data(&w);
+                b.run(&format!("xla    loss_only     N={n} T={t}"), || xla.loss_data(&w));
+            }
+        }
+    }
+
+    println!("\n== matmul kernels ==");
+    for &(m, k, nn) in &[(40usize, 10_000usize, 40usize), (64, 30_000, 64)] {
+        let a = data(m, k, 2);
+        let bb = data(nn, k, 3);
+        b.run(&format!("matmul_a_bt {m}x{k} x {nn}x{k}T"), || matmul_a_bt(&a, &bb));
+        let c = data(k, nn, 4);
+        let a2 = data(m, k, 5);
+        b.run(&format!("matmul      {m}x{k} x {k}x{nn}"), || matmul(&a2, &c));
+    }
+
+    println!("\n== solver step composition (N=40, T=10000) ==");
+    let x = data(40, 10_000, 6);
+    let mut be = NativeBackend::new(x);
+    let w = Mat::eye(40);
+    let stats = be.stats(&w, StatsLevel::H2);
+    b.run("hessian H2 build+regularize+solve", || {
+        let mut h = faster_ica::ica::BlockDiagHessian::from_stats(
+            &stats,
+            faster_ica::ica::HessianApprox::H2,
+        );
+        h.regularize(1e-2);
+        h.solve(&stats.g)
+    });
+    b.run("logdet via LU (N=40)", || faster_ica::linalg::log_abs_det(&w));
+}

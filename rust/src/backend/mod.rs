@@ -1,0 +1,76 @@
+//! Compute backends: the Θ(N²T) per-iteration data sweeps.
+//!
+//! A backend owns the (preprocessed) data `X ∈ R^{N×T}` and evaluates, for
+//! a candidate unmixing matrix `W`:
+//!
+//! - the data part of the loss `Ê[Σ_i 2 log cosh(y_i/2)]`,
+//! - the relative gradient `G = Ê[ψ(Y)Yᵀ] - I` (eq. 3),
+//! - the Hessian-approximation moments `ĥ_ij`, `ĥ_i`, `σ̂_j²` (eq. 4),
+//!
+//! where `Y = WX`. Two implementations:
+//!
+//! - [`NativeBackend`] — pure Rust, fused single-sweep, always available.
+//! - `XlaBackend` (in [`crate::runtime`]) — executes the AOT-compiled
+//!   JAX/Pallas artifact through PJRT; Python is never on this path.
+//!
+//! The `log|det W|` term is intentionally *not* part of the backend
+//! contract: it is Θ(N³), independent of T, and computed by the caller
+//! with the library's own LU (LAPACK custom-calls cannot be served by the
+//! CPU PJRT plugin of xla_extension 0.5.1).
+
+mod native;
+
+pub use native::NativeBackend;
+
+use crate::linalg::Mat;
+
+/// How much of the per-iteration statistics a solver needs.
+///
+/// This mirrors the paper's complexity hierarchy: `Basic` is what plain
+/// gradient methods need, `H1` adds the Θ(NT) moments of eq. 7, `H2` adds
+/// the Θ(N²T) moments of eq. 6.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum StatsLevel {
+    /// Loss + gradient only.
+    Basic,
+    /// Loss + gradient + `ĥ_i` + `σ̂_j²` (enough for H̃¹).
+    H1,
+    /// Everything, including `ĥ_ij` (enough for H̃²).
+    H2,
+}
+
+/// Per-iteration statistics at a given `W`.
+#[derive(Clone, Debug)]
+pub struct IcaStats {
+    /// Data part of the loss: `Ê[Σ_i 2 log cosh(y_i/2)]` (no logdet).
+    pub loss_data: f64,
+    /// Relative gradient `G = Ê[ψ(Y)Yᵀ] - I`.
+    pub g: Mat,
+    /// `ĥ_i = Ê[ψ'(y_i)]`; empty unless level ≥ H1.
+    pub h1: Vec<f64>,
+    /// `σ̂_j² = Ê[y_j²]`; empty unless level ≥ H1.
+    pub sigma2: Vec<f64>,
+    /// `ĥ_ij = Ê[ψ'(y_i) y_j²]`; 0×0 unless level = H2.
+    pub h2: Mat,
+}
+
+/// A compute backend bound to one dataset.
+pub trait ComputeBackend {
+    /// Number of signals N.
+    fn n(&self) -> usize;
+    /// Number of samples T.
+    fn t(&self) -> usize;
+
+    /// Full statistics at `W` (shape N×N).
+    fn stats(&mut self, w: &Mat, level: StatsLevel) -> IcaStats;
+
+    /// Data-part loss only (line-search probe).
+    fn loss_data(&mut self, w: &Mat) -> f64;
+
+    /// Relative gradient on the sample range `[lo, hi)` only — the
+    /// Infomax minibatch step. Default: full-batch fallback.
+    fn grad_batch(&mut self, w: &Mat, lo: usize, hi: usize) -> Mat;
+
+    /// Human-readable backend name (reports/benches).
+    fn name(&self) -> &'static str;
+}

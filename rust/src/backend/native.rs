@@ -1,0 +1,302 @@
+//! Pure-Rust compute backend (fused single-sweep hot path).
+//!
+//! Mirrors the paper's numexpr/MKL implementation strategy: one pass over
+//! `Y` evaluates `tanh(y/2)` exactly once per element and feeds every
+//! downstream statistic (loss, ψ, ψ', y²); the two Θ(N²T) contractions
+//! (`ψ(Y)Yᵀ` and `ψ'(Y)(Y∘Y)ᵀ`) are contiguous-row dot-product matmuls.
+//!
+//! All workspaces are allocated once at construction and reused across
+//! iterations — the solver hot loop performs no heap allocation of size T.
+
+use super::{ComputeBackend, IcaStats, StatsLevel};
+use crate::ica::score::LogCosh;
+use crate::linalg::{matmul_a_bt_into, matmul_into, Mat};
+
+/// Native backend bound to a dataset `X ∈ R^{N×T}`.
+pub struct NativeBackend {
+    x: Mat,
+    score: LogCosh,
+    // Workspaces (N×T), reused across calls.
+    y: Mat,
+    psi: Mat,
+    psip: Mat,
+    ysq: Mat,
+}
+
+impl NativeBackend {
+    pub fn new(x: Mat) -> Self {
+        let (n, t) = (x.rows(), x.cols());
+        Self {
+            x,
+            score: LogCosh,
+            y: Mat::zeros(n, t),
+            psi: Mat::zeros(n, t),
+            psip: Mat::zeros(n, t),
+            ysq: Mat::zeros(n, t),
+        }
+    }
+
+    /// Borrow the dataset.
+    pub fn data(&self) -> &Mat {
+        &self.x
+    }
+
+    /// Compute Y = W·X into the workspace.
+    fn compute_y(&mut self, w: &Mat) {
+        matmul_into(w, &self.x, &mut self.y);
+    }
+}
+
+impl ComputeBackend for NativeBackend {
+    fn n(&self) -> usize {
+        self.x.rows()
+    }
+
+    fn t(&self) -> usize {
+        self.x.cols()
+    }
+
+    fn stats(&mut self, w: &Mat, level: StatsLevel) -> IcaStats {
+        let (n, t) = (self.n(), self.t());
+        assert_eq!((w.rows(), w.cols()), (n, n));
+        self.compute_y(w);
+        let tf = t as f64;
+
+        // Fused elementwise sweep: ONE exp per element feeds everything:
+        // with e = exp(-2|u|), tanh(|u|) = (1-e)/(1+e) and
+        // log cosh u = |u| + ln(1+e) - ln 2  (u = y/2).
+        let mut loss_acc = 0.0;
+        let need_h = level >= StatsLevel::H1;
+        for i in 0..n {
+            let yrow = self.y.row(i);
+            let psirow = self.psi.row_mut(i);
+            for (p, &yv) in psirow.iter_mut().zip(yrow) {
+                let u = 0.5 * yv;
+                let a = u.abs();
+                let e = (-2.0 * a).exp();
+                loss_acc += 2.0 * (a + e.ln_1p() - std::f64::consts::LN_2);
+                *p = ((1.0 - e) / (1.0 + e)).copysign(u);
+            }
+        }
+        if need_h {
+            for i in 0..n {
+                // ψ' = (1 - ψ²)/2 reuses the stored tanh; y² for σ̂²/ĥ_ij.
+                let psirow = self.psi.row(i);
+                let psiprow = self.psip.row_mut(i);
+                for (pp, &p) in psiprow.iter_mut().zip(psirow) {
+                    *pp = 0.5 * (1.0 - p * p);
+                }
+                let yrow = self.y.row(i);
+                let ysqrow = self.ysq.row_mut(i);
+                for (sq, &yv) in ysqrow.iter_mut().zip(yrow) {
+                    *sq = yv * yv;
+                }
+            }
+        }
+
+        // G = ψ(Y) Yᵀ / T - I.
+        let mut g = Mat::zeros(n, n);
+        matmul_a_bt_into(&self.psi, &self.y, &mut g);
+        g.scale_inplace(1.0 / tf);
+        for i in 0..n {
+            g[(i, i)] -= 1.0;
+        }
+
+        let (mut h1, mut sigma2) = (Vec::new(), Vec::new());
+        let mut h2 = Mat::zeros(0, 0);
+        if need_h {
+            h1 = self.psip.row_means();
+            sigma2 = self.ysq.row_means();
+        }
+        if level == StatsLevel::H2 {
+            // ĥ_ij = Ê[ψ'(y_i) y_j²] = ψ'(Y) · (Y∘Y)ᵀ / T.
+            let mut h = Mat::zeros(n, n);
+            matmul_a_bt_into(&self.psip, &self.ysq, &mut h);
+            h.scale_inplace(1.0 / tf);
+            h2 = h;
+        }
+
+        IcaStats { loss_data: loss_acc / tf, g, h1, sigma2, h2 }
+    }
+
+    fn loss_data(&mut self, w: &Mat) -> f64 {
+        let (n, t) = (self.n(), self.t());
+        assert_eq!((w.rows(), w.cols()), (n, n));
+        self.compute_y(w);
+        let mut acc = 0.0;
+        for i in 0..n {
+            for &yv in self.y.row(i) {
+                let a = (0.5 * yv).abs();
+                acc += 2.0 * (a + (-2.0 * a).exp().ln_1p() - std::f64::consts::LN_2);
+            }
+        }
+        acc / t as f64
+    }
+
+    fn grad_batch(&mut self, w: &Mat, lo: usize, hi: usize) -> Mat {
+        let n = self.n();
+        assert!(lo < hi && hi <= self.t(), "bad batch range [{lo},{hi})");
+        let tb = hi - lo;
+        // Y_b = W · X[:, lo..hi], streamed into the front of the workspace.
+        for i in 0..n {
+            for c in 0..tb {
+                let mut acc = 0.0;
+                for k in 0..n {
+                    acc += w[(i, k)] * self.x[(k, lo + c)];
+                }
+                self.y[(i, c)] = acc;
+            }
+        }
+        for i in 0..n {
+            for c in 0..tb {
+                self.psi[(i, c)] = self.score.psi(self.y[(i, c)]);
+            }
+        }
+        let mut g = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for c in 0..tb {
+                    acc += self.psi[(i, c)] * self.y[(j, c)];
+                }
+                g[(i, j)] = acc / tb as f64 - if i == j { 1.0 } else { 0.0 };
+            }
+        }
+        g
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Laplace, Pcg64, Sample};
+
+    fn test_problem(n: usize, t: usize, seed: u64) -> (Mat, Mat) {
+        let mut rng = Pcg64::new(seed);
+        let lap = Laplace::standard();
+        let x = Mat::from_fn(n, t, |_, _| lap.sample(&mut rng));
+        let w = crate::testkit::gen::well_conditioned(&mut rng, n);
+        (x, w)
+    }
+
+    /// Straightforward reference implementation of all statistics.
+    fn reference_stats(x: &Mat, w: &Mat) -> IcaStats {
+        let score = LogCosh;
+        let (n, t) = (x.rows(), x.cols());
+        let y = crate::linalg::matmul(w, x);
+        let tf = t as f64;
+        let mut loss = 0.0;
+        for i in 0..n {
+            for &v in y.row(i) {
+                loss += score.neg_log_density(v);
+            }
+        }
+        let mut g = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for s in 0..t {
+                    acc += score.psi(y[(i, s)]) * y[(j, s)];
+                }
+                g[(i, j)] = acc / tf - if i == j { 1.0 } else { 0.0 };
+            }
+        }
+        let h1: Vec<f64> = (0..n)
+            .map(|i| y.row(i).iter().map(|&v| score.psi_prime(v)).sum::<f64>() / tf)
+            .collect();
+        let sigma2: Vec<f64> = (0..n)
+            .map(|i| y.row(i).iter().map(|&v| v * v).sum::<f64>() / tf)
+            .collect();
+        let mut h2 = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for s in 0..t {
+                    acc += score.psi_prime(y[(i, s)]) * y[(j, s)] * y[(j, s)];
+                }
+                h2[(i, j)] = acc / tf;
+            }
+        }
+        IcaStats { loss_data: loss / tf, g, h1, sigma2, h2 }
+    }
+
+    #[test]
+    fn stats_match_reference() {
+        let (x, w) = test_problem(7, 500, 1);
+        let want = reference_stats(&x, &w);
+        let mut be = NativeBackend::new(x);
+        let got = be.stats(&w, StatsLevel::H2);
+        assert!((got.loss_data - want.loss_data).abs() < 1e-12);
+        assert!(got.g.max_abs_diff(&want.g) < 1e-12);
+        assert!(got.h2.max_abs_diff(&want.h2) < 1e-12);
+        for i in 0..7 {
+            assert!((got.h1[i] - want.h1[i]).abs() < 1e-12);
+            assert!((got.sigma2[i] - want.sigma2[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn levels_fill_what_they_promise() {
+        let (x, w) = test_problem(4, 100, 2);
+        let mut be = NativeBackend::new(x);
+        let basic = be.stats(&w, StatsLevel::Basic);
+        assert!(basic.h1.is_empty() && basic.sigma2.is_empty());
+        assert_eq!(basic.h2.rows(), 0);
+        let h1 = be.stats(&w, StatsLevel::H1);
+        assert_eq!(h1.h1.len(), 4);
+        assert_eq!(h1.h2.rows(), 0);
+        let h2 = be.stats(&w, StatsLevel::H2);
+        assert_eq!(h2.h2.rows(), 4);
+        // Levels agree on shared fields.
+        assert!(basic.g.max_abs_diff(&h2.g) < 1e-15);
+        assert_eq!(basic.loss_data, h2.loss_data);
+    }
+
+    #[test]
+    fn loss_data_consistent_with_stats() {
+        let (x, w) = test_problem(5, 300, 3);
+        let mut be = NativeBackend::new(x);
+        let s = be.stats(&w, StatsLevel::Basic);
+        assert!((be.loss_data(&w) - s.loss_data).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grad_batch_full_range_matches_stats() {
+        let (x, w) = test_problem(6, 400, 4);
+        let mut be = NativeBackend::new(x);
+        let s = be.stats(&w, StatsLevel::Basic);
+        let gb = be.grad_batch(&w, 0, 400);
+        assert!(gb.max_abs_diff(&s.g) < 1e-12);
+    }
+
+    #[test]
+    fn grad_batches_average_to_full_gradient() {
+        let (x, w) = test_problem(3, 600, 5);
+        let mut be = NativeBackend::new(x);
+        let full = be.stats(&w, StatsLevel::Basic).g;
+        let g1 = be.grad_batch(&w, 0, 200);
+        let g2 = be.grad_batch(&w, 200, 400);
+        let g3 = be.grad_batch(&w, 400, 600);
+        let mut avg = g1.clone();
+        avg.add_inplace(&g2);
+        avg.add_inplace(&g3);
+        avg.scale_inplace(1.0 / 3.0);
+        assert!(avg.max_abs_diff(&full) < 1e-12);
+    }
+
+    #[test]
+    fn workspace_reuse_is_transparent() {
+        let (x, w) = test_problem(4, 256, 6);
+        let mut be = NativeBackend::new(x.clone());
+        let a = be.stats(&w, StatsLevel::H2);
+        let _ = be.loss_data(&Mat::eye(4));
+        let _ = be.grad_batch(&Mat::eye(4), 3, 77);
+        let b = be.stats(&w, StatsLevel::H2);
+        assert!(a.g.max_abs_diff(&b.g) < 1e-15);
+        assert!(a.h2.max_abs_diff(&b.h2) < 1e-15);
+    }
+}

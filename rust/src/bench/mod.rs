@@ -1,0 +1,159 @@
+//! Criterion-lite benchmark harness.
+//!
+//! The offline registry has no `criterion`, so `cargo bench` targets use
+//! this harness: warmup, fixed-duration measurement, and a one-line report
+//! with mean / median / stddev / throughput. Benches are ordinary binaries
+//! with `harness = false`.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's measurement results, in seconds per iteration.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub samples: Vec<f64>,
+}
+
+impl Measurement {
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn median(&self) -> f64 {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        if n % 2 == 1 {
+            s[n / 2]
+        } else {
+            0.5 * (s[n / 2 - 1] + s[n / 2])
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        let m = self.mean();
+        let var = self.samples.iter().map(|x| (x - m).powi(2)).sum::<f64>()
+            / self.samples.len().max(1) as f64;
+        var.sqrt()
+    }
+
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>12} median {:>12} mean ± {:>10}  ({} samples)",
+            self.name,
+            fmt_duration(self.median()),
+            fmt_duration(self.mean()),
+            fmt_duration(self.stddev()),
+            self.samples.len()
+        );
+    }
+}
+
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{:.3} s", secs)
+    }
+}
+
+/// Benchmark runner: measures `f` until a time budget or sample count is
+/// reached, whichever comes first.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub max_samples: usize,
+    pub min_samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        // FICA_BENCH_FAST=1 shrinks budgets for CI smoke runs.
+        let fast = std::env::var("FICA_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+        if fast {
+            Self {
+                warmup: Duration::from_millis(50),
+                budget: Duration::from_millis(300),
+                max_samples: 10,
+                min_samples: 3,
+            }
+        } else {
+            Self {
+                warmup: Duration::from_millis(300),
+                budget: Duration::from_secs(3),
+                max_samples: 50,
+                min_samples: 5,
+            }
+        }
+    }
+}
+
+impl Bencher {
+    /// Measure a closure. The closure should return something observable
+    /// to prevent the optimizer from deleting the work; we black-box it.
+    pub fn run<R>(&self, name: &str, mut f: impl FnMut() -> R) -> Measurement {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            black_box(f());
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while (start.elapsed() < self.budget && samples.len() < self.max_samples)
+            || samples.len() < self.min_samples
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let m = Measurement { name: name.to_string(), samples };
+        m.report();
+        m
+    }
+}
+
+/// Optimizer barrier (stable-rust version of `std::hint::black_box`).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measurement_stats() {
+        let m = Measurement { name: "t".into(), samples: vec![1.0, 2.0, 3.0, 4.0] };
+        assert!((m.mean() - 2.5).abs() < 1e-12);
+        assert!((m.median() - 2.5).abs() < 1e-12);
+        let m2 = Measurement { name: "t".into(), samples: vec![1.0, 2.0, 9.0] };
+        assert!((m2.median() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bencher_runs_and_reports() {
+        let b = Bencher {
+            warmup: Duration::from_millis(1),
+            budget: Duration::from_millis(10),
+            max_samples: 5,
+            min_samples: 2,
+        };
+        let m = b.run("noop", || 1 + 1);
+        assert!(m.samples.len() >= 2);
+        assert!(m.mean() >= 0.0);
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert!(fmt_duration(5e-9).contains("ns"));
+        assert!(fmt_duration(5e-6).contains("µs"));
+        assert!(fmt_duration(5e-3).contains("ms"));
+        assert!(fmt_duration(5.0).contains(" s"));
+    }
+}

@@ -1,0 +1,90 @@
+//! Hand-rolled CLI argument parsing (offline registry has no `clap`).
+//!
+//! Grammar: `fica <command> [--flag value]... [--switch]...`
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (excluding the binary name).
+    pub fn parse(argv: &[String]) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(cmd) = it.next() {
+            if cmd.starts_with('-') {
+                return Err(format!("expected a command, got flag {cmd}"));
+            }
+            args.command = cmd.clone();
+        }
+        while let Some(tok) = it.next() {
+            let Some(name) = tok.strip_prefix("--") else {
+                return Err(format!("unexpected positional argument: {tok}"));
+            };
+            if name.is_empty() {
+                return Err("empty flag name".into());
+            }
+            // `--flag=value` or `--flag value` or bare switch.
+            if let Some((k, v)) = name.split_once('=') {
+                args.flags.insert(k.to_string(), v.to_string());
+            } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                args.flags.insert(name.to_string(), it.next().unwrap().clone());
+            } else {
+                args.switches.push(name.to_string());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("bad value for --{name}: {v}")),
+        }
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+pub const USAGE: &str = "\
+fica — Faster ICA by preconditioning with Hessian approximations
+       (Ablin, Cardoso & Gramfort 2017; three-layer rust+JAX+Pallas build)
+
+USAGE:
+    fica <command> [options]
+
+COMMANDS:
+    info                         Library, artifact and platform summary
+    run                          Fit ICA on a synthetic dataset
+        --algo <id>              gd|infomax|qn-h1|qn-h2|lbfgs|plbfgs-h1|plbfgs-h2
+                                 (default plbfgs-h2)
+        --data <id>              fig2a|fig2b|fig2c|fig3-eeg|fig3-img (default fig2a)
+        --seed <u64>             dataset seed (default 0)
+        --scale <f64>            dataset scale 0<s<=1 (default 0.25)
+        --tol <f64>              gradient tolerance (default 1e-8)
+        --max-iters <usize>      iteration cap (default 200)
+        --backend <native|xla>   compute backend (default native)
+    experiment                   Regenerate a paper figure
+        --id <fig1|fig2a|fig2b|fig2c|fig3-eeg|fig3-img|fig4|all>
+        --seeds <usize>          runs per algorithm (default 10)
+        --scale <f64>            dataset scale (default 0.25)
+        --full                   paper-size datasets (scale 1.0)
+    artifacts-check              Load every artifact through PJRT
+    help                         This message
+";

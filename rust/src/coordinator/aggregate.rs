@@ -1,0 +1,151 @@
+//! Trace aggregation: the paper displays the *median* gradient-norm curve
+//! over many seeded runs, against both iteration count and CPU time.
+
+use crate::ica::Trace;
+
+/// One aggregated sample point.
+#[derive(Clone, Copy, Debug)]
+pub struct CurvePoint {
+    /// Iteration index or time (seconds), depending on the axis.
+    pub x: f64,
+    /// Median gradient ∞-norm across runs at this x.
+    pub median: f64,
+    /// 25th / 75th percentiles (spread of the band).
+    pub q25: f64,
+    pub q75: f64,
+}
+
+/// Median curves on both axes for one algorithm.
+#[derive(Clone, Debug, Default)]
+pub struct MedianCurves {
+    pub vs_iters: Vec<CurvePoint>,
+    pub vs_time: Vec<CurvePoint>,
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (pos - lo as f64) * (sorted[hi] - sorted[lo])
+    }
+}
+
+fn point(x: f64, mut vals: Vec<f64>) -> CurvePoint {
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    CurvePoint {
+        x,
+        median: percentile(&vals, 0.5),
+        q25: percentile(&vals, 0.25),
+        q75: percentile(&vals, 0.75),
+    }
+}
+
+/// Median gradient curve vs iteration, sampled at every iteration up to
+/// the longest run (each trace is a step function extended to the right).
+pub fn median_curve_iters(traces: &[&Trace]) -> Vec<CurvePoint> {
+    let max_iter = traces.iter().filter_map(|t| t.last().map(|r| r.iter)).max().unwrap_or(0);
+    (0..=max_iter)
+        .filter_map(|i| {
+            let vals: Vec<f64> = traces.iter().filter_map(|t| t.grad_at_iter(i)).collect();
+            if vals.is_empty() {
+                None
+            } else {
+                Some(point(i as f64, vals))
+            }
+        })
+        .collect()
+}
+
+/// Median gradient curve vs charged time, sampled on a log-spaced grid
+/// from the earliest first record to the latest last record.
+pub fn median_curve_time(traces: &[&Trace], points: usize) -> Vec<CurvePoint> {
+    let mut t_min = f64::INFINITY;
+    let mut t_max: f64 = 0.0;
+    for t in traces {
+        if let (Some(first), Some(last)) = (t.records.first(), t.records.last()) {
+            t_min = t_min.min(first.time.max(1e-6));
+            t_max = t_max.max(last.time);
+        }
+    }
+    if !t_min.is_finite() || t_max <= t_min {
+        return Vec::new();
+    }
+    let ratio = (t_max / t_min).max(1.0 + 1e-9);
+    (0..points)
+        .map(|k| {
+            let frac = k as f64 / (points - 1).max(1) as f64;
+            let x = t_min * ratio.powf(frac);
+            let vals: Vec<f64> = traces.iter().filter_map(|t| t.grad_at_time(x)).collect();
+            point(x, vals)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ica::IterRecord;
+
+    fn trace(grads: &[f64], dt: f64) -> Trace {
+        let mut t = Trace::default();
+        for (i, &g) in grads.iter().enumerate() {
+            t.push(IterRecord { iter: i, time: i as f64 * dt, grad_inf: g, loss: 0.0 });
+        }
+        t
+    }
+
+    #[test]
+    fn median_of_three_runs() {
+        let a = trace(&[1.0, 0.1, 0.01], 0.1);
+        let b = trace(&[2.0, 0.2, 0.02], 0.1);
+        let c = trace(&[3.0, 0.3, 0.03], 0.1);
+        let curve = median_curve_iters(&[&a, &b, &c]);
+        assert_eq!(curve.len(), 3);
+        assert!((curve[0].median - 2.0).abs() < 1e-12);
+        assert!((curve[2].median - 0.02).abs() < 1e-12);
+        assert!(curve[0].q25 <= curve[0].median && curve[0].median <= curve[0].q75);
+    }
+
+    #[test]
+    fn shorter_runs_extend_last_value() {
+        let a = trace(&[1.0, 0.5], 0.1); // ends early
+        let b = trace(&[1.0, 0.9, 0.8, 0.7], 0.1);
+        let curve = median_curve_iters(&[&a, &b]);
+        assert_eq!(curve.len(), 4);
+        // At iter 3 run a contributes its final value 0.5.
+        assert!((curve[3].median - 0.5 * 0.5 - 0.7 * 0.5).abs() < 0.11); // midpoint of {0.5, 0.7}
+    }
+
+    #[test]
+    fn time_curve_is_log_spaced_and_monotone_x() {
+        let a = trace(&[1.0, 0.1, 0.01, 0.001], 0.5);
+        let curve = median_curve_time(&[&a], 16);
+        assert_eq!(curve.len(), 16);
+        for w in curve.windows(2) {
+            assert!(w[1].x > w[0].x);
+        }
+        // Gradient must be non-increasing along the curve for this run.
+        for w in curve.windows(2) {
+            assert!(w[1].median <= w[0].median + 1e-12);
+        }
+    }
+
+    #[test]
+    fn empty_traces_give_empty_curves() {
+        let t = Trace::default();
+        assert!(median_curve_time(&[&t], 8).is_empty());
+        assert!(median_curve_iters(&[&t]).is_empty());
+    }
+
+    #[test]
+    fn percentile_endpoints() {
+        let v = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 1.0), 4.0);
+        assert_eq!(percentile(&v, 0.5), 2.5);
+    }
+}

@@ -1,0 +1,13 @@
+//! Experiment coordinator: the paper's figures are medians over many
+//! seeded runs (100 in §3.2); this module fans those runs across a worker
+//! pool with bounded queueing and aggregates the convergence traces.
+//!
+//! The offline registry has no `tokio`, so the pool is built on OS
+//! threads + `std::sync::mpsc` bounded channels — which is the right tool
+//! here anyway: jobs are pure CPU-bound solves with no I/O to overlap.
+
+mod aggregate;
+mod scheduler;
+
+pub use aggregate::{median_curve_iters, median_curve_time, CurvePoint, MedianCurves};
+pub use scheduler::{run_jobs, Job, JobOutcome, PoolConfig};

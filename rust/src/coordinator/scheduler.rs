@@ -1,0 +1,111 @@
+//! Worker pool with bounded-queue backpressure.
+//!
+//! Invariants (enforced by tests in `rust/tests/test_coordinator.rs`):
+//! - every submitted job runs exactly once;
+//! - results carry their job id, so aggregation is order-independent;
+//! - at most `queue_bound` jobs are waiting at any time (producers block);
+//! - a panicking job poisons only itself (reported as `JobOutcome::Panic`),
+//!   the pool keeps draining the remaining jobs.
+
+use crate::backend::NativeBackend;
+use crate::ica::{solve, SolveResult, SolverConfig};
+use crate::linalg::Mat;
+use std::panic::AssertUnwindSafe;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// One unit of work: build the dataset, preprocess, solve.
+pub struct Job {
+    pub id: usize,
+    /// Human-readable label (algorithm id, seed, …).
+    pub label: String,
+    /// Builds the (whitened) data matrix. Runs on the worker thread.
+    pub make_data: Box<dyn FnOnce() -> Mat + Send>,
+    /// Solver configuration (includes algorithm + seed).
+    pub config: SolverConfig,
+    /// Initial unmixing matrix; `None` → identity.
+    pub w0: Option<Mat>,
+}
+
+/// Result envelope.
+pub enum JobOutcome {
+    Done { id: usize, label: String, result: SolveResult },
+    Panic { id: usize, label: String, message: String },
+}
+
+impl JobOutcome {
+    pub fn id(&self) -> usize {
+        match self {
+            JobOutcome::Done { id, .. } | JobOutcome::Panic { id, .. } => *id,
+        }
+    }
+}
+
+/// Pool sizing.
+#[derive(Clone, Copy, Debug)]
+pub struct PoolConfig {
+    pub workers: usize,
+    /// Bounded queue length between producer and workers (backpressure).
+    pub queue_bound: usize,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Self { workers, queue_bound: 2 * workers }
+    }
+}
+
+/// Run all jobs on the pool; returns outcomes sorted by job id.
+pub fn run_jobs(jobs: Vec<Job>, pool: PoolConfig) -> Vec<JobOutcome> {
+    assert!(pool.workers > 0);
+    let (tx, rx) = mpsc::sync_channel::<Job>(pool.queue_bound.max(1));
+    let rx = Arc::new(Mutex::new(rx));
+    let (out_tx, out_rx) = mpsc::channel::<JobOutcome>();
+    let expected = jobs.len();
+
+    std::thread::scope(|scope| {
+        for _ in 0..pool.workers {
+            let rx = rx.clone();
+            let out_tx = out_tx.clone();
+            scope.spawn(move || loop {
+                // Hold the lock only to receive, not to run.
+                let job = {
+                    let guard = rx.lock().expect("receiver lock");
+                    guard.recv()
+                };
+                let Ok(job) = job else { break };
+                let Job { id, label, make_data, config, w0 } = job;
+                let outcome = match std::panic::catch_unwind(AssertUnwindSafe(|| {
+                    let x = make_data();
+                    let n = x.rows();
+                    let mut backend = NativeBackend::new(x);
+                    let w0 = w0.unwrap_or_else(|| Mat::eye(n));
+                    solve(&mut backend, &w0, &config)
+                })) {
+                    Ok(result) => JobOutcome::Done { id, label, result },
+                    Err(p) => {
+                        let message = p
+                            .downcast_ref::<String>()
+                            .cloned()
+                            .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+                            .unwrap_or_else(|| "unknown panic".into());
+                        JobOutcome::Panic { id, label, message }
+                    }
+                };
+                let _ = out_tx.send(outcome);
+            });
+        }
+        drop(out_tx);
+        // Producer: feed jobs (blocks when the queue is full = backpressure).
+        for job in jobs {
+            tx.send(job).expect("workers alive");
+        }
+        drop(tx);
+
+        let mut outcomes: Vec<JobOutcome> = out_rx.iter().collect();
+        assert_eq!(outcomes.len(), expected, "every job must report exactly once");
+        outcomes.sort_by_key(|o| o.id());
+        outcomes
+    })
+}

@@ -1,0 +1,152 @@
+//! Experiment registry: ids, dataset builders, and the algorithm suite.
+
+use crate::ica::Algorithm;
+use crate::linalg::Mat;
+use crate::preprocessing::{preprocess, Whitener};
+use crate::signal;
+
+/// Identifier of a reproducible paper artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExperimentId {
+    /// Fig. 1: cosine of angles between successive descent directions.
+    Fig1,
+    /// Fig. 2 top: experiment A (N=40 Laplace, T=10000).
+    Fig2A,
+    /// Fig. 2 middle: experiment B (mixed recoverability, N=15, T=1000).
+    Fig2B,
+    /// Fig. 2 bottom: experiment C (near-Gaussian mixtures, N=40, T=5000).
+    Fig2C,
+    /// Fig. 3 top/middle: EEG datasets (synthetic substitute).
+    Fig3Eeg,
+    /// Fig. 3 bottom: image patches.
+    Fig3Img,
+    /// Fig. 4: initialization-independence as the gradient vanishes.
+    Fig4,
+}
+
+impl ExperimentId {
+    pub fn from_str(s: &str) -> Option<Self> {
+        Some(match s {
+            "fig1" => ExperimentId::Fig1,
+            "fig2a" => ExperimentId::Fig2A,
+            "fig2b" => ExperimentId::Fig2B,
+            "fig2c" => ExperimentId::Fig2C,
+            "fig3-eeg" => ExperimentId::Fig3Eeg,
+            "fig3-img" => ExperimentId::Fig3Img,
+            "fig4" => ExperimentId::Fig4,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ExperimentId::Fig1 => "fig1",
+            ExperimentId::Fig2A => "fig2a",
+            ExperimentId::Fig2B => "fig2b",
+            ExperimentId::Fig2C => "fig2c",
+            ExperimentId::Fig3Eeg => "fig3-eeg",
+            ExperimentId::Fig3Img => "fig3-img",
+            ExperimentId::Fig4 => "fig4",
+        }
+    }
+
+    pub fn all() -> &'static [ExperimentId] {
+        &[
+            ExperimentId::Fig1,
+            ExperimentId::Fig2A,
+            ExperimentId::Fig2B,
+            ExperimentId::Fig2C,
+            ExperimentId::Fig3Eeg,
+            ExperimentId::Fig3Img,
+            ExperimentId::Fig4,
+        ]
+    }
+}
+
+/// The six algorithms the paper's Figures 2–3 compare.
+pub fn algo_suite() -> Vec<Algorithm> {
+    crate::ica::Algorithm::paper_suite()
+        .iter()
+        .map(|id| Algorithm::from_id(id).expect("suite id"))
+        .collect()
+}
+
+/// Build the whitened data for one (experiment, seed) pair.
+///
+/// `scale ∈ (0, 1]` shrinks the dataset (N and T together where safe) so
+/// tests and quick benches stay fast; `scale = 1` is the paper's size.
+pub fn build_dataset(id: ExperimentId, seed: u64, scale: f64) -> Mat {
+    assert!(scale > 0.0 && scale <= 1.0);
+    let sc = |v: usize| ((v as f64 * scale).round() as usize).max(4);
+    let raw = match id {
+        ExperimentId::Fig1 => signal::experiment_a(sc(30), sc(5000), seed).x,
+        ExperimentId::Fig2A => signal::experiment_a(sc(40), sc(10_000), seed).x,
+        ExperimentId::Fig2B => {
+            // N must stay divisible by 3 (and ≥ 6 to keep all families).
+            let n = (sc(15).max(6) / 3) * 3;
+            signal::experiment_b(n, sc(1000).max(n * 25), seed).x
+        }
+        ExperimentId::Fig2C => signal::experiment_c(sc(40).max(8), sc(5000), seed).x,
+        ExperimentId::Fig3Eeg => {
+            let cfg = crate::signal::eeg_sim::EegConfig {
+                channels: sc(72).max(8),
+                samples: sc(75_000).max(2000),
+                ..Default::default()
+            };
+            crate::signal::eeg_sim::generate(&cfg, seed)
+        }
+        ExperimentId::Fig3Img => {
+            let n_img = ((100.0 * scale).round() as usize).max(3);
+            let patches = sc(30_000).max(2000);
+            crate::signal::images::patch_dataset(n_img, 64, 8, patches, seed)
+        }
+        ExperimentId::Fig4 => {
+            let cfg = crate::signal::eeg_sim::EegConfig {
+                channels: sc(24).max(8),
+                samples: sc(20_000).max(2000),
+                ..Default::default()
+            };
+            crate::signal::eeg_sim::generate(&cfg, seed)
+        }
+    };
+    preprocess(&raw, Whitener::Sphering).x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_roundtrip() {
+        for &id in ExperimentId::all() {
+            assert_eq!(ExperimentId::from_str(id.name()), Some(id));
+        }
+        assert!(ExperimentId::from_str("nope").is_none());
+    }
+
+    #[test]
+    fn suite_is_the_papers_six() {
+        let suite = algo_suite();
+        assert_eq!(suite.len(), 6);
+    }
+
+    #[test]
+    fn datasets_are_whitened() {
+        for &id in &[ExperimentId::Fig2B, ExperimentId::Fig1] {
+            let x = build_dataset(id, 1, 0.1);
+            let c = x.row_covariance();
+            assert!(
+                c.max_abs_diff(&crate::linalg::Mat::eye(x.rows())) < 1e-8,
+                "{}: not white",
+                id.name()
+            );
+        }
+    }
+
+    #[test]
+    fn scale_shrinks() {
+        let small = build_dataset(ExperimentId::Fig2A, 1, 0.1);
+        assert!(small.rows() <= 8);
+        assert!(small.cols() <= 1200);
+    }
+}

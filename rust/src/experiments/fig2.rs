@@ -1,0 +1,225 @@
+//! Fig. 2: the simulation study — six algorithms on experiments A/B/C,
+//! median gradient-∞-norm vs iterations and vs CPU time over many seeds.
+//!
+//! Also serves Fig. 3 (same protocol over the EEG / image datasets) via
+//! [`SuiteConfig::experiment`].
+
+use super::defs::{algo_suite, build_dataset, ExperimentId};
+use super::report;
+use crate::coordinator::{
+    median_curve_iters, median_curve_time, run_jobs, Job, JobOutcome, MedianCurves, PoolConfig,
+};
+use crate::ica::{Algorithm, SolverConfig, Trace};
+
+/// Configuration of one suite run (one figure panel).
+#[derive(Clone, Debug)]
+pub struct SuiteConfig {
+    pub experiment: ExperimentId,
+    /// Runs per algorithm (paper: 100; scale down for quick runs).
+    pub seeds: usize,
+    /// Dataset scale in (0, 1].
+    pub scale: f64,
+    pub max_iters: usize,
+    pub tol: f64,
+    /// Tolerance used for the summary "time/iters to tol" columns.
+    pub summary_tol: f64,
+    /// Restrict to a subset of algorithm ids (empty = the paper's six).
+    pub algos: Vec<&'static str>,
+}
+
+impl SuiteConfig {
+    pub fn new(experiment: ExperimentId) -> Self {
+        Self {
+            experiment,
+            seeds: 10,
+            scale: 1.0,
+            max_iters: 200,
+            tol: 1e-8,
+            summary_tol: 1e-6,
+            algos: Vec::new(),
+        }
+    }
+
+    fn suite(&self) -> Vec<Algorithm> {
+        if self.algos.is_empty() {
+            algo_suite()
+        } else {
+            self.algos.iter().map(|id| Algorithm::from_id(id).expect("algo id")).collect()
+        }
+    }
+}
+
+/// Aggregated outcome for one algorithm.
+pub struct AlgoSummary {
+    pub algo: String,
+    pub curves: MedianCurves,
+    /// Median across seeds of iterations-to-summary_tol (None if most
+    /// runs never reached it — e.g. Infomax's plateau).
+    pub iters_to_tol: Option<usize>,
+    pub time_to_tol: Option<f64>,
+    /// Median final gradient ∞-norm.
+    pub final_grad: f64,
+    pub runs: usize,
+}
+
+pub struct SuiteResult {
+    pub experiment: ExperimentId,
+    pub per_algo: Vec<AlgoSummary>,
+}
+
+fn median_opt_f64(mut vals: Vec<f64>) -> Option<f64> {
+    if vals.is_empty() {
+        return None;
+    }
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Some(vals[vals.len() / 2])
+}
+
+/// Run the suite: seeds × algorithms jobs through the coordinator.
+pub fn run_suite(cfg: &SuiteConfig) -> SuiteResult {
+    let algos = cfg.suite();
+    let mut jobs = Vec::new();
+    let mut id = 0;
+    for algo in &algos {
+        for seed in 0..cfg.seeds {
+            let exp = cfg.experiment;
+            let scale = cfg.scale;
+            let seed64 = seed as u64;
+            let scfg = SolverConfig::new(*algo)
+                .with_tol(cfg.tol)
+                .with_max_iters(cfg.max_iters)
+                .with_seed(seed64);
+            jobs.push(Job {
+                id,
+                label: algo.id().to_string(),
+                make_data: Box::new(move || build_dataset(exp, seed64, scale)),
+                config: scfg,
+                w0: None,
+            });
+            id += 1;
+        }
+    }
+    let outcomes = run_jobs(jobs, PoolConfig::default());
+
+    let mut per_algo = Vec::new();
+    for algo in &algos {
+        let aid = algo.id();
+        let mut traces: Vec<&Trace> = Vec::new();
+        let mut iters_tt = Vec::new();
+        let mut time_tt = Vec::new();
+        let mut finals = Vec::new();
+        for o in &outcomes {
+            if let JobOutcome::Done { label, result, .. } = o {
+                if label == aid {
+                    if let Some(it) = result.trace.iters_to_tol(cfg.summary_tol) {
+                        iters_tt.push(it as f64);
+                    }
+                    if let Some(tt) = result.trace.time_to_tol(cfg.summary_tol) {
+                        time_tt.push(tt);
+                    }
+                    if let Some(last) = result.trace.last() {
+                        finals.push(last.grad_inf);
+                    }
+                    traces.push(&result.trace);
+                }
+            }
+        }
+        let runs = traces.len();
+        // "Reached tol" only counts if a majority of seeds got there.
+        let majority = runs / 2 + 1;
+        let curves = MedianCurves {
+            vs_iters: median_curve_iters(&traces),
+            vs_time: median_curve_time(&traces, 48),
+        };
+        per_algo.push(AlgoSummary {
+            algo: aid.to_string(),
+            curves,
+            iters_to_tol: if iters_tt.len() >= majority {
+                median_opt_f64(iters_tt).map(|v| v as usize)
+            } else {
+                None
+            },
+            time_to_tol: if time_tt.len() >= majority { median_opt_f64(time_tt) } else { None },
+            final_grad: median_opt_f64(finals).unwrap_or(f64::NAN),
+            runs,
+        });
+    }
+    SuiteResult { experiment: cfg.experiment, per_algo }
+}
+
+/// Run + write `results/<name>_{iters,time}.csv` and a markdown summary;
+/// print the summary table.
+pub fn run_and_report(cfg: &SuiteConfig) -> std::io::Result<SuiteResult> {
+    let res = run_suite(cfg);
+    let name = res.experiment.name().replace('-', "_");
+    let dir = report::results_dir();
+
+    let iters_curves: Vec<_> =
+        res.per_algo.iter().map(|a| (a.algo.clone(), a.curves.vs_iters.clone())).collect();
+    let time_curves: Vec<_> =
+        res.per_algo.iter().map(|a| (a.algo.clone(), a.curves.vs_time.clone())).collect();
+    report::write_curves_csv(&dir.join(format!("{name}_iters.csv")), &iters_curves)?;
+    report::write_curves_csv(&dir.join(format!("{name}_time.csv")), &time_curves)?;
+
+    let rows: Vec<Vec<String>> = res
+        .per_algo
+        .iter()
+        .map(|a| {
+            vec![
+                a.algo.clone(),
+                report::fmt_count(a.iters_to_tol),
+                report::fmt_secs(a.time_to_tol),
+                format!("{:.2e}", a.final_grad),
+                a.runs.to_string(),
+            ]
+        })
+        .collect();
+    let table = report::markdown_table(
+        &["algorithm", &format!("iters→{:.0e}", cfg.summary_tol),
+          &format!("time→{:.0e}", cfg.summary_tol), "final ‖G‖∞ (median)", "runs"],
+        &rows,
+    );
+    let md = format!(
+        "# {} — median over {} seeds (scale {})\n\n{}\n",
+        res.experiment.name(),
+        cfg.seeds,
+        cfg.scale,
+        table
+    );
+    report::write_markdown(&dir.join(format!("{name}_summary.md")), &md)?;
+    println!("{md}");
+    Ok(res)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A miniature experiment-A panel: the Hessian-informed methods must
+    /// beat plain gradient descent and Infomax must plateau — the paper's
+    /// central qualitative claim, at test scale.
+    #[test]
+    fn mini_fig2a_ordering() {
+        let cfg = SuiteConfig {
+            seeds: 3,
+            scale: 0.15,
+            max_iters: 120,
+            tol: 1e-8,
+            summary_tol: 1e-6,
+            ..SuiteConfig::new(ExperimentId::Fig2A)
+        };
+        let res = run_suite(&cfg);
+        let get = |id: &str| res.per_algo.iter().find(|a| a.algo == id).unwrap();
+        let qn = get("qn-h1");
+        let pl2 = get("plbfgs-h2");
+        let infomax = get("infomax");
+        assert!(qn.iters_to_tol.is_some(), "qn-h1 must reach 1e-6");
+        assert!(pl2.iters_to_tol.is_some(), "plbfgs-h2 must reach 1e-6");
+        assert!(
+            infomax.iters_to_tol.is_none(),
+            "infomax should plateau above 1e-6, reached in {:?}",
+            infomax.iters_to_tol
+        );
+        assert!(qn.iters_to_tol.unwrap() <= cfg.max_iters);
+    }
+}

@@ -1,0 +1,170 @@
+//! Hungarian algorithm (O(n³), potentials + augmenting paths).
+//!
+//! Fig. 4 compares unmixing matrices from two differently-initialized
+//! runs: `T = W_sph · W_PCA⁻¹` should approach a scaled permutation as
+//! the gradient tolerance tightens. Finding the best permutation = a
+//! linear assignment problem maximizing Σ |T_{i,π(i)}|.
+
+/// Solve min-cost assignment on a square cost matrix (rows → cols).
+/// Returns `assignment[row] = col` minimizing total cost.
+pub fn min_cost_assignment(cost: &[Vec<f64>]) -> Vec<usize> {
+    let n = cost.len();
+    assert!(cost.iter().all(|r| r.len() == n), "square matrix required");
+    if n == 0 {
+        return Vec::new();
+    }
+    // Potentials-based Hungarian, 1-indexed internals (classic e-maxx form).
+    let inf = f64::INFINITY;
+    let mut u = vec![0.0; n + 1];
+    let mut v = vec![0.0; n + 1];
+    let mut p = vec![0usize; n + 1]; // p[col] = row matched to col
+    let mut way = vec![0usize; n + 1];
+    for i in 1..=n {
+        p[0] = i;
+        let mut j0 = 0usize;
+        let mut minv = vec![inf; n + 1];
+        let mut used = vec![false; n + 1];
+        loop {
+            used[j0] = true;
+            let i0 = p[j0];
+            let mut delta = inf;
+            let mut j1 = 0usize;
+            for j in 1..=n {
+                if !used[j] {
+                    let cur = cost[i0 - 1][j - 1] - u[i0] - v[j];
+                    if cur < minv[j] {
+                        minv[j] = cur;
+                        way[j] = j0;
+                    }
+                    if minv[j] < delta {
+                        delta = minv[j];
+                        j1 = j;
+                    }
+                }
+            }
+            for j in 0..=n {
+                if used[j] {
+                    u[p[j]] += delta;
+                    v[j] -= delta;
+                } else {
+                    minv[j] -= delta;
+                }
+            }
+            j0 = j1;
+            if p[j0] == 0 {
+                break;
+            }
+        }
+        loop {
+            let j1 = way[j0];
+            p[j0] = p[j1];
+            j0 = j1;
+            if j0 == 0 {
+                break;
+            }
+        }
+    }
+    let mut assignment = vec![0usize; n];
+    for j in 1..=n {
+        if p[j] > 0 {
+            assignment[p[j] - 1] = j - 1;
+        }
+    }
+    assignment
+}
+
+/// Assignment maximizing Σ |m[row][col]| (Fig. 4's permutation matching).
+pub fn max_abs_assignment(m: &crate::linalg::Mat) -> Vec<usize> {
+    let n = m.rows();
+    let cost: Vec<Vec<f64>> =
+        (0..n).map(|i| (0..n).map(|j| -m[(i, j)].abs()).collect()).collect();
+    min_cost_assignment(&cost)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::rng::Pcg64;
+
+    fn total(cost: &[Vec<f64>], a: &[usize]) -> f64 {
+        a.iter().enumerate().map(|(i, &j)| cost[i][j]).sum()
+    }
+
+    fn brute_force(cost: &[Vec<f64>]) -> f64 {
+        let n = cost.len();
+        let mut perm: Vec<usize> = (0..n).collect();
+        let mut best = f64::INFINITY;
+        // Heap's algorithm.
+        fn heaps(k: usize, perm: &mut Vec<usize>, cost: &[Vec<f64>], best: &mut f64) {
+            if k == 1 {
+                let t: f64 = perm.iter().enumerate().map(|(i, &j)| cost[i][j]).sum();
+                if t < *best {
+                    *best = t;
+                }
+                return;
+            }
+            for i in 0..k {
+                heaps(k - 1, perm, cost, best);
+                if k % 2 == 0 {
+                    perm.swap(i, k - 1);
+                } else {
+                    perm.swap(0, k - 1);
+                }
+            }
+        }
+        heaps(n, &mut perm, cost, &mut best);
+        best
+    }
+
+    #[test]
+    fn trivial_cases() {
+        assert!(min_cost_assignment(&[]).is_empty());
+        assert_eq!(min_cost_assignment(&[vec![5.0]]), vec![0]);
+    }
+
+    #[test]
+    fn known_3x3() {
+        // Classic example: optimal = 1+2+3 on the anti-diagonal.
+        let cost = vec![
+            vec![10.0, 10.0, 1.0],
+            vec![10.0, 2.0, 10.0],
+            vec![3.0, 10.0, 10.0],
+        ];
+        let a = min_cost_assignment(&cost);
+        assert_eq!(a, vec![2, 1, 0]);
+        assert!((total(&cost, &a) - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matches_brute_force_on_random_instances() {
+        let mut rng = Pcg64::new(1);
+        for n in [2, 3, 4, 5, 6] {
+            for _ in 0..5 {
+                let cost: Vec<Vec<f64>> =
+                    (0..n).map(|_| (0..n).map(|_| rng.next_f64() * 10.0).collect()).collect();
+                let a = min_cost_assignment(&cost);
+                // Valid permutation.
+                let mut seen = vec![false; n];
+                for &j in &a {
+                    assert!(!seen[j]);
+                    seen[j] = true;
+                }
+                let got = total(&cost, &a);
+                let want = brute_force(&cost);
+                assert!((got - want).abs() < 1e-9, "n={n}: {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn max_abs_recovers_permutation() {
+        // A scaled permutation matrix must be matched exactly.
+        let mut m = Mat::zeros(4, 4);
+        m[(0, 2)] = -3.0;
+        m[(1, 0)] = 0.5;
+        m[(2, 3)] = 2.0;
+        m[(3, 1)] = -1.0;
+        assert_eq!(max_abs_assignment(&m), vec![2, 0, 3, 1]);
+    }
+}

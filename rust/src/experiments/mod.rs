@@ -1,0 +1,15 @@
+//! Experiment drivers: one module per paper figure, plus reporting.
+//!
+//! Every figure and table of the paper's evaluation section has a driver
+//! here that regenerates it (on this testbed's scale — see DESIGN.md §4
+//! for the experiment index and expected qualitative shapes).
+
+pub mod defs;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod hungarian;
+pub mod report;
+
+pub use defs::{algo_suite, ExperimentId};

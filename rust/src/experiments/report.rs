@@ -1,0 +1,138 @@
+//! Report rendering: CSV + markdown artifacts under `results/`, plus
+//! terminal-friendly ASCII tables/matrices.
+
+use crate::coordinator::CurvePoint;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Where reports land (`$FICA_RESULTS` or `<repo>/results`).
+pub fn results_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("FICA_RESULTS") {
+        return PathBuf::from(d);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results")
+}
+
+/// Write a median-curve CSV: `algo,x,median,q25,q75` per row.
+pub fn write_curves_csv(
+    path: &Path,
+    curves: &[(String, Vec<CurvePoint>)],
+) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "algo,x,median,q25,q75")?;
+    for (algo, pts) in curves {
+        for p in pts {
+            writeln!(f, "{algo},{},{},{},{}", p.x, p.median, p.q25, p.q75)?;
+        }
+    }
+    Ok(())
+}
+
+/// Write any small matrix as CSV.
+pub fn write_matrix_csv(path: &Path, m: &crate::linalg::Mat) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    for i in 0..m.rows() {
+        let row: Vec<String> = (0..m.cols()).map(|j| format!("{}", m[(i, j)])).collect();
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+/// Append (or create) a markdown report file.
+pub fn write_markdown(path: &Path, content: &str) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, content)
+}
+
+/// Render a markdown table from a header and rows.
+pub fn markdown_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut s = String::new();
+    s.push_str("| ");
+    s.push_str(&header.join(" | "));
+    s.push_str(" |\n|");
+    for _ in header {
+        s.push_str("---|");
+    }
+    s.push('\n');
+    for row in rows {
+        s.push_str("| ");
+        s.push_str(&row.join(" | "));
+        s.push_str(" |\n");
+    }
+    s
+}
+
+/// ASCII shade rendering of a matrix of values in [0, 1] (Fig. 1/4 art):
+/// dark = 1 (aligned), light = 0 (orthogonal).
+pub fn ascii_matrix(m: &crate::linalg::Mat) -> String {
+    const SHADES: &[char] = &[' ', '.', ':', '-', '=', '+', '*', '#', '%', '@'];
+    let mut out = String::new();
+    for i in 0..m.rows() {
+        for j in 0..m.cols() {
+            let v = m[(i, j)].clamp(0.0, 1.0);
+            let idx = ((v * (SHADES.len() - 1) as f64).round() as usize).min(SHADES.len() - 1);
+            out.push(SHADES[idx]);
+            out.push(SHADES[idx]); // double width ≈ square aspect
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Format seconds compactly for tables.
+pub fn fmt_secs(s: Option<f64>) -> String {
+    match s {
+        Some(v) => crate::bench::fmt_duration(v),
+        None => "—".into(),
+    }
+}
+
+/// Format an optional count.
+pub fn fmt_count(c: Option<usize>) -> String {
+    match c {
+        Some(v) => v.to_string(),
+        None => "—".into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    #[test]
+    fn markdown_table_shape() {
+        let t = markdown_table(&["a", "b"], &[vec!["1".into(), "2".into()]]);
+        assert!(t.contains("| a | b |"));
+        assert!(t.contains("| 1 | 2 |"));
+        assert_eq!(t.lines().count(), 3);
+    }
+
+    #[test]
+    fn ascii_matrix_dimensions() {
+        let m = Mat::from_fn(3, 4, |i, j| (i + j) as f64 / 6.0);
+        let art = ascii_matrix(&m);
+        assert_eq!(art.lines().count(), 3);
+        assert!(art.lines().all(|l| l.chars().count() == 8));
+    }
+
+    #[test]
+    fn csv_roundtrip_smoke() {
+        let dir = std::env::temp_dir().join("fica_report_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("curves.csv");
+        let pts = vec![CurvePoint { x: 1.0, median: 0.5, q25: 0.4, q75: 0.6 }];
+        write_curves_csv(&path, &[("gd".into(), pts)]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("algo,x,median,q25,q75"));
+        assert!(text.contains("gd,1,0.5,0.4,0.6"));
+    }
+}

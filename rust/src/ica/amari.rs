@@ -1,0 +1,104 @@
+//! Amari distance: permutation/scale-invariant separation quality.
+//!
+//! For `P = W·A` (estimated unmixing × true mixing), the Amari distance
+//! is 0 iff `P` is a scaled permutation — i.e. the sources were exactly
+//! recovered up to the inherent ICA indeterminacies.
+
+use crate::linalg::Mat;
+
+/// Amari distance of a square matrix (normalized to [0, 1], 0 = perfect).
+///
+/// `d(P) = 1/(2N(N-1)) · Σ_i (Σ_j |P̃_ij| - max_j |P̃_ij|)/max_j |P̃_ij|
+///        + (same with rows/columns swapped)` — the classical index of
+/// Amari, Cichocki & Yang (1996), rescaled so the worst case is ≈1.
+pub fn amari_distance(p: &Mat) -> f64 {
+    assert!(p.is_square());
+    let n = p.rows();
+    if n <= 1 {
+        return 0.0;
+    }
+    let mut total = 0.0;
+    // Row-wise term.
+    for i in 0..n {
+        let row = p.row(i);
+        let mx = row.iter().fold(0.0f64, |m, x| m.max(x.abs()));
+        if mx == 0.0 {
+            return 1.0; // degenerate
+        }
+        let s: f64 = row.iter().map(|x| x.abs()).sum();
+        total += s / mx - 1.0;
+    }
+    // Column-wise term.
+    for j in 0..n {
+        let mut mx = 0.0f64;
+        let mut s = 0.0;
+        for i in 0..n {
+            let v = p[(i, j)].abs();
+            mx = mx.max(v);
+            s += v;
+        }
+        if mx == 0.0 {
+            return 1.0;
+        }
+        total += s / mx - 1.0;
+    }
+    total / (2.0 * n as f64 * (n as f64 - 1.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn identity_is_zero() {
+        assert_eq!(amari_distance(&Mat::eye(5)), 0.0);
+    }
+
+    #[test]
+    fn scaled_permutation_is_zero() {
+        let mut p = Mat::zeros(3, 3);
+        p[(0, 2)] = 3.0;
+        p[(1, 0)] = -0.5;
+        p[(2, 1)] = 7.0;
+        assert!(amari_distance(&p) < 1e-15);
+    }
+
+    #[test]
+    fn all_ones_is_worst_case() {
+        let p = Mat::filled(4, 4, 1.0);
+        assert!((amari_distance(&p) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn invariant_to_permutation_and_global_scale() {
+        let mut rng = Pcg64::new(1);
+        let p = crate::testkit::gen::well_conditioned(&mut rng, 5);
+        let d0 = amari_distance(&p);
+        // Permute rows and apply one global scale (per-row scales shift
+        // the column term — the index is used on row-normalized P).
+        let perm = rng.permutation(5);
+        let mut pm = Mat::zeros(5, 5);
+        for (i, &pi) in perm.iter().enumerate() {
+            pm[(i, pi)] = 3.0;
+        }
+        let d1 = amari_distance(&matmul(&pm, &p));
+        assert!((d0 - d1).abs() < 1e-12, "{d0} vs {d1}");
+    }
+
+    #[test]
+    fn near_permutation_is_small() {
+        let mut rng = Pcg64::new(2);
+        let mut p = Mat::eye(6);
+        for i in 0..6 {
+            for j in 0..6 {
+                if i != j {
+                    p[(i, j)] = 0.01 * (rng.next_f64() - 0.5);
+                }
+            }
+        }
+        let d = amari_distance(&p);
+        assert!(d > 0.0 && d < 0.05, "d={d}");
+    }
+}

@@ -1,0 +1,333 @@
+//! L-BFGS memory and the preconditioned two-loop recursion (Alg. 4).
+//!
+//! The paper's key algorithmic device: run the standard L-BFGS two-loop
+//! recursion over the last `m` relative updates `s_i = α_i p_i` and
+//! gradient differences `y_i = G_i − G_{i−1}`, but seed the middle step
+//! `r = H₀⁻¹ q` with the *regularized block-diagonal Hessian
+//! approximation* instead of a scaled identity.
+
+use super::hessian::BlockDiagHessian;
+use crate::linalg::Mat;
+use std::collections::VecDeque;
+
+/// One stored correction pair.
+#[derive(Clone, Debug)]
+struct Pair {
+    s: Mat,
+    y: Mat,
+    rho: f64, // 1 / ⟨s, y⟩
+}
+
+/// Ring buffer of the last `m` (s, y) pairs.
+#[derive(Clone, Debug)]
+pub struct LbfgsMemory {
+    m: usize,
+    pairs: VecDeque<Pair>,
+    /// Pairs rejected for violating the curvature condition ⟨s,y⟩ > 0.
+    pub skipped: usize,
+}
+
+/// Seed for the two-loop recursion's middle step.
+pub enum Seed<'a> {
+    /// Standard L-BFGS: `r = γ q`, with γ the Barzilai–Borwein-style
+    /// scaling `⟨s,y⟩ / ⟨y,y⟩` of the most recent pair (1 if empty).
+    ScaledIdentity,
+    /// Preconditioned (paper): `r = H̃⁻¹ q`, blockwise solve against the
+    /// regularized approximation.
+    Precond(&'a BlockDiagHessian),
+}
+
+impl LbfgsMemory {
+    pub fn new(m: usize) -> Self {
+        assert!(m > 0, "memory size must be positive");
+        Self { m, pairs: VecDeque::with_capacity(m), skipped: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.pairs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pairs.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.pairs.clear();
+    }
+
+    /// Record the pair from the last accepted step. Pairs with
+    /// non-positive curvature ⟨s,y⟩ are skipped (standard safeguard: they
+    /// would break positive-definiteness of the implicit estimate).
+    pub fn push(&mut self, s: Mat, y: Mat) {
+        let sy = s.dot(&y);
+        if !(sy > 1e-300) || !sy.is_finite() {
+            self.skipped += 1;
+            return;
+        }
+        if self.pairs.len() == self.m {
+            self.pairs.pop_front();
+        }
+        self.pairs.push_back(Pair { s, y, rho: 1.0 / sy });
+    }
+
+    /// Two-loop recursion (Alg. 4): returns `H_k^m⁻¹ · g` where the
+    /// implicit inverse-Hessian estimate is seeded by `seed`. The caller
+    /// negates to get the descent direction `p_k = -(H_k^m)⁻¹ G_k`.
+    pub fn apply_inverse(&self, g: &Mat, seed: Seed<'_>) -> Mat {
+        let mut q = g.clone();
+        let k = self.pairs.len();
+        let mut alpha = vec![0.0; k];
+        // First loop: newest → oldest.
+        for (idx, pair) in self.pairs.iter().enumerate().rev() {
+            let a = pair.rho * pair.s.dot(&q);
+            alpha[idx] = a;
+            q.add_scaled_inplace(-a, &pair.y);
+        }
+        // Middle: r = H₀⁻¹ q.
+        let mut r = match seed {
+            Seed::Precond(h) => h.solve(&q),
+            Seed::ScaledIdentity => {
+                let gamma = match self.pairs.back() {
+                    Some(p) => {
+                        let yy = p.y.dot(&p.y);
+                        if yy > 0.0 {
+                            (1.0 / p.rho) / yy
+                        } else {
+                            1.0
+                        }
+                    }
+                    None => 1.0,
+                };
+                q.scale(gamma)
+            }
+        };
+        // Second loop: oldest → newest.
+        for (idx, pair) in self.pairs.iter().enumerate() {
+            let beta = pair.rho * pair.y.dot(&r);
+            r.add_scaled_inplace(alpha[idx] - beta, &pair.s);
+        }
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, Lu};
+    use crate::rng::Pcg64;
+    use crate::testkit::gen;
+
+    /// Dense BFGS inverse update for cross-checking, operating on matrices
+    /// flattened to vectors of length n².
+    fn dense_bfgs_inverse(pairs: &[(Mat, Mat)], h0: &Mat /* n²×n² */) -> Mat {
+        let d = h0.rows();
+        let mut h = h0.clone();
+        for (s, y) in pairs {
+            let sv = s.as_slice();
+            let yv = y.as_slice();
+            let sy: f64 = sv.iter().zip(yv).map(|(a, b)| a * b).sum();
+            let rho = 1.0 / sy;
+            // H ← (I - ρ s yᵀ) H (I - ρ y sᵀ) + ρ s sᵀ
+            let mut left = Mat::eye(d);
+            for i in 0..d {
+                for j in 0..d {
+                    left[(i, j)] -= rho * sv[i] * yv[j];
+                }
+            }
+            let mut right = Mat::eye(d);
+            for i in 0..d {
+                for j in 0..d {
+                    right[(i, j)] -= rho * yv[i] * sv[j];
+                }
+            }
+            let mut new_h = matmul(&matmul(&left, &h), &right);
+            for i in 0..d {
+                for j in 0..d {
+                    new_h[(i, j)] += rho * sv[i] * sv[j];
+                }
+            }
+            h = new_h;
+        }
+        h
+    }
+
+    #[test]
+    fn empty_memory_identity_seed_is_identity() {
+        let mem = LbfgsMemory::new(5);
+        let g = gen::mat(&mut Pcg64::new(1), 3, 3);
+        let r = mem.apply_inverse(&g, Seed::ScaledIdentity);
+        assert!(r.max_abs_diff(&g) < 1e-15);
+    }
+
+    #[test]
+    fn empty_memory_precond_seed_is_block_solve() {
+        let mem = LbfgsMemory::new(5);
+        let mut rng = Pcg64::new(2);
+        let g = gen::mat(&mut rng, 4, 4);
+        let mut a = Mat::filled(4, 4, 3.0);
+        for i in 0..4 {
+            a[(i, i)] = 2.0;
+        }
+        let h = BlockDiagHessian::from_a(a);
+        let r = mem.apply_inverse(&g, Seed::Precond(&h));
+        assert!(r.max_abs_diff(&h.solve(&g)) < 1e-14);
+    }
+
+    #[test]
+    fn curvature_violations_are_skipped() {
+        let mut mem = LbfgsMemory::new(3);
+        let s = Mat::filled(2, 2, 1.0);
+        let y = s.scale(-1.0); // ⟨s,y⟩ < 0
+        mem.push(s.clone(), y);
+        assert_eq!(mem.len(), 0);
+        assert_eq!(mem.skipped, 1);
+        mem.push(s.clone(), s.clone());
+        assert_eq!(mem.len(), 1);
+    }
+
+    #[test]
+    fn ring_buffer_caps_at_m() {
+        let mut mem = LbfgsMemory::new(2);
+        let mut rng = Pcg64::new(3);
+        for _ in 0..5 {
+            let s = gen::mat(&mut rng, 2, 2);
+            mem.push(s.clone(), s); // ⟨s,s⟩ > 0 always accepted
+        }
+        assert_eq!(mem.len(), 2);
+    }
+
+    #[test]
+    fn two_loop_matches_dense_bfgs_identity_seed() {
+        // With H₀ = I (force by one pair with γ=1: use s=y so γ=1).
+        let n = 3;
+        let d = n * n;
+        let mut rng = Pcg64::new(4);
+        let mut mem = LbfgsMemory::new(10);
+        let mut pairs = Vec::new();
+        // First pair s=y makes γ = ⟨s,y⟩/⟨y,y⟩ = 1 ⇒ seed is exactly I.
+        let s0 = gen::mat(&mut rng, n, n);
+        mem.push(s0.clone(), s0.clone());
+        pairs.push((s0.clone(), s0));
+        for _ in 0..3 {
+            let s = gen::mat(&mut rng, n, n);
+            let mut y = gen::mat(&mut rng, n, n);
+            if s.dot(&y) <= 0.0 {
+                y = y.scale(-1.0);
+            }
+            mem.push(s.clone(), y.clone());
+            pairs.push((s, y));
+        }
+        // Wait: γ is from the most recent pair, not 1. Re-order so the
+        // *last* pair is the s=y one.
+        let mut mem2 = LbfgsMemory::new(10);
+        let mut pairs2 = pairs[1..].to_vec();
+        pairs2.push(pairs[0].clone());
+        for (s, y) in &pairs2 {
+            mem2.push(s.clone(), y.clone());
+        }
+        let g = gen::mat(&mut rng, n, n);
+        let got = mem2.apply_inverse(&g, Seed::ScaledIdentity);
+        let hdense = dense_bfgs_inverse(&pairs2, &Mat::eye(d));
+        let gv = Mat::from_vec(d, 1, g.as_slice().to_vec());
+        let want = matmul(&hdense, &gv);
+        for i in 0..d {
+            assert!(
+                (got.as_slice()[i] - want[(i, 0)]).abs() < 1e-10,
+                "i={i}: {} vs {}",
+                got.as_slice()[i],
+                want[(i, 0)]
+            );
+        }
+    }
+
+    #[test]
+    fn two_loop_matches_dense_bfgs_precond_seed() {
+        let n = 3;
+        let d = n * n;
+        let mut rng = Pcg64::new(5);
+        // PD block-diagonal seed.
+        let mut a = Mat::filled(n, n, 4.0);
+        for i in 0..n {
+            a[(i, i)] = 3.0;
+        }
+        let h0_block = BlockDiagHessian::from_a(a);
+        // Dense H₀⁻¹: apply block solve to basis vectors.
+        let mut h0_dense_inv = Mat::zeros(d, d);
+        for col in 0..d {
+            let mut e = Mat::zeros(n, n);
+            e.as_mut_slice()[col] = 1.0;
+            let x = h0_block.solve(&e);
+            for row in 0..d {
+                h0_dense_inv[(row, col)] = x.as_slice()[row];
+            }
+        }
+        let mut mem = LbfgsMemory::new(10);
+        let mut pairs = Vec::new();
+        for _ in 0..4 {
+            let s = gen::mat(&mut rng, n, n);
+            let mut y = gen::mat(&mut rng, n, n);
+            if s.dot(&y) <= 0.0 {
+                y = y.scale(-1.0);
+            }
+            mem.push(s.clone(), y.clone());
+            pairs.push((s, y));
+        }
+        let g = gen::mat(&mut rng, n, n);
+        let got = mem.apply_inverse(&g, Seed::Precond(&h0_block));
+        let hdense = dense_bfgs_inverse(&pairs, &h0_dense_inv);
+        let gv = Mat::from_vec(d, 1, g.as_slice().to_vec());
+        let want = matmul(&hdense, &gv);
+        for i in 0..d {
+            assert!((got.as_slice()[i] - want[(i, 0)]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn inverse_is_positive_definite_operator() {
+        // ⟨g, H⁻¹g⟩ > 0 for nonzero g when all pairs satisfy curvature.
+        let mut rng = Pcg64::new(6);
+        let mut mem = LbfgsMemory::new(7);
+        for _ in 0..5 {
+            let s = gen::mat(&mut rng, 4, 4);
+            let mut y = gen::mat(&mut rng, 4, 4);
+            if s.dot(&y) <= 0.0 {
+                y = y.scale(-1.0);
+            }
+            mem.push(s, y);
+        }
+        for _ in 0..10 {
+            let g = gen::mat(&mut rng, 4, 4);
+            let r = mem.apply_inverse(&g, Seed::ScaledIdentity);
+            assert!(g.dot(&r) > 0.0);
+        }
+    }
+
+    #[test]
+    fn latest_secant_equation_holds() {
+        // BFGS-family estimates always satisfy the most recent secant
+        // equation exactly: H⁻¹ y_last = s_last.
+        let n = 2;
+        let d = 4;
+        let mut rng = Pcg64::new(7);
+        // SPD dense A of size d generates consistent (s, y = A s) pairs.
+        let raw = gen::mat(&mut rng, d, d);
+        let mut a = matmul(&raw, &raw.transpose());
+        for i in 0..d {
+            a[(i, i)] += 1.0;
+        }
+        let mut mem = LbfgsMemory::new(10);
+        let mut last = None;
+        for _ in 0..d {
+            let s = gen::mat(&mut rng, n, n);
+            let sv = Mat::from_vec(d, 1, s.as_slice().to_vec());
+            let yv = matmul(&a, &sv);
+            let y = Mat::from_vec(n, n, yv.as_slice().to_vec());
+            mem.push(s.clone(), y.clone());
+            last = Some((s, y));
+        }
+        let (s_last, y_last) = last.unwrap();
+        let r = mem.apply_inverse(&y_last, Seed::ScaledIdentity);
+        assert!(r.max_abs_diff(&s_last) < 1e-10, "secant violated");
+        let _ = Lu::new(&a);
+    }
+}

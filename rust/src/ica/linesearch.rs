@@ -1,0 +1,182 @@
+//! Line-search procedures (paper §2.5).
+//!
+//! - [`backtracking`]: start at α=1, halve until the loss decreases, with
+//!   a bounded number of attempts. Quasi-Newton methods make an implicit
+//!   quadratic model for which α=1 is the natural step, so this is both
+//!   cheap and usually immediate.
+//! - [`golden_section`]: an "oracle" near-exact minimizer of
+//!   `α ↦ L((I+αD)W)` used for the gradient-descent baselines (the paper
+//!   grants GD a best-possible line search whose cost is *excluded* from
+//!   timing — see the solver's stopwatch handling).
+
+use crate::linalg::Mat;
+
+/// Outcome of a backtracking search.
+#[derive(Clone, Copy, Debug)]
+pub struct LineSearchResult {
+    /// Accepted step size; 0 if no decrease was found.
+    pub alpha: f64,
+    /// Loss at the accepted point (= `f0` when `alpha == 0`).
+    pub loss: f64,
+    /// Number of objective evaluations spent.
+    pub evals: usize,
+    /// Whether a decrease was found within the attempt budget.
+    pub success: bool,
+}
+
+/// Backtracking: try α = 1, 1/2, 1/4, … up to `max_attempts` times until
+/// `f(α) < f0` (up to a tiny slack of a few ulps of the loss scale — near
+/// the optimum the true decrease `½⟨G, H̃⁻¹G⟩` drops below f64 resolution
+/// while the quasi-Newton step still contracts the gradient; rejecting it
+/// there would stall the quadratic tail). `f` evaluates the loss at a
+/// candidate step.
+pub fn backtracking(
+    f0: f64,
+    max_attempts: usize,
+    mut f: impl FnMut(f64) -> f64,
+) -> LineSearchResult {
+    let slack = 1e-13 * (1.0 + f0.abs());
+    let mut alpha = 1.0;
+    for attempt in 0..max_attempts {
+        let fa = f(alpha);
+        if fa.is_finite() && fa < f0 + slack {
+            return LineSearchResult { alpha, loss: fa, evals: attempt + 1, success: true };
+        }
+        alpha *= 0.5;
+    }
+    LineSearchResult { alpha: 0.0, loss: f0, evals: max_attempts, success: false }
+}
+
+/// Golden-section minimization of a unimodal `f` on `[a, b]`.
+/// Returns (α*, f(α*)). Tolerance is on the bracket width.
+pub fn golden_section(
+    mut a: f64,
+    mut b: f64,
+    tol: f64,
+    mut f: impl FnMut(f64) -> f64,
+) -> (f64, f64) {
+    const INVPHI: f64 = 0.618_033_988_749_894_9; // 1/φ
+    let mut c = b - (b - a) * INVPHI;
+    let mut d = a + (b - a) * INVPHI;
+    let mut fc = f(c);
+    let mut fd = f(d);
+    while (b - a).abs() > tol {
+        if fc < fd {
+            b = d;
+            d = c;
+            fd = fc;
+            c = b - (b - a) * INVPHI;
+            fc = f(c);
+        } else {
+            a = c;
+            c = d;
+            fc = fd;
+            d = a + (b - a) * INVPHI;
+            fd = f(d);
+        }
+    }
+    if fc < fd {
+        (c, fc)
+    } else {
+        (d, fd)
+    }
+}
+
+/// Oracle line search for a descent direction `dir` at `w`: minimizes
+/// `α ↦ loss((I + α·dir)·W)` over (0, α_max] by bracketed golden section.
+/// `loss_at` evaluates the full loss at a candidate W.
+pub fn oracle(
+    w: &Mat,
+    dir: &Mat,
+    alpha_max: f64,
+    mut loss_at: impl FnMut(&Mat) -> f64,
+) -> (f64, f64) {
+    let n = w.rows();
+    let mut eval = |alpha: f64| {
+        let mut step = Mat::eye(n);
+        step.add_scaled_inplace(alpha, dir);
+        loss_at(&crate::linalg::matmul(&step, w))
+    };
+    // Expand a bracket: find upper bound where loss starts increasing.
+    let f0 = eval(0.0);
+    let mut hi = alpha_max.min(1.0);
+    let mut f_hi = eval(hi);
+    // If already increasing at tiny step, shrink; else expand up to alpha_max.
+    if f_hi < f0 {
+        while hi < alpha_max {
+            let next = (hi * 2.0).min(alpha_max);
+            let f_next = eval(next);
+            if f_next > f_hi {
+                break;
+            }
+            hi = next;
+            f_hi = f_next;
+            if hi >= alpha_max {
+                break;
+            }
+        }
+    }
+    let upper = (hi * 2.0).min(alpha_max);
+    golden_section(0.0, upper, 1e-4 * upper.max(1e-12), eval)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backtracking_accepts_unit_step_when_good() {
+        // f(α) = (α-1)²: f0 = f(0) = 1, f(1) = 0 < 1.
+        let r = backtracking(1.0, 10, |a| (a - 1.0).powi(2));
+        assert!(r.success);
+        assert_eq!(r.alpha, 1.0);
+        assert_eq!(r.evals, 1);
+    }
+
+    #[test]
+    fn backtracking_halves_until_decrease() {
+        // Decrease only for α < 0.3: f(α) = if α < 0.3 { -α } else { 1 }.
+        let r = backtracking(0.0, 10, |a| if a < 0.3 { -a } else { 1.0 });
+        assert!(r.success);
+        assert_eq!(r.alpha, 0.25);
+        assert_eq!(r.evals, 3);
+    }
+
+    #[test]
+    fn backtracking_gives_up_after_budget() {
+        let r = backtracking(0.0, 5, |_| 1.0);
+        assert!(!r.success);
+        assert_eq!(r.alpha, 0.0);
+        assert_eq!(r.loss, 0.0);
+        assert_eq!(r.evals, 5);
+    }
+
+    #[test]
+    fn backtracking_rejects_nan() {
+        // NaN loss (singular W) must not be accepted.
+        let r = backtracking(1.0, 3, |a| if a > 0.4 { f64::NAN } else { 0.5 });
+        assert!(r.success);
+        assert!(r.alpha <= 0.4);
+    }
+
+    #[test]
+    fn golden_section_finds_parabola_min() {
+        let (x, fx) = golden_section(0.0, 4.0, 1e-8, |a| (a - 1.7).powi(2) + 3.0);
+        assert!((x - 1.7).abs() < 1e-6);
+        assert!((fx - 3.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn oracle_minimizes_along_direction() {
+        use crate::linalg::Mat;
+        // loss(W) = ‖W - 2I‖²_F; at W = I with dir = I the optimum of
+        // ‖(1+α)I - 2I‖² is α = 1.
+        let w = Mat::eye(3);
+        let dir = Mat::eye(3);
+        let (alpha, _) = oracle(&w, &dir, 10.0, |m| {
+            let d = m.sub(&Mat::eye(3).scale(2.0));
+            d.fro_norm().powi(2)
+        });
+        assert!((alpha - 1.0).abs() < 1e-3, "alpha={alpha}");
+    }
+}

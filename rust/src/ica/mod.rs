@@ -1,0 +1,17 @@
+//! ICA core: the paper's objective, Hessian approximations and solvers.
+
+pub mod amari;
+pub mod hessian;
+pub mod lbfgs;
+pub mod linesearch;
+pub mod monitor;
+pub mod newton;
+pub mod score;
+pub mod solver;
+
+pub use amari::amari_distance;
+pub use hessian::{BlockDiagHessian, HessianApprox};
+pub use monitor::{IterRecord, Trace};
+pub use solver::{
+    full_loss, relative_update, solve, Algorithm, InfomaxConfig, SolveResult, SolverConfig,
+};

@@ -1,0 +1,186 @@
+//! Convergence monitoring: per-iteration records of gradient norm, loss
+//! and *pausable* CPU time.
+//!
+//! The paper's figures plot the full-data gradient ∞-norm against both
+//! iteration count and CPU time, with two timing subtleties we reproduce:
+//! the oracle line search of the gradient-descent baseline is *not*
+//! charged to the algorithm, and Infomax's a-posteriori full gradient
+//! evaluations are not charged either. [`Stopwatch::pause`] handles both.
+
+use std::time::Instant;
+
+/// A stopwatch that can be paused while "free" work (oracle line search,
+/// a-posteriori diagnostics) runs.
+#[derive(Debug)]
+pub struct Stopwatch {
+    accumulated: f64,
+    started: Option<Instant>,
+}
+
+impl Stopwatch {
+    pub fn new_running() -> Self {
+        Self { accumulated: 0.0, started: Some(Instant::now()) }
+    }
+
+    pub fn pause(&mut self) {
+        if let Some(t0) = self.started.take() {
+            self.accumulated += t0.elapsed().as_secs_f64();
+        }
+    }
+
+    pub fn resume(&mut self) {
+        if self.started.is_none() {
+            self.started = Some(Instant::now());
+        }
+    }
+
+    /// Charged seconds so far (without stopping).
+    pub fn elapsed(&self) -> f64 {
+        self.accumulated
+            + self.started.map(|t0| t0.elapsed().as_secs_f64()).unwrap_or(0.0)
+    }
+
+    /// Run `f` without charging its time.
+    pub fn off_clock<R>(&mut self, f: impl FnOnce() -> R) -> R {
+        self.pause();
+        let r = f();
+        self.resume();
+        r
+    }
+}
+
+/// One per-iteration record.
+#[derive(Clone, Copy, Debug)]
+pub struct IterRecord {
+    pub iter: usize,
+    /// Charged CPU seconds since solve start.
+    pub time: f64,
+    /// ∞-norm of the full-data relative gradient.
+    pub grad_inf: f64,
+    /// Full loss (incl. logdet term).
+    pub loss: f64,
+}
+
+/// A convergence trace for one run.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub records: Vec<IterRecord>,
+}
+
+impl Trace {
+    pub fn push(&mut self, rec: IterRecord) {
+        self.records.push(rec);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn last(&self) -> Option<&IterRecord> {
+        self.records.last()
+    }
+
+    /// First iteration index whose gradient ∞-norm is ≤ `tol`, if any.
+    pub fn iters_to_tol(&self, tol: f64) -> Option<usize> {
+        self.records.iter().find(|r| r.grad_inf <= tol).map(|r| r.iter)
+    }
+
+    /// Charged time to reach `tol`, if reached.
+    pub fn time_to_tol(&self, tol: f64) -> Option<f64> {
+        self.records.iter().find(|r| r.grad_inf <= tol).map(|r| r.time)
+    }
+
+    /// Gradient ∞-norm sampled at a given iteration (for median curves):
+    /// value of the last record with `iter ≤ i`, or the first record.
+    pub fn grad_at_iter(&self, i: usize) -> Option<f64> {
+        if self.records.is_empty() {
+            return None;
+        }
+        let mut last = self.records[0].grad_inf;
+        for r in &self.records {
+            if r.iter > i {
+                break;
+            }
+            last = r.grad_inf;
+        }
+        Some(last)
+    }
+
+    /// Gradient ∞-norm as a step function of charged time.
+    pub fn grad_at_time(&self, t: f64) -> Option<f64> {
+        if self.records.is_empty() {
+            return None;
+        }
+        let mut last = self.records[0].grad_inf;
+        for r in &self.records {
+            if r.time > t {
+                break;
+            }
+            last = r.grad_inf;
+        }
+        Some(last)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn stopwatch_pauses() {
+        let mut sw = Stopwatch::new_running();
+        std::thread::sleep(Duration::from_millis(10));
+        sw.pause();
+        let t1 = sw.elapsed();
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(sw.elapsed(), t1, "paused clock must not advance");
+        sw.resume();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(sw.elapsed() > t1);
+    }
+
+    #[test]
+    fn off_clock_not_charged() {
+        let mut sw = Stopwatch::new_running();
+        let before = sw.elapsed();
+        let out = sw.off_clock(|| {
+            std::thread::sleep(Duration::from_millis(30));
+            42
+        });
+        assert_eq!(out, 42);
+        // Allow a small epsilon for the pause/resume bookkeeping itself.
+        assert!(sw.elapsed() - before < 0.02, "off-clock work was charged");
+    }
+
+    fn mk_trace() -> Trace {
+        let mut t = Trace::default();
+        for (i, g) in [1.0, 0.5, 0.01, 1e-5].iter().enumerate() {
+            t.push(IterRecord { iter: i, time: i as f64 * 0.1, grad_inf: *g, loss: -(i as f64) });
+        }
+        t
+    }
+
+    #[test]
+    fn tol_queries() {
+        let t = mk_trace();
+        assert_eq!(t.iters_to_tol(0.05), Some(2));
+        assert_eq!(t.iters_to_tol(1e-9), None);
+        assert!((t.time_to_tol(0.05).unwrap() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn step_function_sampling() {
+        let t = mk_trace();
+        assert_eq!(t.grad_at_iter(0), Some(1.0));
+        assert_eq!(t.grad_at_iter(2), Some(0.01));
+        assert_eq!(t.grad_at_iter(100), Some(1e-5));
+        assert_eq!(t.grad_at_time(0.15), Some(0.5));
+        assert_eq!(t.grad_at_time(10.0), Some(1e-5));
+        assert_eq!(Trace::default().grad_at_iter(0), None);
+    }
+}

@@ -1,0 +1,247 @@
+//! Full Newton method with the *true* relative Hessian (paper §2.2.2).
+//!
+//! The paper argues this is "perfectly possible … but the cost of the
+//! different operations involved makes it slow": building
+//! `ĥ_ijl = Ê[ψ'(y_i) y_j y_l]` costs Θ(N³T), and solving the N²×N²
+//! system costs up to Θ(N⁶). This module implements it anyway — as the
+//! ablation baseline that motivates the paper's approximations (see
+//! `bench_ablation`). Practical only for small N.
+//!
+//! The true Hessian `H_ijkl = δ_il δ_jk + δ_ik ĥ_ijl` (eq. 5) is
+//! assembled densely over the n² coordinate pairs, eigenvalue-floored
+//! (the dense analogue of Alg. 1), and LU-solved.
+
+use crate::backend::{ComputeBackend, NativeBackend, StatsLevel};
+use crate::ica::monitor::{IterRecord, Stopwatch, Trace};
+use crate::ica::score::LogCosh;
+use crate::ica::solver::{relative_update, SolveResult};
+use crate::linalg::{eigh, matmul, Lu, Mat};
+
+/// The Θ(N³T) moment tensor ĥ_ijl, stored as N stacked N×N matrices
+/// (`h3[i]` holds ĥ_i·· ).
+pub fn h3_tensor(y: &Mat) -> Vec<Mat> {
+    let score = LogCosh;
+    let (n, t) = (y.rows(), y.cols());
+    let tf = t as f64;
+    // ψ'(Y) rows once.
+    let mut psip = Mat::zeros(n, t);
+    for i in 0..n {
+        let yrow = y.row(i);
+        for (p, &v) in psip.row_mut(i).iter_mut().zip(yrow) {
+            *p = score.psi_prime(v);
+        }
+    }
+    (0..n)
+        .map(|i| {
+            // ĥ_i j l = (1/T) Σ_t ψ'(y_i t) y_j t y_l t
+            //        = (1/T) (Y · diag(ψ'_i) · Yᵀ)_jl — rank-T congruence.
+            let mut scaled = Mat::zeros(n, t);
+            let prow = psip.row(i);
+            for j in 0..n {
+                let yrow = y.row(j);
+                let srow = scaled.row_mut(j);
+                for ((s, &yv), &pv) in srow.iter_mut().zip(yrow).zip(prow) {
+                    *s = yv * pv;
+                }
+            }
+            let mut h = crate::linalg::matmul_a_bt(&scaled, y);
+            h.scale_inplace(1.0 / tf);
+            h
+        })
+        .collect()
+}
+
+/// Assemble the dense n²×n² true Hessian from the moment tensor.
+/// Coordinate order: (i,j) ↦ i·n + j.
+pub fn dense_hessian(h3: &[Mat]) -> Mat {
+    let n = h3.len();
+    let d = n * n;
+    let mut h = Mat::zeros(d, d);
+    for i in 0..n {
+        for j in 0..n {
+            let row = i * n + j;
+            // δ_il δ_jk term: couples (i,j) with (j,i).
+            h[(row, j * n + i)] += 1.0;
+            // δ_ik ĥ_ijl term: dense over l within the block k = i.
+            for l in 0..n {
+                h[(row, i * n + l)] += h3[i][(j, l)];
+            }
+        }
+    }
+    h
+}
+
+/// Floor the spectrum of a symmetric dense matrix at `lambda_min`
+/// (the dense analogue of Algorithm 1, via full eigendecomposition —
+/// exactly the expensive step the paper's block approximation avoids).
+pub fn spectral_floor(h: &Mat, lambda_min: f64) -> Mat {
+    let e = eigh(h);
+    let d = h.rows();
+    let mut vd = e.vectors.clone();
+    for i in 0..d {
+        for j in 0..d {
+            vd[(i, j)] *= e.values[j].max(lambda_min);
+        }
+    }
+    matmul(&vd, &e.vectors.transpose())
+}
+
+/// Full-Newton ICA solve (ablation; use only for small N).
+pub fn solve_newton(
+    x: Mat,
+    w0: &Mat,
+    tol: f64,
+    max_iters: usize,
+    lambda_min: f64,
+) -> SolveResult {
+    let n = x.rows();
+    assert!(n <= 32, "true-Hessian Newton is Θ(N³T)+Θ(N⁶); N={n} is too large");
+    let mut backend = NativeBackend::new(x);
+    let mut sw = Stopwatch::new_running();
+    let mut w = w0.clone();
+    let mut trace = Trace::default();
+    let mut directions = Vec::new();
+    let mut converged = false;
+    let mut iters = 0;
+    let mut fallbacks = 0;
+
+    for k in 0..max_iters {
+        let stats = backend.stats(&w, StatsLevel::Basic);
+        let loss = stats.loss_data
+            - Lu::new(&w).map(|lu| lu.log_abs_det()).unwrap_or(f64::NEG_INFINITY);
+        let grad_inf = stats.g.inf_norm();
+        sw.pause();
+        trace.push(IterRecord { iter: k, time: sw.elapsed(), grad_inf, loss });
+        sw.resume();
+        if grad_inf <= tol {
+            converged = true;
+            break;
+        }
+        iters = k + 1;
+
+        // Build true Hessian at W (the expensive part).
+        let y = matmul(&w, backend.data());
+        let h3 = h3_tensor(&y);
+        let hd = spectral_floor(&dense_hessian(&h3), lambda_min);
+        let lu = Lu::new(&hd).expect("floored Hessian is PD");
+        let g_vec = stats.g.as_slice().to_vec();
+        let p_vec = lu.solve_vec(&g_vec);
+        let p = Mat::from_vec(n, n, p_vec).scale(-1.0);
+
+        let ls = crate::ica::linesearch::backtracking(loss, 12, |a| {
+            let cand = relative_update(&w, &p, a);
+            backend.loss_data(&cand)
+                - Lu::new(&cand).map(|lu| lu.log_abs_det()).unwrap_or(f64::NEG_INFINITY)
+        });
+        let (alpha, dir) = if ls.success {
+            (ls.alpha, p)
+        } else {
+            fallbacks += 1;
+            let g_dir = stats.g.scale(-1.0);
+            let ls2 = crate::ica::linesearch::backtracking(loss, 20, |a| {
+                let cand = relative_update(&w, &g_dir, a);
+                backend.loss_data(&cand)
+                    - Lu::new(&cand).map(|lu| lu.log_abs_det()).unwrap_or(f64::NEG_INFINITY)
+            });
+            if !ls2.success {
+                break;
+            }
+            (ls2.alpha, g_dir)
+        };
+        w = relative_update(&w, &dir, alpha);
+        directions.push(dir);
+    }
+    SolveResult { w, trace, converged, iters, gradient_fallbacks: fallbacks, directions }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Laplace, Pcg64, Sample};
+
+    fn laplace_mix(n: usize, t: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::new(seed);
+        let lap = Laplace::standard();
+        let s = Mat::from_fn(n, t, |_, _| lap.sample(&mut rng));
+        let a = crate::testkit::gen::well_conditioned(&mut rng, n);
+        matmul(&a, &s)
+    }
+
+    #[test]
+    fn h3_diagonal_slices_match_h2_moments() {
+        // ĥ_i j j = ĥ_ij (the H̃² moments are the diagonal of the tensor).
+        let x = laplace_mix(4, 800, 1);
+        let y = x.clone();
+        let h3 = h3_tensor(&y);
+        let stats = NativeBackend::new(x).stats(&Mat::eye(4), StatsLevel::H2);
+        for i in 0..4 {
+            for j in 0..4 {
+                assert!(
+                    (h3[i][(j, j)] - stats.h2[(i, j)]).abs() < 1e-12,
+                    "({i},{j}): {} vs {}",
+                    h3[i][(j, j)],
+                    stats.h2[(i, j)]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dense_hessian_is_symmetric_operator() {
+        // ⟨E|H|E'⟩ = ⟨E'|H|E⟩ — the Hessian of a scalar function.
+        let x = laplace_mix(3, 600, 2);
+        let h3 = h3_tensor(&x);
+        let h = dense_hessian(&h3);
+        assert!(h.max_abs_diff(&h.transpose()) < 1e-12);
+    }
+
+    #[test]
+    fn dense_hessian_matches_finite_differences() {
+        use crate::ica::solver::full_loss;
+        let x = laplace_mix(3, 50_000, 3);
+        let w = Mat::eye(3);
+        let y = x.clone();
+        let h3 = h3_tensor(&y);
+        let hd = dense_hessian(&h3);
+        let mut be = NativeBackend::new(x);
+        let mut rng = Pcg64::new(4);
+        let e = crate::testkit::gen::mat(&mut rng, 3, 3);
+        let eps = 1e-4;
+        let l0 = full_loss(&mut be, &w);
+        let lp = full_loss(&mut be, &relative_update(&w, &e, eps));
+        let lm = full_loss(&mut be, &relative_update(&w, &e, -eps));
+        let fd2 = (lp - 2.0 * l0 + lm) / (eps * eps);
+        // ⟨E|H|E⟩ via the dense matrix.
+        let ev = e.as_slice();
+        let mut quad = 0.0;
+        for r in 0..9 {
+            for c in 0..9 {
+                quad += ev[r] * hd[(r, c)] * ev[c];
+            }
+        }
+        assert!(
+            (fd2 - quad).abs() / (1.0 + fd2.abs()) < 1e-3,
+            "fd2={fd2} quad={quad}"
+        );
+    }
+
+    #[test]
+    fn spectral_floor_enforces_minimum() {
+        let mut h = Mat::eye(4);
+        h[(0, 0)] = -2.0;
+        h[(1, 1)] = 0.001;
+        let f = spectral_floor(&h, 0.5);
+        let e = eigh(&f);
+        assert!(e.values[0] >= 0.5 - 1e-10, "min eig {}", e.values[0]);
+        // Healthy directions untouched.
+        assert!((e.values[3] - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn newton_converges_quadratically_on_model_data() {
+        let x = laplace_mix(5, 4000, 5);
+        let res = solve_newton(x, &Mat::eye(5), 1e-8, 40, 1e-2);
+        assert!(res.converged, "Newton failed: {:?}", res.trace.last());
+        assert!(res.iters < 25, "too slow: {} iterations", res.iters);
+    }
+}

@@ -1,0 +1,100 @@
+//! Score function / source density model.
+//!
+//! The paper (like standard Infomax) fixes the source negative
+//! log-density to `-log p(x) = 2 log cosh(x/2)` up to a constant, giving
+//! score `ψ(x) = tanh(x/2)` and derivative `ψ'(x) = (1 - tanh²(x/2))/2`.
+
+/// The Infomax / logcosh density model.
+///
+/// All three callbacks are exposed separately so backends can fuse them
+/// into single sweeps; `psi_and_prime` returns both from one `tanh`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LogCosh;
+
+impl LogCosh {
+    /// `-log p(x) = 2 log cosh(x/2)` (the irrelevant normalization
+    /// constant is dropped, as in the paper).
+    #[inline]
+    pub fn neg_log_density(self, x: f64) -> f64 {
+        // Numerically safe log cosh: log cosh u = |u| + log(1+e^{-2|u|}) - log 2.
+        let u = 0.5 * x;
+        let a = u.abs();
+        2.0 * (a + (-2.0 * a).exp().ln_1p() - std::f64::consts::LN_2)
+    }
+
+    /// Score `ψ(x) = -p'(x)/p(x) = tanh(x/2)`.
+    #[inline]
+    pub fn psi(self, x: f64) -> f64 {
+        (0.5 * x).tanh()
+    }
+
+    /// `ψ'(x) = (1 - tanh²(x/2)) / 2`.
+    #[inline]
+    pub fn psi_prime(self, x: f64) -> f64 {
+        let t = (0.5 * x).tanh();
+        0.5 * (1.0 - t * t)
+    }
+
+    /// (ψ(x), ψ'(x)) with a single tanh evaluation — the hot-path form.
+    #[inline]
+    pub fn psi_and_prime(self, x: f64) -> (f64, f64) {
+        let t = (0.5 * x).tanh();
+        (t, 0.5 * (1.0 - t * t))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn num_diff(f: impl Fn(f64) -> f64, x: f64) -> f64 {
+        let h = 1e-6;
+        (f(x + h) - f(x - h)) / (2.0 * h)
+    }
+
+    #[test]
+    fn psi_is_derivative_of_neg_log_density() {
+        let s = LogCosh;
+        for &x in &[-10.0, -3.0, -0.5, 0.0, 0.1, 2.0, 8.0] {
+            let want = num_diff(|u| s.neg_log_density(u), x);
+            assert!((s.psi(x) - want).abs() < 1e-8, "x={x}");
+        }
+    }
+
+    #[test]
+    fn psi_prime_is_derivative_of_psi() {
+        let s = LogCosh;
+        for &x in &[-5.0, -1.0, 0.0, 0.3, 4.0] {
+            let want = num_diff(|u| s.psi(u), x);
+            assert!((s.psi_prime(x) - want).abs() < 1e-8, "x={x}");
+        }
+    }
+
+    #[test]
+    fn neg_log_density_no_overflow_for_large_x() {
+        let s = LogCosh;
+        let v = s.neg_log_density(1e4);
+        // 2 log cosh(x/2) → |x| - 2 log 2 as |x| → ∞.
+        assert!((v - (1e4 - 2.0 * std::f64::consts::LN_2)).abs() < 1e-9);
+        assert!(s.neg_log_density(-1e4).is_finite());
+    }
+
+    #[test]
+    fn symmetry_and_zero() {
+        let s = LogCosh;
+        assert_eq!(s.neg_log_density(0.0), 0.0);
+        assert!((s.neg_log_density(2.5) - s.neg_log_density(-2.5)).abs() < 1e-15);
+        assert!((s.psi(1.5) + s.psi(-1.5)).abs() < 1e-15); // odd
+        assert!((s.psi_prime(1.5) - s.psi_prime(-1.5)).abs() < 1e-15); // even
+    }
+
+    #[test]
+    fn psi_and_prime_consistent() {
+        let s = LogCosh;
+        for &x in &[-2.0, 0.0, 0.7, 5.0] {
+            let (p, pp) = s.psi_and_prime(x);
+            assert_eq!(p, s.psi(x));
+            assert_eq!(pp, s.psi_prime(x));
+        }
+    }
+}

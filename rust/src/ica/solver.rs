@@ -1,0 +1,574 @@
+//! Optimization drivers: gradient descent, Infomax SGD, elementary
+//! quasi-Newton (Alg. 2), L-BFGS and preconditioned L-BFGS (Alg. 3).
+//!
+//! All full-batch methods share the same skeleton: compute per-iteration
+//! statistics through a [`ComputeBackend`], derive a search direction,
+//! line-search the relative step `W ← (I + αp)W`, repeat. They differ only
+//! in how the direction is built — exactly the paper's framing.
+
+use super::hessian::{BlockDiagHessian, HessianApprox};
+use super::lbfgs::{LbfgsMemory, Seed};
+use super::linesearch;
+use super::monitor::{IterRecord, Stopwatch, Trace};
+use crate::backend::{ComputeBackend, StatsLevel};
+use crate::linalg::{matmul, Lu, Mat};
+
+/// Infomax hyper-parameters (EEGLab defaults, paper §2.3.2 / §3.2).
+#[derive(Clone, Copy, Debug)]
+pub struct InfomaxConfig {
+    /// Initial learning rate; `None` → EEGLab heuristic `0.00065/ln N`.
+    pub lr0: Option<f64>,
+    /// Mini-batch size as a fraction of T (paper uses 1/3).
+    pub batch_frac: f64,
+    /// Anneal when the angle between successive updates exceeds this (deg).
+    pub anneal_deg: f64,
+    /// Multiplicative learning-rate decay on anneal.
+    pub anneal_step: f64,
+}
+
+impl Default for InfomaxConfig {
+    fn default() -> Self {
+        Self { lr0: None, batch_frac: 1.0 / 3.0, anneal_deg: 60.0, anneal_step: 0.9 }
+    }
+}
+
+/// Which algorithm [`solve`] runs.
+#[derive(Clone, Copy, Debug)]
+pub enum Algorithm {
+    /// Full-batch gradient descent. `oracle_ls` grants the near-exact
+    /// line search of the paper's baseline (its cost is off-clock).
+    GradientDescent { oracle_ls: bool },
+    /// Stochastic natural-gradient Infomax with EEGLab-style annealing.
+    Infomax(InfomaxConfig),
+    /// Elementary quasi-Newton (Alg. 2): `p = -H̃⁻¹G`.
+    QuasiNewton { approx: HessianApprox },
+    /// (Preconditioned) L-BFGS (Alg. 3): `precond = None` is standard
+    /// L-BFGS with scaled-identity seed; `Some(H̃)` seeds the two-loop
+    /// recursion with the regularized approximation.
+    Lbfgs { precond: Option<HessianApprox>, memory: usize },
+}
+
+impl Algorithm {
+    /// Short stable identifier used in reports and CLI.
+    pub fn id(&self) -> &'static str {
+        match self {
+            Algorithm::GradientDescent { .. } => "gd",
+            Algorithm::Infomax(_) => "infomax",
+            Algorithm::QuasiNewton { approx: HessianApprox::H1 } => "qn-h1",
+            Algorithm::QuasiNewton { approx: HessianApprox::H2 } => "qn-h2",
+            Algorithm::Lbfgs { precond: None, .. } => "lbfgs",
+            Algorithm::Lbfgs { precond: Some(HessianApprox::H1), .. } => "plbfgs-h1",
+            Algorithm::Lbfgs { precond: Some(HessianApprox::H2), .. } => "plbfgs-h2",
+        }
+    }
+
+    /// Parse a CLI identifier.
+    pub fn from_id(s: &str) -> Option<Algorithm> {
+        Some(match s {
+            "gd" => Algorithm::GradientDescent { oracle_ls: true },
+            "infomax" => Algorithm::Infomax(InfomaxConfig::default()),
+            "qn-h1" => Algorithm::QuasiNewton { approx: HessianApprox::H1 },
+            "qn-h2" => Algorithm::QuasiNewton { approx: HessianApprox::H2 },
+            "lbfgs" => Algorithm::Lbfgs { precond: None, memory: 7 },
+            "plbfgs-h1" => Algorithm::Lbfgs { precond: Some(HessianApprox::H1), memory: 7 },
+            "plbfgs-h2" => Algorithm::Lbfgs { precond: Some(HessianApprox::H2), memory: 7 },
+            _ => return None,
+        })
+    }
+
+    /// All algorithm ids the paper's Figure 2/3 compare.
+    pub fn paper_suite() -> &'static [&'static str] {
+        &["gd", "infomax", "qn-h1", "lbfgs", "plbfgs-h1", "plbfgs-h2"]
+    }
+}
+
+/// Solver configuration shared by every algorithm.
+#[derive(Clone, Copy, Debug)]
+pub struct SolverConfig {
+    pub algo: Algorithm,
+    /// Iteration cap (full passes for Infomax).
+    pub max_iters: usize,
+    /// Stop when the full-data gradient ∞-norm falls below this.
+    pub tol: f64,
+    /// Alg. 1 eigenvalue floor λ_min.
+    pub lambda_min: f64,
+    /// Backtracking attempt budget before the gradient fallback.
+    pub ls_attempts: usize,
+    /// Wall-clock cap in charged seconds (∞ = none).
+    pub max_time: f64,
+    /// Seed for solver-internal randomness (Infomax batching).
+    pub seed: u64,
+}
+
+impl SolverConfig {
+    pub fn new(algo: Algorithm) -> Self {
+        Self {
+            algo,
+            max_iters: 200,
+            tol: 1e-8,
+            lambda_min: 1e-2,
+            ls_attempts: 10,
+            max_time: f64::INFINITY,
+            seed: 0,
+        }
+    }
+
+    pub fn with_max_iters(mut self, k: usize) -> Self {
+        self.max_iters = k;
+        self
+    }
+
+    pub fn with_tol(mut self, tol: f64) -> Self {
+        self.tol = tol;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_max_time(mut self, secs: f64) -> Self {
+        self.max_time = secs;
+        self
+    }
+}
+
+/// Result of a solve.
+#[derive(Clone, Debug)]
+pub struct SolveResult {
+    /// Final unmixing matrix.
+    pub w: Mat,
+    /// Per-iteration convergence trace.
+    pub trace: Trace,
+    /// Whether the gradient tolerance was reached.
+    pub converged: bool,
+    /// Iterations (or passes) performed.
+    pub iters: usize,
+    /// Times the backtracking search fell back to the gradient direction.
+    pub gradient_fallbacks: usize,
+    /// Directions used, in order (Fig. 1 reads these).
+    pub directions: Vec<Mat>,
+}
+
+/// Full ICA loss at `W`: data term from the backend plus `-log|det W|`.
+pub fn full_loss<B: ComputeBackend + ?Sized>(backend: &mut B, w: &Mat) -> f64 {
+    backend.loss_data(w) - log_abs_det_or_inf(w)
+}
+
+fn log_abs_det_or_inf(w: &Mat) -> f64 {
+    match Lu::new(w) {
+        Some(lu) => lu.log_abs_det(),
+        None => f64::NEG_INFINITY, // loss = +∞: rejected by line search
+    }
+}
+
+/// Apply the relative update `W ← (I + αP)·W`.
+pub fn relative_update(w: &Mat, p: &Mat, alpha: f64) -> Mat {
+    let n = w.rows();
+    let mut step = Mat::eye(n);
+    step.add_scaled_inplace(alpha, p);
+    matmul(&step, w)
+}
+
+/// Run the configured algorithm from `w0`.
+pub fn solve<B: ComputeBackend + ?Sized>(
+    backend: &mut B,
+    w0: &Mat,
+    cfg: &SolverConfig,
+) -> SolveResult {
+    match cfg.algo {
+        Algorithm::Infomax(ic) => solve_infomax(backend, w0, cfg, ic),
+        _ => solve_full_batch(backend, w0, cfg),
+    }
+}
+
+/// Shared driver for GD / quasi-Newton / (P-)L-BFGS.
+fn solve_full_batch<B: ComputeBackend + ?Sized>(
+    backend: &mut B,
+    w0: &Mat,
+    cfg: &SolverConfig,
+) -> SolveResult {
+    let n = backend.n();
+    assert_eq!((w0.rows(), w0.cols()), (n, n));
+
+    let level = match cfg.algo {
+        Algorithm::GradientDescent { .. } => StatsLevel::Basic,
+        Algorithm::QuasiNewton { approx } => approx.stats_level(),
+        Algorithm::Lbfgs { precond, .. } => {
+            precond.map(|a| a.stats_level()).unwrap_or(StatsLevel::Basic)
+        }
+        Algorithm::Infomax(_) => unreachable!(),
+    };
+    let mut memory = match cfg.algo {
+        Algorithm::Lbfgs { memory, .. } => Some(LbfgsMemory::new(memory)),
+        _ => None,
+    };
+
+    let mut sw = Stopwatch::new_running();
+    let mut w = w0.clone();
+    let mut stats = backend.stats(&w, level);
+    let mut loss = stats.loss_data - log_abs_det_or_inf(&w);
+    let mut trace = Trace::default();
+    let mut directions = Vec::new();
+    let mut fallbacks = 0;
+    let mut converged = false;
+    let mut iters = 0;
+
+    for k in 0..cfg.max_iters {
+        let grad_inf = stats.g.inf_norm();
+        sw.pause();
+        trace.push(IterRecord { iter: k, time: sw.elapsed(), grad_inf, loss });
+        sw.resume();
+        if grad_inf <= cfg.tol {
+            converged = true;
+            break;
+        }
+        if sw.elapsed() > cfg.max_time {
+            break;
+        }
+        iters = k + 1;
+
+        // --- Search direction -------------------------------------------------
+        let p = match cfg.algo {
+            Algorithm::GradientDescent { .. } => stats.g.scale(-1.0),
+            Algorithm::QuasiNewton { approx } => {
+                let mut h = BlockDiagHessian::from_stats(&stats, approx);
+                h.regularize(cfg.lambda_min);
+                h.solve(&stats.g).scale(-1.0)
+            }
+            Algorithm::Lbfgs { precond, .. } => {
+                let mem = memory.as_ref().unwrap();
+                match precond {
+                    Some(approx) => {
+                        let mut h = BlockDiagHessian::from_stats(&stats, approx);
+                        h.regularize(cfg.lambda_min);
+                        mem.apply_inverse(&stats.g, Seed::Precond(&h)).scale(-1.0)
+                    }
+                    None => mem.apply_inverse(&stats.g, Seed::ScaledIdentity).scale(-1.0),
+                }
+            }
+            Algorithm::Infomax(_) => unreachable!(),
+        };
+
+        // --- Line search -------------------------------------------------------
+        let oracle = matches!(cfg.algo, Algorithm::GradientDescent { oracle_ls: true });
+        let (mut alpha, mut new_loss, mut used_dir) = if oracle {
+            // Paper's GD baseline: near-exact line search, cost off-clock.
+            let (a, l) = sw.off_clock(|| {
+                linesearch::oracle(&w, &p, 64.0, |cand| {
+                    backend.loss_data(cand) - log_abs_det_or_inf(cand)
+                })
+            });
+            (a, l, p.clone())
+        } else {
+            let r = linesearch::backtracking(loss, cfg.ls_attempts, |a| {
+                let cand = relative_update(&w, &p, a);
+                backend.loss_data(&cand) - log_abs_det_or_inf(&cand)
+            });
+            (r.alpha, r.loss, p.clone())
+        };
+
+        if alpha == 0.0 || !new_loss.is_finite() {
+            // §2.5: pathological direction — fall back to the plain
+            // gradient, along which the objective is smooth.
+            fallbacks += 1;
+            let g_dir = stats.g.scale(-1.0);
+            let r = linesearch::backtracking(loss, cfg.ls_attempts + 10, |a| {
+                let cand = relative_update(&w, &g_dir, a);
+                backend.loss_data(&cand) - log_abs_det_or_inf(&cand)
+            });
+            if !r.success {
+                // No descent anywhere we looked: numerically stuck.
+                break;
+            }
+            alpha = r.alpha;
+            new_loss = r.loss;
+            used_dir = g_dir;
+            if let Some(mem) = memory.as_mut() {
+                mem.clear(); // curvature history no longer trustworthy
+            }
+        }
+
+        // --- Update ------------------------------------------------------------
+        let w_new = relative_update(&w, &used_dir, alpha);
+        let new_stats = backend.stats(&w_new, level);
+        if let Some(mem) = memory.as_mut() {
+            let s = used_dir.scale(alpha);
+            let y = new_stats.g.sub(&stats.g);
+            mem.push(s, y);
+        }
+        directions.push(used_dir);
+        w = w_new;
+        stats = new_stats;
+        loss = new_loss;
+
+        if k + 1 == cfg.max_iters {
+            // Record the state after the final step.
+            let grad_inf = stats.g.inf_norm();
+            sw.pause();
+            trace.push(IterRecord { iter: k + 1, time: sw.elapsed(), grad_inf, loss });
+            converged = grad_inf <= cfg.tol;
+        }
+    }
+
+    SolveResult { w, trace, converged, iters, gradient_fallbacks: fallbacks, directions }
+}
+
+/// Infomax: stochastic relative-gradient descent over mini-batches with
+/// the EEGLab annealing heuristic. One trace record per full pass; the
+/// full-data gradient for the record is computed off-clock (the paper
+/// evaluates it a posteriori).
+fn solve_infomax<B: ComputeBackend + ?Sized>(
+    backend: &mut B,
+    w0: &Mat,
+    cfg: &SolverConfig,
+    ic: InfomaxConfig,
+) -> SolveResult {
+    let n = backend.n();
+    let t = backend.t();
+    let batch = ((t as f64 * ic.batch_frac).round() as usize).clamp(1, t);
+    let n_batches = t / batch;
+    let mut lr = ic.lr0.unwrap_or(0.00065 / (n as f64).ln().max(1.0));
+
+    let mut rng = crate::rng::Pcg64::new(cfg.seed ^ 0x1f0_4a11);
+    let mut sw = Stopwatch::new_running();
+    let mut w = w0.clone();
+    let mut trace = Trace::default();
+    let mut prev_delta: Option<Mat> = None;
+    let mut converged = false;
+    let mut iters = 0;
+
+    // Initial record.
+    let (g0, l0) = sw.off_clock(|| {
+        let s = backend.stats(&w, StatsLevel::Basic);
+        (s.g.inf_norm(), s.loss_data - log_abs_det_or_inf(&w))
+    });
+    trace.push(IterRecord { iter: 0, time: sw.elapsed(), grad_inf: g0, loss: l0 });
+    if g0 <= cfg.tol {
+        converged = true;
+    }
+
+    'outer: for pass in 0..cfg.max_iters {
+        if converged || sw.elapsed() > cfg.max_time {
+            break;
+        }
+        iters = pass + 1;
+        // Random batch visit order approximates the random split of the
+        // samples into groups.
+        let mut order: Vec<usize> = (0..n_batches).collect();
+        rng.shuffle(&mut order);
+        let mut pass_delta = Mat::zeros(n, n);
+        for &b in &order {
+            let lo = b * batch;
+            let hi = (lo + batch).min(t);
+            let g = backend.grad_batch(&w, lo, hi);
+            // W ← (I − lr·T'·G') W. EEGLab's runica applies the *sum* of
+            // the per-sample natural-gradient terms over the block (not
+            // the mean), i.e. an effective step of lrate × block-size;
+            // our grad_batch returns the mean, so scale back up.
+            let eff = lr * (hi - lo) as f64;
+            let w_new = relative_update(&w, &g, -eff);
+            // EEGLab-style blow-up guard: on divergence (non-finite or
+            // runaway weights), restart from W₀ with a halved rate.
+            let blown = !w_new.as_slice().iter().all(|x| x.is_finite())
+                || w_new.inf_norm() > 1e8;
+            if blown {
+                lr *= 0.5;
+                if lr < 1e-12 {
+                    break 'outer;
+                }
+                w = w0.clone();
+                prev_delta = None;
+                pass_delta = Mat::zeros(n, n);
+                continue;
+            }
+            pass_delta.add_inplace(&w_new.sub(&w));
+            w = w_new;
+        }
+        // EEGLab anneal: if the angle between successive pass-updates
+        // exceeds anneal_deg, decay the learning rate.
+        if let Some(prev) = &prev_delta {
+            let denom = prev.fro_norm() * pass_delta.fro_norm();
+            if denom > 0.0 {
+                let cos = prev.dot(&pass_delta) / denom;
+                let deg = cos.clamp(-1.0, 1.0).acos().to_degrees();
+                if deg > ic.anneal_deg {
+                    lr *= ic.anneal_step;
+                }
+            }
+        }
+        prev_delta = Some(pass_delta);
+
+        // A-posteriori full gradient, off the clock.
+        let (ginf, loss) = sw.off_clock(|| {
+            let s = backend.stats(&w, StatsLevel::Basic);
+            (s.g.inf_norm(), s.loss_data - log_abs_det_or_inf(&w))
+        });
+        sw.pause();
+        trace.push(IterRecord { iter: pass + 1, time: sw.elapsed(), grad_inf: ginf, loss });
+        sw.resume();
+        if ginf <= cfg.tol {
+            converged = true;
+        }
+    }
+
+    SolveResult {
+        w,
+        trace,
+        converged,
+        iters,
+        gradient_fallbacks: 0,
+        directions: Vec::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::rng::{Laplace, Pcg64, Sample};
+
+    /// Mixed Laplace sources: the ICA model holds, all super-Gaussian.
+    fn laplace_problem(n: usize, t: usize, seed: u64) -> (NativeBackend, Mat) {
+        let mut rng = Pcg64::new(seed);
+        let lap = Laplace::standard();
+        let s = Mat::from_fn(n, t, |_, _| lap.sample(&mut rng));
+        let a = crate::testkit::gen::well_conditioned(&mut rng, n);
+        let x = matmul(&a, &s);
+        (NativeBackend::new(x), a)
+    }
+
+    fn check_converges(algo: Algorithm, tol: f64, max_iters: usize) -> SolveResult {
+        let (mut be, _) = laplace_problem(8, 2000, 42);
+        let cfg = SolverConfig::new(algo).with_tol(tol).with_max_iters(max_iters);
+        let w0 = Mat::eye(8);
+        let res = solve(&mut be, &w0, &cfg);
+        assert!(
+            res.converged,
+            "{} did not reach tol {tol}: last grad {:?}",
+            algo.id(),
+            res.trace.last().map(|r| r.grad_inf)
+        );
+        res
+    }
+
+    #[test]
+    fn quasi_newton_h1_converges() {
+        let r = check_converges(Algorithm::QuasiNewton { approx: HessianApprox::H1 }, 1e-8, 100);
+        assert!(r.iters < 60, "too many iterations: {}", r.iters);
+    }
+
+    #[test]
+    fn quasi_newton_h2_converges() {
+        check_converges(Algorithm::QuasiNewton { approx: HessianApprox::H2 }, 1e-8, 100);
+    }
+
+    #[test]
+    fn plbfgs_h1_converges() {
+        let r = check_converges(
+            Algorithm::Lbfgs { precond: Some(HessianApprox::H1), memory: 7 },
+            1e-8,
+            100,
+        );
+        assert!(r.iters < 60);
+    }
+
+    #[test]
+    fn plbfgs_h2_converges() {
+        check_converges(Algorithm::Lbfgs { precond: Some(HessianApprox::H2), memory: 7 }, 1e-8, 100);
+    }
+
+    #[test]
+    fn plain_lbfgs_converges() {
+        check_converges(Algorithm::Lbfgs { precond: None, memory: 7 }, 1e-6, 300);
+    }
+
+    #[test]
+    fn gradient_descent_decreases_loss_monotonically() {
+        let (mut be, _) = laplace_problem(5, 1500, 7);
+        let cfg = SolverConfig::new(Algorithm::GradientDescent { oracle_ls: true })
+            .with_tol(0.0)
+            .with_max_iters(15);
+        let res = solve(&mut be, &Mat::eye(5), &cfg);
+        let losses: Vec<f64> = res.trace.records.iter().map(|r| r.loss).collect();
+        for w in losses.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12, "loss increased: {} -> {}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn infomax_reduces_gradient_then_plateaus() {
+        let (mut be, _) = laplace_problem(6, 3000, 11);
+        // Small batches + a workable per-sample rate (effective step is
+        // lr × batch = 2e-3 × 150 = 0.3).
+        let ic = InfomaxConfig { lr0: Some(2e-3), batch_frac: 0.05, ..Default::default() };
+        let cfg = SolverConfig::new(Algorithm::Infomax(ic))
+            .with_tol(1e-10) // unreachable for SGD: it must plateau
+            .with_max_iters(40);
+        let res = solve(&mut be, &Mat::eye(6), &cfg);
+        let first = res.trace.records.first().unwrap().grad_inf;
+        let last = res.trace.records.last().unwrap().grad_inf;
+        assert!(last < first * 0.5, "no progress: {first} -> {last}");
+        assert!(!res.converged, "plain SGD should not hit 1e-10");
+    }
+
+    #[test]
+    fn recovered_sources_unmix_the_mixture() {
+        // W·A should be a scaled permutation: Amari-style check.
+        let (mut be, a) = laplace_problem(6, 8000, 3);
+        let cfg = SolverConfig::new(Algorithm::Lbfgs {
+            precond: Some(HessianApprox::H2),
+            memory: 7,
+        })
+        .with_tol(1e-8)
+        .with_max_iters(100);
+        let res = solve(&mut be, &Mat::eye(6), &cfg);
+        assert!(res.converged);
+        let p = matmul(&res.w, &a);
+        let d = crate::ica::amari::amari_distance(&p);
+        assert!(d < 0.05, "Amari distance too large: {d}");
+    }
+
+    #[test]
+    fn trace_times_are_monotone() {
+        let (mut be, _) = laplace_problem(4, 800, 5);
+        let cfg = SolverConfig::new(Algorithm::QuasiNewton { approx: HessianApprox::H1 })
+            .with_tol(1e-8)
+            .with_max_iters(50);
+        let res = solve(&mut be, &Mat::eye(4), &cfg);
+        for w in res.trace.records.windows(2) {
+            assert!(w[1].time >= w[0].time);
+            assert!(w[1].iter > w[0].iter);
+        }
+    }
+
+    #[test]
+    fn max_iters_zero_returns_initial_w() {
+        let (mut be, _) = laplace_problem(3, 500, 9);
+        let cfg = SolverConfig::new(Algorithm::GradientDescent { oracle_ls: false })
+            .with_max_iters(0);
+        let res = solve(&mut be, &Mat::eye(3), &cfg);
+        assert!(res.w.max_abs_diff(&Mat::eye(3)) < 1e-15);
+        assert_eq!(res.iters, 0);
+    }
+
+    #[test]
+    fn directions_are_recorded_for_fig1() {
+        let (mut be, _) = laplace_problem(4, 600, 13);
+        let cfg = SolverConfig::new(Algorithm::QuasiNewton { approx: HessianApprox::H1 })
+            .with_tol(0.0)
+            .with_max_iters(10);
+        let res = solve(&mut be, &Mat::eye(4), &cfg);
+        assert_eq!(res.directions.len(), res.iters);
+    }
+
+    #[test]
+    fn algorithm_ids_roundtrip() {
+        for id in Algorithm::paper_suite() {
+            let a = Algorithm::from_id(id).expect(id);
+            assert_eq!(&a.id(), id);
+        }
+        assert!(Algorithm::from_id("nope").is_none());
+    }
+}

@@ -1,0 +1,23 @@
+//! faster-ica: three-layer reproduction of "Faster ICA by preconditioning
+//! with Hessian approximations" (Ablin, Cardoso & Gramfort, 2017).
+//!
+//! - **Layer 3 (this crate)**: the paper's optimization algorithms —
+//!   relative-gradient ICA, block-diagonal Hessian approximations,
+//!   preconditioned L-BFGS — plus the experiment coordinator and CLI.
+//! - **Layer 2/1 (python/compile)**: JAX model + fused Pallas kernel,
+//!   AOT-lowered once to HLO-text artifacts.
+//! - **Runtime**: PJRT CPU client executing the artifacts from the Rust
+//!   hot path (Python is never on the request path).
+pub mod backend;
+pub mod cli;
+pub mod coordinator;
+pub mod experiments;
+pub mod preprocessing;
+pub mod signal;
+pub mod bench;
+pub mod ica;
+pub mod linalg;
+pub mod rng;
+pub mod testkit;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,216 @@
+//! LU decomposition with partial pivoting.
+//!
+//! Provides `log|det W|` (the non-data term of the ICA loss), matrix
+//! inversion (Fig. 4 needs `W_PCA⁻¹`) and linear solves.
+
+use super::Mat;
+
+/// Compact LU factorization P·A = L·U with partial pivoting.
+pub struct Lu {
+    /// L (unit lower, below diagonal) and U (upper incl. diagonal) packed.
+    lu: Mat,
+    /// Row permutation: row i of LU corresponds to row `piv[i]` of A.
+    piv: Vec<usize>,
+    /// Sign of the permutation (+1/-1).
+    perm_sign: f64,
+}
+
+impl Lu {
+    /// Factorize a square matrix. Returns `None` if exactly singular.
+    pub fn new(a: &Mat) -> Option<Lu> {
+        assert!(a.is_square(), "LU requires a square matrix");
+        let n = a.rows();
+        let mut lu = a.clone();
+        let mut piv: Vec<usize> = (0..n).collect();
+        let mut perm_sign = 1.0;
+
+        for k in 0..n {
+            // Pivot: largest |entry| in column k at-or-below the diagonal.
+            let mut p = k;
+            let mut pmax = lu[(k, k)].abs();
+            for i in k + 1..n {
+                let v = lu[(i, k)].abs();
+                if v > pmax {
+                    pmax = v;
+                    p = i;
+                }
+            }
+            if pmax == 0.0 {
+                return None;
+            }
+            if p != k {
+                let (rk, rp) = lu.rows_mut2(k, p);
+                rk.swap_with_slice(rp);
+                piv.swap(k, p);
+                perm_sign = -perm_sign;
+            }
+            let pivot = lu[(k, k)];
+            for i in k + 1..n {
+                let m = lu[(i, k)] / pivot;
+                lu[(i, k)] = m;
+                if m != 0.0 {
+                    let (ri, rk) = lu.rows_mut2(i, k);
+                    for j in k + 1..n {
+                        ri[j] -= m * rk[j];
+                    }
+                }
+            }
+        }
+        Some(Lu { lu, piv, perm_sign })
+    }
+
+    pub fn n(&self) -> usize {
+        self.lu.rows()
+    }
+
+    /// det(A).
+    pub fn det(&self) -> f64 {
+        let mut d = self.perm_sign;
+        for i in 0..self.n() {
+            d *= self.lu[(i, i)];
+        }
+        d
+    }
+
+    /// log|det A| — numerically safe for large N (sums logs).
+    pub fn log_abs_det(&self) -> f64 {
+        (0..self.n()).map(|i| self.lu[(i, i)].abs().ln()).sum()
+    }
+
+    /// Solve A x = b.
+    pub fn solve_vec(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n();
+        assert_eq!(b.len(), n);
+        // Apply permutation.
+        let mut x: Vec<f64> = (0..n).map(|i| b[self.piv[i]]).collect();
+        // Forward substitution (L unit-diagonal).
+        for i in 1..n {
+            let mut s = x[i];
+            for j in 0..i {
+                s -= self.lu[(i, j)] * x[j];
+            }
+            x[i] = s;
+        }
+        // Back substitution.
+        for i in (0..n).rev() {
+            let mut s = x[i];
+            for j in i + 1..n {
+                s -= self.lu[(i, j)] * x[j];
+            }
+            x[i] = s / self.lu[(i, i)];
+        }
+        x
+    }
+
+    /// Solve A X = B for matrix B (column-by-column).
+    pub fn solve_mat(&self, b: &Mat) -> Mat {
+        let n = self.n();
+        assert_eq!(b.rows(), n);
+        let mut out = Mat::zeros(n, b.cols());
+        let mut col = vec![0.0; n];
+        for j in 0..b.cols() {
+            for i in 0..n {
+                col[i] = b[(i, j)];
+            }
+            let x = self.solve_vec(&col);
+            for i in 0..n {
+                out[(i, j)] = x[i];
+            }
+        }
+        out
+    }
+
+    /// A⁻¹.
+    pub fn inverse(&self) -> Mat {
+        self.solve_mat(&Mat::eye(self.n()))
+    }
+}
+
+/// Convenience: log|det A|, panicking on singular input.
+pub fn log_abs_det(a: &Mat) -> f64 {
+    Lu::new(a).expect("singular matrix in log_abs_det").log_abs_det()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul;
+    use crate::rng::Pcg64;
+
+    fn random_mat(rng: &mut Pcg64, n: usize) -> Mat {
+        Mat::from_fn(n, n, |_, _| rng.next_f64() * 2.0 - 1.0)
+    }
+
+    #[test]
+    fn det_of_known_matrices() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let lu = Lu::new(&a).unwrap();
+        assert!((lu.det() - (-2.0)).abs() < 1e-12);
+        assert!((lu.log_abs_det() - 2.0f64.ln()).abs() < 1e-12);
+
+        let i5 = Mat::eye(5);
+        assert!((Lu::new(&i5).unwrap().det() - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn det_multiplicative() {
+        let mut rng = Pcg64::new(1);
+        let a = random_mat(&mut rng, 6);
+        let b = random_mat(&mut rng, 6);
+        let dab = Lu::new(&matmul(&a, &b)).unwrap().det();
+        let da = Lu::new(&a).unwrap().det();
+        let db = Lu::new(&b).unwrap().det();
+        assert!((dab - da * db).abs() < 1e-9 * dab.abs().max(1.0));
+    }
+
+    #[test]
+    fn solve_recovers_x() {
+        let mut rng = Pcg64::new(2);
+        for n in [1, 2, 5, 20] {
+            let a = random_mat(&mut rng, n);
+            let x: Vec<f64> = (0..n).map(|i| i as f64 - 1.5).collect();
+            let b: Vec<f64> = (0..n)
+                .map(|i| (0..n).map(|j| a[(i, j)] * x[j]).sum())
+                .collect();
+            let got = Lu::new(&a).unwrap().solve_vec(&b);
+            for (g, w) in got.iter().zip(&x) {
+                assert!((g - w).abs() < 1e-8, "n={n} got={g} want={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let mut rng = Pcg64::new(3);
+        let a = random_mat(&mut rng, 8);
+        let inv = Lu::new(&a).unwrap().inverse();
+        let prod = matmul(&a, &inv);
+        assert!(prod.max_abs_diff(&Mat::eye(8)) < 1e-9);
+    }
+
+    #[test]
+    fn singular_detected() {
+        let mut a = Mat::zeros(3, 3);
+        a[(0, 0)] = 1.0;
+        a[(1, 1)] = 1.0; // third row/col all zero
+        assert!(Lu::new(&a).is_none());
+    }
+
+    #[test]
+    fn permutation_sign_tracked() {
+        // Swapping two rows of I gives det -1.
+        let mut a = Mat::eye(3);
+        let (r0, r1) = a.rows_mut2(0, 1);
+        r0.swap_with_slice(r1);
+        assert!((Lu::new(&a).unwrap().det() + 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn logdet_large_wellconditioned() {
+        // diag(2, 2, ..., 2): logdet = n·ln 2 even when det overflows f64.
+        let n = 1100;
+        let a = Mat::diag(&vec![2.0; n]);
+        let lu = Lu::new(&a).unwrap();
+        assert!((lu.log_abs_det() - n as f64 * 2.0f64.ln()).abs() < 1e-9);
+    }
+}

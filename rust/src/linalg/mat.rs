@@ -1,0 +1,311 @@
+//! Row-major dense f64 matrix.
+
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+/// Dense row-major matrix of f64.
+///
+/// Indexing is `m[(i, j)]` (row, column). Rows are contiguous, which is
+/// the layout the ICA hot path wants: a "signal" is a row, and per-sample
+/// operations stream along rows.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn filled(rows: usize, cols: usize, v: f64) -> Self {
+        Self { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a row-major data vector.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "data length mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// Build from a function of (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    /// Build a diagonal matrix from a slice.
+    pub fn diag(d: &[f64]) -> Self {
+        let n = d.len();
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = d[i];
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Two distinct mutable rows (i != j).
+    pub fn rows_mut2(&mut self, i: usize, j: usize) -> (&mut [f64], &mut [f64]) {
+        assert_ne!(i, j);
+        let c = self.cols;
+        let (lo, hi) = if i < j { (i, j) } else { (j, i) };
+        let (a, b) = self.data.split_at_mut(hi * c);
+        let lo_row = &mut a[lo * c..(lo + 1) * c];
+        let hi_row = &mut b[..c];
+        if i < j {
+            (lo_row, hi_row)
+        } else {
+            (hi_row, lo_row)
+        }
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Max |entry| (the paper's convergence criterion uses this on G).
+    pub fn inf_norm(&self) -> f64 {
+        self.data.iter().fold(0.0, |m, x| m.max(x.abs()))
+    }
+
+    /// Frobenius inner product ⟨A|B⟩ = Tr(AᵀB).
+    pub fn dot(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data.iter().zip(&other.data).map(|(a, b)| a * b).sum()
+    }
+
+    pub fn scale(&self, s: f64) -> Mat {
+        let mut out = self.clone();
+        out.scale_inplace(s);
+        out
+    }
+
+    pub fn scale_inplace(&mut self, s: f64) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut out = self.clone();
+        out.add_inplace(other);
+        out
+    }
+
+    pub fn add_inplace(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// self += s * other  (axpy).
+    pub fn add_scaled_inplace(&mut self, s: f64, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += s * b;
+        }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut out = self.clone();
+        for (a, b) in out.data.iter_mut().zip(&other.data) {
+            *a -= b;
+        }
+        out
+    }
+
+    /// Mean of each row.
+    pub fn row_means(&self) -> Vec<f64> {
+        (0..self.rows)
+            .map(|i| self.row(i).iter().sum::<f64>() / self.cols as f64)
+            .collect()
+    }
+
+    /// Subtract per-row means in place; returns the means.
+    pub fn center_rows(&mut self) -> Vec<f64> {
+        let means = self.row_means();
+        for i in 0..self.rows {
+            let m = means[i];
+            for x in self.row_mut(i) {
+                *x -= m;
+            }
+        }
+        means
+    }
+
+    /// Covariance of rows-as-variables: C = X Xᵀ / T (data assumed centered).
+    pub fn row_covariance(&self) -> Mat {
+        let mut c = super::matmul_a_bt(self, self);
+        c.scale_inplace(1.0 / self.cols as f64);
+        c
+    }
+
+    /// Maximum absolute difference to another matrix.
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0, |m, (a, b)| m.max((a - b).abs()))
+    }
+}
+
+impl Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows.min(8) {
+            write!(f, "  ")?;
+            for j in 0..self.cols.min(8) {
+                write!(f, "{:10.4} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}", if self.cols > 8 { "..." } else { "" })?;
+        }
+        if self.rows > 8 {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_roundtrip() {
+        let mut m = Mat::zeros(3, 4);
+        m[(1, 2)] = 5.0;
+        assert_eq!(m[(1, 2)], 5.0);
+        assert_eq!(m.row(1)[2], 5.0);
+    }
+
+    #[test]
+    fn eye_and_diag() {
+        let i3 = Mat::eye(3);
+        assert_eq!(i3[(0, 0)], 1.0);
+        assert_eq!(i3[(0, 1)], 0.0);
+        let d = Mat::diag(&[1.0, 2.0]);
+        assert_eq!(d[(1, 1)], 2.0);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = Mat::from_fn(3, 5, |i, j| (i * 7 + j) as f64);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn norms() {
+        let m = Mat::from_vec(1, 2, vec![3.0, -4.0]);
+        assert!((m.fro_norm() - 5.0).abs() < 1e-15);
+        assert_eq!(m.inf_norm(), 4.0);
+    }
+
+    #[test]
+    fn center_rows_zeroes_means() {
+        let mut m = Mat::from_fn(4, 100, |i, j| (i + 1) as f64 * (j as f64 * 0.1).sin() + i as f64);
+        m.center_rows();
+        for mean in m.row_means() {
+            assert!(mean.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn rows_mut2_disjoint() {
+        let mut m = Mat::from_fn(3, 2, |i, _| i as f64);
+        let (a, b) = m.rows_mut2(2, 0);
+        a[0] = 9.0;
+        b[1] = 7.0;
+        assert_eq!(m[(2, 0)], 9.0);
+        assert_eq!(m[(0, 1)], 7.0);
+    }
+
+    #[test]
+    fn dot_is_trace_of_atb() {
+        let a = Mat::from_fn(2, 3, |i, j| (i + j) as f64);
+        let b = Mat::from_fn(2, 3, |i, j| (i * j + 1) as f64);
+        let atb = crate::linalg::matmul_at_b(&a, &b);
+        let trace: f64 = (0..3).map(|i| atb[(i, i)]).sum();
+        assert!((a.dot(&b) - trace).abs() < 1e-12);
+    }
+}

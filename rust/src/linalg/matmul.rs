@@ -1,0 +1,185 @@
+//! Blocked matrix multiplication kernels.
+//!
+//! Three variants cover every product the ICA stack needs without ever
+//! materializing a transpose:
+//! - `matmul`      : C = A · B
+//! - `matmul_a_bt` : C = A · Bᵀ   (gradient `ψ(Y) Yᵀ`, covariance `X Xᵀ`)
+//! - `matmul_at_b` : C = Aᵀ · B
+//!
+//! The A·Bᵀ case is the hot one (Θ(N²T) per ICA iteration): both operands
+//! are streamed along contiguous rows, so the inner loop is a pure dot
+//! product over contiguous memory, which the compiler auto-vectorizes.
+//! `matmul` uses i-k-j loop order (row-major friendly) with j-blocking.
+
+use super::Mat;
+
+const BLOCK_J: usize = 256;
+
+/// C = A · B.
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.rows(), b.cols());
+    matmul_into(a, b, &mut c);
+    c
+}
+
+/// C = A · B, writing into a preallocated output (hot-loop friendly).
+pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.cols(), b.rows(), "matmul: inner dims");
+    assert_eq!(c.rows(), a.rows());
+    assert_eq!(c.cols(), b.cols());
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    c.as_mut_slice().fill(0.0);
+    // i-k-j with j-blocking: B and C are walked along contiguous rows.
+    for jb in (0..n).step_by(BLOCK_J) {
+        let je = (jb + BLOCK_J).min(n);
+        for i in 0..m {
+            let arow = a.row(i);
+            let crow = &mut c.row_mut(i)[jb..je];
+            for (kk, &aik) in arow.iter().enumerate().take(k) {
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &b.row(kk)[jb..je];
+                for (cj, &bkj) in crow.iter_mut().zip(brow) {
+                    *cj += aik * bkj;
+                }
+            }
+        }
+    }
+}
+
+/// C = A · Bᵀ where A is m×k and B is n×k.
+pub fn matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.rows(), b.rows());
+    matmul_a_bt_into(a, b, &mut c);
+    c
+}
+
+/// C = A · Bᵀ into a preallocated output. Inner loop = contiguous dot.
+pub fn matmul_a_bt_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.cols(), b.cols(), "matmul_a_bt: inner dims");
+    assert_eq!(c.rows(), a.rows());
+    assert_eq!(c.cols(), b.rows());
+    let k = a.cols();
+    for i in 0..a.rows() {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for (j, cij) in crow.iter_mut().enumerate() {
+            let brow = b.row(j);
+            let mut acc0 = 0.0;
+            let mut acc1 = 0.0;
+            let mut acc2 = 0.0;
+            let mut acc3 = 0.0;
+            let chunks = k / 4;
+            for c4 in 0..chunks {
+                let p = c4 * 4;
+                acc0 += arow[p] * brow[p];
+                acc1 += arow[p + 1] * brow[p + 1];
+                acc2 += arow[p + 2] * brow[p + 2];
+                acc3 += arow[p + 3] * brow[p + 3];
+            }
+            let mut acc = (acc0 + acc1) + (acc2 + acc3);
+            for p in chunks * 4..k {
+                acc += arow[p] * brow[p];
+            }
+            *cij = acc;
+        }
+    }
+}
+
+/// C = Aᵀ · B where A is k×m and B is k×n.
+pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows(), b.rows(), "matmul_at_b: inner dims");
+    let (k, m, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Mat::zeros(m, n);
+    // Accumulate rank-1 updates row-by-row of A and B (contiguous).
+    for kk in 0..k {
+        let arow = a.row(kk);
+        let brow = b.row(kk);
+        for (i, &aki) in arow.iter().enumerate().take(m) {
+            if aki == 0.0 {
+                continue;
+            }
+            let crow = c.row_mut(i);
+            for (cij, &bkj) in crow.iter_mut().zip(brow.iter().take(n)) {
+                *cij += aki * bkj;
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn naive(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut s = 0.0;
+                for k in 0..a.cols() {
+                    s += a[(i, k)] * b[(k, j)];
+                }
+                c[(i, j)] = s;
+            }
+        }
+        c
+    }
+
+    fn random_mat(rng: &mut Pcg64, r: usize, c: usize) -> Mat {
+        Mat::from_fn(r, c, |_, _| rng.next_f64() * 2.0 - 1.0)
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Pcg64::new(1);
+        for &(m, k, n) in &[(1, 1, 1), (3, 4, 5), (16, 16, 16), (7, 13, 300), (5, 301, 2)] {
+            let a = random_mat(&mut rng, m, k);
+            let b = random_mat(&mut rng, k, n);
+            assert!(matmul(&a, &b).max_abs_diff(&naive(&a, &b)) < 1e-12);
+        }
+    }
+
+    #[test]
+    fn matmul_a_bt_matches() {
+        let mut rng = Pcg64::new(2);
+        for &(m, k, n) in &[(1, 1, 1), (4, 9, 6), (30, 1000, 30), (3, 5, 7)] {
+            let a = random_mat(&mut rng, m, k);
+            let b = random_mat(&mut rng, n, k);
+            let want = naive(&a, &b.transpose());
+            assert!(matmul_a_bt(&a, &b).max_abs_diff(&want) < 1e-12);
+        }
+    }
+
+    #[test]
+    fn matmul_at_b_matches() {
+        let mut rng = Pcg64::new(3);
+        for &(k, m, n) in &[(1, 1, 1), (9, 4, 6), (100, 20, 20)] {
+            let a = random_mat(&mut rng, k, m);
+            let b = random_mat(&mut rng, k, n);
+            let want = naive(&a.transpose(), &b);
+            assert!(matmul_at_b(&a, &b).max_abs_diff(&want) < 1e-12);
+        }
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Pcg64::new(4);
+        let a = random_mat(&mut rng, 6, 6);
+        assert!(matmul(&a, &Mat::eye(6)).max_abs_diff(&a) < 1e-15);
+        assert!(matmul(&Mat::eye(6), &a).max_abs_diff(&a) < 1e-15);
+    }
+
+    #[test]
+    fn associativity() {
+        let mut rng = Pcg64::new(5);
+        let a = random_mat(&mut rng, 4, 5);
+        let b = random_mat(&mut rng, 5, 6);
+        let c = random_mat(&mut rng, 6, 3);
+        let left = matmul(&matmul(&a, &b), &c);
+        let right = matmul(&a, &matmul(&b, &c));
+        assert!(left.max_abs_diff(&right) < 1e-12);
+    }
+}

@@ -1,0 +1,17 @@
+//! Dense linear-algebra substrate.
+//!
+//! The offline registry has no BLAS/LAPACK bindings or `ndarray`, so the
+//! library carries its own row-major `f64` matrix type plus the exact set
+//! of factorizations ICA needs: blocked matmul (hot path), LU with partial
+//! pivoting (log|det W|, inverses, solves) and a cyclic-Jacobi symmetric
+//! eigendecomposition (whitening).
+
+mod mat;
+mod matmul;
+mod lu;
+mod eigh;
+
+pub use eigh::{eigh, Eigh};
+pub use lu::{log_abs_det, Lu};
+pub use mat::Mat;
+pub use matmul::{matmul, matmul_at_b, matmul_a_bt, matmul_into, matmul_a_bt_into};

@@ -1,0 +1,235 @@
+//! `fica` — the Layer-3 leader binary: CLI over the faster-ica library.
+
+use faster_ica::backend::{ComputeBackend, NativeBackend};
+use faster_ica::cli::{Args, USAGE};
+use faster_ica::experiments::{self, ExperimentId};
+use faster_ica::ica::{solve, Algorithm, SolverConfig};
+use faster_ica::linalg::Mat;
+use faster_ica::runtime::{default_artifact_dir, Engine, XlaBackend};
+use std::rc::Rc;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.command.as_str() {
+        "" | "help" => {
+            println!("{USAGE}");
+            0
+        }
+        "info" => cmd_info(),
+        "run" => cmd_run(&args),
+        "experiment" => cmd_experiment(&args),
+        "artifacts-check" => cmd_artifacts_check(),
+        other => {
+            eprintln!("unknown command: {other}\n\n{USAGE}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn cmd_info() -> i32 {
+    println!("faster-ica {}", env!("CARGO_PKG_VERSION"));
+    println!("paper: Ablin, Cardoso & Gramfort (2017), arXiv:1706.08171");
+    println!("artifact dir: {}", default_artifact_dir().display());
+    match Engine::new(default_artifact_dir()) {
+        Ok(engine) => {
+            println!("PJRT platform: {}", engine.client().platform_name());
+            println!("artifacts: {} registered", engine.registry().len());
+            for e in engine.registry().iter() {
+                println!(
+                    "  {:>12}  N={:<4} T={:<7} [{}]",
+                    e.key.graph.name(),
+                    e.key.n,
+                    e.key.t,
+                    e.tag
+                );
+            }
+        }
+        Err(e) => println!("runtime: unavailable ({e})"),
+    }
+    0
+}
+
+fn cmd_run(args: &Args) -> i32 {
+    let algo_id = args.get_or("algo", "plbfgs-h2");
+    let Some(algo) = Algorithm::from_id(&algo_id) else {
+        eprintln!("unknown --algo {algo_id}");
+        return 2;
+    };
+    let data_id = args.get_or("data", "fig2a");
+    let Some(exp) = ExperimentId::from_str(&data_id) else {
+        eprintln!("unknown --data {data_id}");
+        return 2;
+    };
+    let seed: u64 = args.get_parse("seed", 0).unwrap_or(0);
+    let scale: f64 = args.get_parse("scale", 0.25).unwrap_or(0.25);
+    let tol: f64 = args.get_parse("tol", 1e-8).unwrap_or(1e-8);
+    let max_iters: usize = args.get_parse("max-iters", 200).unwrap_or(200);
+    let backend_kind = args.get_or("backend", "native");
+
+    println!(
+        "dataset {data_id} (seed {seed}, scale {scale}) + algorithm {algo_id} [{backend_kind}]"
+    );
+    let x = experiments::defs::build_dataset(exp, seed, scale);
+    let (n, t) = (x.rows(), x.cols());
+    println!("whitened data: N={n}, T={t}");
+    let cfg = SolverConfig::new(algo).with_tol(tol).with_max_iters(max_iters).with_seed(seed);
+    let w0 = Mat::eye(n);
+
+    let result = match backend_kind.as_str() {
+        "native" => {
+            let mut be = NativeBackend::new(x);
+            solve(&mut be, &w0, &cfg)
+        }
+        "xla" => {
+            let engine = match Engine::new(default_artifact_dir()) {
+                Ok(e) => Rc::new(e),
+                Err(e) => {
+                    eprintln!("cannot start runtime: {e}");
+                    return 1;
+                }
+            };
+            let mut be = match XlaBackend::new(engine, x) {
+                Ok(b) => b,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 1;
+                }
+            };
+            solve(&mut be, &w0, &cfg)
+        }
+        other => {
+            eprintln!("unknown --backend {other}");
+            return 2;
+        }
+    };
+
+    for r in &result.trace.records {
+        println!(
+            "iter {:>4}  t={:>9.4}s  |G|inf = {:>12.5e}  loss = {:.8}",
+            r.iter, r.time, r.grad_inf, r.loss
+        );
+    }
+    println!(
+        "{} after {} iterations ({} line-search fallbacks)",
+        if result.converged { "converged" } else { "stopped" },
+        result.iters,
+        result.gradient_fallbacks
+    );
+    if result.converged {
+        0
+    } else {
+        1
+    }
+}
+
+fn cmd_experiment(args: &Args) -> i32 {
+    let id = args.get_or("id", "");
+    let seeds: usize = args.get_parse("seeds", 10).unwrap_or(10);
+    let scale: f64 = if args.has("full") {
+        1.0
+    } else {
+        args.get_parse("scale", 0.25).unwrap_or(0.25)
+    };
+    let run_one = |name: &str| -> std::io::Result<()> {
+        match ExperimentId::from_str(name) {
+            Some(ExperimentId::Fig1) => {
+                let cfg = experiments::fig1::Fig1Config { scale, ..Default::default() };
+                experiments::fig1::run_and_report(&cfg).map(|_| ())
+            }
+            Some(ExperimentId::Fig4) => {
+                let cfg = experiments::fig4::Fig4Config { scale, ..Default::default() };
+                experiments::fig4::run_and_report(&cfg).map(|_| ())
+            }
+            Some(ExperimentId::Fig3Eeg) => {
+                experiments::fig3::run_eeg(seeds, scale, args.has("full-eeg")).map(|_| ())
+            }
+            Some(ExperimentId::Fig3Img) => experiments::fig3::run_img(seeds, scale).map(|_| ()),
+            Some(exp) => {
+                let mut cfg = experiments::fig2::SuiteConfig::new(exp);
+                cfg.seeds = seeds;
+                cfg.scale = scale;
+                experiments::fig2::run_and_report(&cfg).map(|_| ())
+            }
+            None => Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                format!("unknown experiment {name}"),
+            )),
+        }
+    };
+    let targets: Vec<&str> = if id == "all" {
+        ExperimentId::all().iter().map(|e| e.name()).collect()
+    } else if id.is_empty() {
+        eprintln!("--id is required (or `--id all`)");
+        return 2;
+    } else {
+        vec![id.as_str()]
+    };
+    for name in targets {
+        println!("=== experiment {name} (seeds {seeds}, scale {scale}) ===");
+        if let Err(e) = run_one(name) {
+            eprintln!("experiment {name} failed: {e}");
+            return 1;
+        }
+    }
+    println!("reports written to {}", experiments::report::results_dir().display());
+    0
+}
+
+fn cmd_artifacts_check() -> i32 {
+    let engine = match Engine::new(default_artifact_dir()) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let keys: Vec<_> = engine.registry().iter().map(|e| e.key).collect();
+    let mut failed = 0;
+    for key in keys {
+        match engine.executable(key) {
+            Ok(_) => println!("ok   {:>12} N={:<4} T={}", key.graph.name(), key.n, key.t),
+            Err(e) => {
+                println!("FAIL {:>12} N={:<4} T={}: {e}", key.graph.name(), key.n, key.t);
+                failed += 1;
+            }
+        }
+    }
+    // One end-to-end numeric cross-check against the native backend.
+    if failed == 0 {
+        let first_key = engine.registry().iter().map(|e| e.key).next();
+        if let Some(key) = first_key {
+            let (n, t) = (key.n, key.t);
+            let mut rng = faster_ica::rng::Pcg64::new(0);
+            let x = faster_ica::testkit::gen::sources(&mut rng, n, t);
+            let w = Mat::eye(n);
+            let engine = Rc::new(engine);
+            match XlaBackend::new(engine, x.clone()) {
+                Ok(mut xla) => {
+                    let mut native = NativeBackend::new(x);
+                    let a = xla.loss_data(&w);
+                    let b = native.loss_data(&w);
+                    if (a - b).abs() < 1e-10 {
+                        println!("cross-check vs native: ok (delta = {:.2e})", (a - b).abs());
+                    } else {
+                        println!("cross-check vs native FAILED: {a} vs {b}");
+                        failed += 1;
+                    }
+                }
+                Err(e) => println!("cross-check skipped: {e}"),
+            }
+        }
+    }
+    if failed == 0 {
+        0
+    } else {
+        1
+    }
+}

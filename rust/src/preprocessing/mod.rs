@@ -1,0 +1,160 @@
+//! Standard ICA preprocessing (paper §3.1): centering and whitening.
+//!
+//! Given `X ∈ R^{N×T}`, subtract each row's mean and find a linear map
+//! `K` with `cov(KX) = I`. Two whiteners are provided because Fig. 4
+//! compares runs started from both:
+//!
+//! - **Sphering**: `K = D^{-1/2} U` from `C = Uᵀ D U` (eigendecomposition
+//!   of the covariance; note our [`eigh`] returns `C = V D Vᵀ` with
+//!   eigenvectors in columns, so `K = D^{-1/2} Vᵀ`).
+//! - **PCA**: `K = V D^{-1/2} Vᵀ` (the symmetric square-root inverse,
+//!   i.e. ZCA in modern terminology — an orthogonal rotation of the
+//!   sphering whitener, which is all Fig. 4 needs).
+
+use crate::linalg::{eigh, matmul, Mat};
+
+/// Which whitening transform to apply.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Whitener {
+    /// `D^{-1/2} Vᵀ` — the paper's "sphering whitener".
+    Sphering,
+    /// `V D^{-1/2} Vᵀ` — the paper's "PCA whitener".
+    Pca,
+}
+
+/// Result of preprocessing: whitened data plus the transform used.
+pub struct Preprocessed {
+    /// Whitened data, `cov = I`.
+    pub x: Mat,
+    /// The whitening matrix `K` (`x = K (X_raw - mean)`).
+    pub k: Mat,
+    /// Per-row means removed from the raw data.
+    pub means: Vec<f64>,
+}
+
+/// Center rows and whiten with the requested transform.
+///
+/// Panics if the covariance is singular (a row is constant or duplicated)
+/// — `eps` guards numerical zero eigenvalues.
+pub fn preprocess(x_raw: &Mat, whitener: Whitener) -> Preprocessed {
+    let mut x = x_raw.clone();
+    let means = x.center_rows();
+    let c = x.row_covariance();
+    let e = eigh(&c);
+    let eps = 1e-12 * e.values.last().copied().unwrap_or(1.0).max(1e-300);
+    for &v in &e.values {
+        assert!(v > eps, "singular covariance: eigenvalue {v} (rank-deficient data)");
+    }
+    let inv_sqrt: Vec<f64> = e.values.iter().map(|&v| 1.0 / v.sqrt()).collect();
+    let vt = e.vectors.transpose();
+    let k = match whitener {
+        Whitener::Sphering => {
+            // D^{-1/2} Vᵀ : scale the rows of Vᵀ.
+            let mut k = vt;
+            for i in 0..k.rows() {
+                let s = inv_sqrt[i];
+                for v in k.row_mut(i) {
+                    *v *= s;
+                }
+            }
+            k
+        }
+        Whitener::Pca => {
+            // V D^{-1/2} Vᵀ.
+            let mut vd = e.vectors.clone();
+            for i in 0..vd.rows() {
+                for j in 0..vd.cols() {
+                    vd[(i, j)] *= inv_sqrt[j];
+                }
+            }
+            matmul(&vd, &vt)
+        }
+    };
+    let xw = matmul(&k, &x);
+    Preprocessed { x: xw, k, means }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Normal, Pcg64, Sample};
+
+    fn correlated_data(n: usize, t: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::new(seed);
+        let norm = Normal::standard();
+        let latent = Mat::from_fn(n, t, |_, _| norm.sample(&mut rng));
+        let mix = crate::testkit::gen::well_conditioned(&mut rng, n);
+        let mut x = matmul(&mix, &latent);
+        // Add row offsets so centering is exercised.
+        for i in 0..n {
+            for v in x.row_mut(i) {
+                *v += i as f64 * 2.0;
+            }
+        }
+        x
+    }
+
+    fn assert_white(x: &Mat, tol: f64) {
+        let c = x.row_covariance();
+        let n = c.rows();
+        assert!(c.max_abs_diff(&Mat::eye(n)) < tol, "cov deviates: {:?}", c);
+    }
+
+    #[test]
+    fn sphering_whitens() {
+        let x = correlated_data(6, 5000, 1);
+        let p = preprocess(&x, Whitener::Sphering);
+        assert_white(&p.x, 1e-10);
+        for m in p.x.row_means() {
+            assert!(m.abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn pca_whitens() {
+        let x = correlated_data(6, 5000, 2);
+        let p = preprocess(&x, Whitener::Pca);
+        assert_white(&p.x, 1e-10);
+    }
+
+    #[test]
+    fn pca_whitener_is_symmetric() {
+        let x = correlated_data(5, 3000, 3);
+        let p = preprocess(&x, Whitener::Pca);
+        assert!(p.k.max_abs_diff(&p.k.transpose()) < 1e-10);
+    }
+
+    #[test]
+    fn whiteners_differ_by_an_orthogonal_rotation() {
+        let x = correlated_data(5, 4000, 4);
+        let s = preprocess(&x, Whitener::Sphering);
+        let p = preprocess(&x, Whitener::Pca);
+        // R = K_pca · K_sph⁻¹ must be orthogonal.
+        let k_sph_inv = crate::linalg::Lu::new(&s.k).unwrap().inverse();
+        let r = matmul(&p.k, &k_sph_inv);
+        let rrt = crate::linalg::matmul_a_bt(&r, &r);
+        assert!(rrt.max_abs_diff(&Mat::eye(5)) < 1e-9);
+    }
+
+    #[test]
+    fn transform_reproduces_whitened_data() {
+        let x = correlated_data(4, 2000, 5);
+        let p = preprocess(&x, Whitener::Sphering);
+        let mut centered = x.clone();
+        centered.center_rows();
+        let again = matmul(&p.k, &centered);
+        assert!(again.max_abs_diff(&p.x) < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "singular covariance")]
+    fn duplicate_rows_detected() {
+        let mut rng = Pcg64::new(6);
+        let norm = Normal::standard();
+        let row: Vec<f64> = norm.sample_n(&mut rng, 100);
+        let mut x = Mat::zeros(2, 100);
+        x.row_mut(0).copy_from_slice(&row);
+        x.row_mut(1).copy_from_slice(&row);
+        preprocess(&x, Whitener::Sphering);
+    }
+}

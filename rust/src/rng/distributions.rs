@@ -1,0 +1,284 @@
+//! Sampling distributions used by the paper's experiments.
+//!
+//! - `Normal` — Box–Muller (polar form), Gaussian sources & mixing matrices.
+//! - `Laplace` — inverse CDF; experiment A and the super-Gaussian third of
+//!   experiment B (`p(x) ∝ exp(-|x|)`).
+//! - `GeneralizedGaussian { beta }` — `p(x) ∝ exp(-|x/α|^β)`; experiment B's
+//!   sub-Gaussian sources use β=3 (`p ∝ exp(-|x|³)`). Sampled exactly via a
+//!   Gamma(1/β) transform (Nardon & Pianca 2009).
+//! - `GaussianMixture` — experiment C's `α N(0,1) + (1-α) N(0,σ²)`.
+
+use super::Pcg64;
+
+/// A distribution from which f64 samples can be drawn.
+pub trait Sample {
+    fn sample(&self, rng: &mut Pcg64) -> f64;
+
+    /// Fill a slice with i.i.d. samples.
+    fn fill(&self, rng: &mut Pcg64, out: &mut [f64]) {
+        for x in out.iter_mut() {
+            *x = self.sample(rng);
+        }
+    }
+
+    /// Draw n i.i.d. samples.
+    fn sample_n(&self, rng: &mut Pcg64, n: usize) -> Vec<f64> {
+        let mut v = vec![0.0; n];
+        self.fill(rng, &mut v);
+        v
+    }
+}
+
+/// Uniform on [lo, hi).
+#[derive(Clone, Copy, Debug)]
+pub struct Uniform {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Sample for Uniform {
+    #[inline]
+    fn sample(&self, rng: &mut Pcg64) -> f64 {
+        self.lo + (self.hi - self.lo) * rng.next_f64()
+    }
+}
+
+/// Gaussian N(mean, std²) via polar Box–Muller.
+///
+/// Stateless by design (we throw the second variate away) so that calls
+/// compose deterministically regardless of interleaving across sources.
+#[derive(Clone, Copy, Debug)]
+pub struct Normal {
+    pub mean: f64,
+    pub std: f64,
+}
+
+impl Normal {
+    pub fn standard() -> Self {
+        Self { mean: 0.0, std: 1.0 }
+    }
+}
+
+impl Sample for Normal {
+    fn sample(&self, rng: &mut Pcg64) -> f64 {
+        loop {
+            let u = 2.0 * rng.next_f64() - 1.0;
+            let v = 2.0 * rng.next_f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let f = (-2.0 * s.ln() / s).sqrt();
+                return self.mean + self.std * u * f;
+            }
+        }
+    }
+}
+
+/// Laplace(0, b): density `p(x) = exp(-|x|/b) / (2b)`; variance `2b²`.
+/// The paper's experiment A uses b=1.
+#[derive(Clone, Copy, Debug)]
+pub struct Laplace {
+    pub scale: f64,
+}
+
+impl Laplace {
+    pub fn standard() -> Self {
+        Self { scale: 1.0 }
+    }
+}
+
+impl Sample for Laplace {
+    #[inline]
+    fn sample(&self, rng: &mut Pcg64) -> f64 {
+        // Inverse CDF: u ~ U(-1/2, 1/2), x = -b sgn(u) ln(1 - 2|u|).
+        let u = rng.next_f64_open() - 0.5;
+        -self.scale * u.signum() * (1.0 - 2.0 * u.abs()).ln()
+    }
+}
+
+/// Generalized Gaussian `p(x) ∝ exp(-|x/α|^β)` with scale α and shape β.
+///
+/// β=2 recovers the Gaussian, β=1 the Laplace; β>2 is sub-Gaussian
+/// (negative excess kurtosis). Sampling: if `G ~ Gamma(1/β, 1)` then
+/// `x = α · s · G^{1/β}` with random sign s has the GG(α, β) law.
+#[derive(Clone, Copy, Debug)]
+pub struct GeneralizedGaussian {
+    pub alpha: f64,
+    pub beta: f64,
+}
+
+impl GeneralizedGaussian {
+    /// Experiment B's sub-Gaussian source: `p(x) ∝ exp(-|x|³)`.
+    pub fn cubic() -> Self {
+        Self { alpha: 1.0, beta: 3.0 }
+    }
+
+    /// Variance of the distribution: α² Γ(3/β) / Γ(1/β).
+    pub fn variance(&self) -> f64 {
+        self.alpha * self.alpha * gamma_fn(3.0 / self.beta) / gamma_fn(1.0 / self.beta)
+    }
+}
+
+impl Sample for GeneralizedGaussian {
+    fn sample(&self, rng: &mut Pcg64) -> f64 {
+        let g = sample_gamma(rng, 1.0 / self.beta);
+        let sign = if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 };
+        self.alpha * sign * g.powf(1.0 / self.beta)
+    }
+}
+
+/// Two-component zero-mean Gaussian scale mixture
+/// `α N(0,1) + (1-α) N(0, σ²)` — experiment C's source family.
+#[derive(Clone, Copy, Debug)]
+pub struct GaussianMixture {
+    /// Weight of the unit-variance component.
+    pub alpha: f64,
+    /// Std-dev of the second component.
+    pub sigma: f64,
+}
+
+impl Sample for GaussianMixture {
+    fn sample(&self, rng: &mut Pcg64) -> f64 {
+        let std = if rng.next_f64() < self.alpha { 1.0 } else { self.sigma };
+        Normal { mean: 0.0, std }.sample(rng)
+    }
+}
+
+/// Marsaglia–Tsang Gamma(shape, 1) sampler; for shape < 1 uses the
+/// boost `Gamma(a) = Gamma(a+1) · U^{1/a}`.
+fn sample_gamma(rng: &mut Pcg64, shape: f64) -> f64 {
+    assert!(shape > 0.0);
+    if shape < 1.0 {
+        let g = sample_gamma(rng, shape + 1.0);
+        let u = rng.next_f64_open();
+        return g * u.powf(1.0 / shape);
+    }
+    let d = shape - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    loop {
+        let x = Normal::standard().sample(rng);
+        let v = (1.0 + c * x).powi(3);
+        if v <= 0.0 {
+            continue;
+        }
+        let u = rng.next_f64_open();
+        if u.ln() < 0.5 * x * x + d - d * v + d * v.ln() {
+            return d * v;
+        }
+    }
+}
+
+/// Lanczos approximation of Γ(x) for x > 0 (g=7, n=9 coefficients).
+pub fn gamma_fn(x: f64) -> f64 {
+    const G: f64 = 7.0;
+    const C: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1_259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_571_6e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        // Reflection formula.
+        std::f64::consts::PI / ((std::f64::consts::PI * x).sin() * gamma_fn(1.0 - x))
+    } else {
+        let x = x - 1.0;
+        let mut a = C[0];
+        let t = x + G + 0.5;
+        for (i, &c) in C.iter().enumerate().skip(1) {
+            a += c / (x + i as f64);
+        }
+        (2.0 * std::f64::consts::PI).sqrt() * t.powf(x + 0.5) * (-t).exp() * a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn moments(xs: &[f64]) -> (f64, f64, f64) {
+        let n = xs.len() as f64;
+        let mean = xs.iter().sum::<f64>() / n;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n;
+        let kurt =
+            xs.iter().map(|x| (x - mean).powi(4)).sum::<f64>() / n / (var * var) - 3.0;
+        (mean, var, kurt)
+    }
+
+    #[test]
+    fn gamma_fn_known_values() {
+        assert!((gamma_fn(1.0) - 1.0).abs() < 1e-12);
+        assert!((gamma_fn(2.0) - 1.0).abs() < 1e-12);
+        assert!((gamma_fn(5.0) - 24.0).abs() < 1e-9);
+        assert!((gamma_fn(0.5) - std::f64::consts::PI.sqrt()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::new(1);
+        let xs = Normal { mean: 2.0, std: 3.0 }.sample_n(&mut rng, 300_000);
+        let (m, v, k) = moments(&xs);
+        assert!((m - 2.0).abs() < 0.03, "mean={m}");
+        assert!((v - 9.0).abs() < 0.15, "var={v}");
+        assert!(k.abs() < 0.1, "kurtosis={k}");
+    }
+
+    #[test]
+    fn laplace_moments() {
+        let mut rng = Pcg64::new(2);
+        let xs = Laplace::standard().sample_n(&mut rng, 300_000);
+        let (m, v, k) = moments(&xs);
+        assert!(m.abs() < 0.02, "mean={m}");
+        assert!((v - 2.0).abs() < 0.05, "var={v}"); // Var = 2b²
+        assert!((k - 3.0).abs() < 0.25, "kurtosis={k}"); // excess kurtosis 3
+    }
+
+    #[test]
+    fn generalized_gaussian_cubic_is_sub_gaussian() {
+        let mut rng = Pcg64::new(3);
+        let gg = GeneralizedGaussian::cubic();
+        let xs = gg.sample_n(&mut rng, 300_000);
+        let (m, v, k) = moments(&xs);
+        assert!(m.abs() < 0.01, "mean={m}");
+        assert!((v - gg.variance()).abs() < 0.01, "var={v} want={}", gg.variance());
+        assert!(k < -0.4, "should be sub-Gaussian, kurtosis={k}");
+    }
+
+    #[test]
+    fn generalized_gaussian_beta2_matches_gaussian() {
+        // β=2, α=√2 is exactly N(0,1).
+        let mut rng = Pcg64::new(4);
+        let gg = GeneralizedGaussian { alpha: std::f64::consts::SQRT_2, beta: 2.0 };
+        let xs = gg.sample_n(&mut rng, 300_000);
+        let (m, v, k) = moments(&xs);
+        assert!(m.abs() < 0.01);
+        assert!((v - 1.0).abs() < 0.02, "var={v}");
+        assert!(k.abs() < 0.1, "kurtosis={k}");
+    }
+
+    #[test]
+    fn mixture_variance_and_kurtosis() {
+        let mut rng = Pcg64::new(5);
+        let gm = GaussianMixture { alpha: 0.5, sigma: 0.1 };
+        let xs = gm.sample_n(&mut rng, 400_000);
+        let (m, v, k) = moments(&xs);
+        // Var = α·1 + (1-α)·σ² = 0.505
+        assert!(m.abs() < 0.01);
+        assert!((v - 0.505).abs() < 0.01, "var={v}");
+        // 4th moment = 3(α + (1-α)σ⁴) = 3·0.50005 ⇒ kurtosis ≈ 2.88
+        assert!((k - 2.88).abs() < 0.2, "kurtosis={k}");
+    }
+
+    #[test]
+    fn mixture_alpha_one_is_standard_normal() {
+        let mut rng = Pcg64::new(6);
+        let gm = GaussianMixture { alpha: 1.0, sigma: 0.1 };
+        let xs = gm.sample_n(&mut rng, 200_000);
+        let (_, v, k) = moments(&xs);
+        assert!((v - 1.0).abs() < 0.02);
+        assert!(k.abs() < 0.1);
+    }
+}

@@ -1,0 +1,14 @@
+//! Pseudo-random number generation substrate.
+//!
+//! The offline crate registry has no `rand`, so we carry our own PRNG and
+//! the distributions the paper's experiments need. Everything is
+//! deterministic given a seed — the figures are medians over many seeded
+//! runs and must be exactly reproducible.
+
+mod pcg;
+mod distributions;
+
+pub use distributions::{
+    GaussianMixture, GeneralizedGaussian, Laplace, Normal, Sample, Uniform,
+};
+pub use pcg::Pcg64;

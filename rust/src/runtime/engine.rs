@@ -1,0 +1,124 @@
+//! PJRT execution engine: loads HLO-text artifacts, compiles them once on
+//! the CPU PJRT client, and executes them from the Layer-3 hot path.
+//!
+//! Design points (see /opt/xla-example/README.md for the gotchas):
+//! - HLO **text** → `HloModuleProto::from_text_file` → `XlaComputation`
+//!   → `client.compile`. Text is the interchange format; serialized
+//!   protos from jax ≥ 0.5 are rejected by xla_extension 0.5.1.
+//! - Executables are compiled on first use and cached per
+//!   [`ArtifactKey`]; a job touching one (N, T) shape compiles at most
+//!   three graphs.
+//! - Multi-output graphs return a tuple literal; single outputs are bare.
+
+use super::registry::{ArtifactKey, Registry};
+use crate::linalg::Mat;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+/// Compiled-executable cache over a PJRT CPU client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    registry: Registry,
+    cache: RefCell<HashMap<ArtifactKey, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Create an engine over the artifact directory (`artifacts/`).
+    pub fn new(artifact_dir: impl AsRef<Path>) -> anyhow::Result<Engine> {
+        let registry = Registry::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e}"))?;
+        Ok(Engine { client, registry, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Fetch (compiling on first use) the executable for `key`.
+    pub fn executable(&self, key: ArtifactKey) -> anyhow::Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(&key) {
+            return Ok(exe.clone());
+        }
+        let entry = self.registry.get(key).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no artifact for {} at N={}, T={}; add the shape to \
+                 python/compile/shapes.json and re-run `make artifacts`",
+                key.graph.name(),
+                key.n,
+                key.t
+            )
+        })?;
+        let proto = xla::HloModuleProto::from_text_file(
+            entry.path.to_str().expect("utf-8 path"),
+        )
+        .map_err(|e| anyhow::anyhow!("parse {}: {e}", entry.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {}: {e}", entry.path.display()))?,
+        );
+        self.cache.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of executables compiled so far (diagnostics).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Upload a host matrix as a device buffer (row-major f64).
+    pub fn upload(&self, m: &Mat) -> anyhow::Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<f64>(m.as_slice(), &[m.rows(), m.cols()], None)
+            .map_err(|e| anyhow::anyhow!("upload {}x{}: {e}", m.rows(), m.cols()))
+    }
+
+    /// Execute `key` on the given device buffers and return the output
+    /// literals (tuple flattened to a Vec; single output → length 1).
+    pub fn run(
+        &self,
+        key: ArtifactKey,
+        args: &[&xla::PjRtBuffer],
+    ) -> anyhow::Result<Vec<xla::Literal>> {
+        let exe = self.executable(key)?;
+        let outs = exe
+            .execute_b(args)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e}", key.graph.name()))?;
+        let lit = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e}"))?;
+        // Multi-output graphs produce a tuple root; single outputs don't.
+        match lit.shape() {
+            Ok(xla::Shape::Tuple(_)) => lit
+                .to_tuple()
+                .map_err(|e| anyhow::anyhow!("untuple: {e}")),
+            _ => Ok(vec![lit]),
+        }
+    }
+}
+
+/// Convert a literal back into a [`Mat`] (expects f64, row-major).
+pub fn literal_to_mat(lit: &xla::Literal, rows: usize, cols: usize) -> anyhow::Result<Mat> {
+    let v = lit.to_vec::<f64>().map_err(|e| anyhow::anyhow!("literal to_vec: {e}"))?;
+    anyhow::ensure!(v.len() == rows * cols, "literal size {} != {rows}x{cols}", v.len());
+    Ok(Mat::from_vec(rows, cols, v))
+}
+
+/// Convert a literal into a Vec<f64>.
+pub fn literal_to_vec(lit: &xla::Literal) -> anyhow::Result<Vec<f64>> {
+    lit.to_vec::<f64>().map_err(|e| anyhow::anyhow!("literal to_vec: {e}"))
+}
+
+/// Convert a scalar literal to f64.
+pub fn literal_to_scalar(lit: &xla::Literal) -> anyhow::Result<f64> {
+    lit.get_first_element::<f64>()
+        .map_err(|e| anyhow::anyhow!("literal scalar: {e}"))
+}

@@ -1,0 +1,23 @@
+//! Runtime: PJRT client, artifact registry, and the XLA compute backend.
+//!
+//! This is the layer that makes the Rust binary self-contained after
+//! `make artifacts`: it loads the HLO-text artifacts Layer 2 exported and
+//! executes them on the CPU PJRT client from the solver hot path.
+
+mod engine;
+pub mod registry;
+mod xla_backend;
+
+pub use engine::{literal_to_mat, literal_to_scalar, literal_to_vec, Engine};
+pub use registry::{ArtifactKey, Graph, Registry};
+pub use xla_backend::XlaBackend;
+
+use std::path::PathBuf;
+
+/// Default artifact directory: `$FICA_ARTIFACTS` or `<repo>/artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("FICA_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

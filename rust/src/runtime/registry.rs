@@ -1,0 +1,197 @@
+//! Artifact registry: discovers the AOT-compiled HLO artifacts that
+//! `python -m compile.aot` emitted (manifest.json + *.hlo.txt).
+
+use crate::util::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// The compute graphs Layer 2 exports. Mirrors `model.GRAPHS`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Graph {
+    StatsH2,
+    StatsH1,
+    StatsBasic,
+    LossOnly,
+    Grad,
+}
+
+impl Graph {
+    pub fn from_name(s: &str) -> Option<Graph> {
+        Some(match s {
+            "stats_h2" => Graph::StatsH2,
+            "stats_h1" => Graph::StatsH1,
+            "stats_basic" => Graph::StatsBasic,
+            "loss_only" => Graph::LossOnly,
+            "grad" => Graph::Grad,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Graph::StatsH2 => "stats_h2",
+            Graph::StatsH1 => "stats_h1",
+            Graph::StatsBasic => "stats_basic",
+            Graph::LossOnly => "loss_only",
+            Graph::Grad => "grad",
+        }
+    }
+}
+
+/// Key identifying one compiled artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ArtifactKey {
+    pub graph: Graph,
+    pub n: usize,
+    pub t: usize,
+}
+
+/// One manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub key: ArtifactKey,
+    pub path: PathBuf,
+    pub tag: String,
+}
+
+/// The set of artifacts available on disk.
+pub struct Registry {
+    dir: PathBuf,
+    entries: BTreeMap<ArtifactKey, ArtifactEntry>,
+}
+
+impl Registry {
+    /// Load `<dir>/manifest.json`. Fails if the manifest is missing or
+    /// references files that do not exist.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Registry> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} ({e}); run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("bad manifest: {e}"))?;
+        let dtype = json.get("dtype").and_then(|d| d.as_str()).unwrap_or("");
+        anyhow::ensure!(dtype == "f64", "manifest dtype {dtype:?}, expected f64");
+        let mut entries = BTreeMap::new();
+        for a in json
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("manifest lacks artifacts[]"))?
+        {
+            let graph = a
+                .get("graph")
+                .and_then(|g| g.as_str())
+                .and_then(Graph::from_name)
+                .ok_or_else(|| anyhow::anyhow!("bad graph in manifest"))?;
+            let n = a.get("n").and_then(|v| v.as_usize()).unwrap_or(0);
+            let t = a.get("t").and_then(|v| v.as_usize()).unwrap_or(0);
+            let file = a
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| anyhow::anyhow!("artifact without file"))?;
+            let path = dir.join(file);
+            anyhow::ensure!(path.exists(), "missing artifact file {}", path.display());
+            let key = ArtifactKey { graph, n, t };
+            let tag =
+                a.get("tag").and_then(|t| t.as_str()).unwrap_or("").to_string();
+            entries.insert(key, ArtifactEntry { key, path, tag });
+        }
+        Ok(Registry { dir, entries })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn get(&self, key: ArtifactKey) -> Option<&ArtifactEntry> {
+        self.entries.get(&key)
+    }
+
+    /// All (n, t) shapes for which `graph` was compiled.
+    pub fn shapes_for(&self, graph: Graph) -> Vec<(usize, usize)> {
+        self.entries
+            .keys()
+            .filter(|k| k.graph == graph)
+            .map(|k| (k.n, k.t))
+            .collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ArtifactEntry> {
+        self.entries.values()
+    }
+
+    /// Does the registry cover all graphs a backend needs at (n, t)?
+    pub fn supports(&self, n: usize, t: usize, graphs: &[Graph]) -> bool {
+        graphs.iter().all(|&g| self.entries.contains_key(&ArtifactKey { graph: g, n, t }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn load_reads_entries_and_checks_files() {
+        let dir = std::env::temp_dir().join("fica_registry_test1");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_manifest(
+            &dir,
+            r#"{"dtype":"f64","artifacts":[
+                {"graph":"loss_only","n":3,"t":50,"file":"loss_only_n3_t50.hlo.txt","tag":"x"}
+            ]}"#,
+        );
+        // File missing -> error.
+        assert!(Registry::load(&dir).is_err());
+        std::fs::write(dir.join("loss_only_n3_t50.hlo.txt"), "HloModule m").unwrap();
+        let reg = Registry::load(&dir).unwrap();
+        assert_eq!(reg.len(), 1);
+        let key = ArtifactKey { graph: Graph::LossOnly, n: 3, t: 50 };
+        assert!(reg.get(key).is_some());
+        assert!(reg.supports(3, 50, &[Graph::LossOnly]));
+        assert!(!reg.supports(3, 50, &[Graph::StatsH2]));
+    }
+
+    #[test]
+    fn wrong_dtype_rejected() {
+        let dir = std::env::temp_dir().join("fica_registry_test2");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_manifest(&dir, r#"{"dtype":"f32","artifacts":[]}"#);
+        assert!(Registry::load(&dir).is_err());
+    }
+
+    #[test]
+    fn graph_names_roundtrip() {
+        for g in [Graph::StatsH2, Graph::StatsH1, Graph::StatsBasic, Graph::LossOnly, Graph::Grad]
+        {
+            assert_eq!(Graph::from_name(g.name()), Some(g));
+        }
+        assert_eq!(Graph::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn real_artifacts_load_if_present() {
+        // Integration hook: if `make artifacts` has run, the real
+        // manifest must parse and every referenced file must exist.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let reg = Registry::load(&dir).unwrap();
+            assert!(!reg.is_empty());
+        }
+    }
+}

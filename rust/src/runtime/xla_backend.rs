@@ -1,0 +1,146 @@
+//! XLA compute backend: the Layer-3 ↔ artifact bridge.
+//!
+//! Implements [`ComputeBackend`] by executing the AOT-compiled JAX/Pallas
+//! graphs through the PJRT engine. The dataset X is uploaded to the
+//! device **once** at construction and reused across every iteration and
+//! line-search probe; only W (N×N, tiny) crosses the host/device boundary
+//! per call.
+//!
+//! `grad_batch` (Infomax mini-batches) runs on an embedded
+//! [`NativeBackend`]: batch shapes vary per (T, batch_frac) combination
+//! and pre-compiling one artifact per batch shape would explode the
+//! artifact set for a baseline algorithm. Documented in DESIGN.md §7.
+
+use super::engine::{literal_to_mat, literal_to_scalar, literal_to_vec, Engine};
+use super::registry::{ArtifactKey, Graph};
+use crate::backend::{ComputeBackend, IcaStats, NativeBackend, StatsLevel};
+use crate::linalg::Mat;
+use std::rc::Rc;
+
+/// Backend executing the AOT artifacts for one dataset.
+pub struct XlaBackend {
+    engine: Rc<Engine>,
+    /// Device-resident copy of X, uploaded once.
+    x_buf: xla::PjRtBuffer,
+    n: usize,
+    t: usize,
+    /// Lazy native twin for `grad_batch` (Infomax) only.
+    native: Option<NativeBackend>,
+    /// Host copy kept to build the native twin on demand.
+    x_host: Option<Mat>,
+}
+
+impl XlaBackend {
+    /// Create a backend for `x`; requires stats/loss artifacts for
+    /// (N, T) = (x.rows(), x.cols()) to exist in the registry.
+    pub fn new(engine: Rc<Engine>, x: Mat) -> anyhow::Result<XlaBackend> {
+        let (n, t) = (x.rows(), x.cols());
+        anyhow::ensure!(
+            engine.registry().supports(n, t, &[Graph::LossOnly]),
+            "no artifacts for shape N={n}, T={t} (add to shapes.json, re-run `make artifacts`)"
+        );
+        let x_buf = engine.upload(&x)?;
+        Ok(XlaBackend { engine, x_buf, n, t, native: None, x_host: Some(x) })
+    }
+
+    fn key(&self, graph: Graph) -> ArtifactKey {
+        ArtifactKey { graph, n: self.n, t: self.t }
+    }
+
+    fn run_stats(&self, w: &Mat, graph: Graph) -> anyhow::Result<IcaStats> {
+        let w_buf = self.engine.upload(w)?;
+        let outs = self.engine.run(self.key(graph), &[&w_buf, &self.x_buf])?;
+        let n = self.n;
+        Ok(match graph {
+            Graph::StatsH2 => {
+                anyhow::ensure!(outs.len() == 5, "stats_h2 returned {} outputs", outs.len());
+                IcaStats {
+                    loss_data: literal_to_scalar(&outs[0])?,
+                    g: literal_to_mat(&outs[1], n, n)?,
+                    h2: literal_to_mat(&outs[2], n, n)?,
+                    h1: literal_to_vec(&outs[3])?,
+                    sigma2: literal_to_vec(&outs[4])?,
+                }
+            }
+            Graph::StatsH1 => {
+                anyhow::ensure!(outs.len() == 4, "stats_h1 returned {} outputs", outs.len());
+                IcaStats {
+                    loss_data: literal_to_scalar(&outs[0])?,
+                    g: literal_to_mat(&outs[1], n, n)?,
+                    h1: literal_to_vec(&outs[2])?,
+                    sigma2: literal_to_vec(&outs[3])?,
+                    h2: Mat::zeros(0, 0),
+                }
+            }
+            Graph::StatsBasic => {
+                anyhow::ensure!(outs.len() == 2, "stats_basic returned {} outputs", outs.len());
+                IcaStats {
+                    loss_data: literal_to_scalar(&outs[0])?,
+                    g: literal_to_mat(&outs[1], n, n)?,
+                    h1: Vec::new(),
+                    sigma2: Vec::new(),
+                    h2: Mat::zeros(0, 0),
+                }
+            }
+            _ => anyhow::bail!("run_stats on non-stats graph"),
+        })
+    }
+
+    /// Pick the cheapest compiled graph that satisfies `level`,
+    /// escalating if a lower-level artifact was not compiled.
+    fn graph_for(&self, level: StatsLevel) -> anyhow::Result<Graph> {
+        let reg = self.engine.registry();
+        let prefer: &[Graph] = match level {
+            StatsLevel::Basic => &[Graph::StatsBasic, Graph::StatsH1, Graph::StatsH2],
+            StatsLevel::H1 => &[Graph::StatsH1, Graph::StatsH2],
+            StatsLevel::H2 => &[Graph::StatsH2],
+        };
+        for &g in prefer {
+            if reg.supports(self.n, self.t, &[g]) {
+                return Ok(g);
+            }
+        }
+        anyhow::bail!(
+            "no artifact covering StatsLevel::{level:?} at N={}, T={}",
+            self.n,
+            self.t
+        )
+    }
+}
+
+impl ComputeBackend for XlaBackend {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn t(&self) -> usize {
+        self.t
+    }
+
+    fn stats(&mut self, w: &Mat, level: StatsLevel) -> IcaStats {
+        let graph = self.graph_for(level).expect("artifact coverage");
+        self.run_stats(w, graph).expect("XLA stats execution")
+    }
+
+    fn loss_data(&mut self, w: &Mat) -> f64 {
+        let w_buf = self.engine.upload(w).expect("upload W");
+        let outs = self
+            .engine
+            .run(self.key(Graph::LossOnly), &[&w_buf, &self.x_buf])
+            .expect("XLA loss execution");
+        literal_to_scalar(&outs[0]).expect("scalar loss")
+    }
+
+    fn grad_batch(&mut self, w: &Mat, lo: usize, hi: usize) -> Mat {
+        // Mini-batch shapes vary; served by the native twin (see module doc).
+        if self.native.is_none() {
+            let x = self.x_host.take().expect("host X retained");
+            self.native = Some(NativeBackend::new(x));
+        }
+        self.native.as_mut().unwrap().grad_batch(w, lo, hi)
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}

@@ -1,0 +1,14 @@
+//! Signal substrate: every dataset the paper's evaluation uses.
+//!
+//! - [`sources`] — the synthetic source families and mixing of §3.2
+//!   (experiments A, B, C).
+//! - [`eeg_sim`] — a synthetic stand-in for the 13 EEG recordings of
+//!   §3.3 (real data unavailable offline; see DESIGN.md §6).
+//! - [`images`] — dead-leaves natural-image model + patch extraction,
+//!   standing in for the MIT CVCL open-country set of §3.4.
+
+pub mod eeg_sim;
+pub mod images;
+pub mod sources;
+
+pub use sources::{experiment_a, experiment_b, experiment_c, random_mixing, Dataset, SourceKind};

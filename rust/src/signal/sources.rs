@@ -1,0 +1,169 @@
+//! Synthetic sources and mixtures for the simulation study (paper §3.2).
+
+use crate::linalg::{matmul, Mat};
+use crate::rng::{GaussianMixture, GeneralizedGaussian, Laplace, Normal, Pcg64, Sample};
+
+/// Source density families used across experiments A/B/C.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SourceKind {
+    /// `p(x) = ½ exp(-|x|)` — super-Gaussian (experiments A, B).
+    Laplace,
+    /// Standard normal — unrecoverable by ICA (experiment B).
+    Gaussian,
+    /// `p(x) ∝ exp(-|x|³)` — sub-Gaussian (experiment B).
+    SubGaussianCubic,
+    /// `α N(0,1) + (1-α) N(0,σ²)` (experiment C).
+    Mixture { alpha: f64, sigma: f64 },
+}
+
+impl SourceKind {
+    fn sample_row(self, rng: &mut Pcg64, out: &mut [f64]) {
+        match self {
+            SourceKind::Laplace => Laplace::standard().fill(rng, out),
+            SourceKind::Gaussian => Normal::standard().fill(rng, out),
+            SourceKind::SubGaussianCubic => GeneralizedGaussian::cubic().fill(rng, out),
+            SourceKind::Mixture { alpha, sigma } => {
+                GaussianMixture { alpha, sigma }.fill(rng, out)
+            }
+        }
+    }
+}
+
+/// A generated ICA problem: ground-truth sources, mixing matrix, and the
+/// observed mixture `X = A·S`.
+pub struct Dataset {
+    pub sources: Mat,
+    pub mixing: Mat,
+    pub x: Mat,
+    pub kinds: Vec<SourceKind>,
+}
+
+/// Draw `T` samples from each source kind and mix with a random matrix
+/// whose entries are i.i.d. standard normal (paper §3.2).
+pub fn generate(kinds: &[SourceKind], t: usize, rng: &mut Pcg64) -> Dataset {
+    let n = kinds.len();
+    let mut s = Mat::zeros(n, t);
+    for (i, k) in kinds.iter().enumerate() {
+        k.sample_row(rng, s.row_mut(i));
+    }
+    let a = random_mixing(n, rng);
+    let x = matmul(&a, &s);
+    Dataset { sources: s, mixing: a, x, kinds: kinds.to_vec() }
+}
+
+/// Random mixing matrix with i.i.d. N(0,1) entries, re-drawn in the
+/// (measure-zero, but guarded) singular case.
+pub fn random_mixing(n: usize, rng: &mut Pcg64) -> Mat {
+    let norm = Normal::standard();
+    loop {
+        let a = Mat::from_fn(n, n, |_, _| norm.sample(rng));
+        if let Some(lu) = crate::linalg::Lu::new(&a) {
+            // Also reject badly conditioned draws (|logdet| huge).
+            if lu.log_abs_det().abs() < 50.0 {
+                return a;
+            }
+        }
+    }
+}
+
+/// Experiment A: N=40 Laplace sources, T=10000 (ICA model holds,
+/// all super-Gaussian). Sizes are parameters so tests/benches can scale.
+pub fn experiment_a(n: usize, t: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg64::new(seed);
+    generate(&vec![SourceKind::Laplace; n], t, &mut rng)
+}
+
+/// Experiment B: N=15 (5 Laplace + 5 Gaussian + 5 sub-Gaussian), T=1000.
+/// `n` must be divisible by 3.
+pub fn experiment_b(n: usize, t: usize, seed: u64) -> Dataset {
+    assert_eq!(n % 3, 0, "experiment B needs n divisible by 3");
+    let third = n / 3;
+    let mut kinds = Vec::with_capacity(n);
+    kinds.extend(std::iter::repeat(SourceKind::Laplace).take(third));
+    kinds.extend(std::iter::repeat(SourceKind::Gaussian).take(third));
+    kinds.extend(std::iter::repeat(SourceKind::SubGaussianCubic).take(third));
+    let mut rng = Pcg64::new(seed);
+    generate(&kinds, t, &mut rng)
+}
+
+/// Experiment C: N=40 Gaussian-mixture sources with α linearly spaced
+/// from 0.5 to 1 and σ = 0.1, T=5000 (increasingly Gaussian tail).
+pub fn experiment_c(n: usize, t: usize, seed: u64) -> Dataset {
+    assert!(n >= 2);
+    let kinds: Vec<SourceKind> = (0..n)
+        .map(|i| {
+            let alpha = 0.5 + 0.5 * i as f64 / (n - 1) as f64;
+            SourceKind::Mixture { alpha, sigma: 0.1 }
+        })
+        .collect();
+    let mut rng = Pcg64::new(seed);
+    generate(&kinds, t, &mut rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_shapes_and_mixing() {
+        let d = experiment_a(5, 500, 1);
+        assert_eq!((d.sources.rows(), d.sources.cols()), (5, 500));
+        assert_eq!((d.x.rows(), d.x.cols()), (5, 500));
+        let want = matmul(&d.mixing, &d.sources);
+        assert!(d.x.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn experiment_b_kind_layout() {
+        let d = experiment_b(15, 100, 2);
+        assert_eq!(d.kinds[0], SourceKind::Laplace);
+        assert_eq!(d.kinds[5], SourceKind::Gaussian);
+        assert_eq!(d.kinds[10], SourceKind::SubGaussianCubic);
+    }
+
+    #[test]
+    fn experiment_c_alpha_ramp() {
+        let d = experiment_c(40, 100, 3);
+        match (d.kinds[0], d.kinds[39]) {
+            (SourceKind::Mixture { alpha: a0, .. }, SourceKind::Mixture { alpha: a1, .. }) => {
+                assert!((a0 - 0.5).abs() < 1e-12);
+                assert!((a1 - 1.0).abs() < 1e-12);
+            }
+            _ => panic!("wrong kinds"),
+        }
+    }
+
+    #[test]
+    fn seeds_reproduce() {
+        let d1 = experiment_a(4, 300, 7);
+        let d2 = experiment_a(4, 300, 7);
+        assert!(d1.x.max_abs_diff(&d2.x) < 1e-15);
+        let d3 = experiment_a(4, 300, 8);
+        assert!(d3.x.max_abs_diff(&d1.x) > 1e-3);
+    }
+
+    #[test]
+    fn mixing_is_invertible_and_moderate() {
+        let mut rng = Pcg64::new(4);
+        for _ in 0..10 {
+            let a = random_mixing(10, &mut rng);
+            let lu = crate::linalg::Lu::new(&a).unwrap();
+            assert!(lu.log_abs_det().abs() < 50.0);
+        }
+    }
+
+    #[test]
+    fn sources_are_mutually_uncorrelated() {
+        let d = experiment_a(4, 200_000, 5);
+        let mut s = d.sources.clone();
+        s.center_rows();
+        let c = s.row_covariance();
+        for i in 0..4 {
+            for j in 0..4 {
+                if i != j {
+                    assert!(c[(i, j)].abs() < 0.03, "corr ({i},{j}) = {}", c[(i, j)]);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,133 @@
+//! Minimal property-based testing kit.
+//!
+//! `proptest` is not available from the offline registry, so this module
+//! provides the subset we need: seeded random case generation, a
+//! configurable number of cases, and on failure a report of the seed and
+//! case index so the exact input can be replayed. Shrinking is replaced by
+//! "smallest-first" schedules: generators draw structure sizes from a
+//! ramp, so the first failing case is usually already small.
+
+use crate::rng::Pcg64;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // FICA_PROPTEST_CASES overrides for deeper local runs.
+        let cases = std::env::var("FICA_PROPTEST_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(32);
+        Self { cases, seed: 0xfa57_1ca }
+    }
+}
+
+/// Run `prop` on `cfg.cases` generated inputs; panic with replay info on
+/// the first failure (`prop` returns `Err(reason)` or panics itself).
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cfg: Config,
+    mut gen: impl FnMut(&mut Pcg64, usize) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut root = Pcg64::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut rng = root.split();
+        let input = gen(&mut rng, case);
+        if let Err(why) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case}/{} (seed {:#x}):\n  {why}\n  input: {input:?}",
+                cfg.cases, cfg.seed
+            );
+        }
+    }
+}
+
+/// Size ramp: early cases are small, later cases grow to `max`.
+/// Guarantees ≥ `min`.
+pub fn ramp(case: usize, total: usize, min: usize, max: usize) -> usize {
+    if total <= 1 || max <= min {
+        return min;
+    }
+    min + (case * (max - min)) / (total - 1)
+}
+
+/// Generators for common inputs.
+pub mod gen {
+    use crate::linalg::Mat;
+    use crate::rng::{Pcg64, Sample};
+
+    /// Matrix with i.i.d. U(-1,1) entries.
+    pub fn mat(rng: &mut Pcg64, rows: usize, cols: usize) -> Mat {
+        Mat::from_fn(rows, cols, |_, _| 2.0 * rng.next_f64() - 1.0)
+    }
+
+    /// Well-conditioned square matrix: I + 0.5·R/‖R‖.
+    pub fn well_conditioned(rng: &mut Pcg64, n: usize) -> Mat {
+        let r = mat(rng, n, n);
+        let norm = r.fro_norm().max(1e-12);
+        let mut m = Mat::eye(n);
+        m.add_scaled_inplace(0.5 / norm, &r);
+        m
+    }
+
+    /// Heavy-tailed "source-like" data matrix (rows = Laplace signals).
+    pub fn sources(rng: &mut Pcg64, n: usize, t: usize) -> Mat {
+        let lap = crate::rng::Laplace::standard();
+        Mat::from_fn(n, t, |_, _| lap.sample(rng))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check(
+            "u64-roundtrip",
+            Config { cases: 16, seed: 1 },
+            |rng, _| rng.next_u64(),
+            |&x| if x == x { Ok(()) } else { Err("reflexivity".into()) },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn check_reports_failures() {
+        check(
+            "always-fails",
+            Config { cases: 4, seed: 2 },
+            |rng, _| rng.next_u64(),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn ramp_is_monotone_and_bounded() {
+        let total = 50;
+        let mut last = 0;
+        for c in 0..total {
+            let s = ramp(c, total, 2, 40);
+            assert!((2..=40).contains(&s));
+            assert!(s >= last);
+            last = s;
+        }
+        assert_eq!(ramp(0, total, 2, 40), 2);
+        assert_eq!(ramp(total - 1, total, 2, 40), 40);
+    }
+
+    #[test]
+    fn well_conditioned_is_invertible() {
+        let mut rng = crate::rng::Pcg64::new(3);
+        for n in [1, 3, 10] {
+            let m = gen::well_conditioned(&mut rng, n);
+            assert!(crate::linalg::Lu::new(&m).is_some());
+        }
+    }
+}

@@ -1,0 +1,5 @@
+//! Small shared utilities (offline substitutes for common crates).
+
+pub mod json;
+
+pub use json::{Json, JsonError};

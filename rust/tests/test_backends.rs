@@ -1,0 +1,130 @@
+//! Integration: the XLA backend (AOT JAX/Pallas artifacts through PJRT)
+//! must agree with the native backend to near-machine precision, and the
+//! solvers must produce the same trajectories on either.
+//!
+//! These tests need `make artifacts` to have produced the `tests`-tagged
+//! shapes; they are skipped (with a loud message) otherwise so that
+//! `cargo test` stays green on a fresh checkout.
+
+use faster_ica::backend::{ComputeBackend, NativeBackend, StatsLevel};
+use faster_ica::ica::{solve, Algorithm, HessianApprox, SolverConfig};
+use faster_ica::linalg::{matmul, Mat};
+use faster_ica::rng::{Laplace, Pcg64, Sample};
+use faster_ica::runtime::{default_artifact_dir, Engine, XlaBackend};
+use std::rc::Rc;
+
+fn engine() -> Option<Rc<Engine>> {
+    match Engine::new(default_artifact_dir()) {
+        Ok(e) => Some(Rc::new(e)),
+        Err(err) => {
+            eprintln!("SKIP (run `make artifacts`): {err}");
+            None
+        }
+    }
+}
+
+fn problem(n: usize, t: usize, seed: u64) -> (Mat, Mat) {
+    let mut rng = Pcg64::new(seed);
+    let lap = Laplace::standard();
+    let s = Mat::from_fn(n, t, |_, _| lap.sample(&mut rng));
+    let a = faster_ica::testkit::gen::well_conditioned(&mut rng, n);
+    (matmul(&a, &s), a)
+}
+
+#[test]
+fn xla_stats_match_native() {
+    let Some(engine) = engine() else { return };
+    let (x, _) = problem(6, 500, 1);
+    let mut native = NativeBackend::new(x.clone());
+    let mut xla = match XlaBackend::new(engine, x) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("SKIP: {e}");
+            return;
+        }
+    };
+    let mut rng = Pcg64::new(2);
+    for trial in 0..3 {
+        let w = faster_ica::testkit::gen::well_conditioned(&mut rng, 6);
+        for level in [StatsLevel::Basic, StatsLevel::H1, StatsLevel::H2] {
+            let a = native.stats(&w, level);
+            let b = xla.stats(&w, level);
+            assert!(
+                (a.loss_data - b.loss_data).abs() < 1e-12,
+                "trial {trial} {level:?} loss: {} vs {}",
+                a.loss_data,
+                b.loss_data
+            );
+            assert!(a.g.max_abs_diff(&b.g) < 1e-12, "trial {trial} {level:?} G");
+            if level >= StatsLevel::H1 {
+                for i in 0..6 {
+                    assert!((a.h1[i] - b.h1[i]).abs() < 1e-12);
+                    assert!((a.sigma2[i] - b.sigma2[i]).abs() < 1e-12);
+                }
+            }
+            if level == StatsLevel::H2 {
+                assert!(a.h2.max_abs_diff(&b.h2) < 1e-12, "trial {trial} h2");
+            }
+        }
+        let lw = native.loss_data(&w);
+        let lx = xla.loss_data(&w);
+        assert!((lw - lx).abs() < 1e-12, "loss_only: {lw} vs {lx}");
+    }
+}
+
+#[test]
+fn xla_grad_batch_matches_native() {
+    let Some(engine) = engine() else { return };
+    let (x, _) = problem(6, 500, 3);
+    let mut native = NativeBackend::new(x.clone());
+    let Ok(mut xla) = XlaBackend::new(engine, x) else { return };
+    let mut rng = Pcg64::new(4);
+    let w = faster_ica::testkit::gen::well_conditioned(&mut rng, 6);
+    let a = native.grad_batch(&w, 100, 300);
+    let b = xla.grad_batch(&w, 100, 300);
+    assert!(a.max_abs_diff(&b) < 1e-12);
+}
+
+#[test]
+fn solver_trajectories_agree_across_backends() {
+    let Some(engine) = engine() else { return };
+    let (x, _) = problem(8, 2000, 5);
+    let cfg = SolverConfig::new(Algorithm::Lbfgs {
+        precond: Some(HessianApprox::H2),
+        memory: 7,
+    })
+    .with_tol(1e-8)
+    .with_max_iters(60);
+    let w0 = Mat::eye(8);
+
+    let mut native = NativeBackend::new(x.clone());
+    let res_native = solve(&mut native, &w0, &cfg);
+
+    let Ok(mut xla) = XlaBackend::new(engine, x) else { return };
+    let res_xla = solve(&mut xla, &w0, &cfg);
+
+    assert_eq!(res_native.converged, res_xla.converged);
+    assert!(res_native.converged);
+    // Same deterministic trajectory ⇒ same iterate count and final W.
+    assert_eq!(res_native.iters, res_xla.iters);
+    assert!(
+        res_native.w.max_abs_diff(&res_xla.w) < 1e-7,
+        "final W differs: {}",
+        res_native.w.max_abs_diff(&res_xla.w)
+    );
+}
+
+#[test]
+fn engine_caches_executables() {
+    let Some(engine) = engine() else { return };
+    let (x, _) = problem(6, 500, 6);
+    let Ok(mut xla) = XlaBackend::new(engine.clone(), x) else { return };
+    let w = Mat::eye(6);
+    let before = engine.compiled_count();
+    let _ = xla.loss_data(&w);
+    let mid = engine.compiled_count();
+    let _ = xla.loss_data(&w);
+    let _ = xla.loss_data(&w);
+    assert_eq!(engine.compiled_count(), mid);
+    assert!(mid > before, "first call should compile");
+}

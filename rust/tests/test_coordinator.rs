@@ -1,0 +1,135 @@
+//! Coordinator invariants (the proptest-style checks DESIGN.md §8 lists):
+//! exactly-once execution, order-independent aggregation, panic isolation
+//! and bounded queueing.
+
+use faster_ica::coordinator::{run_jobs, Job, JobOutcome, PoolConfig};
+use faster_ica::ica::{Algorithm, SolverConfig};
+use faster_ica::linalg::Mat;
+use faster_ica::rng::Pcg64;
+use faster_ica::testkit::{self, gen};
+
+fn quick_job(id: usize, seed: u64, iters: usize) -> Job {
+    Job {
+        id,
+        label: format!("job{id}"),
+        make_data: Box::new(move || {
+            let mut rng = Pcg64::new(seed);
+            let s = gen::sources(&mut rng, 4, 300);
+            let a = gen::well_conditioned(&mut rng, 4);
+            faster_ica::linalg::matmul(&a, &s)
+        }),
+        config: SolverConfig::new(Algorithm::QuasiNewton {
+            approx: faster_ica::ica::HessianApprox::H1,
+        })
+        .with_tol(0.0)
+        .with_max_iters(iters),
+        w0: None,
+    }
+}
+
+#[test]
+fn every_job_runs_exactly_once() {
+    testkit::check(
+        "exactly-once",
+        testkit::Config { cases: 6, seed: 1 },
+        |rng, case| {
+            let jobs = testkit::ramp(case, 6, 1, 17);
+            let workers = 1 + (rng.next_below(4) as usize);
+            (jobs, workers)
+        },
+        |&(n_jobs, workers)| {
+            let jobs: Vec<Job> = (0..n_jobs).map(|i| quick_job(i, i as u64, 2)).collect();
+            let outcomes = run_jobs(jobs, PoolConfig { workers, queue_bound: 2 });
+            if outcomes.len() != n_jobs {
+                return Err(format!("{} outcomes for {} jobs", outcomes.len(), n_jobs));
+            }
+            // Sorted by id and each id present exactly once.
+            for (i, o) in outcomes.iter().enumerate() {
+                if o.id() != i {
+                    return Err(format!("id {} at position {i}", o.id()));
+                }
+                if !matches!(o, JobOutcome::Done { .. }) {
+                    return Err("job did not complete".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn deterministic_results_regardless_of_worker_count() {
+    let run_with = |workers: usize| -> Vec<f64> {
+        let jobs: Vec<Job> = (0..8).map(|i| quick_job(i, 42 + i as u64, 4)).collect();
+        run_jobs(jobs, PoolConfig { workers, queue_bound: 3 })
+            .into_iter()
+            .map(|o| match o {
+                JobOutcome::Done { result, .. } => result.trace.last().unwrap().grad_inf,
+                JobOutcome::Panic { message, .. } => panic!("job panicked: {message}"),
+            })
+            .collect()
+    };
+    let single = run_with(1);
+    let multi = run_with(4);
+    assert_eq!(single.len(), multi.len());
+    for (a, b) in single.iter().zip(&multi) {
+        assert!((a - b).abs() < 1e-15, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn panicking_job_is_isolated() {
+    let mut jobs: Vec<Job> = (0..5).map(|i| quick_job(i, i as u64, 2)).collect();
+    jobs.insert(
+        2,
+        Job {
+            id: 99,
+            label: "boom".into(),
+            make_data: Box::new(|| panic!("intentional test panic")),
+            config: SolverConfig::new(Algorithm::GradientDescent { oracle_ls: false }),
+            w0: None,
+        },
+    );
+    let outcomes = run_jobs(jobs, PoolConfig { workers: 2, queue_bound: 2 });
+    assert_eq!(outcomes.len(), 6);
+    let panics: Vec<_> =
+        outcomes.iter().filter(|o| matches!(o, JobOutcome::Panic { .. })).collect();
+    assert_eq!(panics.len(), 1);
+    match panics[0] {
+        JobOutcome::Panic { id, message, .. } => {
+            assert_eq!(*id, 99);
+            assert!(message.contains("intentional"));
+        }
+        _ => unreachable!(),
+    }
+}
+
+#[test]
+fn custom_w0_is_respected() {
+    let mut w0 = Mat::eye(4);
+    w0[(0, 1)] = 0.1;
+    let job = Job {
+        id: 0,
+        label: "w0".into(),
+        make_data: Box::new(|| {
+            let mut rng = Pcg64::new(7);
+            gen::sources(&mut rng, 4, 200)
+        }),
+        config: SolverConfig::new(Algorithm::GradientDescent { oracle_ls: false })
+            .with_max_iters(0),
+        w0: Some(w0.clone()),
+    };
+    let outcomes = run_jobs(vec![job], PoolConfig { workers: 1, queue_bound: 1 });
+    match &outcomes[0] {
+        JobOutcome::Done { result, .. } => {
+            assert!(result.w.max_abs_diff(&w0) < 1e-15);
+        }
+        _ => panic!("job failed"),
+    }
+}
+
+#[test]
+fn zero_jobs_is_fine() {
+    let outcomes = run_jobs(Vec::new(), PoolConfig { workers: 3, queue_bound: 1 });
+    assert!(outcomes.is_empty());
+}

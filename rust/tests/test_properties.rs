@@ -1,0 +1,190 @@
+//! Property-based tests on the ICA mathematics (testkit = the offline
+//! proptest substitute; see DESIGN.md §6).
+
+use faster_ica::backend::{ComputeBackend, NativeBackend, StatsLevel};
+use faster_ica::ica::{
+    full_loss, relative_update, BlockDiagHessian, HessianApprox,
+};
+use faster_ica::linalg::{log_abs_det, Mat};
+use faster_ica::testkit::{self, gen, Config};
+
+/// ⟨G, E⟩ must equal the directional derivative of the *full* loss along
+/// the relative perturbation (I + εE)W — the defining property of the
+/// relative gradient (paper §2.2.1).
+#[test]
+fn gradient_is_directional_derivative() {
+    testkit::check(
+        "relative-gradient",
+        Config { cases: 12, seed: 10 },
+        |rng, case| {
+            let n = testkit::ramp(case, 12, 2, 8);
+            let t = 200 + 50 * n;
+            let x = gen::sources(rng, n, t);
+            let w = gen::well_conditioned(rng, n);
+            let e = gen::mat(rng, n, n);
+            (x, w, e)
+        },
+        |(x, w, e)| {
+            let mut be = NativeBackend::new(x.clone());
+            let g = be.stats(w, StatsLevel::Basic).g;
+            let eps = 1e-6;
+            let lp = full_loss(&mut be, &relative_update(w, e, eps));
+            let lm = full_loss(&mut be, &relative_update(w, e, -eps));
+            let fd = (lp - lm) / (2.0 * eps);
+            let analytic = g.dot(e);
+            let scale = 1.0 + fd.abs();
+            if (fd - analytic).abs() / scale > 1e-4 {
+                return Err(format!("fd={fd} analytic={analytic}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The quadratic form ⟨E|H̃²|E⟩ must match the second directional
+/// derivative of the loss for *diagonal-block* perturbations E = e_ij
+/// (where the approximation is exact up to the ĥ_ijl ≈ δ_jl ĥ_ij
+/// substitution... exact for the (i,i) diagonal direction).
+#[test]
+fn h2_diagonal_blocks_match_second_derivative() {
+    testkit::check(
+        "h2-second-derivative",
+        Config { cases: 8, seed: 11 },
+        |rng, case| {
+            let n = testkit::ramp(case, 8, 2, 6);
+            let x = gen::sources(rng, n, 100_000);
+            (x, rng.next_below(n as u64) as usize)
+        },
+        |(x, i)| {
+            let n = x.rows();
+            let mut be = NativeBackend::new(x.clone());
+            let w = Mat::eye(n);
+            let stats = be.stats(&w, StatsLevel::H2);
+            let h = BlockDiagHessian::from_stats(&stats, HessianApprox::H2);
+            // E = e_ii (diagonal direction): H̃²_iiii is exact (= 1 + ĥ_ii).
+            let mut e = Mat::zeros(n, n);
+            e[(*i, *i)] = 1.0;
+            let eps = 1e-4;
+            let l0 = full_loss(&mut be, &w);
+            let lp = full_loss(&mut be, &relative_update(&w, &e, eps));
+            let lm = full_loss(&mut be, &relative_update(&w, &e, -eps));
+            let fd2 = (lp - 2.0 * l0 + lm) / (eps * eps);
+            let analytic = h.apply(&e).dot(&e);
+            if (fd2 - analytic).abs() / (1.0 + fd2.abs()) > 1e-3 {
+                return Err(format!("fd2={fd2} analytic={analytic}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Regularized solve is always a descent direction: ⟨G, -H̃⁻¹G⟩ < 0.
+#[test]
+fn regularized_solve_is_descent() {
+    testkit::check(
+        "descent-direction",
+        Config { cases: 16, seed: 12 },
+        |rng, case| {
+            let n = testkit::ramp(case, 16, 2, 12);
+            let x = gen::sources(rng, n, 500);
+            let w = gen::well_conditioned(rng, n);
+            let approx =
+                if rng.next_u64() & 1 == 0 { HessianApprox::H1 } else { HessianApprox::H2 };
+            (x, w, approx)
+        },
+        |(x, w, approx)| {
+            let mut be = NativeBackend::new(x.clone());
+            let stats = be.stats(w, StatsLevel::H2);
+            if stats.g.inf_norm() < 1e-12 {
+                return Ok(()); // already at a stationary point
+            }
+            let mut h = BlockDiagHessian::from_stats(&stats, *approx);
+            h.regularize(1e-2);
+            if h.min_eig() < 1e-2 - 1e-9 {
+                return Err(format!("regularization failed: {}", h.min_eig()));
+            }
+            let p = h.solve(&stats.g).scale(-1.0);
+            let descent = stats.g.dot(&p);
+            if descent >= 0.0 {
+                return Err(format!("not a descent direction: ⟨G,p⟩ = {descent}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Equivariance: the relative gradient at (W·M, X) with M applied to the
+/// data equals the gradient at (W, MX) — i.e. G depends on W and X only
+/// through Y = WX (the "relative" in relative gradient).
+#[test]
+fn gradient_depends_only_on_y() {
+    testkit::check(
+        "equivariance",
+        Config { cases: 10, seed: 13 },
+        |rng, case| {
+            let n = testkit::ramp(case, 10, 2, 7);
+            let x = gen::sources(rng, n, 400);
+            let w = gen::well_conditioned(rng, n);
+            let m = gen::well_conditioned(rng, n);
+            (x, w, m)
+        },
+        |(x, w, m)| {
+            use faster_ica::linalg::matmul;
+            let g1 = NativeBackend::new(x.clone()).stats(&matmul(w, m), StatsLevel::Basic).g;
+            let g2 = NativeBackend::new(matmul(m, x)).stats(w, StatsLevel::Basic).g;
+            if g1.max_abs_diff(&g2) > 1e-10 {
+                return Err(format!("differ by {}", g1.max_abs_diff(&g2)));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Whitening postcondition on arbitrary full-rank data.
+#[test]
+fn whitening_always_whitens() {
+    use faster_ica::preprocessing::{preprocess, Whitener};
+    testkit::check(
+        "whitening",
+        Config { cases: 10, seed: 14 },
+        |rng, case| {
+            let n = testkit::ramp(case, 10, 2, 10);
+            let t = n * 50 + 100;
+            let latent = gen::sources(rng, n, t);
+            let mix = gen::well_conditioned(rng, n);
+            (faster_ica::linalg::matmul(&mix, &latent), rng.next_u64() & 1 == 0)
+        },
+        |(x, use_pca)| {
+            let wh = if *use_pca { Whitener::Pca } else { Whitener::Sphering };
+            let p = preprocess(x, wh);
+            let c = p.x.row_covariance();
+            let dev = c.max_abs_diff(&Mat::eye(x.rows()));
+            if dev > 1e-8 {
+                return Err(format!("cov deviates by {dev}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// logdet consistency between the LU and the loss plumbing.
+#[test]
+fn full_loss_equals_backend_loss_plus_logdet() {
+    testkit::check(
+        "loss-decomposition",
+        Config { cases: 10, seed: 15 },
+        |rng, case| {
+            let n = testkit::ramp(case, 10, 2, 9);
+            (gen::sources(rng, n, 300), gen::well_conditioned(rng, n))
+        },
+        |(x, w)| {
+            let mut be = NativeBackend::new(x.clone());
+            let total = full_loss(&mut be, w);
+            let want = be.loss_data(w) - log_abs_det(w);
+            if (total - want).abs() > 1e-12 {
+                return Err(format!("{total} vs {want}"));
+            }
+            Ok(())
+        },
+    );
+}
