@@ -3,16 +3,14 @@
 //!     cargo run --release --example eeg_artifact_removal
 //!
 //! Generates a synthetic EEG recording (cortical rhythms + eye blinks +
-//! muscle bursts + line hum, mixed through a smooth leadfield), unmixes
-//! it with preconditioned L-BFGS, identifies artifact components by
-//! kurtosis (blinks are extremely super-Gaussian), zeroes them, and
-//! reconstructs cleaned channels — reporting how much blink energy was
-//! removed while preserving the background activity.
+//! muscle bursts + line hum, mixed through a smooth leadfield), fits a
+//! `Picard` model, identifies artifact components by kurtosis (blinks
+//! are extremely super-Gaussian), zeroes them, and reconstructs cleaned
+//! channels with `inverse_transform` — reporting how much blink energy
+//! was removed while preserving the background activity.
 
-use faster_ica::backend::NativeBackend;
-use faster_ica::ica::{solve, Algorithm, HessianApprox, SolverConfig};
-use faster_ica::linalg::{matmul, Lu, Mat};
-use faster_ica::preprocessing::{preprocess, Whitener};
+use faster_ica::estimator::Picard;
+use faster_ica::linalg::Mat;
 use faster_ica::signal::eeg_sim::{generate, EegConfig};
 
 fn kurtosis(xs: &[f64]) -> f64 {
@@ -27,19 +25,15 @@ fn main() {
     let x = generate(&cfg, 11);
     println!("synthetic EEG: {} channels x {} samples", x.rows(), x.cols());
 
-    let pre = preprocess(&x, Whitener::Sphering);
-    let algo = Algorithm::Lbfgs { precond: Some(HessianApprox::H2), memory: 7 };
-    let scfg = SolverConfig::new(algo).with_tol(1e-7).with_max_iters(200);
-    let mut be = NativeBackend::new(pre.x.clone());
-    let res = solve(&mut be, &Mat::eye(x.rows()), &scfg);
+    let model = Picard::new().tol(1e-7).max_iters(200).fit(&x).expect("fit");
+    let info = model.fit_info();
     println!(
         "ICA: {} iterations, final |G|inf = {:.2e}",
-        res.iters,
-        res.trace.last().unwrap().grad_inf
+        info.iters, info.final_grad_inf
     );
 
-    // Sources on the whitened data.
-    let y = matmul(&res.w, &pre.x);
+    // Sources straight from the fitted model.
+    let y = model.transform(&x).expect("transform");
     let n = y.rows();
     let mut kurt: Vec<(usize, f64)> = (0..n).map(|i| (i, kurtosis(y.row(i)))).collect();
     kurt.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
@@ -58,22 +52,28 @@ fn main() {
     for &i in &artifacts {
         y_clean.row_mut(i).fill(0.0);
     }
-    // Back to channel space: X_clean = K⁻¹ · W⁻¹ · Y_clean.
-    let w_inv = Lu::new(&res.w).unwrap().inverse();
-    let k_inv = Lu::new(&pre.k).unwrap().inverse();
-    let x_clean = matmul(&k_inv, &matmul(&w_inv, &y_clean));
-    let mut x_centered = x.clone();
-    x_centered.center_rows();
+    // Back to channel space: the model inverts W, K and restores means.
+    let x_clean = model.inverse_transform(&y_clean).expect("inverse_transform");
 
-    // Report per-channel energy removed and the worst-case distortion of
-    // a retained component.
+    // Report per-channel energy removed, comparing centered signals so
+    // the DC offsets the model restores do not skew the ratio.
+    let centered = |m: &Mat| -> Mat {
+        let mut c = m.clone();
+        for i in 0..c.rows() {
+            let mu = model.row_means()[i];
+            for v in c.row_mut(i) {
+                *v -= mu;
+            }
+        }
+        c
+    };
     let energy = |m: &Mat| -> f64 { m.as_slice().iter().map(|v| v * v).sum::<f64>() };
-    let removed = 1.0 - energy(&x_clean) / energy(&x_centered);
+    let removed = 1.0 - energy(&centered(&x_clean)) / energy(&centered(&x));
     println!("fraction of total signal energy removed: {:.1}%", removed * 100.0);
     assert!(removed > 0.005 && removed < 0.9, "implausible removal {removed}");
 
     // The retained sources should be untouched (linearity check).
-    let y_back = matmul(&res.w, &matmul(&pre.k, &x_clean));
+    let y_back = model.transform(&x_clean).expect("transform");
     let mut max_err = 0.0f64;
     for i in 0..n {
         if !artifacts.contains(&i) {

@@ -2,80 +2,79 @@
 //!
 //!     cargo run --release --example end_to_end
 //!
-//! Exercises every layer: synthetic experiment-A data (paper §3.2) →
-//! whitening → the paper's six algorithms, with the full-batch methods
-//! running on the **XLA backend** (AOT-compiled JAX/Pallas artifacts via
-//! PJRT — Python is not running) and the stochastic baseline on the
-//! native backend. Reports the paper's headline metric: time and
-//! iterations to a gradient tolerance, per algorithm, plus the speedup of
+//! Exercises every layer through the estimator front door: synthetic
+//! experiment-A data (paper §3.2) → `Picard::fit` (centering, whitening,
+//! solver) for each of the paper's six algorithms. With
+//! `BackendChoice::Auto` the full-batch methods run on the **XLA
+//! backend** (AOT-compiled JAX/Pallas artifacts via PJRT — Python is not
+//! running) when artifacts are available, and on the native backend
+//! otherwise. Reports the paper's headline metric: time and iterations
+//! to a gradient tolerance, per algorithm, plus the speedup of
 //! preconditioned L-BFGS over the baselines. The run is recorded in
 //! EXPERIMENTS.md.
 
-use faster_ica::backend::{ComputeBackend, NativeBackend};
-use faster_ica::ica::{solve, Algorithm, SolveResult, SolverConfig};
-use faster_ica::linalg::Mat;
-use faster_ica::preprocessing::{preprocess, Whitener};
-use faster_ica::runtime::{default_artifact_dir, Engine, XlaBackend};
+use faster_ica::estimator::{BackendChoice, IcaModel, Picard};
+use faster_ica::ica::Algorithm;
+use faster_ica::runtime::{default_artifact_dir, Engine};
 use faster_ica::signal;
+use faster_ica::IcaError;
 use std::rc::Rc;
 
 const TOL_SUMMARY: f64 = 1e-6;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), IcaError> {
     // Paper-size experiment A: N=40 Laplace sources, T=10000.
     let (n, t, seed) = (40, 10_000, 0);
     println!("=== end-to-end: experiment A (N={n}, T={t}) ===");
     let data = signal::experiment_a(n, t, seed);
-    let pre = preprocess(&data.x, Whitener::Sphering);
 
-    let engine = Rc::new(Engine::new(default_artifact_dir())?);
-    println!(
-        "PJRT: {} | artifacts registered: {}",
-        engine.client().platform_name(),
-        engine.registry().len()
-    );
+    // One engine for the whole suite, so compiled artifacts are reused
+    // across fits (None when PJRT is unavailable: Auto goes native).
+    let shared_engine = Engine::new(default_artifact_dir()).ok().map(Rc::new);
 
     let suite = ["gd", "infomax", "qn-h1", "lbfgs", "plbfgs-h1", "plbfgs-h2"];
-    let mut rows = Vec::new();
+    let mut rows: Vec<(&str, IcaModel)> = Vec::new();
     for id in suite {
-        let algo = Algorithm::from_id(id).unwrap();
-        let cfg = SolverConfig::new(algo).with_tol(1e-8).with_max_iters(200);
-        let w0 = Mat::eye(n);
-        // Full-batch methods go through the AOT artifacts; Infomax's
-        // varying mini-batch shapes run on the native twin (DESIGN.md §7).
-        let res: SolveResult = if id == "infomax" {
-            let mut be = NativeBackend::new(pre.x.clone());
-            solve(&mut be, &w0, &cfg)
-        } else {
-            let mut be = XlaBackend::new(engine.clone(), pre.x.clone())?;
-            let r = solve(&mut be, &w0, &cfg);
-            assert_eq!(be.name(), "xla");
-            r
-        };
-        let last = res.trace.last().unwrap();
+        let algo = Algorithm::from_id(id).expect("suite id");
+        // Infomax's varying mini-batch shapes always run on the native
+        // twin (DESIGN.md §7); Auto routes the rest through PJRT when
+        // the artifacts exist.
+        let backend =
+            if id == "infomax" { BackendChoice::Native } else { BackendChoice::Auto };
+        let mut picard = Picard::new()
+            .algorithm(algo)
+            .backend(backend)
+            .tol(1e-8)
+            .max_iters(200);
+        if let Some(engine) = &shared_engine {
+            picard = picard.engine(engine.clone());
+        }
+        let model = picard.fit(&data.x)?;
+        let info = model.fit_info();
         println!(
-            "{:>10}: iters→{:.0e} = {:>4}   time→{:.0e} = {:>9}   final |G|inf = {:.2e}",
+            "{:>10} [{:>6}]: iters→{:.0e} = {:>4}   time→{:.0e} = {:>9}   final |G|inf = {:.2e}",
             id,
+            info.backend,
             TOL_SUMMARY,
-            res.trace
+            info.trace
                 .iters_to_tol(TOL_SUMMARY)
                 .map(|v| v.to_string())
                 .unwrap_or_else(|| "—".into()),
             TOL_SUMMARY,
-            res.trace
+            info.trace
                 .time_to_tol(TOL_SUMMARY)
                 .map(faster_ica::bench::fmt_duration)
                 .unwrap_or_else(|| "—".into()),
-            last.grad_inf
+            info.final_grad_inf
         );
-        rows.push((id, res));
+        rows.push((id, model));
     }
 
     // Headline: preconditioned L-BFGS / quasi-Newton versus baselines.
     let time_of = |id: &str| {
         rows.iter()
             .find(|(i, _)| *i == id)
-            .and_then(|(_, r)| r.trace.time_to_tol(TOL_SUMMARY))
+            .and_then(|(_, m)| m.fit_info().trace.time_to_tol(TOL_SUMMARY))
     };
     let plbfgs = time_of("plbfgs-h2");
     let qn = time_of("qn-h1");
@@ -90,21 +89,18 @@ fn main() -> anyhow::Result<()> {
             slow / fast
         );
     }
-    let info_final = rows
-        .iter()
-        .find(|(i, _)| *i == "infomax")
-        .and_then(|(_, r)| r.trace.last().map(|rec| rec.grad_inf))
-        .unwrap_or(f64::NAN);
+    let infomax = rows.iter().find(|(i, _)| *i == "infomax").map(|(_, m)| m.fit_info());
     println!(
-        "Infomax plateau after {} passes: |G|inf = {info_final:.2e} (paper: stalls ≥ 1e-3-ish)",
-        rows.iter().find(|(i, _)| *i == "infomax").map(|(_, r)| r.iters).unwrap_or(0)
+        "Infomax plateau after {} passes: |G|inf = {:.2e} (paper: stalls ≥ 1e-3-ish)",
+        infomax.map(|i| i.iters).unwrap_or(0),
+        infomax.map(|i| i.final_grad_inf).unwrap_or(f64::NAN)
     );
 
     // The paper's qualitative claims, asserted:
-    let conv = |id: &str| rows.iter().find(|(i, _)| *i == id).unwrap().1.converged;
-    anyhow::ensure!(conv("plbfgs-h2"), "plbfgs-h2 must converge to 1e-8");
-    anyhow::ensure!(conv("qn-h1"), "qn-h1 must converge on model-true data");
-    anyhow::ensure!(!conv("infomax"), "infomax must plateau, not converge to 1e-8");
+    let conv = |id: &str| rows.iter().find(|(i, _)| *i == id).unwrap().1.fit_info().converged;
+    assert!(conv("plbfgs-h2"), "plbfgs-h2 must converge to 1e-8");
+    assert!(conv("qn-h1"), "qn-h1 must converge on model-true data");
+    assert!(!conv("infomax"), "infomax must plateau, not converge to 1e-8");
     println!("end-to-end OK");
     Ok(())
 }

@@ -2,40 +2,33 @@
 //!
 //!     cargo run --release --example image_dictionary
 //!
-//! Extracts 8x8 patches from dead-leaves images, runs preconditioned
-//! L-BFGS ICA, and inspects the learned dictionary (columns of the
-//! mixing matrix = features): ICA on natural-image statistics learns
-//! localized edge-like atoms, which show up as strongly *sparse* (high
-//! kurtosis) source activations and spatially structured atoms.
+//! Extracts 8x8 patches from dead-leaves images, fits a `Picard` model,
+//! and inspects the learned dictionary (`model.mixing_matrix()` columns
+//! = features): ICA on natural-image statistics learns localized
+//! edge-like atoms, which show up as strongly *sparse* (high kurtosis)
+//! source activations and spatially structured atoms.
 
-use faster_ica::backend::NativeBackend;
-use faster_ica::ica::{solve, Algorithm, HessianApprox, SolverConfig};
-use faster_ica::linalg::{matmul, Lu, Mat};
-use faster_ica::preprocessing::{preprocess, Whitener};
+use faster_ica::estimator::Picard;
+use faster_ica::linalg::Mat;
 use faster_ica::signal::images::patch_dataset;
 
 fn main() {
     let s = 8;
     let x = patch_dataset(/*images=*/ 20, /*hw=*/ 64, s, /*patches=*/ 8000, /*seed=*/ 5);
     println!("patches: {} x {}", x.rows(), x.cols());
-    let pre = preprocess(&x, Whitener::Sphering);
 
-    let algo = Algorithm::Lbfgs { precond: Some(HessianApprox::H2), memory: 7 };
-    let cfg = SolverConfig::new(algo).with_tol(1e-6).with_max_iters(300);
-    let mut be = NativeBackend::new(pre.x.clone());
-    let res = solve(&mut be, &Mat::eye(x.rows()), &cfg);
+    let model = Picard::new().tol(1e-6).max_iters(300).fit(&x).expect("fit");
+    let info = model.fit_info();
     println!(
         "ICA: {} iterations, final |G|inf = {:.2e}",
-        res.iters,
-        res.trace.last().unwrap().grad_inf
+        info.iters, info.final_grad_inf
     );
 
-    // Dictionary atoms = columns of the effective mixing (W·K)⁻¹.
-    let u = matmul(&res.w, &pre.k);
-    let atoms = Lu::new(&u).expect("unmixing invertible").inverse();
+    // Dictionary atoms = columns of the mixing matrix (W·K)⁻¹.
+    let atoms = model.mixing_matrix().expect("unmixing invertible");
 
     // Activation sparsity: source kurtosis should be super-Gaussian.
-    let y = matmul(&res.w, &pre.x);
+    let y = model.transform(&x).expect("transform");
     let mut kurts: Vec<f64> = (0..y.rows())
         .map(|i| {
             let r = y.row(i);
@@ -75,7 +68,9 @@ fn main() {
     assert!(iprs[d / 2] > 2.0 / d as f64, "atoms are unstructured noise");
 
     // Render the most localized atom as ASCII.
-    let best = (0..d).max_by(|&a, &b| participation(a).partial_cmp(&participation(b)).unwrap()).unwrap();
+    let best = (0..d)
+        .max_by(|&a, &b| participation(a).partial_cmp(&participation(b)).unwrap())
+        .unwrap();
     let mut shade = Mat::zeros(s, s);
     let mut mx = 0.0f64;
     for r in 0..d {

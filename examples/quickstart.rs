@@ -2,54 +2,51 @@
 //!
 //!     cargo run --release --example quickstart
 //!
-//! Uses the AOT-compiled JAX/Pallas artifacts through PJRT when they are
-//! available (`make artifacts`), falling back to the native backend.
+//! The `Picard` builder is the front door: it centers, whitens, solves,
+//! and returns a fitted `IcaModel`. With `BackendChoice::Auto` the fit
+//! uses the AOT-compiled JAX/Pallas artifacts through PJRT when they are
+//! available, falling back to the native backend.
 
-use faster_ica::backend::NativeBackend;
-use faster_ica::ica::{amari_distance, solve, Algorithm, HessianApprox, SolverConfig};
-use faster_ica::linalg::{matmul, Mat};
-use faster_ica::preprocessing::{preprocess, Whitener};
-use faster_ica::runtime::{default_artifact_dir, Engine, XlaBackend};
+use faster_ica::estimator::{BackendChoice, Picard};
+use faster_ica::ica::amari_distance;
+use faster_ica::linalg::matmul;
 use faster_ica::signal;
-use std::rc::Rc;
 
 fn main() {
     // 1. Make a toy problem: 4 Laplace sources, 2000 samples, random mix.
     let data = signal::experiment_a(4, 2000, /*seed=*/ 7);
     println!("mixed {} sources x {} samples", data.x.rows(), data.x.cols());
 
-    // 2. Standard preprocessing: center + whiten.
-    let pre = preprocess(&data.x, Whitener::Sphering);
+    // 2. Fit with the paper's preconditioned L-BFGS (H2) — the default.
+    let model = Picard::new()
+        .backend(BackendChoice::Auto)
+        .tol(1e-9)
+        .max_iters(100)
+        .fit(&data.x)
+        .expect("fit");
 
-    // 3. Fit with the paper's preconditioned L-BFGS (H2 approximation).
-    let algo = Algorithm::Lbfgs { precond: Some(HessianApprox::H2), memory: 7 };
-    let cfg = SolverConfig::new(algo).with_tol(1e-9).with_max_iters(100);
-    let w0 = Mat::eye(4);
-
-    let result = match Engine::new(default_artifact_dir())
-        .map(Rc::new)
-        .and_then(|e| XlaBackend::new(e, pre.x.clone()))
-    {
-        Ok(mut xla) => {
-            println!("backend: xla (AOT JAX/Pallas artifacts via PJRT)");
-            solve(&mut xla, &w0, &cfg)
-        }
-        Err(why) => {
-            println!("backend: native ({why})");
-            solve(&mut NativeBackend::new(pre.x.clone()), &w0, &cfg)
-        }
-    };
-
-    // 4. Check the recovery: W·K·A should be a scaled permutation.
+    let info = model.fit_info();
+    match &info.backend_fallback {
+        Some(why) => println!("backend: {} ({why})", info.backend),
+        None => println!("backend: {}", info.backend),
+    }
     println!(
         "converged = {} in {} iterations, final |G|inf = {:.2e}",
-        result.converged,
-        result.iters,
-        result.trace.last().map(|r| r.grad_inf).unwrap_or(f64::NAN),
+        info.converged, info.iters, info.final_grad_inf
     );
-    let unmix = matmul(&result.w, &pre.k);
-    let perm = matmul(&unmix, &data.mixing);
+
+    // 3. Extract sources and check the recovery: the effective unmixing
+    //    composed with the true mixing should be a scaled permutation.
+    let sources = model.transform(&data.x).expect("transform");
+    assert_eq!(sources.rows(), 4);
+    let perm = matmul(&model.unmixing_matrix(), &data.mixing);
     println!("Amari distance to a perfect separation: {:.2e}", amari_distance(&perm));
-    assert!(result.converged && amari_distance(&perm) < 0.1);
+    assert!(info.converged && amari_distance(&perm) < 0.1);
+
+    // 4. The fitted model serializes losslessly.
+    let json = model.to_json_string().expect("serialize");
+    let reloaded = faster_ica::estimator::IcaModel::from_json_str(&json).expect("load");
+    let again = reloaded.transform(&data.x).expect("transform");
+    assert!(again.max_abs_diff(&sources) == 0.0);
     println!("quickstart OK");
 }

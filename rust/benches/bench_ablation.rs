@@ -9,7 +9,7 @@
 use faster_ica::backend::{ComputeBackend, NativeBackend, StatsLevel};
 use faster_ica::bench::Bencher;
 use faster_ica::ica::newton::{dense_hessian, h3_tensor, solve_newton};
-use faster_ica::ica::{solve, Algorithm, HessianApprox, SolverConfig};
+use faster_ica::ica::{try_solve, Algorithm, HessianApprox, SolverConfig};
 use faster_ica::linalg::{matmul, Mat};
 use faster_ica::rng::{Laplace, Pcg64, Sample};
 
@@ -51,7 +51,7 @@ fn main() {
         let mut be = NativeBackend::new(x.clone());
         let cfg = SolverConfig::new(algo).with_tol(1e-8).with_max_iters(100);
         let t0 = std::time::Instant::now();
-        let res = solve(&mut be, &Mat::eye(n), &cfg);
+        let res = try_solve(&mut be, &Mat::eye(n), &cfg).expect("solve");
         println!(
             "  {label:>12}: {} iters, {:.3}s, converged={}",
             res.iters,
@@ -80,6 +80,7 @@ fn main() {
     let xb = {
         let d = faster_ica::signal::experiment_b(9, 3000, 3);
         faster_ica::preprocessing::preprocess(&d.x, faster_ica::preprocessing::Whitener::Sphering)
+            .expect("whitening")
             .x
     };
     for lam in [1e-4, 1e-2, 1e-1, 0.5] {
@@ -92,7 +93,7 @@ fn main() {
         .with_max_iters(200);
         cfg.lambda_min = lam;
         let t0 = std::time::Instant::now();
-        let res = solve(&mut be, &Mat::eye(9), &cfg);
+        let res = try_solve(&mut be, &Mat::eye(9), &cfg).expect("solve");
         println!(
             "  λ_min = {lam:>6}: {} iters, {:.3}s, converged={}, fallbacks={}",
             res.iters,

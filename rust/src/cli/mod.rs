@@ -1,7 +1,14 @@
 //! Hand-rolled CLI argument parsing (offline registry has no `clap`).
 //!
 //! Grammar: `fica <command> [--flag value]... [--switch]...`
+//!
+//! [`SolveFlags`] is the one shared decoder for every flag the solver
+//! subcommands (`fit`, `run`) have in common — flag values that fail to
+//! parse are hard errors, not silently replaced defaults.
 
+use crate::estimator::{BackendChoice, Picard};
+use crate::ica::Algorithm;
+use crate::preprocessing::Whitener;
 use std::collections::BTreeMap;
 
 /// Parsed command line.
@@ -62,6 +69,57 @@ impl Args {
     }
 }
 
+/// The solver-related flags `fica fit` and `fica run` share:
+/// `--algo`, `--whitener`, `--backend`, `--tol`, `--max-iters`, `--seed`,
+/// `--scale`. One decoder, one set of defaults, hard errors on bad
+/// values (no silent `unwrap_or(default)` fallback).
+#[derive(Clone, Debug)]
+pub struct SolveFlags {
+    pub algo: Algorithm,
+    pub whitener: Whitener,
+    pub backend: BackendChoice,
+    pub tol: f64,
+    pub max_iters: usize,
+    pub seed: u64,
+    pub scale: f64,
+}
+
+impl SolveFlags {
+    /// Decode from parsed [`Args`], rejecting unknown ids and
+    /// unparsable values with a message naming the flag.
+    pub fn from_args(args: &Args) -> Result<SolveFlags, String> {
+        let algo_id = args.get_or("algo", "plbfgs-h2");
+        let algo = Algorithm::from_id(&algo_id)
+            .ok_or_else(|| format!("unknown --algo {algo_id}"))?;
+        let wh_id = args.get_or("whitener", "sphering");
+        let whitener = Whitener::from_id(&wh_id)
+            .ok_or_else(|| format!("unknown --whitener {wh_id} (sphering|pca)"))?;
+        let backend_id = args.get_or("backend", "native");
+        let backend = BackendChoice::from_id(&backend_id)
+            .ok_or_else(|| format!("unknown --backend {backend_id} (native|xla|auto)"))?;
+        Ok(SolveFlags {
+            algo,
+            whitener,
+            backend,
+            tol: args.get_parse("tol", 1e-8)?,
+            max_iters: args.get_parse("max-iters", 200)?,
+            seed: args.get_parse("seed", 0)?,
+            scale: args.get_parse("scale", 0.25)?,
+        })
+    }
+
+    /// A [`Picard`] builder configured from these flags.
+    pub fn picard(&self) -> Picard {
+        Picard::new()
+            .algorithm(self.algo)
+            .whitener(self.whitener)
+            .backend(self.backend)
+            .tol(self.tol)
+            .max_iters(self.max_iters)
+            .seed(self.seed)
+    }
+}
+
 pub const USAGE: &str = "\
 fica — Faster ICA by preconditioning with Hessian approximations
        (Ablin, Cardoso & Gramfort 2017; three-layer rust+JAX+Pallas build)
@@ -70,16 +128,27 @@ USAGE:
     fica <command> [options]
 
 COMMANDS:
-    info                         Library, artifact and platform summary
-    run                          Fit ICA on a synthetic dataset
+    fit                          Fit an ICA model and save it
+        --input <path>           matrix JSON file {rows, cols, data} (signals
+                                 in rows), or use --data for synthetic input
+        --data <id>              fig2a|fig2b|fig2c|fig3-eeg|fig3-img (synthetic)
+        --model-out <path>       write the fitted model JSON here
         --algo <id>              gd|infomax|qn-h1|qn-h2|lbfgs|plbfgs-h1|plbfgs-h2
                                  (default plbfgs-h2)
-        --data <id>              fig2a|fig2b|fig2c|fig3-eeg|fig3-img (default fig2a)
-        --seed <u64>             dataset seed (default 0)
-        --scale <f64>            dataset scale 0<s<=1 (default 0.25)
+        --whitener <id>          sphering|pca (default sphering)
+        --backend <id>           native|xla|auto (default native)
         --tol <f64>              gradient tolerance (default 1e-8)
         --max-iters <usize>      iteration cap (default 200)
-        --backend <native|xla>   compute backend (default native)
+        --seed <u64>             dataset / solver seed (default 0)
+        --scale <f64>            synthetic dataset scale 0<s<=1 (default 0.25)
+        --trace                  print the per-iteration convergence trace
+    apply                        Run a saved model on new data
+        --model <path>           model JSON produced by `fica fit`
+        --input <path>           matrix JSON file to transform
+        --output <path>          where to write the result matrix JSON
+        --inverse                map sources back to observations instead
+    info                         Library, artifact and platform summary
+    run                          (deprecated) alias of `fit --data ...`
     experiment                   Regenerate a paper figure
         --id <fig1|fig2a|fig2b|fig2c|fig3-eeg|fig3-img|fig4|all>
         --seeds <usize>          runs per algorithm (default 10)

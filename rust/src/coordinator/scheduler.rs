@@ -8,7 +8,7 @@
 //!   the pool keeps draining the remaining jobs.
 
 use crate::backend::NativeBackend;
-use crate::ica::{solve, SolveResult, SolverConfig};
+use crate::ica::{try_solve, SolveResult, SolverConfig};
 use crate::linalg::Mat;
 use std::panic::AssertUnwindSafe;
 use std::sync::mpsc;
@@ -81,7 +81,7 @@ pub fn run_jobs(jobs: Vec<Job>, pool: PoolConfig) -> Vec<JobOutcome> {
                     let n = x.rows();
                     let mut backend = NativeBackend::new(x);
                     let w0 = w0.unwrap_or_else(|| Mat::eye(n));
-                    solve(&mut backend, &w0, &config)
+                    try_solve(&mut backend, &w0, &config).expect("scheduler solve")
                 })) {
                     Ok(result) => JobOutcome::Done { id, label, result },
                     Err(p) => {

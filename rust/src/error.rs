@@ -1,0 +1,149 @@
+//! Crate-wide typed error: every user-reachable failure of the public
+//! estimator API ([`crate::estimator::Picard`], [`crate::estimator::IcaModel`],
+//! preprocessing, solver entry points, runtime) maps to an [`IcaError`]
+//! variant instead of a panic.
+//!
+//! Internal invariants (indexing, shape agreements between private
+//! helpers) keep their `assert!`s: those are bugs, not user errors.
+
+use std::fmt;
+
+/// Every way the public ICA API can fail on user input or environment.
+#[derive(Debug)]
+pub enum IcaError {
+    /// The caller handed us data we cannot work with (empty matrix, too
+    /// few samples, malformed flag value, ...).
+    InvalidInput {
+        /// Human-readable description of the offending input.
+        what: String,
+    },
+    /// Matrix shapes do not line up (`expected`/`got` are `(rows, cols)`).
+    DimensionMismatch {
+        /// Which argument or field mismatched.
+        what: String,
+        expected: (usize, usize),
+        got: (usize, usize),
+    },
+    /// A non-finite value (NaN/∞) where the algorithm requires finite data.
+    NonFinite {
+        /// Which input or field contained the non-finite entry.
+        what: String,
+    },
+    /// The data covariance is (numerically) rank-deficient: whitening is
+    /// impossible. `eigenvalue` is the offending eigenvalue, `index` its
+    /// position in ascending order.
+    SingularCovariance { eigenvalue: f64, index: usize },
+    /// A matrix that must be invertible (unmixing, whitener) is singular.
+    SingularMatrix {
+        /// Which matrix failed to factorize.
+        what: String,
+    },
+    /// An algorithm id that [`crate::ica::Algorithm::from_id`] rejects.
+    UnknownAlgorithm { id: String },
+    /// A whitener id that [`crate::preprocessing::Whitener::from_id`] rejects.
+    UnknownWhitener { id: String },
+    /// A serialized [`crate::estimator::IcaModel`] failed fail-closed
+    /// validation (bad schema, dims, non-finite entries, parse error).
+    InvalidModel { reason: String },
+    /// Filesystem failure while loading/saving models or matrices.
+    Io {
+        /// The path or operation that failed.
+        what: String,
+        source: std::io::Error,
+    },
+    /// Runtime/backend failure (PJRT unavailable, missing artifacts, ...).
+    Runtime { reason: String },
+}
+
+impl IcaError {
+    /// Shorthand for [`IcaError::InvalidInput`].
+    pub fn invalid_input(what: impl Into<String>) -> Self {
+        IcaError::InvalidInput { what: what.into() }
+    }
+
+    /// Shorthand for [`IcaError::InvalidModel`].
+    pub fn invalid_model(reason: impl Into<String>) -> Self {
+        IcaError::InvalidModel { reason: reason.into() }
+    }
+
+    /// Shorthand for [`IcaError::Runtime`].
+    pub fn runtime(reason: impl Into<String>) -> Self {
+        IcaError::Runtime { reason: reason.into() }
+    }
+
+    /// Wrap an I/O error with the path/operation it hit.
+    pub fn io(what: impl Into<String>, source: std::io::Error) -> Self {
+        IcaError::Io { what: what.into(), source }
+    }
+}
+
+impl fmt::Display for IcaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            IcaError::InvalidInput { what } => write!(f, "invalid input: {what}"),
+            IcaError::DimensionMismatch { what, expected, got } => write!(
+                f,
+                "dimension mismatch for {what}: expected {}x{}, got {}x{}",
+                expected.0, expected.1, got.0, got.1
+            ),
+            IcaError::NonFinite { what } => {
+                write!(f, "non-finite value (NaN/inf) in {what}")
+            }
+            IcaError::SingularCovariance { eigenvalue, index } => write!(
+                f,
+                "singular covariance: eigenvalue[{index}] = {eigenvalue:e} \
+                 (rank-deficient data — a constant or duplicated row?)"
+            ),
+            IcaError::SingularMatrix { what } => write!(f, "singular matrix: {what}"),
+            IcaError::UnknownAlgorithm { id } => write!(
+                f,
+                "unknown algorithm id {id:?} (expected one of gd|infomax|qn-h1|qn-h2|\
+                 lbfgs|plbfgs-h1|plbfgs-h2)"
+            ),
+            IcaError::UnknownWhitener { id } => {
+                write!(f, "unknown whitener id {id:?} (expected sphering|pca)")
+            }
+            IcaError::InvalidModel { reason } => write!(f, "invalid model file: {reason}"),
+            IcaError::Io { what, source } => write!(f, "io error ({what}): {source}"),
+            IcaError::Runtime { reason } => write!(f, "runtime error: {reason}"),
+        }
+    }
+}
+
+impl std::error::Error for IcaError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            IcaError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_informative() {
+        let e = IcaError::SingularCovariance { eigenvalue: 1e-17, index: 0 };
+        let s = e.to_string();
+        assert!(s.contains("singular covariance"), "{s}");
+        assert!(s.contains("1e-17"), "{s}");
+
+        let e = IcaError::DimensionMismatch {
+            what: "x".into(),
+            expected: (4, 4),
+            got: (3, 4),
+        };
+        assert!(e.to_string().contains("expected 4x4, got 3x4"));
+    }
+
+    #[test]
+    fn io_source_is_chained() {
+        use std::error::Error;
+        let inner = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e = IcaError::io("model.json", inner);
+        assert!(e.source().is_some());
+        assert!(e.to_string().contains("model.json"));
+    }
+}

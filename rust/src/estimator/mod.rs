@@ -1,0 +1,873 @@
+//! The estimator API: [`Picard`] (builder, `fit`) and [`IcaModel`]
+//! (fitted artifact: `transform`, `inverse_transform`, JSON save/load).
+//!
+//! This is the crate's front door. Where [`crate::ica::try_solve`] is the
+//! raw optimizer over already-whitened data, `Picard::fit` runs the whole
+//! pipeline — centering, whitening, backend selection, solve — and hands
+//! back a self-contained model:
+//!
+//! ```text
+//! x_raw  ──center──▶  x - μ  ──K──▶  whitened  ──W (solver)──▶  sources
+//! ```
+//!
+//! so the fitted artifact is the triple `(W, K, μ)` plus convergence
+//! metadata, and `transform` is `y = W·K·(x − μ)`.
+//!
+//! Every failure on user input is a typed [`IcaError`]; the JSON codec is
+//! fail-closed (schema tag, dimension agreement, finiteness — in the
+//! spirit of the registry-manifest idiom), so a model that loads is a
+//! model that works.
+
+use crate::backend::{ComputeBackend, NativeBackend};
+use crate::error::IcaError;
+use crate::ica::{try_solve, Algorithm, HessianApprox, SolverConfig, Trace};
+use crate::linalg::{matmul, Lu, Mat};
+use crate::preprocessing::{preprocess, Whitener};
+use crate::runtime::{default_artifact_dir, Engine, XlaBackend};
+use crate::util::{mat_from_json, mat_to_json, Json};
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+use std::rc::Rc;
+
+/// Schema tag stamped into every serialized model; load rejects others.
+const MODEL_SCHEMA: &str = "fica.ica_model/v1";
+
+/// Which compute backend `fit` runs the per-iteration statistics on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendChoice {
+    /// Pure-Rust fused sweeps; always available.
+    Native,
+    /// AOT JAX/Pallas artifacts through PJRT; errors if the runtime or
+    /// the (N, T) artifacts are unavailable.
+    Xla,
+    /// Try [`BackendChoice::Xla`], fall back to native on any runtime
+    /// error (missing artifacts, `pjrt` feature disabled, ...).
+    Auto,
+}
+
+impl BackendChoice {
+    /// Short stable identifier used by the CLI.
+    pub fn id(self) -> &'static str {
+        match self {
+            BackendChoice::Native => "native",
+            BackendChoice::Xla => "xla",
+            BackendChoice::Auto => "auto",
+        }
+    }
+
+    /// Parse a CLI identifier.
+    pub fn from_id(s: &str) -> Option<BackendChoice> {
+        Some(match s {
+            "native" => BackendChoice::Native,
+            "xla" => BackendChoice::Xla,
+            "auto" => BackendChoice::Auto,
+            _ => return None,
+        })
+    }
+}
+
+/// Builder for a Picard ICA fit: configure, then [`Picard::fit`].
+///
+/// Defaults reproduce the paper's headline method: preconditioned L-BFGS
+/// with the H̃² Hessian approximation, sphering whitener, `tol = 1e-8`,
+/// 200 iterations max, native backend.
+#[derive(Clone)]
+pub struct Picard {
+    algorithm: Algorithm,
+    whitener: Whitener,
+    tol: f64,
+    max_iters: usize,
+    lambda_min: f64,
+    max_time: f64,
+    seed: u64,
+    backend: BackendChoice,
+    w0: Option<Mat>,
+    /// Shared PJRT engine (compile cache) for xla/auto backends; a
+    /// fresh engine is created per fit when unset.
+    engine: Option<Rc<Engine>>,
+}
+
+impl Default for Picard {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// Hand-written: `Engine` holds a PJRT client with no Debug impl.
+impl fmt::Debug for Picard {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Picard")
+            .field("algorithm", &self.algorithm)
+            .field("whitener", &self.whitener)
+            .field("tol", &self.tol)
+            .field("max_iters", &self.max_iters)
+            .field("lambda_min", &self.lambda_min)
+            .field("max_time", &self.max_time)
+            .field("seed", &self.seed)
+            .field("backend", &self.backend)
+            .field("w0", &self.w0)
+            .field("shared_engine", &self.engine.is_some())
+            .finish()
+    }
+}
+
+impl Picard {
+    pub fn new() -> Self {
+        Self {
+            algorithm: Algorithm::Lbfgs { precond: Some(HessianApprox::H2), memory: 7 },
+            whitener: Whitener::Sphering,
+            tol: 1e-8,
+            max_iters: 200,
+            lambda_min: 1e-2,
+            max_time: f64::INFINITY,
+            seed: 0,
+            backend: BackendChoice::Native,
+            w0: None,
+            engine: None,
+        }
+    }
+
+    /// Which of the paper's algorithms drives the solve.
+    pub fn algorithm(mut self, algo: Algorithm) -> Self {
+        self.algorithm = algo;
+        self
+    }
+
+    /// Whitening transform applied before the solve.
+    pub fn whitener(mut self, w: Whitener) -> Self {
+        self.whitener = w;
+        self
+    }
+
+    /// Gradient ∞-norm convergence tolerance.
+    pub fn tol(mut self, tol: f64) -> Self {
+        self.tol = tol;
+        self
+    }
+
+    /// Iteration (or Infomax pass) cap.
+    pub fn max_iters(mut self, k: usize) -> Self {
+        self.max_iters = k;
+        self
+    }
+
+    /// Eigenvalue floor λ_min for the Hessian regularization (Alg. 1).
+    pub fn lambda_min(mut self, lam: f64) -> Self {
+        self.lambda_min = lam;
+        self
+    }
+
+    /// Wall-clock budget in charged seconds.
+    pub fn max_time(mut self, secs: f64) -> Self {
+        self.max_time = secs;
+        self
+    }
+
+    /// Seed for solver-internal randomness (Infomax batching).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Compute backend selection (native / xla / auto-fallback).
+    pub fn backend(mut self, backend: BackendChoice) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Custom initial unmixing matrix in whitened space (default: I).
+    pub fn w0(mut self, w0: Mat) -> Self {
+        self.w0 = Some(w0);
+        self
+    }
+
+    /// Share a PJRT engine across fits so compiled artifacts are reused
+    /// (xla/auto backends only; without it each fit compiles afresh).
+    pub fn engine(mut self, engine: Rc<Engine>) -> Self {
+        self.engine = Some(engine);
+        self
+    }
+
+    fn engine_handle(&self) -> Result<Rc<Engine>, IcaError> {
+        match &self.engine {
+            Some(e) => Ok(e.clone()),
+            None => Ok(Rc::new(Engine::new(default_artifact_dir())?)),
+        }
+    }
+
+    fn solver_config(&self) -> SolverConfig {
+        let mut cfg = SolverConfig::new(self.algorithm)
+            .with_tol(self.tol)
+            .with_max_iters(self.max_iters)
+            .with_seed(self.seed)
+            .with_max_time(self.max_time);
+        cfg.lambda_min = self.lambda_min;
+        cfg
+    }
+
+    /// Build the configured backend over the whitened data, returning the
+    /// backend, the name actually used, and — when Auto fell back to
+    /// native — the reason XLA was unavailable.
+    fn make_backend(
+        &self,
+        xw: Mat,
+    ) -> Result<(Box<dyn ComputeBackend>, &'static str, Option<String>), IcaError> {
+        match self.backend {
+            BackendChoice::Native => Ok((Box::new(NativeBackend::new(xw)), "native", None)),
+            BackendChoice::Xla => {
+                let engine = self.engine_handle()?;
+                Ok((Box::new(XlaBackend::new(engine, xw)?), "xla", None))
+            }
+            BackendChoice::Auto => {
+                match self
+                    .engine_handle()
+                    .and_then(|e| XlaBackend::new(e, xw.clone()))
+                {
+                    Ok(be) => Ok((Box::new(be), "xla", None)),
+                    Err(why) => Ok((
+                        Box::new(NativeBackend::new(xw)),
+                        "native",
+                        Some(why.to_string()),
+                    )),
+                }
+            }
+        }
+    }
+
+    /// Run centering → whitening → solve on raw data `x` (signals in
+    /// rows, samples in columns) and return the fitted model.
+    ///
+    /// Fails with a typed [`IcaError`] on malformed input: fewer than two
+    /// signal rows, fewer samples than signals, non-finite entries,
+    /// rank-deficient covariance, invalid configuration, or an
+    /// unavailable backend.
+    pub fn fit(&self, x: &Mat) -> Result<IcaModel, IcaError> {
+        let cfg = self.solver_config();
+        // try_solve re-validates; this early call (same single source of
+        // truth) just fails before the O(N²T) whitening pass.
+        cfg.validate()?;
+        if x.rows() < 2 {
+            return Err(IcaError::invalid_input(format!(
+                "ICA needs at least 2 signal rows, got {}",
+                x.rows()
+            )));
+        }
+        if x.cols() <= x.rows() {
+            // Strictly more samples than signals: centering costs one
+            // rank, so T == N data is always covariance-deficient.
+            return Err(IcaError::invalid_input(format!(
+                "need more samples than signals, got {} signals x {} samples",
+                x.rows(),
+                x.cols()
+            )));
+        }
+        let pre = preprocess(x, self.whitener)?;
+        let n = pre.x.rows();
+        let w0 = match &self.w0 {
+            Some(w) => w.clone(),
+            None => Mat::eye(n),
+        };
+        let (mut backend, backend_name, backend_fallback) = self.make_backend(pre.x)?;
+        let result = try_solve(backend.as_mut(), &w0, &cfg)?;
+        let final_grad_inf =
+            result.trace.last().map(|r| r.grad_inf).unwrap_or(f64::NAN);
+        let u = matmul(&result.w, &pre.k);
+        Ok(IcaModel {
+            w: result.w,
+            k: pre.k,
+            u,
+            means: pre.means,
+            algorithm: self.algorithm,
+            whitener: self.whitener,
+            fit_info: FitInfo {
+                converged: result.converged,
+                iters: result.iters,
+                gradient_fallbacks: result.gradient_fallbacks,
+                final_grad_inf,
+                tol: self.tol,
+                backend: backend_name.to_string(),
+                backend_fallback,
+                trace: result.trace,
+            },
+        })
+    }
+}
+
+/// Convergence metadata of a fit. Scalar fields are serialized with the
+/// model; the per-iteration `trace` is in-memory only (empty after load).
+#[derive(Clone, Debug)]
+pub struct FitInfo {
+    /// Whether the gradient tolerance was reached.
+    pub converged: bool,
+    /// Iterations (or Infomax passes) performed.
+    pub iters: usize,
+    /// Line-search fallbacks to the plain gradient direction.
+    pub gradient_fallbacks: usize,
+    /// Final full-data gradient ∞-norm (NaN if nothing was recorded).
+    pub final_grad_inf: f64,
+    /// Tolerance the fit targeted (always finite).
+    pub tol: f64,
+    /// Backend that served the fit ("native" or "xla").
+    pub backend: String,
+    /// Why `BackendChoice::Auto` fell back to native, when it did
+    /// (not serialized).
+    pub backend_fallback: Option<String>,
+    /// Per-iteration convergence trace (not serialized).
+    pub trace: Trace,
+}
+
+/// A fitted ICA model: unmixing matrix `W` (whitened space), whitener
+/// `K`, per-row means `μ`, and convergence metadata.
+///
+/// The effective source extraction on raw data is
+/// `y = W·K·(x − μ)` ([`IcaModel::transform`]); its inverse maps sources
+/// back to the observation space ([`IcaModel::inverse_transform`]).
+#[derive(Clone, Debug)]
+pub struct IcaModel {
+    w: Mat,
+    k: Mat,
+    /// Cached composed unmixing `U = W·K`, computed once at
+    /// construction so the per-request `transform` path does no matmul
+    /// beyond `U·x`.
+    u: Mat,
+    means: Vec<f64>,
+    algorithm: Algorithm,
+    whitener: Whitener,
+    fit_info: FitInfo,
+}
+
+impl IcaModel {
+    /// Number of extracted components (rows of `W`).
+    pub fn n_components(&self) -> usize {
+        self.w.rows()
+    }
+
+    /// Number of observed signals the model expects (columns of `K`).
+    pub fn n_features(&self) -> usize {
+        self.k.cols()
+    }
+
+    /// The solver's unmixing matrix in whitened space.
+    pub fn w(&self) -> &Mat {
+        &self.w
+    }
+
+    /// The whitening matrix `K`.
+    pub fn whitening_matrix(&self) -> &Mat {
+        &self.k
+    }
+
+    /// Per-row means removed from the raw data.
+    pub fn row_means(&self) -> &[f64] {
+        &self.means
+    }
+
+    /// The algorithm that produced the fit.
+    pub fn algorithm(&self) -> Algorithm {
+        self.algorithm
+    }
+
+    /// The whitener used during preprocessing.
+    pub fn whitener(&self) -> Whitener {
+        self.whitener
+    }
+
+    /// Convergence metadata.
+    pub fn fit_info(&self) -> &FitInfo {
+        &self.fit_info
+    }
+
+    /// The composed unmixing matrix `U = W·K` acting on centered raw
+    /// data (precomputed at construction).
+    pub fn unmixing_matrix(&self) -> Mat {
+        self.u.clone()
+    }
+
+    /// The mixing matrix `U⁻¹` (dictionary atoms in its columns).
+    pub fn mixing_matrix(&self) -> Result<Mat, IcaError> {
+        let lu = Lu::new(&self.u).ok_or_else(|| IcaError::SingularMatrix {
+            what: "unmixing matrix W·K".into(),
+        })?;
+        Ok(lu.inverse())
+    }
+
+    fn check_input(&self, m: &Mat, rows: usize, what: &str) -> Result<(), IcaError> {
+        if m.rows() != rows {
+            return Err(IcaError::DimensionMismatch {
+                what: what.into(),
+                expected: (rows, m.cols()),
+                got: (m.rows(), m.cols()),
+            });
+        }
+        if !m.as_slice().iter().all(|v| v.is_finite()) {
+            return Err(IcaError::NonFinite { what: what.into() });
+        }
+        Ok(())
+    }
+
+    /// Extract sources from raw data: `y = W·K·(x − μ)`.
+    ///
+    /// `x` must have [`IcaModel::n_features`] rows; any number of sample
+    /// columns is accepted.
+    pub fn transform(&self, x: &Mat) -> Result<Mat, IcaError> {
+        self.check_input(x, self.n_features(), "transform input")?;
+        let mut centered = x.clone();
+        for i in 0..centered.rows() {
+            let m = self.means[i];
+            for v in centered.row_mut(i) {
+                *v -= m;
+            }
+        }
+        Ok(matmul(&self.u, &centered))
+    }
+
+    /// Map sources back to the observation space:
+    /// `x = (W·K)⁻¹·y + μ`. Inverse of [`IcaModel::transform`].
+    pub fn inverse_transform(&self, y: &Mat) -> Result<Mat, IcaError> {
+        self.check_input(y, self.n_components(), "inverse_transform input")?;
+        let mut x = matmul(&self.mixing_matrix()?, y);
+        for i in 0..x.rows() {
+            let m = self.means[i];
+            for v in x.row_mut(i) {
+                *v += m;
+            }
+        }
+        Ok(x)
+    }
+
+    // --- serialization ----------------------------------------------------
+
+    /// Serialize to a JSON value. Fails closed: a model with non-finite
+    /// or shape-inconsistent parameters is refused rather than written.
+    pub fn to_json(&self) -> Result<Json, IcaError> {
+        self.validate_invariants()?;
+        let mut fit = BTreeMap::new();
+        fit.insert("backend".to_string(), Json::Str(self.fit_info.backend.clone()));
+        fit.insert("converged".to_string(), Json::Bool(self.fit_info.converged));
+        fit.insert(
+            "final_grad_inf".to_string(),
+            if self.fit_info.final_grad_inf.is_finite() {
+                Json::Num(self.fit_info.final_grad_inf)
+            } else {
+                Json::Null
+            },
+        );
+        fit.insert(
+            "gradient_fallbacks".to_string(),
+            Json::Num(self.fit_info.gradient_fallbacks as f64),
+        );
+        fit.insert("iters".to_string(), Json::Num(self.fit_info.iters as f64));
+        fit.insert("tol".to_string(), Json::Num(self.fit_info.tol));
+
+        let mut obj = BTreeMap::new();
+        obj.insert("schema".to_string(), Json::Str(MODEL_SCHEMA.to_string()));
+        obj.insert(
+            "algorithm".to_string(),
+            Json::Str(self.algorithm.id().to_string()),
+        );
+        obj.insert("whitener".to_string(), Json::Str(self.whitener.id().to_string()));
+        obj.insert(
+            "n_components".to_string(),
+            Json::Num(self.n_components() as f64),
+        );
+        obj.insert("n_features".to_string(), Json::Num(self.n_features() as f64));
+        obj.insert(
+            "means".to_string(),
+            Json::Arr(self.means.iter().map(|&v| Json::Num(v)).collect()),
+        );
+        obj.insert("whitening".to_string(), mat_to_json(&self.k));
+        obj.insert("unmixing_w".to_string(), mat_to_json(&self.w));
+        obj.insert("fit".to_string(), Json::Obj(fit));
+        Ok(Json::Obj(obj))
+    }
+
+    /// Serialize to the canonical compact JSON string. Deterministic
+    /// (sorted keys, shortest-roundtrip floats): serializing the same
+    /// model twice yields identical bytes.
+    pub fn to_json_string(&self) -> Result<String, IcaError> {
+        Ok(self.to_json()?.to_string_compact())
+    }
+
+    /// Parse a model from a JSON value, validating every invariant
+    /// (schema tag, known ids, dimension agreement, finiteness).
+    pub fn from_json(v: &Json) -> Result<IcaModel, IcaError> {
+        let schema = v.get("schema").and_then(|s| s.as_str()).unwrap_or("");
+        if schema != MODEL_SCHEMA {
+            return Err(IcaError::invalid_model(format!(
+                "schema {schema:?}, expected {MODEL_SCHEMA:?}"
+            )));
+        }
+        let algo_id = v
+            .get("algorithm")
+            .and_then(|a| a.as_str())
+            .ok_or_else(|| IcaError::invalid_model("missing \"algorithm\""))?;
+        let algorithm = Algorithm::from_id(algo_id)
+            .ok_or_else(|| IcaError::UnknownAlgorithm { id: algo_id.to_string() })?;
+        let wh_id = v
+            .get("whitener")
+            .and_then(|w| w.as_str())
+            .ok_or_else(|| IcaError::invalid_model("missing \"whitener\""))?;
+        let whitener = Whitener::from_id(wh_id)
+            .ok_or_else(|| IcaError::UnknownWhitener { id: wh_id.to_string() })?;
+        let n_components = v
+            .get("n_components")
+            .and_then(|n| n.as_usize())
+            .ok_or_else(|| IcaError::invalid_model("missing/bad \"n_components\""))?;
+        let n_features = v
+            .get("n_features")
+            .and_then(|n| n.as_usize())
+            .ok_or_else(|| IcaError::invalid_model("missing/bad \"n_features\""))?;
+        let means_arr = v
+            .get("means")
+            .and_then(|m| m.as_arr())
+            .ok_or_else(|| IcaError::invalid_model("missing/bad \"means\""))?;
+        let mut means = Vec::with_capacity(means_arr.len());
+        for (i, e) in means_arr.iter().enumerate() {
+            let x = e.as_f64().ok_or_else(|| {
+                IcaError::invalid_model(format!("means[{i}] is not a number"))
+            })?;
+            if !x.is_finite() {
+                return Err(IcaError::invalid_model(format!("means[{i}] is non-finite")));
+            }
+            means.push(x);
+        }
+        let k = mat_from_json(
+            v.get("whitening")
+                .ok_or_else(|| IcaError::invalid_model("missing \"whitening\""))?,
+            "whitening",
+        )?;
+        let w = mat_from_json(
+            v.get("unmixing_w")
+                .ok_or_else(|| IcaError::invalid_model("missing \"unmixing_w\""))?,
+            "unmixing_w",
+        )?;
+        let fit = v
+            .get("fit")
+            .ok_or_else(|| IcaError::invalid_model("missing \"fit\""))?;
+        let fit_info = FitInfo {
+            converged: match fit.get("converged") {
+                Some(Json::Bool(b)) => *b,
+                _ => return Err(IcaError::invalid_model("missing/bad \"fit.converged\"")),
+            },
+            iters: fit
+                .get("iters")
+                .and_then(|n| n.as_usize())
+                .ok_or_else(|| IcaError::invalid_model("missing/bad \"fit.iters\""))?,
+            gradient_fallbacks: fit
+                .get("gradient_fallbacks")
+                .and_then(|n| n.as_usize())
+                .ok_or_else(|| {
+                    IcaError::invalid_model("missing/bad \"fit.gradient_fallbacks\"")
+                })?,
+            final_grad_inf: match fit.get("final_grad_inf") {
+                Some(Json::Null) | None => f64::NAN,
+                Some(n) => n.as_f64().ok_or_else(|| {
+                    IcaError::invalid_model("bad \"fit.final_grad_inf\"")
+                })?,
+            },
+            tol: fit
+                .get("tol")
+                .and_then(|n| n.as_f64())
+                .filter(|t| t.is_finite() && *t >= 0.0)
+                .ok_or_else(|| IcaError::invalid_model("missing/bad \"fit.tol\""))?,
+            backend: fit
+                .get("backend")
+                .and_then(|b| b.as_str())
+                .ok_or_else(|| IcaError::invalid_model("missing/bad \"fit.backend\""))?
+                .to_string(),
+            backend_fallback: None,
+            trace: Trace::default(),
+        };
+        // Validate shapes BEFORE composing U: matmul asserts on
+        // mismatched dims and a crafted file must not reach it.
+        Self::validate_parts(&w, &k, &means)?;
+        if w.rows() != n_components || k.cols() != n_features {
+            return Err(IcaError::invalid_model(format!(
+                "declared dims ({n_components}, {n_features}) disagree with matrices \
+                 ({}, {})",
+                w.rows(),
+                k.cols()
+            )));
+        }
+        let u = matmul(&w, &k);
+        Ok(IcaModel { w, k, u, means, algorithm, whitener, fit_info })
+    }
+
+    /// Parse a model from a JSON string (fail-closed; see
+    /// [`IcaModel::from_json`]).
+    pub fn from_json_str(s: &str) -> Result<IcaModel, IcaError> {
+        let v = Json::parse(s).map_err(|e| IcaError::invalid_model(e.to_string()))?;
+        Self::from_json(&v)
+    }
+
+    /// Save the model to a JSON file.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), IcaError> {
+        let path = path.as_ref();
+        let s = self.to_json_string()?;
+        std::fs::write(path, s).map_err(|e| IcaError::io(path.display().to_string(), e))
+    }
+
+    /// Load a model from a JSON file (fail-closed parsing).
+    pub fn load(path: impl AsRef<Path>) -> Result<IcaModel, IcaError> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| IcaError::io(path.display().to_string(), e))?;
+        Self::from_json_str(&text)
+    }
+
+    /// The invariants both save and load enforce: square `W`, a `K` whose
+    /// shape matches `W`, means aligned with `K`'s columns, all entries
+    /// finite, nothing empty.
+    fn validate_invariants(&self) -> Result<(), IcaError> {
+        Self::validate_parts(&self.w, &self.k, &self.means)
+    }
+
+    /// Shape/finiteness validation on the bare parts — usable before an
+    /// `IcaModel` (and its composed `U`) is constructed.
+    fn validate_parts(w: &Mat, k: &Mat, means: &[f64]) -> Result<(), IcaError> {
+        let n = w.rows();
+        if n == 0 {
+            return Err(IcaError::invalid_model("empty unmixing matrix"));
+        }
+        if w.cols() != n {
+            return Err(IcaError::invalid_model(format!(
+                "unmixing W must be square, got {}x{}",
+                w.rows(),
+                w.cols()
+            )));
+        }
+        if k.rows() != n || k.cols() != n {
+            // Schema v1 has no dimension reduction: K is square, so the
+            // composed unmixing W·K stays invertible for inverse_transform.
+            return Err(IcaError::invalid_model(format!(
+                "whitening K must be {n}x{n} to match W, got {}x{}",
+                k.rows(),
+                k.cols()
+            )));
+        }
+        if means.len() != k.cols() {
+            return Err(IcaError::invalid_model(format!(
+                "means length {} != n_features {}",
+                means.len(),
+                k.cols()
+            )));
+        }
+        let finite = |s: &[f64]| s.iter().all(|v| v.is_finite());
+        if !finite(w.as_slice()) || !finite(k.as_slice()) || !finite(means) {
+            return Err(IcaError::invalid_model("non-finite model parameters"));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ica::amari_distance;
+    use crate::signal;
+
+    fn fitted(n: usize, t: usize, seed: u64) -> (IcaModel, signal::Dataset) {
+        let data = signal::experiment_a(n, t, seed);
+        let model = Picard::new()
+            .tol(1e-9)
+            .max_iters(150)
+            .fit(&data.x)
+            .expect("fit");
+        (model, data)
+    }
+
+    #[test]
+    fn fit_recovers_sources() {
+        let (model, data) = fitted(6, 4000, 3);
+        assert!(model.fit_info().converged);
+        let perm = matmul(&model.unmixing_matrix(), &data.mixing);
+        let d = amari_distance(&perm);
+        assert!(d < 0.05, "Amari distance {d}");
+    }
+
+    #[test]
+    fn transform_then_inverse_is_identity() {
+        let (model, data) = fitted(5, 2500, 4);
+        let y = model.transform(&data.x).unwrap();
+        assert_eq!((y.rows(), y.cols()), (5, data.x.cols()));
+        let back = model.inverse_transform(&y).unwrap();
+        assert!(
+            back.max_abs_diff(&data.x) < 1e-8,
+            "roundtrip error {}",
+            back.max_abs_diff(&data.x)
+        );
+    }
+
+    #[test]
+    fn fit_rejects_malformed_data() {
+        let p = Picard::new();
+        // Too few rows.
+        assert!(matches!(
+            p.fit(&Mat::zeros(1, 100)),
+            Err(IcaError::InvalidInput { .. })
+        ));
+        // Fewer samples than signals.
+        assert!(matches!(
+            p.fit(&Mat::zeros(8, 4)),
+            Err(IcaError::InvalidInput { .. })
+        ));
+        // Non-finite entries.
+        let data = signal::experiment_a(4, 500, 1);
+        let mut x = data.x.clone();
+        x[(2, 3)] = f64::NAN;
+        assert!(matches!(p.fit(&x), Err(IcaError::NonFinite { .. })));
+        // Rank-deficient rows.
+        let mut dup = data.x.clone();
+        let row: Vec<f64> = dup.row(0).to_vec();
+        dup.row_mut(1).copy_from_slice(&row);
+        assert!(matches!(
+            p.fit(&dup),
+            Err(IcaError::SingularCovariance { .. })
+        ));
+        // Invalid configuration.
+        assert!(matches!(
+            Picard::new().tol(-1.0).fit(&data.x),
+            Err(IcaError::InvalidInput { .. })
+        ));
+        // Non-finite tol would serialize to invalid JSON: rejected up front.
+        assert!(matches!(
+            Picard::new().tol(f64::INFINITY).fit(&data.x),
+            Err(IcaError::InvalidInput { .. })
+        ));
+        // Mis-shaped custom w0.
+        assert!(matches!(
+            Picard::new().w0(Mat::eye(3)).fit(&data.x),
+            Err(IcaError::DimensionMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn transform_validates_input() {
+        let (model, data) = fitted(4, 800, 6);
+        // Wrong row count.
+        assert!(matches!(
+            model.transform(&Mat::zeros(3, 10)),
+            Err(IcaError::DimensionMismatch { .. })
+        ));
+        // Non-finite entries.
+        let mut x = data.x.clone();
+        x[(0, 0)] = f64::INFINITY;
+        assert!(matches!(model.transform(&x), Err(IcaError::NonFinite { .. })));
+        assert!(matches!(
+            model.inverse_transform(&Mat::zeros(5, 10)),
+            Err(IcaError::DimensionMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_transform_exactly() {
+        let (model, data) = fitted(5, 2000, 8);
+        let s1 = model.to_json_string().unwrap();
+        let back = IcaModel::from_json_str(&s1).unwrap();
+        // Byte-stable: serialize → parse → serialize is the identity.
+        let s2 = back.to_json_string().unwrap();
+        assert_eq!(s1, s2, "serialization not byte-stable");
+        // Bit-exact parameters ⇒ identical transform output.
+        let y1 = model.transform(&data.x).unwrap();
+        let y2 = back.transform(&data.x).unwrap();
+        assert!(y1.max_abs_diff(&y2) == 0.0);
+        // Metadata survives.
+        assert_eq!(back.algorithm().id(), model.algorithm().id());
+        assert_eq!(back.whitener(), model.whitener());
+        assert_eq!(back.fit_info().iters, model.fit_info().iters);
+        assert_eq!(back.fit_info().backend, model.fit_info().backend);
+    }
+
+    #[test]
+    fn from_json_fails_closed() {
+        let (model, _) = fitted(4, 600, 9);
+        let good = model.to_json_string().unwrap();
+
+        // Truncated file.
+        assert!(IcaModel::from_json_str(&good[..good.len() / 2]).is_err());
+        // Wrong schema.
+        let bad = good.replace("fica.ica_model/v1", "fica.ica_model/v9");
+        assert!(matches!(
+            IcaModel::from_json_str(&bad),
+            Err(IcaError::InvalidModel { .. })
+        ));
+        // Unknown algorithm id.
+        let bad = good.replace("\"plbfgs-h2\"", "\"sgd-9000\"");
+        assert!(matches!(
+            IcaModel::from_json_str(&bad),
+            Err(IcaError::UnknownAlgorithm { .. })
+        ));
+        // Dimension lie.
+        let bad = good.replace("\"n_components\":4", "\"n_components\":5");
+        assert!(matches!(
+            IcaModel::from_json_str(&bad),
+            Err(IcaError::InvalidModel { .. })
+        ));
+        // Non-finite parameter entries are data errors, not panics.
+        let bad = good.replacen(r#""data":["#, r#""data":[null,"#, 1);
+        assert!(IcaModel::from_json_str(&bad).is_err());
+        // Not JSON at all.
+        assert!(IcaModel::from_json_str("not json").is_err());
+        assert!(IcaModel::from_json_str("").is_err());
+    }
+
+    #[test]
+    fn save_load_file_roundtrip() {
+        let dir = std::env::temp_dir().join("fica_estimator_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.json");
+        let (model, data) = fitted(4, 900, 10);
+        model.save(&path).unwrap();
+        let back = IcaModel::load(&path).unwrap();
+        let y1 = model.transform(&data.x).unwrap();
+        let y2 = back.transform(&data.x).unwrap();
+        assert!(y1.max_abs_diff(&y2) == 0.0);
+        assert!(matches!(
+            IcaModel::load(dir.join("missing.json")),
+            Err(IcaError::Io { .. })
+        ));
+    }
+
+    #[test]
+    fn backend_choice_ids_roundtrip() {
+        for b in [BackendChoice::Native, BackendChoice::Xla, BackendChoice::Auto] {
+            assert_eq!(BackendChoice::from_id(b.id()), Some(b));
+        }
+        assert_eq!(BackendChoice::from_id("gpu"), None);
+    }
+
+    #[test]
+    fn auto_backend_falls_back_to_native() {
+        // Without artifacts (or without the pjrt feature) Auto must still
+        // fit — on the native backend.
+        let data = signal::experiment_a(4, 800, 11);
+        let model = Picard::new()
+            .backend(BackendChoice::Auto)
+            .tol(1e-7)
+            .fit(&data.x)
+            .expect("auto fit");
+        let info = model.fit_info();
+        assert!(!info.backend.is_empty());
+        // When Auto lands on native, it must say why XLA was skipped.
+        if info.backend == "native" {
+            assert!(info.backend_fallback.is_some(), "fallback reason missing");
+        }
+    }
+
+    #[test]
+    fn infomax_and_every_paper_algorithm_fit() {
+        let data = signal::experiment_a(4, 1200, 12);
+        for id in Algorithm::paper_suite() {
+            let algo = Algorithm::from_id(id).unwrap();
+            let model = Picard::new()
+                .algorithm(algo)
+                .tol(1e-3)
+                .max_iters(30)
+                .fit(&data.x)
+                .unwrap_or_else(|e| panic!("{id}: {e}"));
+            assert_eq!(model.algorithm().id(), *id);
+            assert_eq!(model.n_components(), 4);
+        }
+    }
+}

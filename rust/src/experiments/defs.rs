@@ -76,9 +76,17 @@ pub fn algo_suite() -> Vec<Algorithm> {
 /// `scale ∈ (0, 1]` shrinks the dataset (N and T together where safe) so
 /// tests and quick benches stay fast; `scale = 1` is the paper's size.
 pub fn build_dataset(id: ExperimentId, seed: u64, scale: f64) -> Mat {
+    preprocess(&build_raw_dataset(id, seed, scale), Whitener::Sphering)
+        .expect("whitening")
+        .x
+}
+
+/// Build the raw (unwhitened) data for one (experiment, seed) pair —
+/// the input shape `Picard::fit` expects, which whitens internally.
+pub fn build_raw_dataset(id: ExperimentId, seed: u64, scale: f64) -> Mat {
     assert!(scale > 0.0 && scale <= 1.0);
     let sc = |v: usize| ((v as f64 * scale).round() as usize).max(4);
-    let raw = match id {
+    match id {
         ExperimentId::Fig1 => signal::experiment_a(sc(30), sc(5000), seed).x,
         ExperimentId::Fig2A => signal::experiment_a(sc(40), sc(10_000), seed).x,
         ExperimentId::Fig2B => {
@@ -108,8 +116,7 @@ pub fn build_dataset(id: ExperimentId, seed: u64, scale: f64) -> Mat {
             };
             crate::signal::eeg_sim::generate(&cfg, seed)
         }
-    };
-    preprocess(&raw, Whitener::Sphering).x
+    }
 }
 
 #[cfg(test)]

@@ -8,7 +8,7 @@
 use super::defs::{build_dataset, ExperimentId};
 use super::report;
 use crate::backend::NativeBackend;
-use crate::ica::{solve, Algorithm, HessianApprox, SolverConfig};
+use crate::ica::{try_solve, Algorithm, HessianApprox, SolverConfig};
 use crate::linalg::Mat;
 
 pub struct Fig1Config {
@@ -63,7 +63,7 @@ pub fn run(cfg: &Fig1Config) -> Fig1Result {
     let run_algo = |algo: Algorithm| {
         let mut backend = NativeBackend::new(x.clone());
         let scfg = SolverConfig::new(algo).with_tol(0.0).with_max_iters(cfg.iters);
-        solve(&mut backend, &w0, &scfg)
+        try_solve(&mut backend, &w0, &scfg).expect("fig1 solve")
     };
 
     let gd_res = run_algo(Algorithm::GradientDescent { oracle_ls: true });

@@ -12,7 +12,7 @@
 use super::hungarian::max_abs_assignment;
 use super::report;
 use crate::backend::NativeBackend;
-use crate::ica::{solve, Algorithm, HessianApprox, SolverConfig};
+use crate::ica::{try_solve, Algorithm, HessianApprox, SolverConfig};
 use crate::linalg::{matmul, Lu, Mat};
 use crate::preprocessing::{preprocess, Whitener};
 use crate::signal::eeg_sim::{generate, EegConfig};
@@ -94,8 +94,8 @@ pub fn run(cfg: &Fig4Config) -> Fig4Result {
     };
     let raw = generate(&eeg, cfg.seed);
 
-    let sph = preprocess(&raw, Whitener::Sphering);
-    let pca = preprocess(&raw, Whitener::Pca);
+    let sph = preprocess(&raw, Whitener::Sphering).expect("whitening");
+    let pca = preprocess(&raw, Whitener::Pca).expect("whitening");
 
     let mut levels = Vec::new();
     for &tol in &cfg.tolerances {
@@ -104,9 +104,9 @@ pub fn run(cfg: &Fig4Config) -> Fig4Result {
         let w0 = Mat::eye(raw.rows());
 
         let mut be_s = NativeBackend::new(sph.x.clone());
-        let r_s = solve(&mut be_s, &w0, &scfg);
+        let r_s = try_solve(&mut be_s, &w0, &scfg).expect("fig4 solve");
         let mut be_p = NativeBackend::new(pca.x.clone());
-        let r_p = solve(&mut be_p, &w0, &scfg);
+        let r_p = try_solve(&mut be_p, &w0, &scfg).expect("fig4 solve");
 
         // Effective unmixing on the raw (centered) data.
         let u_sph = matmul(&r_s.w, &sph.k);

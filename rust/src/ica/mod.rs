@@ -12,6 +12,8 @@ pub mod solver;
 pub use amari::amari_distance;
 pub use hessian::{BlockDiagHessian, HessianApprox};
 pub use monitor::{IterRecord, Trace};
+#[allow(deprecated)]
+pub use solver::solve;
 pub use solver::{
-    full_loss, relative_update, solve, Algorithm, InfomaxConfig, SolveResult, SolverConfig,
+    full_loss, relative_update, try_solve, Algorithm, InfomaxConfig, SolveResult, SolverConfig,
 };

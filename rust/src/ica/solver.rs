@@ -11,6 +11,7 @@ use super::lbfgs::{LbfgsMemory, Seed};
 use super::linesearch;
 use super::monitor::{IterRecord, Stopwatch, Trace};
 use crate::backend::{ComputeBackend, StatsLevel};
+use crate::error::IcaError;
 use crate::linalg::{matmul, Lu, Mat};
 
 /// Infomax hyper-parameters (EEGLab defaults, paper §2.3.2 / §3.2).
@@ -132,6 +133,35 @@ impl SolverConfig {
         self.max_time = secs;
         self
     }
+
+    /// Reject nonsensical configurations with a typed error: non-finite
+    /// or negative `tol`, non-positive `lambda_min`, an empty line-search
+    /// budget. (`tol` must be finite so fitted models serialize to valid
+    /// JSON.)
+    pub fn validate(&self) -> Result<(), IcaError> {
+        if !self.tol.is_finite() || self.tol < 0.0 {
+            return Err(IcaError::invalid_input(format!(
+                "tol must be finite and >= 0, got {}",
+                self.tol
+            )));
+        }
+        if self.lambda_min.is_nan() || self.lambda_min <= 0.0 {
+            return Err(IcaError::invalid_input(format!(
+                "lambda_min must be > 0, got {}",
+                self.lambda_min
+            )));
+        }
+        if self.ls_attempts == 0 {
+            return Err(IcaError::invalid_input("ls_attempts must be >= 1"));
+        }
+        if self.max_time.is_nan() || self.max_time <= 0.0 {
+            return Err(IcaError::invalid_input(format!(
+                "max_time must be > 0, got {}",
+                self.max_time
+            )));
+        }
+        Ok(())
+    }
 }
 
 /// Result of a solve.
@@ -171,16 +201,49 @@ pub fn relative_update(w: &Mat, p: &Mat, alpha: f64) -> Mat {
     matmul(&step, w)
 }
 
+/// Run the configured algorithm from `w0`, validating inputs first.
+///
+/// This is the `Result`-returning entry point the estimator API builds
+/// on. It rejects, with a typed [`IcaError`]:
+/// - a `w0` whose shape is not `N×N` for the backend's `N`,
+/// - non-finite entries in `w0`,
+/// - nonsensical configuration (negative/NaN `tol`, non-positive
+///   `lambda_min`, zero line-search budget).
+pub fn try_solve<B: ComputeBackend + ?Sized>(
+    backend: &mut B,
+    w0: &Mat,
+    cfg: &SolverConfig,
+) -> Result<SolveResult, IcaError> {
+    let n = backend.n();
+    if (w0.rows(), w0.cols()) != (n, n) {
+        return Err(IcaError::DimensionMismatch {
+            what: "initial unmixing matrix w0".into(),
+            expected: (n, n),
+            got: (w0.rows(), w0.cols()),
+        });
+    }
+    if !w0.as_slice().iter().all(|v| v.is_finite()) {
+        return Err(IcaError::NonFinite { what: "initial unmixing matrix w0".into() });
+    }
+    cfg.validate()?;
+    Ok(match cfg.algo {
+        Algorithm::Infomax(ic) => solve_infomax(backend, w0, cfg, ic),
+        _ => solve_full_batch(backend, w0, cfg),
+    })
+}
+
 /// Run the configured algorithm from `w0`.
+///
+/// Thin compatibility shim over [`try_solve`] that panics on invalid
+/// input. New code should use [`try_solve`] or the
+/// [`crate::estimator::Picard`] builder.
+#[deprecated(since = "0.2.0", note = "use try_solve (or the Picard estimator) instead")]
 pub fn solve<B: ComputeBackend + ?Sized>(
     backend: &mut B,
     w0: &Mat,
     cfg: &SolverConfig,
 ) -> SolveResult {
-    match cfg.algo {
-        Algorithm::Infomax(ic) => solve_infomax(backend, w0, cfg, ic),
-        _ => solve_full_batch(backend, w0, cfg),
-    }
+    try_solve(backend, w0, cfg).expect("ica::solve: invalid input")
 }
 
 /// Shared driver for GD / quasi-Newton / (P-)L-BFGS.
@@ -190,7 +253,7 @@ fn solve_full_batch<B: ComputeBackend + ?Sized>(
     cfg: &SolverConfig,
 ) -> SolveResult {
     let n = backend.n();
-    assert_eq!((w0.rows(), w0.cols()), (n, n));
+    debug_assert_eq!((w0.rows(), w0.cols()), (n, n));
 
     let level = match cfg.algo {
         Algorithm::GradientDescent { .. } => StatsLevel::Basic,
@@ -443,7 +506,7 @@ mod tests {
         let (mut be, _) = laplace_problem(8, 2000, 42);
         let cfg = SolverConfig::new(algo).with_tol(tol).with_max_iters(max_iters);
         let w0 = Mat::eye(8);
-        let res = solve(&mut be, &w0, &cfg);
+        let res = try_solve(&mut be, &w0, &cfg).unwrap();
         assert!(
             res.converged,
             "{} did not reach tol {tol}: last grad {:?}",
@@ -490,7 +553,7 @@ mod tests {
         let cfg = SolverConfig::new(Algorithm::GradientDescent { oracle_ls: true })
             .with_tol(0.0)
             .with_max_iters(15);
-        let res = solve(&mut be, &Mat::eye(5), &cfg);
+        let res = try_solve(&mut be, &Mat::eye(5), &cfg).unwrap();
         let losses: Vec<f64> = res.trace.records.iter().map(|r| r.loss).collect();
         for w in losses.windows(2) {
             assert!(w[1] <= w[0] + 1e-12, "loss increased: {} -> {}", w[0], w[1]);
@@ -506,7 +569,7 @@ mod tests {
         let cfg = SolverConfig::new(Algorithm::Infomax(ic))
             .with_tol(1e-10) // unreachable for SGD: it must plateau
             .with_max_iters(40);
-        let res = solve(&mut be, &Mat::eye(6), &cfg);
+        let res = try_solve(&mut be, &Mat::eye(6), &cfg).unwrap();
         let first = res.trace.records.first().unwrap().grad_inf;
         let last = res.trace.records.last().unwrap().grad_inf;
         assert!(last < first * 0.5, "no progress: {first} -> {last}");
@@ -523,7 +586,7 @@ mod tests {
         })
         .with_tol(1e-8)
         .with_max_iters(100);
-        let res = solve(&mut be, &Mat::eye(6), &cfg);
+        let res = try_solve(&mut be, &Mat::eye(6), &cfg).unwrap();
         assert!(res.converged);
         let p = matmul(&res.w, &a);
         let d = crate::ica::amari::amari_distance(&p);
@@ -536,7 +599,7 @@ mod tests {
         let cfg = SolverConfig::new(Algorithm::QuasiNewton { approx: HessianApprox::H1 })
             .with_tol(1e-8)
             .with_max_iters(50);
-        let res = solve(&mut be, &Mat::eye(4), &cfg);
+        let res = try_solve(&mut be, &Mat::eye(4), &cfg).unwrap();
         for w in res.trace.records.windows(2) {
             assert!(w[1].time >= w[0].time);
             assert!(w[1].iter > w[0].iter);
@@ -548,7 +611,7 @@ mod tests {
         let (mut be, _) = laplace_problem(3, 500, 9);
         let cfg = SolverConfig::new(Algorithm::GradientDescent { oracle_ls: false })
             .with_max_iters(0);
-        let res = solve(&mut be, &Mat::eye(3), &cfg);
+        let res = try_solve(&mut be, &Mat::eye(3), &cfg).unwrap();
         assert!(res.w.max_abs_diff(&Mat::eye(3)) < 1e-15);
         assert_eq!(res.iters, 0);
     }
@@ -559,16 +622,60 @@ mod tests {
         let cfg = SolverConfig::new(Algorithm::QuasiNewton { approx: HessianApprox::H1 })
             .with_tol(0.0)
             .with_max_iters(10);
-        let res = solve(&mut be, &Mat::eye(4), &cfg);
+        let res = try_solve(&mut be, &Mat::eye(4), &cfg).unwrap();
         assert_eq!(res.directions.len(), res.iters);
     }
 
     #[test]
     fn algorithm_ids_roundtrip() {
-        for id in Algorithm::paper_suite() {
+        // Full paper suite plus qn-h2 (parsable but not plotted).
+        for id in Algorithm::paper_suite().iter().copied().chain(["qn-h2"]) {
             let a = Algorithm::from_id(id).expect(id);
-            assert_eq!(&a.id(), id);
+            assert_eq!(a.id(), id);
         }
         assert!(Algorithm::from_id("nope").is_none());
+        assert!(Algorithm::from_id("").is_none());
+    }
+
+    #[test]
+    fn try_solve_rejects_malformed_input() {
+        let (mut be, _) = laplace_problem(4, 300, 21);
+        let cfg = SolverConfig::new(Algorithm::GradientDescent { oracle_ls: false });
+        // Wrong w0 shape.
+        assert!(matches!(
+            try_solve(&mut be, &Mat::eye(3), &cfg),
+            Err(IcaError::DimensionMismatch { .. })
+        ));
+        // Non-finite w0.
+        let mut bad = Mat::eye(4);
+        bad[(0, 0)] = f64::NAN;
+        assert!(matches!(
+            try_solve(&mut be, &bad, &cfg),
+            Err(IcaError::NonFinite { .. })
+        ));
+        // Bad tolerance.
+        let bad_cfg = SolverConfig::new(cfg.algo).with_tol(-1.0);
+        assert!(matches!(
+            try_solve(&mut be, &Mat::eye(4), &bad_cfg),
+            Err(IcaError::InvalidInput { .. })
+        ));
+        // Bad lambda_min.
+        let mut bad_cfg = SolverConfig::new(cfg.algo);
+        bad_cfg.lambda_min = 0.0;
+        assert!(matches!(
+            try_solve(&mut be, &Mat::eye(4), &bad_cfg),
+            Err(IcaError::InvalidInput { .. })
+        ));
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_solve_shim_still_works() {
+        let (mut be, _) = laplace_problem(4, 400, 22);
+        let cfg = SolverConfig::new(Algorithm::QuasiNewton { approx: HessianApprox::H1 })
+            .with_tol(1e-6)
+            .with_max_iters(60);
+        let res = solve(&mut be, &Mat::eye(4), &cfg);
+        assert!(res.converged);
     }
 }

@@ -1,16 +1,61 @@
-//! faster-ica: three-layer reproduction of "Faster ICA by preconditioning
-//! with Hessian approximations" (Ablin, Cardoso & Gramfort, 2017).
+//! faster-ica: the Picard family of preconditioned ICA solvers from
+//! "Faster ICA by preconditioning with Hessian approximations"
+//! (Ablin, Cardoso & Gramfort, 2017), packaged as a production estimator.
 //!
-//! - **Layer 3 (this crate)**: the paper's optimization algorithms —
-//!   relative-gradient ICA, block-diagonal Hessian approximations,
-//!   preconditioned L-BFGS — plus the experiment coordinator and CLI.
-//! - **Layer 2/1 (python/compile)**: JAX model + fused Pallas kernel,
-//!   AOT-lowered once to HLO-text artifacts.
-//! - **Runtime**: PJRT CPU client executing the artifacts from the Rust
-//!   hot path (Python is never on the request path).
+//! # Front door: the `Picard` estimator
+//!
+//! [`estimator::Picard`] is the supported entry point: a builder that
+//! runs centering, whitening and the chosen solver end-to-end and hands
+//! back a fitted, serializable [`estimator::IcaModel`]:
+//!
+//! ```
+//! use faster_ica::estimator::Picard;
+//! use faster_ica::signal;
+//!
+//! // A small synthetic mixture: 4 Laplace sources, 1500 samples.
+//! let data = signal::experiment_a(4, 1500, 7);
+//!
+//! let model = Picard::new()
+//!     .tol(1e-8)
+//!     .max_iters(100)
+//!     .fit(&data.x)
+//!     .expect("fit");
+//! assert!(model.fit_info().converged);
+//!
+//! // Sources for any batch drawn from the same mixture:
+//! let sources = model.transform(&data.x).expect("transform");
+//! assert_eq!(sources.rows(), 4);
+//!
+//! // The fitted artifact round-trips through JSON (fail-closed parsing).
+//! let json = model.to_json_string().expect("serialize");
+//! let back = faster_ica::estimator::IcaModel::from_json_str(&json).expect("load");
+//! assert!(back.unmixing_matrix().max_abs_diff(&model.unmixing_matrix()) == 0.0);
+//! ```
+//!
+//! Every user-reachable failure (rank-deficient data, shape mismatches,
+//! non-finite inputs, malformed model files) is a typed
+//! [`error::IcaError`], never a panic.
+//!
+//! # Layers
+//!
+//! - **Estimator** ([`estimator`]): `Picard` builder → [`preprocessing`]
+//!   (centering + whitening) → [`ica`] solvers → `IcaModel` artifact.
+//! - **Algorithms** ([`ica`]): the paper's optimization suite —
+//!   relative-gradient descent, Infomax SGD, the elementary quasi-Newton
+//!   method (Alg. 2) and (preconditioned) L-BFGS (Alg. 3) over the
+//!   block-diagonal Hessian approximations H̃¹/H̃² — on a pure-Rust
+//!   [`linalg`] substrate.
+//! - **Backends** ([`backend`], [`runtime`]): the Θ(N²T) per-iteration
+//!   statistics run on the always-available native backend or, behind the
+//!   `pjrt` cargo feature, on AOT-compiled JAX/Pallas artifacts through a
+//!   PJRT CPU client (Python is never on the request path).
+//! - **Reproduction** ([`experiments`], [`coordinator`]): the paper's
+//!   figure pipeline, driven by the `fica experiment` subcommand.
 pub mod backend;
 pub mod cli;
 pub mod coordinator;
+pub mod error;
+pub mod estimator;
 pub mod experiments;
 pub mod preprocessing;
 pub mod signal;
@@ -21,3 +66,6 @@ pub mod rng;
 pub mod testkit;
 pub mod runtime;
 pub mod util;
+
+pub use error::IcaError;
+pub use estimator::{BackendChoice, IcaModel, Picard};

@@ -1,11 +1,16 @@
 //! `fica` — the Layer-3 leader binary: CLI over the faster-ica library.
+//!
+//! The estimator front door is `fica fit` (train + save an
+//! [`IcaModel`]) and `fica apply` (run a saved model on new data);
+//! `fica experiment` regenerates the paper's figures.
 
 use faster_ica::backend::{ComputeBackend, NativeBackend};
-use faster_ica::cli::{Args, USAGE};
+use faster_ica::cli::{Args, SolveFlags, USAGE};
+use faster_ica::estimator::IcaModel;
 use faster_ica::experiments::{self, ExperimentId};
-use faster_ica::ica::{solve, Algorithm, SolverConfig};
 use faster_ica::linalg::Mat;
-use faster_ica::runtime::{default_artifact_dir, Engine, XlaBackend};
+use faster_ica::runtime::{default_artifact_dir, Engine, Registry, XlaBackend};
+use faster_ica::util::{read_matrix_json, write_matrix_json};
 use std::rc::Rc;
 
 fn main() {
@@ -23,7 +28,15 @@ fn main() {
             0
         }
         "info" => cmd_info(),
-        "run" => cmd_run(&args),
+        "fit" => cmd_fit(&args, false),
+        "apply" => cmd_apply(&args),
+        "run" => {
+            eprintln!(
+                "note: `fica run` is deprecated; use `fica fit` \
+                 (same flags, plus --input/--model-out/--whitener)"
+            );
+            cmd_fit(&args, true)
+        }
         "experiment" => cmd_experiment(&args),
         "artifacts-check" => cmd_artifacts_check(),
         other => {
@@ -37,10 +50,11 @@ fn main() {
 fn cmd_info() -> i32 {
     println!("faster-ica {}", env!("CARGO_PKG_VERSION"));
     println!("paper: Ablin, Cardoso & Gramfort (2017), arXiv:1706.08171");
-    println!("artifact dir: {}", default_artifact_dir().display());
-    match Engine::new(default_artifact_dir()) {
+    let dir = default_artifact_dir();
+    println!("artifact dir: {}", dir.display());
+    match Engine::new(&dir) {
         Ok(engine) => {
-            println!("PJRT platform: {}", engine.client().platform_name());
+            println!("PJRT platform: {}", engine.platform_name());
             println!("artifacts: {} registered", engine.registry().len());
             for e in engine.registry().iter() {
                 println!(
@@ -52,91 +66,181 @@ fn cmd_info() -> i32 {
                 );
             }
         }
-        Err(e) => println!("runtime: unavailable ({e})"),
+        Err(e) => {
+            println!("runtime: unavailable ({e})");
+            if let Ok(reg) = Registry::load(&dir) {
+                println!(
+                    "artifacts on disk: {} registered (served only once the \
+                     runtime is available)",
+                    reg.len()
+                );
+            }
+        }
     }
     0
 }
 
-fn cmd_run(args: &Args) -> i32 {
-    let algo_id = args.get_or("algo", "plbfgs-h2");
-    let Some(algo) = Algorithm::from_id(&algo_id) else {
-        eprintln!("unknown --algo {algo_id}");
-        return 2;
-    };
-    let data_id = args.get_or("data", "fig2a");
-    let Some(exp) = ExperimentId::from_str(&data_id) else {
-        eprintln!("unknown --data {data_id}");
-        return 2;
-    };
-    let seed: u64 = args.get_parse("seed", 0).unwrap_or(0);
-    let scale: f64 = args.get_parse("scale", 0.25).unwrap_or(0.25);
-    let tol: f64 = args.get_parse("tol", 1e-8).unwrap_or(1e-8);
-    let max_iters: usize = args.get_parse("max-iters", 200).unwrap_or(200);
-    let backend_kind = args.get_or("backend", "native");
-
-    println!(
-        "dataset {data_id} (seed {seed}, scale {scale}) + algorithm {algo_id} [{backend_kind}]"
-    );
-    let x = experiments::defs::build_dataset(exp, seed, scale);
-    let (n, t) = (x.rows(), x.cols());
-    println!("whitened data: N={n}, T={t}");
-    let cfg = SolverConfig::new(algo).with_tol(tol).with_max_iters(max_iters).with_seed(seed);
-    let w0 = Mat::eye(n);
-
-    let result = match backend_kind.as_str() {
-        "native" => {
-            let mut be = NativeBackend::new(x);
-            solve(&mut be, &w0, &cfg)
-        }
-        "xla" => {
-            let engine = match Engine::new(default_artifact_dir()) {
-                Ok(e) => Rc::new(e),
-                Err(e) => {
-                    eprintln!("cannot start runtime: {e}");
-                    return 1;
-                }
-            };
-            let mut be = match XlaBackend::new(engine, x) {
-                Ok(b) => b,
-                Err(e) => {
-                    eprintln!("{e}");
-                    return 1;
-                }
-            };
-            solve(&mut be, &w0, &cfg)
-        }
-        other => {
-            eprintln!("unknown --backend {other}");
+/// `fit` and the deprecated `run` share this path: both decode
+/// [`SolveFlags`], build a [`faster_ica::estimator::Picard`], fit, and
+/// report convergence. `fit` additionally reads/writes files.
+fn cmd_fit(args: &Args, legacy_run: bool) -> i32 {
+    let flags = match SolveFlags::from_args(args) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
             return 2;
         }
     };
-
-    for r in &result.trace.records {
-        println!(
-            "iter {:>4}  t={:>9.4}s  |G|inf = {:>12.5e}  loss = {:.8}",
-            r.iter, r.time, r.grad_inf, r.loss
-        );
+    let (x, source) = if let Some(path) = args.get("input") {
+        match read_matrix_json(path) {
+            Ok(m) => (m, path.to_string()),
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        }
+    } else {
+        let data_id = args.get_or("data", "fig2a");
+        let Some(exp) = ExperimentId::from_str(&data_id) else {
+            eprintln!("unknown --data {data_id}");
+            return 2;
+        };
+        if flags.scale.is_nan() || flags.scale <= 0.0 || flags.scale > 1.0 {
+            eprintln!("--scale must be in (0, 1], got {}", flags.scale);
+            return 2;
+        }
+        // Raw (unwhitened) data: fit owns centering + whitening, so the
+        // --whitener flag acts on the actual dataset.
+        (
+            experiments::defs::build_raw_dataset(exp, flags.seed, flags.scale),
+            format!("synthetic:{data_id}"),
+        )
+    };
+    println!(
+        "fit: {} signals x {} samples from {source} | algo {} | whitener {} | backend {}",
+        x.rows(),
+        x.cols(),
+        flags.algo.id(),
+        flags.whitener.id(),
+        flags.backend.id()
+    );
+    let model = match flags.picard().fit(&x) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("fit failed: {e}");
+            return 1;
+        }
+    };
+    let info = model.fit_info();
+    if let Some(reason) = &info.backend_fallback {
+        eprintln!("note: xla unavailable, fell back to native: {reason}");
+    }
+    if args.has("trace") || legacy_run {
+        for r in &info.trace.records {
+            println!(
+                "iter {:>4}  t={:>9.4}s  |G|inf = {:>12.5e}  loss = {:.8}",
+                r.iter, r.time, r.grad_inf, r.loss
+            );
+        }
     }
     println!(
-        "{} after {} iterations ({} line-search fallbacks)",
-        if result.converged { "converged" } else { "stopped" },
-        result.iters,
-        result.gradient_fallbacks
+        "{} after {} iterations (final |G|inf = {:.3e}, {} line-search fallbacks, \
+         backend {})",
+        if info.converged { "converged" } else { "stopped" },
+        info.iters,
+        info.final_grad_inf,
+        info.gradient_fallbacks,
+        info.backend
     );
-    if result.converged {
+    if let Some(out) = args.get("model-out") {
+        match model.save(out) {
+            Ok(()) => println!("model saved to {out}"),
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        }
+    } else if !legacy_run {
+        println!("(no --model-out: model discarded)");
+    }
+    if info.converged {
         0
     } else {
         1
     }
 }
 
+fn cmd_apply(args: &Args) -> i32 {
+    let Some(model_path) = args.get("model") else {
+        eprintln!("--model is required\n\n{USAGE}");
+        return 2;
+    };
+    let Some(input) = args.get("input") else {
+        eprintln!("--input is required\n\n{USAGE}");
+        return 2;
+    };
+    let Some(output) = args.get("output") else {
+        eprintln!("--output is required\n\n{USAGE}");
+        return 2;
+    };
+    let model = match IcaModel::load(model_path) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let x = match read_matrix_json(input) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let result = if args.has("inverse") {
+        model.inverse_transform(&x)
+    } else {
+        model.transform(&x)
+    };
+    let y = match result {
+        Ok(y) => y,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    if let Err(e) = write_matrix_json(output, &y) {
+        eprintln!("error: {e}");
+        return 1;
+    }
+    println!(
+        "{}: wrote {} x {} matrix to {output}",
+        if args.has("inverse") { "inverse_transform" } else { "transform" },
+        y.rows(),
+        y.cols()
+    );
+    0
+}
+
 fn cmd_experiment(args: &Args) -> i32 {
     let id = args.get_or("id", "");
-    let seeds: usize = args.get_parse("seeds", 10).unwrap_or(10);
+    let seeds: usize = match args.get_parse("seeds", 10) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
     let scale: f64 = if args.has("full") {
         1.0
     } else {
-        args.get_parse("scale", 0.25).unwrap_or(0.25)
+        match args.get_parse("scale", 0.25) {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 2;
+            }
+        }
     };
     let run_one = |name: &str| -> std::io::Result<()> {
         match ExperimentId::from_str(name) {
@@ -194,8 +298,8 @@ fn cmd_artifacts_check() -> i32 {
     let keys: Vec<_> = engine.registry().iter().map(|e| e.key).collect();
     let mut failed = 0;
     for key in keys {
-        match engine.executable(key) {
-            Ok(_) => println!("ok   {:>12} N={:<4} T={}", key.graph.name(), key.n, key.t),
+        match engine.precompile(key) {
+            Ok(()) => println!("ok   {:>12} N={:<4} T={}", key.graph.name(), key.n, key.t),
             Err(e) => {
                 println!("FAIL {:>12} N={:<4} T={}: {e}", key.graph.name(), key.n, key.t);
                 failed += 1;

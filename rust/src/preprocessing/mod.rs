@@ -11,6 +11,7 @@
 //!   i.e. ZCA in modern terminology — an orthogonal rotation of the
 //!   sphering whitener, which is all Fig. 4 needs).
 
+use crate::error::IcaError;
 use crate::linalg::{eigh, matmul, Mat};
 
 /// Which whitening transform to apply.
@@ -22,7 +23,27 @@ pub enum Whitener {
     Pca,
 }
 
+impl Whitener {
+    /// Short stable identifier used in the CLI and serialized models.
+    pub fn id(self) -> &'static str {
+        match self {
+            Whitener::Sphering => "sphering",
+            Whitener::Pca => "pca",
+        }
+    }
+
+    /// Parse a stable identifier back into a whitener.
+    pub fn from_id(s: &str) -> Option<Whitener> {
+        Some(match s {
+            "sphering" => Whitener::Sphering,
+            "pca" => Whitener::Pca,
+            _ => return None,
+        })
+    }
+}
+
 /// Result of preprocessing: whitened data plus the transform used.
+#[derive(Clone, Debug)]
 pub struct Preprocessed {
     /// Whitened data, `cov = I`.
     pub x: Mat,
@@ -34,16 +55,31 @@ pub struct Preprocessed {
 
 /// Center rows and whiten with the requested transform.
 ///
-/// Panics if the covariance is singular (a row is constant or duplicated)
-/// — `eps` guards numerical zero eigenvalues.
-pub fn preprocess(x_raw: &Mat, whitener: Whitener) -> Preprocessed {
+/// Fails with [`IcaError::SingularCovariance`] when the covariance is
+/// (numerically) rank-deficient — a constant or duplicated row — with
+/// `eps` guarding numerical zero eigenvalues; with [`IcaError::NonFinite`]
+/// on NaN/∞ entries; and with [`IcaError::InvalidInput`] when the matrix
+/// is too small to whiten.
+pub fn preprocess(x_raw: &Mat, whitener: Whitener) -> Result<Preprocessed, IcaError> {
+    if x_raw.rows() == 0 || x_raw.cols() < 2 {
+        return Err(IcaError::invalid_input(format!(
+            "data must have at least 1 row and 2 columns, got {}x{}",
+            x_raw.rows(),
+            x_raw.cols()
+        )));
+    }
+    if !x_raw.as_slice().iter().all(|v| v.is_finite()) {
+        return Err(IcaError::NonFinite { what: "input data".into() });
+    }
     let mut x = x_raw.clone();
     let means = x.center_rows();
     let c = x.row_covariance();
     let e = eigh(&c);
     let eps = 1e-12 * e.values.last().copied().unwrap_or(1.0).max(1e-300);
-    for &v in &e.values {
-        assert!(v > eps, "singular covariance: eigenvalue {v} (rank-deficient data)");
+    for (index, &v) in e.values.iter().enumerate() {
+        if v <= eps {
+            return Err(IcaError::SingularCovariance { eigenvalue: v, index });
+        }
     }
     let inv_sqrt: Vec<f64> = e.values.iter().map(|&v| 1.0 / v.sqrt()).collect();
     let vt = e.vectors.transpose();
@@ -71,7 +107,7 @@ pub fn preprocess(x_raw: &Mat, whitener: Whitener) -> Preprocessed {
         }
     };
     let xw = matmul(&k, &x);
-    Preprocessed { x: xw, k, means }
+    Ok(Preprocessed { x: xw, k, means })
 }
 
 #[cfg(test)]
@@ -103,7 +139,7 @@ mod tests {
     #[test]
     fn sphering_whitens() {
         let x = correlated_data(6, 5000, 1);
-        let p = preprocess(&x, Whitener::Sphering);
+        let p = preprocess(&x, Whitener::Sphering).unwrap();
         assert_white(&p.x, 1e-10);
         for m in p.x.row_means() {
             assert!(m.abs() < 1e-10);
@@ -113,22 +149,22 @@ mod tests {
     #[test]
     fn pca_whitens() {
         let x = correlated_data(6, 5000, 2);
-        let p = preprocess(&x, Whitener::Pca);
+        let p = preprocess(&x, Whitener::Pca).unwrap();
         assert_white(&p.x, 1e-10);
     }
 
     #[test]
     fn pca_whitener_is_symmetric() {
         let x = correlated_data(5, 3000, 3);
-        let p = preprocess(&x, Whitener::Pca);
+        let p = preprocess(&x, Whitener::Pca).unwrap();
         assert!(p.k.max_abs_diff(&p.k.transpose()) < 1e-10);
     }
 
     #[test]
     fn whiteners_differ_by_an_orthogonal_rotation() {
         let x = correlated_data(5, 4000, 4);
-        let s = preprocess(&x, Whitener::Sphering);
-        let p = preprocess(&x, Whitener::Pca);
+        let s = preprocess(&x, Whitener::Sphering).unwrap();
+        let p = preprocess(&x, Whitener::Pca).unwrap();
         // R = K_pca · K_sph⁻¹ must be orthogonal.
         let k_sph_inv = crate::linalg::Lu::new(&s.k).unwrap().inverse();
         let r = matmul(&p.k, &k_sph_inv);
@@ -139,22 +175,59 @@ mod tests {
     #[test]
     fn transform_reproduces_whitened_data() {
         let x = correlated_data(4, 2000, 5);
-        let p = preprocess(&x, Whitener::Sphering);
+        let p = preprocess(&x, Whitener::Sphering).unwrap();
         let mut centered = x.clone();
         centered.center_rows();
         let again = matmul(&p.k, &centered);
         assert!(again.max_abs_diff(&p.x) < 1e-12);
     }
 
+    /// Regression: rank-deficient data (a duplicated row) must surface as
+    /// a typed error carrying the offending eigenvalue, not a panic.
     #[test]
-    #[should_panic(expected = "singular covariance")]
-    fn duplicate_rows_detected() {
+    fn duplicate_rows_yield_singular_covariance_error() {
         let mut rng = Pcg64::new(6);
         let norm = Normal::standard();
         let row: Vec<f64> = norm.sample_n(&mut rng, 100);
         let mut x = Mat::zeros(2, 100);
         x.row_mut(0).copy_from_slice(&row);
         x.row_mut(1).copy_from_slice(&row);
-        preprocess(&x, Whitener::Sphering);
+        match preprocess(&x, Whitener::Sphering) {
+            Err(crate::error::IcaError::SingularCovariance { eigenvalue, index }) => {
+                assert!(eigenvalue.abs() < 1e-8, "eigenvalue {eigenvalue}");
+                assert_eq!(index, 0, "smallest eigenvalue first");
+            }
+            other => panic!("expected SingularCovariance, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn non_finite_data_rejected() {
+        let mut x = correlated_data(3, 50, 8);
+        x[(1, 7)] = f64::NAN;
+        assert!(matches!(
+            preprocess(&x, Whitener::Sphering),
+            Err(crate::error::IcaError::NonFinite { .. })
+        ));
+    }
+
+    #[test]
+    fn degenerate_shapes_rejected() {
+        assert!(matches!(
+            preprocess(&Mat::zeros(0, 10), Whitener::Sphering),
+            Err(crate::error::IcaError::InvalidInput { .. })
+        ));
+        assert!(matches!(
+            preprocess(&Mat::zeros(3, 1), Whitener::Pca),
+            Err(crate::error::IcaError::InvalidInput { .. })
+        ));
+    }
+
+    #[test]
+    fn whitener_ids_roundtrip() {
+        for w in [Whitener::Sphering, Whitener::Pca] {
+            assert_eq!(Whitener::from_id(w.id()), Some(w));
+        }
+        assert_eq!(Whitener::from_id("zca"), None);
     }
 }

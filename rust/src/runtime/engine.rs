@@ -1,6 +1,10 @@
 //! PJRT execution engine: loads HLO-text artifacts, compiles them once on
 //! the CPU PJRT client, and executes them from the Layer-3 hot path.
 //!
+//! Compiled only with the `pjrt` cargo feature (the `xla` bindings crate
+//! is not in the offline registry); [`super::stub`] provides the same API
+//! as a fail-fast stand-in otherwise.
+//!
 //! Design points (see /opt/xla-example/README.md for the gotchas):
 //! - HLO **text** → `HloModuleProto::from_text_file` → `XlaComputation`
 //!   → `client.compile`. Text is the interchange format; serialized
@@ -11,6 +15,7 @@
 //! - Multi-output graphs return a tuple literal; single outputs are bare.
 
 use super::registry::{ArtifactKey, Registry};
+use crate::error::IcaError;
 use crate::linalg::Mat;
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -26,10 +31,10 @@ pub struct Engine {
 
 impl Engine {
     /// Create an engine over the artifact directory (`artifacts/`).
-    pub fn new(artifact_dir: impl AsRef<Path>) -> anyhow::Result<Engine> {
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Engine, IcaError> {
         let registry = Registry::load(artifact_dir)?;
         let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e}"))?;
+            .map_err(|e| IcaError::runtime(format!("PJRT CPU client: {e}")))?;
         Ok(Engine { client, registry, cache: RefCell::new(HashMap::new()) })
     }
 
@@ -41,32 +46,45 @@ impl Engine {
         &self.client
     }
 
+    /// Name of the PJRT platform serving this engine.
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
     /// Fetch (compiling on first use) the executable for `key`.
-    pub fn executable(&self, key: ArtifactKey) -> anyhow::Result<Rc<xla::PjRtLoadedExecutable>> {
+    pub fn executable(
+        &self,
+        key: ArtifactKey,
+    ) -> Result<Rc<xla::PjRtLoadedExecutable>, IcaError> {
         if let Some(exe) = self.cache.borrow().get(&key) {
             return Ok(exe.clone());
         }
         let entry = self.registry.get(key).ok_or_else(|| {
-            anyhow::anyhow!(
+            IcaError::runtime(format!(
                 "no artifact for {} at N={}, T={}; add the shape to \
                  python/compile/shapes.json and re-run `make artifacts`",
                 key.graph.name(),
                 key.n,
                 key.t
-            )
+            ))
         })?;
-        let proto = xla::HloModuleProto::from_text_file(
-            entry.path.to_str().expect("utf-8 path"),
-        )
-        .map_err(|e| anyhow::anyhow!("parse {}: {e}", entry.path.display()))?;
+        let path_str = entry.path.to_str().ok_or_else(|| {
+            IcaError::runtime(format!("non-utf8 artifact path {}", entry.path.display()))
+        })?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(|e| IcaError::runtime(format!("parse {}: {e}", entry.path.display())))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Rc::new(
-            self.client
-                .compile(&comp)
-                .map_err(|e| anyhow::anyhow!("compile {}: {e}", entry.path.display()))?,
-        );
+        let exe = Rc::new(self.client.compile(&comp).map_err(|e| {
+            IcaError::runtime(format!("compile {}: {e}", entry.path.display()))
+        })?);
         self.cache.borrow_mut().insert(key, exe.clone());
         Ok(exe)
+    }
+
+    /// Compile `key` (if not cached) and discard the handle — the
+    /// feature-independent way to health-check an artifact.
+    pub fn precompile(&self, key: ArtifactKey) -> Result<(), IcaError> {
+        self.executable(key).map(|_| ())
     }
 
     /// Number of executables compiled so far (diagnostics).
@@ -75,10 +93,10 @@ impl Engine {
     }
 
     /// Upload a host matrix as a device buffer (row-major f64).
-    pub fn upload(&self, m: &Mat) -> anyhow::Result<xla::PjRtBuffer> {
+    pub fn upload(&self, m: &Mat) -> Result<xla::PjRtBuffer, IcaError> {
         self.client
             .buffer_from_host_buffer::<f64>(m.as_slice(), &[m.rows(), m.cols()], None)
-            .map_err(|e| anyhow::anyhow!("upload {}x{}: {e}", m.rows(), m.cols()))
+            .map_err(|e| IcaError::runtime(format!("upload {}x{}: {e}", m.rows(), m.cols())))
     }
 
     /// Execute `key` on the given device buffers and return the output
@@ -87,38 +105,46 @@ impl Engine {
         &self,
         key: ArtifactKey,
         args: &[&xla::PjRtBuffer],
-    ) -> anyhow::Result<Vec<xla::Literal>> {
+    ) -> Result<Vec<xla::Literal>, IcaError> {
         let exe = self.executable(key)?;
         let outs = exe
             .execute_b(args)
-            .map_err(|e| anyhow::anyhow!("execute {}: {e}", key.graph.name()))?;
+            .map_err(|e| IcaError::runtime(format!("execute {}: {e}", key.graph.name())))?;
         let lit = outs[0][0]
             .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetch result: {e}"))?;
+            .map_err(|e| IcaError::runtime(format!("fetch result: {e}")))?;
         // Multi-output graphs produce a tuple root; single outputs don't.
         match lit.shape() {
             Ok(xla::Shape::Tuple(_)) => lit
                 .to_tuple()
-                .map_err(|e| anyhow::anyhow!("untuple: {e}")),
+                .map_err(|e| IcaError::runtime(format!("untuple: {e}"))),
             _ => Ok(vec![lit]),
         }
     }
 }
 
 /// Convert a literal back into a [`Mat`] (expects f64, row-major).
-pub fn literal_to_mat(lit: &xla::Literal, rows: usize, cols: usize) -> anyhow::Result<Mat> {
-    let v = lit.to_vec::<f64>().map_err(|e| anyhow::anyhow!("literal to_vec: {e}"))?;
-    anyhow::ensure!(v.len() == rows * cols, "literal size {} != {rows}x{cols}", v.len());
+pub fn literal_to_mat(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Mat, IcaError> {
+    let v = lit
+        .to_vec::<f64>()
+        .map_err(|e| IcaError::runtime(format!("literal to_vec: {e}")))?;
+    if v.len() != rows * cols {
+        return Err(IcaError::runtime(format!(
+            "literal size {} != {rows}x{cols}",
+            v.len()
+        )));
+    }
     Ok(Mat::from_vec(rows, cols, v))
 }
 
 /// Convert a literal into a Vec<f64>.
-pub fn literal_to_vec(lit: &xla::Literal) -> anyhow::Result<Vec<f64>> {
-    lit.to_vec::<f64>().map_err(|e| anyhow::anyhow!("literal to_vec: {e}"))
+pub fn literal_to_vec(lit: &xla::Literal) -> Result<Vec<f64>, IcaError> {
+    lit.to_vec::<f64>()
+        .map_err(|e| IcaError::runtime(format!("literal to_vec: {e}")))
 }
 
 /// Convert a scalar literal to f64.
-pub fn literal_to_scalar(lit: &xla::Literal) -> anyhow::Result<f64> {
+pub fn literal_to_scalar(lit: &xla::Literal) -> Result<f64, IcaError> {
     lit.get_first_element::<f64>()
-        .map_err(|e| anyhow::anyhow!("literal scalar: {e}"))
+        .map_err(|e| IcaError::runtime(format!("literal scalar: {e}")))
 }

@@ -3,13 +3,28 @@
 //! This is the layer that makes the Rust binary self-contained after
 //! `make artifacts`: it loads the HLO-text artifacts Layer 2 exported and
 //! executes them on the CPU PJRT client from the solver hot path.
+//!
+//! The PJRT pieces need the external `xla` bindings crate, which the
+//! offline registry does not carry, so they sit behind the `pjrt` cargo
+//! feature. Without it, [`Engine`] and [`XlaBackend`] are fail-fast stubs
+//! whose constructors return [`crate::error::IcaError::Runtime`] — every
+//! caller (CLI `--backend xla`, `BackendChoice::Auto`, tests) degrades to
+//! the native backend.
 
+#[cfg(feature = "pjrt")]
 mod engine;
 pub mod registry;
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+#[cfg(feature = "pjrt")]
 mod xla_backend;
 
+#[cfg(feature = "pjrt")]
 pub use engine::{literal_to_mat, literal_to_scalar, literal_to_vec, Engine};
 pub use registry::{ArtifactKey, Graph, Registry};
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{Engine, XlaBackend};
+#[cfg(feature = "pjrt")]
 pub use xla_backend::XlaBackend;
 
 use std::path::PathBuf;

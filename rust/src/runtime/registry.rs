@@ -1,6 +1,7 @@
 //! Artifact registry: discovers the AOT-compiled HLO artifacts that
 //! `python -m compile.aot` emitted (manifest.json + *.hlo.txt).
 
+use crate::error::IcaError;
 use crate::util::Json;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -63,37 +64,47 @@ pub struct Registry {
 impl Registry {
     /// Load `<dir>/manifest.json`. Fails if the manifest is missing or
     /// references files that do not exist.
-    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Registry> {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Registry, IcaError> {
         let dir = dir.as_ref().to_path_buf();
         let manifest_path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
-            anyhow::anyhow!(
+            IcaError::runtime(format!(
                 "cannot read {} ({e}); run `make artifacts` first",
                 manifest_path.display()
-            )
+            ))
         })?;
-        let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("bad manifest: {e}"))?;
+        let json = Json::parse(&text)
+            .map_err(|e| IcaError::runtime(format!("bad manifest: {e}")))?;
         let dtype = json.get("dtype").and_then(|d| d.as_str()).unwrap_or("");
-        anyhow::ensure!(dtype == "f64", "manifest dtype {dtype:?}, expected f64");
+        if dtype != "f64" {
+            return Err(IcaError::runtime(format!(
+                "manifest dtype {dtype:?}, expected f64"
+            )));
+        }
         let mut entries = BTreeMap::new();
         for a in json
             .get("artifacts")
             .and_then(|a| a.as_arr())
-            .ok_or_else(|| anyhow::anyhow!("manifest lacks artifacts[]"))?
+            .ok_or_else(|| IcaError::runtime("manifest lacks artifacts[]"))?
         {
             let graph = a
                 .get("graph")
                 .and_then(|g| g.as_str())
                 .and_then(Graph::from_name)
-                .ok_or_else(|| anyhow::anyhow!("bad graph in manifest"))?;
+                .ok_or_else(|| IcaError::runtime("bad graph in manifest"))?;
             let n = a.get("n").and_then(|v| v.as_usize()).unwrap_or(0);
             let t = a.get("t").and_then(|v| v.as_usize()).unwrap_or(0);
             let file = a
                 .get("file")
                 .and_then(|f| f.as_str())
-                .ok_or_else(|| anyhow::anyhow!("artifact without file"))?;
+                .ok_or_else(|| IcaError::runtime("artifact without file"))?;
             let path = dir.join(file);
-            anyhow::ensure!(path.exists(), "missing artifact file {}", path.display());
+            if !path.exists() {
+                return Err(IcaError::runtime(format!(
+                    "missing artifact file {}",
+                    path.display()
+                )));
+            }
             let key = ArtifactKey { graph, n, t };
             let tag =
                 a.get("tag").and_then(|t| t.as_str()).unwrap_or("").to_string();

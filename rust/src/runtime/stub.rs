@@ -1,0 +1,95 @@
+//! Fail-fast stand-ins for the PJRT engine when the `pjrt` cargo feature
+//! is disabled (the `xla` bindings crate is not in the offline registry).
+//!
+//! [`Engine::new`] always returns [`IcaError::Runtime`], so every caller
+//! that probes for the XLA runtime — `BackendChoice::Auto`, the CLI's
+//! `--backend xla`, the backend integration tests — takes its native
+//! fallback path cleanly. The types are uninhabited (they carry
+//! [`std::convert::Infallible`]), so the remaining methods can never be
+//! reached at runtime and carry no panics.
+
+use super::registry::ArtifactKey;
+use crate::backend::{ComputeBackend, IcaStats, StatsLevel};
+use crate::error::IcaError;
+use crate::linalg::Mat;
+use crate::runtime::Registry;
+use std::convert::Infallible;
+use std::path::Path;
+use std::rc::Rc;
+
+fn unavailable() -> IcaError {
+    IcaError::runtime(
+        "PJRT runtime not built: enable the `pjrt` cargo feature (requires the \
+         external `xla` bindings crate); use the native backend, or `auto` \
+         to fall back automatically",
+    )
+}
+
+/// Stub engine: construction always fails, so no instance ever exists.
+pub struct Engine {
+    never: Infallible,
+}
+
+impl Engine {
+    /// Always fails with [`IcaError::Runtime`] in `pjrt`-less builds.
+    pub fn new(_artifact_dir: impl AsRef<Path>) -> Result<Engine, IcaError> {
+        Err(unavailable())
+    }
+
+    pub fn registry(&self) -> &Registry {
+        match self.never {}
+    }
+
+    /// Name of the PJRT platform serving this engine.
+    pub fn platform_name(&self) -> String {
+        match self.never {}
+    }
+
+    /// Compile `key` (if not cached) and discard the handle.
+    pub fn precompile(&self, _key: ArtifactKey) -> Result<(), IcaError> {
+        match self.never {}
+    }
+
+    /// Number of executables compiled so far (diagnostics).
+    pub fn compiled_count(&self) -> usize {
+        match self.never {}
+    }
+}
+
+/// Stub XLA backend: construction always fails.
+pub struct XlaBackend {
+    never: Infallible,
+}
+
+impl XlaBackend {
+    /// Always fails with [`IcaError::Runtime`] in `pjrt`-less builds.
+    pub fn new(_engine: Rc<Engine>, _x: Mat) -> Result<XlaBackend, IcaError> {
+        Err(unavailable())
+    }
+}
+
+impl ComputeBackend for XlaBackend {
+    fn n(&self) -> usize {
+        match self.never {}
+    }
+
+    fn t(&self) -> usize {
+        match self.never {}
+    }
+
+    fn stats(&mut self, _w: &Mat, _level: StatsLevel) -> IcaStats {
+        match self.never {}
+    }
+
+    fn loss_data(&mut self, _w: &Mat) -> f64 {
+        match self.never {}
+    }
+
+    fn grad_batch(&mut self, _w: &Mat, _lo: usize, _hi: usize) -> Mat {
+        match self.never {}
+    }
+
+    fn name(&self) -> &'static str {
+        match self.never {}
+    }
+}

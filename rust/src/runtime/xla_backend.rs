@@ -14,6 +14,7 @@
 use super::engine::{literal_to_mat, literal_to_scalar, literal_to_vec, Engine};
 use super::registry::{ArtifactKey, Graph};
 use crate::backend::{ComputeBackend, IcaStats, NativeBackend, StatsLevel};
+use crate::error::IcaError;
 use crate::linalg::Mat;
 use std::rc::Rc;
 
@@ -33,12 +34,13 @@ pub struct XlaBackend {
 impl XlaBackend {
     /// Create a backend for `x`; requires stats/loss artifacts for
     /// (N, T) = (x.rows(), x.cols()) to exist in the registry.
-    pub fn new(engine: Rc<Engine>, x: Mat) -> anyhow::Result<XlaBackend> {
+    pub fn new(engine: Rc<Engine>, x: Mat) -> Result<XlaBackend, IcaError> {
         let (n, t) = (x.rows(), x.cols());
-        anyhow::ensure!(
-            engine.registry().supports(n, t, &[Graph::LossOnly]),
-            "no artifacts for shape N={n}, T={t} (add to shapes.json, re-run `make artifacts`)"
-        );
+        if !engine.registry().supports(n, t, &[Graph::LossOnly]) {
+            return Err(IcaError::runtime(format!(
+                "no artifacts for shape N={n}, T={t} (add to shapes.json, re-run `make artifacts`)"
+            )));
+        }
         let x_buf = engine.upload(&x)?;
         Ok(XlaBackend { engine, x_buf, n, t, native: None, x_host: Some(x) })
     }
@@ -47,13 +49,18 @@ impl XlaBackend {
         ArtifactKey { graph, n: self.n, t: self.t }
     }
 
-    fn run_stats(&self, w: &Mat, graph: Graph) -> anyhow::Result<IcaStats> {
+    fn run_stats(&self, w: &Mat, graph: Graph) -> Result<IcaStats, IcaError> {
         let w_buf = self.engine.upload(w)?;
         let outs = self.engine.run(self.key(graph), &[&w_buf, &self.x_buf])?;
         let n = self.n;
         Ok(match graph {
             Graph::StatsH2 => {
-                anyhow::ensure!(outs.len() == 5, "stats_h2 returned {} outputs", outs.len());
+                if outs.len() != 5 {
+                    return Err(IcaError::runtime(format!(
+                        "stats_h2 returned {} outputs",
+                        outs.len()
+                    )));
+                }
                 IcaStats {
                     loss_data: literal_to_scalar(&outs[0])?,
                     g: literal_to_mat(&outs[1], n, n)?,
@@ -63,7 +70,12 @@ impl XlaBackend {
                 }
             }
             Graph::StatsH1 => {
-                anyhow::ensure!(outs.len() == 4, "stats_h1 returned {} outputs", outs.len());
+                if outs.len() != 4 {
+                    return Err(IcaError::runtime(format!(
+                        "stats_h1 returned {} outputs",
+                        outs.len()
+                    )));
+                }
                 IcaStats {
                     loss_data: literal_to_scalar(&outs[0])?,
                     g: literal_to_mat(&outs[1], n, n)?,
@@ -73,7 +85,12 @@ impl XlaBackend {
                 }
             }
             Graph::StatsBasic => {
-                anyhow::ensure!(outs.len() == 2, "stats_basic returned {} outputs", outs.len());
+                if outs.len() != 2 {
+                    return Err(IcaError::runtime(format!(
+                        "stats_basic returned {} outputs",
+                        outs.len()
+                    )));
+                }
                 IcaStats {
                     loss_data: literal_to_scalar(&outs[0])?,
                     g: literal_to_mat(&outs[1], n, n)?,
@@ -82,13 +99,13 @@ impl XlaBackend {
                     h2: Mat::zeros(0, 0),
                 }
             }
-            _ => anyhow::bail!("run_stats on non-stats graph"),
+            _ => return Err(IcaError::runtime("run_stats on non-stats graph")),
         })
     }
 
     /// Pick the cheapest compiled graph that satisfies `level`,
     /// escalating if a lower-level artifact was not compiled.
-    fn graph_for(&self, level: StatsLevel) -> anyhow::Result<Graph> {
+    fn graph_for(&self, level: StatsLevel) -> Result<Graph, IcaError> {
         let reg = self.engine.registry();
         let prefer: &[Graph] = match level {
             StatsLevel::Basic => &[Graph::StatsBasic, Graph::StatsH1, Graph::StatsH2],
@@ -100,11 +117,10 @@ impl XlaBackend {
                 return Ok(g);
             }
         }
-        anyhow::bail!(
+        Err(IcaError::runtime(format!(
             "no artifact covering StatsLevel::{level:?} at N={}, T={}",
-            self.n,
-            self.t
-        )
+            self.n, self.t
+        )))
     }
 }
 

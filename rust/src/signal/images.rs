@@ -193,7 +193,8 @@ mod tests {
             assert!((var - 1.0).abs() < 1e-10, "patch {j} var {var}");
         }
         // Full rank: whitening must succeed (no DC deficiency).
-        let p = crate::preprocessing::preprocess(&x, crate::preprocessing::Whitener::Sphering);
+        let p = crate::preprocessing::preprocess(&x, crate::preprocessing::Whitener::Sphering)
+            .unwrap();
         assert_eq!(p.x.rows(), 64);
     }
 

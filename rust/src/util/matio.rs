@@ -1,0 +1,130 @@
+//! Matrix ⇄ JSON conversion and file I/O used by the serializable
+//! [`crate::estimator::IcaModel`] and the `fica fit`/`fica apply` CLI.
+//!
+//! The on-disk shape is `{"rows": R, "cols": C, "data": [row-major f64]}`.
+//! Parsing is fail-closed in the manifest idiom: shapes are validated
+//! against the data length, every entry must be finite, and any missing
+//! or mistyped field is a typed [`IcaError`] — never a panic.
+
+use crate::error::IcaError;
+use crate::linalg::Mat;
+use crate::util::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Serialize a matrix to the `{"rows", "cols", "data"}` JSON object.
+pub fn mat_to_json(m: &Mat) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("rows".to_string(), Json::Num(m.rows() as f64));
+    obj.insert("cols".to_string(), Json::Num(m.cols() as f64));
+    obj.insert(
+        "data".to_string(),
+        Json::Arr(m.as_slice().iter().map(|&v| Json::Num(v)).collect()),
+    );
+    Json::Obj(obj)
+}
+
+/// Parse a `{"rows", "cols", "data"}` object back into a [`Mat`],
+/// validating shape agreement and finiteness. `what` names the field for
+/// error messages.
+pub fn mat_from_json(v: &Json, what: &str) -> Result<Mat, IcaError> {
+    let rows = v
+        .get("rows")
+        .and_then(|r| r.as_usize())
+        .ok_or_else(|| IcaError::invalid_model(format!("{what}: missing/bad \"rows\"")))?;
+    let cols = v
+        .get("cols")
+        .and_then(|c| c.as_usize())
+        .ok_or_else(|| IcaError::invalid_model(format!("{what}: missing/bad \"cols\"")))?;
+    let arr = v
+        .get("data")
+        .and_then(|d| d.as_arr())
+        .ok_or_else(|| IcaError::invalid_model(format!("{what}: missing/bad \"data\"")))?;
+    let expected = rows
+        .checked_mul(cols)
+        .ok_or_else(|| IcaError::invalid_model(format!("{what}: rows*cols overflows")))?;
+    if arr.len() != expected {
+        return Err(IcaError::invalid_model(format!(
+            "{what}: data length {} != rows*cols = {expected}",
+            arr.len()
+        )));
+    }
+    let mut data = Vec::with_capacity(expected);
+    for (i, e) in arr.iter().enumerate() {
+        let x = e.as_f64().ok_or_else(|| {
+            IcaError::invalid_model(format!("{what}: data[{i}] is not a number"))
+        })?;
+        if !x.is_finite() {
+            return Err(IcaError::invalid_model(format!(
+                "{what}: data[{i}] is non-finite"
+            )));
+        }
+        data.push(x);
+    }
+    Ok(Mat::from_vec(rows, cols, data))
+}
+
+/// Read a matrix from a `{"rows", "cols", "data"}` JSON file.
+pub fn read_matrix_json(path: impl AsRef<Path>) -> Result<Mat, IcaError> {
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| IcaError::io(path.display().to_string(), e))?;
+    let json = Json::parse(&text).map_err(|e| {
+        IcaError::invalid_model(format!("{}: {e}", path.display()))
+    })?;
+    mat_from_json(&json, &path.display().to_string())
+}
+
+/// Write a matrix as a `{"rows", "cols", "data"}` JSON file.
+pub fn write_matrix_json(path: impl AsRef<Path>, m: &Mat) -> Result<(), IcaError> {
+    let path = path.as_ref();
+    if !m.as_slice().iter().all(|v| v.is_finite()) {
+        return Err(IcaError::NonFinite { what: format!("matrix for {}", path.display()) });
+    }
+    std::fs::write(path, mat_to_json(m).to_string_compact())
+        .map_err(|e| IcaError::io(path.display().to_string(), e))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mat_json_roundtrip_is_exact() {
+        let m = Mat::from_fn(3, 4, |i, j| (i as f64 + 1.0) / (j as f64 + 3.0));
+        let v = mat_to_json(&m);
+        let back = mat_from_json(&v, "m").unwrap();
+        assert_eq!(back.rows(), 3);
+        assert_eq!(back.cols(), 4);
+        // Shortest-roundtrip float formatting ⇒ bit-exact recovery.
+        assert!(m.max_abs_diff(&back) == 0.0);
+    }
+
+    #[test]
+    fn mat_json_rejects_malformed() {
+        let bad_len = Json::parse(r#"{"rows":2,"cols":2,"data":[1,2,3]}"#).unwrap();
+        assert!(matches!(
+            mat_from_json(&bad_len, "m"),
+            Err(IcaError::InvalidModel { .. })
+        ));
+        let missing = Json::parse(r#"{"cols":2,"data":[1,2]}"#).unwrap();
+        assert!(mat_from_json(&missing, "m").is_err());
+        let not_num = Json::parse(r#"{"rows":1,"cols":2,"data":[1,"x"]}"#).unwrap();
+        assert!(mat_from_json(&not_num, "m").is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("fica_matio_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.json");
+        let m = Mat::from_fn(2, 5, |i, j| (i * 5 + j) as f64 * 0.1);
+        write_matrix_json(&p, &m).unwrap();
+        let back = read_matrix_json(&p).unwrap();
+        assert!(m.max_abs_diff(&back) == 0.0);
+        // Non-finite data is rejected before it reaches disk.
+        let mut bad = m.clone();
+        bad[(0, 0)] = f64::INFINITY;
+        assert!(write_matrix_json(&p, &bad).is_err());
+    }
+}

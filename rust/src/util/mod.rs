@@ -1,5 +1,7 @@
 //! Small shared utilities (offline substitutes for common crates).
 
 pub mod json;
+pub mod matio;
 
 pub use json::{Json, JsonError};
+pub use matio::{mat_from_json, mat_to_json, read_matrix_json, write_matrix_json};

@@ -7,7 +7,7 @@
 //! `cargo test` stays green on a fresh checkout.
 
 use faster_ica::backend::{ComputeBackend, NativeBackend, StatsLevel};
-use faster_ica::ica::{solve, Algorithm, HessianApprox, SolverConfig};
+use faster_ica::ica::{try_solve, Algorithm, HessianApprox, SolverConfig};
 use faster_ica::linalg::{matmul, Mat};
 use faster_ica::rng::{Laplace, Pcg64, Sample};
 use faster_ica::runtime::{default_artifact_dir, Engine, XlaBackend};
@@ -98,10 +98,10 @@ fn solver_trajectories_agree_across_backends() {
     let w0 = Mat::eye(8);
 
     let mut native = NativeBackend::new(x.clone());
-    let res_native = solve(&mut native, &w0, &cfg);
+    let res_native = try_solve(&mut native, &w0, &cfg).unwrap();
 
     let Ok(mut xla) = XlaBackend::new(engine, x) else { return };
-    let res_xla = solve(&mut xla, &w0, &cfg);
+    let res_xla = try_solve(&mut xla, &w0, &cfg).unwrap();
 
     assert_eq!(res_native.converged, res_xla.converged);
     assert!(res_native.converged);

@@ -4,7 +4,7 @@
 
 use faster_ica::experiments::defs::{build_dataset, ExperimentId};
 use faster_ica::experiments::fig2::{run_suite, SuiteConfig};
-use faster_ica::ica::{amari_distance, solve, Algorithm, HessianApprox, SolverConfig};
+use faster_ica::ica::{amari_distance, try_solve, Algorithm, HessianApprox, SolverConfig};
 use faster_ica::linalg::{matmul, Lu, Mat};
 use faster_ica::preprocessing::{preprocess, Whitener};
 use faster_ica::signal;
@@ -14,7 +14,7 @@ use faster_ica::signal;
 #[test]
 fn source_recovery_full_pipeline() {
     let d = signal::experiment_a(8, 6000, 42);
-    let p = preprocess(&d.x, Whitener::Sphering);
+    let p = preprocess(&d.x, Whitener::Sphering).expect("whitening");
     let mut be = faster_ica::backend::NativeBackend::new(p.x.clone());
     let cfg = SolverConfig::new(Algorithm::Lbfgs {
         precond: Some(HessianApprox::H2),
@@ -22,7 +22,7 @@ fn source_recovery_full_pipeline() {
     })
     .with_tol(1e-9)
     .with_max_iters(100);
-    let res = solve(&mut be, &Mat::eye(8), &cfg);
+    let res = try_solve(&mut be, &Mat::eye(8), &cfg).unwrap();
     assert!(res.converged, "did not converge: {:?}", res.trace.last());
     // Effective unmixing on the raw data: U = W·K; P = U·A ≈ perm·scale.
     let u = matmul(&res.w, &p.k);
@@ -36,7 +36,7 @@ fn source_recovery_full_pipeline() {
 #[test]
 fn experiment_b_partial_recovery() {
     let d = signal::experiment_b(9, 20_000, 7);
-    let p = preprocess(&d.x, Whitener::Sphering);
+    let p = preprocess(&d.x, Whitener::Sphering).expect("whitening");
     let mut be = faster_ica::backend::NativeBackend::new(p.x.clone());
     let cfg = SolverConfig::new(Algorithm::Lbfgs {
         precond: Some(HessianApprox::H2),
@@ -44,7 +44,7 @@ fn experiment_b_partial_recovery() {
     })
     .with_tol(1e-7)
     .with_max_iters(300);
-    let res = solve(&mut be, &Mat::eye(9), &cfg);
+    let res = try_solve(&mut be, &Mat::eye(9), &cfg).unwrap();
     let u = matmul(&res.w, &p.k);
     let perm = matmul(&u, &d.mixing);
     // Rows of `perm` corresponding to recovered Laplace sources must be
@@ -132,13 +132,14 @@ fn infomax_plateau_scales_with_learning_rate() {
     let n = x.rows();
     // Converge first with the quasi-Newton method.
     let mut be = faster_ica::backend::NativeBackend::new(x.clone());
-    let qn = solve(
+    let qn = try_solve(
         &mut be,
         &Mat::eye(n),
         &SolverConfig::new(Algorithm::QuasiNewton { approx: HessianApprox::H1 })
             .with_tol(1e-10)
             .with_max_iters(200),
-    );
+    )
+    .unwrap();
     assert!(qn.converged);
 
     let plateau_with_lr = |lr: f64| -> f64 {
@@ -152,7 +153,7 @@ fn infomax_plateau_scales_with_learning_rate() {
         };
         let cfg = SolverConfig::new(Algorithm::Infomax(ic)).with_tol(0.0).with_max_iters(30);
         let mut be = faster_ica::backend::NativeBackend::new(x.clone());
-        let res = solve(&mut be, &qn.w, &cfg);
+        let res = try_solve(&mut be, &qn.w, &cfg).unwrap();
         let mut tail: Vec<f64> =
             res.trace.records.iter().rev().take(10).map(|r| r.grad_inf).collect();
         tail.sort_by(|a, b| a.partial_cmp(b).unwrap());

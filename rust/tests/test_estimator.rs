@@ -1,0 +1,210 @@
+//! Integration: the `Picard` estimator front door — fit/transform source
+//! recovery, lossless (byte-stable) model serialization, fail-closed
+//! loading, and id round-trips for every CLI-facing enum.
+
+use faster_ica::estimator::{BackendChoice, IcaModel, Picard};
+use faster_ica::ica::{amari_distance, Algorithm};
+use faster_ica::linalg::{matmul, Mat};
+use faster_ica::preprocessing::Whitener;
+use faster_ica::signal;
+use faster_ica::IcaError;
+
+/// Acceptance: `Picard::new().fit(&x)` → `model.transform(&x)` recovers
+/// the sources of a synthetic mixture (Amari distance below threshold).
+#[test]
+fn fit_transform_recovers_synthetic_mixture() {
+    let data = signal::experiment_a(8, 6000, 42);
+    let model = Picard::new().tol(1e-9).max_iters(150).fit(&data.x).expect("fit");
+    assert!(model.fit_info().converged, "fit did not converge");
+
+    // The effective unmixing composed with the true mixing must be a
+    // scaled permutation.
+    let perm = matmul(&model.unmixing_matrix(), &data.mixing);
+    let amari = amari_distance(&perm);
+    assert!(amari < 0.03, "Amari distance {amari}");
+
+    // transform agrees with the algebra y = W·K·(x − μ).
+    let y = model.transform(&data.x).expect("transform");
+    assert_eq!((y.rows(), y.cols()), (8, data.x.cols()));
+    let mut centered = data.x.clone();
+    for i in 0..centered.rows() {
+        let mu = model.row_means()[i];
+        for v in centered.row_mut(i) {
+            *v -= mu;
+        }
+    }
+    let manual = matmul(&model.unmixing_matrix(), &centered);
+    assert!(y.max_abs_diff(&manual) < 1e-12);
+
+    // inverse_transform inverts transform.
+    let back = model.inverse_transform(&y).expect("inverse");
+    assert!(back.max_abs_diff(&data.x) < 1e-7);
+}
+
+/// Acceptance: `IcaModel::load(IcaModel::save(..))` is lossless — the
+/// reloaded model transforms identically — and serialization is
+/// byte-stable (golden: save → load → save reproduces the same bytes).
+#[test]
+fn model_save_load_roundtrip_golden() {
+    let dir = std::env::temp_dir().join("fica_test_estimator");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("golden_model.json");
+
+    let data = signal::experiment_a(5, 2500, 7);
+    let model = Picard::new()
+        .whitener(Whitener::Pca)
+        .tol(1e-8)
+        .fit(&data.x)
+        .expect("fit");
+    model.save(&path).expect("save");
+
+    let loaded = IcaModel::load(&path).expect("load");
+    // Identical transform output, bit for bit.
+    let y1 = model.transform(&data.x).unwrap();
+    let y2 = loaded.transform(&data.x).unwrap();
+    assert!(y1.max_abs_diff(&y2) == 0.0, "transform output changed after reload");
+    // Metadata round-trips.
+    assert_eq!(loaded.algorithm().id(), model.algorithm().id());
+    assert_eq!(loaded.whitener(), Whitener::Pca);
+    assert_eq!(loaded.fit_info().iters, model.fit_info().iters);
+    assert_eq!(loaded.fit_info().converged, model.fit_info().converged);
+
+    // Byte-stable golden: a second save writes identical bytes.
+    let path2 = dir.join("golden_model_2.json");
+    loaded.save(&path2).expect("re-save");
+    let b1 = std::fs::read(&path).unwrap();
+    let b2 = std::fs::read(&path2).unwrap();
+    assert_eq!(b1, b2, "serialization is not byte-stable");
+}
+
+/// Acceptance: no panic reachable from the public API on malformed
+/// input — everything surfaces as a typed `IcaError`.
+#[test]
+fn malformed_inputs_yield_typed_errors_not_panics() {
+    // fit-side.
+    assert!(matches!(
+        Picard::new().fit(&Mat::zeros(1, 50)),
+        Err(IcaError::InvalidInput { .. })
+    ));
+    assert!(matches!(
+        Picard::new().fit(&Mat::zeros(6, 3)),
+        Err(IcaError::InvalidInput { .. })
+    ));
+    let data = signal::experiment_a(4, 600, 0);
+    let mut nan = data.x.clone();
+    nan[(0, 0)] = f64::NAN;
+    assert!(matches!(Picard::new().fit(&nan), Err(IcaError::NonFinite { .. })));
+    let mut dup = data.x.clone();
+    let row = dup.row(0).to_vec();
+    dup.row_mut(2).copy_from_slice(&row);
+    assert!(matches!(
+        Picard::new().fit(&dup),
+        Err(IcaError::SingularCovariance { .. })
+    ));
+    // Constant row is rank-deficient too.
+    let mut constant = data.x.clone();
+    constant.row_mut(1).fill(3.5);
+    assert!(matches!(
+        Picard::new().fit(&constant),
+        Err(IcaError::SingularCovariance { .. })
+    ));
+
+    // model-side.
+    let model = Picard::new().tol(1e-7).fit(&data.x).expect("fit");
+    assert!(matches!(
+        model.transform(&Mat::zeros(3, 5)),
+        Err(IcaError::DimensionMismatch { .. })
+    ));
+    assert!(matches!(
+        model.inverse_transform(&Mat::zeros(9, 5)),
+        Err(IcaError::DimensionMismatch { .. })
+    ));
+    let mut inf = Mat::zeros(4, 5);
+    inf[(1, 1)] = f64::NEG_INFINITY;
+    assert!(matches!(model.transform(&inf), Err(IcaError::NonFinite { .. })));
+
+    // loader-side: every corruption is a typed error.
+    let good = model.to_json_string().unwrap();
+    for bad in [
+        String::new(),
+        "{".to_string(),
+        "[1,2,3]".to_string(),
+        good.replace("fica.ica_model/v1", "other/v1"),
+        good.replace("\"plbfgs-h2\"", "\"fastica\""),
+        good.replace("\"sphering\"", "\"mystery\""),
+        good.replace("\"n_features\":4", "\"n_features\":40"),
+        good.replacen("\"data\":[", "\"data\":[1e400,", 1),
+        good[..good.len() * 2 / 3].to_string(),
+    ] {
+        assert!(
+            IcaModel::from_json_str(&bad).is_err(),
+            "corruption accepted: {}",
+            &bad[..bad.len().min(80)]
+        );
+    }
+}
+
+/// Satellite: `Algorithm::id()`/`from_id()` round-trip over the full
+/// paper suite (plus qn-h2), and the other CLI-facing enums.
+#[test]
+fn cli_facing_ids_roundtrip() {
+    let mut seen = Vec::new();
+    for id in Algorithm::paper_suite().iter().copied().chain(["qn-h2"]) {
+        let algo = Algorithm::from_id(id).unwrap_or_else(|| panic!("{id} must parse"));
+        assert_eq!(algo.id(), id, "id not stable for {id}");
+        seen.push(id);
+    }
+    assert_eq!(seen.len(), 7, "paper suite should cover 6 ids + qn-h2");
+    assert!(Algorithm::from_id("plbfgs-h3").is_none());
+
+    for w in [Whitener::Sphering, Whitener::Pca] {
+        assert_eq!(Whitener::from_id(w.id()), Some(w));
+    }
+    for b in [BackendChoice::Native, BackendChoice::Xla, BackendChoice::Auto] {
+        assert_eq!(BackendChoice::from_id(b.id()), Some(b));
+    }
+}
+
+/// Every paper algorithm fits end-to-end through the estimator and
+/// stamps its own id into the model.
+#[test]
+fn every_paper_algorithm_fits_through_estimator() {
+    let data = signal::experiment_a(5, 1500, 9);
+    for id in Algorithm::paper_suite() {
+        let algo = Algorithm::from_id(id).unwrap();
+        let model = Picard::new()
+            .algorithm(algo)
+            .tol(1e-4)
+            .max_iters(50)
+            .fit(&data.x)
+            .unwrap_or_else(|e| panic!("{id}: {e}"));
+        assert_eq!(model.algorithm().id(), *id);
+        let json = model.to_json_string().expect("serialize");
+        let back = IcaModel::from_json_str(&json).expect("reload");
+        assert_eq!(back.algorithm().id(), *id);
+    }
+}
+
+/// `--backend xla` without artifacts is a typed runtime error, while
+/// `auto` silently falls back to native.
+#[test]
+fn xla_backend_unavailable_is_typed_and_auto_falls_back() {
+    let data = signal::experiment_a(4, 800, 3);
+    // This environment has no PJRT artifacts compiled for (4, 800), so
+    // an explicit xla request must fail closed...
+    match Picard::new().backend(BackendChoice::Xla).fit(&data.x) {
+        Err(IcaError::Runtime { .. }) => {}
+        Ok(model) => {
+            // ...unless a full artifact set exists, in which case the
+            // fit must have actually used it.
+            assert_eq!(model.fit_info().backend, "xla");
+        }
+        Err(e) => panic!("expected Runtime error, got {e:?}"),
+    }
+    let model = Picard::new()
+        .backend(BackendChoice::Auto)
+        .tol(1e-6)
+        .fit(&data.x)
+        .expect("auto must always fit");
+    assert!(["native", "xla"].contains(&model.fit_info().backend.as_str()));
+}
