@@ -10,6 +10,9 @@
 //! where `Y = WX`. Two implementations:
 //!
 //! - [`NativeBackend`] — pure Rust, fused single-sweep, always available.
+//! - [`ShardedBackend`] — the native sweep split across the T axis over a
+//!   persistent worker-thread pool, with deterministic tree-order
+//!   reduction of the per-shard moments.
 //! - `XlaBackend` (in [`crate::runtime`]) — executes the AOT-compiled
 //!   JAX/Pallas artifact through PJRT; Python is never on this path.
 //!
@@ -19,8 +22,11 @@
 //! CPU PJRT plugin of xla_extension 0.5.1).
 
 mod native;
+mod sharded;
+mod sweep;
 
 pub use native::NativeBackend;
+pub use sharded::ShardedBackend;
 
 use crate::linalg::Mat;
 

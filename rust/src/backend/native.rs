@@ -8,7 +8,7 @@
 //! All workspaces are allocated once at construction and reused across
 //! iterations — the solver hot loop performs no heap allocation of size T.
 
-use super::{ComputeBackend, IcaStats, StatsLevel};
+use super::{sweep, ComputeBackend, IcaStats, StatsLevel};
 use crate::ica::score::LogCosh;
 use crate::linalg::{matmul_a_bt_into, matmul_into, Mat};
 
@@ -62,36 +62,11 @@ impl ComputeBackend for NativeBackend {
         self.compute_y(w);
         let tf = t as f64;
 
-        // Fused elementwise sweep: ONE exp per element feeds everything:
-        // with e = exp(-2|u|), tanh(|u|) = (1-e)/(1+e) and
-        // log cosh u = |u| + ln(1+e) - ln 2  (u = y/2).
-        let mut loss_acc = 0.0;
+        // Shared fused sweeps (see `super::sweep` — one exp per element).
+        let loss_acc = sweep::loss_psi_sweep(&self.y, &mut self.psi);
         let need_h = level >= StatsLevel::H1;
-        for i in 0..n {
-            let yrow = self.y.row(i);
-            let psirow = self.psi.row_mut(i);
-            for (p, &yv) in psirow.iter_mut().zip(yrow) {
-                let u = 0.5 * yv;
-                let a = u.abs();
-                let e = (-2.0 * a).exp();
-                loss_acc += 2.0 * (a + e.ln_1p() - std::f64::consts::LN_2);
-                *p = ((1.0 - e) / (1.0 + e)).copysign(u);
-            }
-        }
         if need_h {
-            for i in 0..n {
-                // ψ' = (1 - ψ²)/2 reuses the stored tanh; y² for σ̂²/ĥ_ij.
-                let psirow = self.psi.row(i);
-                let psiprow = self.psip.row_mut(i);
-                for (pp, &p) in psiprow.iter_mut().zip(psirow) {
-                    *pp = 0.5 * (1.0 - p * p);
-                }
-                let yrow = self.y.row(i);
-                let ysqrow = self.ysq.row_mut(i);
-                for (sq, &yv) in ysqrow.iter_mut().zip(yrow) {
-                    *sq = yv * yv;
-                }
-            }
+            sweep::psip_ysq_sweep(&self.y, &self.psi, &mut self.psip, &mut self.ysq);
         }
 
         // G = ψ(Y) Yᵀ / T - I.
@@ -123,43 +98,18 @@ impl ComputeBackend for NativeBackend {
         let (n, t) = (self.n(), self.t());
         assert_eq!((w.rows(), w.cols()), (n, n));
         self.compute_y(w);
-        let mut acc = 0.0;
-        for i in 0..n {
-            for &yv in self.y.row(i) {
-                let a = (0.5 * yv).abs();
-                acc += 2.0 * (a + (-2.0 * a).exp().ln_1p() - std::f64::consts::LN_2);
-            }
-        }
-        acc / t as f64
+        sweep::loss_sum(&self.y) / t as f64
     }
 
     fn grad_batch(&mut self, w: &Mat, lo: usize, hi: usize) -> Mat {
         let n = self.n();
         assert!(lo < hi && hi <= self.t(), "bad batch range [{lo},{hi})");
         let tb = hi - lo;
-        // Y_b = W · X[:, lo..hi], streamed into the front of the workspace.
-        for i in 0..n {
-            for c in 0..tb {
-                let mut acc = 0.0;
-                for k in 0..n {
-                    acc += w[(i, k)] * self.x[(k, lo + c)];
-                }
-                self.y[(i, c)] = acc;
-            }
-        }
-        for i in 0..n {
-            for c in 0..tb {
-                self.psi[(i, c)] = self.score.psi(self.y[(i, c)]);
-            }
-        }
-        let mut g = Mat::zeros(n, n);
+        let mut g =
+            sweep::batch_grad_raw(w, &self.x, lo, tb, self.score, &mut self.y, &mut self.psi);
         for i in 0..n {
             for j in 0..n {
-                let mut acc = 0.0;
-                for c in 0..tb {
-                    acc += self.psi[(i, c)] * self.y[(j, c)];
-                }
-                g[(i, j)] = acc / tb as f64 - if i == j { 1.0 } else { 0.0 };
+                g[(i, j)] = g[(i, j)] / tb as f64 - if i == j { 1.0 } else { 0.0 };
             }
         }
         g

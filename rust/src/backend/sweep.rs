@@ -1,0 +1,98 @@
+//! The fused elementwise sweep kernels shared by [`super::NativeBackend`]
+//! and [`super::ShardedBackend`].
+//!
+//! Both backends promise the same arithmetic — the sharded backend with
+//! one worker is bitwise-identical to native — so the loop bodies live
+//! here exactly once and the guarantee holds by construction.
+
+use crate::ica::score::LogCosh;
+use crate::linalg::Mat;
+
+/// Fused loss + ψ sweep over `Y`: ONE exp per element feeds everything.
+/// With `e = exp(-2|u|)`, `tanh(|u|) = (1-e)/(1+e)` and
+/// `log cosh u = |u| + ln(1+e) - ln 2` (`u = y/2`). Fills `psi` and
+/// returns the **unnormalized** loss sum `Σ 2 log cosh(y/2)`.
+pub(super) fn loss_psi_sweep(y: &Mat, psi: &mut Mat) -> f64 {
+    let mut loss_acc = 0.0;
+    for i in 0..y.rows() {
+        let yrow = y.row(i);
+        let psirow = psi.row_mut(i);
+        for (p, &yv) in psirow.iter_mut().zip(yrow) {
+            let u = 0.5 * yv;
+            let a = u.abs();
+            let e = (-2.0 * a).exp();
+            loss_acc += 2.0 * (a + e.ln_1p() - std::f64::consts::LN_2);
+            *p = ((1.0 - e) / (1.0 + e)).copysign(u);
+        }
+    }
+    loss_acc
+}
+
+/// ψ' = (1 - ψ²)/2 reusing the stored tanh, and y² for σ̂²/ĥ_ij.
+pub(super) fn psip_ysq_sweep(y: &Mat, psi: &Mat, psip: &mut Mat, ysq: &mut Mat) {
+    for i in 0..y.rows() {
+        let psirow = psi.row(i);
+        let psiprow = psip.row_mut(i);
+        for (pp, &p) in psiprow.iter_mut().zip(psirow) {
+            *pp = 0.5 * (1.0 - p * p);
+        }
+        let yrow = y.row(i);
+        let ysqrow = ysq.row_mut(i);
+        for (sq, &yv) in ysqrow.iter_mut().zip(yrow) {
+            *sq = yv * yv;
+        }
+    }
+}
+
+/// Unnormalized loss sum `Σ 2 log cosh(y/2)` over `Y` (line-search probe;
+/// no ψ needed).
+pub(super) fn loss_sum(y: &Mat) -> f64 {
+    let mut acc = 0.0;
+    for i in 0..y.rows() {
+        for &yv in y.row(i) {
+            let a = (0.5 * yv).abs();
+            acc += 2.0 * (a + (-2.0 * a).exp().ln_1p() - std::f64::consts::LN_2);
+        }
+    }
+    acc
+}
+
+/// The Infomax minibatch step over `X[:, lo..lo+tb]`: streams
+/// `Y_b = W·X_b` and `ψ(Y_b)` into the front of the workspaces and
+/// returns the **unnormalized** contraction `ψ(Y_b) Y_bᵀ` (N×N).
+pub(super) fn batch_grad_raw(
+    w: &Mat,
+    x: &Mat,
+    lo: usize,
+    tb: usize,
+    score: LogCosh,
+    y: &mut Mat,
+    psi: &mut Mat,
+) -> Mat {
+    let n = x.rows();
+    for i in 0..n {
+        for c in 0..tb {
+            let mut acc = 0.0;
+            for k in 0..n {
+                acc += w[(i, k)] * x[(k, lo + c)];
+            }
+            y[(i, c)] = acc;
+        }
+    }
+    for i in 0..n {
+        for c in 0..tb {
+            psi[(i, c)] = score.psi(y[(i, c)]);
+        }
+    }
+    let mut g = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let mut acc = 0.0;
+            for c in 0..tb {
+                acc += psi[(i, c)] * y[(j, c)];
+            }
+            g[(i, j)] = acc;
+        }
+    }
+    g
+}

@@ -1,0 +1,232 @@
+//! Backend sweep benchmark behind `fica bench`: native vs sharded
+//! wall-clock for the full H̃² statistics sweep, reported as
+//! `BENCH_backend.json`.
+//!
+//! The report schema (`fica.bench_backend/v1`) is stable so successive
+//! PRs can track the trajectory:
+//!
+//! ```json
+//! {
+//!   "schema": "fica.bench_backend/v1",
+//!   "level": "h2", "smoke": false, "t": 100000,
+//!   "results": [
+//!     {"backend": "native", "workers": 1, "n": 64, "t": 100000,
+//!      "median_s": 0.61, "mean_s": 0.62, "sweeps_per_s": 1.64,
+//!      "speedup_vs_native": 1.0, "samples": [...]},
+//!     ...
+//!   ]
+//! }
+//! ```
+
+use super::{black_box, Measurement};
+use crate::backend::{ComputeBackend, NativeBackend, ShardedBackend, StatsLevel};
+use crate::error::IcaError;
+use crate::linalg::Mat;
+use crate::rng::Pcg64;
+use crate::util::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// What `fica bench` measures.
+#[derive(Clone, Debug)]
+pub struct BackendBenchConfig {
+    /// Signal counts N to sweep.
+    pub sizes: Vec<usize>,
+    /// Samples T per dataset.
+    pub t: usize,
+    /// Sharded worker counts to compare against single-thread native.
+    pub workers: Vec<usize>,
+    /// Timed sweeps per configuration (one extra warmup sweep runs first).
+    pub samples: usize,
+    /// Dataset seed.
+    pub seed: u64,
+    /// Whether this is the shrunken CI smoke configuration.
+    pub smoke: bool,
+}
+
+impl BackendBenchConfig {
+    /// The trajectory configuration: N ∈ {8, 32, 64}, T = 10⁵.
+    pub fn full() -> Self {
+        Self {
+            sizes: vec![8, 32, 64],
+            t: 100_000,
+            workers: vec![2, 4],
+            samples: 5,
+            seed: 0,
+            smoke: false,
+        }
+    }
+
+    /// Tiny sizes for CI smoke runs (seconds, not minutes).
+    pub fn smoke() -> Self {
+        Self {
+            sizes: vec![8, 16],
+            t: 5_000,
+            workers: vec![2],
+            samples: 2,
+            seed: 0,
+            smoke: true,
+        }
+    }
+}
+
+/// One measured configuration.
+#[derive(Clone, Debug)]
+pub struct SweepTiming {
+    pub backend: &'static str,
+    pub workers: usize,
+    pub n: usize,
+    pub t: usize,
+    pub samples: Vec<f64>,
+}
+
+impl SweepTiming {
+    fn measurement(&self) -> Measurement {
+        Measurement {
+            name: format!("{} w={} N={}", self.backend, self.workers, self.n),
+            samples: self.samples.clone(),
+        }
+    }
+
+    pub fn median_s(&self) -> f64 {
+        self.measurement().median()
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        self.measurement().mean()
+    }
+}
+
+fn measure(be: &mut dyn ComputeBackend, w: &Mat, samples: usize) -> Vec<f64> {
+    black_box(be.stats(w, StatsLevel::H2)); // warmup (touches every page)
+    (0..samples)
+        .map(|_| {
+            let t0 = std::time::Instant::now();
+            black_box(be.stats(w, StatsLevel::H2));
+            t0.elapsed().as_secs_f64()
+        })
+        .collect()
+}
+
+/// Run the sweep-timing matrix. Prints one line per configuration.
+pub fn run(cfg: &BackendBenchConfig) -> Vec<SweepTiming> {
+    let mut out = Vec::new();
+    for &n in &cfg.sizes {
+        let mut rng = Pcg64::new(cfg.seed ^ (n as u64));
+        let x = crate::testkit::gen::sources(&mut rng, n, cfg.t);
+        let w = crate::testkit::gen::well_conditioned(&mut rng, n);
+        let mut native = NativeBackend::new(x.clone());
+        let timing = SweepTiming {
+            backend: "native",
+            workers: 1,
+            n,
+            t: cfg.t,
+            samples: measure(&mut native, &w, cfg.samples),
+        };
+        timing.measurement().report();
+        out.push(timing);
+        for &workers in &cfg.workers {
+            let mut sharded = ShardedBackend::new(x.clone(), workers);
+            let timing = SweepTiming {
+                backend: "sharded",
+                workers,
+                n,
+                t: cfg.t,
+                samples: measure(&mut sharded, &w, cfg.samples),
+            };
+            timing.measurement().report();
+            out.push(timing);
+        }
+    }
+    out
+}
+
+/// Build the stable `fica.bench_backend/v1` report.
+pub fn report_json(cfg: &BackendBenchConfig, timings: &[SweepTiming]) -> Json {
+    // Native medians per N, for the speedup column.
+    let native_median: BTreeMap<usize, f64> = timings
+        .iter()
+        .filter(|t| t.backend == "native")
+        .map(|t| (t.n, t.median_s()))
+        .collect();
+    let results: Vec<Json> = timings
+        .iter()
+        .map(|t| {
+            let median = t.median_s();
+            let mut obj = BTreeMap::new();
+            obj.insert("backend".into(), Json::Str(t.backend.to_string()));
+            obj.insert("workers".into(), Json::Num(t.workers as f64));
+            obj.insert("n".into(), Json::Num(t.n as f64));
+            obj.insert("t".into(), Json::Num(t.t as f64));
+            obj.insert("median_s".into(), Json::Num(median));
+            obj.insert("mean_s".into(), Json::Num(t.mean_s()));
+            obj.insert(
+                "sweeps_per_s".into(),
+                Json::Num(if median > 0.0 { 1.0 / median } else { 0.0 }),
+            );
+            obj.insert(
+                "speedup_vs_native".into(),
+                match native_median.get(&t.n) {
+                    Some(&base) if median > 0.0 => Json::Num(base / median),
+                    _ => Json::Null,
+                },
+            );
+            obj.insert(
+                "samples".into(),
+                Json::Arr(t.samples.iter().map(|&s| Json::Num(s)).collect()),
+            );
+            Json::Obj(obj)
+        })
+        .collect();
+    let mut root = BTreeMap::new();
+    root.insert("schema".into(), Json::Str("fica.bench_backend/v1".into()));
+    root.insert("level".into(), Json::Str("h2".into()));
+    root.insert("smoke".into(), Json::Bool(cfg.smoke));
+    root.insert("t".into(), Json::Num(cfg.t as f64));
+    root.insert(
+        "sizes".into(),
+        Json::Arr(cfg.sizes.iter().map(|&n| Json::Num(n as f64)).collect()),
+    );
+    root.insert("results".into(), Json::Arr(results));
+    Json::Obj(root)
+}
+
+/// Write a report to disk (compact deterministic JSON).
+pub fn write_report(path: impl AsRef<Path>, report: &Json) -> Result<(), IcaError> {
+    let path = path.as_ref();
+    std::fs::write(path, report.to_string_compact())
+        .map_err(|e| IcaError::io(path.display().to_string(), e))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_run_produces_a_well_formed_report() {
+        let cfg = BackendBenchConfig {
+            sizes: vec![4],
+            t: 300,
+            workers: vec![2],
+            samples: 1,
+            seed: 1,
+            smoke: true,
+        };
+        let timings = run(&cfg);
+        assert_eq!(timings.len(), 2); // native + sharded(2)
+        let report = report_json(&cfg, &timings);
+        assert_eq!(
+            report.get("schema").and_then(|s| s.as_str()),
+            Some("fica.bench_backend/v1")
+        );
+        let results = report.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 2);
+        for r in results {
+            assert!(r.get("median_s").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(r.get("backend").unwrap().as_str().is_some());
+        }
+        // The report survives its own serialization.
+        let text = report.to_string_compact();
+        assert_eq!(Json::parse(&text).unwrap(), report);
+    }
+}

@@ -5,6 +5,8 @@
 //! with mean / median / stddev / throughput. Benches are ordinary binaries
 //! with `harness = false`.
 
+pub mod backends;
+
 use std::time::{Duration, Instant};
 
 /// One benchmark's measurement results, in seconds per iteration.

@@ -70,14 +70,16 @@ impl Args {
 }
 
 /// The solver-related flags `fica fit` and `fica run` share:
-/// `--algo`, `--whitener`, `--backend`, `--tol`, `--max-iters`, `--seed`,
-/// `--scale`. One decoder, one set of defaults, hard errors on bad
-/// values (no silent `unwrap_or(default)` fallback).
+/// `--algo`, `--whitener`, `--backend`, `--workers`, `--chunk`, `--tol`,
+/// `--max-iters`, `--seed`, `--scale`. One decoder, one set of defaults,
+/// hard errors on bad values (no silent `unwrap_or(default)` fallback).
 #[derive(Clone, Debug)]
 pub struct SolveFlags {
     pub algo: Algorithm,
     pub whitener: Whitener,
     pub backend: BackendChoice,
+    /// Streaming chunk size in sample columns (0 = library default).
+    pub chunk: usize,
     pub tol: f64,
     pub max_iters: usize,
     pub seed: u64,
@@ -87,6 +89,9 @@ pub struct SolveFlags {
 impl SolveFlags {
     /// Decode from parsed [`Args`], rejecting unknown ids and
     /// unparsable values with a message naming the flag.
+    ///
+    /// `--workers N` selects the sharded backend's pool size; giving it
+    /// without `--backend` implies `--backend sharded`.
     pub fn from_args(args: &Args) -> Result<SolveFlags, String> {
         let algo_id = args.get_or("algo", "plbfgs-h2");
         let algo = Algorithm::from_id(&algo_id)
@@ -94,13 +99,22 @@ impl SolveFlags {
         let wh_id = args.get_or("whitener", "sphering");
         let whitener = Whitener::from_id(&wh_id)
             .ok_or_else(|| format!("unknown --whitener {wh_id} (sphering|pca)"))?;
-        let backend_id = args.get_or("backend", "native");
-        let backend = BackendChoice::from_id(&backend_id)
-            .ok_or_else(|| format!("unknown --backend {backend_id} (native|xla|auto)"))?;
+        let workers: usize = args.get_parse("workers", 0)?;
+        let default_backend = if args.get("workers").is_some() { "sharded" } else { "native" };
+        let backend_id = args.get_or("backend", default_backend);
+        let mut backend = BackendChoice::from_id(&backend_id).ok_or_else(|| {
+            format!("unknown --backend {backend_id} (native|sharded|xla|auto)")
+        })?;
+        if let BackendChoice::Sharded { .. } = backend {
+            backend = BackendChoice::Sharded { workers };
+        } else if workers > 0 {
+            return Err(format!("--workers only applies to --backend sharded, not {backend_id}"));
+        }
         Ok(SolveFlags {
             algo,
             whitener,
             backend,
+            chunk: args.get_parse("chunk", 0)?,
             tol: args.get_parse("tol", 1e-8)?,
             max_iters: args.get_parse("max-iters", 200)?,
             seed: args.get_parse("seed", 0)?,
@@ -110,13 +124,17 @@ impl SolveFlags {
 
     /// A [`Picard`] builder configured from these flags.
     pub fn picard(&self) -> Picard {
-        Picard::new()
+        let mut p = Picard::new()
             .algorithm(self.algo)
             .whitener(self.whitener)
             .backend(self.backend)
             .tol(self.tol)
             .max_iters(self.max_iters)
-            .seed(self.seed)
+            .seed(self.seed);
+        if self.chunk > 0 {
+            p = p.chunk_cols(self.chunk);
+        }
+        p
     }
 }
 
@@ -129,14 +147,20 @@ USAGE:
 
 COMMANDS:
     fit                          Fit an ICA model and save it
-        --input <path>           matrix JSON file {rows, cols, data} (signals
-                                 in rows), or use --data for synthetic input
+        --input <path>           data file (signals in rows / one sample per
+                                 line), or use --data for synthetic input
+        --format <id>            json|bin|csv (default: inferred from the
+                                 --input extension, else json); bin and csv
+                                 stream in chunks
         --data <id>              fig2a|fig2b|fig2c|fig3-eeg|fig3-img (synthetic)
         --model-out <path>       write the fitted model JSON here
         --algo <id>              gd|infomax|qn-h1|qn-h2|lbfgs|plbfgs-h1|plbfgs-h2
                                  (default plbfgs-h2)
         --whitener <id>          sphering|pca (default sphering)
-        --backend <id>           native|xla|auto (default native)
+        --backend <id>           native|sharded|xla|auto (default native)
+        --workers <usize>        sharded worker threads (0 = one per core;
+                                 implies --backend sharded)
+        --chunk <usize>          streaming chunk size in samples (default 8192)
         --tol <f64>              gradient tolerance (default 1e-8)
         --max-iters <usize>      iteration cap (default 200)
         --seed <u64>             dataset / solver seed (default 0)
@@ -147,6 +171,15 @@ COMMANDS:
         --input <path>           matrix JSON file to transform
         --output <path>          where to write the result matrix JSON
         --inverse                map sources back to observations instead
+    convert                      Convert a matrix file between formats
+        --input <path>           source file (json|bin|csv)
+        --output <path>          destination file
+        --in-format <id>         override the input format (default: inferred)
+        --out-format <id>        override the output format (default: inferred)
+        --chunk <usize>          streaming chunk size in samples (default 8192)
+    bench                        Time backend sweeps, write BENCH_backend.json
+        --out <path>             report path (default BENCH_backend.json)
+        --smoke                  tiny sizes for CI smoke runs
     info                         Library, artifact and platform summary
     run                          (deprecated) alias of `fit --data ...`
     experiment                   Regenerate a paper figure

@@ -1,0 +1,304 @@
+//! The `FICA1` raw binary matrix format.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! offset  0: 8 bytes   magic b"FICA1\0\0\0"
+//! offset  8: u64       rows (N, signals)
+//! offset 16: u64       cols (T, samples)
+//! offset 24: rows*cols little-endian f64, sample-major: sample t is the
+//!            N consecutive values X[0][t], X[1][t], …, X[N-1][t]
+//! ```
+//!
+//! Sample-major frames are the natural append order for a recording and
+//! let [`BinSource`] stream column chunks with purely sequential reads.
+//! Parsing is fail-closed: a bad magic, a zero dimension, a file length
+//! that disagrees with the header, or a non-finite value is a typed
+//! [`IcaError`], never a panic.
+
+use crate::error::IcaError;
+use crate::linalg::Mat;
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+/// The 8-byte magic that opens every `FICA1` file.
+pub const BIN_MAGIC: [u8; 8] = *b"FICA1\0\0\0";
+
+const HEADER_LEN: u64 = 24;
+
+/// Streaming reader for `FICA1` files.
+pub struct BinSource {
+    reader: BufReader<File>,
+    path: String,
+    n: usize,
+    t: usize,
+    pos: usize,
+}
+
+impl BinSource {
+    /// Open and validate a `FICA1` file: magic, non-zero dimensions, and
+    /// an exact match between the header's promise and the file length.
+    pub fn open(path: impl AsRef<Path>) -> Result<BinSource, IcaError> {
+        let path = path.as_ref();
+        let label = path.display().to_string();
+        let file = File::open(path).map_err(|e| IcaError::io(label.clone(), e))?;
+        let file_len = file
+            .metadata()
+            .map_err(|e| IcaError::io(label.clone(), e))?
+            .len();
+        let mut reader = BufReader::new(file);
+        let mut header = [0u8; HEADER_LEN as usize];
+        reader.read_exact(&mut header).map_err(|_| {
+            IcaError::invalid_input(format!("{label}: too short for a FICA1 header"))
+        })?;
+        if header[..8] != BIN_MAGIC {
+            return Err(IcaError::invalid_input(format!(
+                "{label}: bad magic (not a FICA1 file)"
+            )));
+        }
+        let rows = u64::from_le_bytes(header[8..16].try_into().unwrap());
+        let cols = u64::from_le_bytes(header[16..24].try_into().unwrap());
+        if rows == 0 || cols == 0 {
+            return Err(IcaError::invalid_input(format!(
+                "{label}: empty matrix ({rows}x{cols}) in header"
+            )));
+        }
+        let n = usize::try_from(rows)
+            .map_err(|_| IcaError::invalid_input(format!("{label}: rows {rows} overflows")))?;
+        let t = usize::try_from(cols)
+            .map_err(|_| IcaError::invalid_input(format!("{label}: cols {cols} overflows")))?;
+        let expected = HEADER_LEN as u128 + 8 * rows as u128 * cols as u128;
+        if file_len as u128 != expected {
+            return Err(IcaError::invalid_input(format!(
+                "{label}: file length {file_len} != {expected} promised by header \
+                 ({rows}x{cols} f64)"
+            )));
+        }
+        Ok(BinSource { reader, path: label, n, t, pos: 0 })
+    }
+}
+
+impl super::DataSource for BinSource {
+    fn rows(&self) -> usize {
+        self.n
+    }
+
+    fn cols(&self) -> usize {
+        self.t
+    }
+
+    fn reset(&mut self) -> Result<(), IcaError> {
+        self.reader
+            .seek(SeekFrom::Start(HEADER_LEN))
+            .map_err(|e| IcaError::io(self.path.clone(), e))?;
+        self.pos = 0;
+        Ok(())
+    }
+
+    fn next_chunk(&mut self, max_cols: usize) -> Result<Option<Mat>, IcaError> {
+        if self.pos >= self.t {
+            return Ok(None);
+        }
+        let c = max_cols.max(1).min(self.t - self.pos);
+        let mut buf = vec![0u8; c * self.n * 8];
+        self.reader.read_exact(&mut buf).map_err(|_| {
+            IcaError::invalid_input(format!(
+                "{}: truncated at sample {} (file changed after open?)",
+                self.path, self.pos
+            ))
+        })?;
+        let mut chunk = Mat::zeros(self.n, c);
+        for (j, frame) in buf.chunks_exact(self.n * 8).enumerate() {
+            for (i, bytes) in frame.chunks_exact(8).enumerate() {
+                let v = f64::from_le_bytes(bytes.try_into().unwrap());
+                if !v.is_finite() {
+                    return Err(IcaError::NonFinite {
+                        what: format!("{} (signal {i}, sample {})", self.path, self.pos + j),
+                    });
+                }
+                chunk[(i, j)] = v;
+            }
+        }
+        self.pos += c;
+        Ok(Some(chunk))
+    }
+
+    fn validates_finite(&self) -> bool {
+        true // next_chunk rejects NaN/∞ per value
+    }
+
+    fn label(&self) -> String {
+        self.path.clone()
+    }
+}
+
+/// Streaming writer for `FICA1` files: header up front, then sample
+/// frames chunk by chunk. [`BinWriter::finish`] fails closed if fewer
+/// samples were written than the header promised.
+pub struct BinWriter {
+    out: BufWriter<File>,
+    promise: super::WritePromise,
+}
+
+impl BinWriter {
+    pub fn create(path: impl AsRef<Path>, rows: usize, cols: usize) -> Result<BinWriter, IcaError> {
+        let path = path.as_ref();
+        let label = path.display().to_string();
+        let promise = super::WritePromise::new(label.clone(), rows, cols)?;
+        let file = File::create(path).map_err(|e| IcaError::io(label.clone(), e))?;
+        let mut out = BufWriter::new(file);
+        let mut header = Vec::with_capacity(HEADER_LEN as usize);
+        header.extend_from_slice(&BIN_MAGIC);
+        header.extend_from_slice(&(rows as u64).to_le_bytes());
+        header.extend_from_slice(&(cols as u64).to_le_bytes());
+        out.write_all(&header).map_err(|e| IcaError::io(label, e))?;
+        Ok(BinWriter { out, promise })
+    }
+
+    /// Append the samples of a column chunk.
+    pub fn write_chunk(&mut self, chunk: &Mat) -> Result<(), IcaError> {
+        self.promise.admit(chunk)?;
+        for j in 0..chunk.cols() {
+            for i in 0..chunk.rows() {
+                self.out
+                    .write_all(&chunk[(i, j)].to_le_bytes())
+                    .map_err(|e| IcaError::io(self.promise.label().to_string(), e))?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Flush and close, verifying every promised sample was written.
+    pub fn finish(mut self) -> Result<(), IcaError> {
+        self.promise.fulfilled()?;
+        self.out
+            .flush()
+            .map_err(|e| IcaError::io(self.promise.label().to_string(), e))
+    }
+}
+
+/// Write a whole in-memory matrix as a `FICA1` file.
+pub fn write_bin(path: impl AsRef<Path>, m: &Mat) -> Result<(), IcaError> {
+    let mut w = BinWriter::create(path, m.rows(), m.cols())?;
+    w.write_chunk(m)?;
+    w.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DataSource;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("fica_bin_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn drain(src: &mut dyn DataSource, chunk: usize) -> Mat {
+        let mut out = Mat::zeros(src.rows(), src.cols());
+        let mut off = 0;
+        while let Some(c) = src.next_chunk(chunk).unwrap() {
+            for i in 0..out.rows() {
+                out.row_mut(i)[off..off + c.cols()].copy_from_slice(c.row(i));
+            }
+            off += c.cols();
+        }
+        assert_eq!(off, out.cols());
+        out
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact_and_resettable() {
+        let p = tmp("rt.bin");
+        let m = Mat::from_fn(3, 17, |i, j| (i as f64 + 0.5).powi(2) / (j as f64 + 1.0));
+        write_bin(&p, &m).unwrap();
+        let mut src = BinSource::open(&p).unwrap();
+        assert_eq!((src.rows(), src.cols()), (3, 17));
+        assert!(drain(&mut src, 5).max_abs_diff(&m) == 0.0);
+        // Second pass after reset sees the same bytes.
+        src.reset().unwrap();
+        assert!(drain(&mut src, 17).max_abs_diff(&m) == 0.0);
+        // Exhausted stream yields None until reset.
+        assert!(src.next_chunk(4).unwrap().is_none());
+    }
+
+    #[test]
+    fn open_fails_closed() {
+        // Bad magic.
+        let p = tmp("magic.bin");
+        std::fs::write(&p, b"NOTFICA1aaaaaaaaaaaaaaaa").unwrap();
+        assert!(matches!(
+            BinSource::open(&p),
+            Err(IcaError::InvalidInput { .. })
+        ));
+        // Too short for a header.
+        let p = tmp("short.bin");
+        std::fs::write(&p, b"FICA1").unwrap();
+        assert!(BinSource::open(&p).is_err());
+        // Length disagrees with header.
+        let p = tmp("len.bin");
+        write_bin(&p, &Mat::from_fn(2, 4, |i, j| (i + j) as f64)).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes.truncate(bytes.len() - 8);
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(matches!(
+            BinSource::open(&p),
+            Err(IcaError::InvalidInput { .. })
+        ));
+        // Zero dimension.
+        let p = tmp("zero.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&BIN_MAGIC);
+        bytes.extend_from_slice(&0u64.to_le_bytes());
+        bytes.extend_from_slice(&5u64.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(BinSource::open(&p).is_err());
+        // Missing file is an Io error.
+        assert!(matches!(
+            BinSource::open(tmp("missing.bin")),
+            Err(IcaError::Io { .. })
+        ));
+    }
+
+    #[test]
+    fn non_finite_values_rejected_on_read_and_write() {
+        let mut m = Mat::from_fn(2, 3, |i, j| (i + j) as f64);
+        m[(1, 2)] = f64::NAN;
+        let p = tmp("nan.bin");
+        assert!(matches!(write_bin(&p, &m), Err(IcaError::NonFinite { .. })));
+        // Craft a file with an inf payload by hand.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&BIN_MAGIC);
+        bytes.extend_from_slice(&1u64.to_le_bytes());
+        bytes.extend_from_slice(&2u64.to_le_bytes());
+        bytes.extend_from_slice(&1.0f64.to_le_bytes());
+        bytes.extend_from_slice(&f64::INFINITY.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        let mut src = BinSource::open(&p).unwrap();
+        assert!(matches!(
+            src.next_chunk(8),
+            Err(IcaError::NonFinite { .. })
+        ));
+    }
+
+    #[test]
+    fn writer_enforces_its_promise() {
+        let p = tmp("promise.bin");
+        let mut w = BinWriter::create(&p, 2, 10).unwrap();
+        w.write_chunk(&Mat::zeros(2, 4)).unwrap();
+        // Wrong row count.
+        assert!(matches!(
+            w.write_chunk(&Mat::zeros(3, 2)),
+            Err(IcaError::DimensionMismatch { .. })
+        ));
+        // Overrun.
+        assert!(w.write_chunk(&Mat::zeros(2, 7)).is_err());
+        // Underrun at finish.
+        assert!(matches!(
+            w.finish(),
+            Err(IcaError::InvalidInput { .. })
+        ));
+    }
+}

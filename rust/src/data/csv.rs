@@ -1,0 +1,300 @@
+//! CSV matrix I/O: one sample (column of `X`) per line, one field per
+//! signal.
+//!
+//! The layout matches how multichannel recordings are exported in
+//! practice: time flows down the file, channels across a line. There is
+//! no header row; every line must have the same number of fields, every
+//! field must parse as a finite f64 (surrounding spaces are tolerated).
+//!
+//! [`CsvSource::open`] makes one cheap validation pass (line count +
+//! field-count agreement, no float parsing), then streams; values are
+//! parsed lazily per chunk, so memory stays `O(N × chunk)`.
+
+use crate::error::IcaError;
+use crate::linalg::Mat;
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Seek, SeekFrom, Write};
+use std::path::Path;
+
+/// Streaming reader for sample-per-line CSV matrices.
+pub struct CsvSource {
+    reader: BufReader<File>,
+    path: String,
+    n: usize,
+    t: usize,
+    pos: usize,
+    line: String,
+}
+
+impl CsvSource {
+    /// Open and structurally validate a CSV file: at least one sample,
+    /// a consistent field count on every line, at most one trailing
+    /// newline. Field values are parsed during streaming.
+    pub fn open(path: impl AsRef<Path>) -> Result<CsvSource, IcaError> {
+        let path = path.as_ref();
+        let label = path.display().to_string();
+        let file = File::open(path).map_err(|e| IcaError::io(label.clone(), e))?;
+        let mut reader = BufReader::new(file);
+        let mut line = String::new();
+        let (mut n, mut t) = (0usize, 0usize);
+        loop {
+            line.clear();
+            let read = reader
+                .read_line(&mut line)
+                .map_err(|e| IcaError::io(label.clone(), e))?;
+            if read == 0 {
+                break;
+            }
+            let s = line.trim_end_matches(['\n', '\r']);
+            if s.is_empty() {
+                // Permissible only as a trailing newline.
+                let mut rest = String::new();
+                if reader
+                    .read_line(&mut rest)
+                    .map_err(|e| IcaError::io(label.clone(), e))?
+                    == 0
+                {
+                    break;
+                }
+                return Err(IcaError::invalid_input(format!(
+                    "{label}: blank line {} inside the data",
+                    t + 1
+                )));
+            }
+            let fields = s.split(',').count();
+            if t == 0 {
+                n = fields;
+            } else if fields != n {
+                return Err(IcaError::invalid_input(format!(
+                    "{label}: line {} has {fields} fields, expected {n}",
+                    t + 1
+                )));
+            }
+            t += 1;
+        }
+        if t == 0 {
+            return Err(IcaError::invalid_input(format!("{label}: empty CSV file")));
+        }
+        let mut src = CsvSource { reader, path: label, n, t, pos: 0, line };
+        crate::data::DataSource::reset(&mut src)?;
+        Ok(src)
+    }
+}
+
+impl super::DataSource for CsvSource {
+    fn rows(&self) -> usize {
+        self.n
+    }
+
+    fn cols(&self) -> usize {
+        self.t
+    }
+
+    fn reset(&mut self) -> Result<(), IcaError> {
+        self.reader
+            .seek(SeekFrom::Start(0))
+            .map_err(|e| IcaError::io(self.path.clone(), e))?;
+        self.pos = 0;
+        Ok(())
+    }
+
+    fn next_chunk(&mut self, max_cols: usize) -> Result<Option<Mat>, IcaError> {
+        if self.pos >= self.t {
+            return Ok(None);
+        }
+        let c = max_cols.max(1).min(self.t - self.pos);
+        let mut chunk = Mat::zeros(self.n, c);
+        for j in 0..c {
+            self.line.clear();
+            let sample = self.pos + j;
+            let read = self
+                .reader
+                .read_line(&mut self.line)
+                .map_err(|e| IcaError::io(self.path.clone(), e))?;
+            if read == 0 {
+                return Err(IcaError::invalid_input(format!(
+                    "{}: truncated at line {} (file changed after open?)",
+                    self.path,
+                    sample + 1
+                )));
+            }
+            let s = self.line.trim_end_matches(['\n', '\r']);
+            let mut fields = 0usize;
+            for (i, tok) in s.split(',').enumerate() {
+                fields += 1;
+                if i >= self.n {
+                    break;
+                }
+                let v: f64 = tok.trim().parse().map_err(|_| {
+                    IcaError::invalid_input(format!(
+                        "{}: line {}: {tok:?} is not a number",
+                        self.path,
+                        sample + 1
+                    ))
+                })?;
+                if !v.is_finite() {
+                    return Err(IcaError::NonFinite {
+                        what: format!("{} (signal {i}, sample {sample})", self.path),
+                    });
+                }
+                chunk[(i, j)] = v;
+            }
+            if fields != self.n {
+                return Err(IcaError::invalid_input(format!(
+                    "{}: line {} has {fields} fields, expected {} \
+                     (file changed after open?)",
+                    self.path,
+                    sample + 1,
+                    self.n
+                )));
+            }
+        }
+        self.pos += c;
+        Ok(Some(chunk))
+    }
+
+    fn validates_finite(&self) -> bool {
+        true // next_chunk rejects NaN/∞ per value
+    }
+
+    fn label(&self) -> String {
+        self.path.clone()
+    }
+}
+
+/// Streaming writer: one sample per line, shortest-roundtrip f64
+/// formatting (the text survives a parse bit-exactly).
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    promise: super::WritePromise,
+}
+
+impl CsvWriter {
+    pub fn create(path: impl AsRef<Path>, rows: usize, cols: usize) -> Result<CsvWriter, IcaError> {
+        let path = path.as_ref();
+        let label = path.display().to_string();
+        let promise = super::WritePromise::new(label.clone(), rows, cols)?;
+        let file = File::create(path).map_err(|e| IcaError::io(label, e))?;
+        Ok(CsvWriter { out: BufWriter::new(file), promise })
+    }
+
+    /// Append the samples of a column chunk.
+    pub fn write_chunk(&mut self, chunk: &Mat) -> Result<(), IcaError> {
+        self.promise.admit(chunk)?;
+        let mut line = String::new();
+        for j in 0..chunk.cols() {
+            line.clear();
+            for i in 0..chunk.rows() {
+                if i > 0 {
+                    line.push(',');
+                }
+                line.push_str(&format!("{}", chunk[(i, j)]));
+            }
+            line.push('\n');
+            self.out
+                .write_all(line.as_bytes())
+                .map_err(|e| IcaError::io(self.promise.label().to_string(), e))?;
+        }
+        Ok(())
+    }
+
+    /// Flush and close, verifying every promised sample was written.
+    pub fn finish(mut self) -> Result<(), IcaError> {
+        self.promise.fulfilled()?;
+        self.out
+            .flush()
+            .map_err(|e| IcaError::io(self.promise.label().to_string(), e))
+    }
+}
+
+/// Write a whole in-memory matrix as sample-per-line CSV.
+pub fn write_csv(path: impl AsRef<Path>, m: &Mat) -> Result<(), IcaError> {
+    let mut w = CsvWriter::create(path, m.rows(), m.cols())?;
+    w.write_chunk(m)?;
+    w.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DataSource;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("fica_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        let p = tmp("rt.csv");
+        let m = Mat::from_fn(3, 11, |i, j| ((i * 31 + j) as f64 / 7.0 - 1.5).powi(3));
+        write_csv(&p, &m).unwrap();
+        let mut src = CsvSource::open(&p).unwrap();
+        assert_eq!((src.rows(), src.cols()), (3, 11));
+        let mut full = Mat::zeros(3, 11);
+        let mut off = 0;
+        while let Some(c) = src.next_chunk(4).unwrap() {
+            for i in 0..3 {
+                full.row_mut(i)[off..off + c.cols()].copy_from_slice(c.row(i));
+            }
+            off += c.cols();
+        }
+        assert_eq!(off, 11);
+        assert!(full.max_abs_diff(&m) == 0.0, "csv roundtrip not exact");
+        // Reset replays from the first sample.
+        src.reset().unwrap();
+        let c = src.next_chunk(2).unwrap().unwrap();
+        assert_eq!(c[(0, 0)], m[(0, 0)]);
+    }
+
+    #[test]
+    fn open_fails_closed() {
+        // Ragged rows.
+        let p = tmp("ragged.csv");
+        std::fs::write(&p, "1,2,3\n4,5\n").unwrap();
+        assert!(matches!(
+            CsvSource::open(&p),
+            Err(IcaError::InvalidInput { .. })
+        ));
+        // Interior blank line.
+        let p = tmp("blank.csv");
+        std::fs::write(&p, "1,2\n\n3,4\n").unwrap();
+        assert!(CsvSource::open(&p).is_err());
+        // Empty file.
+        let p = tmp("empty.csv");
+        std::fs::write(&p, "").unwrap();
+        assert!(CsvSource::open(&p).is_err());
+        // A single trailing newline is fine.
+        let p = tmp("trailing.csv");
+        std::fs::write(&p, "1,2\n3,4\n").unwrap();
+        let src = CsvSource::open(&p).unwrap();
+        assert_eq!((src.rows(), src.cols()), (2, 2));
+    }
+
+    #[test]
+    fn bad_values_rejected_while_streaming() {
+        let p = tmp("badval.csv");
+        std::fs::write(&p, "1,2\nx,4\n").unwrap();
+        let mut src = CsvSource::open(&p).unwrap();
+        assert!(matches!(
+            src.next_chunk(8),
+            Err(IcaError::InvalidInput { .. })
+        ));
+        let p = tmp("nan.csv");
+        std::fs::write(&p, "1,2\nNaN,4\n").unwrap();
+        let mut src = CsvSource::open(&p).unwrap();
+        assert!(matches!(src.next_chunk(8), Err(IcaError::NonFinite { .. })));
+    }
+
+    #[test]
+    fn spaces_around_fields_tolerated() {
+        let p = tmp("spaces.csv");
+        std::fs::write(&p, " 1.5 , -2\n3,  4e-2\n").unwrap();
+        let mut src = CsvSource::open(&p).unwrap();
+        let c = src.next_chunk(8).unwrap().unwrap();
+        assert_eq!(c[(0, 0)], 1.5);
+        assert_eq!(c[(1, 0)], -2.0);
+        assert_eq!(c[(1, 1)], 0.04);
+    }
+}

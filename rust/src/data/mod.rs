@@ -1,0 +1,385 @@
+//! Streaming data plane: chunked ingestion of `X ∈ R^{N×T}`.
+//!
+//! Picard's cost is dominated by Θ(N²T) sweeps over T-long recordings, and
+//! real recordings do not arrive as one in-memory JSON matrix. This module
+//! is the layer between I/O and the solver:
+//!
+//! - [`DataSource`] — a resettable iterator over **column chunks** of `X`
+//!   (signals in rows, samples in columns). Two passes are all the
+//!   pipeline ever needs: one for moments, one for whitening.
+//! - [`MemSource`] — adapter over an in-memory [`Mat`].
+//! - [`BinSource`] / [`BinWriter`] — the `FICA1` raw little-endian f64
+//!   binary format (24-byte validated header, sample-major frames).
+//! - [`CsvSource`] / [`CsvWriter`] — one sample per line, one field per
+//!   signal.
+//! - [`StreamingStats`] — one-pass mean + covariance accumulator, so the
+//!   whitener is computed without materializing the raw matrix.
+//!
+//! Every file implementation is fail-closed: bad magic, length lies,
+//! ragged rows, unparsable or non-finite values are typed [`IcaError`]s,
+//! never panics. In-memory adapters trust their caller (the estimator
+//! validates finiteness once, in `preprocess_source`).
+
+mod bin;
+mod csv;
+mod stats;
+
+pub use bin::{write_bin, BinSource, BinWriter, BIN_MAGIC};
+pub use csv::{write_csv, CsvSource, CsvWriter};
+pub use stats::StreamingStats;
+
+use crate::error::IcaError;
+use crate::linalg::Mat;
+use crate::util::{read_matrix_json, write_matrix_json};
+use std::path::Path;
+
+/// Default number of sample columns per chunk on the streaming paths.
+///
+/// Large enough that the per-chunk matmuls amortize dispatch, small enough
+/// that a chunk of a wide recording stays cache- and memory-friendly
+/// (N=64 ⇒ ~4 MB per chunk).
+pub const DEFAULT_CHUNK_COLS: usize = 8192;
+
+/// A resettable producer of column chunks of a fixed-shape matrix
+/// `X ∈ R^{N×T}` (signals in rows, samples in columns).
+///
+/// The contract mirrors what the two-pass preprocessing pipeline needs:
+/// dimensions are known up front, [`DataSource::reset`] rewinds to the
+/// first sample, and [`DataSource::next_chunk`] yields `X[:, p..p+c]`
+/// with `1 <= c <= max_cols` until the stream is exhausted.
+pub trait DataSource {
+    /// Number of signals N (rows of `X`).
+    fn rows(&self) -> usize;
+
+    /// Number of samples T (columns of `X`).
+    fn cols(&self) -> usize;
+
+    /// Rewind to the first sample.
+    fn reset(&mut self) -> Result<(), IcaError>;
+
+    /// The next column chunk (`N × c`, `1 <= c <= max_cols.max(1)`), or
+    /// `None` once all T samples have been yielded since the last reset.
+    fn next_chunk(&mut self, max_cols: usize) -> Result<Option<Mat>, IcaError>;
+
+    /// Whether every yielded value is already guaranteed finite (file
+    /// sources reject NaN/∞ while parsing). When `true` the pipeline
+    /// skips its own O(N·T) finiteness scan.
+    fn validates_finite(&self) -> bool {
+        false
+    }
+
+    /// Human-readable description of the source for error messages.
+    fn label(&self) -> String;
+}
+
+/// In-memory [`DataSource`] over a [`Mat`] (the trusted adapter: data
+/// already in memory is validated by the pipeline, not re-parsed here).
+pub struct MemSource {
+    x: Mat,
+    pos: usize,
+    label: String,
+}
+
+impl MemSource {
+    pub fn new(x: Mat) -> Self {
+        Self::with_label(x, "memory")
+    }
+
+    pub fn with_label(x: Mat, label: impl Into<String>) -> Self {
+        Self { x, pos: 0, label: label.into() }
+    }
+
+    /// Borrow the underlying matrix.
+    pub fn data(&self) -> &Mat {
+        &self.x
+    }
+}
+
+impl DataSource for MemSource {
+    fn rows(&self) -> usize {
+        self.x.rows()
+    }
+
+    fn cols(&self) -> usize {
+        self.x.cols()
+    }
+
+    fn reset(&mut self) -> Result<(), IcaError> {
+        self.pos = 0;
+        Ok(())
+    }
+
+    fn next_chunk(&mut self, max_cols: usize) -> Result<Option<Mat>, IcaError> {
+        if self.pos >= self.x.cols() {
+            return Ok(None);
+        }
+        let c = max_cols.max(1).min(self.x.cols() - self.pos);
+        let pos = self.pos;
+        let chunk = Mat::from_fn(self.x.rows(), c, |i, j| self.x[(i, pos + j)]);
+        self.pos += c;
+        Ok(Some(chunk))
+    }
+
+    fn label(&self) -> String {
+        self.label.clone()
+    }
+}
+
+/// On-disk matrix formats the CLI understands.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Format {
+    /// `{"rows": R, "cols": C, "data": [row-major f64]}` (fully loaded,
+    /// then streamed from memory).
+    Json,
+    /// `FICA1` raw little-endian f64 binary (streamed).
+    Bin,
+    /// One sample per line, comma-separated signals (streamed).
+    Csv,
+}
+
+impl Format {
+    /// Short stable identifier used by the CLI (`--format`).
+    pub fn id(self) -> &'static str {
+        match self {
+            Format::Json => "json",
+            Format::Bin => "bin",
+            Format::Csv => "csv",
+        }
+    }
+
+    /// Parse a CLI identifier.
+    pub fn from_id(s: &str) -> Option<Format> {
+        Some(match s {
+            "json" => Format::Json,
+            "bin" => Format::Bin,
+            "csv" => Format::Csv,
+            _ => return None,
+        })
+    }
+
+    /// Infer a format from a path's extension (case-insensitive).
+    pub fn infer(path: impl AsRef<Path>) -> Option<Format> {
+        let ext = path.as_ref().extension()?.to_str()?.to_ascii_lowercase();
+        Format::from_id(&ext)
+    }
+}
+
+/// Open a path as a [`DataSource`] in the given format.
+///
+/// JSON files are fully loaded (the format is not streamable) and served
+/// through a [`MemSource`]; `bin` and `csv` stream from disk.
+pub fn open_source(
+    path: impl AsRef<Path>,
+    format: Format,
+) -> Result<Box<dyn DataSource>, IcaError> {
+    let path = path.as_ref();
+    Ok(match format {
+        Format::Json => Box::new(MemSource::with_label(
+            read_matrix_json(path)?,
+            path.display().to_string(),
+        )),
+        Format::Bin => Box::new(BinSource::open(path)?),
+        Format::Csv => Box::new(CsvSource::open(path)?),
+    })
+}
+
+/// Stream a source into a file of the given format (`fica convert`).
+///
+/// `bin` and `csv` outputs are written chunk-by-chunk; `json` has no
+/// streamable layout, so it is assembled in memory first.
+pub fn convert_to(
+    src: &mut dyn DataSource,
+    path: impl AsRef<Path>,
+    format: Format,
+    chunk_cols: usize,
+) -> Result<(), IcaError> {
+    let path = path.as_ref();
+    let (n, t) = (src.rows(), src.cols());
+    let chunk_cols = chunk_cols.max(1);
+    src.reset()?;
+    match format {
+        Format::Json => {
+            let mut full = Mat::zeros(n, t);
+            let mut off = 0usize;
+            while let Some(chunk) = src.next_chunk(chunk_cols)? {
+                copy_columns(&mut full, off, &chunk, src)?;
+                off += chunk.cols();
+            }
+            check_complete(off, t, src)?;
+            write_matrix_json(path, &full)
+        }
+        Format::Bin => {
+            let mut out = BinWriter::create(path, n, t)?;
+            while let Some(chunk) = src.next_chunk(chunk_cols)? {
+                out.write_chunk(&chunk)?;
+            }
+            out.finish()
+        }
+        Format::Csv => {
+            let mut out = CsvWriter::create(path, n, t)?;
+            while let Some(chunk) = src.next_chunk(chunk_cols)? {
+                out.write_chunk(&chunk)?;
+            }
+            out.finish()
+        }
+    }
+}
+
+/// Shared bookkeeping for the streaming writers: a declared `rows × cols`
+/// promise, admission checks per chunk (row agreement, overrun,
+/// finiteness), and the fulfilled-at-finish check. Keeps the bin and csv
+/// contracts identical by construction.
+pub(crate) struct WritePromise {
+    label: String,
+    rows: usize,
+    cols: usize,
+    written: usize,
+}
+
+impl WritePromise {
+    pub(crate) fn new(label: String, rows: usize, cols: usize) -> Result<WritePromise, IcaError> {
+        if rows == 0 || cols == 0 {
+            return Err(IcaError::invalid_input(format!(
+                "{label}: refusing to write an empty {rows}x{cols} matrix"
+            )));
+        }
+        Ok(WritePromise { label, rows, cols, written: 0 })
+    }
+
+    pub(crate) fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// Validate a chunk and count its samples against the promise.
+    pub(crate) fn admit(&mut self, chunk: &Mat) -> Result<(), IcaError> {
+        if chunk.rows() != self.rows {
+            return Err(IcaError::DimensionMismatch {
+                what: format!("chunk for {}", self.label),
+                expected: (self.rows, chunk.cols()),
+                got: (chunk.rows(), chunk.cols()),
+            });
+        }
+        if self.written + chunk.cols() > self.cols {
+            return Err(IcaError::invalid_input(format!(
+                "{}: chunk overruns the declared {} samples",
+                self.label, self.cols
+            )));
+        }
+        if !chunk.as_slice().iter().all(|v| v.is_finite()) {
+            return Err(IcaError::NonFinite { what: format!("chunk for {}", self.label) });
+        }
+        self.written += chunk.cols();
+        Ok(())
+    }
+
+    /// Every promised sample must have been written.
+    pub(crate) fn fulfilled(&self) -> Result<(), IcaError> {
+        if self.written != self.cols {
+            return Err(IcaError::invalid_input(format!(
+                "{}: wrote {} of {} promised samples",
+                self.label, self.written, self.cols
+            )));
+        }
+        Ok(())
+    }
+}
+
+pub(crate) fn copy_columns(
+    dst: &mut Mat,
+    off: usize,
+    chunk: &Mat,
+    src: &dyn DataSource,
+) -> Result<(), IcaError> {
+    if chunk.rows() != dst.rows() || off + chunk.cols() > dst.cols() {
+        return Err(IcaError::invalid_input(format!(
+            "source {} yielded a mis-shaped chunk ({}x{} at column {off} of a {}x{} stream)",
+            src.label(),
+            chunk.rows(),
+            chunk.cols(),
+            dst.rows(),
+            dst.cols()
+        )));
+    }
+    for i in 0..dst.rows() {
+        dst.row_mut(i)[off..off + chunk.cols()].copy_from_slice(chunk.row(i));
+    }
+    Ok(())
+}
+
+pub(crate) fn check_complete(
+    got: usize,
+    want: usize,
+    src: &dyn DataSource,
+) -> Result<(), IcaError> {
+    if got != want {
+        return Err(IcaError::invalid_input(format!(
+            "source {} yielded {got} samples but promised {want}",
+            src.label()
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mem_source_chunks_cover_everything() {
+        let x = Mat::from_fn(3, 10, |i, j| (i * 10 + j) as f64);
+        let mut src = MemSource::new(x.clone());
+        for chunk_cols in [1, 3, 4, 10, 99] {
+            src.reset().unwrap();
+            let mut seen = 0usize;
+            while let Some(c) = src.next_chunk(chunk_cols).unwrap() {
+                assert_eq!(c.rows(), 3);
+                assert!(c.cols() >= 1 && c.cols() <= chunk_cols);
+                for i in 0..3 {
+                    for j in 0..c.cols() {
+                        assert_eq!(c[(i, j)], x[(i, seen + j)]);
+                    }
+                }
+                seen += c.cols();
+            }
+            assert_eq!(seen, 10, "chunk_cols {chunk_cols}");
+        }
+    }
+
+    #[test]
+    fn format_ids_roundtrip_and_infer() {
+        for f in [Format::Json, Format::Bin, Format::Csv] {
+            assert_eq!(Format::from_id(f.id()), Some(f));
+        }
+        assert_eq!(Format::from_id("hdf5"), None);
+        assert_eq!(Format::infer("x.bin"), Some(Format::Bin));
+        assert_eq!(Format::infer("x.CSV"), Some(Format::Csv));
+        assert_eq!(Format::infer("dir/x.json"), Some(Format::Json));
+        assert_eq!(Format::infer("noext"), None);
+    }
+
+    #[test]
+    fn convert_between_all_formats_roundtrips() {
+        let dir = std::env::temp_dir().join("fica_data_convert_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let x = Mat::from_fn(4, 23, |i, j| (i as f64 - 1.5) * 0.25 + (j as f64) * 0.01);
+        for format in [Format::Json, Format::Bin, Format::Csv] {
+            let path = dir.join(format!("m.{}", format.id()));
+            let mut src = MemSource::new(x.clone());
+            convert_to(&mut src, &path, format, 7).unwrap();
+            let mut back = open_source(&path, format).unwrap();
+            assert_eq!((back.rows(), back.cols()), (4, 23));
+            let mut full = Mat::zeros(4, 23);
+            let mut off = 0;
+            while let Some(c) = back.next_chunk(5).unwrap() {
+                copy_columns(&mut full, off, &c, back.as_ref()).unwrap();
+                off += c.cols();
+            }
+            assert_eq!(off, 23);
+            assert!(
+                full.max_abs_diff(&x) == 0.0,
+                "{}: lossy roundtrip",
+                format.id()
+            );
+        }
+    }
+}

@@ -1,0 +1,207 @@
+//! One-pass streaming moments: mean and covariance from column chunks.
+//!
+//! The whitening step (paper §3.1) only needs the per-row means `μ` and
+//! the covariance `C = Ê[xxᵀ] − μμᵀ`, both of which are sums — so they
+//! can be accumulated chunk-by-chunk without ever holding the raw `N×T`
+//! matrix. The Θ(N²·chunk) outer-product updates go through the same
+//! blocked [`matmul_a_bt_into`] kernel the solver hot path uses.
+//!
+//! To stay numerically stable on recordings with a large DC offset
+//! (where the textbook `Ê[xxᵀ] − μμᵀ` cancels catastrophically), the
+//! accumulator pivots on the **first sample seen**: it sums `x − x₀` and
+//! `(x − x₀)(x − x₀)ᵀ`, which are offset-free, and reconstructs
+//! `μ = x₀ + mean(x − x₀)` and `C = Ê[ddᵀ] − d̄d̄ᵀ` (with `d = x − x₀`)
+//! exactly — the covariance is shift-invariant.
+
+use crate::error::IcaError;
+use crate::linalg::{matmul_a_bt_into, Mat};
+
+/// Accumulator for streaming mean + covariance over column chunks.
+pub struct StreamingStats {
+    /// Σ over samples of `x − pivot` (length N).
+    sum: Vec<f64>,
+    /// Σ over samples of `(x − pivot)(x − pivot)ᵀ` (N×N).
+    outer: Mat,
+    /// Per-chunk scratch for the outer-product update.
+    scratch: Mat,
+    /// Reusable buffer holding the pivot-shifted chunk (reallocated only
+    /// when the chunk shape changes, i.e. once for the final short chunk).
+    shifted: Mat,
+    /// The first sample seen, used as the numerical pivot.
+    pivot: Option<Vec<f64>>,
+    /// Samples seen so far.
+    count: usize,
+}
+
+impl StreamingStats {
+    pub fn new(n: usize) -> Self {
+        Self {
+            sum: vec![0.0; n],
+            outer: Mat::zeros(n, n),
+            scratch: Mat::zeros(n, n),
+            shifted: Mat::zeros(n, 0),
+            pivot: None,
+            count: 0,
+        }
+    }
+
+    /// Number of signals N.
+    pub fn n(&self) -> usize {
+        self.sum.len()
+    }
+
+    /// Samples accumulated so far.
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Fold one `N × c` column chunk into the running sums.
+    pub fn update(&mut self, chunk: &Mat) {
+        assert_eq!(chunk.rows(), self.n(), "chunk row count");
+        if chunk.cols() == 0 {
+            return;
+        }
+        if self.pivot.is_none() {
+            self.pivot = Some((0..chunk.rows()).map(|i| chunk[(i, 0)]).collect());
+        }
+        if (self.shifted.rows(), self.shifted.cols()) != (chunk.rows(), chunk.cols()) {
+            self.shifted = Mat::zeros(chunk.rows(), chunk.cols());
+        }
+        let pivot = self.pivot.as_ref().unwrap();
+        for (i, &p) in pivot.iter().enumerate() {
+            for (d, &s) in self.shifted.row_mut(i).iter_mut().zip(chunk.row(i)) {
+                *d = s - p;
+            }
+        }
+        for (i, s) in self.sum.iter_mut().enumerate() {
+            *s += self.shifted.row(i).iter().sum::<f64>();
+        }
+        matmul_a_bt_into(&self.shifted, &self.shifted, &mut self.scratch);
+        self.outer.add_inplace(&self.scratch);
+        self.count += chunk.cols();
+    }
+
+    /// Per-row means `μ` of everything seen so far.
+    ///
+    /// Errors if no samples were accumulated.
+    pub fn means(&self) -> Result<Vec<f64>, IcaError> {
+        if self.count == 0 {
+            return Err(IcaError::invalid_input(
+                "streaming stats: no samples accumulated",
+            ));
+        }
+        let tf = self.count as f64;
+        let pivot = self.pivot.as_ref().expect("count > 0 implies a pivot");
+        Ok(pivot
+            .iter()
+            .zip(&self.sum)
+            .map(|(&p, &s)| p + s / tf)
+            .collect())
+    }
+
+    /// Covariance `C = Ê[xxᵀ] − μμᵀ` of everything seen so far
+    /// (computed shift-invariantly around the pivot).
+    ///
+    /// Needs at least 2 samples (one costs a rank to centering, exactly
+    /// like the batch path).
+    pub fn covariance(&self) -> Result<Mat, IcaError> {
+        if self.count < 2 {
+            return Err(IcaError::invalid_input(format!(
+                "streaming stats: covariance needs >= 2 samples, got {}",
+                self.count
+            )));
+        }
+        let tf = self.count as f64;
+        let m: Vec<f64> = self.sum.iter().map(|&s| s / tf).collect();
+        Ok(Mat::from_fn(self.n(), self.n(), |i, j| {
+            self.outer[(i, j)] / tf - m[i] * m[j]
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Normal, Pcg64, Sample};
+
+    fn offset_data(n: usize, t: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::new(seed);
+        let norm = Normal::standard();
+        Mat::from_fn(n, t, |i, _| norm.sample(&mut rng) * (1.0 + i as f64) + i as f64 * 3.0)
+    }
+
+    fn batch_moments(x: &Mat) -> (Vec<f64>, Mat) {
+        let mut centered = x.clone();
+        let means = centered.center_rows();
+        (means, centered.row_covariance())
+    }
+
+    fn stream(x: &Mat, chunk_cols: usize) -> StreamingStats {
+        let mut acc = StreamingStats::new(x.rows());
+        let mut pos = 0;
+        while pos < x.cols() {
+            let c = chunk_cols.min(x.cols() - pos);
+            let chunk = Mat::from_fn(x.rows(), c, |i, j| x[(i, pos + j)]);
+            acc.update(&chunk);
+            pos += c;
+        }
+        acc
+    }
+
+    #[test]
+    fn streaming_matches_batch_for_any_chunking() {
+        let x = offset_data(5, 1200, 1);
+        let (want_mu, want_c) = batch_moments(&x);
+        for chunk_cols in [1usize, 7, 64, 500, 1200, 5000] {
+            let acc = stream(&x, chunk_cols);
+            assert_eq!(acc.count(), 1200);
+            let mu = acc.means().unwrap();
+            for (a, b) in mu.iter().zip(&want_mu) {
+                assert!((a - b).abs() < 1e-10, "chunk {chunk_cols}: mean {a} vs {b}");
+            }
+            let c = acc.covariance().unwrap();
+            assert!(
+                c.max_abs_diff(&want_c) < 1e-10,
+                "chunk {chunk_cols}: cov deviates by {}",
+                c.max_abs_diff(&want_c)
+            );
+        }
+    }
+
+    /// Regression: a large DC offset (DC-coupled sensor data) must not
+    /// destroy the covariance through catastrophic cancellation — the
+    /// naive `Ê[xxᵀ] − μμᵀ` loses all ~16 digits at offset 1e8.
+    #[test]
+    fn large_dc_offset_stays_stable() {
+        let mut rng = Pcg64::new(5);
+        let norm = Normal::standard();
+        let x = Mat::from_fn(3, 800, |i, _| {
+            norm.sample(&mut rng) + 1e8 * (i as f64 + 1.0)
+        });
+        let (want_mu, want_c) = batch_moments(&x);
+        let acc = stream(&x, 64);
+        let mu = acc.means().unwrap();
+        for (a, b) in mu.iter().zip(&want_mu) {
+            // Both paths sum ~1e8-sized values somewhere; allow their
+            // reassociation noise, not cancellation-scale error.
+            assert!((a - b).abs() < 1e-3, "mean {a} vs {b}");
+        }
+        let c = acc.covariance().unwrap();
+        assert!(
+            c.max_abs_diff(&want_c) < 1e-8,
+            "cov deviates by {} under DC offset",
+            c.max_abs_diff(&want_c)
+        );
+    }
+
+    #[test]
+    fn empty_and_single_sample_fail_closed() {
+        let acc = StreamingStats::new(3);
+        assert!(acc.means().is_err());
+        assert!(acc.covariance().is_err());
+        let mut acc = StreamingStats::new(3);
+        acc.update(&Mat::from_fn(3, 1, |i, _| i as f64));
+        assert!(acc.means().is_ok());
+        assert!(acc.covariance().is_err());
+    }
+}

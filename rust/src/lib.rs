@@ -45,15 +45,21 @@
 //!   method (Alg. 2) and (preconditioned) L-BFGS (Alg. 3) over the
 //!   block-diagonal Hessian approximations H̃¹/H̃² — on a pure-Rust
 //!   [`linalg`] substrate.
+//! - **Data plane** ([`data`]): chunked ingestion of large recordings —
+//!   a [`data::DataSource`] trait over in-memory, `FICA1` binary, and CSV
+//!   inputs, plus one-pass streaming whitening statistics feeding
+//!   [`estimator::Picard::fit_source`].
 //! - **Backends** ([`backend`], [`runtime`]): the Θ(N²T) per-iteration
-//!   statistics run on the always-available native backend or, behind the
-//!   `pjrt` cargo feature, on AOT-compiled JAX/Pallas artifacts through a
-//!   PJRT CPU client (Python is never on the request path).
+//!   statistics run on the always-available native backend, sharded
+//!   across a worker-thread pool ([`backend::ShardedBackend`]) or, behind
+//!   the `pjrt` cargo feature, on AOT-compiled JAX/Pallas artifacts
+//!   through a PJRT CPU client (Python is never on the request path).
 //! - **Reproduction** ([`experiments`], [`coordinator`]): the paper's
 //!   figure pipeline, driven by the `fica experiment` subcommand.
 pub mod backend;
 pub mod cli;
 pub mod coordinator;
+pub mod data;
 pub mod error;
 pub mod estimator;
 pub mod experiments;

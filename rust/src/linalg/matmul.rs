@@ -30,15 +30,16 @@ pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
     let (m, k, n) = (a.rows(), a.cols(), b.cols());
     c.as_mut_slice().fill(0.0);
     // i-k-j with j-blocking: B and C are walked along contiguous rows.
+    // No zero-skip here: this kernel is on the Θ(N²T) `Y = W·X` hot path
+    // with dense operands, and a data-dependent branch in the inner-loop
+    // feeder defeats auto-vectorization (zero-skipping belongs only in
+    // kernels fed genuinely sparse operands, e.g. `matmul_at_b`).
     for jb in (0..n).step_by(BLOCK_J) {
         let je = (jb + BLOCK_J).min(n);
         for i in 0..m {
             let arow = a.row(i);
             let crow = &mut c.row_mut(i)[jb..je];
             for (kk, &aik) in arow.iter().enumerate().take(k) {
-                if aik == 0.0 {
-                    continue;
-                }
                 let brow = &b.row(kk)[jb..je];
                 for (cj, &bkj) in crow.iter_mut().zip(brow) {
                     *cj += aik * bkj;

@@ -5,7 +5,9 @@
 //! `fica experiment` regenerates the paper's figures.
 
 use faster_ica::backend::{ComputeBackend, NativeBackend};
+use faster_ica::bench::backends as bench_backends;
 use faster_ica::cli::{Args, SolveFlags, USAGE};
+use faster_ica::data::{convert_to, open_source, Format, DEFAULT_CHUNK_COLS};
 use faster_ica::estimator::IcaModel;
 use faster_ica::experiments::{self, ExperimentId};
 use faster_ica::linalg::Mat;
@@ -30,6 +32,8 @@ fn main() {
         "info" => cmd_info(),
         "fit" => cmd_fit(&args, false),
         "apply" => cmd_apply(&args),
+        "convert" => cmd_convert(&args),
+        "bench" => cmd_bench(&args),
         "run" => {
             eprintln!(
                 "note: `fica run` is deprecated; use `fica fit` \
@@ -91,12 +95,50 @@ fn cmd_fit(args: &Args, legacy_run: bool) -> i32 {
             return 2;
         }
     };
-    let (x, source) = if let Some(path) = args.get("input") {
-        match read_matrix_json(path) {
-            Ok(m) => (m, path.to_string()),
-            Err(e) => {
-                eprintln!("error: {e}");
-                return 1;
+    let announce = |rows: usize, cols: usize, source: &str| {
+        println!(
+            "fit: {rows} signals x {cols} samples from {source} | algo {} | whitener {} \
+             | backend {}",
+            flags.algo.id(),
+            flags.whitener.id(),
+            flags.backend.id()
+        );
+    };
+    let fitted = if let Some(path) = args.get("input") {
+        // bin/csv inputs stream through the data plane in column chunks;
+        // json (not streamable) is loaded whole and keeps the batch
+        // preprocessing path it has always used.
+        let format = match args.get("format") {
+            Some(f) => match Format::from_id(f) {
+                Some(f) => f,
+                None => {
+                    eprintln!("unknown --format {f} (json|bin|csv)");
+                    return 2;
+                }
+            },
+            None => Format::infer(path).unwrap_or(Format::Json),
+        };
+        if format == Format::Json {
+            match read_matrix_json(path) {
+                Ok(x) => {
+                    announce(x.rows(), x.cols(), &format!("{path} [json]"));
+                    flags.picard().fit(&x)
+                }
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return 1;
+                }
+            }
+        } else {
+            match open_source(path, format) {
+                Ok(mut src) => {
+                    announce(src.rows(), src.cols(), &format!("{path} [{}]", format.id()));
+                    flags.picard().fit_source(src.as_mut())
+                }
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return 1;
+                }
             }
         }
     } else {
@@ -111,20 +153,11 @@ fn cmd_fit(args: &Args, legacy_run: bool) -> i32 {
         }
         // Raw (unwhitened) data: fit owns centering + whitening, so the
         // --whitener flag acts on the actual dataset.
-        (
-            experiments::defs::build_raw_dataset(exp, flags.seed, flags.scale),
-            format!("synthetic:{data_id}"),
-        )
+        let x = experiments::defs::build_raw_dataset(exp, flags.seed, flags.scale);
+        announce(x.rows(), x.cols(), &format!("synthetic:{data_id}"));
+        flags.picard().fit(&x)
     };
-    println!(
-        "fit: {} signals x {} samples from {source} | algo {} | whitener {} | backend {}",
-        x.rows(),
-        x.cols(),
-        flags.algo.id(),
-        flags.whitener.id(),
-        flags.backend.id()
-    );
-    let model = match flags.picard().fit(&x) {
+    let model = match fitted {
         Ok(m) => m,
         Err(e) => {
             eprintln!("fit failed: {e}");
@@ -219,6 +252,87 @@ fn cmd_apply(args: &Args) -> i32 {
         y.rows(),
         y.cols()
     );
+    0
+}
+
+/// `fica convert --input a.bin --output b.csv`: stream a matrix file
+/// between formats (json|bin|csv), chunk by chunk where the format
+/// allows it.
+fn cmd_convert(args: &Args) -> i32 {
+    let Some(input) = args.get("input") else {
+        eprintln!("--input is required\n\n{USAGE}");
+        return 2;
+    };
+    let Some(output) = args.get("output") else {
+        eprintln!("--output is required\n\n{USAGE}");
+        return 2;
+    };
+    let resolve = |flag: &str, path: &str| -> Result<Format, String> {
+        match args.get(flag) {
+            Some(f) => Format::from_id(f)
+                .ok_or_else(|| format!("unknown --{flag} {f} (json|bin|csv)")),
+            None => Format::infer(path)
+                .ok_or_else(|| format!("cannot infer a format for {path}; pass --{flag}")),
+        }
+    };
+    let (in_format, out_format) = match (resolve("in-format", input), resolve("out-format", output))
+    {
+        (Ok(a), Ok(b)) => (a, b),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            return 2;
+        }
+    };
+    let chunk = match args.get_parse("chunk", DEFAULT_CHUNK_COLS) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let mut src = match open_source(input, in_format) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let (rows, cols) = (src.rows(), src.cols());
+    if let Err(e) = convert_to(src.as_mut(), output, out_format, chunk) {
+        eprintln!("error: {e}");
+        return 1;
+    }
+    println!(
+        "converted {rows} x {cols} matrix: {input} [{}] -> {output} [{}]",
+        in_format.id(),
+        out_format.id()
+    );
+    0
+}
+
+/// `fica bench`: time the H̃² statistics sweep on the native and sharded
+/// backends and write the stable `BENCH_backend.json` report.
+fn cmd_bench(args: &Args) -> i32 {
+    let cfg = if args.has("smoke") {
+        bench_backends::BackendBenchConfig::smoke()
+    } else {
+        bench_backends::BackendBenchConfig::full()
+    };
+    let out = args.get_or("out", "BENCH_backend.json");
+    println!(
+        "bench: full H2 statistics sweep | N in {:?} | T = {} | sharded workers {:?}{}",
+        cfg.sizes,
+        cfg.t,
+        cfg.workers,
+        if cfg.smoke { " | SMOKE" } else { "" }
+    );
+    let timings = bench_backends::run(&cfg);
+    let report = bench_backends::report_json(&cfg, &timings);
+    if let Err(e) = bench_backends::write_report(&out, &report) {
+        eprintln!("error: {e}");
+        return 1;
+    }
+    println!("wrote {out}");
     0
 }
 

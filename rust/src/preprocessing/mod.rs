@@ -11,8 +11,9 @@
 //!   i.e. ZCA in modern terminology — an orthogonal rotation of the
 //!   sphering whitener, which is all Fig. 4 needs).
 
+use crate::data::{check_complete, copy_columns, DataSource, StreamingStats};
 use crate::error::IcaError;
-use crate::linalg::{eigh, matmul, Mat};
+use crate::linalg::{eigh, matmul, matmul_into, Mat};
 
 /// Which whitening transform to apply.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -74,7 +75,18 @@ pub fn preprocess(x_raw: &Mat, whitener: Whitener) -> Result<Preprocessed, IcaEr
     let mut x = x_raw.clone();
     let means = x.center_rows();
     let c = x.row_covariance();
-    let e = eigh(&c);
+    let k = whitening_from_cov(&c, whitener)?;
+    let xw = matmul(&k, &x);
+    Ok(Preprocessed { x: xw, k, means })
+}
+
+/// Build the whitening matrix `K` from a covariance matrix — the shared
+/// core of the in-memory and streaming preprocessing paths.
+///
+/// Fails with [`IcaError::SingularCovariance`] when an eigenvalue falls
+/// below the numerical-zero guard.
+pub fn whitening_from_cov(c: &Mat, whitener: Whitener) -> Result<Mat, IcaError> {
+    let e = eigh(c);
     let eps = 1e-12 * e.values.last().copied().unwrap_or(1.0).max(1e-300);
     for (index, &v) in e.values.iter().enumerate() {
         if v <= eps {
@@ -83,7 +95,7 @@ pub fn preprocess(x_raw: &Mat, whitener: Whitener) -> Result<Preprocessed, IcaEr
     }
     let inv_sqrt: Vec<f64> = e.values.iter().map(|&v| 1.0 / v.sqrt()).collect();
     let vt = e.vectors.transpose();
-    let k = match whitener {
+    Ok(match whitener {
         Whitener::Sphering => {
             // D^{-1/2} Vᵀ : scale the rows of Vᵀ.
             let mut k = vt;
@@ -105,8 +117,85 @@ pub fn preprocess(x_raw: &Mat, whitener: Whitener) -> Result<Preprocessed, IcaEr
             }
             matmul(&vd, &vt)
         }
-    };
-    let xw = matmul(&k, &x);
+    })
+}
+
+/// Streamed centering + whitening: two chunked passes over a
+/// [`DataSource`], never materializing the raw `N×T` matrix.
+///
+/// Pass 1 folds every chunk into a [`StreamingStats`] accumulator
+/// (mean + covariance via chunked outer-product updates); the whitener
+/// is derived from the accumulated covariance exactly as in
+/// [`preprocess`]. Pass 2 re-streams the source, centering and whitening
+/// chunk by chunk into the assembled output the solver consumes.
+///
+/// Fail-closed on everything [`preprocess`] rejects, plus sources whose
+/// yielded sample count disagrees with their declared shape.
+pub fn preprocess_source(
+    src: &mut dyn DataSource,
+    whitener: Whitener,
+    chunk_cols: usize,
+) -> Result<Preprocessed, IcaError> {
+    let (n, t) = (src.rows(), src.cols());
+    if n == 0 || t < 2 {
+        return Err(IcaError::invalid_input(format!(
+            "data must have at least 1 row and 2 columns, got {n}x{t}"
+        )));
+    }
+    let chunk_cols = chunk_cols.max(1);
+
+    // Pass 1: moments. File sources reject NaN/∞ while parsing; only
+    // sources without that guarantee (e.g. MemSource) get scanned here.
+    let check_finite = !src.validates_finite();
+    let mut stats = StreamingStats::new(n);
+    src.reset()?;
+    while let Some(chunk) = src.next_chunk(chunk_cols)? {
+        if chunk.rows() != n {
+            return Err(IcaError::invalid_input(format!(
+                "source {} yielded a chunk with {} rows, expected {n}",
+                src.label(),
+                chunk.rows()
+            )));
+        }
+        if check_finite && !chunk.as_slice().iter().all(|v| v.is_finite()) {
+            return Err(IcaError::NonFinite {
+                what: format!("input data from {}", src.label()),
+            });
+        }
+        stats.update(&chunk);
+    }
+    check_complete(stats.count(), t, src)?;
+    let means = stats.means()?;
+    let c = stats.covariance()?;
+    let k = whitening_from_cov(&c, whitener)?;
+
+    // Pass 2: center + whiten chunk by chunk into the assembled output.
+    // The whitened-chunk buffer is reused across chunks (reallocated only
+    // for the final short chunk).
+    let mut xw = Mat::zeros(n, t);
+    let mut wchunk = Mat::zeros(n, chunk_cols.min(t));
+    let mut off = 0usize;
+    src.reset()?;
+    while let Some(mut chunk) = src.next_chunk(chunk_cols)? {
+        if chunk.rows() != n {
+            return Err(IcaError::invalid_input(format!(
+                "source {} changed shape between passes",
+                src.label()
+            )));
+        }
+        for (i, &m) in means.iter().enumerate() {
+            for v in chunk.row_mut(i) {
+                *v -= m;
+            }
+        }
+        if wchunk.cols() != chunk.cols() {
+            wchunk = Mat::zeros(n, chunk.cols());
+        }
+        matmul_into(&k, &chunk, &mut wchunk);
+        copy_columns(&mut xw, off, &wchunk, src)?;
+        off += wchunk.cols();
+    }
+    check_complete(off, t, src)?;
     Ok(Preprocessed { x: xw, k, means })
 }
 
@@ -219,6 +308,57 @@ mod tests {
         ));
         assert!(matches!(
             preprocess(&Mat::zeros(3, 1), Whitener::Pca),
+            Err(crate::error::IcaError::InvalidInput { .. })
+        ));
+    }
+
+    #[test]
+    fn preprocess_source_matches_batch_for_any_chunking() {
+        let x = correlated_data(5, 3000, 9);
+        let batch = preprocess(&x, Whitener::Sphering).unwrap();
+        for chunk_cols in [1usize, 100, 512, 3000, 10_000] {
+            let mut src = crate::data::MemSource::new(x.clone());
+            let p = preprocess_source(&mut src, Whitener::Sphering, chunk_cols).unwrap();
+            assert!(
+                p.k.max_abs_diff(&batch.k) < 1e-8,
+                "chunk {chunk_cols}: K deviates by {}",
+                p.k.max_abs_diff(&batch.k)
+            );
+            assert!(p.x.max_abs_diff(&batch.x) < 1e-8, "chunk {chunk_cols}");
+            for (a, b) in p.means.iter().zip(&batch.means) {
+                assert!((a - b).abs() < 1e-10);
+            }
+            assert_white(&p.x, 1e-8);
+        }
+    }
+
+    #[test]
+    fn preprocess_source_fails_closed() {
+        use crate::data::MemSource;
+        // Non-finite entries surface as NonFinite.
+        let mut x = correlated_data(3, 60, 10);
+        x[(2, 11)] = f64::INFINITY;
+        let mut src = MemSource::new(x);
+        assert!(matches!(
+            preprocess_source(&mut src, Whitener::Sphering, 16),
+            Err(crate::error::IcaError::NonFinite { .. })
+        ));
+        // Rank-deficient data surfaces as SingularCovariance.
+        let mut rng = Pcg64::new(11);
+        let norm = Normal::standard();
+        let row: Vec<f64> = norm.sample_n(&mut rng, 80);
+        let mut dup = Mat::zeros(2, 80);
+        dup.row_mut(0).copy_from_slice(&row);
+        dup.row_mut(1).copy_from_slice(&row);
+        let mut src = MemSource::new(dup);
+        assert!(matches!(
+            preprocess_source(&mut src, Whitener::Pca, 32),
+            Err(crate::error::IcaError::SingularCovariance { .. })
+        ));
+        // Degenerate shapes rejected up front.
+        let mut src = MemSource::new(Mat::zeros(3, 1));
+        assert!(matches!(
+            preprocess_source(&mut src, Whitener::Sphering, 8),
             Err(crate::error::IcaError::InvalidInput { .. })
         ));
     }

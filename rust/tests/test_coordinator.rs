@@ -104,6 +104,48 @@ fn panicking_job_is_isolated() {
     }
 }
 
+/// Regression for the invariant documented in `scheduler.rs` but
+/// previously untested for multi-job drain: poisoned (panicking) jobs are
+/// each reported as `JobOutcome::Panic`, while EVERY remaining job still
+/// runs to a `Done` outcome — even with more jobs than workers and a
+/// queue bound small enough to force backpressure after the panics.
+#[test]
+fn poisoned_jobs_do_not_stop_the_drain() {
+    let poisoned = [2usize, 5, 9];
+    let jobs: Vec<Job> = (0..12)
+        .map(|i| {
+            if poisoned.contains(&i) {
+                Job {
+                    id: i,
+                    label: format!("boom{i}"),
+                    make_data: Box::new(move || panic!("poisoned job {i}")),
+                    config: SolverConfig::new(Algorithm::GradientDescent {
+                        oracle_ls: false,
+                    }),
+                    w0: None,
+                }
+            } else {
+                quick_job(i, i as u64, 2)
+            }
+        })
+        .collect();
+    let outcomes = run_jobs(jobs, PoolConfig { workers: 3, queue_bound: 2 });
+    assert_eq!(outcomes.len(), 12, "every job must report exactly once");
+    for (i, o) in outcomes.iter().enumerate() {
+        assert_eq!(o.id(), i, "outcomes sorted by id");
+        match o {
+            JobOutcome::Panic { id, message, .. } => {
+                assert!(poisoned.contains(id), "job {id} must not panic");
+                assert!(message.contains(&format!("poisoned job {id}")), "{message}");
+            }
+            JobOutcome::Done { id, result, .. } => {
+                assert!(!poisoned.contains(id), "job {id} must panic");
+                assert!(!result.trace.records.is_empty());
+            }
+        }
+    }
+}
+
 #[test]
 fn custom_w0_is_respected() {
     let mut w0 = Mat::eye(4);
