@@ -81,7 +81,7 @@ fn main() {
         let d = faster_ica::signal::experiment_b(9, 3000, 3);
         faster_ica::preprocessing::preprocess(&d.x, faster_ica::preprocessing::Whitener::Sphering)
             .expect("whitening")
-            .x
+            .into_dense()
     };
     for lam in [1e-4, 1e-2, 1e-1, 0.5] {
         let mut be = NativeBackend::new(xb.clone());

@@ -1,0 +1,365 @@
+//! Chunked out-of-core backend: per-iteration sweeps that re-stream the
+//! whitened data from disk instead of holding it in memory.
+//!
+//! Where [`super::NativeBackend`] and [`super::ShardedBackend`] own the
+//! whitened `N×T` matrix, this backend owns a **resettable
+//! [`DataSource`]** — typically the `FICA1` scratch file pass 2 of
+//! `preprocess_source_with` wrote — and re-streams it on every
+//! [`ComputeBackend`] request. Each chunk's Θ(N²·chunk) work is
+//! dispatched to the same [`WorkerPool`] the sharded backend runs on
+//! (reading the next chunk overlaps computing the previous ones), and the
+//! **unnormalized** chunk partials are absorbed in chunk order, so:
+//!
+//! - results are bitwise-independent of the worker count,
+//! - a single chunk covering all of T is bitwise-identical to the native
+//!   sweep (same kernels via `super::shard`),
+//! - multi-chunk results differ from native only by the chunk-boundary
+//!   re-association of the sums (≪ 1e-12 on standardized data),
+//!
+//! and peak resident data is O(N·chunk·workers) — T is bounded by disk,
+//! not RAM.
+//!
+//! The scratch file is validated when the backend is built; a read
+//! failure *mid-solve* (the file vanished or shrank underneath us) is an
+//! environment failure the [`ComputeBackend`] signature cannot surface,
+//! and panics with a descriptive message.
+
+use super::pool::{Pipeline, WorkerPool};
+use super::shard::{self, finalize_grad_batch, finalize_stats, Partial};
+use super::{ComputeBackend, IcaStats, StatsLevel};
+use crate::data::{DataSource, ScratchFile};
+use crate::error::IcaError;
+use crate::linalg::Mat;
+use std::sync::{Arc, Mutex};
+
+/// One worker's reusable sweep workspaces. Chunk jobs are dispatched to
+/// the pool round-robin, so workspace `w` is only ever touched by pool
+/// worker `w` — the mutex is uncontended and just makes the handoff
+/// explicit. Buffers are reallocated only when the chunk width changes
+/// (once per sweep, for the final short chunk), so the solve hot loop
+/// performs no repeated size-T allocation.
+struct ChunkWs {
+    y: Mat,
+    psi: Mat,
+    psip: Mat,
+    ysq: Mat,
+}
+
+impl ChunkWs {
+    fn new() -> Self {
+        Self {
+            y: Mat::zeros(0, 0),
+            psi: Mat::zeros(0, 0),
+            psip: Mat::zeros(0, 0),
+            ysq: Mat::zeros(0, 0),
+        }
+    }
+}
+
+fn ensure(m: &mut Mat, n: usize, c: usize) {
+    if m.rows() != n || m.cols() != c {
+        *m = Mat::zeros(n, c);
+    }
+}
+
+/// Out-of-core [`ComputeBackend`] over a re-streamable whitened source.
+pub struct ChunkedBackend {
+    n: usize,
+    t: usize,
+    chunk_cols: usize,
+    src: Box<dyn DataSource>,
+    /// RAII guard for the scratch file (when we own one): removing it is
+    /// tied to this backend's lifetime, success or error alike.
+    _scratch: Option<ScratchFile>,
+    pool: WorkerPool,
+    workspaces: Vec<Arc<Mutex<ChunkWs>>>,
+}
+
+impl ChunkedBackend {
+    /// Stream from an arbitrary resettable source (used by tests and the
+    /// in-memory twin of the out-of-core path). `chunk_cols` and
+    /// `workers` are clamped to >= 1.
+    pub fn from_source(
+        src: Box<dyn DataSource>,
+        chunk_cols: usize,
+        workers: usize,
+    ) -> Result<Self, IcaError> {
+        let (n, t) = (src.rows(), src.cols());
+        if n == 0 || t == 0 {
+            return Err(IcaError::invalid_input(format!(
+                "chunked backend needs a non-empty source, got {n}x{t} from {}",
+                src.label()
+            )));
+        }
+        let chunk_cols = chunk_cols.max(1);
+        // More workers than chunks would idle; keep the pool right-sized.
+        let workers = workers.max(1).min(t.div_ceil(chunk_cols));
+        let workspaces = (0..workers)
+            .map(|_| Arc::new(Mutex::new(ChunkWs::new())))
+            .collect();
+        Ok(Self {
+            n,
+            t,
+            chunk_cols,
+            src,
+            _scratch: None,
+            pool: WorkerPool::new(workers),
+            workspaces,
+        })
+    }
+
+    /// Stream from a whitened `FICA1` scratch file, taking ownership of
+    /// its removal guard. The file is validated (magic, dimensions,
+    /// exact payload length) before the first sweep.
+    pub fn from_scratch(
+        scratch: ScratchFile,
+        chunk_cols: usize,
+        workers: usize,
+    ) -> Result<Self, IcaError> {
+        let src = crate::data::BinSource::open(scratch.path())?;
+        let mut be = Self::from_source(Box::new(src), chunk_cols, workers)?;
+        be._scratch = Some(scratch);
+        Ok(be)
+    }
+
+    /// Number of pool workers serving the chunk jobs.
+    pub fn workers(&self) -> usize {
+        self.pool.workers()
+    }
+
+    /// One pass over the sample range `range` (default: all of `[0, T)`):
+    /// dispatch `job(chunk, global_lo, workspace)` per chunk to the pool,
+    /// absorb the partials **in chunk order** (a strict left fold, so the
+    /// sum is independent of the worker count), and return the combined
+    /// unnormalized sums.
+    ///
+    /// Data outside `range` is skipped via [`DataSource::skip_cols`] — a
+    /// seek on file sources, so a `grad_batch` minibatch reads only its
+    /// own samples instead of decoding the whole file.
+    fn round(
+        &mut self,
+        range: Option<(usize, usize)>,
+        job: impl Fn(Mat, usize, &mut ChunkWs) -> Partial + Send + Sync + 'static,
+    ) -> Partial {
+        fn absorb(acc: &mut Option<Partial>, p: Partial) {
+            *acc = Some(match acc.take() {
+                None => p,
+                Some(a) => a.combine(p),
+            });
+        }
+        fn die(e: IcaError) -> ! {
+            panic!("out-of-core scratch read failed mid-solve: {e}")
+        }
+        let job = Arc::new(job);
+        let mut acc: Option<Partial> = None;
+        let (start, end) = range.unwrap_or((0, self.t));
+        debug_assert!(start < end && end <= self.t);
+        self.src.reset().unwrap_or_else(|e| die(e));
+        if start > 0 {
+            let skipped = self.src.skip_cols(start).unwrap_or_else(|e| die(e));
+            assert_eq!(skipped, start, "scratch shrank mid-solve");
+        }
+        let mut pipe = Pipeline::new(&self.pool);
+        let mut lo = start;
+        let mut dispatched = 0usize;
+        while lo < end {
+            let want = self.chunk_cols.min(end - lo);
+            let chunk = match self.src.next_chunk(want) {
+                Ok(Some(c)) => c,
+                Ok(None) => panic!(
+                    "out-of-core scratch ended at sample {lo} of {} mid-solve",
+                    self.t
+                ),
+                Err(e) => die(e),
+            };
+            assert_eq!(chunk.rows(), self.n, "scratch changed shape mid-solve");
+            let cols = chunk.cols();
+            let job = Arc::clone(&job);
+            let ws = Arc::clone(&self.workspaces[dispatched % self.workspaces.len()]);
+            dispatched += 1;
+            if let Some(p) = pipe.submit(move || {
+                let mut ws = ws.lock().expect("chunk workspace poisoned");
+                job(chunk, lo, &mut ws)
+            }) {
+                absorb(&mut acc, p);
+            }
+            lo += cols;
+        }
+        while let Some(p) = pipe.next_result() {
+            absorb(&mut acc, p);
+        }
+        acc.expect("at least one chunk dispatched")
+    }
+}
+
+impl ComputeBackend for ChunkedBackend {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn t(&self) -> usize {
+        self.t
+    }
+
+    fn stats(&mut self, w: &Mat, level: StatsLevel) -> IcaStats {
+        let (n, t) = (self.n, self.t);
+        assert_eq!((w.rows(), w.cols()), (n, n));
+        let w = Arc::new(w.clone());
+        let p = self.round(None, move |chunk, _lo, ws| {
+            let c = chunk.cols();
+            ensure(&mut ws.y, n, c);
+            ensure(&mut ws.psi, n, c);
+            if level >= StatsLevel::H1 {
+                ensure(&mut ws.psip, n, c);
+                ensure(&mut ws.ysq, n, c);
+            }
+            shard::stats_partial(
+                &w,
+                &chunk,
+                level,
+                &mut ws.y,
+                &mut ws.psi,
+                &mut ws.psip,
+                &mut ws.ysq,
+            )
+        });
+        finalize_stats(p, n, t)
+    }
+
+    fn loss_data(&mut self, w: &Mat) -> f64 {
+        let n = self.n;
+        assert_eq!((w.rows(), w.cols()), (n, n));
+        let w = Arc::new(w.clone());
+        let p = self.round(None, move |chunk, _lo, ws| {
+            ensure(&mut ws.y, n, chunk.cols());
+            shard::loss_partial(&w, &chunk, &mut ws.y)
+        });
+        p.loss / self.t as f64
+    }
+
+    fn grad_batch(&mut self, w: &Mat, lo: usize, hi: usize) -> Mat {
+        let n = self.n;
+        assert!(lo < hi && hi <= self.t, "bad batch range [{lo},{hi})");
+        let w = Arc::new(w.clone());
+        let p = self.round(Some((lo, hi)), move |chunk, chunk_lo, ws| {
+            let c = chunk.cols();
+            ensure(&mut ws.y, n, c);
+            ensure(&mut ws.psi, n, c);
+            shard::grad_batch_partial(&w, &chunk, chunk_lo, lo, hi, &mut ws.y, &mut ws.psi)
+        });
+        finalize_grad_batch(p, n, lo, hi)
+    }
+
+    fn name(&self) -> &'static str {
+        "chunked"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::NativeBackend;
+    use super::*;
+    use crate::data::MemSource;
+    use crate::rng::{Laplace, Pcg64, Sample};
+
+    fn test_problem(n: usize, t: usize, seed: u64) -> (Mat, Mat) {
+        let mut rng = Pcg64::new(seed);
+        let lap = Laplace::standard();
+        let x = Mat::from_fn(n, t, |_, _| lap.sample(&mut rng));
+        let w = crate::testkit::gen::well_conditioned(&mut rng, n);
+        (x, w)
+    }
+
+    fn chunked(x: &Mat, chunk: usize, workers: usize) -> ChunkedBackend {
+        ChunkedBackend::from_source(Box::new(MemSource::new(x.clone())), chunk, workers)
+            .expect("chunked backend")
+    }
+
+    #[test]
+    fn matches_native_within_1e12_for_any_chunking() {
+        let (x, w) = test_problem(5, 1200, 1);
+        let mut native = NativeBackend::new(x.clone());
+        let want = native.stats(&w, StatsLevel::H2);
+        let want_loss = native.loss_data(&w);
+        let want_gb = native.grad_batch(&w, 101, 900);
+        for chunk in [1usize, 7, 128, 5000] {
+            for workers in [1usize, 4] {
+                let mut be = chunked(&x, chunk, workers);
+                assert_eq!((be.n(), be.t()), (5, 1200));
+                let got = be.stats(&w, StatsLevel::H2);
+                let tag = format!("chunk {chunk} workers {workers}");
+                assert!(
+                    (got.loss_data - want.loss_data).abs() < 1e-12,
+                    "{tag}: loss"
+                );
+                assert!(got.g.max_abs_diff(&want.g) < 1e-12, "{tag}: G");
+                assert!(got.h2.max_abs_diff(&want.h2) < 1e-12, "{tag}: h2");
+                for i in 0..5 {
+                    assert!((got.h1[i] - want.h1[i]).abs() < 1e-12, "{tag}: h1[{i}]");
+                    assert!(
+                        (got.sigma2[i] - want.sigma2[i]).abs() < 1e-12,
+                        "{tag}: sigma2[{i}]"
+                    );
+                }
+                assert!((be.loss_data(&w) - want_loss).abs() < 1e-12, "{tag}: loss_data");
+                assert!(
+                    be.grad_batch(&w, 101, 900).max_abs_diff(&want_gb) < 1e-12,
+                    "{tag}: grad_batch"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_chunk_is_bitwise_native() {
+        let (x, w) = test_problem(4, 700, 2);
+        let mut native = NativeBackend::new(x.clone());
+        let mut be = chunked(&x, 700, 3); // one chunk covers all of T
+        let a = native.stats(&w, StatsLevel::H2);
+        let b = be.stats(&w, StatsLevel::H2);
+        assert!(a.loss_data == b.loss_data);
+        assert!(a.g.max_abs_diff(&b.g) == 0.0);
+        assert!(a.h2.max_abs_diff(&b.h2) == 0.0);
+        assert_eq!(a.h1, b.h1);
+        assert_eq!(a.sigma2, b.sigma2);
+        assert!(native.loss_data(&w) == be.loss_data(&w));
+    }
+
+    #[test]
+    fn results_are_bitwise_independent_of_worker_count() {
+        let (x, w) = test_problem(4, 901, 3);
+        let mut one = chunked(&x, 64, 1);
+        let a = one.stats(&w, StatsLevel::H2);
+        for workers in [2usize, 3, 4] {
+            let mut be = chunked(&x, 64, workers);
+            let b = be.stats(&w, StatsLevel::H2);
+            assert!(a.loss_data == b.loss_data, "workers {workers}");
+            assert!(a.g.max_abs_diff(&b.g) == 0.0, "workers {workers}");
+            assert!(a.h2.max_abs_diff(&b.h2) == 0.0, "workers {workers}");
+            assert_eq!(a.h1, b.h1);
+            assert_eq!(a.sigma2, b.sigma2);
+        }
+    }
+
+    #[test]
+    fn grad_batch_only_dispatches_overlapping_chunks() {
+        let (x, w) = test_problem(3, 600, 4);
+        let mut native = NativeBackend::new(x.clone());
+        let mut be = chunked(&x, 50, 2);
+        for (lo, hi) in [(0, 600), (0, 50), (550, 600), (49, 51), (200, 400)] {
+            let a = native.grad_batch(&w, lo, hi);
+            let b = be.grad_batch(&w, lo, hi);
+            assert!(a.max_abs_diff(&b) < 1e-12, "range [{lo},{hi})");
+        }
+    }
+
+    #[test]
+    fn rejects_empty_sources() {
+        let r = ChunkedBackend::from_source(
+            Box::new(MemSource::new(Mat::zeros(0, 0))),
+            8,
+            1,
+        );
+        assert!(matches!(r, Err(IcaError::InvalidInput { .. })));
+    }
+}

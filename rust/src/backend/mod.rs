@@ -7,12 +7,16 @@
 //! - the relative gradient `G = Ê[ψ(Y)Yᵀ] - I` (eq. 3),
 //! - the Hessian-approximation moments `ĥ_ij`, `ĥ_i`, `σ̂_j²` (eq. 4),
 //!
-//! where `Y = WX`. Two implementations:
+//! where `Y = WX`. The implementations:
 //!
 //! - [`NativeBackend`] — pure Rust, fused single-sweep, always available.
 //! - [`ShardedBackend`] — the native sweep split across the T axis over a
-//!   persistent worker-thread pool, with deterministic tree-order
-//!   reduction of the per-shard moments.
+//!   persistent [`WorkerPool`], with deterministic tree-order reduction
+//!   of the per-shard moments.
+//! - [`ChunkedBackend`] — the out-of-core path: re-streams the whitened
+//!   data (typically a `FICA1` scratch file) chunk by chunk per
+//!   iteration, dispatching each chunk's work to the same pool and
+//!   absorbing partials in chunk order; T is bounded by disk, not RAM.
 //! - `XlaBackend` (in [`crate::runtime`]) — executes the AOT-compiled
 //!   JAX/Pallas artifact through PJRT; Python is never on this path.
 //!
@@ -21,11 +25,16 @@
 //! with the library's own LU (LAPACK custom-calls cannot be served by the
 //! CPU PJRT plugin of xla_extension 0.5.1).
 
+mod chunked;
 mod native;
+mod pool;
+mod shard;
 mod sharded;
 mod sweep;
 
+pub use chunked::ChunkedBackend;
 pub use native::NativeBackend;
+pub use pool::{Pipeline, Ticket, WorkerPool};
 pub use sharded::ShardedBackend;
 
 use crate::linalg::Mat;

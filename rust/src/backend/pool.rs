@@ -1,0 +1,165 @@
+//! Persistent worker-thread pool shared by the parallel compute paths.
+//!
+//! Extracted from [`super::ShardedBackend`] (which owned its threads
+//! directly before the out-of-core work) so that the same pool can serve
+//! three different workloads:
+//!
+//! - the sharded per-iteration sweeps (one long-lived shard per worker),
+//! - the chunked out-of-core sweeps (a stream of transient chunk jobs),
+//! - the streaming preprocessing passes (moments and whitening per chunk).
+//!
+//! The pool is deliberately dumb: `submit(slot, job)` runs `job` on worker
+//! `slot % workers` and hands back a [`Ticket`] to wait on. Workers process
+//! their queue FIFO, so submitting jobs round-robin and waiting on tickets
+//! in submission order yields results in submission order — which is what
+//! keeps every reduction built on top of the pool deterministic.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed-size pool of persistent worker threads executing boxed jobs.
+pub struct WorkerPool {
+    tx: Vec<Sender<Task>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+/// Handle for one submitted job's result.
+pub struct Ticket<R>(Receiver<R>);
+
+impl<R> Ticket<R> {
+    /// Block until the job finishes and return its result.
+    ///
+    /// Panics if the worker died (a job panicked) — pool jobs are pure
+    /// numeric kernels, so that is a bug, not a user error.
+    pub fn wait(self) -> R {
+        self.0.recv().expect("worker pool job vanished (worker died?)")
+    }
+}
+
+impl WorkerPool {
+    /// Spawn `workers` (clamped to >= 1) persistent worker threads.
+    pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        let mut tx = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let (t, r) = channel::<Task>();
+            handles.push(std::thread::spawn(move || {
+                while let Ok(task) = r.recv() {
+                    task();
+                }
+            }));
+            tx.push(t);
+        }
+        Self { tx, handles }
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.tx.len()
+    }
+
+    /// Run `job` on worker `slot % workers`, returning a [`Ticket`] for
+    /// its result. Jobs submitted to the same slot run FIFO.
+    pub fn submit<R: Send + 'static>(
+        &self,
+        slot: usize,
+        job: impl FnOnce() -> R + Send + 'static,
+    ) -> Ticket<R> {
+        let (rtx, rrx) = channel();
+        let task: Task = Box::new(move || {
+            // A dropped Ticket just discards the result.
+            let _ = rtx.send(job());
+        });
+        self.tx[slot % self.tx.len()]
+            .send(task)
+            .expect("worker pool hung up");
+        Ticket(rrx)
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Closing the command channels ends every worker loop.
+        self.tx.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Ordered, bounded-in-flight job pipeline over a [`WorkerPool`]: submit
+/// jobs as a stream, absorb results **in submission order**, never holding
+/// more than `workers + 1` results' worth of work in flight — the memory
+/// bound the out-of-core paths rely on.
+pub struct Pipeline<'a, R> {
+    pool: &'a WorkerPool,
+    pending: VecDeque<Ticket<R>>,
+    slot: usize,
+}
+
+impl<'a, R: Send + 'static> Pipeline<'a, R> {
+    pub fn new(pool: &'a WorkerPool) -> Self {
+        Self { pool, pending: VecDeque::new(), slot: 0 }
+    }
+
+    /// Submit the next job. If the pipeline is at capacity, the oldest
+    /// pending result is returned and must be absorbed by the caller
+    /// (results surface strictly in submission order).
+    pub fn submit(&mut self, job: impl FnOnce() -> R + Send + 'static) -> Option<R> {
+        let done = if self.pending.len() > self.pool.workers() {
+            Some(self.pending.pop_front().expect("non-empty pending queue").wait())
+        } else {
+            None
+        };
+        self.pending.push_back(self.pool.submit(self.slot, job));
+        self.slot += 1;
+        done
+    }
+
+    /// Wait for the oldest still-pending result, in submission order.
+    pub fn next_result(&mut self) -> Option<R> {
+        self.pending.pop_front().map(Ticket::wait)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_come_back_in_submission_order() {
+        let pool = WorkerPool::new(3);
+        let tickets: Vec<_> = (0..10u64)
+            .map(|i| pool.submit(i as usize, move || i * i))
+            .collect();
+        let got: Vec<u64> = tickets.into_iter().map(Ticket::wait).collect();
+        assert_eq!(got, (0..10u64).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pipeline_preserves_order_under_bounded_capacity() {
+        let pool = WorkerPool::new(2);
+        let mut pipe = Pipeline::new(&pool);
+        let mut out = Vec::new();
+        for i in 0..20u64 {
+            if let Some(r) = pipe.submit(move || i + 100) {
+                out.push(r);
+            }
+        }
+        while let Some(r) = pipe.next_result() {
+            out.push(r);
+        }
+        assert_eq!(out, (100..120u64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_pool_still_works() {
+        let pool = WorkerPool::new(0); // clamped to 1
+        assert_eq!(pool.workers(), 1);
+        assert_eq!(pool.submit(7, || 41 + 1).wait(), 42);
+    }
+}

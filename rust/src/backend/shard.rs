@@ -1,0 +1,248 @@
+//! Per-shard raw statistics shared by [`super::ShardedBackend`] and
+//! [`super::ChunkedBackend`].
+//!
+//! Both backends split the T axis and sum **unnormalized** per-piece
+//! moments; the loop bodies live here exactly once (over the fused
+//! `super::sweep` kernels), so "a single piece is bitwise-identical to
+//! the native sweep over the same columns" holds by construction for
+//! both of them.
+
+use super::{sweep, IcaStats, StatsLevel};
+use crate::ica::score::LogCosh;
+use crate::linalg::{matmul_a_bt_into, matmul_into, Mat};
+
+/// Unnormalized sums over one piece of the T axis. Empty (`0×0` /
+/// zero-length) fields mean "not requested"; [`Partial::combine`] treats
+/// them as absorbing.
+pub(super) struct Partial {
+    pub(super) loss: f64,
+    pub(super) g: Mat,
+    pub(super) h1: Vec<f64>,
+    pub(super) sigma2: Vec<f64>,
+    pub(super) h2: Mat,
+    pub(super) count: usize,
+}
+
+impl Partial {
+    pub(super) fn combine(mut self, other: Partial) -> Partial {
+        self.loss += other.loss;
+        self.count += other.count;
+        self.g = combine_mat(self.g, other.g);
+        self.h2 = combine_mat(self.h2, other.h2);
+        self.h1 = combine_vec(self.h1, other.h1);
+        self.sigma2 = combine_vec(self.sigma2, other.sigma2);
+        self
+    }
+}
+
+fn combine_mat(a: Mat, b: Mat) -> Mat {
+    if a.rows() == 0 {
+        b
+    } else if b.rows() == 0 {
+        a
+    } else {
+        let mut a = a;
+        a.add_inplace(&b);
+        a
+    }
+}
+
+fn combine_vec(a: Vec<f64>, b: Vec<f64>) -> Vec<f64> {
+    if a.is_empty() {
+        b
+    } else if b.is_empty() {
+        a
+    } else {
+        let mut a = a;
+        for (x, y) in a.iter_mut().zip(&b) {
+            *x += y;
+        }
+        a
+    }
+}
+
+/// Deterministic pairwise tree reduction over shard-ordered partials:
+/// `[p0, p1, p2, p3] → [p0+p1, p2+p3] → [(p0+p1)+(p2+p3)]`.
+pub(super) fn tree_reduce(mut parts: Vec<Partial>) -> Partial {
+    assert!(!parts.is_empty());
+    while parts.len() > 1 {
+        let mut next = Vec::with_capacity(parts.len().div_ceil(2));
+        let mut it = parts.into_iter();
+        while let Some(a) = it.next() {
+            match it.next() {
+                Some(b) => next.push(a.combine(b)),
+                None => next.push(a),
+            }
+        }
+        parts = next;
+    }
+    parts.pop().unwrap()
+}
+
+pub(super) fn row_sums(m: &Mat) -> Vec<f64> {
+    (0..m.rows()).map(|i| m.row(i).iter().sum::<f64>()).collect()
+}
+
+/// Raw sums of the full statistics over the columns of `x` — the exact
+/// kernels `NativeBackend::stats` runs (see `super::sweep`), minus
+/// normalization. `y`/`psi` (and `psip`/`ysq` when `level >= H1`) must be
+/// `x`-shaped workspaces.
+pub(super) fn stats_partial(
+    w: &Mat,
+    x: &Mat,
+    level: StatsLevel,
+    y: &mut Mat,
+    psi: &mut Mat,
+    psip: &mut Mat,
+    ysq: &mut Mat,
+) -> Partial {
+    let n = x.rows();
+    matmul_into(w, x, y);
+    let loss_acc = sweep::loss_psi_sweep(y, psi);
+    let need_h = level >= StatsLevel::H1;
+    if need_h {
+        sweep::psip_ysq_sweep(y, psi, psip, ysq);
+    }
+    let mut g = Mat::zeros(n, n);
+    matmul_a_bt_into(psi, y, &mut g);
+    let (mut h1, mut sigma2) = (Vec::new(), Vec::new());
+    if need_h {
+        h1 = row_sums(psip);
+        sigma2 = row_sums(ysq);
+    }
+    let mut h2 = Mat::zeros(0, 0);
+    if level == StatsLevel::H2 {
+        let mut h = Mat::zeros(n, n);
+        matmul_a_bt_into(psip, ysq, &mut h);
+        h2 = h;
+    }
+    Partial { loss: loss_acc, g, h1, sigma2, h2, count: x.cols() }
+}
+
+/// Raw loss sum over the columns of `x` (line-search probe).
+pub(super) fn loss_partial(w: &Mat, x: &Mat, y: &mut Mat) -> Partial {
+    matmul_into(w, x, y);
+    Partial {
+        loss: sweep::loss_sum(y),
+        g: Mat::zeros(0, 0),
+        h1: Vec::new(),
+        sigma2: Vec::new(),
+        h2: Mat::zeros(0, 0),
+        count: x.cols(),
+    }
+}
+
+/// Raw `ψ(Y_b) Y_bᵀ` sum over the intersection of the global sample range
+/// `[glo, ghi)` with this piece's columns (`x` holds global columns
+/// `[piece_lo, piece_lo + x.cols())`).
+pub(super) fn grad_batch_partial(
+    w: &Mat,
+    x: &Mat,
+    piece_lo: usize,
+    glo: usize,
+    ghi: usize,
+    y: &mut Mat,
+    psi: &mut Mat,
+) -> Partial {
+    let n = x.rows();
+    let (slo, shi) = (piece_lo, piece_lo + x.cols());
+    let lo = glo.max(slo);
+    let hi = ghi.min(shi);
+    let mut g = Mat::zeros(n, n);
+    let mut count = 0;
+    if lo < hi {
+        let tb = hi - lo;
+        g = sweep::batch_grad_raw(w, x, lo - slo, tb, LogCosh, y, psi);
+        count = tb;
+    }
+    Partial {
+        loss: 0.0,
+        g,
+        h1: Vec::new(),
+        sigma2: Vec::new(),
+        h2: Mat::zeros(0, 0),
+        count,
+    }
+}
+
+/// Normalize a full-statistics [`Partial`] over `t` samples into the
+/// [`IcaStats`] the solver consumes — shared by the sharded and chunked
+/// backends so the two normalize identically.
+pub(super) fn finalize_stats(p: Partial, n: usize, t: usize) -> IcaStats {
+    debug_assert_eq!(p.count, t);
+    let tf = t as f64;
+    let mut g = p.g;
+    g.scale_inplace(1.0 / tf);
+    for i in 0..n {
+        g[(i, i)] -= 1.0;
+    }
+    let h1: Vec<f64> = p.h1.iter().map(|&v| v / tf).collect();
+    let sigma2: Vec<f64> = p.sigma2.iter().map(|&v| v / tf).collect();
+    let mut h2 = p.h2;
+    if h2.rows() > 0 {
+        h2.scale_inplace(1.0 / tf);
+    }
+    IcaStats { loss_data: p.loss / tf, g, h1, sigma2, h2 }
+}
+
+/// Normalize a batch-gradient [`Partial`] over the range `[lo, hi)`.
+pub(super) fn finalize_grad_batch(p: Partial, n: usize, lo: usize, hi: usize) -> Mat {
+    debug_assert_eq!(p.count, hi - lo);
+    let tb = (hi - lo) as f64;
+    let mut g = p.g;
+    for i in 0..n {
+        for j in 0..n {
+            g[(i, j)] = g[(i, j)] / tb - if i == j { 1.0 } else { 0.0 };
+        }
+    }
+    g
+}
+
+/// One long-lived piece of the T axis: an owned contiguous column block
+/// of `X` plus preallocated workspaces, mirroring `NativeBackend`'s
+/// layout exactly so the single-worker case is bitwise-identical to the
+/// native sweep. [`super::ShardedBackend`] keeps one per worker; the
+/// chunked backend uses the free functions above with transient buffers.
+pub(super) struct Shard {
+    x: Mat,
+    /// Global column index of this shard's first sample.
+    lo: usize,
+    y: Mat,
+    psi: Mat,
+    psip: Mat,
+    ysq: Mat,
+}
+
+impl Shard {
+    pub(super) fn new(x: Mat, lo: usize) -> Self {
+        let (n, tb) = (x.rows(), x.cols());
+        Self {
+            x,
+            lo,
+            y: Mat::zeros(n, tb),
+            psi: Mat::zeros(n, tb),
+            psip: Mat::zeros(n, tb),
+            ysq: Mat::zeros(n, tb),
+        }
+    }
+
+    pub(super) fn stats_partial(&mut self, w: &Mat, level: StatsLevel) -> Partial {
+        stats_partial(
+            w,
+            &self.x,
+            level,
+            &mut self.y,
+            &mut self.psi,
+            &mut self.psip,
+            &mut self.ysq,
+        )
+    }
+
+    pub(super) fn loss_partial(&mut self, w: &Mat) -> Partial {
+        loss_partial(w, &self.x, &mut self.y)
+    }
+
+    pub(super) fn grad_batch_partial(&mut self, w: &Mat, glo: usize, ghi: usize) -> Partial {
+        grad_batch_partial(w, &self.x, self.lo, glo, ghi, &mut self.y, &mut self.psi)
+    }
+}

@@ -3,12 +3,12 @@
 //!
 //! The coordinator already parallelizes *across* solver runs; this
 //! backend parallelizes *within* one solve. At construction the dataset
-//! is split into `workers` contiguous column shards, each owned by a
-//! persistent `std::thread` worker with its own preallocated workspaces
-//! (no allocation of size T in the solve hot loop, same as
-//! [`NativeBackend`]). Each request broadcasts `W` to the workers, which
-//! return **unnormalized** per-shard sums; the main thread combines them
-//! in a fixed pairwise tree order and normalizes once.
+//! is split into `workers` contiguous column shards, each pinned to one
+//! worker of a persistent [`WorkerPool`] with its own preallocated
+//! workspaces (no allocation of size T in the solve hot loop, same as
+//! [`super::NativeBackend`]). Each request broadcasts `W` to the workers,
+//! which return **unnormalized** per-shard sums; the main thread combines
+//! them in a fixed pairwise tree order and normalizes once.
 //!
 //! Determinism guarantees, relied on by tests:
 //!
@@ -16,268 +16,72 @@
 //!   boundaries, per-shard loop order, and the reduction tree are all
 //!   deterministic, and no accumulation order depends on thread timing.
 //! - With `workers == 1` the arithmetic is operation-for-operation the
-//!   same as [`NativeBackend`], so the two agree bitwise.
+//!   same as [`super::NativeBackend`], so the two agree bitwise.
 //! - Across worker counts results differ only by floating-point
 //!   re-association of the shard sums (≪ 1e-12 on standardized data).
 
-use super::{sweep, ComputeBackend, IcaStats, StatsLevel};
-use crate::ica::score::LogCosh;
-use crate::linalg::{matmul_a_bt_into, matmul_into, Mat};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::thread::JoinHandle;
-
-enum Cmd {
-    Stats { w: Mat, level: StatsLevel },
-    Loss { w: Mat },
-    GradBatch { w: Mat, lo: usize, hi: usize },
-}
-
-/// Unnormalized per-shard sums. Empty (`0×0` / zero-length) fields mean
-/// "not requested"; [`Partial::combine`] treats them as absorbing.
-struct Partial {
-    loss: f64,
-    g: Mat,
-    h1: Vec<f64>,
-    sigma2: Vec<f64>,
-    h2: Mat,
-    count: usize,
-}
-
-impl Partial {
-    fn combine(mut self, other: Partial) -> Partial {
-        self.loss += other.loss;
-        self.count += other.count;
-        self.g = combine_mat(self.g, other.g);
-        self.h2 = combine_mat(self.h2, other.h2);
-        self.h1 = combine_vec(self.h1, other.h1);
-        self.sigma2 = combine_vec(self.sigma2, other.sigma2);
-        self
-    }
-}
-
-fn combine_mat(a: Mat, b: Mat) -> Mat {
-    if a.rows() == 0 {
-        b
-    } else if b.rows() == 0 {
-        a
-    } else {
-        let mut a = a;
-        a.add_inplace(&b);
-        a
-    }
-}
-
-fn combine_vec(a: Vec<f64>, b: Vec<f64>) -> Vec<f64> {
-    if a.is_empty() {
-        b
-    } else if b.is_empty() {
-        a
-    } else {
-        let mut a = a;
-        for (x, y) in a.iter_mut().zip(&b) {
-            *x += y;
-        }
-        a
-    }
-}
-
-/// Deterministic pairwise tree reduction over shard-ordered partials:
-/// `[p0, p1, p2, p3] → [p0+p1, p2+p3] → [(p0+p1)+(p2+p3)]`.
-fn tree_reduce(mut parts: Vec<Partial>) -> Partial {
-    assert!(!parts.is_empty());
-    while parts.len() > 1 {
-        let mut next = Vec::with_capacity(parts.len().div_ceil(2));
-        let mut it = parts.into_iter();
-        while let Some(a) = it.next() {
-            match it.next() {
-                Some(b) => next.push(a.combine(b)),
-                None => next.push(a),
-            }
-        }
-        parts = next;
-    }
-    parts.pop().unwrap()
-}
-
-/// One worker's state: an owned contiguous column shard of `X` plus the
-/// per-shard workspaces, mirroring [`NativeBackend`]'s layout exactly so
-/// the single-worker case is bitwise-identical to the native sweep.
-struct Shard {
-    x: Mat,
-    /// Global column index of this shard's first sample.
-    lo: usize,
-    score: LogCosh,
-    y: Mat,
-    psi: Mat,
-    psip: Mat,
-    ysq: Mat,
-}
-
-impl Shard {
-    fn new(x: Mat, lo: usize) -> Self {
-        let (n, tb) = (x.rows(), x.cols());
-        Self {
-            x,
-            lo,
-            score: LogCosh,
-            y: Mat::zeros(n, tb),
-            psi: Mat::zeros(n, tb),
-            psip: Mat::zeros(n, tb),
-            ysq: Mat::zeros(n, tb),
-        }
-    }
-
-    /// Raw sums of the full statistics over this shard — the exact
-    /// kernels `NativeBackend::stats` runs (see `super::sweep`), minus
-    /// normalization.
-    fn stats_partial(&mut self, w: &Mat, level: StatsLevel) -> Partial {
-        let n = self.x.rows();
-        matmul_into(w, &self.x, &mut self.y);
-        let loss_acc = sweep::loss_psi_sweep(&self.y, &mut self.psi);
-        let need_h = level >= StatsLevel::H1;
-        if need_h {
-            sweep::psip_ysq_sweep(&self.y, &self.psi, &mut self.psip, &mut self.ysq);
-        }
-        let mut g = Mat::zeros(n, n);
-        matmul_a_bt_into(&self.psi, &self.y, &mut g);
-        let (mut h1, mut sigma2) = (Vec::new(), Vec::new());
-        if need_h {
-            h1 = row_sums(&self.psip);
-            sigma2 = row_sums(&self.ysq);
-        }
-        let mut h2 = Mat::zeros(0, 0);
-        if level == StatsLevel::H2 {
-            let mut h = Mat::zeros(n, n);
-            matmul_a_bt_into(&self.psip, &self.ysq, &mut h);
-            h2 = h;
-        }
-        Partial { loss: loss_acc, g, h1, sigma2, h2, count: self.x.cols() }
-    }
-
-    /// Raw loss sum over this shard.
-    fn loss_partial(&mut self, w: &Mat) -> Partial {
-        matmul_into(w, &self.x, &mut self.y);
-        Partial {
-            loss: sweep::loss_sum(&self.y),
-            g: Mat::zeros(0, 0),
-            h1: Vec::new(),
-            sigma2: Vec::new(),
-            h2: Mat::zeros(0, 0),
-            count: self.x.cols(),
-        }
-    }
-
-    /// Raw `ψ(Y_b) Y_bᵀ` sum over the intersection of the global range
-    /// `[glo, ghi)` with this shard.
-    fn grad_batch_partial(&mut self, w: &Mat, glo: usize, ghi: usize) -> Partial {
-        let n = self.x.rows();
-        let (slo, shi) = (self.lo, self.lo + self.x.cols());
-        let lo = glo.max(slo);
-        let hi = ghi.min(shi);
-        let mut g = Mat::zeros(n, n);
-        let mut count = 0;
-        if lo < hi {
-            let tb = hi - lo;
-            g = sweep::batch_grad_raw(
-                w,
-                &self.x,
-                lo - slo,
-                tb,
-                self.score,
-                &mut self.y,
-                &mut self.psi,
-            );
-            count = tb;
-        }
-        Partial {
-            loss: 0.0,
-            g,
-            h1: Vec::new(),
-            sigma2: Vec::new(),
-            h2: Mat::zeros(0, 0),
-            count,
-        }
-    }
-}
-
-fn row_sums(m: &Mat) -> Vec<f64> {
-    (0..m.rows()).map(|i| m.row(i).iter().sum::<f64>()).collect()
-}
-
-fn worker_loop(mut shard: Shard, rx: Receiver<Cmd>, tx: Sender<Partial>) {
-    while let Ok(cmd) = rx.recv() {
-        let part = match cmd {
-            Cmd::Stats { w, level } => shard.stats_partial(&w, level),
-            Cmd::Loss { w } => shard.loss_partial(&w),
-            Cmd::GradBatch { w, lo, hi } => shard.grad_batch_partial(&w, lo, hi),
-        };
-        if tx.send(part).is_err() {
-            break;
-        }
-    }
-}
+use super::pool::{Ticket, WorkerPool};
+use super::shard::{finalize_grad_batch, finalize_stats, tree_reduce, Partial, Shard};
+use super::{ComputeBackend, IcaStats, StatsLevel};
+use crate::linalg::Mat;
+use std::sync::{Arc, Mutex};
 
 /// Multithreaded [`ComputeBackend`] over contiguous T-axis shards.
 pub struct ShardedBackend {
     n: usize,
     t: usize,
-    cmd_tx: Vec<Sender<Cmd>>,
-    res_rx: Vec<Receiver<Partial>>,
-    handles: Vec<JoinHandle<()>>,
+    /// Shard `s` is always executed on pool worker `s`, so its mutex is
+    /// uncontended; the lock only makes the ownership transfer explicit.
+    shards: Vec<Arc<Mutex<Shard>>>,
+    pool: WorkerPool,
 }
 
 impl ShardedBackend {
     /// Split `x` into `workers` balanced contiguous column shards and
-    /// spawn one persistent worker thread per shard. `workers` is
-    /// clamped to `[1, T]` so no shard is empty.
+    /// pin one shard per pool worker. `workers` is clamped to `[1, T]`
+    /// so no shard is empty.
     pub fn new(x: Mat, workers: usize) -> Self {
         assert!(workers >= 1, "sharded backend needs at least 1 worker");
         let (n, t) = (x.rows(), x.cols());
         let workers = workers.min(t.max(1));
-        let mut cmd_tx = Vec::with_capacity(workers);
-        let mut res_rx = Vec::with_capacity(workers);
-        let mut handles = Vec::with_capacity(workers);
+        let mut shards = Vec::with_capacity(workers);
         for s in 0..workers {
             let lo = s * t / workers;
             let hi = (s + 1) * t / workers;
             let shard_x = Mat::from_fn(n, hi - lo, |i, c| x[(i, lo + c)]);
-            let shard = Shard::new(shard_x, lo);
-            let (ctx, crx) = channel::<Cmd>();
-            let (rtx, rrx) = channel::<Partial>();
-            handles.push(std::thread::spawn(move || worker_loop(shard, crx, rtx)));
-            cmd_tx.push(ctx);
-            res_rx.push(rrx);
+            shards.push(Arc::new(Mutex::new(Shard::new(shard_x, lo))));
         }
-        Self { n, t, cmd_tx, res_rx, handles }
+        let pool = WorkerPool::new(workers);
+        Self { n, t, shards, pool }
     }
 
     /// Number of worker threads (= shards).
     pub fn workers(&self) -> usize {
-        self.cmd_tx.len()
+        self.shards.len()
     }
 
-    /// Broadcast one command per worker and gather the partials in shard
-    /// order (receive order does not affect the reduction order).
-    fn round(&self, make_cmd: impl Fn() -> Cmd) -> Partial {
-        for tx in &self.cmd_tx {
-            tx.send(make_cmd()).expect("sharded worker hung up");
-        }
-        let parts: Vec<Partial> = self
-            .res_rx
+    /// Dispatch one job per shard to its pinned worker and gather the
+    /// partials in shard order (completion order does not affect the
+    /// reduction order).
+    fn round(
+        &self,
+        job: impl Fn(&mut Shard) -> Partial + Send + Sync + 'static,
+    ) -> Partial {
+        let job = Arc::new(job);
+        let tickets: Vec<Ticket<Partial>> = self
+            .shards
             .iter()
-            .map(|rx| rx.recv().expect("sharded worker died"))
+            .enumerate()
+            .map(|(s, shard)| {
+                let shard = Arc::clone(shard);
+                let job = Arc::clone(&job);
+                self.pool.submit(s, move || {
+                    let mut shard = shard.lock().expect("shard lock poisoned");
+                    job(&mut shard)
+                })
+            })
             .collect();
-        tree_reduce(parts)
-    }
-}
-
-impl Drop for ShardedBackend {
-    fn drop(&mut self) {
-        // Closing the command channels ends every worker loop.
-        self.cmd_tx.clear();
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
+        tree_reduce(tickets.into_iter().map(Ticket::wait).collect())
     }
 }
 
@@ -293,42 +97,24 @@ impl ComputeBackend for ShardedBackend {
     fn stats(&mut self, w: &Mat, level: StatsLevel) -> IcaStats {
         let (n, t) = (self.n, self.t);
         assert_eq!((w.rows(), w.cols()), (n, n));
-        let p = self.round(|| Cmd::Stats { w: w.clone(), level });
-        debug_assert_eq!(p.count, t);
-        let tf = t as f64;
-        let mut g = p.g;
-        g.scale_inplace(1.0 / tf);
-        for i in 0..n {
-            g[(i, i)] -= 1.0;
-        }
-        let h1: Vec<f64> = p.h1.iter().map(|&v| v / tf).collect();
-        let sigma2: Vec<f64> = p.sigma2.iter().map(|&v| v / tf).collect();
-        let mut h2 = p.h2;
-        if h2.rows() > 0 {
-            h2.scale_inplace(1.0 / tf);
-        }
-        IcaStats { loss_data: p.loss / tf, g, h1, sigma2, h2 }
+        let w = w.clone();
+        let p = self.round(move |shard| shard.stats_partial(&w, level));
+        finalize_stats(p, n, t)
     }
 
     fn loss_data(&mut self, w: &Mat) -> f64 {
         assert_eq!((w.rows(), w.cols()), (self.n, self.n));
-        let p = self.round(|| Cmd::Loss { w: w.clone() });
+        let w = w.clone();
+        let p = self.round(move |shard| shard.loss_partial(&w));
         p.loss / self.t as f64
     }
 
     fn grad_batch(&mut self, w: &Mat, lo: usize, hi: usize) -> Mat {
         let n = self.n;
         assert!(lo < hi && hi <= self.t, "bad batch range [{lo},{hi})");
-        let p = self.round(|| Cmd::GradBatch { w: w.clone(), lo, hi });
-        debug_assert_eq!(p.count, hi - lo);
-        let tb = (hi - lo) as f64;
-        let mut g = p.g;
-        for i in 0..n {
-            for j in 0..n {
-                g[(i, j)] = g[(i, j)] / tb - if i == j { 1.0 } else { 0.0 };
-            }
-        }
-        g
+        let w = w.clone();
+        let p = self.round(move |shard| shard.grad_batch_partial(&w, lo, hi));
+        finalize_grad_batch(p, n, lo, hi)
     }
 
     fn name(&self) -> &'static str {

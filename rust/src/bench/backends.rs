@@ -1,9 +1,14 @@
-//! Backend sweep benchmark behind `fica bench`: native vs sharded
-//! wall-clock for the full H̃² statistics sweep, reported as
-//! `BENCH_backend.json`.
+//! Backend benchmark behind `fica bench`, reported as
+//! `BENCH_backend.json` with two sections:
+//!
+//! - `results` — per-sweep wall-clock of the full H̃² statistics sweep,
+//!   native vs sharded (the original section).
+//! - `fit_results` — solver-level wall-clock of **entire fits**
+//!   (preprocess + solve, fixed iteration budget) comparing in-memory
+//!   native, in-memory sharded, and the out-of-core chunked path.
 //!
 //! The report schema (`fica.bench_backend/v1`) is stable so successive
-//! PRs can track the trajectory:
+//! PRs can track the trajectory; `fit_results` is an additive section:
 //!
 //! ```json
 //! {
@@ -14,6 +19,11 @@
 //!      "median_s": 0.61, "mean_s": 0.62, "sweeps_per_s": 1.64,
 //!      "speedup_vs_native": 1.0, "samples": [...]},
 //!     ...
+//!   ],
+//!   "fit_results": [
+//!     {"backend": "native", "out_of_core": false, "workers": 1,
+//!      "n": 32, "t": 100000, "iters": 10, "median_s": 3.1, ...},
+//!     ...
 //!   ]
 //! }
 //! ```
@@ -21,6 +31,7 @@
 use super::{black_box, Measurement};
 use crate::backend::{ComputeBackend, NativeBackend, ShardedBackend, StatsLevel};
 use crate::error::IcaError;
+use crate::estimator::{BackendChoice, Picard};
 use crate::linalg::Mat;
 use crate::rng::Pcg64;
 use crate::util::Json;
@@ -42,6 +53,15 @@ pub struct BackendBenchConfig {
     pub seed: u64,
     /// Whether this is the shrunken CI smoke configuration.
     pub smoke: bool,
+    /// Signal counts N for the solver-level (full-fit) benches.
+    pub fit_sizes: Vec<usize>,
+    /// Samples T for the fit benches.
+    pub fit_t: usize,
+    /// Fixed iteration budget per timed fit (tol 0 — never converges
+    /// early, so every fit does the same number of sweeps).
+    pub fit_iters: usize,
+    /// Timed fits per configuration.
+    pub fit_samples: usize,
 }
 
 impl BackendBenchConfig {
@@ -54,6 +74,10 @@ impl BackendBenchConfig {
             samples: 5,
             seed: 0,
             smoke: false,
+            fit_sizes: vec![8, 32],
+            fit_t: 100_000,
+            fit_iters: 10,
+            fit_samples: 2,
         }
     }
 
@@ -66,7 +90,17 @@ impl BackendBenchConfig {
             samples: 2,
             seed: 0,
             smoke: true,
+            fit_sizes: vec![4],
+            fit_t: 2_000,
+            fit_iters: 5,
+            fit_samples: 1,
         }
+    }
+
+    /// The worker count the parallel fit benches use (largest sweep
+    /// worker count, >= 2).
+    fn fit_workers(&self) -> usize {
+        self.workers.iter().copied().max().unwrap_or(2).max(2)
     }
 }
 
@@ -141,8 +175,98 @@ pub fn run(cfg: &BackendBenchConfig) -> Vec<SweepTiming> {
     out
 }
 
+/// One measured full-fit configuration.
+#[derive(Clone, Debug)]
+pub struct FitTiming {
+    pub backend: &'static str,
+    pub out_of_core: bool,
+    pub workers: usize,
+    pub n: usize,
+    pub t: usize,
+    /// Streaming chunk size the fit ran with (sized so the out-of-core
+    /// pool has at least `workers` chunks to dispatch).
+    pub chunk: usize,
+    pub samples: Vec<f64>,
+}
+
+impl FitTiming {
+    fn measurement(&self) -> Measurement {
+        Measurement {
+            name: format!(
+                "fit {}{} w={} N={}",
+                self.backend,
+                if self.out_of_core { " (out-of-core)" } else { "" },
+                self.workers,
+                self.n
+            ),
+            samples: self.samples.clone(),
+        }
+    }
+
+    pub fn median_s(&self) -> f64 {
+        self.measurement().median()
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        self.measurement().mean()
+    }
+}
+
+/// Run the solver-level fit matrix: whole `Picard::fit` calls
+/// (preprocess + solve at a fixed iteration budget) for in-memory native,
+/// in-memory sharded, out-of-core 1 worker, and out-of-core pooled.
+pub fn run_fits(cfg: &BackendBenchConfig) -> Vec<FitTiming> {
+    let w = cfg.fit_workers();
+    let configs: [(&'static str, BackendChoice, bool, usize); 4] = [
+        ("native", BackendChoice::Native, false, 1),
+        ("sharded", BackendChoice::Sharded { workers: w }, false, w),
+        ("chunked", BackendChoice::Native, true, 1),
+        ("chunked", BackendChoice::Sharded { workers: w }, true, w),
+    ];
+    // Chunk so every configuration (including the pooled out-of-core
+    // one) has at least 4 chunks per worker to dispatch — otherwise the
+    // reported worker count would overstate the parallelism actually
+    // measured (ChunkedBackend right-sizes its pool to the chunk count).
+    let chunk = cfg.fit_t.div_ceil(4 * w).max(1);
+    let mut out = Vec::new();
+    for &n in &cfg.fit_sizes {
+        let data = crate::signal::experiment_a(n, cfg.fit_t, cfg.seed ^ 0xf17);
+        for (backend_name, backend, out_of_core, workers) in configs {
+            let picard = Picard::new()
+                .backend(backend)
+                .out_of_core(out_of_core)
+                .chunk_cols(chunk)
+                .tol(0.0)
+                .max_iters(cfg.fit_iters);
+            let samples: Vec<f64> = (0..cfg.fit_samples)
+                .map(|_| {
+                    let t0 = std::time::Instant::now();
+                    black_box(picard.fit(&data.x).expect("bench fit"));
+                    t0.elapsed().as_secs_f64()
+                })
+                .collect();
+            let timing = FitTiming {
+                backend: backend_name,
+                out_of_core,
+                workers,
+                n,
+                t: cfg.fit_t,
+                chunk,
+                samples,
+            };
+            timing.measurement().report();
+            out.push(timing);
+        }
+    }
+    out
+}
+
 /// Build the stable `fica.bench_backend/v1` report.
-pub fn report_json(cfg: &BackendBenchConfig, timings: &[SweepTiming]) -> Json {
+pub fn report_json(
+    cfg: &BackendBenchConfig,
+    timings: &[SweepTiming],
+    fits: &[FitTiming],
+) -> Json {
     // Native medians per N, for the speedup column.
     let native_median: BTreeMap<usize, f64> = timings
         .iter()
@@ -178,6 +302,40 @@ pub fn report_json(cfg: &BackendBenchConfig, timings: &[SweepTiming]) -> Json {
             Json::Obj(obj)
         })
         .collect();
+    // In-memory-native fit medians per N, for the fit speedup column.
+    let native_fit_median: BTreeMap<usize, f64> = fits
+        .iter()
+        .filter(|f| f.backend == "native" && !f.out_of_core)
+        .map(|f| (f.n, f.median_s()))
+        .collect();
+    let fit_results: Vec<Json> = fits
+        .iter()
+        .map(|f| {
+            let median = f.median_s();
+            let mut obj = BTreeMap::new();
+            obj.insert("backend".into(), Json::Str(f.backend.to_string()));
+            obj.insert("out_of_core".into(), Json::Bool(f.out_of_core));
+            obj.insert("workers".into(), Json::Num(f.workers as f64));
+            obj.insert("n".into(), Json::Num(f.n as f64));
+            obj.insert("t".into(), Json::Num(f.t as f64));
+            obj.insert("chunk".into(), Json::Num(f.chunk as f64));
+            obj.insert("iters".into(), Json::Num(cfg.fit_iters as f64));
+            obj.insert("median_s".into(), Json::Num(median));
+            obj.insert("mean_s".into(), Json::Num(f.mean_s()));
+            obj.insert(
+                "speedup_vs_native".into(),
+                match native_fit_median.get(&f.n) {
+                    Some(&base) if median > 0.0 => Json::Num(base / median),
+                    _ => Json::Null,
+                },
+            );
+            obj.insert(
+                "samples".into(),
+                Json::Arr(f.samples.iter().map(|&s| Json::Num(s)).collect()),
+            );
+            Json::Obj(obj)
+        })
+        .collect();
     let mut root = BTreeMap::new();
     root.insert("schema".into(), Json::Str("fica.bench_backend/v1".into()));
     root.insert("level".into(), Json::Str("h2".into()));
@@ -188,6 +346,8 @@ pub fn report_json(cfg: &BackendBenchConfig, timings: &[SweepTiming]) -> Json {
         Json::Arr(cfg.sizes.iter().map(|&n| Json::Num(n as f64)).collect()),
     );
     root.insert("results".into(), Json::Arr(results));
+    root.insert("fit_t".into(), Json::Num(cfg.fit_t as f64));
+    root.insert("fit_results".into(), Json::Arr(fit_results));
     Json::Obj(root)
 }
 
@@ -211,10 +371,16 @@ mod tests {
             samples: 1,
             seed: 1,
             smoke: true,
+            fit_sizes: vec![3],
+            fit_t: 200,
+            fit_iters: 2,
+            fit_samples: 1,
         };
         let timings = run(&cfg);
         assert_eq!(timings.len(), 2); // native + sharded(2)
-        let report = report_json(&cfg, &timings);
+        let fits = run_fits(&cfg);
+        assert_eq!(fits.len(), 4); // native, sharded, chunked x2
+        let report = report_json(&cfg, &timings, &fits);
         assert_eq!(
             report.get("schema").and_then(|s| s.as_str()),
             Some("fica.bench_backend/v1")
@@ -224,6 +390,12 @@ mod tests {
         for r in results {
             assert!(r.get("median_s").unwrap().as_f64().unwrap() >= 0.0);
             assert!(r.get("backend").unwrap().as_str().is_some());
+        }
+        let fit_results = report.get("fit_results").unwrap().as_arr().unwrap();
+        assert_eq!(fit_results.len(), 4);
+        for r in fit_results {
+            assert!(r.get("median_s").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(r.get("out_of_core").is_some());
         }
         // The report survives its own serialization.
         let text = report.to_string_compact();

@@ -70,9 +70,10 @@ impl Args {
 }
 
 /// The solver-related flags `fica fit` and `fica run` share:
-/// `--algo`, `--whitener`, `--backend`, `--workers`, `--chunk`, `--tol`,
-/// `--max-iters`, `--seed`, `--scale`. One decoder, one set of defaults,
-/// hard errors on bad values (no silent `unwrap_or(default)` fallback).
+/// `--algo`, `--whitener`, `--backend`, `--workers`, `--chunk`,
+/// `--out-of-core`, `--scratch-dir`, `--tol`, `--max-iters`, `--seed`,
+/// `--scale`. One decoder, one set of defaults, hard errors on bad
+/// values (no silent `unwrap_or(default)` fallback).
 #[derive(Clone, Debug)]
 pub struct SolveFlags {
     pub algo: Algorithm,
@@ -80,6 +81,11 @@ pub struct SolveFlags {
     pub backend: BackendChoice,
     /// Streaming chunk size in sample columns (0 = library default).
     pub chunk: usize,
+    /// Solve out-of-core: whitened chunks go to a scratch file and the
+    /// solver re-streams them per iteration.
+    pub out_of_core: bool,
+    /// Directory for out-of-core scratch files (None = system temp dir).
+    pub scratch_dir: Option<String>,
     pub tol: f64,
     pub max_iters: usize,
     pub seed: u64,
@@ -90,8 +96,11 @@ impl SolveFlags {
     /// Decode from parsed [`Args`], rejecting unknown ids and
     /// unparsable values with a message naming the flag.
     ///
-    /// `--workers N` selects the sharded backend's pool size; giving it
-    /// without `--backend` implies `--backend sharded`.
+    /// `--workers N` selects the worker-pool size; giving it without
+    /// `--backend` implies `--backend sharded`. Passing `--workers` next
+    /// to an explicit non-sharded backend is rejected **on presence**,
+    /// whatever its value — `--workers 0 --backend native` is as
+    /// contradictory as `--workers 4 --backend native`.
     pub fn from_args(args: &Args) -> Result<SolveFlags, String> {
         let algo_id = args.get_or("algo", "plbfgs-h2");
         let algo = Algorithm::from_id(&algo_id)
@@ -99,22 +108,48 @@ impl SolveFlags {
         let wh_id = args.get_or("whitener", "sphering");
         let whitener = Whitener::from_id(&wh_id)
             .ok_or_else(|| format!("unknown --whitener {wh_id} (sphering|pca)"))?;
+        let workers_given = args.get("workers").is_some();
         let workers: usize = args.get_parse("workers", 0)?;
-        let default_backend = if args.get("workers").is_some() { "sharded" } else { "native" };
+        let default_backend = if workers_given { "sharded" } else { "native" };
         let backend_id = args.get_or("backend", default_backend);
         let mut backend = BackendChoice::from_id(&backend_id).ok_or_else(|| {
             format!("unknown --backend {backend_id} (native|sharded|xla|auto)")
         })?;
         if let BackendChoice::Sharded { .. } = backend {
             backend = BackendChoice::Sharded { workers };
-        } else if workers > 0 {
-            return Err(format!("--workers only applies to --backend sharded, not {backend_id}"));
+        } else if workers_given {
+            return Err(format!(
+                "--workers only applies to --backend sharded, not {backend_id}"
+            ));
+        }
+        if args.get("out-of-core").is_some() {
+            // `--out-of-core true` would otherwise parse as flag+value,
+            // silently leaving the switch off — the one mistake this
+            // decoder must not shrug at.
+            return Err(
+                "--out-of-core is a switch and takes no value (write `--out-of-core`, \
+                 not `--out-of-core true` / `--out-of-core=true`)"
+                    .into(),
+            );
+        }
+        let out_of_core = args.has("out-of-core");
+        if out_of_core && matches!(backend, BackendChoice::Xla | BackendChoice::Auto) {
+            return Err(format!(
+                "--out-of-core streams through the chunked CPU pool; it cannot run on \
+                 --backend {backend_id} (use native or sharded)"
+            ));
+        }
+        let scratch_dir = args.get("scratch-dir").map(str::to_string);
+        if scratch_dir.is_some() && !out_of_core {
+            return Err("--scratch-dir only applies together with --out-of-core".into());
         }
         Ok(SolveFlags {
             algo,
             whitener,
             backend,
             chunk: args.get_parse("chunk", 0)?,
+            out_of_core,
+            scratch_dir,
             tol: args.get_parse("tol", 1e-8)?,
             max_iters: args.get_parse("max-iters", 200)?,
             seed: args.get_parse("seed", 0)?,
@@ -130,9 +165,13 @@ impl SolveFlags {
             .backend(self.backend)
             .tol(self.tol)
             .max_iters(self.max_iters)
-            .seed(self.seed);
+            .seed(self.seed)
+            .out_of_core(self.out_of_core);
         if self.chunk > 0 {
             p = p.chunk_cols(self.chunk);
+        }
+        if let Some(dir) = &self.scratch_dir {
+            p = p.scratch_dir(dir);
         }
         p
     }
@@ -158,9 +197,18 @@ COMMANDS:
                                  (default plbfgs-h2)
         --whitener <id>          sphering|pca (default sphering)
         --backend <id>           native|sharded|xla|auto (default native)
-        --workers <usize>        sharded worker threads (0 = one per core;
+        --workers <usize>        worker threads for the sharded backend and
+                                 the out-of-core pool (0 = one per core;
                                  implies --backend sharded)
-        --chunk <usize>          streaming chunk size in samples (default 8192)
+        --chunk <usize>          streaming chunk size in samples
+                                 (default 8192 = data::DEFAULT_CHUNK_COLS)
+        --out-of-core            park whitened chunks in a FICA1 scratch file
+                                 and re-stream them per iteration: peak memory
+                                 is O(N x chunk x workers), T bounded by disk
+        --scratch-dir <path>     directory for --out-of-core scratch files
+                                 (default: the system temp dir; needs room
+                                 for 24 + 8 x N x T bytes, removed after the
+                                 fit)
         --tol <f64>              gradient tolerance (default 1e-8)
         --max-iters <usize>      iteration cap (default 200)
         --seed <u64>             dataset / solver seed (default 0)
@@ -176,7 +224,8 @@ COMMANDS:
         --output <path>          destination file
         --in-format <id>         override the input format (default: inferred)
         --out-format <id>        override the output format (default: inferred)
-        --chunk <usize>          streaming chunk size in samples (default 8192)
+        --chunk <usize>          streaming chunk size in samples
+                                 (default 8192 = data::DEFAULT_CHUNK_COLS)
     bench                        Time backend sweeps, write BENCH_backend.json
         --out <path>             report path (default BENCH_backend.json)
         --smoke                  tiny sizes for CI smoke runs
@@ -190,3 +239,91 @@ COMMANDS:
     artifacts-check              Load every artifact through PJRT
     help                         This message
 ";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(argv: &[&str]) -> Args {
+        let argv: Vec<String> = argv.iter().map(|s| s.to_string()).collect();
+        Args::parse(&argv).expect("parse")
+    }
+
+    fn decode(argv: &[&str]) -> Result<SolveFlags, String> {
+        SolveFlags::from_args(&parse(argv))
+    }
+
+    #[test]
+    fn workers_alone_implies_sharded() {
+        let f = decode(&["fit", "--workers", "3"]).unwrap();
+        assert_eq!(f.backend, BackendChoice::Sharded { workers: 3 });
+        let f = decode(&["fit", "--backend", "sharded"]).unwrap();
+        assert_eq!(f.backend, BackendChoice::Sharded { workers: 0 });
+        let f = decode(&["fit", "--backend", "sharded", "--workers", "0"]).unwrap();
+        assert_eq!(f.backend, BackendChoice::Sharded { workers: 0 });
+    }
+
+    /// Regression: `--workers` next to an explicit non-sharded backend is
+    /// rejected on flag *presence*, not value — `--workers 0` used to
+    /// slip through because only `workers > 0` was checked.
+    #[test]
+    fn workers_with_non_sharded_backend_rejected_on_presence() {
+        for workers in ["0", "1", "4"] {
+            for backend in ["native", "xla", "auto"] {
+                let err = decode(&["fit", "--workers", workers, "--backend", backend])
+                    .expect_err("must reject --workers with a non-sharded backend");
+                assert!(err.contains("--workers"), "{err}");
+            }
+        }
+    }
+
+    #[test]
+    fn out_of_core_decodes() {
+        let f = decode(&["fit"]).unwrap();
+        assert!(!f.out_of_core);
+        assert!(f.scratch_dir.is_none());
+        let f = decode(&["fit", "--out-of-core"]).unwrap();
+        assert!(f.out_of_core);
+        let f = decode(&[
+            "fit", "--out-of-core", "--workers", "2", "--scratch-dir", "/tmp/sc",
+        ])
+        .unwrap();
+        assert!(f.out_of_core);
+        assert_eq!(f.backend, BackendChoice::Sharded { workers: 2 });
+        assert_eq!(f.scratch_dir.as_deref(), Some("/tmp/sc"));
+    }
+
+    /// Regression: `--out-of-core true` / `--out-of-core=true` parse as
+    /// flag+value; the decoder must reject them instead of silently
+    /// running the fit in memory.
+    #[test]
+    fn out_of_core_with_a_value_is_rejected() {
+        for argv in [
+            &["fit", "--out-of-core", "true"][..],
+            &["fit", "--out-of-core=true"][..],
+            &["fit", "--out-of-core=1", "--workers", "2"][..],
+        ] {
+            let err = decode(argv).expect_err("switch with a value must error");
+            assert!(err.contains("takes no value"), "{err}");
+        }
+    }
+
+    #[test]
+    fn out_of_core_rejects_xla_and_stray_scratch_dir() {
+        for backend in ["xla", "auto"] {
+            let err = decode(&["fit", "--out-of-core", "--backend", backend])
+                .expect_err("xla cannot stream");
+            assert!(err.contains("out-of-core"), "{err}");
+        }
+        let err = decode(&["fit", "--scratch-dir", "/tmp/sc"])
+            .expect_err("scratch dir without out-of-core");
+        assert!(err.contains("--out-of-core"), "{err}");
+    }
+
+    #[test]
+    fn bad_values_are_hard_errors() {
+        assert!(decode(&["fit", "--workers", "many"]).is_err());
+        assert!(decode(&["fit", "--backend", "gpu"]).is_err());
+        assert!(decode(&["fit", "--chunk", "-3"]).is_err());
+    }
+}

@@ -68,8 +68,19 @@ impl BinSource {
             .map_err(|_| IcaError::invalid_input(format!("{label}: rows {rows} overflows")))?;
         let t = usize::try_from(cols)
             .map_err(|_| IcaError::invalid_input(format!("{label}: cols {cols} overflows")))?;
-        let expected = HEADER_LEN as u128 + 8 * rows as u128 * cols as u128;
-        if file_len as u128 != expected {
+        // Fail closed at open: the payload must be exactly rows*cols*8
+        // bytes, with the size computation itself guarded by checked_mul
+        // so an adversarial header cannot wrap it around.
+        let expected = rows
+            .checked_mul(cols)
+            .and_then(|e| e.checked_mul(8))
+            .and_then(|p| p.checked_add(HEADER_LEN))
+            .ok_or_else(|| {
+                IcaError::invalid_input(format!(
+                    "{label}: header {rows}x{cols} overflows the representable file size"
+                ))
+            })?;
+        if file_len != expected {
             return Err(IcaError::invalid_input(format!(
                 "{label}: file length {file_len} != {expected} promised by header \
                  ({rows}x{cols} f64)"
@@ -101,7 +112,16 @@ impl super::DataSource for BinSource {
             return Ok(None);
         }
         let c = max_cols.max(1).min(self.t - self.pos);
-        let mut buf = vec![0u8; c * self.n * 8];
+        let bytes = c
+            .checked_mul(self.n)
+            .and_then(|b| b.checked_mul(8))
+            .ok_or_else(|| {
+                IcaError::invalid_input(format!(
+                    "{}: chunk of {c} samples x {} signals overflows",
+                    self.path, self.n
+                ))
+            })?;
+        let mut buf = vec![0u8; bytes];
         self.reader.read_exact(&mut buf).map_err(|_| {
             IcaError::invalid_input(format!(
                 "{}: truncated at sample {} (file changed after open?)",
@@ -122,6 +142,30 @@ impl super::DataSource for BinSource {
         }
         self.pos += c;
         Ok(Some(chunk))
+    }
+
+    /// Seek past whole samples instead of decoding them — O(1) where the
+    /// default implementation would read and discard O(N·cols) bytes.
+    fn skip_cols(&mut self, cols: usize) -> Result<usize, IcaError> {
+        let skipped = cols.min(self.t - self.pos);
+        if skipped == 0 {
+            return Ok(0);
+        }
+        let bytes = skipped
+            .checked_mul(self.n)
+            .and_then(|b| b.checked_mul(8))
+            .and_then(|b| i64::try_from(b).ok())
+            .ok_or_else(|| {
+                IcaError::invalid_input(format!(
+                    "{}: skip of {skipped} samples x {} signals overflows",
+                    self.path, self.n
+                ))
+            })?;
+        self.reader
+            .seek_relative(bytes)
+            .map_err(|e| IcaError::io(self.path.clone(), e))?;
+        self.pos += skipped;
+        Ok(skipped)
     }
 
     fn validates_finite(&self) -> bool {
@@ -145,8 +189,23 @@ impl BinWriter {
     pub fn create(path: impl AsRef<Path>, rows: usize, cols: usize) -> Result<BinWriter, IcaError> {
         let path = path.as_ref();
         let label = path.display().to_string();
-        let promise = super::WritePromise::new(label.clone(), rows, cols)?;
+        // Validate the shape promise before touching the filesystem.
+        super::WritePromise::new(label.clone(), rows, cols)?;
         let file = File::create(path).map_err(|e| IcaError::io(label.clone(), e))?;
+        Self::from_file(file, label, rows, cols)
+    }
+
+    /// Write into an already-open (empty) file handle — used by the
+    /// out-of-core scratch path, whose [`super::ScratchFile`] created
+    /// the file exclusively and must never re-open it by path.
+    pub fn from_file(
+        file: File,
+        label: impl Into<String>,
+        rows: usize,
+        cols: usize,
+    ) -> Result<BinWriter, IcaError> {
+        let label = label.into();
+        let promise = super::WritePromise::new(label.clone(), rows, cols)?;
         let mut out = BufWriter::new(file);
         let mut header = Vec::with_capacity(HEADER_LEN as usize);
         header.extend_from_slice(&BIN_MAGIC);
@@ -225,6 +284,26 @@ mod tests {
     }
 
     #[test]
+    fn skip_cols_seeks_without_decoding() {
+        let p = tmp("skip.bin");
+        let m = Mat::from_fn(2, 30, |i, j| (i * 100 + j) as f64);
+        write_bin(&p, &m).unwrap();
+        let mut src = BinSource::open(&p).unwrap();
+        assert_eq!(src.skip_cols(10).unwrap(), 10);
+        let c = src.next_chunk(5).unwrap().unwrap();
+        assert_eq!(c[(0, 0)], 10.0);
+        assert_eq!(c[(1, 0)], 110.0);
+        // Skipping past the end is clamped, then the stream is done.
+        assert_eq!(src.skip_cols(100).unwrap(), 15);
+        assert!(src.next_chunk(4).unwrap().is_none());
+        assert_eq!(src.skip_cols(3).unwrap(), 0);
+        // Reset rewinds skips too.
+        src.reset().unwrap();
+        let c = src.next_chunk(1).unwrap().unwrap();
+        assert_eq!(c[(0, 0)], 0.0);
+    }
+
+    #[test]
     fn open_fails_closed() {
         // Bad magic.
         let p = tmp("magic.bin");
@@ -247,6 +326,31 @@ mod tests {
             BinSource::open(&p),
             Err(IcaError::InvalidInput { .. })
         ));
+        // Truncated payload fails at open, not mid-stream.
+        let p = tmp("trunc.bin");
+        write_bin(&p, &Mat::from_fn(3, 9, |i, j| (i * j) as f64)).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes.truncate(24 + 3 * 4 * 8); // only 4 of 9 promised samples
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(matches!(
+            BinSource::open(&p),
+            Err(IcaError::InvalidInput { .. })
+        ));
+        // A header whose rows*cols*8 wraps u64 must yield a typed error,
+        // not a wrapped-around length check that happens to pass.
+        let p = tmp("overflow.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&BIN_MAGIC);
+        bytes.extend_from_slice(&(u64::MAX / 4).to_le_bytes());
+        bytes.extend_from_slice(&9u64.to_le_bytes());
+        bytes.extend_from_slice(&[0u8; 8]); // some payload so len > header
+        std::fs::write(&p, &bytes).unwrap();
+        match BinSource::open(&p) {
+            Err(IcaError::InvalidInput { what }) => {
+                assert!(what.contains("overflows"), "{what}");
+            }
+            other => panic!("expected overflow InvalidInput, got {other:?}"),
+        }
         // Zero dimension.
         let p = tmp("zero.bin");
         let mut bytes = Vec::new();

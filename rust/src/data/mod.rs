@@ -26,12 +26,13 @@ mod stats;
 
 pub use bin::{write_bin, BinSource, BinWriter, BIN_MAGIC};
 pub use csv::{write_csv, CsvSource, CsvWriter};
-pub use stats::StreamingStats;
+pub use stats::{MomentPartial, StreamingStats};
 
 use crate::error::IcaError;
 use crate::linalg::Mat;
 use crate::util::{read_matrix_json, write_matrix_json};
-use std::path::Path;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Default number of sample columns per chunk on the streaming paths.
 ///
@@ -61,6 +62,22 @@ pub trait DataSource {
     /// `None` once all T samples have been yielded since the last reset.
     fn next_chunk(&mut self, max_cols: usize) -> Result<Option<Mat>, IcaError>;
 
+    /// Skip up to `cols` columns without materializing them, returning
+    /// how many were actually skipped (fewer only when the stream ends).
+    /// Default: read and discard; seekable sources override with a seek
+    /// (the out-of-core `grad_batch` path relies on this to avoid
+    /// decoding data outside the requested sample range).
+    fn skip_cols(&mut self, cols: usize) -> Result<usize, IcaError> {
+        let mut skipped = 0usize;
+        while skipped < cols {
+            match self.next_chunk(cols - skipped)? {
+                Some(chunk) => skipped += chunk.cols(),
+                None => break,
+            }
+        }
+        Ok(skipped)
+    }
+
     /// Whether every yielded value is already guaranteed finite (file
     /// sources reject NaN/∞ while parsing). When `true` the pipeline
     /// skips its own O(N·T) finiteness scan.
@@ -70,6 +87,16 @@ pub trait DataSource {
 
     /// Human-readable description of the source for error messages.
     fn label(&self) -> String;
+}
+
+/// Copy out the next column chunk `x[:, pos..pos+c]` (shared by the
+/// in-memory source adapters).
+fn mat_chunk(x: &Mat, pos: usize, max_cols: usize) -> Option<Mat> {
+    if pos >= x.cols() {
+        return None;
+    }
+    let c = max_cols.max(1).min(x.cols() - pos);
+    Some(Mat::from_fn(x.rows(), c, |i, j| x[(i, pos + j)]))
 }
 
 /// In-memory [`DataSource`] over a [`Mat`] (the trusted adapter: data
@@ -110,14 +137,65 @@ impl DataSource for MemSource {
     }
 
     fn next_chunk(&mut self, max_cols: usize) -> Result<Option<Mat>, IcaError> {
-        if self.pos >= self.x.cols() {
-            return Ok(None);
+        let chunk = mat_chunk(&self.x, self.pos, max_cols);
+        if let Some(c) = &chunk {
+            self.pos += c.cols();
         }
-        let c = max_cols.max(1).min(self.x.cols() - self.pos);
-        let pos = self.pos;
-        let chunk = Mat::from_fn(self.x.rows(), c, |i, j| self.x[(i, pos + j)]);
-        self.pos += c;
-        Ok(Some(chunk))
+        Ok(chunk)
+    }
+
+    fn skip_cols(&mut self, cols: usize) -> Result<usize, IcaError> {
+        let skipped = cols.min(self.x.cols() - self.pos);
+        self.pos += skipped;
+        Ok(skipped)
+    }
+
+    fn label(&self) -> String {
+        self.label.clone()
+    }
+}
+
+/// Like [`MemSource`], but borrowing the matrix — the adapter
+/// [`crate::estimator::Picard::fit`] uses for its out-of-core path, where
+/// cloning the caller's raw `N×T` data would defeat the point.
+pub struct MatSource<'a> {
+    x: &'a Mat,
+    pos: usize,
+    label: String,
+}
+
+impl<'a> MatSource<'a> {
+    pub fn new(x: &'a Mat) -> Self {
+        Self { x, pos: 0, label: "memory".into() }
+    }
+}
+
+impl DataSource for MatSource<'_> {
+    fn rows(&self) -> usize {
+        self.x.rows()
+    }
+
+    fn cols(&self) -> usize {
+        self.x.cols()
+    }
+
+    fn reset(&mut self) -> Result<(), IcaError> {
+        self.pos = 0;
+        Ok(())
+    }
+
+    fn next_chunk(&mut self, max_cols: usize) -> Result<Option<Mat>, IcaError> {
+        let chunk = mat_chunk(self.x, self.pos, max_cols);
+        if let Some(c) = &chunk {
+            self.pos += c.cols();
+        }
+        Ok(chunk)
+    }
+
+    fn skip_cols(&mut self, cols: usize) -> Result<usize, IcaError> {
+        let skipped = cols.min(self.x.cols() - self.pos);
+        self.pos += skipped;
+        Ok(skipped)
     }
 
     fn label(&self) -> String {
@@ -306,6 +384,78 @@ pub(crate) fn copy_columns(
     Ok(())
 }
 
+/// Monotone suffix so scratch paths from one process never collide.
+static SCRATCH_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// A uniquely named temporary file that is **removed on drop** — the
+/// RAII guard behind the out-of-core pipeline's whitened scratch. The
+/// file is created exclusively at construction and the open handle is
+/// kept (see [`ScratchFile::take_file`]), and `Drop` unlinks the path,
+/// so the scratch disappears on success and on every error path alike.
+#[derive(Debug)]
+pub struct ScratchFile {
+    path: PathBuf,
+    /// The exclusively-created handle, held so the writer can use it
+    /// directly instead of re-opening (and truncating) by path.
+    file: Option<std::fs::File>,
+}
+
+impl ScratchFile {
+    /// Create a fresh scratch file under `dir` (created if missing;
+    /// default: the system temp dir). Names embed the process id and a
+    /// process-wide sequence number: `fica-scratch-<tag>-<pid>-<seq>.bin`.
+    ///
+    /// The file is created **exclusively** (`O_EXCL`), so a leftover
+    /// from a crashed run with a recycled pid — or a pre-planted
+    /// symlink in a world-writable temp dir — is skipped instead of
+    /// truncated, and the handle is retained so nothing ever re-opens
+    /// the path for writing. On a persistent creation failure (e.g. an
+    /// unwritable directory) the path is still reserved with no handle,
+    /// and the writer surfaces the typed Io error.
+    pub fn new_in(dir: Option<&Path>, tag: &str) -> ScratchFile {
+        let dir = dir.map(Path::to_path_buf).unwrap_or_else(std::env::temp_dir);
+        // Best-effort: if this fails, the writer will surface a typed Io.
+        let _ = std::fs::create_dir_all(&dir);
+        let pid = std::process::id();
+        for _ in 0..1000 {
+            let seq = SCRATCH_SEQ.fetch_add(1, Ordering::Relaxed);
+            let candidate = dir.join(format!("fica-scratch-{tag}-{pid}-{seq}.bin"));
+            match std::fs::OpenOptions::new()
+                .write(true)
+                .create_new(true)
+                .open(&candidate)
+            {
+                Ok(file) => return ScratchFile { path: candidate, file: Some(file) },
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => continue,
+                // Unwritable dir etc.: reserve the name anyway and let
+                // the writer produce the typed error.
+                Err(_) => return ScratchFile { path: candidate, file: None },
+            }
+        }
+        let path = dir.join(format!("fica-scratch-{tag}-{pid}-exhausted.bin"));
+        ScratchFile { path, file: None }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Surrender the exclusively-created write handle (None if creation
+    /// failed, or if it was already taken).
+    pub fn take_file(&mut self) -> Option<std::fs::File> {
+        self.file.take()
+    }
+}
+
+impl Drop for ScratchFile {
+    fn drop(&mut self) {
+        // Close any still-held handle first so the unlink also succeeds
+        // on platforms that refuse to remove open files.
+        drop(self.file.take());
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
 pub(crate) fn check_complete(
     got: usize,
     want: usize,
@@ -355,6 +505,47 @@ mod tests {
         assert_eq!(Format::infer("x.CSV"), Some(Format::Csv));
         assert_eq!(Format::infer("dir/x.json"), Some(Format::Json));
         assert_eq!(Format::infer("noext"), None);
+    }
+
+    #[test]
+    fn scratch_file_is_unique_and_removed_on_drop() {
+        let dir = std::env::temp_dir().join("fica_scratch_unit_test");
+        let a = ScratchFile::new_in(Some(&dir), "t");
+        let b = ScratchFile::new_in(Some(&dir), "t");
+        assert_ne!(a.path(), b.path(), "scratch paths must not collide");
+        // Reservation creates the files exclusively, so a stale path is
+        // never reused.
+        assert!(a.path().exists() && b.path().exists());
+        std::fs::write(a.path(), b"payload").unwrap();
+        let kept = a.path().to_path_buf();
+        drop(a);
+        assert!(!kept.exists(), "scratch file must vanish on drop");
+        let kept = b.path().to_path_buf();
+        drop(b);
+        assert!(!kept.exists(), "empty scratch must vanish on drop too");
+    }
+
+    /// A leftover file at the first candidate path (crashed run + pid
+    /// reuse, or a pre-planted symlink) must be skipped, not truncated.
+    #[test]
+    fn scratch_file_skips_preexisting_paths() {
+        let dir = std::env::temp_dir().join("fica_scratch_unit_test_skip");
+        let probe = ScratchFile::new_in(Some(&dir), "s");
+        // Plant a file at the *next* sequence number's path.
+        let name = probe
+            .path()
+            .file_name()
+            .unwrap()
+            .to_string_lossy()
+            .into_owned();
+        let (prefix, seq_ext) = name.rsplit_once('-').unwrap();
+        let seq: u64 = seq_ext.trim_end_matches(".bin").parse().unwrap();
+        let planted = dir.join(format!("{prefix}-{}.bin", seq + 1));
+        std::fs::write(&planted, b"stale").unwrap();
+        let fresh = ScratchFile::new_in(Some(&dir), "s");
+        assert_ne!(fresh.path(), planted.as_path(), "must skip the occupied path");
+        assert_eq!(std::fs::read(&planted).unwrap(), b"stale", "planted file untouched");
+        std::fs::remove_file(&planted).unwrap();
     }
 
     #[test]

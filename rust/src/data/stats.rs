@@ -15,6 +15,21 @@
 
 use crate::error::IcaError;
 use crate::linalg::{matmul_a_bt_into, Mat};
+use std::sync::Arc;
+
+/// Unnormalized moment sums over one column chunk: the unit of work the
+/// parallel pass-1 pipeline dispatches to the worker pool. Absorbing
+/// partials in chunk order reproduces the serial accumulation bitwise —
+/// [`StreamingStats::update`] is itself implemented as
+/// `partial` + `absorb`, so the two paths cannot drift apart.
+pub struct MomentPartial {
+    /// Σ over the chunk's samples of `x − pivot` (length N).
+    sum: Vec<f64>,
+    /// Σ over the chunk's samples of `(x − pivot)(x − pivot)ᵀ` (N×N).
+    outer: Mat,
+    /// Samples in the chunk.
+    count: usize,
+}
 
 /// Accumulator for streaming mean + covariance over column chunks.
 pub struct StreamingStats {
@@ -22,13 +37,16 @@ pub struct StreamingStats {
     sum: Vec<f64>,
     /// Σ over samples of `(x − pivot)(x − pivot)ᵀ` (N×N).
     outer: Mat,
-    /// Per-chunk scratch for the outer-product update.
+    /// Serial-path scratch for the per-chunk outer product (N×N).
     scratch: Mat,
-    /// Reusable buffer holding the pivot-shifted chunk (reallocated only
-    /// when the chunk shape changes, i.e. once for the final short chunk).
+    /// Serial-path buffer for the pivot-shifted chunk (reallocated only
+    /// when the chunk shape changes, i.e. once for the final short
+    /// chunk). The pooled pass uses [`StreamingStats::partial`] with
+    /// per-job buffers instead.
     shifted: Mat,
-    /// The first sample seen, used as the numerical pivot.
-    pivot: Option<Vec<f64>>,
+    /// The first sample seen, used as the numerical pivot (shared with
+    /// the pool jobs of the parallel pass).
+    pivot: Option<Arc<Vec<f64>>>,
     /// Samples seen so far.
     count: usize,
 }
@@ -55,19 +73,66 @@ impl StreamingStats {
         self.count
     }
 
-    /// Fold one `N × c` column chunk into the running sums.
+    /// The pivot for all accumulation, established from the first column
+    /// of the first non-empty chunk seen. Returns a shared handle so the
+    /// parallel pass can hand it to pool jobs without copying per chunk.
+    pub fn pivot_from(&mut self, chunk: &Mat) -> Arc<Vec<f64>> {
+        assert!(chunk.cols() > 0, "pivot needs a non-empty chunk");
+        if self.pivot.is_none() {
+            self.pivot = Some(Arc::new(
+                (0..chunk.rows()).map(|i| chunk[(i, 0)]).collect(),
+            ));
+        }
+        Arc::clone(self.pivot.as_ref().unwrap())
+    }
+
+    /// The pivot-shifted sums over one chunk. Pure function of
+    /// `(pivot, chunk)`, safe to evaluate on any thread.
+    pub fn partial(pivot: &[f64], chunk: &Mat) -> MomentPartial {
+        assert_eq!(chunk.rows(), pivot.len(), "chunk row count");
+        let n = chunk.rows();
+        let mut shifted = Mat::zeros(n, chunk.cols());
+        for (i, &p) in pivot.iter().enumerate() {
+            for (d, &s) in shifted.row_mut(i).iter_mut().zip(chunk.row(i)) {
+                *d = s - p;
+            }
+        }
+        let sum = (0..n)
+            .map(|i| shifted.row(i).iter().sum::<f64>())
+            .collect();
+        let mut outer = Mat::zeros(n, n);
+        matmul_a_bt_into(&shifted, &shifted, &mut outer);
+        MomentPartial { sum, outer, count: chunk.cols() }
+    }
+
+    /// Fold one chunk's partial into the running sums. Partials must be
+    /// absorbed in chunk order for reproducible results.
+    pub fn absorb(&mut self, p: MomentPartial) {
+        assert_eq!(p.sum.len(), self.n(), "partial row count");
+        for (s, v) in self.sum.iter_mut().zip(&p.sum) {
+            *s += v;
+        }
+        self.outer.add_inplace(&p.outer);
+        self.count += p.count;
+    }
+
+    /// Fold one `N × c` column chunk into the running sums — the serial
+    /// path, reusing the internal `shifted`/`scratch` buffers so nothing
+    /// chunk-sized is allocated per call.
+    ///
+    /// Arithmetically this is exactly `absorb(partial(pivot, chunk))`
+    /// operation for operation (shift, row sums, overwrite-style outer
+    /// product, add) — the serial and pooled passes stay bitwise
+    /// interchangeable, which `preprocessing` tests pin down.
     pub fn update(&mut self, chunk: &Mat) {
         assert_eq!(chunk.rows(), self.n(), "chunk row count");
         if chunk.cols() == 0 {
             return;
         }
-        if self.pivot.is_none() {
-            self.pivot = Some((0..chunk.rows()).map(|i| chunk[(i, 0)]).collect());
-        }
+        let pivot = self.pivot_from(chunk);
         if (self.shifted.rows(), self.shifted.cols()) != (chunk.rows(), chunk.cols()) {
             self.shifted = Mat::zeros(chunk.rows(), chunk.cols());
         }
-        let pivot = self.pivot.as_ref().unwrap();
         for (i, &p) in pivot.iter().enumerate() {
             for (d, &s) in self.shifted.row_mut(i).iter_mut().zip(chunk.row(i)) {
                 *d = s - p;

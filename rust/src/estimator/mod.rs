@@ -18,17 +18,19 @@
 //! spirit of the registry-manifest idiom), so a model that loads is a
 //! model that works.
 
-use crate::backend::{ComputeBackend, NativeBackend, ShardedBackend};
-use crate::data::{DataSource, DEFAULT_CHUNK_COLS};
+use crate::backend::{ChunkedBackend, ComputeBackend, NativeBackend, ShardedBackend};
+use crate::data::{DataSource, MatSource, DEFAULT_CHUNK_COLS};
 use crate::error::IcaError;
 use crate::ica::{try_solve, Algorithm, HessianApprox, SolverConfig, Trace};
 use crate::linalg::{matmul, Lu, Mat};
-use crate::preprocessing::{preprocess, preprocess_source, Preprocessed, Whitener};
+use crate::preprocessing::{
+    preprocess, preprocess_source_with, Preprocessed, StreamOptions, Whitener, WhitenedData,
+};
 use crate::runtime::{default_artifact_dir, Engine, XlaBackend};
 use crate::util::{mat_from_json, mat_to_json, Json};
 use std::collections::BTreeMap;
 use std::fmt;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
 /// Schema tag stamped into every serialized model; load rejects others.
@@ -90,6 +92,8 @@ pub struct Picard {
     seed: u64,
     backend: BackendChoice,
     chunk_cols: usize,
+    out_of_core: bool,
+    scratch_dir: Option<PathBuf>,
     w0: Option<Mat>,
     /// Shared PJRT engine (compile cache) for xla/auto backends; a
     /// fresh engine is created per fit when unset.
@@ -115,6 +119,8 @@ impl fmt::Debug for Picard {
             .field("seed", &self.seed)
             .field("backend", &self.backend)
             .field("chunk_cols", &self.chunk_cols)
+            .field("out_of_core", &self.out_of_core)
+            .field("scratch_dir", &self.scratch_dir)
             .field("w0", &self.w0)
             .field("shared_engine", &self.engine.is_some())
             .finish()
@@ -133,6 +139,8 @@ impl Picard {
             seed: 0,
             backend: BackendChoice::Native,
             chunk_cols: DEFAULT_CHUNK_COLS,
+            out_of_core: false,
+            scratch_dir: None,
             w0: None,
             engine: None,
         }
@@ -193,6 +201,27 @@ impl Picard {
         self
     }
 
+    /// Solve out-of-core: pass 2 of preprocessing parks the whitened
+    /// chunks in a `FICA1` scratch file (removed when the fit finishes,
+    /// success or error), and the solver re-streams them per iteration
+    /// on the chunked backend. Peak resident data for the whitened
+    /// recording is O(N·chunk·workers) — T is bounded by disk, not RAM.
+    ///
+    /// Works with [`BackendChoice::Native`] (one pool worker) and
+    /// [`BackendChoice::Sharded`] (that worker count); the XLA backends
+    /// cannot stream and are rejected with a typed error.
+    pub fn out_of_core(mut self, on: bool) -> Self {
+        self.out_of_core = on;
+        self
+    }
+
+    /// Directory for out-of-core scratch files (default: the system temp
+    /// dir). Point this at a volume with room for `24 + 8·N·T` bytes.
+    pub fn scratch_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.scratch_dir = Some(dir.into());
+        self
+    }
+
     /// Custom initial unmixing matrix in whitened space (default: I).
     pub fn w0(mut self, w0: Mat) -> Self {
         self.w0 = Some(w0);
@@ -223,6 +252,43 @@ impl Picard {
         cfg
     }
 
+    /// Worker-pool size for the streamed paths (preprocessing passes and
+    /// the chunked backend): the sharded worker count when sharding was
+    /// requested (0 = one per core), 1 otherwise.
+    fn pool_workers(&self) -> usize {
+        match self.backend {
+            BackendChoice::Sharded { workers: 0 } => {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            }
+            BackendChoice::Sharded { workers } => workers,
+            _ => 1,
+        }
+    }
+
+    /// Out-of-core solves stream from disk through the chunked CPU pool;
+    /// the XLA backends need the whole array resident and are rejected.
+    fn check_out_of_core_backend(&self) -> Result<(), IcaError> {
+        if self.out_of_core
+            && matches!(self.backend, BackendChoice::Xla | BackendChoice::Auto)
+        {
+            return Err(IcaError::invalid_input(format!(
+                "out-of-core fits run on the chunked CPU pool; use BackendChoice::Native \
+                 or Sharded, not {}",
+                self.backend.id()
+            )));
+        }
+        Ok(())
+    }
+
+    fn stream_options(&self) -> StreamOptions {
+        StreamOptions {
+            chunk_cols: self.chunk_cols,
+            workers: self.pool_workers(),
+            out_of_core: self.out_of_core,
+            scratch_dir: self.scratch_dir.clone(),
+        }
+    }
+
     /// Build the configured backend over the whitened data, returning the
     /// backend, the name actually used, and — when Auto fell back to
     /// native — the reason XLA was unavailable.
@@ -232,12 +298,8 @@ impl Picard {
     ) -> Result<(Box<dyn ComputeBackend>, &'static str, Option<String>), IcaError> {
         match self.backend {
             BackendChoice::Native => Ok((Box::new(NativeBackend::new(xw)), "native", None)),
-            BackendChoice::Sharded { workers } => {
-                let workers = if workers == 0 {
-                    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-                } else {
-                    workers
-                };
+            BackendChoice::Sharded { .. } => {
+                let workers = self.pool_workers();
                 Ok((Box::new(ShardedBackend::new(xw, workers)), "sharded", None))
             }
             BackendChoice::Xla => {
@@ -272,7 +334,16 @@ impl Picard {
         // try_solve re-validates; this early call (same single source of
         // truth) just fails before the O(N²T) whitening pass.
         cfg.validate()?;
+        self.check_out_of_core_backend()?;
         Self::check_shape(x.rows(), x.cols())?;
+        if self.out_of_core {
+            // Stream the caller's matrix through the same two-pass
+            // pipeline `fit_source` uses (borrowed, not cloned), so the
+            // whitened data goes straight to the scratch file.
+            let mut src = MatSource::new(x);
+            let pre = preprocess_source_with(&mut src, self.whitener, &self.stream_options())?;
+            return self.fit_preprocessed(pre, cfg);
+        }
         let pre = preprocess(x, self.whitener)?;
         self.fit_preprocessed(pre, cfg)
     }
@@ -281,12 +352,14 @@ impl Picard {
     /// chunks from a [`DataSource`] (in-memory, `FICA1` binary, CSV, …),
     /// compute the whitener in one pass over streaming moments, and
     /// whiten chunk-by-chunk — the raw `N×T` matrix is never fully
-    /// materialized.
+    /// materialized. With [`Picard::out_of_core`], the *whitened* matrix
+    /// is not materialized either.
     pub fn fit_source(&self, src: &mut dyn DataSource) -> Result<IcaModel, IcaError> {
         let cfg = self.solver_config();
         cfg.validate()?;
+        self.check_out_of_core_backend()?;
         Self::check_shape(src.rows(), src.cols())?;
-        let pre = preprocess_source(src, self.whitener, self.chunk_cols)?;
+        let pre = preprocess_source_with(src, self.whitener, &self.stream_options())?;
         self.fit_preprocessed(pre, cfg)
     }
 
@@ -313,21 +386,36 @@ impl Picard {
         pre: Preprocessed,
         cfg: SolverConfig,
     ) -> Result<IcaModel, IcaError> {
-        let n = pre.x.rows();
+        let Preprocessed { x, k, means } = pre;
+        let n = k.rows();
         let w0 = match &self.w0 {
             Some(w) => w.clone(),
             None => Mat::eye(n),
         };
-        let (mut backend, backend_name, backend_fallback) = self.make_backend(pre.x)?;
+        let (mut backend, backend_name, backend_fallback): (
+            Box<dyn ComputeBackend>,
+            &'static str,
+            Option<String>,
+        ) = match x {
+            WhitenedData::InMemory(xw) => self.make_backend(xw)?,
+            WhitenedData::OutOfCore(ws) => {
+                let be = ChunkedBackend::from_scratch(
+                    ws.into_scratch(),
+                    self.chunk_cols,
+                    self.pool_workers(),
+                )?;
+                (Box::new(be), "chunked", None)
+            }
+        };
         let result = try_solve(backend.as_mut(), &w0, &cfg)?;
         let final_grad_inf =
             result.trace.last().map(|r| r.grad_inf).unwrap_or(f64::NAN);
-        let u = matmul(&result.w, &pre.k);
+        let u = matmul(&result.w, &k);
         Ok(IcaModel {
             w: result.w,
-            k: pre.k,
+            k,
             u,
-            means: pre.means,
+            means,
             algorithm: self.algorithm,
             whitener: self.whitener,
             fit_info: FitInfo {
@@ -358,7 +446,8 @@ pub struct FitInfo {
     pub final_grad_inf: f64,
     /// Tolerance the fit targeted (always finite).
     pub tol: f64,
-    /// Backend that served the fit ("native", "sharded" or "xla").
+    /// Backend that served the fit ("native", "sharded", "chunked" —
+    /// the out-of-core path — or "xla").
     pub backend: String,
     /// Why `BackendChoice::Auto` fell back to native, when it did
     /// (not serialized).
@@ -962,6 +1051,35 @@ mod tests {
         // When Auto lands on native, it must say why XLA was skipped.
         if info.backend == "native" {
             assert!(info.backend_fallback.is_some(), "fallback reason missing");
+        }
+    }
+
+    #[test]
+    fn out_of_core_fit_recovers_sources() {
+        let data = signal::experiment_a(5, 2500, 16);
+        let model = Picard::new()
+            .out_of_core(true)
+            .backend(BackendChoice::Sharded { workers: 2 })
+            .chunk_cols(256)
+            .tol(1e-8)
+            .fit(&data.x)
+            .expect("out-of-core fit");
+        assert!(model.fit_info().converged);
+        assert_eq!(model.fit_info().backend, "chunked");
+        let perm = matmul(&model.unmixing_matrix(), &data.mixing);
+        assert!(amari_distance(&perm) < 0.05);
+    }
+
+    #[test]
+    fn out_of_core_rejects_xla_backends() {
+        let data = signal::experiment_a(4, 500, 17);
+        for backend in [BackendChoice::Xla, BackendChoice::Auto] {
+            let err = Picard::new()
+                .out_of_core(true)
+                .backend(backend)
+                .fit(&data.x)
+                .expect_err("xla cannot stream");
+            assert!(matches!(err, IcaError::InvalidInput { .. }), "{backend:?}: {err}");
         }
     }
 

@@ -78,7 +78,7 @@ pub fn algo_suite() -> Vec<Algorithm> {
 pub fn build_dataset(id: ExperimentId, seed: u64, scale: f64) -> Mat {
     preprocess(&build_raw_dataset(id, seed, scale), Whitener::Sphering)
         .expect("whitening")
-        .x
+        .into_dense()
 }
 
 /// Build the raw (unwhitened) data for one (experiment, seed) pair —

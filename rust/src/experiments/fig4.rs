@@ -103,9 +103,9 @@ pub fn run(cfg: &Fig4Config) -> Fig4Result {
         let scfg = SolverConfig::new(algo).with_tol(tol).with_max_iters(cfg.max_iters);
         let w0 = Mat::eye(raw.rows());
 
-        let mut be_s = NativeBackend::new(sph.x.clone());
+        let mut be_s = NativeBackend::new(sph.dense().clone());
         let r_s = try_solve(&mut be_s, &w0, &scfg).expect("fig4 solve");
-        let mut be_p = NativeBackend::new(pca.x.clone());
+        let mut be_p = NativeBackend::new(pca.dense().clone());
         let r_p = try_solve(&mut be_p, &w0, &scfg).expect("fig4 solve");
 
         // Effective unmixing on the raw (centered) data.

@@ -48,12 +48,16 @@
 //! - **Data plane** ([`data`]): chunked ingestion of large recordings —
 //!   a [`data::DataSource`] trait over in-memory, `FICA1` binary, and CSV
 //!   inputs, plus one-pass streaming whitening statistics feeding
-//!   [`estimator::Picard::fit_source`].
+//!   [`estimator::Picard::fit_source`], and RAII scratch files for the
+//!   out-of-core path.
 //! - **Backends** ([`backend`], [`runtime`]): the Θ(N²T) per-iteration
 //!   statistics run on the always-available native backend, sharded
-//!   across a worker-thread pool ([`backend::ShardedBackend`]) or, behind
-//!   the `pjrt` cargo feature, on AOT-compiled JAX/Pallas artifacts
-//!   through a PJRT CPU client (Python is never on the request path).
+//!   across a worker-thread pool ([`backend::ShardedBackend`]),
+//!   re-streamed from a whitened scratch file for out-of-core fits
+//!   ([`backend::ChunkedBackend`], [`estimator::Picard::out_of_core`])
+//!   or, behind the `pjrt` cargo feature, on AOT-compiled JAX/Pallas
+//!   artifacts through a PJRT CPU client (Python is never on the
+//!   request path).
 //! - **Reproduction** ([`experiments`], [`coordinator`]): the paper's
 //!   figure pipeline, driven by the `fica experiment` subcommand.
 pub mod backend;

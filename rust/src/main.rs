@@ -327,7 +327,12 @@ fn cmd_bench(args: &Args) -> i32 {
         if cfg.smoke { " | SMOKE" } else { "" }
     );
     let timings = bench_backends::run(&cfg);
-    let report = bench_backends::report_json(&cfg, &timings);
+    println!(
+        "bench: full fits ({} iters) | N in {:?} | T = {} | in-memory vs out-of-core",
+        cfg.fit_iters, cfg.fit_sizes, cfg.fit_t
+    );
+    let fits = bench_backends::run_fits(&cfg);
+    let report = bench_backends::report_json(&cfg, &timings, &fits);
     if let Err(e) = bench_backends::write_report(&out, &report) {
         eprintln!("error: {e}");
         return 1;

@@ -11,9 +11,15 @@
 //!   i.e. ZCA in modern terminology — an orthogonal rotation of the
 //!   sphering whitener, which is all Fig. 4 needs).
 
-use crate::data::{check_complete, copy_columns, DataSource, StreamingStats};
+use crate::backend::{Pipeline, WorkerPool};
+use crate::data::{
+    check_complete, copy_columns, BinWriter, DataSource, ScratchFile, StreamingStats,
+    DEFAULT_CHUNK_COLS,
+};
 use crate::error::IcaError;
 use crate::linalg::{eigh, matmul, matmul_into, Mat};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 /// Which whitening transform to apply.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -43,15 +49,86 @@ impl Whitener {
     }
 }
 
+/// Where the whitened data ended up: fully materialized in memory, or
+/// parked chunk-by-chunk in a `FICA1` scratch file for the out-of-core
+/// solve path (which re-streams it per iteration).
+#[derive(Debug)]
+pub enum WhitenedData {
+    /// Whitened `N×T` matrix in memory.
+    InMemory(Mat),
+    /// Whitened chunks in a scratch file; nothing T-sized in memory.
+    OutOfCore(WhitenedScratch),
+}
+
+/// A whitened recording parked in a `FICA1` scratch file. Owns the
+/// [`ScratchFile`] guard, so the file is removed when the value (or the
+/// backend it is handed to) is dropped — on success and on every error
+/// path alike.
+#[derive(Debug)]
+pub struct WhitenedScratch {
+    scratch: ScratchFile,
+    n: usize,
+    t: usize,
+}
+
+impl WhitenedScratch {
+    /// Path of the scratch file (a valid `FICA1` file once produced).
+    pub fn path(&self) -> &Path {
+        self.scratch.path()
+    }
+
+    /// Signals N.
+    pub fn rows(&self) -> usize {
+        self.n
+    }
+
+    /// Samples T.
+    pub fn cols(&self) -> usize {
+        self.t
+    }
+
+    /// Surrender the scratch-file guard (for handing to a backend).
+    pub fn into_scratch(self) -> ScratchFile {
+        self.scratch
+    }
+}
+
 /// Result of preprocessing: whitened data plus the transform used.
-#[derive(Clone, Debug)]
+#[derive(Debug)]
 pub struct Preprocessed {
-    /// Whitened data, `cov = I`.
-    pub x: Mat,
+    /// Whitened data, `cov = I` (in memory or out-of-core).
+    pub x: WhitenedData,
     /// The whitening matrix `K` (`x = K (X_raw - mean)`).
     pub k: Mat,
     /// Per-row means removed from the raw data.
     pub means: Vec<f64>,
+}
+
+impl Preprocessed {
+    /// The in-memory whitened matrix.
+    ///
+    /// Panics if the data is out-of-core — [`preprocess`] and the
+    /// default (in-memory) [`preprocess_source`] always return
+    /// [`WhitenedData::InMemory`], so callers of those never hit this.
+    pub fn dense(&self) -> &Mat {
+        match &self.x {
+            WhitenedData::InMemory(m) => m,
+            WhitenedData::OutOfCore(_) => {
+                panic!("whitened data is out-of-core; stream it instead of densifying")
+            }
+        }
+    }
+
+    /// Consume into the in-memory whitened matrix (panics like
+    /// [`Preprocessed::dense`] if the data is out-of-core).
+    pub fn into_dense(self) -> Mat {
+        match self.x {
+            WhitenedData::InMemory(m) => m,
+            WhitenedData::OutOfCore(_) => {
+                panic!("whitened data is out-of-core; stream it instead of densifying")
+            }
+        }
+    }
 }
 
 /// Center rows and whiten with the requested transform.
@@ -77,7 +154,7 @@ pub fn preprocess(x_raw: &Mat, whitener: Whitener) -> Result<Preprocessed, IcaEr
     let c = x.row_covariance();
     let k = whitening_from_cov(&c, whitener)?;
     let xw = matmul(&k, &x);
-    Ok(Preprocessed { x: xw, k, means })
+    Ok(Preprocessed { x: WhitenedData::InMemory(xw), k, means })
 }
 
 /// Build the whitening matrix `K` from a covariance matrix — the shared
@@ -120,14 +197,108 @@ pub fn whitening_from_cov(c: &Mat, whitener: Whitener) -> Result<Mat, IcaError> 
     })
 }
 
+/// How the streamed preprocessing passes run.
+#[derive(Clone, Debug)]
+pub struct StreamOptions {
+    /// Column-chunk size for both passes (clamped to >= 1).
+    pub chunk_cols: usize,
+    /// Worker threads for the per-chunk moment and whitening work
+    /// (clamped to >= 1; `1` keeps everything on the calling thread).
+    /// Results are bitwise-independent of the worker count: chunk
+    /// partials are absorbed in chunk order regardless of who computed
+    /// them.
+    pub workers: usize,
+    /// Write whitened chunks to a `FICA1` scratch file instead of
+    /// assembling the `N×T` matrix — the out-of-core solve path. Peak
+    /// resident data is O(N·chunk·workers).
+    pub out_of_core: bool,
+    /// Directory for the scratch file (default: the system temp dir).
+    pub scratch_dir: Option<PathBuf>,
+}
+
+impl Default for StreamOptions {
+    fn default() -> Self {
+        Self {
+            chunk_cols: DEFAULT_CHUNK_COLS,
+            workers: 1,
+            out_of_core: false,
+            scratch_dir: None,
+        }
+    }
+}
+
+/// Where pass 2 sends the whitened chunks.
+enum WhitenSink {
+    Mem { xw: Mat, off: usize },
+    Scratch { writer: BinWriter, scratch: ScratchFile },
+}
+
+impl WhitenSink {
+    fn push(&mut self, wchunk: &Mat, src: &dyn DataSource) -> Result<(), IcaError> {
+        match self {
+            WhitenSink::Mem { xw, off } => {
+                copy_columns(xw, *off, wchunk, src)?;
+                *off += wchunk.cols();
+                Ok(())
+            }
+            WhitenSink::Scratch { writer, .. } => writer.write_chunk(wchunk),
+        }
+    }
+
+    fn finish(self, n: usize, t: usize, src: &dyn DataSource) -> Result<WhitenedData, IcaError> {
+        match self {
+            WhitenSink::Mem { xw, off } => {
+                check_complete(off, t, src)?;
+                Ok(WhitenedData::InMemory(xw))
+            }
+            WhitenSink::Scratch { writer, scratch } => {
+                // The writer's promise enforces exactly t samples.
+                writer.finish()?;
+                Ok(WhitenedData::OutOfCore(WhitenedScratch { scratch, n, t }))
+            }
+        }
+    }
+}
+
+/// Center and whiten one chunk into `out` (resized only when the chunk
+/// width changes): the pass-2 unit of work, shared by the serial and
+/// pooled paths. Re-checks finiteness for sources that do not validate
+/// it themselves — pass 1 already scanned them, so a non-finite value
+/// here means the source drifted between passes.
+fn whiten_chunk_into(
+    mut chunk: Mat,
+    k: &Mat,
+    means: &[f64],
+    check_finite: bool,
+    n: usize,
+    label: &str,
+    out: &mut Mat,
+) -> Result<(), IcaError> {
+    if chunk.rows() != n {
+        return Err(IcaError::invalid_input(format!(
+            "source {label} changed shape between passes"
+        )));
+    }
+    if check_finite && !chunk.as_slice().iter().all(|v| v.is_finite()) {
+        return Err(IcaError::NonFinite {
+            what: format!("input data from {label} (pass 2 — source changed between passes?)"),
+        });
+    }
+    for (i, &m) in means.iter().enumerate() {
+        for v in chunk.row_mut(i) {
+            *v -= m;
+        }
+    }
+    if (out.rows(), out.cols()) != (n, chunk.cols()) {
+        *out = Mat::zeros(n, chunk.cols());
+    }
+    matmul_into(k, &chunk, out);
+    Ok(())
+}
+
 /// Streamed centering + whitening: two chunked passes over a
-/// [`DataSource`], never materializing the raw `N×T` matrix.
-///
-/// Pass 1 folds every chunk into a [`StreamingStats`] accumulator
-/// (mean + covariance via chunked outer-product updates); the whitener
-/// is derived from the accumulated covariance exactly as in
-/// [`preprocess`]. Pass 2 re-streams the source, centering and whitening
-/// chunk by chunk into the assembled output the solver consumes.
+/// [`DataSource`], never materializing the raw `N×T` matrix. Convenience
+/// wrapper over [`preprocess_source_with`] (serial, in-memory output).
 ///
 /// Fail-closed on everything [`preprocess`] rejects, plus sources whose
 /// yielded sample count disagrees with their declared shape.
@@ -136,67 +307,150 @@ pub fn preprocess_source(
     whitener: Whitener,
     chunk_cols: usize,
 ) -> Result<Preprocessed, IcaError> {
+    preprocess_source_with(
+        src,
+        whitener,
+        &StreamOptions { chunk_cols, ..StreamOptions::default() },
+    )
+}
+
+/// Streamed centering + whitening with explicit [`StreamOptions`].
+///
+/// Pass 1 folds every chunk into a [`StreamingStats`] accumulator
+/// (mean + covariance via chunked outer-product updates); the whitener
+/// is derived from the accumulated covariance exactly as in
+/// [`preprocess`]. Pass 2 re-streams the source, centering and whitening
+/// chunk by chunk into either the assembled in-memory matrix or — with
+/// `out_of_core` — a `FICA1` scratch file for the chunked solver.
+///
+/// With `workers > 1` the Θ(N²·chunk) per-chunk work of both passes runs
+/// on a [`WorkerPool`] while the calling thread keeps reading; partials
+/// are absorbed in chunk order, so results are bitwise-identical to the
+/// serial path.
+pub fn preprocess_source_with(
+    src: &mut dyn DataSource,
+    whitener: Whitener,
+    opts: &StreamOptions,
+) -> Result<Preprocessed, IcaError> {
     let (n, t) = (src.rows(), src.cols());
     if n == 0 || t < 2 {
         return Err(IcaError::invalid_input(format!(
             "data must have at least 1 row and 2 columns, got {n}x{t}"
         )));
     }
-    let chunk_cols = chunk_cols.max(1);
+    let chunk_cols = opts.chunk_cols.max(1);
+    let pool = (opts.workers > 1).then(|| WorkerPool::new(opts.workers));
 
     // Pass 1: moments. File sources reject NaN/∞ while parsing; only
     // sources without that guarantee (e.g. MemSource) get scanned here.
     let check_finite = !src.validates_finite();
+    let label = src.label();
     let mut stats = StreamingStats::new(n);
     src.reset()?;
-    while let Some(chunk) = src.next_chunk(chunk_cols)? {
-        if chunk.rows() != n {
-            return Err(IcaError::invalid_input(format!(
-                "source {} yielded a chunk with {} rows, expected {n}",
-                src.label(),
-                chunk.rows()
-            )));
+    match &pool {
+        None => {
+            while let Some(chunk) = src.next_chunk(chunk_cols)? {
+                check_rows(&chunk, n, src)?;
+                if check_finite && !chunk.as_slice().iter().all(|v| v.is_finite()) {
+                    return Err(IcaError::NonFinite {
+                        what: format!("input data from {label}"),
+                    });
+                }
+                stats.update(&chunk);
+            }
         }
-        if check_finite && !chunk.as_slice().iter().all(|v| v.is_finite()) {
-            return Err(IcaError::NonFinite {
-                what: format!("input data from {}", src.label()),
-            });
+        Some(pool) => {
+            let mut pipe = Pipeline::new(pool);
+            while let Some(chunk) = src.next_chunk(chunk_cols)? {
+                check_rows(&chunk, n, src)?;
+                if chunk.cols() == 0 {
+                    continue;
+                }
+                let pivot = stats.pivot_from(&chunk);
+                let label = label.clone();
+                if let Some(part) = pipe.submit(move || {
+                    if check_finite && !chunk.as_slice().iter().all(|v| v.is_finite()) {
+                        return Err(IcaError::NonFinite {
+                            what: format!("input data from {label}"),
+                        });
+                    }
+                    Ok(StreamingStats::partial(&pivot, &chunk))
+                }) {
+                    stats.absorb(part?);
+                }
+            }
+            while let Some(part) = pipe.next_result() {
+                stats.absorb(part?);
+            }
         }
-        stats.update(&chunk);
     }
     check_complete(stats.count(), t, src)?;
     let means = stats.means()?;
     let c = stats.covariance()?;
     let k = whitening_from_cov(&c, whitener)?;
 
-    // Pass 2: center + whiten chunk by chunk into the assembled output.
-    // The whitened-chunk buffer is reused across chunks (reallocated only
-    // for the final short chunk).
-    let mut xw = Mat::zeros(n, t);
-    let mut wchunk = Mat::zeros(n, chunk_cols.min(t));
-    let mut off = 0usize;
+    // Pass 2: center + whiten chunk by chunk into the sink. The scratch
+    // file (if any) is guarded by an RAII [`ScratchFile`], so an error
+    // anywhere below removes it.
+    let mut sink = if opts.out_of_core {
+        let mut scratch = ScratchFile::new_in(opts.scratch_dir.as_deref(), "whitened");
+        // Write through the exclusively-created handle; the path is
+        // never re-opened for writing (no symlink-following window).
+        let writer = match scratch.take_file() {
+            Some(file) => {
+                BinWriter::from_file(file, scratch.path().display().to_string(), n, t)?
+            }
+            // Creation failed (unwritable dir, ...): let the standard
+            // constructor surface the typed Io error.
+            None => BinWriter::create(scratch.path(), n, t)?,
+        };
+        WhitenSink::Scratch { writer, scratch }
+    } else {
+        WhitenSink::Mem { xw: Mat::zeros(n, t), off: 0 }
+    };
     src.reset()?;
-    while let Some(mut chunk) = src.next_chunk(chunk_cols)? {
-        if chunk.rows() != n {
-            return Err(IcaError::invalid_input(format!(
-                "source {} changed shape between passes",
-                src.label()
-            )));
-        }
-        for (i, &m) in means.iter().enumerate() {
-            for v in chunk.row_mut(i) {
-                *v -= m;
+    match &pool {
+        None => {
+            // Reusable whitened-chunk buffer (reallocated only for the
+            // final short chunk).
+            let mut wchunk = Mat::zeros(0, 0);
+            while let Some(chunk) = src.next_chunk(chunk_cols)? {
+                whiten_chunk_into(chunk, &k, &means, check_finite, n, &label, &mut wchunk)?;
+                sink.push(&wchunk, src)?;
             }
         }
-        if wchunk.cols() != chunk.cols() {
-            wchunk = Mat::zeros(n, chunk.cols());
+        Some(pool) => {
+            let k = Arc::new(k.clone());
+            let means = Arc::new(means.clone());
+            let mut pipe = Pipeline::new(pool);
+            while let Some(chunk) = src.next_chunk(chunk_cols)? {
+                let (k, means, label) = (Arc::clone(&k), Arc::clone(&means), label.clone());
+                if let Some(wchunk) = pipe.submit(move || {
+                    let mut out = Mat::zeros(0, 0);
+                    whiten_chunk_into(chunk, &k, &means, check_finite, n, &label, &mut out)?;
+                    Ok::<Mat, IcaError>(out)
+                }) {
+                    sink.push(&wchunk?, src)?;
+                }
+            }
+            while let Some(wchunk) = pipe.next_result() {
+                sink.push(&wchunk?, src)?;
+            }
         }
-        matmul_into(&k, &chunk, &mut wchunk);
-        copy_columns(&mut xw, off, &wchunk, src)?;
-        off += wchunk.cols();
     }
-    check_complete(off, t, src)?;
-    Ok(Preprocessed { x: xw, k, means })
+    let x = sink.finish(n, t, src)?;
+    Ok(Preprocessed { x, k, means })
+}
+
+fn check_rows(chunk: &Mat, n: usize, src: &dyn DataSource) -> Result<(), IcaError> {
+    if chunk.rows() != n {
+        return Err(IcaError::invalid_input(format!(
+            "source {} yielded a chunk with {} rows, expected {n}",
+            src.label(),
+            chunk.rows()
+        )));
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -229,8 +483,8 @@ mod tests {
     fn sphering_whitens() {
         let x = correlated_data(6, 5000, 1);
         let p = preprocess(&x, Whitener::Sphering).unwrap();
-        assert_white(&p.x, 1e-10);
-        for m in p.x.row_means() {
+        assert_white(p.dense(), 1e-10);
+        for m in p.dense().row_means() {
             assert!(m.abs() < 1e-10);
         }
     }
@@ -239,7 +493,7 @@ mod tests {
     fn pca_whitens() {
         let x = correlated_data(6, 5000, 2);
         let p = preprocess(&x, Whitener::Pca).unwrap();
-        assert_white(&p.x, 1e-10);
+        assert_white(p.dense(), 1e-10);
     }
 
     #[test]
@@ -268,7 +522,7 @@ mod tests {
         let mut centered = x.clone();
         centered.center_rows();
         let again = matmul(&p.k, &centered);
-        assert!(again.max_abs_diff(&p.x) < 1e-12);
+        assert!(again.max_abs_diff(p.dense()) < 1e-12);
     }
 
     /// Regression: rank-deficient data (a duplicated row) must surface as
@@ -324,11 +578,11 @@ mod tests {
                 "chunk {chunk_cols}: K deviates by {}",
                 p.k.max_abs_diff(&batch.k)
             );
-            assert!(p.x.max_abs_diff(&batch.x) < 1e-8, "chunk {chunk_cols}");
+            assert!(p.dense().max_abs_diff(batch.dense()) < 1e-8, "chunk {chunk_cols}");
             for (a, b) in p.means.iter().zip(&batch.means) {
                 assert!((a - b).abs() < 1e-10);
             }
-            assert_white(&p.x, 1e-8);
+            assert_white(p.dense(), 1e-8);
         }
     }
 
@@ -369,5 +623,134 @@ mod tests {
             assert_eq!(Whitener::from_id(w.id()), Some(w));
         }
         assert_eq!(Whitener::from_id("zca"), None);
+    }
+
+    /// A source that yields clean data on pass 1 and injects a NaN on
+    /// pass 2 — modeling a file that changed underneath the pipeline.
+    struct MutatingSource {
+        x: Mat,
+        pass: usize,
+        pos: usize,
+    }
+
+    impl crate::data::DataSource for MutatingSource {
+        fn rows(&self) -> usize {
+            self.x.rows()
+        }
+
+        fn cols(&self) -> usize {
+            self.x.cols()
+        }
+
+        fn reset(&mut self) -> Result<(), IcaError> {
+            self.pass += 1;
+            self.pos = 0;
+            Ok(())
+        }
+
+        fn next_chunk(&mut self, max_cols: usize) -> Result<Option<Mat>, IcaError> {
+            if self.pos >= self.x.cols() {
+                return Ok(None);
+            }
+            let c = max_cols.max(1).min(self.x.cols() - self.pos);
+            let pos = self.pos;
+            let mut chunk = Mat::from_fn(self.x.rows(), c, |i, j| self.x[(i, pos + j)]);
+            if self.pass >= 2 && pos <= 13 && 13 < pos + c {
+                chunk[(0, 13 - pos)] = f64::NAN;
+            }
+            self.pos += c;
+            Ok(Some(chunk))
+        }
+
+        fn label(&self) -> String {
+            "mutating-mock".into()
+        }
+    }
+
+    /// Regression: a non-self-validating source whose contents drift
+    /// between passes must not leak NaN into the whitened output — pass 2
+    /// re-runs the finiteness scan pass 1 performed.
+    #[test]
+    fn pass2_drift_to_nan_is_rejected() {
+        for workers in [1usize, 3] {
+            let mut src = MutatingSource { x: correlated_data(4, 120, 20), pass: 0, pos: 0 };
+            let opts = StreamOptions { chunk_cols: 16, workers, ..StreamOptions::default() };
+            match preprocess_source_with(&mut src, Whitener::Sphering, &opts) {
+                Err(IcaError::NonFinite { what }) => {
+                    assert!(what.contains("pass 2"), "workers {workers}: {what}")
+                }
+                other => panic!("workers {workers}: expected NonFinite, got {other:?}"),
+            }
+        }
+    }
+
+    /// The pooled passes absorb chunk partials in chunk order, so the
+    /// result is bitwise-identical to the serial path for any worker
+    /// count.
+    #[test]
+    fn parallel_passes_match_serial_bitwise() {
+        let x = correlated_data(5, 1100, 21);
+        let serial = preprocess_source(
+            &mut crate::data::MemSource::new(x.clone()),
+            Whitener::Sphering,
+            128,
+        )
+        .unwrap();
+        for workers in [2usize, 4] {
+            let opts = StreamOptions { chunk_cols: 128, workers, ..StreamOptions::default() };
+            let mut src = crate::data::MemSource::new(x.clone());
+            let p = preprocess_source_with(&mut src, Whitener::Sphering, &opts).unwrap();
+            assert!(p.k.max_abs_diff(&serial.k) == 0.0, "workers {workers}: K");
+            assert!(
+                p.dense().max_abs_diff(serial.dense()) == 0.0,
+                "workers {workers}: whitened data"
+            );
+            assert_eq!(p.means, serial.means, "workers {workers}");
+        }
+    }
+
+    /// Out-of-core pass 2 parks bit-identical whitened chunks in a FICA1
+    /// scratch file, and the RAII guard removes it on drop.
+    #[test]
+    fn out_of_core_scratch_holds_the_whitened_data() {
+        let x = correlated_data(4, 600, 22);
+        let mem = preprocess_source(
+            &mut crate::data::MemSource::new(x.clone()),
+            Whitener::Sphering,
+            100,
+        )
+        .unwrap();
+        let opts = StreamOptions {
+            chunk_cols: 100,
+            workers: 2,
+            out_of_core: true,
+            ..StreamOptions::default()
+        };
+        let mut src = crate::data::MemSource::new(x);
+        let p = preprocess_source_with(&mut src, Whitener::Sphering, &opts).unwrap();
+        assert!(p.k.max_abs_diff(&mem.k) == 0.0);
+        let scratch_path = match p.x {
+            WhitenedData::OutOfCore(ws) => {
+                assert_eq!((ws.rows(), ws.cols()), (4, 600));
+                // The scratch is a valid FICA1 file holding exactly the
+                // in-memory whitened matrix (f64 roundtrips bit-exactly).
+                let mut back = crate::data::BinSource::open(ws.path()).unwrap();
+                let mut full = Mat::zeros(4, 600);
+                let mut off = 0;
+                use crate::data::DataSource;
+                while let Some(c) = back.next_chunk(64).unwrap() {
+                    for i in 0..4 {
+                        full.row_mut(i)[off..off + c.cols()].copy_from_slice(c.row(i));
+                    }
+                    off += c.cols();
+                }
+                assert_eq!(off, 600);
+                assert!(full.max_abs_diff(mem.dense()) == 0.0);
+                ws.path().to_path_buf()
+            }
+            WhitenedData::InMemory(_) => panic!("expected out-of-core data"),
+        };
+        // `ws` (and its ScratchFile) dropped above: the file is gone.
+        assert!(!scratch_path.exists(), "scratch file leaked");
     }
 }

@@ -195,7 +195,7 @@ mod tests {
         // Full rank: whitening must succeed (no DC deficiency).
         let p = crate::preprocessing::preprocess(&x, crate::preprocessing::Whitener::Sphering)
             .unwrap();
-        assert_eq!(p.x.rows(), 64);
+        assert_eq!(p.dense().rows(), 64);
     }
 
     #[test]

@@ -15,7 +15,7 @@ use faster_ica::signal;
 fn source_recovery_full_pipeline() {
     let d = signal::experiment_a(8, 6000, 42);
     let p = preprocess(&d.x, Whitener::Sphering).expect("whitening");
-    let mut be = faster_ica::backend::NativeBackend::new(p.x.clone());
+    let mut be = faster_ica::backend::NativeBackend::new(p.dense().clone());
     let cfg = SolverConfig::new(Algorithm::Lbfgs {
         precond: Some(HessianApprox::H2),
         memory: 7,
@@ -37,7 +37,7 @@ fn source_recovery_full_pipeline() {
 fn experiment_b_partial_recovery() {
     let d = signal::experiment_b(9, 20_000, 7);
     let p = preprocess(&d.x, Whitener::Sphering).expect("whitening");
-    let mut be = faster_ica::backend::NativeBackend::new(p.x.clone());
+    let mut be = faster_ica::backend::NativeBackend::new(p.dense().clone());
     let cfg = SolverConfig::new(Algorithm::Lbfgs {
         precond: Some(HessianApprox::H2),
         memory: 7,

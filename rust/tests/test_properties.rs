@@ -157,7 +157,7 @@ fn whitening_always_whitens() {
         |(x, use_pca)| {
             let wh = if *use_pca { Whitener::Pca } else { Whitener::Sphering };
             let p = preprocess(x, wh).map_err(|e| e.to_string())?;
-            let c = p.x.row_covariance();
+            let c = p.dense().row_covariance();
             let dev = c.max_abs_diff(&Mat::eye(x.rows()));
             if dev > 1e-8 {
                 return Err(format!("cov deviates by {dev}"));
