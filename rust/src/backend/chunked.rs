@@ -26,7 +26,7 @@
 
 use super::pool::{Pipeline, WorkerPool};
 use super::shard::{self, finalize_grad_batch, finalize_stats, Partial};
-use super::{ComputeBackend, IcaStats, StatsLevel};
+use super::{ComputeBackend, IcaStats, StatsLevel, SweepKernel};
 use crate::data::{DataSource, ScratchFile};
 use crate::error::IcaError;
 use crate::linalg::Mat;
@@ -67,6 +67,7 @@ pub struct ChunkedBackend {
     n: usize,
     t: usize,
     chunk_cols: usize,
+    kernel: SweepKernel,
     src: Box<dyn DataSource>,
     /// RAII guard for the scratch file (when we own one): removing it is
     /// tied to this backend's lifetime, success or error alike.
@@ -77,12 +78,24 @@ pub struct ChunkedBackend {
 
 impl ChunkedBackend {
     /// Stream from an arbitrary resettable source (used by tests and the
-    /// in-memory twin of the out-of-core path). `chunk_cols` and
-    /// `workers` are clamped to >= 1.
+    /// in-memory twin of the out-of-core path) with the default sweep
+    /// kernel ([`SweepKernel::Vector`]). `chunk_cols` and `workers` are
+    /// clamped to >= 1.
     pub fn from_source(
         src: Box<dyn DataSource>,
         chunk_cols: usize,
         workers: usize,
+    ) -> Result<Self, IcaError> {
+        Self::from_source_with_kernel(src, chunk_cols, workers, SweepKernel::default())
+    }
+
+    /// Like [`ChunkedBackend::from_source`] with an explicit sweep
+    /// kernel; every chunk job dispatches this kernel.
+    pub fn from_source_with_kernel(
+        src: Box<dyn DataSource>,
+        chunk_cols: usize,
+        workers: usize,
+        kernel: SweepKernel,
     ) -> Result<Self, IcaError> {
         let (n, t) = (src.rows(), src.cols());
         if n == 0 || t == 0 {
@@ -101,6 +114,7 @@ impl ChunkedBackend {
             n,
             t,
             chunk_cols,
+            kernel,
             src,
             _scratch: None,
             pool: WorkerPool::new(workers),
@@ -116,8 +130,19 @@ impl ChunkedBackend {
         chunk_cols: usize,
         workers: usize,
     ) -> Result<Self, IcaError> {
+        Self::from_scratch_with_kernel(scratch, chunk_cols, workers, SweepKernel::default())
+    }
+
+    /// Like [`ChunkedBackend::from_scratch`] with an explicit sweep
+    /// kernel.
+    pub fn from_scratch_with_kernel(
+        scratch: ScratchFile,
+        chunk_cols: usize,
+        workers: usize,
+        kernel: SweepKernel,
+    ) -> Result<Self, IcaError> {
         let src = crate::data::BinSource::open(scratch.path())?;
-        let mut be = Self::from_source(Box::new(src), chunk_cols, workers)?;
+        let mut be = Self::from_source_with_kernel(Box::new(src), chunk_cols, workers, kernel)?;
         be._scratch = Some(scratch);
         Ok(be)
     }
@@ -205,6 +230,7 @@ impl ComputeBackend for ChunkedBackend {
         let (n, t) = (self.n, self.t);
         assert_eq!((w.rows(), w.cols()), (n, n));
         let w = Arc::new(w.clone());
+        let kernel = self.kernel;
         let p = self.round(None, move |chunk, _lo, ws| {
             let c = chunk.cols();
             ensure(&mut ws.y, n, c);
@@ -217,6 +243,7 @@ impl ComputeBackend for ChunkedBackend {
                 &w,
                 &chunk,
                 level,
+                kernel,
                 &mut ws.y,
                 &mut ws.psi,
                 &mut ws.psip,
@@ -230,9 +257,10 @@ impl ComputeBackend for ChunkedBackend {
         let n = self.n;
         assert_eq!((w.rows(), w.cols()), (n, n));
         let w = Arc::new(w.clone());
+        let kernel = self.kernel;
         let p = self.round(None, move |chunk, _lo, ws| {
             ensure(&mut ws.y, n, chunk.cols());
-            shard::loss_partial(&w, &chunk, &mut ws.y)
+            shard::loss_partial(&w, &chunk, kernel, &mut ws.y)
         });
         p.loss / self.t as f64
     }
@@ -241,11 +269,14 @@ impl ComputeBackend for ChunkedBackend {
         let n = self.n;
         assert!(lo < hi && hi <= self.t, "bad batch range [{lo},{hi})");
         let w = Arc::new(w.clone());
+        let kernel = self.kernel;
         let p = self.round(Some((lo, hi)), move |chunk, chunk_lo, ws| {
             let c = chunk.cols();
             ensure(&mut ws.y, n, c);
             ensure(&mut ws.psi, n, c);
-            shard::grad_batch_partial(&w, &chunk, chunk_lo, lo, hi, &mut ws.y, &mut ws.psi)
+            shard::grad_batch_partial(
+                &w, &chunk, chunk_lo, lo, hi, kernel, &mut ws.y, &mut ws.psi,
+            )
         });
         finalize_grad_batch(p, n, lo, hi)
     }

@@ -20,6 +20,11 @@
 //! - `XlaBackend` (in [`crate::runtime`]) — executes the AOT-compiled
 //!   JAX/Pallas artifact through PJRT; Python is never on this path.
 //!
+//! The CPU backends additionally take a [`SweepKernel`] selecting the
+//! scalar libm reference sweep or the lane-blocked auto-vectorized sweep
+//! (`linalg::vmath`); every shard/chunk job of one backend dispatches
+//! the same kernel.
+//!
 //! The `log|det W|` term is intentionally *not* part of the backend
 //! contract: it is Θ(N³), independent of T, and computed by the caller
 //! with the library's own LU (LAPACK custom-calls cannot be served by the
@@ -38,6 +43,61 @@ pub use pool::{Pipeline, Ticket, WorkerPool};
 pub use sharded::ShardedBackend;
 
 use crate::linalg::Mat;
+
+/// Which implementation of the fused elementwise score sweep the CPU
+/// backends run (see `sweep` / [`crate::linalg::vmath`]).
+///
+/// Every shard and chunk job of a backend dispatches the same kernel, so
+/// the choice never mixes arithmetic within one fit:
+///
+/// - [`SweepKernel::Scalar`] — the reference: one `f64::exp` +
+///   `f64::ln_1p` libm call per element, the same per-element
+///   arithmetic the crate has always produced. All bitwise-equivalence
+///   guarantees between backends (native == sharded at one worker ==
+///   chunked at one chunk) hold per kernel. (One caveat for
+///   reproducing *historical* runs bit-for-bit: the minibatch
+///   gradient's `ψ Yᵀ` contraction now runs on the shared blocked
+///   matmul kernel, whose 4-accumulator summation order differs from
+///   the pre-vectorization sequential loop — a ≤ 1e-12 re-association
+///   effect on the Infomax path only.)
+/// - [`SweepKernel::Vector`] (default) — lane-blocked sweeps over the
+///   branch-free polynomial kernels of [`crate::linalg::vmath`], which
+///   LLVM auto-vectorizes. Per-element results differ from the scalar
+///   reference by a documented ULP bound
+///   ([`crate::linalg::vmath::EXP_MAX_ULP`] /
+///   [`crate::linalg::vmath::LN_1P_MAX_ULP`]); full fits land within
+///   1e-8 Amari distance of scalar fits (pinned by tests). The same
+///   cross-backend bitwise guarantees hold among vector-kernel backends.
+///
+/// The XLA backend compiles its own fused artifact and ignores this
+/// selection.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SweepKernel {
+    /// Scalar libm reference sweep.
+    Scalar,
+    /// Lane-blocked auto-vectorized sweep (default).
+    #[default]
+    Vector,
+}
+
+impl SweepKernel {
+    /// Short stable identifier used by the CLI and bench reports.
+    pub fn id(self) -> &'static str {
+        match self {
+            SweepKernel::Scalar => "scalar",
+            SweepKernel::Vector => "vector",
+        }
+    }
+
+    /// Parse a CLI identifier (`"scalar"` | `"vector"`).
+    pub fn from_id(s: &str) -> Option<SweepKernel> {
+        Some(match s {
+            "scalar" => SweepKernel::Scalar,
+            "vector" => SweepKernel::Vector,
+            _ => return None,
+        })
+    }
+}
 
 /// How much of the per-iteration statistics a solver needs.
 ///

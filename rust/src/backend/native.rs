@@ -8,7 +8,7 @@
 //! All workspaces are allocated once at construction and reused across
 //! iterations — the solver hot loop performs no heap allocation of size T.
 
-use super::{sweep, ComputeBackend, IcaStats, StatsLevel};
+use super::{sweep, ComputeBackend, IcaStats, StatsLevel, SweepKernel};
 use crate::ica::score::LogCosh;
 use crate::linalg::{matmul_a_bt_into, matmul_into, Mat};
 
@@ -16,6 +16,7 @@ use crate::linalg::{matmul_a_bt_into, matmul_into, Mat};
 pub struct NativeBackend {
     x: Mat,
     score: LogCosh,
+    kernel: SweepKernel,
     // Workspaces (N×T), reused across calls.
     y: Mat,
     psi: Mat,
@@ -24,11 +25,19 @@ pub struct NativeBackend {
 }
 
 impl NativeBackend {
+    /// Backend over `x` with the default sweep kernel
+    /// ([`SweepKernel::Vector`]).
     pub fn new(x: Mat) -> Self {
+        Self::with_kernel(x, SweepKernel::default())
+    }
+
+    /// Backend over `x` with an explicit sweep kernel selection.
+    pub fn with_kernel(x: Mat, kernel: SweepKernel) -> Self {
         let (n, t) = (x.rows(), x.cols());
         Self {
             x,
             score: LogCosh,
+            kernel,
             y: Mat::zeros(n, t),
             psi: Mat::zeros(n, t),
             psip: Mat::zeros(n, t),
@@ -63,7 +72,7 @@ impl ComputeBackend for NativeBackend {
         let tf = t as f64;
 
         // Shared fused sweeps (see `super::sweep` — one exp per element).
-        let loss_acc = sweep::loss_psi_sweep(&self.y, &mut self.psi);
+        let loss_acc = sweep::loss_psi_sweep(&self.y, &mut self.psi, self.kernel);
         let need_h = level >= StatsLevel::H1;
         if need_h {
             sweep::psip_ysq_sweep(&self.y, &self.psi, &mut self.psip, &mut self.ysq);
@@ -98,15 +107,23 @@ impl ComputeBackend for NativeBackend {
         let (n, t) = (self.n(), self.t());
         assert_eq!((w.rows(), w.cols()), (n, n));
         self.compute_y(w);
-        sweep::loss_sum(&self.y) / t as f64
+        sweep::loss_sum(&self.y, self.kernel) / t as f64
     }
 
     fn grad_batch(&mut self, w: &Mat, lo: usize, hi: usize) -> Mat {
         let n = self.n();
         assert!(lo < hi && hi <= self.t(), "bad batch range [{lo},{hi})");
         let tb = hi - lo;
-        let mut g =
-            sweep::batch_grad_raw(w, &self.x, lo, tb, self.score, &mut self.y, &mut self.psi);
+        let mut g = sweep::batch_grad_raw(
+            w,
+            &self.x,
+            lo,
+            tb,
+            self.score,
+            self.kernel,
+            &mut self.y,
+            &mut self.psi,
+        );
         for i in 0..n {
             for j in 0..n {
                 g[(i, j)] = g[(i, j)] / tb as f64 - if i == j { 1.0 } else { 0.0 };

@@ -102,6 +102,8 @@ pub struct Pipeline<'a, R> {
 }
 
 impl<'a, R: Send + 'static> Pipeline<'a, R> {
+    /// An empty pipeline over `pool`; jobs round-robin across its
+    /// workers starting at slot 0.
     pub fn new(pool: &'a WorkerPool) -> Self {
         Self { pool, pending: VecDeque::new(), slot: 0 }
     }

@@ -7,7 +7,7 @@
 //! the native sweep over the same columns" holds by construction for
 //! both of them.
 
-use super::{sweep, IcaStats, StatsLevel};
+use super::{sweep, IcaStats, StatsLevel, SweepKernel};
 use crate::ica::score::LogCosh;
 use crate::linalg::{matmul_a_bt_into, matmul_into, Mat};
 
@@ -91,6 +91,7 @@ pub(super) fn stats_partial(
     w: &Mat,
     x: &Mat,
     level: StatsLevel,
+    kernel: SweepKernel,
     y: &mut Mat,
     psi: &mut Mat,
     psip: &mut Mat,
@@ -98,7 +99,7 @@ pub(super) fn stats_partial(
 ) -> Partial {
     let n = x.rows();
     matmul_into(w, x, y);
-    let loss_acc = sweep::loss_psi_sweep(y, psi);
+    let loss_acc = sweep::loss_psi_sweep(y, psi, kernel);
     let need_h = level >= StatsLevel::H1;
     if need_h {
         sweep::psip_ysq_sweep(y, psi, psip, ysq);
@@ -120,10 +121,10 @@ pub(super) fn stats_partial(
 }
 
 /// Raw loss sum over the columns of `x` (line-search probe).
-pub(super) fn loss_partial(w: &Mat, x: &Mat, y: &mut Mat) -> Partial {
+pub(super) fn loss_partial(w: &Mat, x: &Mat, kernel: SweepKernel, y: &mut Mat) -> Partial {
     matmul_into(w, x, y);
     Partial {
-        loss: sweep::loss_sum(y),
+        loss: sweep::loss_sum(y, kernel),
         g: Mat::zeros(0, 0),
         h1: Vec::new(),
         sigma2: Vec::new(),
@@ -141,6 +142,7 @@ pub(super) fn grad_batch_partial(
     piece_lo: usize,
     glo: usize,
     ghi: usize,
+    kernel: SweepKernel,
     y: &mut Mat,
     psi: &mut Mat,
 ) -> Partial {
@@ -152,7 +154,7 @@ pub(super) fn grad_batch_partial(
     let mut count = 0;
     if lo < hi {
         let tb = hi - lo;
-        g = sweep::batch_grad_raw(w, x, lo - slo, tb, LogCosh, y, psi);
+        g = sweep::batch_grad_raw(w, x, lo - slo, tb, LogCosh, kernel, y, psi);
         count = tb;
     }
     Partial {
@@ -207,6 +209,9 @@ pub(super) struct Shard {
     x: Mat,
     /// Global column index of this shard's first sample.
     lo: usize,
+    /// Sweep kernel every job on this shard dispatches (fixed at
+    /// construction so one fit never mixes kernels).
+    kernel: SweepKernel,
     y: Mat,
     psi: Mat,
     psip: Mat,
@@ -214,11 +219,12 @@ pub(super) struct Shard {
 }
 
 impl Shard {
-    pub(super) fn new(x: Mat, lo: usize) -> Self {
+    pub(super) fn new(x: Mat, lo: usize, kernel: SweepKernel) -> Self {
         let (n, tb) = (x.rows(), x.cols());
         Self {
             x,
             lo,
+            kernel,
             y: Mat::zeros(n, tb),
             psi: Mat::zeros(n, tb),
             psip: Mat::zeros(n, tb),
@@ -231,6 +237,7 @@ impl Shard {
             w,
             &self.x,
             level,
+            self.kernel,
             &mut self.y,
             &mut self.psi,
             &mut self.psip,
@@ -239,10 +246,19 @@ impl Shard {
     }
 
     pub(super) fn loss_partial(&mut self, w: &Mat) -> Partial {
-        loss_partial(w, &self.x, &mut self.y)
+        loss_partial(w, &self.x, self.kernel, &mut self.y)
     }
 
     pub(super) fn grad_batch_partial(&mut self, w: &Mat, glo: usize, ghi: usize) -> Partial {
-        grad_batch_partial(w, &self.x, self.lo, glo, ghi, &mut self.y, &mut self.psi)
+        grad_batch_partial(
+            w,
+            &self.x,
+            self.lo,
+            glo,
+            ghi,
+            self.kernel,
+            &mut self.y,
+            &mut self.psi,
+        )
     }
 }

@@ -22,7 +22,7 @@
 
 use super::pool::{Ticket, WorkerPool};
 use super::shard::{finalize_grad_batch, finalize_stats, tree_reduce, Partial, Shard};
-use super::{ComputeBackend, IcaStats, StatsLevel};
+use super::{ComputeBackend, IcaStats, StatsLevel, SweepKernel};
 use crate::linalg::Mat;
 use std::sync::{Arc, Mutex};
 
@@ -38,9 +38,16 @@ pub struct ShardedBackend {
 
 impl ShardedBackend {
     /// Split `x` into `workers` balanced contiguous column shards and
-    /// pin one shard per pool worker. `workers` is clamped to `[1, T]`
-    /// so no shard is empty.
+    /// pin one shard per pool worker, with the default sweep kernel
+    /// ([`SweepKernel::Vector`]). `workers` is clamped to `[1, T]` so no
+    /// shard is empty.
     pub fn new(x: Mat, workers: usize) -> Self {
+        Self::with_kernel(x, workers, SweepKernel::default())
+    }
+
+    /// Like [`ShardedBackend::new`] with an explicit sweep kernel; every
+    /// shard job dispatches this kernel.
+    pub fn with_kernel(x: Mat, workers: usize, kernel: SweepKernel) -> Self {
         assert!(workers >= 1, "sharded backend needs at least 1 worker");
         let (n, t) = (x.rows(), x.cols());
         let workers = workers.min(t.max(1));
@@ -49,7 +56,7 @@ impl ShardedBackend {
             let lo = s * t / workers;
             let hi = (s + 1) * t / workers;
             let shard_x = Mat::from_fn(n, hi - lo, |i, c| x[(i, lo + c)]);
-            shards.push(Arc::new(Mutex::new(Shard::new(shard_x, lo))));
+            shards.push(Arc::new(Mutex::new(Shard::new(shard_x, lo, kernel))));
         }
         let pool = WorkerPool::new(workers);
         Self { n, t, shards, pool }

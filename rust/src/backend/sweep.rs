@@ -1,98 +1,262 @@
-//! The fused elementwise sweep kernels shared by [`super::NativeBackend`]
-//! and [`super::ShardedBackend`].
+//! The fused elementwise sweep kernels shared by every CPU backend
+//! ([`super::NativeBackend`], [`super::ShardedBackend`],
+//! [`super::ChunkedBackend`] via [`super::shard`]).
 //!
-//! Both backends promise the same arithmetic — the sharded backend with
+//! All backends promise the same arithmetic — the sharded backend with
 //! one worker is bitwise-identical to native — so the loop bodies live
 //! here exactly once and the guarantee holds by construction.
+//!
+//! Each sweep exists in two dispatchable flavors (see
+//! [`SweepKernel`]):
+//!
+//! - **scalar** — one `f64::exp` + `f64::ln_1p` libm call per element;
+//!   the loss expression itself lives on
+//!   [`LogCosh::loss_from_exp`](crate::ica::score::LogCosh::loss_from_exp)
+//!   so the scalar reference is written exactly once in the crate.
+//! - **vector** — [`vmath::LANES`]-wide blocks through the branch-free
+//!   polynomial kernels of [`crate::linalg::vmath`], with remainder
+//!   columns routed through the bit-identical scalar twins
+//!   (`exp_lane`/`ln_1p_lane`), so a vector-kernel element's value does
+//!   not depend on where a block boundary falls. Per-row loss sums
+//!   accumulate into [`vmath::LANES`] lane accumulators folded in a
+//!   fixed pairwise order — deterministic, independent of T.
+//!
+//! `psip_ysq_sweep` has no kernel parameter: it is pure elementwise
+//! multiplication, whose result is bitwise-invariant to blocking, so one
+//! implementation serves both kernels.
 
+use super::SweepKernel;
 use crate::ica::score::LogCosh;
-use crate::linalg::Mat;
+use crate::linalg::vmath::{self, LANES};
+use crate::linalg::{matmul_a_bt_window_into, matmul_window_into, Mat};
 
 /// Fused loss + ψ sweep over `Y`: ONE exp per element feeds everything.
 /// With `e = exp(-2|u|)`, `tanh(|u|) = (1-e)/(1+e)` and
 /// `log cosh u = |u| + ln(1+e) - ln 2` (`u = y/2`). Fills `psi` and
 /// returns the **unnormalized** loss sum `Σ 2 log cosh(y/2)`.
-pub(super) fn loss_psi_sweep(y: &Mat, psi: &mut Mat) -> f64 {
-    let mut loss_acc = 0.0;
-    for i in 0..y.rows() {
-        let yrow = y.row(i);
-        let psirow = psi.row_mut(i);
-        for (p, &yv) in psirow.iter_mut().zip(yrow) {
-            let u = 0.5 * yv;
-            let a = u.abs();
-            let e = (-2.0 * a).exp();
-            loss_acc += 2.0 * (a + e.ln_1p() - std::f64::consts::LN_2);
-            *p = ((1.0 - e) / (1.0 + e)).copysign(u);
+pub(super) fn loss_psi_sweep(y: &Mat, psi: &mut Mat, kernel: SweepKernel) -> f64 {
+    match kernel {
+        // One accumulator across the whole matrix, in element order —
+        // the historical arithmetic, kept bit-for-bit.
+        SweepKernel::Scalar => {
+            let score = LogCosh;
+            let mut loss_acc = 0.0;
+            for i in 0..y.rows() {
+                let yrow = y.row(i);
+                let psirow = psi.row_mut(i);
+                for (p, &yv) in psirow.iter_mut().zip(yrow) {
+                    let u = 0.5 * yv;
+                    let a = u.abs();
+                    let e = (-2.0 * a).exp();
+                    loss_acc += score.loss_from_exp(a, e);
+                    *p = psi_from_exp(e, u);
+                }
+            }
+            loss_acc
+        }
+        // Per-row lane accumulators, folded pairwise, summed over rows.
+        SweepKernel::Vector => {
+            let mut loss_acc = 0.0;
+            for i in 0..y.rows() {
+                loss_acc += loss_psi_row_vector(y.row(i), psi.row_mut(i));
+            }
+            loss_acc
         }
     }
-    loss_acc
+}
+
+fn loss_psi_row_vector(yrow: &[f64], psirow: &mut [f64]) -> f64 {
+    let mut acc = [0.0f64; LANES];
+    let split = (yrow.len() / LANES) * LANES;
+    let (yblocks, ytail) = yrow.split_at(split);
+    let (pblocks, ptail) = psirow.split_at_mut(split);
+    for (yb, pb) in yblocks.chunks_exact(LANES).zip(pblocks.chunks_exact_mut(LANES)) {
+        let mut u = [0.0; LANES];
+        let mut a = [0.0; LANES];
+        let mut neg2a = [0.0; LANES];
+        for l in 0..LANES {
+            u[l] = 0.5 * yb[l];
+            a[l] = u[l].abs();
+            neg2a[l] = -2.0 * a[l];
+        }
+        let e = vmath::exp_lanes(&neg2a);
+        let lp = vmath::ln_1p_lanes(&e);
+        for l in 0..LANES {
+            acc[l] += LogCosh.loss_from_ln1p(a[l], lp[l]);
+            pb[l] = psi_from_exp(e[l], u[l]);
+        }
+    }
+    // Remainder columns: the scalar twins of the lane kernels, so the
+    // per-element values are independent of the block boundary.
+    for (l, (p, &yv)) in ptail.iter_mut().zip(ytail).enumerate() {
+        let u = 0.5 * yv;
+        let a = u.abs();
+        let e = vmath::exp_lane(-2.0 * a);
+        acc[l] += LogCosh.loss_from_ln1p(a, vmath::ln_1p_lane(e));
+        *p = psi_from_exp(e, u);
+    }
+    fold_lanes(&acc)
+}
+
+/// `ψ = tanh(u) = (1-e)/(1+e)` with the sign of `u`, from `e = exp(-2|u|)`
+/// — one place, shared by the scalar and vector sweeps.
+#[inline(always)]
+fn psi_from_exp(e: f64, u: f64) -> f64 {
+    ((1.0 - e) / (1.0 + e)).copysign(u)
+}
+
+/// Fixed pairwise fold of the lane accumulators: adjacent pairs each
+/// round (`((a0+a1)+(a2+a3)) + ((a4+a5)+(a6+a7))` for 8 lanes) —
+/// deterministic, the same tree shape regardless of row length, and
+/// parameterized over [`LANES`] so retuning the lane width cannot
+/// silently drop accumulators.
+#[inline(always)]
+fn fold_lanes(acc: &[f64; LANES]) -> f64 {
+    const { assert!(LANES.is_power_of_two()) };
+    let mut buf = *acc;
+    let mut n = LANES;
+    while n > 1 {
+        n /= 2;
+        for i in 0..n {
+            buf[i] = buf[2 * i] + buf[2 * i + 1];
+        }
+    }
+    buf[0]
 }
 
 /// ψ' = (1 - ψ²)/2 reusing the stored tanh, and y² for σ̂²/ĥ_ij.
+///
+/// Kernel-independent: elementwise products are bitwise-invariant to
+/// blocking, so the lane-blocked loop below serves both kernels (the
+/// explicit [`LANES`] stride keeps the auto-vectorizer on the same width
+/// as the transcendental sweeps).
 pub(super) fn psip_ysq_sweep(y: &Mat, psi: &Mat, psip: &mut Mat, ysq: &mut Mat) {
     for i in 0..y.rows() {
         let psirow = psi.row(i);
         let psiprow = psip.row_mut(i);
-        for (pp, &p) in psiprow.iter_mut().zip(psirow) {
-            *pp = 0.5 * (1.0 - p * p);
+        for (pb, ppb) in psirow.chunks(LANES).zip(psiprow.chunks_mut(LANES)) {
+            for (pp, &p) in ppb.iter_mut().zip(pb) {
+                *pp = 0.5 * (1.0 - p * p);
+            }
         }
         let yrow = y.row(i);
         let ysqrow = ysq.row_mut(i);
-        for (sq, &yv) in ysqrow.iter_mut().zip(yrow) {
-            *sq = yv * yv;
+        for (yb, sb) in yrow.chunks(LANES).zip(ysqrow.chunks_mut(LANES)) {
+            for (sq, &yv) in sb.iter_mut().zip(yb) {
+                *sq = yv * yv;
+            }
         }
     }
 }
 
 /// Unnormalized loss sum `Σ 2 log cosh(y/2)` over `Y` (line-search probe;
 /// no ψ needed).
-pub(super) fn loss_sum(y: &Mat) -> f64 {
-    let mut acc = 0.0;
-    for i in 0..y.rows() {
-        for &yv in y.row(i) {
-            let a = (0.5 * yv).abs();
-            acc += 2.0 * (a + (-2.0 * a).exp().ln_1p() - std::f64::consts::LN_2);
+pub(super) fn loss_sum(y: &Mat, kernel: SweepKernel) -> f64 {
+    match kernel {
+        // Single accumulator in element order (historical arithmetic).
+        SweepKernel::Scalar => {
+            let score = LogCosh;
+            let mut acc = 0.0;
+            for i in 0..y.rows() {
+                for &yv in y.row(i) {
+                    let a = (0.5 * yv).abs();
+                    acc += score.loss_from_exp(a, (-2.0 * a).exp());
+                }
+            }
+            acc
+        }
+        SweepKernel::Vector => {
+            let mut acc = 0.0;
+            for i in 0..y.rows() {
+                acc += loss_row_vector(y.row(i));
+            }
+            acc
         }
     }
-    acc
+}
+
+fn loss_row_vector(yrow: &[f64]) -> f64 {
+    let mut acc = [0.0f64; LANES];
+    let split = (yrow.len() / LANES) * LANES;
+    for yb in yrow[..split].chunks_exact(LANES) {
+        let mut a = [0.0; LANES];
+        let mut neg2a = [0.0; LANES];
+        for l in 0..LANES {
+            a[l] = (0.5 * yb[l]).abs();
+            neg2a[l] = -2.0 * a[l];
+        }
+        let e = vmath::exp_lanes(&neg2a);
+        let lp = vmath::ln_1p_lanes(&e);
+        for l in 0..LANES {
+            acc[l] += LogCosh.loss_from_ln1p(a[l], lp[l]);
+        }
+    }
+    for (l, &yv) in yrow[split..].iter().enumerate() {
+        let a = (0.5 * yv).abs();
+        let e = vmath::exp_lane(-2.0 * a);
+        acc[l] += LogCosh.loss_from_ln1p(a, vmath::ln_1p_lane(e));
+    }
+    fold_lanes(&acc)
+}
+
+/// ψ over a row window (the minibatch step): scalar kernel = `tanh(y/2)`
+/// per element (the historical minibatch arithmetic), vector kernel =
+/// the same `(1-e)/(1+e)` lane form the full sweep uses.
+fn psi_row(yrow: &[f64], psirow: &mut [f64], score: LogCosh, kernel: SweepKernel) {
+    match kernel {
+        SweepKernel::Scalar => {
+            for (p, &yv) in psirow.iter_mut().zip(yrow) {
+                *p = score.psi(yv);
+            }
+        }
+        SweepKernel::Vector => {
+            let split = (yrow.len() / LANES) * LANES;
+            let (yblocks, ytail) = yrow.split_at(split);
+            let (pblocks, ptail) = psirow.split_at_mut(split);
+            for (yb, pb) in yblocks.chunks_exact(LANES).zip(pblocks.chunks_exact_mut(LANES)) {
+                let mut u = [0.0; LANES];
+                let mut neg2a = [0.0; LANES];
+                for l in 0..LANES {
+                    u[l] = 0.5 * yb[l];
+                    neg2a[l] = -2.0 * u[l].abs();
+                }
+                let e = vmath::exp_lanes(&neg2a);
+                for l in 0..LANES {
+                    pb[l] = psi_from_exp(e[l], u[l]);
+                }
+            }
+            for (p, &yv) in ptail.iter_mut().zip(ytail) {
+                let u = 0.5 * yv;
+                let e = vmath::exp_lane(-2.0 * u.abs());
+                *p = psi_from_exp(e, u);
+            }
+        }
+    }
 }
 
 /// The Infomax minibatch step over `X[:, lo..lo+tb]`: streams
 /// `Y_b = W·X_b` and `ψ(Y_b)` into the front of the workspaces and
 /// returns the **unnormalized** contraction `ψ(Y_b) Y_bᵀ` (N×N).
+///
+/// Both matrix products run on the shared blocked kernels
+/// ([`matmul_window_into`] / [`matmul_a_bt_window_into`]) — the same
+/// code the full-batch path uses — instead of bespoke triple loops.
 pub(super) fn batch_grad_raw(
     w: &Mat,
     x: &Mat,
     lo: usize,
     tb: usize,
     score: LogCosh,
+    kernel: SweepKernel,
     y: &mut Mat,
     psi: &mut Mat,
 ) -> Mat {
     let n = x.rows();
+    matmul_window_into(w, x, lo, tb, y);
     for i in 0..n {
-        for c in 0..tb {
-            let mut acc = 0.0;
-            for k in 0..n {
-                acc += w[(i, k)] * x[(k, lo + c)];
-            }
-            y[(i, c)] = acc;
-        }
-    }
-    for i in 0..n {
-        for c in 0..tb {
-            psi[(i, c)] = score.psi(y[(i, c)]);
-        }
+        psi_row(&y.row(i)[..tb], &mut psi.row_mut(i)[..tb], score, kernel);
     }
     let mut g = Mat::zeros(n, n);
-    for i in 0..n {
-        for j in 0..n {
-            let mut acc = 0.0;
-            for c in 0..tb {
-                acc += psi[(i, c)] * y[(j, c)];
-            }
-            g[(i, j)] = acc;
-        }
-    }
+    matmul_a_bt_window_into(psi, y, tb, &mut g);
     g
 }

@@ -2,34 +2,43 @@
 //! `BENCH_backend.json` with two sections:
 //!
 //! - `results` — per-sweep wall-clock of the full H̃² statistics sweep,
-//!   native vs sharded (the original section).
+//!   native vs sharded × scalar vs vector sweep kernel (so the report
+//!   records the vectorization speedup next to the sharding speedup).
 //! - `fit_results` — solver-level wall-clock of **entire fits**
 //!   (preprocess + solve, fixed iteration budget) comparing in-memory
-//!   native, in-memory sharded, and the out-of-core chunked path.
+//!   native (both kernels), in-memory sharded, and the out-of-core
+//!   chunked path.
 //!
-//! The report schema (`fica.bench_backend/v1`) is stable so successive
-//! PRs can track the trajectory; `fit_results` is an additive section:
+//! The report schema is versioned so successive PRs can track the
+//! trajectory. `fica.bench_backend/v2` adds a `kernel` field to every
+//! row of both sections and re-bases `speedup_vs_native` on the
+//! native+scalar row (the reference arithmetic), so vector rows read
+//! directly as "× faster than the scalar reference". The full
+//! field-by-field schema (and the v1→v2 delta) is documented in
+//! `docs/BENCH_SCHEMA.md`.
 //!
 //! ```json
 //! {
-//!   "schema": "fica.bench_backend/v1",
+//!   "schema": "fica.bench_backend/v2",
 //!   "level": "h2", "smoke": false, "t": 100000,
+//!   "kernels": ["scalar", "vector"],
 //!   "results": [
-//!     {"backend": "native", "workers": 1, "n": 64, "t": 100000,
-//!      "median_s": 0.61, "mean_s": 0.62, "sweeps_per_s": 1.64,
-//!      "speedup_vs_native": 1.0, "samples": [...]},
+//!     {"backend": "native", "kernel": "scalar", "workers": 1, "n": 64,
+//!      "t": 100000, "median_s": 0.61, "mean_s": 0.62,
+//!      "sweeps_per_s": 1.64, "speedup_vs_native": 1.0, "samples": [...]},
 //!     ...
 //!   ],
 //!   "fit_results": [
-//!     {"backend": "native", "out_of_core": false, "workers": 1,
-//!      "n": 32, "t": 100000, "iters": 10, "median_s": 3.1, ...},
+//!     {"backend": "native", "kernel": "vector", "out_of_core": false,
+//!      "workers": 1, "n": 32, "t": 100000, "iters": 10,
+//!      "median_s": 3.1, ...},
 //!     ...
 //!   ]
 //! }
 //! ```
 
 use super::{black_box, Measurement};
-use crate::backend::{ComputeBackend, NativeBackend, ShardedBackend, StatsLevel};
+use crate::backend::{ComputeBackend, NativeBackend, ShardedBackend, StatsLevel, SweepKernel};
 use crate::error::IcaError;
 use crate::estimator::{BackendChoice, Picard};
 use crate::linalg::Mat;
@@ -107,25 +116,40 @@ impl BackendBenchConfig {
 /// One measured configuration.
 #[derive(Clone, Debug)]
 pub struct SweepTiming {
+    /// Backend id ("native" | "sharded").
     pub backend: &'static str,
+    /// Sweep kernel the backend dispatched.
+    pub kernel: SweepKernel,
+    /// Worker threads (1 for native).
     pub workers: usize,
+    /// Signal count N.
     pub n: usize,
+    /// Sample count T.
     pub t: usize,
+    /// Raw per-sweep wall-clock samples in seconds.
     pub samples: Vec<f64>,
 }
 
 impl SweepTiming {
     fn measurement(&self) -> Measurement {
         Measurement {
-            name: format!("{} w={} N={}", self.backend, self.workers, self.n),
+            name: format!(
+                "{} [{}] w={} N={}",
+                self.backend,
+                self.kernel.id(),
+                self.workers,
+                self.n
+            ),
             samples: self.samples.clone(),
         }
     }
 
+    /// Median seconds per sweep.
     pub fn median_s(&self) -> f64 {
         self.measurement().median()
     }
 
+    /// Mean seconds per sweep.
     pub fn mean_s(&self) -> f64 {
         self.measurement().mean()
     }
@@ -142,34 +166,39 @@ fn measure(be: &mut dyn ComputeBackend, w: &Mat, samples: usize) -> Vec<f64> {
         .collect()
 }
 
-/// Run the sweep-timing matrix. Prints one line per configuration.
+/// Run the sweep-timing matrix — native and sharded, each under both
+/// sweep kernels. Prints one line per configuration.
 pub fn run(cfg: &BackendBenchConfig) -> Vec<SweepTiming> {
     let mut out = Vec::new();
     for &n in &cfg.sizes {
         let mut rng = Pcg64::new(cfg.seed ^ (n as u64));
         let x = crate::testkit::gen::sources(&mut rng, n, cfg.t);
         let w = crate::testkit::gen::well_conditioned(&mut rng, n);
-        let mut native = NativeBackend::new(x.clone());
-        let timing = SweepTiming {
-            backend: "native",
-            workers: 1,
-            n,
-            t: cfg.t,
-            samples: measure(&mut native, &w, cfg.samples),
-        };
-        timing.measurement().report();
-        out.push(timing);
-        for &workers in &cfg.workers {
-            let mut sharded = ShardedBackend::new(x.clone(), workers);
+        for kernel in [SweepKernel::Scalar, SweepKernel::Vector] {
+            let mut native = NativeBackend::with_kernel(x.clone(), kernel);
             let timing = SweepTiming {
-                backend: "sharded",
-                workers,
+                backend: "native",
+                kernel,
+                workers: 1,
                 n,
                 t: cfg.t,
-                samples: measure(&mut sharded, &w, cfg.samples),
+                samples: measure(&mut native, &w, cfg.samples),
             };
             timing.measurement().report();
             out.push(timing);
+            for &workers in &cfg.workers {
+                let mut sharded = ShardedBackend::with_kernel(x.clone(), workers, kernel);
+                let timing = SweepTiming {
+                    backend: "sharded",
+                    kernel,
+                    workers,
+                    n,
+                    t: cfg.t,
+                    samples: measure(&mut sharded, &w, cfg.samples),
+                };
+                timing.measurement().report();
+                out.push(timing);
+            }
         }
     }
     out
@@ -178,14 +207,23 @@ pub fn run(cfg: &BackendBenchConfig) -> Vec<SweepTiming> {
 /// One measured full-fit configuration.
 #[derive(Clone, Debug)]
 pub struct FitTiming {
+    /// Backend id ("native" | "sharded" | "chunked").
     pub backend: &'static str,
+    /// Sweep kernel the fit dispatched.
+    pub kernel: SweepKernel,
+    /// Whether the fit streamed from an out-of-core scratch file.
     pub out_of_core: bool,
+    /// Worker threads serving the sweeps.
     pub workers: usize,
+    /// Signal count N.
     pub n: usize,
+    /// Sample count T.
     pub t: usize,
-    /// Streaming chunk size the fit ran with (sized so the out-of-core
-    /// pool has at least `workers` chunks to dispatch).
+    /// Streaming chunk size the fit ran with — `ceil(fit_t / (4·workers))`,
+    /// so the pooled out-of-core row has at least 4 chunks per worker to
+    /// dispatch (see `run_fits`).
     pub chunk: usize,
+    /// Raw per-fit wall-clock samples in seconds.
     pub samples: Vec<f64>,
 }
 
@@ -193,8 +231,9 @@ impl FitTiming {
     fn measurement(&self) -> Measurement {
         Measurement {
             name: format!(
-                "fit {}{} w={} N={}",
+                "fit {} [{}]{} w={} N={}",
                 self.backend,
+                self.kernel.id(),
                 if self.out_of_core { " (out-of-core)" } else { "" },
                 self.workers,
                 self.n
@@ -203,25 +242,30 @@ impl FitTiming {
         }
     }
 
+    /// Median seconds per fit.
     pub fn median_s(&self) -> f64 {
         self.measurement().median()
     }
 
+    /// Mean seconds per fit.
     pub fn mean_s(&self) -> f64 {
         self.measurement().mean()
     }
 }
 
 /// Run the solver-level fit matrix: whole `Picard::fit` calls
-/// (preprocess + solve at a fixed iteration budget) for in-memory native,
-/// in-memory sharded, out-of-core 1 worker, and out-of-core pooled.
+/// (preprocess + solve at a fixed iteration budget) for in-memory native
+/// under both kernels (the scalar row is the speedup baseline), in-memory
+/// sharded, out-of-core 1 worker, and out-of-core pooled.
 pub fn run_fits(cfg: &BackendBenchConfig) -> Vec<FitTiming> {
     let w = cfg.fit_workers();
-    let configs: [(&'static str, BackendChoice, bool, usize); 4] = [
-        ("native", BackendChoice::Native, false, 1),
-        ("sharded", BackendChoice::Sharded { workers: w }, false, w),
-        ("chunked", BackendChoice::Native, true, 1),
-        ("chunked", BackendChoice::Sharded { workers: w }, true, w),
+    type FitConfig = (&'static str, BackendChoice, bool, usize, SweepKernel);
+    let configs: [FitConfig; 5] = [
+        ("native", BackendChoice::Native, false, 1, SweepKernel::Scalar),
+        ("native", BackendChoice::Native, false, 1, SweepKernel::Vector),
+        ("sharded", BackendChoice::Sharded { workers: w }, false, w, SweepKernel::Vector),
+        ("chunked", BackendChoice::Native, true, 1, SweepKernel::Vector),
+        ("chunked", BackendChoice::Sharded { workers: w }, true, w, SweepKernel::Vector),
     ];
     // Chunk so every configuration (including the pooled out-of-core
     // one) has at least 4 chunks per worker to dispatch — otherwise the
@@ -231,9 +275,10 @@ pub fn run_fits(cfg: &BackendBenchConfig) -> Vec<FitTiming> {
     let mut out = Vec::new();
     for &n in &cfg.fit_sizes {
         let data = crate::signal::experiment_a(n, cfg.fit_t, cfg.seed ^ 0xf17);
-        for (backend_name, backend, out_of_core, workers) in configs {
+        for (backend_name, backend, out_of_core, workers, kernel) in configs {
             let picard = Picard::new()
                 .backend(backend)
+                .kernel(kernel)
                 .out_of_core(out_of_core)
                 .chunk_cols(chunk)
                 .tol(0.0)
@@ -247,6 +292,7 @@ pub fn run_fits(cfg: &BackendBenchConfig) -> Vec<FitTiming> {
                 .collect();
             let timing = FitTiming {
                 backend: backend_name,
+                kernel,
                 out_of_core,
                 workers,
                 n,
@@ -261,16 +307,18 @@ pub fn run_fits(cfg: &BackendBenchConfig) -> Vec<FitTiming> {
     out
 }
 
-/// Build the stable `fica.bench_backend/v1` report.
+/// Build the stable `fica.bench_backend/v2` report (see
+/// `docs/BENCH_SCHEMA.md` for the field-by-field contract).
 pub fn report_json(
     cfg: &BackendBenchConfig,
     timings: &[SweepTiming],
     fits: &[FitTiming],
 ) -> Json {
-    // Native medians per N, for the speedup column.
+    // Native+scalar medians per N: the speedup baseline is the reference
+    // arithmetic, so vector rows read as the vectorization gain.
     let native_median: BTreeMap<usize, f64> = timings
         .iter()
-        .filter(|t| t.backend == "native")
+        .filter(|t| t.backend == "native" && t.kernel == SweepKernel::Scalar)
         .map(|t| (t.n, t.median_s()))
         .collect();
     let results: Vec<Json> = timings
@@ -279,6 +327,7 @@ pub fn report_json(
             let median = t.median_s();
             let mut obj = BTreeMap::new();
             obj.insert("backend".into(), Json::Str(t.backend.to_string()));
+            obj.insert("kernel".into(), Json::Str(t.kernel.id().to_string()));
             obj.insert("workers".into(), Json::Num(t.workers as f64));
             obj.insert("n".into(), Json::Num(t.n as f64));
             obj.insert("t".into(), Json::Num(t.t as f64));
@@ -302,10 +351,11 @@ pub fn report_json(
             Json::Obj(obj)
         })
         .collect();
-    // In-memory-native fit medians per N, for the fit speedup column.
+    // In-memory native+scalar fit medians per N: same reference baseline
+    // as the sweep section.
     let native_fit_median: BTreeMap<usize, f64> = fits
         .iter()
-        .filter(|f| f.backend == "native" && !f.out_of_core)
+        .filter(|f| f.backend == "native" && !f.out_of_core && f.kernel == SweepKernel::Scalar)
         .map(|f| (f.n, f.median_s()))
         .collect();
     let fit_results: Vec<Json> = fits
@@ -314,6 +364,7 @@ pub fn report_json(
             let median = f.median_s();
             let mut obj = BTreeMap::new();
             obj.insert("backend".into(), Json::Str(f.backend.to_string()));
+            obj.insert("kernel".into(), Json::Str(f.kernel.id().to_string()));
             obj.insert("out_of_core".into(), Json::Bool(f.out_of_core));
             obj.insert("workers".into(), Json::Num(f.workers as f64));
             obj.insert("n".into(), Json::Num(f.n as f64));
@@ -337,8 +388,17 @@ pub fn report_json(
         })
         .collect();
     let mut root = BTreeMap::new();
-    root.insert("schema".into(), Json::Str("fica.bench_backend/v1".into()));
+    root.insert("schema".into(), Json::Str("fica.bench_backend/v2".into()));
     root.insert("level".into(), Json::Str("h2".into()));
+    root.insert(
+        "kernels".into(),
+        Json::Arr(
+            [SweepKernel::Scalar, SweepKernel::Vector]
+                .iter()
+                .map(|k| Json::Str(k.id().to_string()))
+                .collect(),
+        ),
+    );
     root.insert("smoke".into(), Json::Bool(cfg.smoke));
     root.insert("t".into(), Json::Num(cfg.t as f64));
     root.insert(
@@ -377,25 +437,40 @@ mod tests {
             fit_samples: 1,
         };
         let timings = run(&cfg);
-        assert_eq!(timings.len(), 2); // native + sharded(2)
+        assert_eq!(timings.len(), 4); // (native + sharded(2)) x 2 kernels
         let fits = run_fits(&cfg);
-        assert_eq!(fits.len(), 4); // native, sharded, chunked x2
+        assert_eq!(fits.len(), 5); // native x 2 kernels, sharded, chunked x2
         let report = report_json(&cfg, &timings, &fits);
         assert_eq!(
             report.get("schema").and_then(|s| s.as_str()),
-            Some("fica.bench_backend/v1")
+            Some("fica.bench_backend/v2")
         );
         let results = report.get("results").unwrap().as_arr().unwrap();
-        assert_eq!(results.len(), 2);
+        assert_eq!(results.len(), 4);
         for r in results {
             assert!(r.get("median_s").unwrap().as_f64().unwrap() >= 0.0);
             assert!(r.get("backend").unwrap().as_str().is_some());
+            let kernel = r.get("kernel").unwrap().as_str().unwrap();
+            assert!(kernel == "scalar" || kernel == "vector");
         }
+        // The native+scalar row is the speedup baseline (exactly 1.0).
+        let baseline = results
+            .iter()
+            .find(|r| {
+                r.get("backend").unwrap().as_str() == Some("native")
+                    && r.get("kernel").unwrap().as_str() == Some("scalar")
+            })
+            .expect("native scalar row");
+        assert_eq!(
+            baseline.get("speedup_vs_native").unwrap().as_f64(),
+            Some(1.0)
+        );
         let fit_results = report.get("fit_results").unwrap().as_arr().unwrap();
-        assert_eq!(fit_results.len(), 4);
+        assert_eq!(fit_results.len(), 5);
         for r in fit_results {
             assert!(r.get("median_s").unwrap().as_f64().unwrap() >= 0.0);
             assert!(r.get("out_of_core").is_some());
+            assert!(r.get("kernel").unwrap().as_str().is_some());
         }
         // The report survives its own serialization.
         let text = report.to_string_compact();

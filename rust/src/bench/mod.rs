@@ -12,15 +12,20 @@ use std::time::{Duration, Instant};
 /// One benchmark's measurement results, in seconds per iteration.
 #[derive(Clone, Debug)]
 pub struct Measurement {
+    /// Human-readable configuration label (printed in reports).
     pub name: String,
+    /// Raw per-iteration timings in seconds.
     pub samples: Vec<f64>,
 }
 
 impl Measurement {
+    /// Arithmetic mean of the samples, in seconds.
     pub fn mean(&self) -> f64 {
         self.samples.iter().sum::<f64>() / self.samples.len() as f64
     }
 
+    /// Median of the samples, in seconds (midpoint average for even
+    /// counts).
     pub fn median(&self) -> f64 {
         let mut s = self.samples.clone();
         s.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -32,6 +37,7 @@ impl Measurement {
         }
     }
 
+    /// Population standard deviation of the samples, in seconds.
     pub fn stddev(&self) -> f64 {
         let m = self.mean();
         let var = self.samples.iter().map(|x| (x - m).powi(2)).sum::<f64>()
@@ -39,6 +45,7 @@ impl Measurement {
         var.sqrt()
     }
 
+    /// Print the one-line median/mean/stddev summary to stdout.
     pub fn report(&self) {
         println!(
             "{:<44} {:>12} median {:>12} mean ± {:>10}  ({} samples)",
@@ -51,6 +58,7 @@ impl Measurement {
     }
 }
 
+/// Format a duration in seconds with an auto-selected unit (ns/µs/ms/s).
 pub fn fmt_duration(secs: f64) -> String {
     if secs < 1e-6 {
         format!("{:.1} ns", secs * 1e9)
@@ -66,9 +74,13 @@ pub fn fmt_duration(secs: f64) -> String {
 /// Benchmark runner: measures `f` until a time budget or sample count is
 /// reached, whichever comes first.
 pub struct Bencher {
+    /// How long to run the closure unmeasured before sampling.
     pub warmup: Duration,
+    /// Total measurement time budget.
     pub budget: Duration,
+    /// Stop after this many samples even if budget remains.
     pub max_samples: usize,
+    /// Collect at least this many samples even past the budget.
     pub min_samples: usize,
 }
 

@@ -6,6 +6,7 @@
 //! subcommands (`fit`, `run`) have in common — flag values that fail to
 //! parse are hard errors, not silently replaced defaults.
 
+use crate::backend::SweepKernel;
 use crate::estimator::{BackendChoice, Picard};
 use crate::ica::Algorithm;
 use crate::preprocessing::Whitener;
@@ -14,8 +15,11 @@ use std::collections::BTreeMap;
 /// Parsed command line.
 #[derive(Debug, Default)]
 pub struct Args {
+    /// The subcommand (first positional token; empty if none given).
     pub command: String,
+    /// `--flag value` / `--flag=value` pairs.
     pub flags: BTreeMap<String, String>,
+    /// Bare `--switch` tokens, in order of appearance.
     pub switches: Vec<String>,
 }
 
@@ -49,14 +53,18 @@ impl Args {
         Ok(args)
     }
 
+    /// The value of `--name`, if given.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.flags.get(name).map(|s| s.as_str())
     }
 
+    /// The value of `--name`, or `default` if absent.
     pub fn get_or(&self, name: &str, default: &str) -> String {
         self.get(name).unwrap_or(default).to_string()
     }
 
+    /// Parse the value of `--name`, erroring (not defaulting) on an
+    /// unparsable value; `default` applies only when the flag is absent.
     pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String> {
         match self.get(name) {
             None => Ok(default),
@@ -64,21 +72,28 @@ impl Args {
         }
     }
 
+    /// Whether the bare switch `--name` was given.
     pub fn has(&self, name: &str) -> bool {
         self.switches.iter().any(|s| s == name)
     }
 }
 
 /// The solver-related flags `fica fit` and `fica run` share:
-/// `--algo`, `--whitener`, `--backend`, `--workers`, `--chunk`,
-/// `--out-of-core`, `--scratch-dir`, `--tol`, `--max-iters`, `--seed`,
-/// `--scale`. One decoder, one set of defaults, hard errors on bad
-/// values (no silent `unwrap_or(default)` fallback).
+/// `--algo`, `--whitener`, `--backend`, `--kernel`, `--workers`,
+/// `--chunk`, `--out-of-core`, `--scratch-dir`, `--tol`, `--max-iters`,
+/// `--seed`, `--scale`. One decoder, one set of defaults, hard errors on
+/// bad values (no silent `unwrap_or(default)` fallback).
 #[derive(Clone, Debug)]
 pub struct SolveFlags {
+    /// Solver algorithm (`--algo`, default `plbfgs-h2`).
     pub algo: Algorithm,
+    /// Whitening transform (`--whitener`, default `sphering`).
     pub whitener: Whitener,
+    /// Compute backend (`--backend` / `--workers`).
     pub backend: BackendChoice,
+    /// Elementwise sweep kernel for the CPU backends
+    /// (scalar reference | auto-vectorized; default vector).
+    pub kernel: SweepKernel,
     /// Streaming chunk size in sample columns (0 = library default).
     pub chunk: usize,
     /// Solve out-of-core: whitened chunks go to a scratch file and the
@@ -86,9 +101,13 @@ pub struct SolveFlags {
     pub out_of_core: bool,
     /// Directory for out-of-core scratch files (None = system temp dir).
     pub scratch_dir: Option<String>,
+    /// Gradient ∞-norm tolerance (`--tol`, default 1e-8).
     pub tol: f64,
+    /// Iteration cap (`--max-iters`, default 200).
     pub max_iters: usize,
+    /// Dataset / solver seed (`--seed`, default 0).
     pub seed: u64,
+    /// Synthetic dataset scale in (0, 1] (`--scale`, default 0.25).
     pub scale: f64,
 }
 
@@ -122,6 +141,18 @@ impl SolveFlags {
                 "--workers only applies to --backend sharded, not {backend_id}"
             ));
         }
+        let kernel_id = args.get_or("kernel", "vector");
+        let kernel = SweepKernel::from_id(&kernel_id)
+            .ok_or_else(|| format!("unknown --kernel {kernel_id} (scalar|vector)"))?;
+        if args.get("kernel").is_some() && matches!(backend_id.as_str(), "xla" | "auto") {
+            // The XLA backend runs its own compiled sweep; accepting the
+            // flag there — or with auto, which may resolve to XLA —
+            // would silently measure nothing.
+            return Err(format!(
+                "--kernel selects the CPU sweep kernel; it does not apply to \
+                 --backend {backend_id} (use native or sharded)"
+            ));
+        }
         if args.get("out-of-core").is_some() {
             // `--out-of-core true` would otherwise parse as flag+value,
             // silently leaving the switch off — the one mistake this
@@ -147,6 +178,7 @@ impl SolveFlags {
             algo,
             whitener,
             backend,
+            kernel,
             chunk: args.get_parse("chunk", 0)?,
             out_of_core,
             scratch_dir,
@@ -163,6 +195,7 @@ impl SolveFlags {
             .algorithm(self.algo)
             .whitener(self.whitener)
             .backend(self.backend)
+            .kernel(self.kernel)
             .tol(self.tol)
             .max_iters(self.max_iters)
             .seed(self.seed)
@@ -177,6 +210,7 @@ impl SolveFlags {
     }
 }
 
+/// The `fica help` text: every subcommand and flag, one screen.
 pub const USAGE: &str = "\
 fica — Faster ICA by preconditioning with Hessian approximations
        (Ablin, Cardoso & Gramfort 2017; three-layer rust+JAX+Pallas build)
@@ -197,6 +231,10 @@ COMMANDS:
                                  (default plbfgs-h2)
         --whitener <id>          sphering|pca (default sphering)
         --backend <id>           native|sharded|xla|auto (default native)
+        --kernel <id>            scalar|vector (default vector): elementwise
+                                 sweep kernel for the CPU backends — scalar is
+                                 the libm reference, vector the lane-blocked
+                                 auto-vectorized sweep (see ARCHITECTURE.md)
         --workers <usize>        worker threads for the sharded backend and
                                  the out-of-core pool (0 = one per core;
                                  implies --backend sharded)
@@ -325,5 +363,34 @@ mod tests {
         assert!(decode(&["fit", "--workers", "many"]).is_err());
         assert!(decode(&["fit", "--backend", "gpu"]).is_err());
         assert!(decode(&["fit", "--chunk", "-3"]).is_err());
+    }
+
+    #[test]
+    fn kernel_flag_decodes_and_validates() {
+        // Default is the vectorized sweep.
+        let f = decode(&["fit"]).unwrap();
+        assert_eq!(f.kernel, SweepKernel::Vector);
+        let f = decode(&["fit", "--kernel", "scalar"]).unwrap();
+        assert_eq!(f.kernel, SweepKernel::Scalar);
+        // Composes with the other backend flags.
+        let f = decode(&["fit", "--kernel", "scalar", "--workers", "3"]).unwrap();
+        assert_eq!(f.kernel, SweepKernel::Scalar);
+        assert_eq!(f.backend, BackendChoice::Sharded { workers: 3 });
+        let f = decode(&["fit", "--kernel", "vector", "--out-of-core"]).unwrap();
+        assert_eq!(f.kernel, SweepKernel::Vector);
+        assert!(f.out_of_core);
+        // Unknown ids and the XLA backend are hard errors.
+        let err = decode(&["fit", "--kernel", "avx512"]).expect_err("unknown kernel");
+        assert!(err.contains("--kernel"), "{err}");
+        // XLA runs its own compiled sweep, and auto may resolve to XLA:
+        // an explicit --kernel would be silently ignored on both.
+        for backend in ["xla", "auto"] {
+            let err = decode(&["fit", "--kernel", "scalar", "--backend", backend])
+                .expect_err("kernel does not apply to xla/auto");
+            assert!(err.contains("--kernel"), "{err}");
+        }
+        // But an unset --kernel next to them stays fine.
+        assert!(decode(&["fit", "--backend", "xla"]).is_ok());
+        assert!(decode(&["fit", "--backend", "auto"]).is_ok());
     }
 }

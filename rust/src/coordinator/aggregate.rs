@@ -10,15 +10,18 @@ pub struct CurvePoint {
     pub x: f64,
     /// Median gradient ∞-norm across runs at this x.
     pub median: f64,
-    /// 25th / 75th percentiles (spread of the band).
+    /// 25th percentile across runs (lower edge of the band).
     pub q25: f64,
+    /// 75th percentile across runs (upper edge of the band).
     pub q75: f64,
 }
 
 /// Median curves on both axes for one algorithm.
 #[derive(Clone, Debug, Default)]
 pub struct MedianCurves {
+    /// Median gradient curve against iteration count.
     pub vs_iters: Vec<CurvePoint>,
+    /// Median gradient curve against charged CPU time.
     pub vs_time: Vec<CurvePoint>,
 }
 

@@ -16,6 +16,7 @@ use std::sync::{Arc, Mutex};
 
 /// One unit of work: build the dataset, preprocess, solve.
 pub struct Job {
+    /// Caller-chosen identifier carried into the outcome.
     pub id: usize,
     /// Human-readable label (algorithm id, seed, …).
     pub label: String,
@@ -29,11 +30,28 @@ pub struct Job {
 
 /// Result envelope.
 pub enum JobOutcome {
-    Done { id: usize, label: String, result: SolveResult },
-    Panic { id: usize, label: String, message: String },
+    /// The job's solve finished (converged or not — see `result`).
+    Done {
+        /// The submitting [`Job`]'s id.
+        id: usize,
+        /// The submitting [`Job`]'s label.
+        label: String,
+        /// The solver's result.
+        result: SolveResult,
+    },
+    /// The job panicked; the pool kept draining the others.
+    Panic {
+        /// The submitting [`Job`]'s id.
+        id: usize,
+        /// The submitting [`Job`]'s label.
+        label: String,
+        /// The panic payload, stringified.
+        message: String,
+    },
 }
 
 impl JobOutcome {
+    /// The id of the job this outcome belongs to.
     pub fn id(&self) -> usize {
         match self {
             JobOutcome::Done { id, .. } | JobOutcome::Panic { id, .. } => *id,
@@ -44,6 +62,7 @@ impl JobOutcome {
 /// Pool sizing.
 #[derive(Clone, Copy, Debug)]
 pub struct PoolConfig {
+    /// Worker thread count (default: one per available core).
     pub workers: usize,
     /// Bounded queue length between producer and workers (backpressure).
     pub queue_bound: usize,

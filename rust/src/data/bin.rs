@@ -186,6 +186,8 @@ pub struct BinWriter {
 }
 
 impl BinWriter {
+    /// Create `path` (truncating) and write the validated 24-byte
+    /// header promising a `rows × cols` payload.
     pub fn create(path: impl AsRef<Path>, rows: usize, cols: usize) -> Result<BinWriter, IcaError> {
         let path = path.as_ref();
         let label = path.display().to_string();

@@ -170,6 +170,8 @@ pub struct CsvWriter {
 }
 
 impl CsvWriter {
+    /// Create `path` (truncating), promising a `rows × cols` payload
+    /// checked at [`CsvWriter::finish`].
     pub fn create(path: impl AsRef<Path>, rows: usize, cols: usize) -> Result<CsvWriter, IcaError> {
         let path = path.as_ref();
         let label = path.display().to_string();

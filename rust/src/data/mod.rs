@@ -108,10 +108,13 @@ pub struct MemSource {
 }
 
 impl MemSource {
+    /// Source over `x`, labeled `"memory"` in error messages.
     pub fn new(x: Mat) -> Self {
         Self::with_label(x, "memory")
     }
 
+    /// Source over `x` with a custom error-message label (e.g. the path
+    /// a JSON matrix was loaded from).
     pub fn with_label(x: Mat, label: impl Into<String>) -> Self {
         Self { x, pos: 0, label: label.into() }
     }
@@ -165,6 +168,7 @@ pub struct MatSource<'a> {
 }
 
 impl<'a> MatSource<'a> {
+    /// Borrowing source over `x`, labeled `"memory"`.
     pub fn new(x: &'a Mat) -> Self {
         Self { x, pos: 0, label: "memory".into() }
     }
@@ -436,6 +440,7 @@ impl ScratchFile {
         ScratchFile { path, file: None }
     }
 
+    /// The reserved scratch path (exists until drop).
     pub fn path(&self) -> &Path {
         &self.path
     }

@@ -52,6 +52,7 @@ pub struct StreamingStats {
 }
 
 impl StreamingStats {
+    /// An empty accumulator for `n` signals.
     pub fn new(n: usize) -> Self {
         Self {
             sum: vec![0.0; n],

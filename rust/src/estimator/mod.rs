@@ -18,7 +18,9 @@
 //! spirit of the registry-manifest idiom), so a model that loads is a
 //! model that works.
 
-use crate::backend::{ChunkedBackend, ComputeBackend, NativeBackend, ShardedBackend};
+use crate::backend::{
+    ChunkedBackend, ComputeBackend, NativeBackend, ShardedBackend, SweepKernel,
+};
 use crate::data::{DataSource, MatSource, DEFAULT_CHUNK_COLS};
 use crate::error::IcaError;
 use crate::ica::{try_solve, Algorithm, HessianApprox, SolverConfig, Trace};
@@ -91,6 +93,7 @@ pub struct Picard {
     max_time: f64,
     seed: u64,
     backend: BackendChoice,
+    kernel: SweepKernel,
     chunk_cols: usize,
     out_of_core: bool,
     scratch_dir: Option<PathBuf>,
@@ -118,6 +121,7 @@ impl fmt::Debug for Picard {
             .field("max_time", &self.max_time)
             .field("seed", &self.seed)
             .field("backend", &self.backend)
+            .field("kernel", &self.kernel)
             .field("chunk_cols", &self.chunk_cols)
             .field("out_of_core", &self.out_of_core)
             .field("scratch_dir", &self.scratch_dir)
@@ -128,6 +132,7 @@ impl fmt::Debug for Picard {
 }
 
 impl Picard {
+    /// A builder with the paper's defaults (see the type-level docs).
     pub fn new() -> Self {
         Self {
             algorithm: Algorithm::Lbfgs { precond: Some(HessianApprox::H2), memory: 7 },
@@ -138,6 +143,7 @@ impl Picard {
             max_time: f64::INFINITY,
             seed: 0,
             backend: BackendChoice::Native,
+            kernel: SweepKernel::default(),
             chunk_cols: DEFAULT_CHUNK_COLS,
             out_of_core: false,
             scratch_dir: None,
@@ -191,6 +197,18 @@ impl Picard {
     /// Compute backend selection (native / sharded / xla / auto-fallback).
     pub fn backend(mut self, backend: BackendChoice) -> Self {
         self.backend = backend;
+        self
+    }
+
+    /// Which elementwise sweep kernel the CPU backends run (default:
+    /// [`SweepKernel::Vector`], the lane-blocked auto-vectorized sweep).
+    /// [`SweepKernel::Scalar`] is the libm reference sweep — the same
+    /// per-element arithmetic as before vectorization (see
+    /// [`SweepKernel`] for the one minibatch-contraction caveat). The
+    /// XLA backend compiles its own fused sweep and ignores this
+    /// selection.
+    pub fn kernel(mut self, kernel: SweepKernel) -> Self {
+        self.kernel = kernel;
         self
     }
 
@@ -297,10 +315,18 @@ impl Picard {
         xw: Mat,
     ) -> Result<(Box<dyn ComputeBackend>, &'static str, Option<String>), IcaError> {
         match self.backend {
-            BackendChoice::Native => Ok((Box::new(NativeBackend::new(xw)), "native", None)),
+            BackendChoice::Native => Ok((
+                Box::new(NativeBackend::with_kernel(xw, self.kernel)),
+                "native",
+                None,
+            )),
             BackendChoice::Sharded { .. } => {
                 let workers = self.pool_workers();
-                Ok((Box::new(ShardedBackend::new(xw, workers)), "sharded", None))
+                Ok((
+                    Box::new(ShardedBackend::with_kernel(xw, workers, self.kernel)),
+                    "sharded",
+                    None,
+                ))
             }
             BackendChoice::Xla => {
                 let engine = self.engine_handle()?;
@@ -313,7 +339,7 @@ impl Picard {
                 {
                     Ok(be) => Ok((Box::new(be), "xla", None)),
                     Err(why) => Ok((
-                        Box::new(NativeBackend::new(xw)),
+                        Box::new(NativeBackend::with_kernel(xw, self.kernel)),
                         "native",
                         Some(why.to_string()),
                     )),
@@ -399,10 +425,11 @@ impl Picard {
         ) = match x {
             WhitenedData::InMemory(xw) => self.make_backend(xw)?,
             WhitenedData::OutOfCore(ws) => {
-                let be = ChunkedBackend::from_scratch(
+                let be = ChunkedBackend::from_scratch_with_kernel(
                     ws.into_scratch(),
                     self.chunk_cols,
                     self.pool_workers(),
+                    self.kernel,
                 )?;
                 (Box::new(be), "chunked", None)
             }

@@ -25,6 +25,7 @@ pub enum ExperimentId {
 }
 
 impl ExperimentId {
+    /// Parse a CLI identifier (`fig1`, `fig2a`, …, `fig4`).
     pub fn from_str(s: &str) -> Option<Self> {
         Some(match s {
             "fig1" => ExperimentId::Fig1,
@@ -38,6 +39,7 @@ impl ExperimentId {
         })
     }
 
+    /// The stable CLI identifier (inverse of [`ExperimentId::from_str`]).
     pub fn name(self) -> &'static str {
         match self {
             ExperimentId::Fig1 => "fig1",
@@ -50,6 +52,7 @@ impl ExperimentId {
         }
     }
 
+    /// Every experiment, in `fica experiment --id all` order.
     pub fn all() -> &'static [ExperimentId] {
         &[
             ExperimentId::Fig1,

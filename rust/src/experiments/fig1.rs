@@ -11,8 +11,11 @@ use crate::backend::NativeBackend;
 use crate::ica::{try_solve, Algorithm, HessianApprox, SolverConfig};
 use crate::linalg::Mat;
 
+/// Configuration of the Fig. 1 run.
 pub struct Fig1Config {
+    /// Iterations per algorithm (paper: 20).
     pub iters: usize,
+    /// Dataset seed.
     pub seed: u64,
     /// Dataset scale in (0, 1]; 1.0 = paper size (N=30).
     pub scale: f64,
@@ -24,6 +27,7 @@ impl Default for Fig1Config {
     }
 }
 
+/// The two direction-angle matrices Fig. 1 renders.
 pub struct Fig1Result {
     /// |cos| matrix for gradient descent.
     pub gd: Mat,
@@ -31,6 +35,7 @@ pub struct Fig1Result {
     pub qn: Mat,
     /// Mean |cos| between directions two apart (the zig-zag signature).
     pub gd_lag2_mean: f64,
+    /// Same lag-2 mean for the quasi-Newton directions.
     pub qn_lag2_mean: f64,
 }
 
@@ -55,6 +60,7 @@ fn lag2_mean(m: &Mat) -> f64 {
     (0..k - 2).map(|i| m[(i, i + 2)]).sum::<f64>() / (k - 2) as f64
 }
 
+/// Run both algorithms and collect their direction-angle matrices.
 pub fn run(cfg: &Fig1Config) -> Fig1Result {
     let x = build_dataset(ExperimentId::Fig1, cfg.seed, cfg.scale);
     let n = x.rows();

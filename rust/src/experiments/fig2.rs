@@ -14,12 +14,15 @@ use crate::ica::{Algorithm, SolverConfig, Trace};
 /// Configuration of one suite run (one figure panel).
 #[derive(Clone, Debug)]
 pub struct SuiteConfig {
+    /// Which panel's dataset to run.
     pub experiment: ExperimentId,
     /// Runs per algorithm (paper: 100; scale down for quick runs).
     pub seeds: usize,
     /// Dataset scale in (0, 1].
     pub scale: f64,
+    /// Iteration cap per run.
     pub max_iters: usize,
+    /// Gradient ∞-norm tolerance per run.
     pub tol: f64,
     /// Tolerance used for the summary "time/iters to tol" columns.
     pub summary_tol: f64,
@@ -28,6 +31,7 @@ pub struct SuiteConfig {
 }
 
 impl SuiteConfig {
+    /// Quick-run defaults (10 seeds, full scale) for `experiment`.
     pub fn new(experiment: ExperimentId) -> Self {
         Self {
             experiment,
@@ -51,19 +55,26 @@ impl SuiteConfig {
 
 /// Aggregated outcome for one algorithm.
 pub struct AlgoSummary {
+    /// Algorithm id (e.g. `"plbfgs-h2"`).
     pub algo: String,
+    /// Median gradient curves vs iterations and vs time.
     pub curves: MedianCurves,
     /// Median across seeds of iterations-to-summary_tol (None if most
     /// runs never reached it — e.g. Infomax's plateau).
     pub iters_to_tol: Option<usize>,
+    /// Median across seeds of charged-seconds-to-summary_tol.
     pub time_to_tol: Option<f64>,
     /// Median final gradient ∞-norm.
     pub final_grad: f64,
+    /// Number of seeded runs aggregated.
     pub runs: usize,
 }
 
+/// One figure panel's aggregated results, all algorithms.
 pub struct SuiteResult {
+    /// The panel this suite ran.
     pub experiment: ExperimentId,
+    /// Per-algorithm summaries, suite order.
     pub per_algo: Vec<AlgoSummary>,
 }
 

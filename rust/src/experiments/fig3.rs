@@ -30,10 +30,13 @@ pub fn img_config(seeds: usize, scale: f64) -> SuiteConfig {
     cfg
 }
 
+/// Fig. 3 top/middle: the algorithm suite on (synthetic-substitute) EEG
+/// data; `full` uses the paper-sized recording.
 pub fn run_eeg(seeds: usize, scale: f64, full: bool) -> std::io::Result<SuiteResult> {
     run_and_report(&eeg_config(seeds, scale, full))
 }
 
+/// Fig. 3 bottom: the algorithm suite on image-patch data.
 pub fn run_img(seeds: usize, scale: f64) -> std::io::Result<SuiteResult> {
     run_and_report(&img_config(seeds, scale))
 }

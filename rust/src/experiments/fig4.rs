@@ -17,12 +17,15 @@ use crate::linalg::{matmul, Lu, Mat};
 use crate::preprocessing::{preprocess, Whitener};
 use crate::signal::eeg_sim::{generate, EegConfig};
 
+/// Configuration of the Fig. 4 run.
 pub struct Fig4Config {
+    /// Dataset seed.
     pub seed: u64,
     /// Dataset scale in (0, 1].
     pub scale: f64,
     /// Gradient tolerance ladder (descending).
     pub tolerances: Vec<f64>,
+    /// Iteration cap per solve.
     pub max_iters: usize,
 }
 
@@ -37,7 +40,9 @@ impl Default for Fig4Config {
     }
 }
 
+/// One rung of the tolerance ladder.
 pub struct Fig4Level {
+    /// The gradient tolerance both solves ran to.
     pub tol: f64,
     /// Normalized comparison matrix (identity ⇒ same solution).
     pub t_matrix: Mat,
@@ -47,7 +52,9 @@ pub struct Fig4Level {
     pub off_diag_max: f64,
 }
 
+/// The whole tolerance ladder.
 pub struct Fig4Result {
+    /// One entry per tolerance, ladder order.
     pub levels: Vec<Fig4Level>,
 }
 
@@ -85,6 +92,8 @@ fn off_diag_stats(m: &Mat) -> (f64, f64) {
     (sum / (n * (n - 1)) as f64, max)
 }
 
+/// Run the tolerance ladder: solve with both whiteners at each tol and
+/// compare the solutions through the normalized T matrix.
 pub fn run(cfg: &Fig4Config) -> Fig4Result {
     let sc = |v: usize| ((v as f64 * cfg.scale).round() as usize).max(8);
     let eeg = EegConfig {
@@ -120,6 +129,7 @@ pub fn run(cfg: &Fig4Config) -> Fig4Result {
     Fig4Result { levels }
 }
 
+/// Run + write the per-level report files; print the summary table.
 pub fn run_and_report(cfg: &Fig4Config) -> std::io::Result<Fig4Result> {
     let r = run(cfg);
     let dir = report::results_dir();

@@ -83,10 +83,12 @@ impl BlockDiagHessian {
         Self { a }
     }
 
+    /// Problem dimension N.
     pub fn n(&self) -> usize {
         self.a.rows()
     }
 
+    /// The `a_ij` coefficient matrix of the block-diagonal form.
     pub fn a(&self) -> &Mat {
         &self.a
     }

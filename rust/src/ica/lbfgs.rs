@@ -38,19 +38,23 @@ pub enum Seed<'a> {
 }
 
 impl LbfgsMemory {
+    /// An empty memory holding at most `m` pairs (`m > 0`).
     pub fn new(m: usize) -> Self {
         assert!(m > 0, "memory size must be positive");
         Self { m, pairs: VecDeque::with_capacity(m), skipped: 0 }
     }
 
+    /// Number of stored pairs.
     pub fn len(&self) -> usize {
         self.pairs.len()
     }
 
+    /// Whether no pairs are stored.
     pub fn is_empty(&self) -> bool {
         self.pairs.is_empty()
     }
 
+    /// Drop every stored pair (used on restart after a bad step).
     pub fn clear(&mut self) {
         self.pairs.clear();
     }

@@ -18,16 +18,19 @@ pub struct Stopwatch {
 }
 
 impl Stopwatch {
+    /// A stopwatch already running (charging time).
     pub fn new_running() -> Self {
         Self { accumulated: 0.0, started: Some(Instant::now()) }
     }
 
+    /// Stop charging time (no-op if already paused).
     pub fn pause(&mut self) {
         if let Some(t0) = self.started.take() {
             self.accumulated += t0.elapsed().as_secs_f64();
         }
     }
 
+    /// Start charging time again (no-op if already running).
     pub fn resume(&mut self) {
         if self.started.is_none() {
             self.started = Some(Instant::now());
@@ -52,6 +55,7 @@ impl Stopwatch {
 /// One per-iteration record.
 #[derive(Clone, Copy, Debug)]
 pub struct IterRecord {
+    /// Iteration index (0-based; Infomax records one per pass).
     pub iter: usize,
     /// Charged CPU seconds since solve start.
     pub time: f64,
@@ -64,22 +68,27 @@ pub struct IterRecord {
 /// A convergence trace for one run.
 #[derive(Clone, Debug, Default)]
 pub struct Trace {
+    /// Per-iteration records, in iteration order.
     pub records: Vec<IterRecord>,
 }
 
 impl Trace {
+    /// Append one iteration's record.
     pub fn push(&mut self, rec: IterRecord) {
         self.records.push(rec);
     }
 
+    /// Number of recorded iterations.
     pub fn len(&self) -> usize {
         self.records.len()
     }
 
+    /// Whether nothing has been recorded yet.
     pub fn is_empty(&self) -> bool {
         self.records.is_empty()
     }
 
+    /// The most recent record, if any.
     pub fn last(&self) -> Option<&IterRecord> {
         self.records.last()
     }

@@ -12,14 +12,38 @@
 pub struct LogCosh;
 
 impl LogCosh {
+    /// The numerically-safe loss expression `2·(a + ln_1p(e) − ln 2)`
+    /// with `a = |x|/2` and `e = exp(-2a)` supplied by the caller —
+    /// equal to `2 log cosh(x/2)` without ever evaluating `cosh`.
+    ///
+    /// This is **the** scalar reference for the data loss: the fused
+    /// sweeps (`backend::sweep`, scalar kernel) and
+    /// [`LogCosh::neg_log_density`] all route through it. `e` is a
+    /// parameter rather than computed here because the fused sweeps
+    /// reuse the same `exp(-2a)` for `ψ = (1-e)/(1+e)`.
+    #[inline(always)]
+    pub fn loss_from_exp(self, a: f64, e: f64) -> f64 {
+        self.loss_from_ln1p(a, e.ln_1p())
+    }
+
+    /// The loss expression `2·(a + lp − ln 2)` from an already-computed
+    /// `lp = ln_1p(exp(-2a))` — the single home of the expression.
+    /// [`LogCosh::loss_from_exp`] delegates here with the libm `ln_1p`;
+    /// the vectorized sweep (`backend::sweep`) calls it with the
+    /// `linalg::vmath` lane `ln_1p`, so changing the loss form in this
+    /// one place changes every kernel coherently.
+    #[inline(always)]
+    pub fn loss_from_ln1p(self, a: f64, lp: f64) -> f64 {
+        2.0 * (a + lp - std::f64::consts::LN_2)
+    }
+
     /// `-log p(x) = 2 log cosh(x/2)` (the irrelevant normalization
     /// constant is dropped, as in the paper).
     #[inline]
     pub fn neg_log_density(self, x: f64) -> f64 {
         // Numerically safe log cosh: log cosh u = |u| + log(1+e^{-2|u|}) - log 2.
-        let u = 0.5 * x;
-        let a = u.abs();
-        2.0 * (a + (-2.0 * a).exp().ln_1p() - std::f64::consts::LN_2)
+        let a = (0.5 * x).abs();
+        self.loss_from_exp(a, (-2.0 * a).exp())
     }
 
     /// Score `ψ(x) = -p'(x)/p(x) = tanh(x/2)`.

@@ -38,15 +38,26 @@ impl Default for InfomaxConfig {
 pub enum Algorithm {
     /// Full-batch gradient descent. `oracle_ls` grants the near-exact
     /// line search of the paper's baseline (its cost is off-clock).
-    GradientDescent { oracle_ls: bool },
+    GradientDescent {
+        /// Use the near-exact oracle line search (off-clock cost).
+        oracle_ls: bool,
+    },
     /// Stochastic natural-gradient Infomax with EEGLab-style annealing.
     Infomax(InfomaxConfig),
     /// Elementary quasi-Newton (Alg. 2): `p = -H̃⁻¹G`.
-    QuasiNewton { approx: HessianApprox },
+    QuasiNewton {
+        /// Which block-diagonal Hessian approximation to invert.
+        approx: HessianApprox,
+    },
     /// (Preconditioned) L-BFGS (Alg. 3): `precond = None` is standard
     /// L-BFGS with scaled-identity seed; `Some(H̃)` seeds the two-loop
     /// recursion with the regularized approximation.
-    Lbfgs { precond: Option<HessianApprox>, memory: usize },
+    Lbfgs {
+        /// Two-loop seed: `None` = scaled identity, `Some` = H̃⁻¹.
+        precond: Option<HessianApprox>,
+        /// Ring-buffer length (number of (s, y) pairs kept).
+        memory: usize,
+    },
 }
 
 impl Algorithm {
@@ -86,6 +97,7 @@ impl Algorithm {
 /// Solver configuration shared by every algorithm.
 #[derive(Clone, Copy, Debug)]
 pub struct SolverConfig {
+    /// The algorithm to run.
     pub algo: Algorithm,
     /// Iteration cap (full passes for Infomax).
     pub max_iters: usize,
@@ -102,6 +114,8 @@ pub struct SolverConfig {
 }
 
 impl SolverConfig {
+    /// Defaults mirroring the paper: 200 iterations, `tol = 1e-8`,
+    /// `λ_min = 1e-2`, 10 line-search attempts, no time cap.
     pub fn new(algo: Algorithm) -> Self {
         Self {
             algo,
@@ -114,21 +128,25 @@ impl SolverConfig {
         }
     }
 
+    /// Set the iteration (or Infomax pass) cap.
     pub fn with_max_iters(mut self, k: usize) -> Self {
         self.max_iters = k;
         self
     }
 
+    /// Set the gradient ∞-norm convergence tolerance.
     pub fn with_tol(mut self, tol: f64) -> Self {
         self.tol = tol;
         self
     }
 
+    /// Set the seed for solver-internal randomness.
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
     }
 
+    /// Set the wall-clock budget in charged seconds.
     pub fn with_max_time(mut self, secs: f64) -> Self {
         self.max_time = secs;
         self

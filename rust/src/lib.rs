@@ -60,6 +60,12 @@
 //!   request path).
 //! - **Reproduction** ([`experiments`], [`coordinator`]): the paper's
 //!   figure pipeline, driven by the `fica experiment` subcommand.
+//!
+//! The layer map, the numerical-equivalence contracts between execution
+//! paths, and the out-of-core data flow are documented in
+//! `ARCHITECTURE.md` at the repository root.
+#![warn(missing_docs)]
+
 pub mod backend;
 pub mod cli;
 pub mod coordinator;
@@ -77,5 +83,6 @@ pub mod testkit;
 pub mod runtime;
 pub mod util;
 
+pub use backend::SweepKernel;
 pub use error::IcaError;
 pub use estimator::{BackendChoice, IcaModel, Picard};

@@ -10,7 +10,9 @@ use super::{matmul, Mat};
 /// Result of `eigh`: `a = V · diag(λ) · Vᵀ`, eigenvalues ascending,
 /// eigenvectors in the *columns* of `vectors`.
 pub struct Eigh {
+    /// Eigenvalues, ascending.
     pub values: Vec<f64>,
+    /// Orthonormal eigenvectors in the columns, matching `values`.
     pub vectors: Mat,
 }
 

@@ -59,6 +59,7 @@ impl Lu {
         Some(Lu { lu, piv, perm_sign })
     }
 
+    /// Dimension of the factorized matrix.
     pub fn n(&self) -> usize {
         self.lu.rows()
     }

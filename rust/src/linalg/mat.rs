@@ -16,14 +16,17 @@ pub struct Mat {
 }
 
 impl Mat {
+    /// All-zeros `rows × cols` matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Self { rows, cols, data: vec![0.0; rows * cols] }
     }
 
+    /// `rows × cols` matrix with every entry `v`.
     pub fn filled(rows: usize, cols: usize, v: f64) -> Self {
         Self { rows, cols, data: vec![v; rows * cols] }
     }
 
+    /// The `n × n` identity.
     pub fn eye(n: usize) -> Self {
         let mut m = Self::zeros(n, n);
         for i in 0..n {
@@ -60,35 +63,42 @@ impl Mat {
     }
 
     #[inline]
+    /// Number of rows.
     pub fn rows(&self) -> usize {
         self.rows
     }
 
     #[inline]
+    /// Number of columns.
     pub fn cols(&self) -> usize {
         self.cols
     }
 
+    /// Whether rows == cols.
     pub fn is_square(&self) -> bool {
         self.rows == self.cols
     }
 
     #[inline]
+    /// The row-major backing storage.
     pub fn as_slice(&self) -> &[f64] {
         &self.data
     }
 
     #[inline]
+    /// Mutable row-major backing storage.
     pub fn as_mut_slice(&mut self) -> &mut [f64] {
         &mut self.data
     }
 
     #[inline]
+    /// Row `i` as a contiguous slice.
     pub fn row(&self, i: usize) -> &[f64] {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
     #[inline]
+    /// Row `i` as a mutable contiguous slice.
     pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
@@ -108,6 +118,7 @@ impl Mat {
         }
     }
 
+    /// A new matrix with rows and columns swapped.
     pub fn transpose(&self) -> Mat {
         let mut t = Mat::zeros(self.cols, self.rows);
         for i in 0..self.rows {
@@ -134,18 +145,21 @@ impl Mat {
         self.data.iter().zip(&other.data).map(|(a, b)| a * b).sum()
     }
 
+    /// A copy with every entry multiplied by `s`.
     pub fn scale(&self, s: f64) -> Mat {
         let mut out = self.clone();
         out.scale_inplace(s);
         out
     }
 
+    /// Multiply every entry by `s` in place.
     pub fn scale_inplace(&mut self, s: f64) {
         for x in &mut self.data {
             *x *= s;
         }
     }
 
+    /// Elementwise sum with `other` (shapes must match).
     pub fn add(&self, other: &Mat) -> Mat {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         let mut out = self.clone();
@@ -153,6 +167,7 @@ impl Mat {
         out
     }
 
+    /// Add `other` elementwise in place.
     pub fn add_inplace(&mut self, other: &Mat) {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         for (a, b) in self.data.iter_mut().zip(&other.data) {
@@ -168,6 +183,7 @@ impl Mat {
         }
     }
 
+    /// Elementwise difference `self - other`.
     pub fn sub(&self, other: &Mat) -> Mat {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         let mut out = self.clone();

@@ -24,23 +24,39 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
 
 /// C = A · B, writing into a preallocated output (hot-loop friendly).
 pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
-    assert_eq!(a.cols(), b.rows(), "matmul: inner dims");
-    assert_eq!(c.rows(), a.rows());
     assert_eq!(c.cols(), b.cols());
-    let (m, k, n) = (a.rows(), a.cols(), b.cols());
-    c.as_mut_slice().fill(0.0);
+    matmul_window_into(a, b, 0, b.cols(), c);
+}
+
+/// `C[:, :cols] = A · B[:, b_lo..b_lo+cols]` — the column-windowed form
+/// of the same blocked kernel [`matmul_into`] delegates to, so the two
+/// are one implementation (and bitwise-identical per output cell).
+///
+/// `c` may be wider than `cols`: only its leading `cols` columns are
+/// written. This is the minibatch-gradient shape: `Y[:, :tb] = W ·
+/// X[:, lo..lo+tb]` streamed into the front of a full-width workspace
+/// without materializing the column slice.
+pub fn matmul_window_into(a: &Mat, b: &Mat, b_lo: usize, cols: usize, c: &mut Mat) {
+    assert_eq!(a.cols(), b.rows(), "matmul: inner dims");
+    assert!(b_lo + cols <= b.cols(), "matmul: column window out of range");
+    assert_eq!(c.rows(), a.rows());
+    assert!(c.cols() >= cols, "matmul: output narrower than the window");
+    let (m, k) = (a.rows(), a.cols());
+    for i in 0..m {
+        c.row_mut(i)[..cols].fill(0.0);
+    }
     // i-k-j with j-blocking: B and C are walked along contiguous rows.
     // No zero-skip here: this kernel is on the Θ(N²T) `Y = W·X` hot path
     // with dense operands, and a data-dependent branch in the inner-loop
     // feeder defeats auto-vectorization (zero-skipping belongs only in
     // kernels fed genuinely sparse operands, e.g. `matmul_at_b`).
-    for jb in (0..n).step_by(BLOCK_J) {
-        let je = (jb + BLOCK_J).min(n);
+    for jb in (0..cols).step_by(BLOCK_J) {
+        let je = (jb + BLOCK_J).min(cols);
         for i in 0..m {
             let arow = a.row(i);
             let crow = &mut c.row_mut(i)[jb..je];
             for (kk, &aik) in arow.iter().enumerate().take(k) {
-                let brow = &b.row(kk)[jb..je];
+                let brow = &b.row(kk)[b_lo + jb..b_lo + je];
                 for (cj, &bkj) in crow.iter_mut().zip(brow) {
                     *cj += aik * bkj;
                 }
@@ -59,14 +75,24 @@ pub fn matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
 /// C = A · Bᵀ into a preallocated output. Inner loop = contiguous dot.
 pub fn matmul_a_bt_into(a: &Mat, b: &Mat, c: &mut Mat) {
     assert_eq!(a.cols(), b.cols(), "matmul_a_bt: inner dims");
+    matmul_a_bt_window_into(a, b, a.cols(), c);
+}
+
+/// `C = A[:, :cols] · B[:, :cols]ᵀ` — the column-windowed form of the
+/// same 4-accumulator dot kernel [`matmul_a_bt_into`] delegates to
+/// (bitwise-identical at full width). Used by the minibatch gradient,
+/// whose ψ/Y workspaces are full-width but only their leading `tb`
+/// columns hold the batch.
+pub fn matmul_a_bt_window_into(a: &Mat, b: &Mat, cols: usize, c: &mut Mat) {
+    assert!(cols <= a.cols() && cols <= b.cols(), "matmul_a_bt: window too wide");
     assert_eq!(c.rows(), a.rows());
     assert_eq!(c.cols(), b.rows());
-    let k = a.cols();
+    let k = cols;
     for i in 0..a.rows() {
-        let arow = a.row(i);
+        let arow = &a.row(i)[..k];
         let crow = c.row_mut(i);
         for (j, cij) in crow.iter_mut().enumerate() {
-            let brow = b.row(j);
+            let brow = &b.row(j)[..k];
             let mut acc0 = 0.0;
             let mut acc1 = 0.0;
             let mut acc2 = 0.0;
@@ -163,6 +189,51 @@ mod tests {
             let want = naive(&a.transpose(), &b);
             assert!(matmul_at_b(&a, &b).max_abs_diff(&want) < 1e-12);
         }
+    }
+
+    #[test]
+    fn window_variants_match_full_kernels_bitwise() {
+        let mut rng = Pcg64::new(6);
+        let a = random_mat(&mut rng, 5, 5);
+        let b = random_mat(&mut rng, 5, 40);
+        // Full-width window == plain matmul_into, bitwise.
+        let mut c1 = Mat::zeros(5, 40);
+        let mut c2 = Mat::zeros(5, 40);
+        matmul_into(&a, &b, &mut c1);
+        matmul_window_into(&a, &b, 0, 40, &mut c2);
+        assert!(c1.max_abs_diff(&c2) == 0.0);
+        // A proper window equals the product against the materialized
+        // column slice, bitwise, and leaves trailing columns untouched.
+        let (lo, cols) = (7, 21);
+        let bs = Mat::from_fn(5, cols, |i, j| b[(i, lo + j)]);
+        let mut want = Mat::zeros(5, cols);
+        matmul_into(&a, &bs, &mut want);
+        let mut c3 = Mat::filled(5, 40, f64::NAN);
+        matmul_window_into(&a, &b, lo, cols, &mut c3);
+        for i in 0..5 {
+            for j in 0..cols {
+                assert!(c3[(i, j)] == want[(i, j)], "({i},{j})");
+            }
+            for j in cols..40 {
+                assert!(c3[(i, j)].is_nan(), "({i},{j}) must stay untouched");
+            }
+        }
+        // Same story for the A·Bᵀ window.
+        let p = random_mat(&mut rng, 4, 33);
+        let q = random_mat(&mut rng, 6, 33);
+        let mut g1 = Mat::zeros(4, 6);
+        let mut g2 = Mat::zeros(4, 6);
+        matmul_a_bt_into(&p, &q, &mut g1);
+        matmul_a_bt_window_into(&p, &q, 33, &mut g2);
+        assert!(g1.max_abs_diff(&g2) == 0.0);
+        let cols = 13;
+        let ps = Mat::from_fn(4, cols, |i, j| p[(i, j)]);
+        let qs = Mat::from_fn(6, cols, |i, j| q[(i, j)]);
+        let mut want = Mat::zeros(4, 6);
+        matmul_a_bt_into(&ps, &qs, &mut want);
+        let mut g3 = Mat::zeros(4, 6);
+        matmul_a_bt_window_into(&p, &q, cols, &mut g3);
+        assert!(g3.max_abs_diff(&want) == 0.0);
     }
 
     #[test]

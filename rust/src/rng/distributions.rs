@@ -12,6 +12,7 @@ use super::Pcg64;
 
 /// A distribution from which f64 samples can be drawn.
 pub trait Sample {
+    /// Draw one sample.
     fn sample(&self, rng: &mut Pcg64) -> f64;
 
     /// Fill a slice with i.i.d. samples.
@@ -32,7 +33,9 @@ pub trait Sample {
 /// Uniform on [lo, hi).
 #[derive(Clone, Copy, Debug)]
 pub struct Uniform {
+    /// Inclusive lower bound.
     pub lo: f64,
+    /// Exclusive upper bound.
     pub hi: f64,
 }
 
@@ -49,11 +52,14 @@ impl Sample for Uniform {
 /// compose deterministically regardless of interleaving across sources.
 #[derive(Clone, Copy, Debug)]
 pub struct Normal {
+    /// Mean of the distribution.
     pub mean: f64,
+    /// Standard deviation.
     pub std: f64,
 }
 
 impl Normal {
+    /// N(0, 1).
     pub fn standard() -> Self {
         Self { mean: 0.0, std: 1.0 }
     }
@@ -77,10 +83,12 @@ impl Sample for Normal {
 /// The paper's experiment A uses b=1.
 #[derive(Clone, Copy, Debug)]
 pub struct Laplace {
+    /// Scale parameter b.
     pub scale: f64,
 }
 
 impl Laplace {
+    /// Laplace(0, 1).
     pub fn standard() -> Self {
         Self { scale: 1.0 }
     }
@@ -102,7 +110,9 @@ impl Sample for Laplace {
 /// `x = α · s · G^{1/β}` with random sign s has the GG(α, β) law.
 #[derive(Clone, Copy, Debug)]
 pub struct GeneralizedGaussian {
+    /// Scale parameter α.
     pub alpha: f64,
+    /// Shape parameter β.
     pub beta: f64,
 }
 

@@ -43,6 +43,7 @@ impl Pcg64 {
         Self::new(s ^ t.rotate_left(32))
     }
 
+    /// The next raw 64-bit output (PCG XSL-RR 128/64).
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);

@@ -38,10 +38,12 @@ impl Engine {
         Ok(Engine { client, registry, cache: RefCell::new(HashMap::new()) })
     }
 
+    /// The artifact registry this engine loaded.
     pub fn registry(&self) -> &Registry {
         &self.registry
     }
 
+    /// The underlying PJRT client.
     pub fn client(&self) -> &xla::PjRtClient {
         &self.client
     }

@@ -9,14 +9,20 @@ use std::path::{Path, PathBuf};
 /// The compute graphs Layer 2 exports. Mirrors `model.GRAPHS`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Graph {
+    /// Full H̃² statistics sweep (loss, G, ĥ, σ̂², ĥ_ij).
     StatsH2,
+    /// H̃¹ statistics sweep (loss, G, ĥ_i, σ̂_j²).
     StatsH1,
+    /// Loss + gradient only.
     StatsBasic,
+    /// Loss-only line-search probe.
     LossOnly,
+    /// Minibatch relative gradient.
     Grad,
 }
 
 impl Graph {
+    /// Parse a manifest graph name.
     pub fn from_name(s: &str) -> Option<Graph> {
         Some(match s {
             "stats_h2" => Graph::StatsH2,
@@ -28,6 +34,7 @@ impl Graph {
         })
     }
 
+    /// The manifest name (inverse of [`Graph::from_name`]).
     pub fn name(self) -> &'static str {
         match self {
             Graph::StatsH2 => "stats_h2",
@@ -42,16 +49,22 @@ impl Graph {
 /// Key identifying one compiled artifact.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct ArtifactKey {
+    /// Which compute graph.
     pub graph: Graph,
+    /// Signal count the artifact was compiled for.
     pub n: usize,
+    /// Sample count the artifact was compiled for.
     pub t: usize,
 }
 
 /// One manifest entry.
 #[derive(Clone, Debug)]
 pub struct ArtifactEntry {
+    /// The (graph, n, t) this artifact serves.
     pub key: ArtifactKey,
+    /// Path of the HLO text file.
     pub path: PathBuf,
+    /// Free-form provenance tag from the manifest.
     pub tag: String,
 }
 
@@ -113,18 +126,22 @@ impl Registry {
         Ok(Registry { dir, entries })
     }
 
+    /// The artifact directory the manifest was loaded from.
     pub fn dir(&self) -> &Path {
         &self.dir
     }
 
+    /// Number of registered artifacts.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// Whether no artifacts are registered.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
 
+    /// The artifact for `key`, if compiled.
     pub fn get(&self, key: ArtifactKey) -> Option<&ArtifactEntry> {
         self.entries.get(&key)
     }
@@ -138,6 +155,7 @@ impl Registry {
             .collect()
     }
 
+    /// Every registered artifact, in key order.
     pub fn iter(&self) -> impl Iterator<Item = &ArtifactEntry> {
         self.entries.values()
     }

@@ -36,6 +36,7 @@ impl Engine {
         Err(unavailable())
     }
 
+    /// The artifact registry this engine loaded.
     pub fn registry(&self) -> &Registry {
         match self.never {}
     }

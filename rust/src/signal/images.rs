@@ -15,13 +15,17 @@ use crate::rng::{Pcg64, Uniform};
 
 /// A grayscale image (row-major pixels in [0, 1]).
 pub struct Image {
+    /// Height in pixels.
     pub h: usize,
+    /// Width in pixels.
     pub w: usize,
+    /// Row-major grayscale intensities.
     pub pixels: Vec<f64>,
 }
 
 impl Image {
     #[inline]
+    /// Intensity at row `y`, column `x`.
     pub fn at(&self, y: usize, x: usize) -> f64 {
         self.pixels[y * self.w + x]
     }

@@ -13,7 +13,12 @@ pub enum SourceKind {
     /// `p(x) ∝ exp(-|x|³)` — sub-Gaussian (experiment B).
     SubGaussianCubic,
     /// `α N(0,1) + (1-α) N(0,σ²)` (experiment C).
-    Mixture { alpha: f64, sigma: f64 },
+    Mixture {
+        /// Weight of the unit-variance component.
+        alpha: f64,
+        /// Standard deviation of the second component.
+        sigma: f64,
+    },
 }
 
 impl SourceKind {
@@ -32,9 +37,13 @@ impl SourceKind {
 /// A generated ICA problem: ground-truth sources, mixing matrix, and the
 /// observed mixture `X = A·S`.
 pub struct Dataset {
+    /// Ground-truth sources `S` (N×T).
     pub sources: Mat,
+    /// Ground-truth mixing matrix `A` (N×N).
     pub mixing: Mat,
+    /// Observed mixture `X = A·S` (N×T).
     pub x: Mat,
+    /// Per-row source kinds, in row order.
     pub kinds: Vec<SourceKind>,
 }
 

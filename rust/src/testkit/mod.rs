@@ -12,7 +12,9 @@ use crate::rng::Pcg64;
 /// Configuration for a property run.
 #[derive(Clone, Copy, Debug)]
 pub struct Config {
+    /// Number of random cases to run.
     pub cases: usize,
+    /// Base seed; case i uses `seed + i`.
     pub seed: u64,
 }
 

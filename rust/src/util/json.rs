@@ -10,15 +10,22 @@ use std::fmt;
 /// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (stored as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys — serialization is deterministic).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a complete JSON document (trailing data is an error).
     pub fn parse(src: &str) -> Result<Json, JsonError> {
         let mut p = Parser { bytes: src.as_bytes(), pos: 0 };
         p.skip_ws();
@@ -30,6 +37,7 @@ impl Json {
         Ok(v)
     }
 
+    /// The string value, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -37,6 +45,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -44,6 +53,7 @@ impl Json {
         }
     }
 
+    /// The value as an exact non-negative integer ≤ 2⁵³, if it is one.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().and_then(|n| {
             if n >= 0.0 && n.fract() == 0.0 && n <= 2f64.powi(53) {
@@ -54,6 +64,7 @@ impl Json {
         })
     }
 
+    /// The elements, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -61,6 +72,7 @@ impl Json {
         }
     }
 
+    /// Object field lookup (`None` for non-objects or missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -132,7 +144,9 @@ impl Json {
 /// Parse error with byte offset.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct JsonError {
+    /// Byte offset of the failure in the input.
     pub pos: usize,
+    /// What the parser expected or found.
     pub msg: &'static str,
 }
 

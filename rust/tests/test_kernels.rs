@@ -1,0 +1,238 @@
+//! Kernel-equivalence acceptance tests: the vectorized sweep kernel
+//! ([`SweepKernel::Vector`]) against the scalar libm reference
+//! ([`SweepKernel::Scalar`]).
+//!
+//! Two levels, mirroring the contract in ARCHITECTURE.md:
+//!
+//! - **unit** — per-sweep statistics (loss, G, ĥ, σ̂², ĥ_ij) of the two
+//!   kernels agree to tight absolute tolerances on standardized data,
+//!   on every CPU backend and across worker counts;
+//! - **full fit** — a `--kernel vector` fit lands within 1e-8 Amari
+//!   distance of the `--kernel scalar` fit on the checked-in `tiny.bin`
+//!   fixture, across native / sharded / chunked (out-of-core) backends.
+//!
+//! Plus determinism pins: the vector kernel is bitwise-reproducible, and
+//! the cross-backend bitwise guarantees (sharded@1 == native, chunked
+//! single-chunk == native) hold under the vector kernel too.
+
+use faster_ica::backend::{
+    ChunkedBackend, ComputeBackend, NativeBackend, ShardedBackend, StatsLevel, SweepKernel,
+};
+use faster_ica::data::{BinSource, MemSource};
+use faster_ica::estimator::{BackendChoice, Picard};
+use faster_ica::ica::amari_distance;
+use faster_ica::linalg::{matmul, Lu, Mat};
+use faster_ica::rng::{Laplace, Pcg64, Sample};
+
+fn test_problem(n: usize, t: usize, seed: u64) -> (Mat, Mat) {
+    let mut rng = Pcg64::new(seed);
+    let lap = Laplace::standard();
+    let x = Mat::from_fn(n, t, |_, _| lap.sample(&mut rng));
+    let mut w = Mat::eye(n);
+    for i in 0..n {
+        for j in 0..n {
+            w[(i, j)] += 0.3 * (rng.next_f64() - 0.5);
+        }
+    }
+    (x, w)
+}
+
+/// Build one backend of each CPU flavor over `x` with the given kernel.
+fn backends(x: &Mat, kernel: SweepKernel) -> Vec<(String, Box<dyn ComputeBackend>)> {
+    let mut out: Vec<(String, Box<dyn ComputeBackend>)> = Vec::new();
+    out.push((
+        "native".into(),
+        Box::new(NativeBackend::with_kernel(x.clone(), kernel)),
+    ));
+    for workers in [1usize, 3] {
+        out.push((
+            format!("sharded w={workers}"),
+            Box::new(ShardedBackend::with_kernel(x.clone(), workers, kernel)),
+        ));
+    }
+    for workers in [1usize, 4] {
+        out.push((
+            format!("chunked w={workers}"),
+            Box::new(
+                ChunkedBackend::from_source_with_kernel(
+                    Box::new(MemSource::new(x.clone())),
+                    97,
+                    workers,
+                    kernel,
+                )
+                .expect("chunked backend"),
+            ),
+        ));
+    }
+    out
+}
+
+/// Unit level: the two kernels' statistics agree to tight tolerances on
+/// every backend and worker count. The per-element sweep error is
+/// ULP-bounded (see `linalg::vmath`), so the N×N moment averages over
+/// T = 1500 standardized samples must agree far below 1e-10.
+#[test]
+fn vector_stats_match_scalar_on_every_backend() {
+    let (x, w) = test_problem(5, 1500, 1);
+    for ((name_s, mut scalar), (name_v, mut vector)) in backends(&x, SweepKernel::Scalar)
+        .into_iter()
+        .zip(backends(&x, SweepKernel::Vector))
+    {
+        assert_eq!(name_s, name_v);
+        let a = scalar.stats(&w, StatsLevel::H2);
+        let b = vector.stats(&w, StatsLevel::H2);
+        assert!(
+            (a.loss_data - b.loss_data).abs() < 1e-12,
+            "{name_s}: loss {} vs {}",
+            a.loss_data,
+            b.loss_data
+        );
+        assert!(a.g.max_abs_diff(&b.g) < 1e-12, "{name_s}: G");
+        assert!(a.h2.max_abs_diff(&b.h2) < 1e-12, "{name_s}: h2");
+        for i in 0..5 {
+            assert!((a.h1[i] - b.h1[i]).abs() < 1e-12, "{name_s}: h1[{i}]");
+            assert!(
+                (a.sigma2[i] - b.sigma2[i]).abs() < 1e-12,
+                "{name_s}: sigma2[{i}]"
+            );
+        }
+        let la = scalar.loss_data(&w);
+        let lb = vector.loss_data(&w);
+        assert!((la - lb).abs() < 1e-12, "{name_s}: loss_data");
+        let ga = scalar.grad_batch(&w, 101, 1101);
+        let gb = vector.grad_batch(&w, 101, 1101);
+        assert!(ga.max_abs_diff(&gb) < 1e-10, "{name_s}: grad_batch");
+    }
+}
+
+/// The cross-backend bitwise guarantees hold under the vector kernel:
+/// sharded at one worker and chunked with one spanning chunk reproduce
+/// the native vector sweep exactly.
+#[test]
+fn vector_kernel_keeps_cross_backend_bitwise_guarantees() {
+    let (x, w) = test_problem(4, 800, 2);
+    let mut native = NativeBackend::with_kernel(x.clone(), SweepKernel::Vector);
+    let a = native.stats(&w, StatsLevel::H2);
+
+    let mut sharded = ShardedBackend::with_kernel(x.clone(), 1, SweepKernel::Vector);
+    let b = sharded.stats(&w, StatsLevel::H2);
+    assert!(a.loss_data == b.loss_data);
+    assert!(a.g.max_abs_diff(&b.g) == 0.0);
+    assert!(a.h2.max_abs_diff(&b.h2) == 0.0);
+
+    let mut chunked = ChunkedBackend::from_source_with_kernel(
+        Box::new(MemSource::new(x.clone())),
+        800, // one chunk spans T
+        3,
+        SweepKernel::Vector,
+    )
+    .expect("chunked");
+    let c = chunked.stats(&w, StatsLevel::H2);
+    assert!(a.loss_data == c.loss_data);
+    assert!(a.g.max_abs_diff(&c.g) == 0.0);
+    assert!(a.h2.max_abs_diff(&c.h2) == 0.0);
+    assert!(native.loss_data(&w) == chunked.loss_data(&w));
+}
+
+/// Vector-kernel results are bitwise-reproducible call over call and
+/// independent of the chunked worker count (chunk-ordered reduction).
+#[test]
+fn vector_kernel_is_deterministic() {
+    let (x, w) = test_problem(4, 701, 3);
+    let mut be = ShardedBackend::with_kernel(x.clone(), 3, SweepKernel::Vector);
+    let a = be.stats(&w, StatsLevel::H2);
+    let b = be.stats(&w, StatsLevel::H2);
+    assert!(a.g.max_abs_diff(&b.g) == 0.0);
+    assert!(a.loss_data == b.loss_data);
+
+    let chunked = |workers: usize| {
+        ChunkedBackend::from_source_with_kernel(
+            Box::new(MemSource::new(x.clone())),
+            64,
+            workers,
+            SweepKernel::Vector,
+        )
+        .expect("chunked")
+    };
+    let base = chunked(1).stats(&w, StatsLevel::H2);
+    for workers in [2usize, 4] {
+        let got = chunked(workers).stats(&w, StatsLevel::H2);
+        assert!(base.loss_data == got.loss_data, "workers {workers}");
+        assert!(base.g.max_abs_diff(&got.g) == 0.0, "workers {workers}");
+        assert!(base.h2.max_abs_diff(&got.h2) == 0.0, "workers {workers}");
+    }
+}
+
+/// Amari distance between two fitted models' composed unmixing matrices:
+/// 0 iff they agree up to the inherent scale/permutation indeterminacy.
+fn amari_between(a: &faster_ica::IcaModel, b: &faster_ica::IcaModel) -> f64 {
+    let ub = b.unmixing_matrix();
+    let inv = Lu::new(&ub).expect("unmixing invertible").inverse();
+    amari_distance(&matmul(&a.unmixing_matrix(), &inv))
+}
+
+/// Acceptance: `--kernel vector` fits match `--kernel scalar` fits
+/// within 1e-8 Amari distance on the tiny.bin fixture, across the
+/// native, sharded, and chunked (out-of-core) backends.
+#[test]
+fn vector_fit_matches_scalar_fit_on_fixture_across_backends() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/tiny.bin");
+    let scratch = std::env::temp_dir().join("fica_kernel_equiv_test");
+    let configs: [(&str, BackendChoice, bool); 3] = [
+        ("native", BackendChoice::Native, false),
+        ("sharded", BackendChoice::Sharded { workers: 2 }, false),
+        ("chunked", BackendChoice::Sharded { workers: 2 }, true),
+    ];
+    for (name, backend, out_of_core) in configs {
+        let fit = |kernel: SweepKernel| {
+            let mut src = BinSource::open(path).expect("fixture opens");
+            let mut p = Picard::new()
+                .backend(backend)
+                .kernel(kernel)
+                .tol(1e-6)
+                .chunk_cols(256);
+            if out_of_core {
+                p = p.out_of_core(true).scratch_dir(&scratch);
+            }
+            p.fit_source(&mut src)
+                .unwrap_or_else(|e| panic!("{name} [{}]: {e}", kernel.id()))
+        };
+        let scalar = fit(SweepKernel::Scalar);
+        let vector = fit(SweepKernel::Vector);
+        assert!(scalar.fit_info().converged, "{name}: scalar did not converge");
+        assert!(vector.fit_info().converged, "{name}: vector did not converge");
+        let d = amari_between(&vector, &scalar);
+        assert!(d < 1e-8, "{name}: Amari(vector, scalar) = {d:e} >= 1e-8");
+    }
+}
+
+/// The same equivalence on in-memory synthetic data, via `Picard::fit`
+/// (covers the non-streamed entry point).
+#[test]
+fn vector_fit_matches_scalar_fit_in_memory() {
+    let data = faster_ica::signal::experiment_a(5, 3000, 21);
+    let fit = |kernel: SweepKernel| {
+        Picard::new()
+            .kernel(kernel)
+            .tol(1e-9)
+            .max_iters(200)
+            .fit(&data.x)
+            .expect("fit")
+    };
+    let scalar = fit(SweepKernel::Scalar);
+    let vector = fit(SweepKernel::Vector);
+    let d = amari_between(&vector, &scalar);
+    assert!(d < 1e-8, "Amari(vector, scalar) = {d:e}");
+    // Both recover the true sources.
+    let perm = matmul(&vector.unmixing_matrix(), &data.mixing);
+    assert!(amari_distance(&perm) < 0.05);
+}
+
+#[test]
+fn kernel_ids_roundtrip() {
+    for k in [SweepKernel::Scalar, SweepKernel::Vector] {
+        assert_eq!(SweepKernel::from_id(k.id()), Some(k));
+    }
+    assert_eq!(SweepKernel::from_id("simd"), None);
+    assert_eq!(SweepKernel::default(), SweepKernel::Vector);
+}
