@@ -8,14 +8,19 @@
 //!   (preprocess + solve, fixed iteration budget) comparing in-memory
 //!   native (both kernels), in-memory sharded, and the out-of-core
 //!   chunked path.
+//! - `refit_results` — the incremental-refit workload: cold fit over a
+//!   grown `T + ΔT` recording vs a warm `Picard::fit_append` over only
+//!   the ΔT appended samples, with iteration counts for both (warm must
+//!   win), across the same backend × kernel matrix as `fit_results`.
 //!
 //! The report schema is versioned so successive PRs can track the
-//! trajectory. `fica.bench_backend/v2` adds a `kernel` field to every
-//! row of both sections and re-bases `speedup_vs_native` on the
-//! native+scalar row (the reference arithmetic), so vector rows read
-//! directly as "× faster than the scalar reference". The full
-//! field-by-field schema (and the v1→v2 delta) is documented in
-//! `docs/BENCH_SCHEMA.md`.
+//! trajectory (`fica bench --compare BASE.json` gates it — see
+//! [`crate::bench::compare`]). `fica.bench_backend/v3` adds the
+//! `refit_results` section; v2 added a `kernel` field to every row and
+//! re-based `speedup_vs_native` on the native+scalar row (the reference
+//! arithmetic), so vector rows read directly as "× faster than the
+//! scalar reference". The full field-by-field schema (and the version
+//! deltas) is documented in `docs/BENCH_SCHEMA.md`.
 //!
 //! ```json
 //! {
@@ -37,8 +42,9 @@
 //! }
 //! ```
 
-use super::{black_box, Measurement};
+use super::{black_box, defaults, Measurement};
 use crate::backend::{ComputeBackend, NativeBackend, ShardedBackend, StatsLevel, SweepKernel};
+use crate::data::MemSource;
 use crate::error::IcaError;
 use crate::estimator::{BackendChoice, Picard};
 use crate::linalg::Mat;
@@ -71,6 +77,13 @@ pub struct BackendBenchConfig {
     pub fit_iters: usize,
     /// Timed fits per configuration.
     pub fit_samples: usize,
+    /// Base recording length T for the refit benches (the "already
+    /// fitted" part of the grown recording).
+    pub refit_t: usize,
+    /// Appended sample count ΔT for the refit benches.
+    pub refit_append: usize,
+    /// Timed cold/warm fits per refit configuration.
+    pub refit_samples: usize,
 }
 
 impl BackendBenchConfig {
@@ -87,6 +100,9 @@ impl BackendBenchConfig {
             fit_t: 100_000,
             fit_iters: 10,
             fit_samples: 2,
+            refit_t: 100_000,
+            refit_append: 25_000,
+            refit_samples: 2,
         }
     }
 
@@ -103,6 +119,9 @@ impl BackendBenchConfig {
             fit_t: 2_000,
             fit_iters: 5,
             fit_samples: 1,
+            refit_t: 2_000,
+            refit_append: 500,
+            refit_samples: 1,
         }
     }
 
@@ -253,20 +272,30 @@ impl FitTiming {
     }
 }
 
-/// Run the solver-level fit matrix: whole `Picard::fit` calls
-/// (preprocess + solve at a fixed iteration budget) for in-memory native
-/// under both kernels (the scalar row is the speedup baseline), in-memory
-/// sharded, out-of-core 1 worker, and out-of-core pooled.
-pub fn run_fits(cfg: &BackendBenchConfig) -> Vec<FitTiming> {
-    let w = cfg.fit_workers();
-    type FitConfig = (&'static str, BackendChoice, bool, usize, SweepKernel);
-    let configs: [FitConfig; 5] = [
+/// One row of the solver-level benchmark matrix:
+/// `(backend name, choice, out_of_core, workers, kernel)`.
+type SolveConfigRow = (&'static str, BackendChoice, bool, usize, SweepKernel);
+
+/// The backend × kernel matrix both the fit and the refit benches sweep:
+/// in-memory native under both kernels (the scalar row is the speedup
+/// baseline), in-memory sharded, out-of-core 1 worker, out-of-core
+/// pooled.
+fn solve_matrix(w: usize) -> [SolveConfigRow; 5] {
+    [
         ("native", BackendChoice::Native, false, 1, SweepKernel::Scalar),
         ("native", BackendChoice::Native, false, 1, SweepKernel::Vector),
         ("sharded", BackendChoice::Sharded { workers: w }, false, w, SweepKernel::Vector),
         ("chunked", BackendChoice::Native, true, 1, SweepKernel::Vector),
         ("chunked", BackendChoice::Sharded { workers: w }, true, w, SweepKernel::Vector),
-    ];
+    ]
+}
+
+/// Run the solver-level fit matrix: whole `Picard::fit` calls
+/// (preprocess + solve at a fixed iteration budget) across the shared
+/// backend × kernel matrix (`solve_matrix`).
+pub fn run_fits(cfg: &BackendBenchConfig) -> Vec<FitTiming> {
+    let w = cfg.fit_workers();
+    let configs = solve_matrix(w);
     // Chunk so every configuration (including the pooled out-of-core
     // one) has at least 4 chunks per worker to dispatch — otherwise the
     // reported worker count would overstate the parallelism actually
@@ -307,12 +336,142 @@ pub fn run_fits(cfg: &BackendBenchConfig) -> Vec<FitTiming> {
     out
 }
 
-/// Build the stable `fica.bench_backend/v2` report (see
+/// One measured cold-vs-warm refit configuration.
+#[derive(Clone, Debug)]
+pub struct RefitTiming {
+    /// Backend id ("native" | "sharded" | "chunked").
+    pub backend: &'static str,
+    /// Sweep kernel the fits dispatched.
+    pub kernel: SweepKernel,
+    /// Whether the fits streamed from an out-of-core scratch file.
+    pub out_of_core: bool,
+    /// Worker threads serving the sweeps.
+    pub workers: usize,
+    /// Signal count N.
+    pub n: usize,
+    /// Base recording length T the warm model was fitted on.
+    pub t_base: usize,
+    /// Appended samples ΔT the warm refit streamed.
+    pub t_append: usize,
+    /// Streaming chunk size both fits ran with.
+    pub chunk: usize,
+    /// Iterations the cold fit over `T + ΔT` took to reach
+    /// [`defaults::REFIT_TOL`].
+    pub cold_iters: usize,
+    /// Iterations the warm `fit_append` took (must be fewer).
+    pub warm_iters: usize,
+    /// Raw cold-fit wall-clock samples in seconds.
+    pub cold_samples: Vec<f64>,
+    /// Raw warm-refit wall-clock samples in seconds.
+    pub warm_samples: Vec<f64>,
+}
+
+impl RefitTiming {
+    fn measurement(&self, which: &str, samples: &[f64]) -> Measurement {
+        Measurement {
+            name: format!(
+                "refit/{which} {} [{}]{} w={} N={}",
+                self.backend,
+                self.kernel.id(),
+                if self.out_of_core { " (out-of-core)" } else { "" },
+                self.workers,
+                self.n
+            ),
+            samples: samples.to_vec(),
+        }
+    }
+
+    /// Median seconds per warm refit (the gated quantity).
+    pub fn warm_median_s(&self) -> f64 {
+        self.measurement("warm", &self.warm_samples).median()
+    }
+
+    /// Median seconds per cold fit on the grown recording.
+    pub fn cold_median_s(&self) -> f64 {
+        self.measurement("cold", &self.cold_samples).median()
+    }
+}
+
+/// Run the incremental-refit matrix: per `solve_matrix` row, fit a base
+/// model on the first `refit_t` samples (untimed), then time (a) a cold
+/// `Picard::fit` over the grown `refit_t + refit_append` recording and
+/// (b) a warm `Picard::fit_append` over only the appended samples —
+/// both to [`defaults::REFIT_TOL`], recording their iteration counts.
+pub fn run_refits(cfg: &BackendBenchConfig) -> Vec<RefitTiming> {
+    let w = cfg.fit_workers();
+    let configs = solve_matrix(w);
+    let t_full = cfg.refit_t + cfg.refit_append;
+    let chunk = cfg.refit_t.div_ceil(4 * w).max(1);
+    let mut out = Vec::new();
+    for &n in &cfg.fit_sizes {
+        let data = crate::signal::experiment_a(n, t_full, cfg.seed ^ 0x9e17);
+        let base = Mat::from_fn(n, cfg.refit_t, |i, j| data.x[(i, j)]);
+        let appended =
+            Mat::from_fn(n, cfg.refit_append, |i, j| data.x[(i, j + cfg.refit_t)]);
+        for (backend_name, backend, out_of_core, workers, kernel) in configs {
+            let picard = Picard::new()
+                .backend(backend)
+                .kernel(kernel)
+                .out_of_core(out_of_core)
+                .chunk_cols(chunk)
+                .tol(defaults::REFIT_TOL)
+                .max_iters(defaults::REFIT_MAX_ITERS);
+            let m_base = picard.fit(&base).expect("bench base fit");
+            let mut cold_iters = 0;
+            let cold_samples: Vec<f64> = (0..cfg.refit_samples)
+                .map(|_| {
+                    let t0 = std::time::Instant::now();
+                    let m = black_box(picard.fit(&data.x).expect("bench cold fit"));
+                    cold_iters = m.fit_info().iters;
+                    t0.elapsed().as_secs_f64()
+                })
+                .collect();
+            let warm_picard = picard.clone().warm_start(&m_base);
+            let mut src = MemSource::new(appended.clone());
+            let mut warm_iters = 0;
+            let warm_samples: Vec<f64> = (0..cfg.refit_samples)
+                .map(|_| {
+                    let t0 = std::time::Instant::now();
+                    let m = black_box(
+                        warm_picard.fit_append(&mut src).expect("bench warm refit"),
+                    );
+                    warm_iters = m.fit_info().iters;
+                    t0.elapsed().as_secs_f64()
+                })
+                .collect();
+            let timing = RefitTiming {
+                backend: backend_name,
+                kernel,
+                out_of_core,
+                workers,
+                n,
+                t_base: cfg.refit_t,
+                t_append: cfg.refit_append,
+                chunk,
+                cold_iters,
+                warm_iters,
+                cold_samples,
+                warm_samples,
+            };
+            timing.measurement("cold", &timing.cold_samples).report();
+            timing.measurement("warm", &timing.warm_samples).report();
+            println!(
+                "  refit iterations: cold {} vs warm {}",
+                timing.cold_iters, timing.warm_iters
+            );
+            out.push(timing);
+        }
+    }
+    out
+}
+
+/// Build the stable `fica.bench_backend/v3` report (see
 /// `docs/BENCH_SCHEMA.md` for the field-by-field contract).
 pub fn report_json(
     cfg: &BackendBenchConfig,
     timings: &[SweepTiming],
     fits: &[FitTiming],
+    refits: &[RefitTiming],
 ) -> Json {
     // Native+scalar medians per N: the speedup baseline is the reference
     // arithmetic, so vector rows read as the vectorization gain.
@@ -387,8 +546,45 @@ pub fn report_json(
             Json::Obj(obj)
         })
         .collect();
+    // Refit rows: `median_s` is the warm-refit median — the quantity the
+    // new workload optimizes and the one `--compare` gates — with the
+    // cold fit on the grown recording alongside for context.
+    let refit_results: Vec<Json> = refits
+        .iter()
+        .map(|r| {
+            let warm = r.warm_median_s();
+            let cold = r.cold_median_s();
+            let mut obj = BTreeMap::new();
+            obj.insert("backend".into(), Json::Str(r.backend.to_string()));
+            obj.insert("kernel".into(), Json::Str(r.kernel.id().to_string()));
+            obj.insert("out_of_core".into(), Json::Bool(r.out_of_core));
+            obj.insert("workers".into(), Json::Num(r.workers as f64));
+            obj.insert("n".into(), Json::Num(r.n as f64));
+            obj.insert("t".into(), Json::Num((r.t_base + r.t_append) as f64));
+            obj.insert("t_base".into(), Json::Num(r.t_base as f64));
+            obj.insert("t_append".into(), Json::Num(r.t_append as f64));
+            obj.insert("chunk".into(), Json::Num(r.chunk as f64));
+            obj.insert("cold_iters".into(), Json::Num(r.cold_iters as f64));
+            obj.insert("warm_iters".into(), Json::Num(r.warm_iters as f64));
+            obj.insert("median_s".into(), Json::Num(warm));
+            obj.insert("cold_median_s".into(), Json::Num(cold));
+            obj.insert(
+                "speedup_vs_cold".into(),
+                if warm > 0.0 { Json::Num(cold / warm) } else { Json::Null },
+            );
+            obj.insert(
+                "samples".into(),
+                Json::Arr(r.warm_samples.iter().map(|&s| Json::Num(s)).collect()),
+            );
+            obj.insert(
+                "cold_samples".into(),
+                Json::Arr(r.cold_samples.iter().map(|&s| Json::Num(s)).collect()),
+            );
+            Json::Obj(obj)
+        })
+        .collect();
     let mut root = BTreeMap::new();
-    root.insert("schema".into(), Json::Str("fica.bench_backend/v2".into()));
+    root.insert("schema".into(), Json::Str("fica.bench_backend/v3".into()));
     root.insert("level".into(), Json::Str("h2".into()));
     root.insert(
         "kernels".into(),
@@ -408,6 +604,9 @@ pub fn report_json(
     root.insert("results".into(), Json::Arr(results));
     root.insert("fit_t".into(), Json::Num(cfg.fit_t as f64));
     root.insert("fit_results".into(), Json::Arr(fit_results));
+    root.insert("refit_t".into(), Json::Num(cfg.refit_t as f64));
+    root.insert("refit_append".into(), Json::Num(cfg.refit_append as f64));
+    root.insert("refit_results".into(), Json::Arr(refit_results));
     Json::Obj(root)
 }
 
@@ -435,15 +634,20 @@ mod tests {
             fit_t: 200,
             fit_iters: 2,
             fit_samples: 1,
+            refit_t: 200,
+            refit_append: 60,
+            refit_samples: 1,
         };
         let timings = run(&cfg);
         assert_eq!(timings.len(), 4); // (native + sharded(2)) x 2 kernels
         let fits = run_fits(&cfg);
         assert_eq!(fits.len(), 5); // native x 2 kernels, sharded, chunked x2
-        let report = report_json(&cfg, &timings, &fits);
+        let refits = run_refits(&cfg);
+        assert_eq!(refits.len(), 5); // same matrix as the fits
+        let report = report_json(&cfg, &timings, &fits, &refits);
         assert_eq!(
             report.get("schema").and_then(|s| s.as_str()),
-            Some("fica.bench_backend/v2")
+            Some("fica.bench_backend/v3")
         );
         let results = report.get("results").unwrap().as_arr().unwrap();
         assert_eq!(results.len(), 4);
@@ -471,6 +675,21 @@ mod tests {
             assert!(r.get("median_s").unwrap().as_f64().unwrap() >= 0.0);
             assert!(r.get("out_of_core").is_some());
             assert!(r.get("kernel").unwrap().as_str().is_some());
+        }
+        let refit_results = report.get("refit_results").unwrap().as_arr().unwrap();
+        assert_eq!(refit_results.len(), 5);
+        for r in refit_results {
+            assert!(r.get("median_s").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(r.get("cold_median_s").unwrap().as_f64().unwrap() >= 0.0);
+            // Iteration counts are recorded, not compared: on tiny
+            // noisy data the warm batch's optimum can legitimately sit
+            // anywhere. The warm-beats-cold property is pinned where it
+            // is guaranteed — on the fixture, in tests/test_warm_start.rs
+            // and `fica smoke`.
+            assert!(r.get("cold_iters").unwrap().as_usize().is_some());
+            assert!(r.get("warm_iters").unwrap().as_usize().is_some());
+            assert_eq!(r.get("t_base").unwrap().as_usize(), Some(200));
+            assert_eq!(r.get("t_append").unwrap().as_usize(), Some(60));
         }
         // The report survives its own serialization.
         let text = report.to_string_compact();

@@ -1,0 +1,325 @@
+//! The bench-trajectory regression gate behind `fica bench --compare`.
+//!
+//! Two `BENCH_backend.json` reports (the current run and a baseline —
+//! in CI, the previous run's uploaded artifact) are matched row-by-row
+//! on their configuration key (backend × kernel × workers × shape), and
+//! a matched row **regresses** when its `median_s` slowed down by more
+//! than [`crate::bench::defaults::REGRESSION_THRESHOLD`] (>1.5×).
+//!
+//! The comparison is schema-tolerant by design — the gate's job is a
+//! *trajectory*, which must survive schema bumps:
+//!
+//! - any `fica.bench_backend/v*` baseline is accepted; sections either
+//!   side lacks (`refit_results` against a pre-v3 baseline) and rows
+//!   only one side has are reported as unmatched, never failed;
+//! - v1 rows carry no `kernel` field — they are keyed as `"scalar"`,
+//!   which is exactly the arithmetic they measured (see
+//!   `docs/BENCH_SCHEMA.md`);
+//! - rows whose baseline median sits below
+//!   [`crate::bench::defaults::COMPARE_FLOOR_S`] are skipped: micro-row
+//!   timer jitter must not flap the gate (this makes the `--smoke`
+//!   comparison mostly a wiring check, which is intentional).
+
+use super::defaults;
+use super::fmt_duration;
+use crate::error::IcaError;
+use crate::util::Json;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// The sections a report may carry, with the fields that identify a row
+/// within each (beyond the fields shared by every section).
+const SECTIONS: [(&str, &[&str]); 3] = [
+    ("results", &[]),
+    ("fit_results", &["out_of_core"]),
+    ("refit_results", &["out_of_core", "t_base", "t_append"]),
+];
+
+/// Key fields every section shares.
+const COMMON_KEY_FIELDS: [&str; 5] = ["backend", "kernel", "workers", "n", "t"];
+
+/// One matched row's before/after medians.
+#[derive(Clone, Debug)]
+pub struct RowDelta {
+    /// Which report section the row came from.
+    pub section: &'static str,
+    /// The row's configuration key (human-readable, stable).
+    pub key: String,
+    /// Baseline median seconds.
+    pub base_s: f64,
+    /// Current median seconds.
+    pub current_s: f64,
+    /// `current_s / base_s` (> 1 = slower).
+    pub ratio: f64,
+}
+
+/// Everything a comparison found, ready for rendering and gating.
+#[derive(Clone, Debug, Default)]
+pub struct CompareOutcome {
+    /// Matched rows that were actually gated (baseline above the floor).
+    pub compared: Vec<RowDelta>,
+    /// Matched rows skipped because the baseline median sat below
+    /// [`defaults::COMPARE_FLOOR_S`].
+    pub below_floor: Vec<RowDelta>,
+    /// Rows present on only one side (schema drift, config changes).
+    pub unmatched: usize,
+    /// The gated rows that regressed beyond the threshold.
+    pub regressions: Vec<RowDelta>,
+    /// Whether the two reports disagree on their `smoke` flag.
+    pub smoke_mismatch: bool,
+}
+
+impl CompareOutcome {
+    /// Whether the gate should fail the run.
+    pub fn regressed(&self) -> bool {
+        !self.regressions.is_empty()
+    }
+
+    /// Human-readable multi-line summary (one line per compared row,
+    /// regressions flagged, skipped/unmatched counts at the end).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        if self.smoke_mismatch {
+            out.push_str(
+                "warning: comparing a smoke report against a full report (or vice \
+                 versa) — timings are not commensurable\n",
+            );
+        }
+        for d in &self.compared {
+            let flag = if self.regressions.iter().any(|r| r.key == d.key && r.section == d.section)
+            {
+                "  << REGRESSION"
+            } else {
+                ""
+            };
+            let _ = writeln!(
+                out,
+                "{:<14} {:<46} {:>12} -> {:>12}  ({:.2}x){flag}",
+                d.section,
+                d.key,
+                fmt_duration(d.base_s),
+                fmt_duration(d.current_s),
+                d.ratio
+            );
+        }
+        let _ = writeln!(
+            out,
+            "compared {} rows ({} below the {} timing floor, {} unmatched): {}",
+            self.compared.len(),
+            self.below_floor.len(),
+            fmt_duration(defaults::COMPARE_FLOOR_S),
+            self.unmatched,
+            if self.regressions.is_empty() {
+                format!("no regression beyond {:.2}x", defaults::REGRESSION_THRESHOLD)
+            } else {
+                format!(
+                    "{} row(s) regressed beyond {:.2}x",
+                    self.regressions.len(),
+                    defaults::REGRESSION_THRESHOLD
+                )
+            }
+        );
+        out
+    }
+}
+
+/// Reject anything that is not a bench report of some version.
+fn check_schema(v: &Json, which: &str) -> Result<(), IcaError> {
+    let schema = v.get("schema").and_then(|s| s.as_str()).unwrap_or("");
+    if !schema.starts_with("fica.bench_backend/v") {
+        return Err(IcaError::invalid_input(format!(
+            "{which} report: schema {schema:?} is not a fica.bench_backend report"
+        )));
+    }
+    Ok(())
+}
+
+/// Build a stable textual key for one row of `section`.
+fn row_key(row: &Json, extra: &[&str]) -> Option<String> {
+    let mut key = String::new();
+    for f in COMMON_KEY_FIELDS.iter().chain(extra) {
+        let part = match row.get(f) {
+            Some(Json::Str(s)) => s.clone(),
+            Some(Json::Num(x)) => format!("{x}"),
+            Some(Json::Bool(b)) => b.to_string(),
+            // v1 rows predate the kernel field: they measured the libm
+            // reference arithmetic, which v2+ calls "scalar".
+            None if *f == "kernel" => "scalar".to_string(),
+            None if *f == "out_of_core" => "false".to_string(),
+            _ => return None,
+        };
+        let _ = write!(key, "{f}={part} ");
+    }
+    Some(key.trim_end().to_string())
+}
+
+/// Compare `current` against `base` (see the module docs for matching
+/// and skipping rules). Errors only on inputs that are not bench reports
+/// at all — a baseline from an older schema is fine.
+pub fn compare_reports(current: &Json, base: &Json) -> Result<CompareOutcome, IcaError> {
+    check_schema(current, "current")?;
+    check_schema(base, "baseline")?;
+    let mut outcome = CompareOutcome {
+        smoke_mismatch: current.get("smoke") != base.get("smoke"),
+        ..CompareOutcome::default()
+    };
+    for (section, extra) in SECTIONS {
+        let (cur_rows, base_rows) = match (
+            current.get(section).and_then(|s| s.as_arr()),
+            base.get(section).and_then(|s| s.as_arr()),
+        ) {
+            (Some(c), Some(b)) => (c, b),
+            // A section only one side has (schema drift): count its rows
+            // as unmatched and move on.
+            (Some(c), None) => {
+                outcome.unmatched += c.len();
+                continue;
+            }
+            (None, Some(b)) => {
+                outcome.unmatched += b.len();
+                continue;
+            }
+            (None, None) => continue,
+        };
+        let mut base_by_key: BTreeMap<String, f64> = BTreeMap::new();
+        for row in base_rows {
+            if let (Some(key), Some(median)) =
+                (row_key(row, extra), row.get("median_s").and_then(|m| m.as_f64()))
+            {
+                base_by_key.insert(key, median);
+            } else {
+                outcome.unmatched += 1;
+            }
+        }
+        for row in cur_rows {
+            let (Some(key), Some(current_s)) =
+                (row_key(row, extra), row.get("median_s").and_then(|m| m.as_f64()))
+            else {
+                outcome.unmatched += 1;
+                continue;
+            };
+            let Some(base_s) = base_by_key.remove(&key) else {
+                outcome.unmatched += 1;
+                continue;
+            };
+            let ratio = if base_s > 0.0 { current_s / base_s } else { f64::INFINITY };
+            let delta = RowDelta { section, key, base_s, current_s, ratio };
+            if base_s < defaults::COMPARE_FLOOR_S {
+                outcome.below_floor.push(delta);
+            } else {
+                if ratio > defaults::REGRESSION_THRESHOLD {
+                    outcome.regressions.push(delta.clone());
+                }
+                outcome.compared.push(delta);
+            }
+        }
+        outcome.unmatched += base_by_key.len();
+    }
+    Ok(outcome)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(rows: &[(&str, &str, usize, usize, usize, f64)]) -> Json {
+        let body: Vec<String> = rows
+            .iter()
+            .map(|(backend, kernel, workers, n, t, median)| {
+                format!(
+                    r#"{{"backend":"{backend}","kernel":"{kernel}","workers":{workers},"n":{n},"t":{t},"median_s":{median}}}"#
+                )
+            })
+            .collect();
+        Json::parse(&format!(
+            r#"{{"schema":"fica.bench_backend/v3","smoke":false,"results":[{}],"fit_results":[]}}"#,
+            body.join(",")
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn identical_reports_pass() {
+        let r = report(&[("native", "scalar", 1, 32, 100000, 0.5)]);
+        let out = compare_reports(&r, &r).unwrap();
+        assert_eq!(out.compared.len(), 1);
+        assert!(!out.regressed());
+        assert!(out.render().contains("no regression"));
+    }
+
+    /// The acceptance check: a deliberate 2× slowdown on a matched row
+    /// above the floor must trip the gate.
+    #[test]
+    fn two_x_slowdown_is_a_regression() {
+        let base = report(&[
+            ("native", "scalar", 1, 32, 100000, 0.5),
+            ("sharded", "vector", 4, 32, 100000, 0.2),
+        ]);
+        let slow = report(&[
+            ("native", "scalar", 1, 32, 100000, 1.0), // 2x slower
+            ("sharded", "vector", 4, 32, 100000, 0.2),
+        ]);
+        let out = compare_reports(&slow, &base).unwrap();
+        assert!(out.regressed());
+        assert_eq!(out.regressions.len(), 1);
+        assert!(out.regressions[0].key.contains("backend=native"));
+        assert!((out.regressions[0].ratio - 2.0).abs() < 1e-12);
+        assert!(out.render().contains("REGRESSION"));
+        // The same slowdown in the other direction (a speedup) is fine.
+        assert!(!compare_reports(&base, &slow).unwrap().regressed());
+    }
+
+    #[test]
+    fn micro_rows_below_the_floor_are_skipped() {
+        let base = report(&[("native", "scalar", 1, 8, 5000, 0.0004)]);
+        let slow = report(&[("native", "scalar", 1, 8, 5000, 0.0040)]); // 10x, but µs-scale
+        let out = compare_reports(&slow, &base).unwrap();
+        assert!(!out.regressed());
+        assert_eq!(out.below_floor.len(), 1);
+        assert!(out.compared.is_empty());
+    }
+
+    #[test]
+    fn unmatched_rows_and_missing_sections_do_not_fail() {
+        let base = report(&[("native", "scalar", 1, 32, 100000, 0.5)]);
+        let current = Json::parse(
+            r#"{"schema":"fica.bench_backend/v3","smoke":false,
+                "results":[{"backend":"native","kernel":"scalar","workers":1,"n":64,"t":100000,"median_s":2.0}],
+                "fit_results":[],
+                "refit_results":[{"backend":"native","kernel":"vector","workers":1,"n":8,"t":100000,"t_base":100000,"t_append":25000,"out_of_core":false,"median_s":1.0}]}"#,
+        )
+        .unwrap();
+        let out = compare_reports(&current, &base).unwrap();
+        assert!(!out.regressed());
+        // N=64 current row, N=32 baseline row, and the whole
+        // refit_results section have no counterpart.
+        assert_eq!(out.unmatched, 3);
+    }
+
+    /// v1 baselines predate the kernel field: their rows must match the
+    /// scalar rows of a v2+ report (same arithmetic).
+    #[test]
+    fn v1_baseline_rows_match_scalar_rows() {
+        let base = Json::parse(
+            r#"{"schema":"fica.bench_backend/v1","smoke":false,
+                "results":[{"backend":"native","workers":1,"n":32,"t":100000,"median_s":0.5}]}"#,
+        )
+        .unwrap();
+        let current = report(&[
+            ("native", "scalar", 1, 32, 100000, 1.2), // 2.4x vs the v1 row
+            ("native", "vector", 1, 32, 100000, 0.2), // no v1 counterpart
+        ]);
+        let out = compare_reports(&current, &base).unwrap();
+        assert_eq!(out.compared.len(), 1);
+        assert!(out.regressed());
+        assert_eq!(out.unmatched, 1); // the vector row has no v1 counterpart
+    }
+
+    #[test]
+    fn non_reports_are_rejected() {
+        let r = report(&[("native", "scalar", 1, 32, 100000, 0.5)]);
+        let junk = Json::parse(r#"{"schema":"fica.ica_model/v2"}"#).unwrap();
+        assert!(compare_reports(&r, &junk).is_err());
+        assert!(compare_reports(&junk, &r).is_err());
+    }
+}

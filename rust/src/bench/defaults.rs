@@ -1,0 +1,60 @@
+//! Shared tolerance / size constants for the benches and the CI smoke
+//! flows.
+//!
+//! CI drives the checked-in `tiny.bin` fixture through `fica smoke`, the
+//! integration tests drive it through `cargo test`, and local runs drive
+//! it by hand — all three must use the *same* tolerances and chunk sizes
+//! or their results silently stop being comparable. These constants are
+//! the single home; nothing else hard-codes them.
+
+/// Gradient ∞-norm tolerance for every fixture (`tiny.bin`) smoke fit —
+/// CI smoke steps, `fica smoke`, and the fixture integration tests.
+pub const FIXTURE_TOL: f64 = 1e-6;
+
+/// Streaming chunk size (sample columns) for the fixture smoke fits.
+/// 250 divides the fixture's 1000 samples *and* the 750-sample warm-start
+/// split, so the moment-merge smoke exercises the bitwise-aligned path.
+pub const FIXTURE_CHUNK: usize = 250;
+
+/// Worker-pool size for the sharded / out-of-core fixture smokes.
+pub const FIXTURE_WORKERS: usize = 2;
+
+/// Columns of the fixture used as the "already seen" base recording in
+/// warm-start smoke flows (the remaining columns play the appended
+/// batch). A multiple of [`FIXTURE_CHUNK`], so the merge is bitwise.
+pub const FIXTURE_REFIT_SPLIT: usize = 750;
+
+/// Gradient ∞-norm tolerance for the cold-vs-warm refit benches: loose
+/// enough that every backend converges well inside
+/// [`REFIT_MAX_ITERS`], tight enough that iteration counts discriminate.
+pub const REFIT_TOL: f64 = 1e-7;
+
+/// Iteration cap for the refit benches (a safety net, not a budget —
+/// timed refit fits run to [`REFIT_TOL`]).
+pub const REFIT_MAX_ITERS: usize = 100;
+
+/// `fica bench --compare`: a matched row regresses when its median slows
+/// down by more than this factor vs the baseline report.
+pub const REGRESSION_THRESHOLD: f64 = 1.5;
+
+/// `fica bench --compare`: rows whose *baseline* median is below this
+/// many seconds are skipped (reported, not gated) — timer jitter on
+/// micro-rows would otherwise flap the gate, especially for `--smoke`
+/// runs on shared CI hardware. The full-size bench rows sit comfortably
+/// above this floor.
+pub const COMPARE_FLOOR_S: f64 = 5e-3;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixture_constants_are_consistent() {
+        // The warm-start split must land on a chunk boundary, or the
+        // bitwise moment-merge guarantee the smoke relies on is void.
+        assert_eq!(FIXTURE_REFIT_SPLIT % FIXTURE_CHUNK, 0);
+        assert!(FIXTURE_TOL > 0.0 && FIXTURE_TOL.is_finite());
+        assert!(REGRESSION_THRESHOLD > 1.0);
+        assert!(COMPARE_FLOOR_S > 0.0);
+    }
+}

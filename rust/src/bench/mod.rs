@@ -6,6 +6,8 @@
 //! with `harness = false`.
 
 pub mod backends;
+pub mod compare;
+pub mod defaults;
 
 use std::time::{Duration, Instant};
 

@@ -252,6 +252,17 @@ COMMANDS:
         --seed <u64>             dataset / solver seed (default 0)
         --scale <f64>            synthetic dataset scale 0<s<=1 (default 0.25)
         --trace                  print the per-iteration convergence trace
+    refit                        Warm-start refit of a saved model on appended samples
+        --model <path>           model JSON produced by `fica fit` (must carry
+                                 stored moments, i.e. schema v2)
+        --input <path>           the *appended* samples only (json|bin|csv);
+                                 stored moments are merged with one streaming
+                                 pass over them — O(N^2 x dT), not O(N^2 x T)
+        --format <id>            json|bin|csv (default: inferred)
+        --model-out <path>       write the refitted model JSON here
+        plus the `fit` solver flags (--algo/--backend/--kernel/--workers/
+        --chunk/--out-of-core/--scratch-dir/--tol/--max-iters/--trace);
+        --whitener defaults to the model's whitener and may not differ
     apply                        Run a saved model on new data
         --model <path>           model JSON produced by `fica fit`
         --input <path>           matrix JSON file to transform
@@ -267,6 +278,17 @@ COMMANDS:
     bench                        Time backend sweeps, write BENCH_backend.json
         --out <path>             report path (default BENCH_backend.json)
         --smoke                  tiny sizes for CI smoke runs
+        --compare <path>         gate against a baseline BENCH_backend.json:
+                                 exit non-zero when any matched sweep/fit/refit
+                                 row regresses >1.5x (micro-rows below the
+                                 timing floor are reported, not gated)
+    smoke                        Drive the checked-in fixture through the
+                                 sharded / scalar-kernel / out-of-core / refit
+                                 flows with the shared bench::defaults
+                                 tolerances (what CI runs)
+        --fixture <path>         FICA1 fixture (default
+                                 tests/fixtures/tiny.bin)
+        --scratch-dir <path>     out-of-core scratch dir (default: temp dir)
     info                         Library, artifact and platform summary
     run                          (deprecated) alias of `fit --data ...`
     experiment                   Regenerate a paper figure

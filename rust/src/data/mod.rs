@@ -26,7 +26,7 @@ mod stats;
 
 pub use bin::{write_bin, BinSource, BinWriter, BIN_MAGIC};
 pub use csv::{write_csv, CsvSource, CsvWriter};
-pub use stats::{MomentPartial, StreamingStats};
+pub use stats::{MomentPartial, MomentSnapshot, StreamingStats};
 
 use crate::error::IcaError;
 use crate::linalg::Mat;
@@ -265,6 +265,24 @@ pub fn open_source(
     })
 }
 
+/// Drain a source into a dense `N×T` matrix, chunk by chunk, with the
+/// pipeline's usual shape and completeness checks — the one assembly
+/// loop behind `convert_to`'s JSON arm, `fica smoke`, and tests. The
+/// source is reset first.
+pub fn read_dense(src: &mut dyn DataSource, chunk_cols: usize) -> Result<Mat, IcaError> {
+    let (n, t) = (src.rows(), src.cols());
+    let chunk_cols = chunk_cols.max(1);
+    src.reset()?;
+    let mut full = Mat::zeros(n, t);
+    let mut off = 0usize;
+    while let Some(chunk) = src.next_chunk(chunk_cols)? {
+        copy_columns(&mut full, off, &chunk, src)?;
+        off += chunk.cols();
+    }
+    check_complete(off, t, src)?;
+    Ok(full)
+}
+
 /// Stream a source into a file of the given format (`fica convert`).
 ///
 /// `bin` and `csv` outputs are written chunk-by-chunk; `json` has no
@@ -280,16 +298,7 @@ pub fn convert_to(
     let chunk_cols = chunk_cols.max(1);
     src.reset()?;
     match format {
-        Format::Json => {
-            let mut full = Mat::zeros(n, t);
-            let mut off = 0usize;
-            while let Some(chunk) = src.next_chunk(chunk_cols)? {
-                copy_columns(&mut full, off, &chunk, src)?;
-                off += chunk.cols();
-            }
-            check_complete(off, t, src)?;
-            write_matrix_json(path, &full)
-        }
+        Format::Json => write_matrix_json(path, &read_dense(src, chunk_cols)?),
         Format::Bin => {
             let mut out = BinWriter::create(path, n, t)?;
             while let Some(chunk) = src.next_chunk(chunk_cols)? {

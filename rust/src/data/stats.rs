@@ -17,6 +17,68 @@ use crate::error::IcaError;
 use crate::linalg::{matmul_a_bt_into, Mat};
 use std::sync::Arc;
 
+/// A serializable copy of an accumulator's raw sums: the sufficient
+/// statistics of everything a fit has seen, in the exact form the
+/// accumulation produced them (pivot, pivot-shifted sums, sample count).
+///
+/// This is what [`crate::estimator::IcaModel`] persists (schema v2) so a
+/// later [`crate::estimator::Picard::fit_append`] can merge the stored
+/// recording with appended samples: restoring the snapshot via
+/// [`StreamingStats::from_snapshot`] and absorbing the new chunks is the
+/// *same arithmetic* the original accumulation would have performed had
+/// the appended samples streamed in — bitwise, when the append continues
+/// on the original chunk boundaries (i.e. the stored sample count is a
+/// multiple of the chunk size), and within reassociation noise otherwise.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MomentSnapshot {
+    /// Samples the sums cover.
+    pub count: usize,
+    /// The numerical pivot (first sample seen by the original pass).
+    pub pivot: Vec<f64>,
+    /// Σ over samples of `x − pivot` (length N).
+    pub sum: Vec<f64>,
+    /// Σ over samples of `(x − pivot)(x − pivot)ᵀ` (N×N).
+    pub outer: Mat,
+}
+
+impl MomentSnapshot {
+    /// Number of signals N the sums cover.
+    pub fn n(&self) -> usize {
+        self.pivot.len()
+    }
+
+    /// Shape/finiteness validation: pivot, sum and outer must agree on
+    /// `n`, the outer matrix must be square, every entry finite, and at
+    /// least 2 samples accumulated (fewer cannot yield a covariance).
+    pub fn validate(&self) -> Result<(), IcaError> {
+        let n = self.n();
+        if n == 0 {
+            return Err(IcaError::invalid_input("moment snapshot: empty pivot"));
+        }
+        if self.sum.len() != n || self.outer.rows() != n || self.outer.cols() != n {
+            return Err(IcaError::invalid_input(format!(
+                "moment snapshot: inconsistent shapes (pivot {n}, sum {}, outer {}x{})",
+                self.sum.len(),
+                self.outer.rows(),
+                self.outer.cols()
+            )));
+        }
+        if self.count < 2 {
+            return Err(IcaError::invalid_input(format!(
+                "moment snapshot: needs >= 2 samples, got {}",
+                self.count
+            )));
+        }
+        let finite = |s: &[f64]| s.iter().all(|v| v.is_finite());
+        if !finite(&self.pivot) || !finite(&self.sum) || !finite(self.outer.as_slice()) {
+            return Err(IcaError::invalid_input(
+                "moment snapshot: non-finite sums",
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Unnormalized moment sums over one column chunk: the unit of work the
 /// parallel pass-1 pipeline dispatches to the worker pool. Absorbing
 /// partials in chunk order reproduces the serial accumulation bitwise —
@@ -62,6 +124,35 @@ impl StreamingStats {
             pivot: None,
             count: 0,
         }
+    }
+
+    /// Restore an accumulator from a stored [`MomentSnapshot`] so
+    /// further [`StreamingStats::update`]/[`StreamingStats::absorb`]
+    /// calls continue the original accumulation — the moment-merge
+    /// behind warm-start refits. Fail-closed on inconsistent snapshots.
+    pub fn from_snapshot(snapshot: MomentSnapshot) -> Result<Self, IcaError> {
+        snapshot.validate()?;
+        let n = snapshot.n();
+        Ok(Self {
+            sum: snapshot.sum,
+            outer: snapshot.outer,
+            scratch: Mat::zeros(n, n),
+            shifted: Mat::zeros(n, 0),
+            pivot: Some(Arc::new(snapshot.pivot)),
+            count: snapshot.count,
+        })
+    }
+
+    /// A serializable copy of the raw sums (None until at least one
+    /// sample has been accumulated — no pivot exists before that).
+    pub fn snapshot(&self) -> Option<MomentSnapshot> {
+        let pivot = self.pivot.as_ref()?;
+        Some(MomentSnapshot {
+            count: self.count,
+            pivot: pivot.as_ref().clone(),
+            sum: self.sum.clone(),
+            outer: self.outer.clone(),
+        })
     }
 
     /// Number of signals N.
@@ -258,6 +349,54 @@ mod tests {
             "cov deviates by {} under DC offset",
             c.max_abs_diff(&want_c)
         );
+    }
+
+    /// Accumulating T samples, snapshotting, restoring, and accumulating
+    /// ΔT more must be bitwise identical to one uninterrupted pass when
+    /// the snapshot falls on a chunk boundary — the contract warm-start
+    /// refits build on.
+    #[test]
+    fn snapshot_restore_continues_accumulation_bitwise() {
+        let x = offset_data(4, 900, 7);
+        let chunk = 100;
+        let full = stream(&x, chunk);
+
+        let base = Mat::from_fn(4, 600, |i, j| x[(i, j)]);
+        let appended = Mat::from_fn(4, 300, |i, j| x[(i, j + 600)]);
+        let snap = stream(&base, chunk).snapshot().expect("snapshot");
+        assert_eq!(snap.count, 600);
+        snap.validate().unwrap();
+        let mut resumed = StreamingStats::from_snapshot(snap).unwrap();
+        let mut pos = 0;
+        while pos < appended.cols() {
+            let c = chunk.min(appended.cols() - pos);
+            resumed.update(&Mat::from_fn(4, c, |i, j| appended[(i, pos + j)]));
+            pos += c;
+        }
+        assert_eq!(resumed.count(), full.count());
+        assert_eq!(resumed.means().unwrap(), full.means().unwrap());
+        assert!(resumed.covariance().unwrap().max_abs_diff(&full.covariance().unwrap()) == 0.0);
+        // The merged snapshot equals the uninterrupted one exactly.
+        assert_eq!(resumed.snapshot(), full.snapshot());
+    }
+
+    #[test]
+    fn snapshot_fails_closed() {
+        // No samples yet: no pivot, no snapshot.
+        assert!(StreamingStats::new(3).snapshot().is_none());
+        // A tampered snapshot is rejected, not absorbed.
+        let x = offset_data(3, 50, 9);
+        let good = stream(&x, 10).snapshot().unwrap();
+        let mut bad = good.clone();
+        bad.sum.pop();
+        assert!(StreamingStats::from_snapshot(bad).is_err());
+        let mut bad = good.clone();
+        bad.outer[(0, 0)] = f64::NAN;
+        assert!(StreamingStats::from_snapshot(bad).is_err());
+        let mut bad = good.clone();
+        bad.count = 1;
+        assert!(StreamingStats::from_snapshot(bad).is_err());
+        assert!(StreamingStats::from_snapshot(good).is_ok());
     }
 
     #[test]

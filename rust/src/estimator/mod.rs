@@ -21,12 +21,15 @@
 use crate::backend::{
     ChunkedBackend, ComputeBackend, NativeBackend, ShardedBackend, SweepKernel,
 };
-use crate::data::{DataSource, MatSource, DEFAULT_CHUNK_COLS};
+use crate::data::{DataSource, MatSource, MomentSnapshot, StreamingStats, DEFAULT_CHUNK_COLS};
 use crate::error::IcaError;
-use crate::ica::{try_solve, Algorithm, HessianApprox, SolverConfig, Trace};
+use crate::ica::{
+    try_solve_warm, Algorithm, HessianApprox, LbfgsMemory, SolverConfig, Trace,
+};
 use crate::linalg::{matmul, Lu, Mat};
 use crate::preprocessing::{
-    preprocess, preprocess_source_with, Preprocessed, StreamOptions, Whitener, WhitenedData,
+    preprocess, preprocess_source_seeded, preprocess_source_with, Preprocessed, StreamOptions,
+    Whitener, WhitenedData,
 };
 use crate::runtime::{default_artifact_dir, Engine, XlaBackend};
 use crate::util::{mat_from_json, mat_to_json, Json};
@@ -35,8 +38,16 @@ use std::fmt;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
-/// Schema tag stamped into every serialized model; load rejects others.
-const MODEL_SCHEMA: &str = "fica.ica_model/v1";
+/// Schema tag stamped into every serialized model. Load accepts this and
+/// [`MODEL_SCHEMA_V1`] (fail-closed on anything else); save always writes
+/// the current tag. v2 adds the optional `stats` object — the sufficient
+/// statistics (sample count + pivot moment sums) that seed warm-start
+/// refits ([`Picard::fit_append`]).
+const MODEL_SCHEMA: &str = "fica.ica_model/v2";
+
+/// The previous schema tag: still loadable (its models simply carry no
+/// stored moments, so `fit_append` refuses them with a typed error).
+const MODEL_SCHEMA_V1: &str = "fica.ica_model/v1";
 
 /// Which compute backend `fit` runs the per-iteration statistics on.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -98,6 +109,10 @@ pub struct Picard {
     out_of_core: bool,
     scratch_dir: Option<PathBuf>,
     w0: Option<Mat>,
+    /// Warm-start seed: a previous model whose `W` (and, for in-process
+    /// L-BFGS fits, correction-pair memory and stored moments) prime the
+    /// next solve. See [`Picard::warm_start`] / [`Picard::fit_append`].
+    warm: Option<IcaModel>,
     /// Shared PJRT engine (compile cache) for xla/auto backends; a
     /// fresh engine is created per fit when unset.
     engine: Option<Rc<Engine>>,
@@ -126,6 +141,7 @@ impl fmt::Debug for Picard {
             .field("out_of_core", &self.out_of_core)
             .field("scratch_dir", &self.scratch_dir)
             .field("w0", &self.w0)
+            .field("warm_start", &self.warm.is_some())
             .field("shared_engine", &self.engine.is_some())
             .finish()
     }
@@ -148,6 +164,7 @@ impl Picard {
             out_of_core: false,
             scratch_dir: None,
             w0: None,
+            warm: None,
             engine: None,
         }
     }
@@ -243,6 +260,21 @@ impl Picard {
     /// Custom initial unmixing matrix in whitened space (default: I).
     pub fn w0(mut self, w0: Mat) -> Self {
         self.w0 = Some(w0);
+        self
+    }
+
+    /// Warm-start the next solve from a previous fit: the solver begins
+    /// at the model's unmixing `W` instead of the identity, and — when
+    /// the model came from an in-process L-BFGS fit — its correction-pair
+    /// memory seeds the two-loop recursion. An explicit [`Picard::w0`]
+    /// takes precedence over the warm `W`.
+    ///
+    /// For refits on **appended samples of the same recording**, combine
+    /// with [`Picard::fit_append`], which additionally merges the model's
+    /// stored moment sums so the whitener reflects the full grown
+    /// recording while streaming only the new samples.
+    pub fn warm_start(mut self, model: &IcaModel) -> Self {
+        self.warm = Some(model.clone());
         self
     }
 
@@ -389,6 +421,85 @@ impl Picard {
         self.fit_preprocessed(pre, cfg)
     }
 
+    /// Incremental refit on **appended samples** of a growing recording
+    /// (requires [`Picard::warm_start`] with a model that carries stored
+    /// moments — any model fitted or saved at schema v2).
+    ///
+    /// `src` must yield only the ΔT *new* samples. The stored moment sums
+    /// are merged with one streaming pass over them (pooled like the
+    /// PR 3 passes: partials absorbed in chunk order, so the merge is
+    /// bitwise worker-count-independent), the whitener `K` and means `μ`
+    /// are re-derived from the merged covariance — exactly what a full
+    /// two-pass re-preprocess of all `T + ΔT` samples would produce, to
+    /// ≤ 1e-12 (bitwise when `T` is a multiple of the chunk size) — and
+    /// the appended samples are whitened with the merged transform. The
+    /// solver then refines the previous `W` on the new batch, seeded with
+    /// the previous L-BFGS memory when available. Total preprocessing
+    /// cost is O(N²·ΔT), not O(N²·(T+ΔT)).
+    ///
+    /// The returned model's `K`, `μ`, and stored moments cover the full
+    /// grown recording, so refits chain: each `fit_append` hands back a
+    /// model ready for the next batch.
+    ///
+    /// Fail-closed with a typed [`IcaError`] when no warm model was set,
+    /// the model carries no stored moments (fitted before schema v2 or
+    /// loaded from a v1 file), the whitener family differs from the
+    /// model's, or the appended batch is mis-shaped. An *empty* appended
+    /// source is a no-op: the previous model is returned unchanged.
+    pub fn fit_append(&self, src: &mut dyn DataSource) -> Result<IcaModel, IcaError> {
+        let warm = self.warm.as_ref().ok_or_else(|| {
+            IcaError::invalid_input(
+                "fit_append needs a previous model: call warm_start(&model) first",
+            )
+        })?;
+        let snap = warm.stats.clone().ok_or_else(|| {
+            IcaError::invalid_model(
+                "model carries no sufficient statistics (fitted before schema v2, or \
+                 loaded from a v1 file) — warm refits need a model saved by this \
+                 version; run a fresh fit on the full recording instead",
+            )
+        })?;
+        if self.whitener != warm.whitener() {
+            return Err(IcaError::invalid_input(format!(
+                "refit whitener {:?} differs from the model's {:?}: a warm refit must \
+                 keep the whitening family the model was trained with",
+                self.whitener.id(),
+                warm.whitener().id()
+            )));
+        }
+        let cfg = self.solver_config();
+        cfg.validate()?;
+        self.check_out_of_core_backend()?;
+        let n = warm.n_features();
+        if src.rows() != n {
+            return Err(IcaError::DimensionMismatch {
+                what: "appended data".into(),
+                expected: (n, src.cols()),
+                got: (src.rows(), src.cols()),
+            });
+        }
+        if src.cols() == 0 {
+            // Nothing appended: the previous model already describes the
+            // recording — hand it back bitwise-unchanged.
+            return Ok(warm.clone());
+        }
+        if src.cols() <= n {
+            return Err(IcaError::invalid_input(format!(
+                "need more appended samples than signals to refit, got {n} signals x {} \
+                 appended samples",
+                src.cols()
+            )));
+        }
+        let seed = StreamingStats::from_snapshot(snap)?;
+        let pre = preprocess_source_seeded(
+            src,
+            self.whitener,
+            &self.stream_options(),
+            Some(seed),
+        )?;
+        self.fit_preprocessed(pre, cfg)
+    }
+
     fn check_shape(rows: usize, cols: usize) -> Result<(), IcaError> {
         if rows < 2 {
             return Err(IcaError::invalid_input(format!(
@@ -412,12 +523,15 @@ impl Picard {
         pre: Preprocessed,
         cfg: SolverConfig,
     ) -> Result<IcaModel, IcaError> {
-        let Preprocessed { x, k, means } = pre;
+        let Preprocessed { x, k, means, moments } = pre;
         let n = k.rows();
-        let w0 = match &self.w0 {
-            Some(w) => w.clone(),
-            None => Mat::eye(n),
+        // Explicit w0 > warm model's W > identity.
+        let w0 = match (&self.w0, &self.warm) {
+            (Some(w), _) => w.clone(),
+            (None, Some(m)) => m.w().clone(),
+            (None, None) => Mat::eye(n),
         };
+        let warm_memory = self.warm.as_ref().and_then(|m| m.memory.clone());
         let (mut backend, backend_name, backend_fallback): (
             Box<dyn ComputeBackend>,
             &'static str,
@@ -434,7 +548,7 @@ impl Picard {
                 (Box::new(be), "chunked", None)
             }
         };
-        let result = try_solve(backend.as_mut(), &w0, &cfg)?;
+        let result = try_solve_warm(backend.as_mut(), &w0, &cfg, warm_memory)?;
         let final_grad_inf =
             result.trace.last().map(|r| r.grad_inf).unwrap_or(f64::NAN);
         let u = matmul(&result.w, &k);
@@ -443,6 +557,8 @@ impl Picard {
             k,
             u,
             means,
+            stats: moments,
+            memory: result.memory,
             algorithm: self.algorithm,
             whitener: self.whitener,
             fit_info: FitInfo {
@@ -498,6 +614,16 @@ pub struct IcaModel {
     /// beyond `U·x`.
     u: Mat,
     means: Vec<f64>,
+    /// Sufficient statistics of the recording the model was fitted on
+    /// (sample count + pivot moment sums). Serialized at schema v2;
+    /// `None` for models loaded from v1 files. [`Picard::fit_append`]
+    /// merges these with appended samples to re-derive `K`/`μ` without
+    /// re-streaming the original data.
+    stats: Option<MomentSnapshot>,
+    /// Final L-BFGS correction-pair memory of the producing solve —
+    /// in-memory only (like the trace): `None` after load, carried into
+    /// the next solve by [`Picard::warm_start`].
+    memory: Option<LbfgsMemory>,
     algorithm: Algorithm,
     whitener: Whitener,
     fit_info: FitInfo,
@@ -542,6 +668,19 @@ impl IcaModel {
     /// Convergence metadata.
     pub fn fit_info(&self) -> &FitInfo {
         &self.fit_info
+    }
+
+    /// The stored sufficient statistics (sample count + pivot moment
+    /// sums) of the recording this model was fitted on — what
+    /// [`Picard::fit_append`] merges with appended samples. `None` for
+    /// models loaded from schema-v1 files.
+    pub fn moments(&self) -> Option<&MomentSnapshot> {
+        self.stats.as_ref()
+    }
+
+    /// Samples the stored moments cover (`None` without stored moments).
+    pub fn n_samples(&self) -> Option<usize> {
+        self.stats.as_ref().map(|s| s.count)
     }
 
     /// The composed unmixing matrix `U = W·K` acting on centered raw
@@ -645,6 +784,20 @@ impl IcaModel {
         obj.insert("whitening".to_string(), mat_to_json(&self.k));
         obj.insert("unmixing_w".to_string(), mat_to_json(&self.w));
         obj.insert("fit".to_string(), Json::Obj(fit));
+        if let Some(s) = &self.stats {
+            let mut st = BTreeMap::new();
+            st.insert("count".to_string(), Json::Num(s.count as f64));
+            st.insert(
+                "pivot".to_string(),
+                Json::Arr(s.pivot.iter().map(|&v| Json::Num(v)).collect()),
+            );
+            st.insert(
+                "sum".to_string(),
+                Json::Arr(s.sum.iter().map(|&v| Json::Num(v)).collect()),
+            );
+            st.insert("outer".to_string(), mat_to_json(&s.outer));
+            obj.insert("stats".to_string(), Json::Obj(st));
+        }
         Ok(Json::Obj(obj))
     }
 
@@ -659,9 +812,10 @@ impl IcaModel {
     /// (schema tag, known ids, dimension agreement, finiteness).
     pub fn from_json(v: &Json) -> Result<IcaModel, IcaError> {
         let schema = v.get("schema").and_then(|s| s.as_str()).unwrap_or("");
-        if schema != MODEL_SCHEMA {
+        let is_v1 = schema == MODEL_SCHEMA_V1;
+        if schema != MODEL_SCHEMA && !is_v1 {
             return Err(IcaError::invalid_model(format!(
-                "schema {schema:?}, expected {MODEL_SCHEMA:?}"
+                "schema {schema:?}, expected {MODEL_SCHEMA:?} (or legacy {MODEL_SCHEMA_V1:?})"
             )));
         }
         let algo_id = v
@@ -756,8 +910,64 @@ impl IcaModel {
                 k.cols()
             )));
         }
+        // Stored moments: a v2-only, optional section, but fail-closed
+        // when present — a refit must never run from tampered sums.
+        let stats = match v.get("stats") {
+            None | Some(Json::Null) => None,
+            Some(_) if is_v1 => {
+                return Err(IcaError::invalid_model(
+                    "\"stats\" is not a v1 field — re-save the model at the current schema",
+                ));
+            }
+            Some(sv) => Some(Self::stats_from_json(sv, n_features)?),
+        };
         let u = matmul(&w, &k);
-        Ok(IcaModel { w, k, u, means, algorithm, whitener, fit_info })
+        Ok(IcaModel { w, k, u, means, stats, memory: None, algorithm, whitener, fit_info })
+    }
+
+    /// Parse and validate the serialized `stats` section against the
+    /// model's feature count.
+    fn stats_from_json(v: &Json, n: usize) -> Result<MomentSnapshot, IcaError> {
+        let count = v
+            .get("count")
+            .and_then(|c| c.as_usize())
+            .ok_or_else(|| IcaError::invalid_model("missing/bad \"stats.count\""))?;
+        let vec_field = |name: &str| -> Result<Vec<f64>, IcaError> {
+            let arr = v
+                .get(name)
+                .and_then(|a| a.as_arr())
+                .ok_or_else(|| {
+                    IcaError::invalid_model(format!("missing/bad \"stats.{name}\""))
+                })?;
+            let mut out = Vec::with_capacity(arr.len());
+            for (i, e) in arr.iter().enumerate() {
+                let x = e.as_f64().ok_or_else(|| {
+                    IcaError::invalid_model(format!("stats.{name}[{i}] is not a number"))
+                })?;
+                out.push(x);
+            }
+            Ok(out)
+        };
+        let snapshot = MomentSnapshot {
+            count,
+            pivot: vec_field("pivot")?,
+            sum: vec_field("sum")?,
+            outer: mat_from_json(
+                v.get("outer")
+                    .ok_or_else(|| IcaError::invalid_model("missing \"stats.outer\""))?,
+                "stats.outer",
+            )?,
+        };
+        if snapshot.n() != n {
+            return Err(IcaError::invalid_model(format!(
+                "stats cover {} signals but the model has {n} features",
+                snapshot.n()
+            )));
+        }
+        snapshot
+            .validate()
+            .map_err(|e| IcaError::invalid_model(format!("stats: {e}")))?;
+        Ok(snapshot)
     }
 
     /// Parse a model from a JSON string (fail-closed; see
@@ -784,9 +994,22 @@ impl IcaModel {
 
     /// The invariants both save and load enforce: square `W`, a `K` whose
     /// shape matches `W`, means aligned with `K`'s columns, all entries
-    /// finite, nothing empty.
+    /// finite, nothing empty — and, when stored moments are present,
+    /// internally consistent finite sums covering the same signal count.
     fn validate_invariants(&self) -> Result<(), IcaError> {
-        Self::validate_parts(&self.w, &self.k, &self.means)
+        Self::validate_parts(&self.w, &self.k, &self.means)?;
+        if let Some(s) = &self.stats {
+            if s.n() != self.k.cols() {
+                return Err(IcaError::invalid_model(format!(
+                    "stats cover {} signals but the model has {} features",
+                    s.n(),
+                    self.k.cols()
+                )));
+            }
+            s.validate()
+                .map_err(|e| IcaError::invalid_model(format!("stats: {e}")))?;
+        }
+        Ok(())
     }
 
     /// Shape/finiteness validation on the bare parts — usable before an
@@ -953,7 +1176,7 @@ mod tests {
         // Truncated file.
         assert!(IcaModel::from_json_str(&good[..good.len() / 2]).is_err());
         // Wrong schema.
-        let bad = good.replace("fica.ica_model/v1", "fica.ica_model/v9");
+        let bad = good.replace("fica.ica_model/v2", "fica.ica_model/v9");
         assert!(matches!(
             IcaModel::from_json_str(&bad),
             Err(IcaError::InvalidModel { .. })
@@ -1108,6 +1331,93 @@ mod tests {
                 .expect_err("xla cannot stream");
             assert!(matches!(err, IcaError::InvalidInput { .. }), "{backend:?}: {err}");
         }
+    }
+
+    /// Every fit path stores sufficient statistics whose derived moments
+    /// agree with the data, and they survive the JSON roundtrip exactly.
+    #[test]
+    fn models_carry_mergeable_moments() {
+        let data = signal::experiment_a(4, 900, 20);
+        let batch = Picard::new().tol(1e-7).fit(&data.x).expect("fit");
+        let s = batch.moments().expect("batch fit stores moments");
+        assert_eq!(s.count, 900);
+        assert_eq!(batch.n_samples(), Some(900));
+        let restored = crate::data::StreamingStats::from_snapshot(s.clone()).unwrap();
+        for (a, b) in restored.means().unwrap().iter().zip(batch.row_means()) {
+            assert!((a - b).abs() == 0.0, "synthesized pivot reproduces μ bitwise");
+        }
+        let mut src = crate::data::MemSource::new(data.x.clone());
+        let streamed = Picard::new().tol(1e-7).fit_source(&mut src).expect("fit_source");
+        assert_eq!(streamed.moments().map(|s| s.count), Some(900));
+        // Moments roundtrip through JSON bit-for-bit.
+        let back = IcaModel::from_json_str(&streamed.to_json_string().unwrap()).unwrap();
+        assert_eq!(back.moments(), streamed.moments());
+    }
+
+    #[test]
+    fn fit_append_fails_closed() {
+        let data = signal::experiment_a(4, 800, 21);
+        let model = Picard::new().tol(1e-7).fit(&data.x).expect("fit");
+        let appended = signal::experiment_a(4, 100, 22).x;
+        // No warm_start.
+        let mut src = crate::data::MemSource::new(appended.clone());
+        assert!(matches!(
+            Picard::new().fit_append(&mut src),
+            Err(IcaError::InvalidInput { .. })
+        ));
+        // Whitener family mismatch.
+        let mut src = crate::data::MemSource::new(appended.clone());
+        assert!(matches!(
+            Picard::new().whitener(Whitener::Pca).warm_start(&model).fit_append(&mut src),
+            Err(IcaError::InvalidInput { .. })
+        ));
+        // Appended batch with the wrong signal count.
+        let mut src = crate::data::MemSource::new(Mat::zeros(3, 50));
+        assert!(matches!(
+            Picard::new().warm_start(&model).fit_append(&mut src),
+            Err(IcaError::DimensionMismatch { .. })
+        ));
+        // Too few appended samples to refit on.
+        let mut src = crate::data::MemSource::new(Mat::zeros(4, 3));
+        assert!(matches!(
+            Picard::new().warm_start(&model).fit_append(&mut src),
+            Err(IcaError::InvalidInput { .. })
+        ));
+        // Zero appended samples: a no-op, not an error.
+        let mut src = crate::data::MemSource::new(Mat::zeros(4, 0));
+        let same = Picard::new().warm_start(&model).fit_append(&mut src).unwrap();
+        assert!(same.w().max_abs_diff(model.w()) == 0.0);
+        assert!(same.whitening_matrix().max_abs_diff(model.whitening_matrix()) == 0.0);
+    }
+
+    #[test]
+    fn fit_append_refines_on_appended_samples() {
+        let data = signal::experiment_a(5, 3000, 23);
+        let base = Mat::from_fn(5, 2000, |i, j| data.x[(i, j)]);
+        let appended = Mat::from_fn(5, 1000, |i, j| data.x[(i, j + 2000)]);
+        let p = Picard::new().tol(1e-7).chunk_cols(500);
+        let m_base = p.fit_source(&mut crate::data::MemSource::new(base)).expect("base fit");
+        assert!(m_base.fit_info().converged);
+        let cold = p
+            .fit_source(&mut crate::data::MemSource::new(data.x.clone()))
+            .expect("cold fit");
+        let warm = p
+            .warm_start(&m_base)
+            .fit_append(&mut crate::data::MemSource::new(appended))
+            .expect("warm refit");
+        assert!(warm.fit_info().converged);
+        // The merged moments now cover the whole recording...
+        assert_eq!(warm.n_samples(), Some(3000));
+        // ...and the merged whitener matches the cold full re-preprocess
+        // bitwise (2000 is a multiple of the 500-column chunk).
+        assert!(warm.whitening_matrix().max_abs_diff(cold.whitening_matrix()) == 0.0);
+        assert_eq!(warm.row_means(), cold.row_means());
+        // The refined unmixing still separates the true mixture (the
+        // bound is looser than the full-data fits': W is the optimum of
+        // the 1000-sample appended batch, so its sampling noise governs).
+        let perm = matmul(&warm.unmixing_matrix(), &data.mixing);
+        let d = amari_distance(&perm);
+        assert!(d < 0.1, "Amari distance {d}");
     }
 
     #[test]

@@ -151,7 +151,15 @@ pub fn solve_newton(
         w = relative_update(&w, &dir, alpha);
         directions.push(dir);
     }
-    SolveResult { w, trace, converged, iters, gradient_fallbacks: fallbacks, directions }
+    SolveResult {
+        w,
+        trace,
+        converged,
+        iters,
+        gradient_fallbacks: fallbacks,
+        directions,
+        memory: None,
+    }
 }
 
 #[cfg(test)]

@@ -197,6 +197,10 @@ pub struct SolveResult {
     pub gradient_fallbacks: usize,
     /// Directions used, in order (Fig. 1 reads these).
     pub directions: Vec<Mat>,
+    /// Final L-BFGS correction-pair memory for the algorithms that keep
+    /// one (`None` otherwise) — reusable via [`try_solve_warm`] to seed a
+    /// subsequent warm-started solve on grown data.
+    pub memory: Option<LbfgsMemory>,
 }
 
 /// Full ICA loss at `W`: data term from the backend plus `-log|det W|`.
@@ -232,6 +236,26 @@ pub fn try_solve<B: ComputeBackend + ?Sized>(
     w0: &Mat,
     cfg: &SolverConfig,
 ) -> Result<SolveResult, IcaError> {
+    try_solve_warm(backend, w0, cfg, None)
+}
+
+/// [`try_solve`] with a warm L-BFGS memory: the two-loop recursion starts
+/// from the correction pairs of a previous solve instead of empty — the
+/// solver-level half of warm-start refits ([`SolveResult::memory`] hands
+/// the pairs back out).
+///
+/// The memory is consulted only by the L-BFGS algorithms (others ignore
+/// it), and the standard safeguards still apply: the curvature condition
+/// gates every *new* pair, and any gradient fallback clears the history.
+/// Carried pairs describe the previous dataset's curvature, so this is
+/// an approximation — a good one when the data grew by a small appended
+/// batch, which is the intended use.
+pub fn try_solve_warm<B: ComputeBackend + ?Sized>(
+    backend: &mut B,
+    w0: &Mat,
+    cfg: &SolverConfig,
+    warm_memory: Option<LbfgsMemory>,
+) -> Result<SolveResult, IcaError> {
     let n = backend.n();
     if (w0.rows(), w0.cols()) != (n, n) {
         return Err(IcaError::DimensionMismatch {
@@ -246,7 +270,7 @@ pub fn try_solve<B: ComputeBackend + ?Sized>(
     cfg.validate()?;
     Ok(match cfg.algo {
         Algorithm::Infomax(ic) => solve_infomax(backend, w0, cfg, ic),
-        _ => solve_full_batch(backend, w0, cfg),
+        _ => solve_full_batch(backend, w0, cfg, warm_memory),
     })
 }
 
@@ -269,6 +293,7 @@ fn solve_full_batch<B: ComputeBackend + ?Sized>(
     backend: &mut B,
     w0: &Mat,
     cfg: &SolverConfig,
+    warm_memory: Option<LbfgsMemory>,
 ) -> SolveResult {
     let n = backend.n();
     debug_assert_eq!((w0.rows(), w0.cols()), (n, n));
@@ -282,7 +307,11 @@ fn solve_full_batch<B: ComputeBackend + ?Sized>(
         Algorithm::Infomax(_) => unreachable!(),
     };
     let mut memory = match cfg.algo {
-        Algorithm::Lbfgs { memory, .. } => Some(LbfgsMemory::new(memory)),
+        // A warm memory (carried from a previous solve) takes precedence
+        // over a fresh ring buffer of the configured size.
+        Algorithm::Lbfgs { memory, .. } => {
+            Some(warm_memory.unwrap_or_else(|| LbfgsMemory::new(memory)))
+        }
         _ => None,
     };
 
@@ -393,7 +422,7 @@ fn solve_full_batch<B: ComputeBackend + ?Sized>(
         }
     }
 
-    SolveResult { w, trace, converged, iters, gradient_fallbacks: fallbacks, directions }
+    SolveResult { w, trace, converged, iters, gradient_fallbacks: fallbacks, directions, memory }
 }
 
 /// Infomax: stochastic relative-gradient descent over mini-batches with
@@ -501,6 +530,7 @@ fn solve_infomax<B: ComputeBackend + ?Sized>(
         iters,
         gradient_fallbacks: 0,
         directions: Vec::new(),
+        memory: None,
     }
 }
 
@@ -684,6 +714,35 @@ mod tests {
             try_solve(&mut be, &Mat::eye(4), &bad_cfg),
             Err(IcaError::InvalidInput { .. })
         ));
+    }
+
+    /// Warm-starting from a converged solve's `w0` + memory must converge
+    /// immediately (0 iterations) and hand the memory back out; a fresh
+    /// cold solve from identity takes strictly more work.
+    #[test]
+    fn warm_solve_resumes_from_previous_memory() {
+        let (mut be, _) = laplace_problem(5, 1500, 33);
+        let cfg = SolverConfig::new(Algorithm::Lbfgs {
+            precond: Some(HessianApprox::H2),
+            memory: 7,
+        })
+        .with_tol(1e-7)
+        .with_max_iters(100);
+        let cold = try_solve(&mut be, &Mat::eye(5), &cfg).unwrap();
+        assert!(cold.converged);
+        assert!(cold.iters > 0);
+        let mem = cold.memory.clone().expect("L-BFGS solve carries a memory");
+        let warm = try_solve_warm(&mut be, &cold.w, &cfg, Some(mem)).unwrap();
+        assert!(warm.converged);
+        assert_eq!(warm.iters, 0, "already at the optimum");
+        assert!(warm.w.max_abs_diff(&cold.w) == 0.0);
+        assert!(warm.memory.is_some(), "memory handed back for chaining");
+        // Non-L-BFGS algorithms carry no memory.
+        let gd = SolverConfig::new(Algorithm::GradientDescent { oracle_ls: false })
+            .with_tol(1e-3)
+            .with_max_iters(5);
+        let r = try_solve(&mut be, &Mat::eye(5), &gd).unwrap();
+        assert!(r.memory.is_none());
     }
 
     #[test]

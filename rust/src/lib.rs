@@ -40,6 +40,11 @@
 //!
 //! - **Estimator** ([`estimator`]): `Picard` builder → [`preprocessing`]
 //!   (centering + whitening) → [`ica`] solvers → `IcaModel` artifact.
+//!   Fitted models serialize their sufficient statistics, so growing
+//!   recordings refit incrementally: [`estimator::Picard::warm_start`]
+//!   seeds the solver from a previous fit and
+//!   [`estimator::Picard::fit_append`] merges the stored moments with
+//!   one streaming pass over only the appended samples.
 //! - **Algorithms** ([`ica`]): the paper's optimization suite —
 //!   relative-gradient descent, Infomax SGD, the elementary quasi-Newton
 //!   method (Alg. 2) and (preconditioned) L-BFGS (Alg. 3) over the

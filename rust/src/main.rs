@@ -4,15 +4,18 @@
 //! [`IcaModel`]) and `fica apply` (run a saved model on new data);
 //! `fica experiment` regenerates the paper's figures.
 
-use faster_ica::backend::{ComputeBackend, NativeBackend};
+use faster_ica::backend::{ComputeBackend, NativeBackend, SweepKernel};
 use faster_ica::bench::backends as bench_backends;
+use faster_ica::bench::{compare as bench_compare, defaults as bench_defaults};
 use faster_ica::cli::{Args, SolveFlags, USAGE};
-use faster_ica::data::{convert_to, open_source, Format, DEFAULT_CHUNK_COLS};
-use faster_ica::estimator::IcaModel;
+use faster_ica::data::{
+    convert_to, open_source, read_dense, Format, MemSource, DEFAULT_CHUNK_COLS,
+};
+use faster_ica::estimator::{BackendChoice, IcaModel, Picard};
 use faster_ica::experiments::{self, ExperimentId};
 use faster_ica::linalg::Mat;
 use faster_ica::runtime::{default_artifact_dir, Engine, Registry, XlaBackend};
-use faster_ica::util::{read_matrix_json, write_matrix_json};
+use faster_ica::util::{read_matrix_json, write_matrix_json, Json};
 use std::rc::Rc;
 
 fn main() {
@@ -31,9 +34,11 @@ fn main() {
         }
         "info" => cmd_info(),
         "fit" => cmd_fit(&args, false),
+        "refit" => cmd_refit(&args),
         "apply" => cmd_apply(&args),
         "convert" => cmd_convert(&args),
         "bench" => cmd_bench(&args),
+        "smoke" => cmd_smoke(&args),
         "run" => {
             eprintln!(
                 "note: `fica run` is deprecated; use `fica fit` \
@@ -204,6 +209,115 @@ fn cmd_fit(args: &Args, legacy_run: bool) -> i32 {
     }
 }
 
+/// `fica refit --model prev.json --input appended.bin`: warm-start
+/// incremental refit — merge the model's stored moments with the appended
+/// samples, re-derive the whitener, and refine `W` from the previous fit.
+fn cmd_refit(args: &Args) -> i32 {
+    let Some(model_path) = args.get("model") else {
+        eprintln!("--model is required\n\n{USAGE}");
+        return 2;
+    };
+    let Some(input) = args.get("input") else {
+        eprintln!("--input is required (the appended samples)\n\n{USAGE}");
+        return 2;
+    };
+    let model = match IcaModel::load(model_path) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let mut flags = match SolveFlags::from_args(args) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            return 2;
+        }
+    };
+    // A refit must keep the model's whitening family; the flag default
+    // follows the model instead of the global sphering default (an
+    // explicit contradictory flag still fails, in fit_append).
+    if args.get("whitener").is_none() {
+        flags.whitener = model.whitener();
+    }
+    let format = match args.get("format") {
+        Some(f) => match Format::from_id(f) {
+            Some(f) => f,
+            None => {
+                eprintln!("unknown --format {f} (json|bin|csv)");
+                return 2;
+            }
+        },
+        None => Format::infer(input).unwrap_or(Format::Json),
+    };
+    let mut src = match open_source(input, format) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "refit: {} samples appended onto {} already fitted ({} signals) from {input} \
+         [{}] | algo {} | whitener {} | backend {}",
+        src.cols(),
+        model
+            .n_samples()
+            .map(|c| c.to_string())
+            .unwrap_or_else(|| "?".into()),
+        src.rows(),
+        format.id(),
+        flags.algo.id(),
+        flags.whitener.id(),
+        flags.backend.id()
+    );
+    let refitted = match flags.picard().warm_start(&model).fit_append(src.as_mut()) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("refit failed: {e}");
+            return 1;
+        }
+    };
+    let info = refitted.fit_info();
+    if args.has("trace") {
+        for r in &info.trace.records {
+            println!(
+                "iter {:>4}  t={:>9.4}s  |G|inf = {:>12.5e}  loss = {:.8}",
+                r.iter, r.time, r.grad_inf, r.loss
+            );
+        }
+    }
+    println!(
+        "{} after {} warm iterations (cold fit took {}; final |G|inf = {:.3e}, \
+         moments now cover {} samples)",
+        if info.converged { "converged" } else { "stopped" },
+        info.iters,
+        model.fit_info().iters,
+        info.final_grad_inf,
+        refitted
+            .n_samples()
+            .map(|c| c.to_string())
+            .unwrap_or_else(|| "?".into()),
+    );
+    if let Some(out) = args.get("model-out") {
+        match refitted.save(out) {
+            Ok(()) => println!("model saved to {out}"),
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        }
+    } else {
+        println!("(no --model-out: refitted model discarded)");
+    }
+    if info.converged {
+        0
+    } else {
+        1
+    }
+}
+
 fn cmd_apply(args: &Args) -> i32 {
     let Some(model_path) = args.get("model") else {
         eprintln!("--model is required\n\n{USAGE}");
@@ -334,13 +448,174 @@ fn cmd_bench(args: &Args) -> i32 {
         cfg.fit_iters, cfg.fit_sizes, cfg.fit_t
     );
     let fits = bench_backends::run_fits(&cfg);
-    let report = bench_backends::report_json(&cfg, &timings, &fits);
+    println!(
+        "bench: cold vs warm refits (tol {:.0e}) | N in {:?} | T = {} + {} appended",
+        bench_defaults::REFIT_TOL, cfg.fit_sizes, cfg.refit_t, cfg.refit_append
+    );
+    let refits = bench_backends::run_refits(&cfg);
+    let report = bench_backends::report_json(&cfg, &timings, &fits, &refits);
     if let Err(e) = bench_backends::write_report(&out, &report) {
         eprintln!("error: {e}");
         return 1;
     }
     println!("wrote {out}");
+    if let Some(base_path) = args.get("compare") {
+        let base = match std::fs::read_to_string(base_path)
+            .map_err(|e| format!("cannot read {base_path}: {e}"))
+            .and_then(|text| {
+                Json::parse(&text).map_err(|e| format!("{base_path}: {e}"))
+            }) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        };
+        let outcome = match bench_compare::compare_reports(&report, &base) {
+            Ok(o) => o,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        };
+        print!("{}", outcome.render());
+        if outcome.regressed() {
+            eprintln!("bench trajectory gate FAILED vs {base_path}");
+            return 1;
+        }
+        println!("bench trajectory gate passed vs {base_path}");
+    }
     0
+}
+
+/// `fica smoke --fixture tests/fixtures/tiny.bin`: the CI fixture flows —
+/// sharded, scalar-kernel, out-of-core, and warm-refit fits — driven by
+/// the shared `bench::defaults` constants so CI, tests, and local runs
+/// cannot drift apart on tolerances or chunk sizes.
+fn cmd_smoke(args: &Args) -> i32 {
+    let fixture = args.get_or("fixture", "tests/fixtures/tiny.bin");
+    let tol = bench_defaults::FIXTURE_TOL;
+    let chunk = bench_defaults::FIXTURE_CHUNK;
+    let workers = bench_defaults::FIXTURE_WORKERS;
+    let split = bench_defaults::FIXTURE_REFIT_SPLIT;
+    println!(
+        "smoke: fixture {fixture} | tol {tol:.0e} | chunk {chunk} | workers {workers} \
+         (bench::defaults)"
+    );
+    let check = |what: &str, result: Result<IcaModel, faster_ica::IcaError>| -> Option<IcaModel> {
+        match result {
+            Ok(m) if m.fit_info().converged => {
+                println!(
+                    "ok   {what}: converged in {} iterations (backend {})",
+                    m.fit_info().iters,
+                    m.fit_info().backend
+                );
+                Some(m)
+            }
+            Ok(m) => {
+                eprintln!("FAIL {what}: did not converge in {} iterations", m.fit_info().iters);
+                None
+            }
+            Err(e) => {
+                eprintln!("FAIL {what}: {e}");
+                None
+            }
+        }
+    };
+    let open = || match open_source(fixture, Format::Bin) {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("FAIL opening {fixture}: {e}");
+            None
+        }
+    };
+    let mut failed = false;
+    // 1. Sharded streamed fit.
+    if let Some(mut src) = open() {
+        let p = Picard::new()
+            .backend(BackendChoice::Sharded { workers })
+            .chunk_cols(chunk)
+            .tol(tol);
+        failed |= check("sharded fit", p.fit_source(src.as_mut())).is_none();
+    } else {
+        return 1;
+    }
+    // 2. Scalar-kernel (reference sweep) fit.
+    if let Some(mut src) = open() {
+        let p = Picard::new().kernel(SweepKernel::Scalar).chunk_cols(chunk).tol(tol);
+        failed |= check("scalar-kernel fit", p.fit_source(src.as_mut())).is_none();
+    } else {
+        failed = true;
+    }
+    // 3. Out-of-core fit (scratch must be cleaned up by RAII).
+    if let Some(mut src) = open() {
+        let mut p = Picard::new()
+            .out_of_core(true)
+            .backend(BackendChoice::Sharded { workers })
+            .chunk_cols(chunk)
+            .tol(tol);
+        if let Some(dir) = args.get("scratch-dir") {
+            p = p.scratch_dir(dir);
+        }
+        failed |= check("out-of-core fit", p.fit_source(src.as_mut())).is_none();
+    } else {
+        failed = true;
+    }
+    // 4. Warm refit: fit the first FIXTURE_REFIT_SPLIT samples, append
+    // the rest, and require strictly fewer warm iterations than a cold
+    // fit of the whole fixture — the PR's acceptance property.
+    if let Some(mut src) = open() {
+        let full = match read_dense(src.as_mut(), chunk) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("FAIL reading {fixture}: {e}");
+                return 1;
+            }
+        };
+        let (n, t) = (full.rows(), full.cols());
+        if split >= t {
+            eprintln!("FAIL fixture shape: {t} samples but refit split {split}");
+            return 1;
+        }
+        let base = Mat::from_fn(n, split, |i, j| full[(i, j)]);
+        let appended = Mat::from_fn(n, t - split, |i, j| full[(i, j + split)]);
+        let p = Picard::new().chunk_cols(chunk).tol(tol);
+        let cold = check("cold fit (full fixture)", p.fit_source(&mut MemSource::new(full)));
+        let m_base = check("base fit (first split)", p.fit_source(&mut MemSource::new(base)));
+        match (cold, m_base) {
+            (Some(cold), Some(m_base)) => {
+                let warm = check(
+                    "warm refit (appended samples)",
+                    p.warm_start(&m_base).fit_append(&mut MemSource::new(appended)),
+                );
+                match warm {
+                    Some(w) if w.fit_info().iters < cold.fit_info().iters => println!(
+                        "ok   refit iterations: warm {} < cold {}",
+                        w.fit_info().iters,
+                        cold.fit_info().iters
+                    ),
+                    Some(w) => {
+                        eprintln!(
+                            "FAIL refit iterations: warm {} !< cold {}",
+                            w.fit_info().iters,
+                            cold.fit_info().iters
+                        );
+                        failed = true;
+                    }
+                    None => failed = true,
+                }
+            }
+            _ => failed = true,
+        }
+    } else {
+        failed = true;
+    }
+    if failed {
+        1
+    } else {
+        println!("smoke: all fixture flows passed");
+        0
+    }
 }
 
 fn cmd_experiment(args: &Args) -> i32 {

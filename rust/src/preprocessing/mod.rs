@@ -13,8 +13,8 @@
 
 use crate::backend::{Pipeline, WorkerPool};
 use crate::data::{
-    check_complete, copy_columns, BinWriter, DataSource, ScratchFile, StreamingStats,
-    DEFAULT_CHUNK_COLS,
+    check_complete, copy_columns, BinWriter, DataSource, MomentSnapshot, ScratchFile,
+    StreamingStats, DEFAULT_CHUNK_COLS,
 };
 use crate::error::IcaError;
 use crate::linalg::{eigh, matmul, matmul_into, Mat};
@@ -102,6 +102,13 @@ pub struct Preprocessed {
     pub k: Mat,
     /// Per-row means removed from the raw data.
     pub means: Vec<f64>,
+    /// Sufficient statistics (raw moment sums) of everything the
+    /// whitener was derived from — serialized into the fitted model so
+    /// [`crate::estimator::Picard::fit_append`] can merge them with
+    /// appended samples later. The streamed paths carry the exact pass-1
+    /// sums; the batch path synthesizes an equivalent snapshot from the
+    /// computed mean and covariance (see [`preprocess`]).
+    pub moments: Option<MomentSnapshot>,
 }
 
 impl Preprocessed {
@@ -154,7 +161,19 @@ pub fn preprocess(x_raw: &Mat, whitener: Whitener) -> Result<Preprocessed, IcaEr
     let c = x.row_covariance();
     let k = whitening_from_cov(&c, whitener)?;
     let xw = matmul(&k, &x);
-    Ok(Preprocessed { x: WhitenedData::InMemory(xw), k, means })
+    // Synthesize mergeable moment sums from (μ, C, T) without an extra
+    // O(N²T) pass: pivoting on μ itself makes the shifted first-order
+    // sum exactly zero and the second-order sum T·C. `means()` then
+    // reproduces μ bitwise and `covariance()` reproduces C to one
+    // rounding of the T·C/T roundtrip — the streamed paths carry their
+    // exact pass-1 sums instead.
+    let moments = Some(MomentSnapshot {
+        count: x_raw.cols(),
+        pivot: means.clone(),
+        sum: vec![0.0; x_raw.rows()],
+        outer: c.scale(x_raw.cols() as f64),
+    });
+    Ok(Preprocessed { x: WhitenedData::InMemory(xw), k, means, moments })
 }
 
 /// Build the whitening matrix `K` from a covariance matrix — the shared
@@ -332,11 +351,52 @@ pub fn preprocess_source_with(
     whitener: Whitener,
     opts: &StreamOptions,
 ) -> Result<Preprocessed, IcaError> {
+    preprocess_source_seeded(src, whitener, opts, None)
+}
+
+/// [`preprocess_source_with`], optionally seeded with the moment sums of
+/// a previous fit — the **moment merge** behind warm-start refits
+/// ([`crate::estimator::Picard::fit_append`]).
+///
+/// With `seed = Some(stats)`, pass 1 folds only *this source's* chunks
+/// into the restored accumulator, so the derived means and whitener `K`
+/// reflect the union of the stored recording and the appended samples
+/// while the streaming passes touch only the ΔT appended columns —
+/// O(N²·ΔT) instead of O(N²·(T+ΔT)). Pass 2 centers and whitens only the
+/// appended samples (with the *merged* μ and `K`), which is exactly what
+/// the incremental solve consumes. The pooled pass keeps PR 3's
+/// guarantee: partials are absorbed in chunk order, so the merged sums
+/// are bitwise-independent of the worker count, and — when the stored
+/// sample count is a multiple of `chunk_cols` — bitwise-identical to one
+/// uninterrupted pass over the concatenated recording.
+pub fn preprocess_source_seeded(
+    src: &mut dyn DataSource,
+    whitener: Whitener,
+    opts: &StreamOptions,
+    seed: Option<StreamingStats>,
+) -> Result<Preprocessed, IcaError> {
     let (n, t) = (src.rows(), src.cols());
-    if n == 0 || t < 2 {
-        return Err(IcaError::invalid_input(format!(
-            "data must have at least 1 row and 2 columns, got {n}x{t}"
-        )));
+    match &seed {
+        None => {
+            if n == 0 || t < 2 {
+                return Err(IcaError::invalid_input(format!(
+                    "data must have at least 1 row and 2 columns, got {n}x{t}"
+                )));
+            }
+        }
+        Some(s) => {
+            if s.n() != n {
+                return Err(IcaError::invalid_input(format!(
+                    "seeded moments cover {} signals but the source yields {n}",
+                    s.n()
+                )));
+            }
+            if t == 0 {
+                return Err(IcaError::invalid_input(
+                    "appended source has no samples",
+                ));
+            }
+        }
     }
     let chunk_cols = opts.chunk_cols.max(1);
     let pool = (opts.workers > 1).then(|| WorkerPool::new(opts.workers));
@@ -345,7 +405,8 @@ pub fn preprocess_source_with(
     // sources without that guarantee (e.g. MemSource) get scanned here.
     let check_finite = !src.validates_finite();
     let label = src.label();
-    let mut stats = StreamingStats::new(n);
+    let mut stats = seed.unwrap_or_else(|| StreamingStats::new(n));
+    let base_count = stats.count();
     src.reset()?;
     match &pool {
         None => {
@@ -384,10 +445,11 @@ pub fn preprocess_source_with(
             }
         }
     }
-    check_complete(stats.count(), t, src)?;
+    check_complete(stats.count() - base_count, t, src)?;
     let means = stats.means()?;
     let c = stats.covariance()?;
     let k = whitening_from_cov(&c, whitener)?;
+    let moments = stats.snapshot();
 
     // Pass 2: center + whiten chunk by chunk into the sink. The scratch
     // file (if any) is guarded by an RAII [`ScratchFile`], so an error
@@ -439,7 +501,7 @@ pub fn preprocess_source_with(
         }
     }
     let x = sink.finish(n, t, src)?;
-    Ok(Preprocessed { x, k, means })
+    Ok(Preprocessed { x, k, means, moments })
 }
 
 fn check_rows(chunk: &Mat, n: usize, src: &dyn DataSource) -> Result<(), IcaError> {
@@ -707,6 +769,78 @@ mod tests {
             );
             assert_eq!(p.means, serial.means, "workers {workers}");
         }
+    }
+
+    /// The seeded (moment-merge) pass: accumulating a base recording,
+    /// snapshotting, and merging an appended suffix must reproduce the
+    /// uninterrupted full-stream preprocessing — bitwise when the base
+    /// length is a multiple of the chunk size, for any worker count —
+    /// and pass 2 must whiten exactly the appended columns with the
+    /// merged μ/K.
+    #[test]
+    fn seeded_pass_merges_moments_bitwise_on_aligned_chunks() {
+        let x = correlated_data(4, 1000, 30);
+        let chunk = 125; // divides both the 750-column base and 1000
+        let base = Mat::from_fn(4, 750, |i, j| x[(i, j)]);
+        let appended = Mat::from_fn(4, 250, |i, j| x[(i, j + 750)]);
+        let full = preprocess_source(
+            &mut crate::data::MemSource::new(x.clone()),
+            Whitener::Sphering,
+            chunk,
+        )
+        .unwrap();
+        let base_pre = preprocess_source(
+            &mut crate::data::MemSource::new(base),
+            Whitener::Sphering,
+            chunk,
+        )
+        .unwrap();
+        let snap = base_pre.moments.clone().expect("base moments");
+        for workers in [1usize, 3] {
+            let seed = StreamingStats::from_snapshot(snap.clone()).unwrap();
+            let opts = StreamOptions { chunk_cols: chunk, workers, ..StreamOptions::default() };
+            let mut src = crate::data::MemSource::new(appended.clone());
+            let merged =
+                preprocess_source_seeded(&mut src, Whitener::Sphering, &opts, Some(seed))
+                    .unwrap();
+            assert_eq!(merged.means, full.means, "workers {workers}: means");
+            assert!(merged.k.max_abs_diff(&full.k) == 0.0, "workers {workers}: K");
+            assert_eq!(merged.moments, full.moments, "workers {workers}: merged sums");
+            // Pass 2 whitened exactly the appended suffix, bitwise equal
+            // to the corresponding columns of the full-stream output.
+            let suffix = Mat::from_fn(4, 250, |i, j| full.dense()[(i, j + 750)]);
+            assert!(
+                merged.dense().max_abs_diff(&suffix) == 0.0,
+                "workers {workers}: whitened suffix"
+            );
+        }
+    }
+
+    #[test]
+    fn seeded_pass_fails_closed() {
+        let x = correlated_data(3, 120, 31);
+        let pre = preprocess_source(
+            &mut crate::data::MemSource::new(x.clone()),
+            Whitener::Sphering,
+            32,
+        )
+        .unwrap();
+        let snap = pre.moments.clone().unwrap();
+        let opts = StreamOptions::default();
+        // Appended source with a different signal count.
+        let seed = StreamingStats::from_snapshot(snap.clone()).unwrap();
+        let mut src = crate::data::MemSource::new(Mat::zeros(4, 10));
+        assert!(matches!(
+            preprocess_source_seeded(&mut src, Whitener::Sphering, &opts, Some(seed)),
+            Err(IcaError::InvalidInput { .. })
+        ));
+        // Empty appended source.
+        let seed = StreamingStats::from_snapshot(snap).unwrap();
+        let mut src = crate::data::MemSource::new(Mat::zeros(3, 0));
+        assert!(matches!(
+            preprocess_source_seeded(&mut src, Whitener::Sphering, &opts, Some(seed)),
+            Err(IcaError::InvalidInput { .. })
+        ));
     }
 
     /// Out-of-core pass 2 parks bit-identical whitened chunks in a FICA1

@@ -1,5 +1,8 @@
-//! Fail-fast stand-ins for the PJRT engine when the `pjrt` cargo feature
-//! is disabled (the `xla` bindings crate is not in the offline registry).
+//! Fail-fast stand-ins for the PJRT engine when the real bindings are
+//! not compiled in — i.e. unless BOTH the `pjrt` cargo feature and the
+//! `fica_pjrt_bindings` cfg are set (the `xla` bindings crate is not in
+//! the offline registry; see `Cargo.toml`). The stubs keep
+//! `cargo check --features pjrt` compiling in dependency-free builds.
 //!
 //! [`Engine::new`] always returns [`IcaError::Runtime`], so every caller
 //! that probes for the XLA runtime — `BackendChoice::Auto`, the CLI's
@@ -19,9 +22,10 @@ use std::rc::Rc;
 
 fn unavailable() -> IcaError {
     IcaError::runtime(
-        "PJRT runtime not built: enable the `pjrt` cargo feature (requires the \
-         external `xla` bindings crate); use the native backend, or `auto` \
-         to fall back automatically",
+        "PJRT runtime not built: enable the `pjrt` cargo feature and build with \
+         RUSTFLAGS=\"--cfg fica_pjrt_bindings\" (requires the external `xla` \
+         bindings crate); use the native backend, or `auto` to fall back \
+         automatically",
     )
 }
 

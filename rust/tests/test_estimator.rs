@@ -129,7 +129,7 @@ fn malformed_inputs_yield_typed_errors_not_panics() {
         String::new(),
         "{".to_string(),
         "[1,2,3]".to_string(),
-        good.replace("fica.ica_model/v1", "other/v1"),
+        good.replace("fica.ica_model/v2", "other/v2"),
         good.replace("\"plbfgs-h2\"", "\"fastica\""),
         good.replace("\"sphering\"", "\"mystery\""),
         good.replace("\"n_features\":4", "\"n_features\":40"),

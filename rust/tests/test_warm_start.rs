@@ -1,0 +1,254 @@
+//! Integration tests for the warm-start incremental-refit subsystem
+//! (ISSUE 5):
+//!
+//! - a warm `fit_append` on the fixture's appended samples converges in
+//!   **strictly fewer** solver iterations than a cold fit over the
+//!   concatenated recording (the acceptance property),
+//! - the moment-merge preprocessing matches a full two-pass re-preprocess
+//!   bitwise for chunk-aligned appends (any worker count) and to ≤ 1e-12
+//!   for misaligned chunking,
+//! - warm-starting with zero appended samples reproduces the cold-fit
+//!   model bitwise,
+//! - a checked-in schema-v1 model file still loads, and `fit_append` on
+//!   it is a typed error (no stored moments), never a panic.
+//!
+//! Tolerances and chunk sizes come from `bench::defaults` — the same
+//! constants `fica smoke` drives in CI, so the two cannot drift.
+
+use faster_ica::bench::defaults;
+use faster_ica::data::{read_dense, BinSource, MemSource};
+use faster_ica::error::IcaError;
+use faster_ica::estimator::{BackendChoice, IcaModel, Picard};
+use faster_ica::linalg::Mat;
+
+const FIXTURE: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/tiny.bin");
+const MODEL_V1: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/model_v1.json");
+
+/// Load the whole fixture into memory (it is tiny: N=3, T=1000).
+fn fixture_matrix() -> Mat {
+    let mut src = BinSource::open(FIXTURE).expect("fixture present");
+    read_dense(&mut src, defaults::FIXTURE_CHUNK).expect("fixture readable")
+}
+
+fn split_fixture() -> (Mat, Mat, Mat) {
+    let full = fixture_matrix();
+    let (n, t) = (full.rows(), full.cols());
+    let split = defaults::FIXTURE_REFIT_SPLIT;
+    assert!(split < t, "refit split must leave appended samples");
+    let base = Mat::from_fn(n, split, |i, j| full[(i, j)]);
+    let appended = Mat::from_fn(n, t - split, |i, j| full[(i, j + split)]);
+    (full, base, appended)
+}
+
+fn fixture_picard() -> Picard {
+    Picard::new().chunk_cols(defaults::FIXTURE_CHUNK).tol(defaults::FIXTURE_TOL)
+}
+
+/// Acceptance: warm refit on the fixture with appended samples converges
+/// in strictly fewer solver iterations than a cold fit on the
+/// concatenated data, and its merged whitener/means equal the cold fit's
+/// bitwise (the base length is a multiple of the chunk size).
+#[test]
+fn warm_refit_beats_cold_fit_on_the_fixture() {
+    let (full, base, appended) = split_fixture();
+    let p = fixture_picard();
+    let cold = p.fit_source(&mut MemSource::new(full)).expect("cold fit");
+    assert!(cold.fit_info().converged, "fixture must converge cold");
+    let m_base = p.fit_source(&mut MemSource::new(base)).expect("base fit");
+    assert!(m_base.fit_info().converged);
+    let warm = p
+        .warm_start(&m_base)
+        .fit_append(&mut MemSource::new(appended))
+        .expect("warm refit");
+    assert!(warm.fit_info().converged);
+    assert!(
+        warm.fit_info().iters < cold.fit_info().iters,
+        "warm refit must take strictly fewer iterations: warm {} vs cold {}",
+        warm.fit_info().iters,
+        cold.fit_info().iters
+    );
+    // The moment merge reproduced the full re-preprocess bitwise.
+    assert!(warm.whitening_matrix().max_abs_diff(cold.whitening_matrix()) == 0.0);
+    assert_eq!(warm.row_means(), cold.row_means());
+    // The merged moments now cover the whole recording and chain onward.
+    assert_eq!(warm.n_samples(), Some(1000));
+}
+
+/// The moment merge is bitwise worker-count-independent (PR 3's pooled
+/// absorb-in-chunk-order guarantee carries over to the seeded pass).
+#[test]
+fn moment_merge_is_worker_count_independent() {
+    let (_, base, appended) = split_fixture();
+    let m_base = fixture_picard()
+        .fit_source(&mut MemSource::new(base))
+        .expect("base fit");
+    let serial = fixture_picard()
+        .warm_start(&m_base)
+        .fit_append(&mut MemSource::new(appended.clone()))
+        .expect("serial refit");
+    for workers in [2usize, 4] {
+        let pooled = fixture_picard()
+            .backend(BackendChoice::Sharded { workers })
+            .warm_start(&m_base)
+            .fit_append(&mut MemSource::new(appended.clone()))
+            .expect("pooled refit");
+        assert!(
+            pooled.whitening_matrix().max_abs_diff(serial.whitening_matrix()) == 0.0,
+            "workers {workers}: merged K must be bitwise worker-independent"
+        );
+        assert_eq!(pooled.row_means(), serial.row_means(), "workers {workers}");
+        assert_eq!(
+            pooled.moments().unwrap(),
+            serial.moments().unwrap(),
+            "workers {workers}: merged sums"
+        );
+    }
+}
+
+/// With chunk boundaries that do NOT align with the split, the merged
+/// preprocessing legitimately re-associates — but stays within 1e-12 of
+/// the full two-pass re-preprocess.
+#[test]
+fn moment_merge_matches_full_repreprocess_when_misaligned() {
+    let (full, base, appended) = split_fixture();
+    // 333 divides neither 750 nor 1000.
+    let p = Picard::new().chunk_cols(333).tol(defaults::FIXTURE_TOL);
+    let cold = p.fit_source(&mut MemSource::new(full)).expect("cold fit");
+    let m_base = p.fit_source(&mut MemSource::new(base)).expect("base fit");
+    let warm = p
+        .warm_start(&m_base)
+        .fit_append(&mut MemSource::new(appended))
+        .expect("warm refit");
+    let dk = warm.whitening_matrix().max_abs_diff(cold.whitening_matrix());
+    assert!(dk <= 1e-12, "K deviates by {dk}");
+    for (a, b) in warm.row_means().iter().zip(cold.row_means()) {
+        assert!((a - b).abs() <= 1e-12, "means deviate: {a} vs {b}");
+    }
+}
+
+/// Warm-starting a fit of the *same* data reproduces the cold-fit model
+/// bitwise: the solver starts at the converged `W`, sees a gradient
+/// already below tol, and performs zero iterations; preprocessing is
+/// untouched by the warm start.
+#[test]
+fn warm_start_on_same_data_reproduces_cold_fit_bitwise() {
+    let full = fixture_matrix();
+    let p = fixture_picard();
+    let cold = p.fit_source(&mut MemSource::new(full.clone())).expect("cold fit");
+    assert!(cold.fit_info().converged);
+    let warm = p
+        .warm_start(&cold)
+        .fit_source(&mut MemSource::new(full.clone()))
+        .expect("warm fit");
+    assert_eq!(warm.fit_info().iters, 0, "already converged at w0");
+    assert!(warm.w().max_abs_diff(cold.w()) == 0.0);
+    assert!(warm.whitening_matrix().max_abs_diff(cold.whitening_matrix()) == 0.0);
+    assert_eq!(warm.row_means(), cold.row_means());
+    let y_cold = cold.transform(&full).unwrap();
+    let y_warm = warm.transform(&full).unwrap();
+    assert!(y_cold.max_abs_diff(&y_warm) == 0.0, "transforms must agree bitwise");
+}
+
+/// Zero appended samples: `fit_append` is a bitwise no-op on the model
+/// parameters (and not an error).
+#[test]
+fn zero_appended_samples_reproduce_the_model_bitwise() {
+    let (_, base, _) = split_fixture();
+    let m_base = fixture_picard()
+        .fit_source(&mut MemSource::new(base))
+        .expect("base fit");
+    let n = m_base.n_features();
+    let same = fixture_picard()
+        .warm_start(&m_base)
+        .fit_append(&mut MemSource::new(Mat::zeros(n, 0)))
+        .expect("zero-append refit");
+    assert!(same.w().max_abs_diff(m_base.w()) == 0.0);
+    assert!(same.whitening_matrix().max_abs_diff(m_base.whitening_matrix()) == 0.0);
+    assert_eq!(same.row_means(), m_base.row_means());
+    assert_eq!(same.moments(), m_base.moments());
+    assert_eq!(same.to_json_string().unwrap(), m_base.to_json_string().unwrap());
+}
+
+/// Refits chain: appending in two half-batches merges to the same sums
+/// as appending everything at once (chunk-aligned halves).
+#[test]
+fn chained_refits_merge_like_a_single_append() {
+    let (_, base, appended) = split_fixture();
+    let half = appended.cols() / 2;
+    // The test chunks everything by `half`, so the base length and every
+    // append land on chunk boundaries and the merges are bitwise.
+    assert_eq!(defaults::FIXTURE_REFIT_SPLIT % half, 0, "base must stay chunk-aligned");
+    let first = Mat::from_fn(appended.rows(), half, |i, j| appended[(i, j)]);
+    let second =
+        Mat::from_fn(appended.rows(), appended.cols() - half, |i, j| appended[(i, j + half)]);
+    let p = Picard::new().chunk_cols(half).tol(defaults::FIXTURE_TOL);
+    let m_base = p.fit_source(&mut MemSource::new(base)).expect("base fit");
+    let once = p
+        .clone()
+        .warm_start(&m_base)
+        .fit_append(&mut MemSource::new(appended.clone()))
+        .expect("single append");
+    let step1 = p
+        .clone()
+        .warm_start(&m_base)
+        .fit_append(&mut MemSource::new(first))
+        .expect("first half");
+    let step2 = p
+        .warm_start(&step1)
+        .fit_append(&mut MemSource::new(second))
+        .expect("second half");
+    assert_eq!(step2.n_samples(), once.n_samples());
+    assert_eq!(step2.moments(), once.moments());
+    assert!(step2.whitening_matrix().max_abs_diff(once.whitening_matrix()) == 0.0);
+}
+
+/// Model-schema compatibility: the checked-in v1 JSON must load (full
+/// transform capability), carry no moments, and turn `fit_append` into a
+/// typed error — not a panic.
+#[test]
+fn v1_model_fixture_loads_without_moments() {
+    let model = IcaModel::load(MODEL_V1).expect("v1 fixture must keep loading");
+    assert_eq!(model.n_features(), 2);
+    assert_eq!(model.whitener().id(), "sphering");
+    assert!(model.moments().is_none(), "v1 predates stored moments");
+    assert_eq!(model.n_samples(), None);
+    // It still transforms.
+    let y = model.transform(&Mat::from_fn(2, 5, |i, j| (i + j) as f64)).unwrap();
+    assert_eq!((y.rows(), y.cols()), (2, 5));
+    // Refit is refused with a typed error.
+    let mut src = MemSource::new(Mat::from_fn(2, 50, |i, j| (i as f64) - 0.01 * j as f64));
+    match Picard::new().warm_start(&model).fit_append(&mut src) {
+        Err(IcaError::InvalidModel { reason }) => {
+            assert!(reason.contains("v1") || reason.contains("statistics"), "{reason}");
+        }
+        other => panic!("expected InvalidModel, got {other:?}"),
+    }
+    // Re-saving upgrades the schema to v2 (and stays loadable).
+    let dir = std::env::temp_dir().join("fica_warm_start_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("upgraded.json");
+    model.save(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.contains("fica.ica_model/v2"));
+    IcaModel::load(&path).expect("upgraded model loads");
+}
+
+/// A refitted model survives the JSON roundtrip with its merged moments
+/// intact, so `fica refit` chains across processes.
+#[test]
+fn refitted_model_roundtrips_with_merged_moments() {
+    let (_, base, appended) = split_fixture();
+    let p = fixture_picard();
+    let m_base = p.fit_source(&mut MemSource::new(base)).expect("base fit");
+    let warm = p
+        .warm_start(&m_base)
+        .fit_append(&mut MemSource::new(appended))
+        .expect("warm refit");
+    let json = warm.to_json_string().unwrap();
+    assert!(json.contains("fica.ica_model/v2"));
+    let back = IcaModel::from_json_str(&json).unwrap();
+    assert_eq!(back.moments(), warm.moments());
+    assert_eq!(back.n_samples(), Some(1000));
+    // Byte-stable: serialize → parse → serialize is the identity.
+    assert_eq!(back.to_json_string().unwrap(), json);
+}
