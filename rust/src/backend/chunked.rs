@@ -30,7 +30,7 @@ use super::{ComputeBackend, IcaStats, StatsLevel, SweepKernel};
 use crate::data::{DataSource, ScratchFile};
 use crate::error::IcaError;
 use crate::linalg::Mat;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, PoisonError};
 
 /// One worker's reusable sweep workspaces. Chunk jobs are dispatched to
 /// the pool round-robin, so workspace `w` is only ever touched by pool
@@ -172,6 +172,7 @@ impl ChunkedBackend {
                 Some(a) => a.combine(p),
             });
         }
+        // fica-lint: allow(no-panic) — the ComputeBackend signature is infallible and the scratch file was validated at construction: its vanishing mid-solve is an environment failure with no recovery path (see module docs)
         fn die(e: IcaError) -> ! {
             panic!("out-of-core scratch read failed mid-solve: {e}")
         }
@@ -191,6 +192,7 @@ impl ChunkedBackend {
             let want = self.chunk_cols.min(end - lo);
             let chunk = match self.src.next_chunk(want) {
                 Ok(Some(c)) => c,
+                // fica-lint: allow(no-panic) — same contract as `die`: a scratch file that ends early mid-solve cannot be surfaced through the infallible ComputeBackend trait
                 Ok(None) => panic!(
                     "out-of-core scratch ended at sample {lo} of {} mid-solve",
                     self.t
@@ -203,16 +205,19 @@ impl ChunkedBackend {
             let ws = Arc::clone(&self.workspaces[dispatched % self.workspaces.len()]);
             dispatched += 1;
             if let Some(p) = pipe.submit(move || {
-                let mut ws = ws.lock().expect("chunk workspace poisoned");
+                // Workspace buffers are overwritten from scratch by every
+                // chunk job, so a poisoned lock still holds usable memory.
+                let mut ws = ws.lock().unwrap_or_else(PoisonError::into_inner);
                 job(chunk, lo, &mut ws)
             }) {
                 absorb(&mut acc, p);
             }
-            lo += cols;
+            lo += cols; // fica-lint: allow(float-accum) — usize column cursor, not a float reduction
         }
         while let Some(p) = pipe.next_result() {
             absorb(&mut acc, p);
         }
+        // fica-lint: allow(no-panic) — `range` is validated non-empty above (debug_assert start < end), so at least one chunk was dispatched and absorbed
         acc.expect("at least one chunk dispatched")
     }
 }
@@ -267,7 +272,7 @@ impl ComputeBackend for ChunkedBackend {
 
     fn grad_batch(&mut self, w: &Mat, lo: usize, hi: usize) -> Mat {
         let n = self.n;
-        assert!(lo < hi && hi <= self.t, "bad batch range [{lo},{hi})");
+        debug_assert!(lo < hi && hi <= self.t, "bad batch range [{lo},{hi})");
         let w = Arc::new(w.clone());
         let kernel = self.kernel;
         let p = self.round(Some((lo, hi)), move |chunk, chunk_lo, ws| {

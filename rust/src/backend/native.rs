@@ -112,7 +112,7 @@ impl ComputeBackend for NativeBackend {
 
     fn grad_batch(&mut self, w: &Mat, lo: usize, hi: usize) -> Mat {
         let n = self.n();
-        assert!(lo < hi && hi <= self.t(), "bad batch range [{lo},{hi})");
+        debug_assert!(lo < hi && hi <= self.t(), "bad batch range [{lo},{hi})");
         let tb = hi - lo;
         let mut g = sweep::batch_grad_raw(
             w,

@@ -35,7 +35,8 @@ impl<R> Ticket<R> {
     /// Panics if the worker died (a job panicked) — pool jobs are pure
     /// numeric kernels, so that is a bug, not a user error.
     pub fn wait(self) -> R {
-        self.0.recv().expect("worker pool job vanished (worker died?)")
+        // fica-lint: allow(no-panic) — a dropped result sender means the worker thread panicked mid-kernel; the pool is unrecoverable and the message makes the failure diagnosable
+        self.0.recv().expect("worker panicked — pool is unrecoverable")
     }
 }
 
@@ -74,9 +75,10 @@ impl WorkerPool {
             // A dropped Ticket just discards the result.
             let _ = rtx.send(job());
         });
+        // fica-lint: allow(no-panic) — the command channel only closes when a worker thread panicked out of its loop; the pool is unrecoverable and the message makes the failure diagnosable
         self.tx[slot % self.tx.len()]
             .send(task)
-            .expect("worker pool hung up");
+            .expect("worker panicked — pool is unrecoverable");
         Ticket(rrx)
     }
 }
@@ -113,7 +115,7 @@ impl<'a, R: Send + 'static> Pipeline<'a, R> {
     /// (results surface strictly in submission order).
     pub fn submit(&mut self, job: impl FnOnce() -> R + Send + 'static) -> Option<R> {
         let done = if self.pending.len() > self.pool.workers() {
-            Some(self.pending.pop_front().expect("non-empty pending queue").wait())
+            self.pending.pop_front().map(Ticket::wait)
         } else {
             None
         };

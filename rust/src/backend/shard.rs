@@ -24,6 +24,19 @@ pub(super) struct Partial {
 }
 
 impl Partial {
+    /// The absorbing element of [`Partial::combine`]: zero loss and
+    /// count, every field in its "not requested" shape.
+    pub(super) fn empty() -> Partial {
+        Partial {
+            loss: 0.0,
+            g: Mat::zeros(0, 0),
+            h1: Vec::new(),
+            sigma2: Vec::new(),
+            h2: Mat::zeros(0, 0),
+            count: 0,
+        }
+    }
+
     pub(super) fn combine(mut self, other: Partial) -> Partial {
         self.loss += other.loss;
         self.count += other.count;
@@ -64,7 +77,6 @@ fn combine_vec(a: Vec<f64>, b: Vec<f64>) -> Vec<f64> {
 /// Deterministic pairwise tree reduction over shard-ordered partials:
 /// `[p0, p1, p2, p3] → [p0+p1, p2+p3] → [(p0+p1)+(p2+p3)]`.
 pub(super) fn tree_reduce(mut parts: Vec<Partial>) -> Partial {
-    assert!(!parts.is_empty());
     while parts.len() > 1 {
         let mut next = Vec::with_capacity(parts.len().div_ceil(2));
         let mut it = parts.into_iter();
@@ -76,9 +88,15 @@ pub(super) fn tree_reduce(mut parts: Vec<Partial>) -> Partial {
         }
         parts = next;
     }
-    parts.pop().unwrap()
+    // Zero shards (never produced by the backends) reduce to the
+    // absorbing empty partial instead of panicking.
+    match parts.pop() {
+        Some(p) => p,
+        None => Partial::empty(),
+    }
 }
 
+// fica-lint: allow(float-accum) — serial per-row sum in index order: this is the single fixed-order reduction every backend shares, the bitwise contract itself
 pub(super) fn row_sums(m: &Mat) -> Vec<f64> {
     (0..m.rows()).map(|i| m.row(i).iter().sum::<f64>()).collect()
 }

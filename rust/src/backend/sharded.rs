@@ -24,7 +24,7 @@ use super::pool::{Ticket, WorkerPool};
 use super::shard::{finalize_grad_batch, finalize_stats, tree_reduce, Partial, Shard};
 use super::{ComputeBackend, IcaStats, StatsLevel, SweepKernel};
 use crate::linalg::Mat;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, PoisonError};
 
 /// Multithreaded [`ComputeBackend`] over contiguous T-axis shards.
 pub struct ShardedBackend {
@@ -48,9 +48,8 @@ impl ShardedBackend {
     /// Like [`ShardedBackend::new`] with an explicit sweep kernel; every
     /// shard job dispatches this kernel.
     pub fn with_kernel(x: Mat, workers: usize, kernel: SweepKernel) -> Self {
-        assert!(workers >= 1, "sharded backend needs at least 1 worker");
         let (n, t) = (x.rows(), x.cols());
-        let workers = workers.min(t.max(1));
+        let workers = workers.clamp(1, t.max(1));
         let mut shards = Vec::with_capacity(workers);
         for s in 0..workers {
             let lo = s * t / workers;
@@ -83,7 +82,9 @@ impl ShardedBackend {
                 let shard = Arc::clone(shard);
                 let job = Arc::clone(&job);
                 self.pool.submit(s, move || {
-                    let mut shard = shard.lock().expect("shard lock poisoned");
+                    // Shard workspaces are overwritten by every job, so a
+                    // poisoned lock still wraps a usable shard.
+                    let mut shard = shard.lock().unwrap_or_else(PoisonError::into_inner);
                     job(&mut shard)
                 })
             })
@@ -118,7 +119,7 @@ impl ComputeBackend for ShardedBackend {
 
     fn grad_batch(&mut self, w: &Mat, lo: usize, hi: usize) -> Mat {
         let n = self.n;
-        assert!(lo < hi && hi <= self.t, "bad batch range [{lo},{hi})");
+        debug_assert!(lo < hi && hi <= self.t, "bad batch range [{lo},{hi})");
         let w = w.clone();
         let p = self.round(move |shard| shard.grad_batch_partial(&w, lo, hi));
         finalize_grad_batch(p, n, lo, hi)

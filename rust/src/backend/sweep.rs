@@ -34,6 +34,7 @@ use crate::linalg::{matmul_a_bt_window_into, matmul_window_into, Mat};
 /// With `e = exp(-2|u|)`, `tanh(|u|) = (1-e)/(1+e)` and
 /// `log cosh u = |u| + ln(1+e) - ln 2` (`u = y/2`). Fills `psi` and
 /// returns the **unnormalized** loss sum `Σ 2 log cosh(y/2)`.
+// fica-lint: allow(float-accum) — sanctioned sweep accumulator: the scalar kernel is contractually a single accumulator in element order, the vector kernel sums per-row fold_lanes results in row order; both orders are fixed and worker-count-independent
 pub(super) fn loss_psi_sweep(y: &Mat, psi: &mut Mat, kernel: SweepKernel) -> f64 {
     match kernel {
         // One accumulator across the whole matrix, in element order —
@@ -65,6 +66,7 @@ pub(super) fn loss_psi_sweep(y: &Mat, psi: &mut Mat, kernel: SweepKernel) -> f64
     }
 }
 
+// fica-lint: allow(float-accum) — sanctioned sweep accumulator: the scalar kernel is contractually a single accumulator in element order, the vector kernel sums per-row fold_lanes results in row order; both orders are fixed and worker-count-independent
 fn loss_psi_row_vector(yrow: &[f64], psirow: &mut [f64]) -> f64 {
     let mut acc = [0.0f64; LANES];
     let split = (yrow.len() / LANES) * LANES;
@@ -112,6 +114,7 @@ fn psi_from_exp(e: f64, u: f64) -> f64 {
 /// silently drop accumulators.
 #[inline(always)]
 fn fold_lanes(acc: &[f64; LANES]) -> f64 {
+    // fica-lint: allow(no-panic) — compile-time const assertion: it can only ever fail the build, never a run
     const { assert!(LANES.is_power_of_two()) };
     let mut buf = *acc;
     let mut n = LANES;
@@ -151,6 +154,7 @@ pub(super) fn psip_ysq_sweep(y: &Mat, psi: &Mat, psip: &mut Mat, ysq: &mut Mat) 
 
 /// Unnormalized loss sum `Σ 2 log cosh(y/2)` over `Y` (line-search probe;
 /// no ψ needed).
+// fica-lint: allow(float-accum) — sanctioned sweep accumulator: the scalar kernel is contractually a single accumulator in element order, the vector kernel sums per-row fold_lanes results in row order; both orders are fixed and worker-count-independent
 pub(super) fn loss_sum(y: &Mat, kernel: SweepKernel) -> f64 {
     match kernel {
         // Single accumulator in element order (historical arithmetic).
@@ -175,6 +179,7 @@ pub(super) fn loss_sum(y: &Mat, kernel: SweepKernel) -> f64 {
     }
 }
 
+// fica-lint: allow(float-accum) — sanctioned sweep accumulator: the scalar kernel is contractually a single accumulator in element order, the vector kernel sums per-row fold_lanes results in row order; both orders are fixed and worker-count-independent
 fn loss_row_vector(yrow: &[f64]) -> f64 {
     let mut acc = [0.0f64; LANES];
     let split = (yrow.len() / LANES) * LANES;

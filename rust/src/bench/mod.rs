@@ -30,7 +30,7 @@ impl Measurement {
     /// counts).
     pub fn median(&self) -> f64 {
         let mut s = self.samples.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.sort_by(f64::total_cmp);
         let n = s.len();
         if n % 2 == 1 {
             s[n / 2]

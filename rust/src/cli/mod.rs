@@ -7,8 +7,12 @@
 //! parse are hard errors, not silently replaced defaults.
 
 use crate::backend::SweepKernel;
-use crate::estimator::{BackendChoice, Picard};
+use crate::bench::defaults as bench_defaults;
+use crate::data::{open_source, read_dense, Format, MemSource};
+use crate::error::IcaError;
+use crate::estimator::{BackendChoice, IcaModel, Picard};
 use crate::ica::Algorithm;
+use crate::linalg::Mat;
 use crate::preprocessing::Whitener;
 use std::collections::BTreeMap;
 
@@ -44,10 +48,15 @@ impl Args {
             // `--flag=value` or `--flag value` or bare switch.
             if let Some((k, v)) = name.split_once('=') {
                 args.flags.insert(k.to_string(), v.to_string());
-            } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                args.flags.insert(name.to_string(), it.next().unwrap().clone());
             } else {
-                args.switches.push(name.to_string());
+                match it.peek() {
+                    Some(n) if !n.starts_with("--") => {
+                        let v = (*n).clone();
+                        it.next();
+                        args.flags.insert(name.to_string(), v);
+                    }
+                    _ => args.switches.push(name.to_string()),
+                }
             }
         }
         Ok(args)
@@ -208,6 +217,153 @@ impl SolveFlags {
         }
         p
     }
+}
+
+/// Outcome of the checked-in fixture smoke flows (`fica smoke`).
+///
+/// Environment failures — the fixture missing, truncated, or unreadable —
+/// surface as `Err(IcaError)` from [`run_smoke`]; acceptance failures of
+/// the flows themselves are reported in `lines` with `failed = true`.
+#[derive(Debug)]
+pub struct SmokeOutcome {
+    /// Human-readable per-flow report lines, in run order.
+    pub lines: Vec<String>,
+    /// Whether any flow failed its acceptance check.
+    pub failed: bool,
+}
+
+fn smoke_check(
+    lines: &mut Vec<String>,
+    failed: &mut bool,
+    what: &str,
+    result: Result<IcaModel, IcaError>,
+) -> Option<IcaModel> {
+    match result {
+        Ok(m) if m.fit_info().converged => {
+            lines.push(format!(
+                "ok   {what}: converged in {} iterations (backend {})",
+                m.fit_info().iters,
+                m.fit_info().backend
+            ));
+            Some(m)
+        }
+        Ok(m) => {
+            lines.push(format!(
+                "FAIL {what}: did not converge in {} iterations",
+                m.fit_info().iters
+            ));
+            *failed = true;
+            None
+        }
+        Err(e) => {
+            lines.push(format!("FAIL {what}: {e}"));
+            *failed = true;
+            None
+        }
+    }
+}
+
+/// The CI fixture flows behind `fica smoke`: sharded, scalar-kernel,
+/// out-of-core, and warm-refit fits of `fixture` (a FICA1 file), driven
+/// by the shared [`crate::bench::defaults`] constants so CI, tests, and
+/// local runs cannot drift apart on tolerances or chunk sizes.
+///
+/// A missing or truncated fixture is a typed [`IcaError`] (fail-closed,
+/// never a panic); see `rust/tests/test_cli.rs` for the regression tests.
+pub fn run_smoke(fixture: &str, scratch_dir: Option<&str>) -> Result<SmokeOutcome, IcaError> {
+    let tol = bench_defaults::FIXTURE_TOL;
+    let chunk = bench_defaults::FIXTURE_CHUNK;
+    let workers = bench_defaults::FIXTURE_WORKERS;
+    let split = bench_defaults::FIXTURE_REFIT_SPLIT;
+    let mut lines = vec![format!(
+        "smoke: fixture {fixture} | tol {tol:.0e} | chunk {chunk} | workers {workers} \
+         (bench::defaults)"
+    )];
+    let mut failed = false;
+    // 1. Sharded streamed fit.
+    {
+        let mut src = open_source(fixture, Format::Bin)?;
+        let p = Picard::new()
+            .backend(BackendChoice::Sharded { workers })
+            .chunk_cols(chunk)
+            .tol(tol);
+        smoke_check(&mut lines, &mut failed, "sharded fit", p.fit_source(src.as_mut()));
+    }
+    // 2. Scalar-kernel (reference sweep) fit.
+    {
+        let mut src = open_source(fixture, Format::Bin)?;
+        let p = Picard::new().kernel(SweepKernel::Scalar).chunk_cols(chunk).tol(tol);
+        smoke_check(&mut lines, &mut failed, "scalar-kernel fit", p.fit_source(src.as_mut()));
+    }
+    // 3. Out-of-core fit (scratch must be cleaned up by RAII).
+    {
+        let mut src = open_source(fixture, Format::Bin)?;
+        let mut p = Picard::new()
+            .out_of_core(true)
+            .backend(BackendChoice::Sharded { workers })
+            .chunk_cols(chunk)
+            .tol(tol);
+        if let Some(dir) = scratch_dir {
+            p = p.scratch_dir(dir);
+        }
+        smoke_check(&mut lines, &mut failed, "out-of-core fit", p.fit_source(src.as_mut()));
+    }
+    // 4. Warm refit: fit the first FIXTURE_REFIT_SPLIT samples, append
+    // the rest, and require strictly fewer warm iterations than a cold
+    // fit of the whole fixture.
+    {
+        let mut src = open_source(fixture, Format::Bin)?;
+        let full = read_dense(src.as_mut(), chunk)?;
+        let (n, t) = (full.rows(), full.cols());
+        if split >= t {
+            return Err(IcaError::invalid_input(format!(
+                "fixture shape: {t} samples but refit split {split}"
+            )));
+        }
+        let base = Mat::from_fn(n, split, |i, j| full[(i, j)]);
+        let appended = Mat::from_fn(n, t - split, |i, j| full[(i, j + split)]);
+        let p = Picard::new().chunk_cols(chunk).tol(tol);
+        let cold = smoke_check(
+            &mut lines,
+            &mut failed,
+            "cold fit (full fixture)",
+            p.fit_source(&mut MemSource::new(full)),
+        );
+        let m_base = smoke_check(
+            &mut lines,
+            &mut failed,
+            "base fit (first split)",
+            p.fit_source(&mut MemSource::new(base)),
+        );
+        if let (Some(cold), Some(m_base)) = (cold, m_base) {
+            let warm = smoke_check(
+                &mut lines,
+                &mut failed,
+                "warm refit (appended samples)",
+                p.warm_start(&m_base).fit_append(&mut MemSource::new(appended)),
+            );
+            match warm {
+                Some(w) if w.fit_info().iters < cold.fit_info().iters => lines.push(format!(
+                    "ok   refit iterations: warm {} < cold {}",
+                    w.fit_info().iters,
+                    cold.fit_info().iters
+                )),
+                Some(w) => {
+                    lines.push(format!(
+                        "FAIL refit iterations: warm {} !< cold {}",
+                        w.fit_info().iters,
+                        cold.fit_info().iters
+                    ));
+                    failed = true;
+                }
+                None => {}
+            }
+        }
+    }
+    if !failed {
+        lines.push("smoke: all fixture flows passed".to_string());
+    }
+    Ok(SmokeOutcome { lines, failed })
 }
 
 /// The `fica help` text: every subcommand and flag, one screen.

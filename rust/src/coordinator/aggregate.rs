@@ -26,7 +26,7 @@ pub struct MedianCurves {
 }
 
 fn percentile(sorted: &[f64], q: f64) -> f64 {
-    assert!(!sorted.is_empty());
+    debug_assert!(!sorted.is_empty());
     let pos = q * (sorted.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -37,14 +37,19 @@ fn percentile(sorted: &[f64], q: f64) -> f64 {
     }
 }
 
-fn point(x: f64, mut vals: Vec<f64>) -> CurvePoint {
-    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    CurvePoint {
+/// `None` when no run contributed a sample at this x (the curve is
+/// simply shorter, never a panic).
+fn point(x: f64, mut vals: Vec<f64>) -> Option<CurvePoint> {
+    if vals.is_empty() {
+        return None;
+    }
+    vals.sort_by(f64::total_cmp);
+    Some(CurvePoint {
         x,
         median: percentile(&vals, 0.5),
         q25: percentile(&vals, 0.25),
         q75: percentile(&vals, 0.75),
-    }
+    })
 }
 
 /// Median gradient curve vs iteration, sampled at every iteration up to
@@ -54,11 +59,7 @@ pub fn median_curve_iters(traces: &[&Trace]) -> Vec<CurvePoint> {
     (0..=max_iter)
         .filter_map(|i| {
             let vals: Vec<f64> = traces.iter().filter_map(|t| t.grad_at_iter(i)).collect();
-            if vals.is_empty() {
-                None
-            } else {
-                Some(point(i as f64, vals))
-            }
+            point(i as f64, vals)
         })
         .collect()
 }
@@ -79,7 +80,7 @@ pub fn median_curve_time(traces: &[&Trace], points: usize) -> Vec<CurvePoint> {
     }
     let ratio = (t_max / t_min).max(1.0 + 1e-9);
     (0..points)
-        .map(|k| {
+        .filter_map(|k| {
             let frac = k as f64 / (points - 1).max(1) as f64;
             let x = t_min * ratio.powf(frac);
             let vals: Vec<f64> = traces.iter().filter_map(|t| t.grad_at_time(x)).collect();

@@ -8,11 +8,12 @@
 //!   the pool keeps draining the remaining jobs.
 
 use crate::backend::NativeBackend;
+use crate::error::IcaError;
 use crate::ica::{try_solve, SolveResult, SolverConfig};
 use crate::linalg::Mat;
 use std::panic::AssertUnwindSafe;
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, PoisonError};
 
 /// One unit of work: build the dataset, preprocess, solve.
 pub struct Job {
@@ -76,21 +77,28 @@ impl Default for PoolConfig {
 }
 
 /// Run all jobs on the pool; returns outcomes sorted by job id.
-pub fn run_jobs(jobs: Vec<Job>, pool: PoolConfig) -> Vec<JobOutcome> {
-    assert!(pool.workers > 0);
+///
+/// Fails with [`IcaError::InvalidInput`] when the pool is configured
+/// with zero workers (a zero-thread pool could never drain the queue).
+pub fn run_jobs(jobs: Vec<Job>, pool: PoolConfig) -> Result<Vec<JobOutcome>, IcaError> {
+    if pool.workers == 0 {
+        return Err(IcaError::invalid_input("PoolConfig.workers must be > 0"));
+    }
     let (tx, rx) = mpsc::sync_channel::<Job>(pool.queue_bound.max(1));
     let rx = Arc::new(Mutex::new(rx));
     let (out_tx, out_rx) = mpsc::channel::<JobOutcome>();
     let expected = jobs.len();
 
-    std::thread::scope(|scope| {
+    Ok(std::thread::scope(|scope| {
         for _ in 0..pool.workers {
             let rx = rx.clone();
             let out_tx = out_tx.clone();
             scope.spawn(move || loop {
-                // Hold the lock only to receive, not to run.
+                // Hold the lock only to receive, not to run. The guard is
+                // only held across `recv()`, which cannot panic, so a
+                // poisoned lock still wraps a consistent receiver.
                 let job = {
-                    let guard = rx.lock().expect("receiver lock");
+                    let guard = rx.lock().unwrap_or_else(PoisonError::into_inner);
                     guard.recv()
                 };
                 let Ok(job) = job else { break };
@@ -100,6 +108,7 @@ pub fn run_jobs(jobs: Vec<Job>, pool: PoolConfig) -> Vec<JobOutcome> {
                     let n = x.rows();
                     let mut backend = NativeBackend::new(x);
                     let w0 = w0.unwrap_or_else(|| Mat::eye(n));
+                    // fica-lint: allow(no-panic) — intentional unwind into the surrounding catch_unwind: a solve error becomes JobOutcome::Panic with the message preserved
                     try_solve(&mut backend, &w0, &config).expect("scheduler solve")
                 })) {
                     Ok(result) => JobOutcome::Done { id, label, result },
@@ -118,13 +127,14 @@ pub fn run_jobs(jobs: Vec<Job>, pool: PoolConfig) -> Vec<JobOutcome> {
         drop(out_tx);
         // Producer: feed jobs (blocks when the queue is full = backpressure).
         for job in jobs {
-            tx.send(job).expect("workers alive");
+            // fica-lint: allow(no-panic) — workers only exit after this channel is dropped below, so a send failure means a worker thread died outside catch_unwind: unrecoverable scheduler bug
+            tx.send(job).expect("worker threads disappeared while jobs were queued");
         }
         drop(tx);
 
         let mut outcomes: Vec<JobOutcome> = out_rx.iter().collect();
-        assert_eq!(outcomes.len(), expected, "every job must report exactly once");
+        debug_assert_eq!(outcomes.len(), expected, "every job must report exactly once");
         outcomes.sort_by_key(|o| o.id());
         outcomes
-    })
+    }))
 }

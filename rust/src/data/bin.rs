@@ -57,8 +57,11 @@ impl BinSource {
                 "{label}: bad magic (not a FICA1 file)"
             )));
         }
-        let rows = u64::from_le_bytes(header[8..16].try_into().unwrap());
-        let cols = u64::from_le_bytes(header[16..24].try_into().unwrap());
+        let mut word = [0u8; 8];
+        word.copy_from_slice(&header[8..16]);
+        let rows = u64::from_le_bytes(word);
+        word.copy_from_slice(&header[16..24]);
+        let cols = u64::from_le_bytes(word);
         if rows == 0 || cols == 0 {
             return Err(IcaError::invalid_input(format!(
                 "{label}: empty matrix ({rows}x{cols}) in header"
@@ -131,7 +134,9 @@ impl super::DataSource for BinSource {
         let mut chunk = Mat::zeros(self.n, c);
         for (j, frame) in buf.chunks_exact(self.n * 8).enumerate() {
             for (i, bytes) in frame.chunks_exact(8).enumerate() {
-                let v = f64::from_le_bytes(bytes.try_into().unwrap());
+                let mut word = [0u8; 8];
+                word.copy_from_slice(bytes);
+                let v = f64::from_le_bytes(word);
                 if !v.is_finite() {
                     return Err(IcaError::NonFinite {
                         what: format!("{} (signal {i}, sample {})", self.path, self.pos + j),

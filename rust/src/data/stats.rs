@@ -169,19 +169,22 @@ impl StreamingStats {
     /// of the first non-empty chunk seen. Returns a shared handle so the
     /// parallel pass can hand it to pool jobs without copying per chunk.
     pub fn pivot_from(&mut self, chunk: &Mat) -> Arc<Vec<f64>> {
-        assert!(chunk.cols() > 0, "pivot needs a non-empty chunk");
-        if self.pivot.is_none() {
-            self.pivot = Some(Arc::new(
-                (0..chunk.rows()).map(|i| chunk[(i, 0)]).collect(),
-            ));
+        debug_assert!(chunk.cols() > 0, "pivot needs a non-empty chunk");
+        match &self.pivot {
+            Some(p) => Arc::clone(p),
+            None => {
+                let p: Arc<Vec<f64>> =
+                    Arc::new((0..chunk.rows()).map(|i| chunk[(i, 0)]).collect());
+                self.pivot = Some(Arc::clone(&p));
+                p
+            }
         }
-        Arc::clone(self.pivot.as_ref().unwrap())
     }
 
     /// The pivot-shifted sums over one chunk. Pure function of
     /// `(pivot, chunk)`, safe to evaluate on any thread.
     pub fn partial(pivot: &[f64], chunk: &Mat) -> MomentPartial {
-        assert_eq!(chunk.rows(), pivot.len(), "chunk row count");
+        debug_assert_eq!(chunk.rows(), pivot.len(), "chunk row count");
         let n = chunk.rows();
         let mut shifted = Mat::zeros(n, chunk.cols());
         for (i, &p) in pivot.iter().enumerate() {
@@ -248,7 +251,13 @@ impl StreamingStats {
             ));
         }
         let tf = self.count as f64;
-        let pivot = self.pivot.as_ref().expect("count > 0 implies a pivot");
+        let Some(pivot) = self.pivot.as_ref() else {
+            // Unreachable while `count > 0 implies a pivot` holds, but the
+            // typed error keeps the path fail-closed either way.
+            return Err(IcaError::invalid_input(
+                "streaming stats: no samples accumulated",
+            ));
+        };
         Ok(pivot
             .iter()
             .zip(&self.sum)

@@ -70,6 +70,7 @@ impl ExperimentId {
 pub fn algo_suite() -> Vec<Algorithm> {
     crate::ica::Algorithm::paper_suite()
         .iter()
+        // fica-lint: allow(no-panic) — paper_suite() is a compile-time id list; a unit test round-trips every id through from_id
         .map(|id| Algorithm::from_id(id).expect("suite id"))
         .collect()
 }
@@ -80,6 +81,7 @@ pub fn algo_suite() -> Vec<Algorithm> {
 /// tests and quick benches stay fast; `scale = 1` is the paper's size.
 pub fn build_dataset(id: ExperimentId, seed: u64, scale: f64) -> Mat {
     preprocess(&build_raw_dataset(id, seed, scale), Whitener::Sphering)
+        // fica-lint: allow(no-panic) — synthetic generators emit finite full-rank data by construction; a failure here is a generator bug, not an input condition
         .expect("whitening")
         .into_dense()
 }
@@ -87,7 +89,7 @@ pub fn build_dataset(id: ExperimentId, seed: u64, scale: f64) -> Mat {
 /// Build the raw (unwhitened) data for one (experiment, seed) pair —
 /// the input shape `Picard::fit` expects, which whitens internally.
 pub fn build_raw_dataset(id: ExperimentId, seed: u64, scale: f64) -> Mat {
-    assert!(scale > 0.0 && scale <= 1.0);
+    debug_assert!(scale > 0.0 && scale <= 1.0);
     let sc = |v: usize| ((v as f64 * scale).round() as usize).max(4);
     match id {
         ExperimentId::Fig1 => signal::experiment_a(sc(30), sc(5000), seed).x,

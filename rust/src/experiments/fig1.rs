@@ -69,6 +69,7 @@ pub fn run(cfg: &Fig1Config) -> Fig1Result {
     let run_algo = |algo: Algorithm| {
         let mut backend = NativeBackend::new(x.clone());
         let scfg = SolverConfig::new(algo).with_tol(0.0).with_max_iters(cfg.iters);
+        // fica-lint: allow(no-panic) — experiment driver on synthetic data with a validated config; crashing the figure run with context beats silently plotting nothing
         try_solve(&mut backend, &w0, &scfg).expect("fig1 solve")
     };
 

@@ -48,6 +48,7 @@ impl SuiteConfig {
         if self.algos.is_empty() {
             algo_suite()
         } else {
+            // fica-lint: allow(no-panic) — experiment-harness config: algo ids are compile-time suite definitions, an unknown id is a repo bug worth failing the figure run loudly
             self.algos.iter().map(|id| Algorithm::from_id(id).expect("algo id")).collect()
         }
     }
@@ -82,7 +83,7 @@ fn median_opt_f64(mut vals: Vec<f64>) -> Option<f64> {
     if vals.is_empty() {
         return None;
     }
-    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    vals.sort_by(f64::total_cmp);
     Some(vals[vals.len() / 2])
 }
 
@@ -110,7 +111,9 @@ pub fn run_suite(cfg: &SuiteConfig) -> SuiteResult {
             id += 1;
         }
     }
-    let outcomes = run_jobs(jobs, PoolConfig::default());
+    // `PoolConfig::default()` always sizes ≥ 1 worker, so `run_jobs`
+    // cannot reject the pool; an empty outcome list is the safe fallback.
+    let outcomes = run_jobs(jobs, PoolConfig::default()).unwrap_or_default();
 
     let mut per_algo = Vec::new();
     for algo in &algos {

@@ -103,7 +103,9 @@ pub fn run(cfg: &Fig4Config) -> Fig4Result {
     };
     let raw = generate(&eeg, cfg.seed);
 
+    // fica-lint: allow(no-panic) — experiment driver: the simulated EEG data is finite and full-rank by construction
     let sph = preprocess(&raw, Whitener::Sphering).expect("whitening");
+    // fica-lint: allow(no-panic) — same as above, PCA branch
     let pca = preprocess(&raw, Whitener::Pca).expect("whitening");
 
     let mut levels = Vec::new();
@@ -113,13 +115,16 @@ pub fn run(cfg: &Fig4Config) -> Fig4Result {
         let w0 = Mat::eye(raw.rows());
 
         let mut be_s = NativeBackend::new(sph.dense().clone());
+        // fica-lint: allow(no-panic) — experiment driver with a validated config on whitened synthetic data
         let r_s = try_solve(&mut be_s, &w0, &scfg).expect("fig4 solve");
         let mut be_p = NativeBackend::new(pca.dense().clone());
+        // fica-lint: allow(no-panic) — same as above, PCA branch
         let r_p = try_solve(&mut be_p, &w0, &scfg).expect("fig4 solve");
 
         // Effective unmixing on the raw (centered) data.
         let u_sph = matmul(&r_s.w, &sph.k);
         let u_pca = matmul(&r_p.w, &pca.k);
+        // fica-lint: allow(no-panic) — U_pca = W·K with W from a converged solve and K full-rank whitening: invertible by construction
         let u_pca_inv = Lu::new(&u_pca).expect("U_pca invertible").inverse();
         let t = matmul(&u_sph, &u_pca_inv);
         let norm = normalize_to_permutation(&t);

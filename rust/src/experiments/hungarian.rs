@@ -9,7 +9,7 @@
 /// Returns `assignment[row] = col` minimizing total cost.
 pub fn min_cost_assignment(cost: &[Vec<f64>]) -> Vec<usize> {
     let n = cost.len();
-    assert!(cost.iter().all(|r| r.len() == n), "square matrix required");
+    debug_assert!(cost.iter().all(|r| r.len() == n), "square matrix required");
     if n == 0 {
         return Vec::new();
     }

@@ -12,7 +12,7 @@ use crate::linalg::Mat;
 ///        + (same with rows/columns swapped)` — the classical index of
 /// Amari, Cichocki & Yang (1996), rescaled so the worst case is ≈1.
 pub fn amari_distance(p: &Mat) -> f64 {
-    assert!(p.is_square());
+    debug_assert!(p.is_square());
     let n = p.rows();
     if n <= 1 {
         return 0.0;

@@ -49,7 +49,7 @@ impl BlockDiagHessian {
         let n = stats.g.rows();
         let a = match which {
             HessianApprox::H2 => {
-                assert_eq!(stats.h2.rows(), n, "stats lack ĥ_ij (need StatsLevel::H2)");
+                debug_assert_eq!(stats.h2.rows(), n, "stats lack ĥ_ij (need StatsLevel::H2)");
                 let mut a = stats.h2.clone();
                 for i in 0..n {
                     // H̃²_iiii = 1 + ĥ_ii (and ĥ_iii = ĥ_ii always).
@@ -58,7 +58,7 @@ impl BlockDiagHessian {
                 a
             }
             HessianApprox::H1 => {
-                assert_eq!(stats.h1.len(), n, "stats lack ĥ_i (need StatsLevel::H1)");
+                debug_assert_eq!(stats.h1.len(), n, "stats lack ĥ_i (need StatsLevel::H1)");
                 let mut a = Mat::from_fn(n, n, |i, j| stats.h1[i] * stats.sigma2[j]);
                 for i in 0..n {
                     // Diagonal uses the exact ĥ_ii when available, else the
@@ -79,7 +79,7 @@ impl BlockDiagHessian {
 
     /// Build directly from an `a_ij` matrix (tests / ablations).
     pub fn from_a(a: Mat) -> Self {
-        assert!(a.is_square());
+        debug_assert!(a.is_square());
         Self { a }
     }
 
@@ -118,7 +118,8 @@ impl BlockDiagHessian {
     /// `lambda_min` so that it becomes exactly `lambda_min`. Returns the
     /// number of blocks shifted.
     pub fn regularize(&mut self, lambda_min: f64) -> usize {
-        assert!(lambda_min > 0.0, "λ_min must be positive");
+        // SolverConfig::validate rejects non-positive λ_min before any solve.
+        debug_assert!(lambda_min > 0.0, "λ_min must be positive");
         let n = self.n();
         let mut shifted = 0;
         for i in 0..n {
@@ -145,7 +146,7 @@ impl BlockDiagHessian {
     /// (call [`Self::regularize`] first).
     pub fn solve(&self, m: &Mat) -> Mat {
         let n = self.n();
-        assert_eq!((m.rows(), m.cols()), (n, n));
+        debug_assert_eq!((m.rows(), m.cols()), (n, n));
         let mut p = Mat::zeros(n, n);
         for i in 0..n {
             p[(i, i)] = m[(i, i)] / self.a[(i, i)];
@@ -168,7 +169,7 @@ impl BlockDiagHessian {
     /// `a_ii M_ii` on the diagonal (testing / ablation).
     pub fn apply(&self, m: &Mat) -> Mat {
         let n = self.n();
-        assert_eq!((m.rows(), m.cols()), (n, n));
+        debug_assert_eq!((m.rows(), m.cols()), (n, n));
         Mat::from_fn(n, n, |i, j| {
             if i == j {
                 self.a[(i, i)] * m[(i, i)]

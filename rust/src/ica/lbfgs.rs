@@ -40,7 +40,8 @@ pub enum Seed<'a> {
 impl LbfgsMemory {
     /// An empty memory holding at most `m` pairs (`m > 0`).
     pub fn new(m: usize) -> Self {
-        assert!(m > 0, "memory size must be positive");
+        // SolverConfig::validate rejects a zero L-BFGS memory before any solve.
+        debug_assert!(m > 0, "memory size must be positive");
         Self { m, pairs: VecDeque::with_capacity(m), skipped: 0 }
     }
 

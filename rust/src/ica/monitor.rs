@@ -7,6 +7,8 @@
 //! charged to the algorithm, and Infomax's a-posteriori full gradient
 //! evaluations are not charged either. [`Stopwatch::pause`] handles both.
 
+// fica-lint: allow-file(nondeterminism) — wall-clock is this module's whole purpose: the paper's time-axis figures and `max_time` stopping need it. Time never feeds the arithmetic, only the stopping rule and the recorded curves.
+
 use std::time::Instant;
 
 /// A stopwatch that can be paused while "free" work (oracle line search,

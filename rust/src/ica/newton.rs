@@ -95,6 +95,7 @@ pub fn solve_newton(
     lambda_min: f64,
 ) -> SolveResult {
     let n = x.rows();
+    // fica-lint: allow(no-panic) — ablation-only guard: the Θ(N⁶) dense Hessian would silently hang far past this cap, and the cap is stated in the docs
     assert!(n <= 32, "true-Hessian Newton is Θ(N³T)+Θ(N⁶); N={n} is too large");
     let mut backend = NativeBackend::new(x);
     let mut sw = Stopwatch::new_running();
@@ -123,6 +124,7 @@ pub fn solve_newton(
         let y = matmul(&w, backend.data());
         let h3 = h3_tensor(&y);
         let hd = spectral_floor(&dense_hessian(&h3), lambda_min);
+        // fica-lint: allow(no-panic) — spectral_floor just clamped every eigenvalue to ≥ λ_min > 0, so the matrix cannot be singular
         let lu = Lu::new(&hd).expect("floored Hessian is PD");
         let g_vec = stats.g.as_slice().to_vec();
         let p_vec = lu.solve_vec(&g_vec);

@@ -172,6 +172,11 @@ impl SolverConfig {
         if self.ls_attempts == 0 {
             return Err(IcaError::invalid_input("ls_attempts must be >= 1"));
         }
+        if let Algorithm::Lbfgs { memory, .. } = self.algo {
+            if memory == 0 {
+                return Err(IcaError::invalid_input("L-BFGS memory must be >= 1"));
+            }
+        }
         if self.max_time.is_nan() || self.max_time <= 0.0 {
             return Err(IcaError::invalid_input(format!(
                 "max_time must be > 0, got {}",
@@ -285,6 +290,7 @@ pub fn solve<B: ComputeBackend + ?Sized>(
     w0: &Mat,
     cfg: &SolverConfig,
 ) -> SolveResult {
+    // fica-lint: allow(no-panic) — deprecated compatibility shim whose documented contract is to panic; new code goes through try_solve
     try_solve(backend, w0, cfg).expect("ica::solve: invalid input")
 }
 
@@ -304,6 +310,7 @@ fn solve_full_batch<B: ComputeBackend + ?Sized>(
         Algorithm::Lbfgs { precond, .. } => {
             precond.map(|a| a.stats_level()).unwrap_or(StatsLevel::Basic)
         }
+        // fica-lint: allow(no-panic) — try_solve routes Infomax to solve_infomax before this driver is entered
         Algorithm::Infomax(_) => unreachable!(),
     };
     let mut memory = match cfg.algo {
@@ -348,6 +355,7 @@ fn solve_full_batch<B: ComputeBackend + ?Sized>(
                 h.solve(&stats.g).scale(-1.0)
             }
             Algorithm::Lbfgs { precond, .. } => {
+                // fica-lint: allow(no-panic) — `memory` is constructed Some for the Lbfgs arm a few lines above
                 let mem = memory.as_ref().unwrap();
                 match precond {
                     Some(approx) => {
@@ -358,6 +366,7 @@ fn solve_full_batch<B: ComputeBackend + ?Sized>(
                     None => mem.apply_inverse(&stats.g, Seed::ScaledIdentity).scale(-1.0),
                 }
             }
+            // fica-lint: allow(no-panic) — try_solve routes Infomax to solve_infomax before this driver is entered
             Algorithm::Infomax(_) => unreachable!(),
         };
 

@@ -19,7 +19,7 @@ pub struct Eigh {
 /// Eigendecomposition of a symmetric matrix (uses the lower triangle;
 /// symmetry is enforced by averaging). Eigenvalues ascending.
 pub fn eigh(a: &Mat) -> Eigh {
-    assert!(a.is_square(), "eigh requires a square matrix");
+    debug_assert!(a.is_square(), "eigh requires a square matrix");
     let n = a.rows();
     // Work on a symmetrized copy to be robust to tiny asymmetries.
     let mut m = Mat::from_fn(n, n, |i, j| 0.5 * (a[(i, j)] + a[(j, i)]));
@@ -30,6 +30,7 @@ pub fn eigh(a: &Mat) -> Eigh {
         let mut off = 0.0;
         for i in 0..n {
             for j in i + 1..n {
+                // fica-lint: allow(float-accum) — serial convergence gauge in fixed (i,j) order; only compared against a tolerance, never returned
                 off += m[(i, j)] * m[(i, j)];
             }
         }
@@ -82,7 +83,7 @@ pub fn eigh(a: &Mat) -> Eigh {
     // Extract & sort ascending.
     let mut idx: Vec<usize> = (0..n).collect();
     let diag: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
-    idx.sort_by(|&a, &b| diag[a].partial_cmp(&diag[b]).unwrap());
+    idx.sort_by(|&a, &b| diag[a].total_cmp(&diag[b]));
     let values: Vec<f64> = idx.iter().map(|&i| diag[i]).collect();
     let vectors = Mat::from_fn(n, n, |r, c| v[(r, idx[c])]);
     Eigh { values, vectors }

@@ -37,7 +37,7 @@ impl Mat {
 
     /// Build from a row-major data vector.
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
-        assert_eq!(data.len(), rows * cols, "data length mismatch");
+        debug_assert_eq!(data.len(), rows * cols, "data length mismatch");
         Self { rows, cols, data }
     }
 
@@ -105,7 +105,7 @@ impl Mat {
 
     /// Two distinct mutable rows (i != j).
     pub fn rows_mut2(&mut self, i: usize, j: usize) -> (&mut [f64], &mut [f64]) {
-        assert_ne!(i, j);
+        debug_assert_ne!(i, j);
         let c = self.cols;
         let (lo, hi) = if i < j { (i, j) } else { (j, i) };
         let (a, b) = self.data.split_at_mut(hi * c);
@@ -131,6 +131,7 @@ impl Mat {
 
     /// Frobenius norm.
     pub fn fro_norm(&self) -> f64 {
+        // fica-lint: allow(float-accum) — serial sum in row-major storage order; every backend calls this same kernel
         self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
     }
 
@@ -141,7 +142,8 @@ impl Mat {
 
     /// Frobenius inner product ⟨A|B⟩ = Tr(AᵀB).
     pub fn dot(&self, other: &Mat) -> f64 {
-        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        debug_assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        // fica-lint: allow(float-accum) — serial dot in row-major storage order, shared by all callers
         self.data.iter().zip(&other.data).map(|(a, b)| a * b).sum()
     }
 
@@ -161,7 +163,7 @@ impl Mat {
 
     /// Elementwise sum with `other` (shapes must match).
     pub fn add(&self, other: &Mat) -> Mat {
-        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        debug_assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         let mut out = self.clone();
         out.add_inplace(other);
         out
@@ -169,23 +171,23 @@ impl Mat {
 
     /// Add `other` elementwise in place.
     pub fn add_inplace(&mut self, other: &Mat) {
-        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        debug_assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         for (a, b) in self.data.iter_mut().zip(&other.data) {
-            *a += b;
+            *a += b; // fica-lint: allow(float-accum) — elementwise add, one term per cell: no reduction order exists
         }
     }
 
     /// self += s * other  (axpy).
     pub fn add_scaled_inplace(&mut self, s: f64, other: &Mat) {
-        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        debug_assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         for (a, b) in self.data.iter_mut().zip(&other.data) {
-            *a += s * b;
+            *a += s * b; // fica-lint: allow(float-accum) — elementwise axpy, one term per cell: no reduction order exists
         }
     }
 
     /// Elementwise difference `self - other`.
     pub fn sub(&self, other: &Mat) -> Mat {
-        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        debug_assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         let mut out = self.clone();
         for (a, b) in out.data.iter_mut().zip(&other.data) {
             *a -= b;
@@ -196,6 +198,7 @@ impl Mat {
     /// Mean of each row.
     pub fn row_means(&self) -> Vec<f64> {
         (0..self.rows)
+            // fica-lint: allow(float-accum) — serial per-row sum in sample order: the single fixed-order mean every backend shares
             .map(|i| self.row(i).iter().sum::<f64>() / self.cols as f64)
             .collect()
     }
@@ -221,7 +224,7 @@ impl Mat {
 
     /// Maximum absolute difference to another matrix.
     pub fn max_abs_diff(&self, other: &Mat) -> f64 {
-        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        debug_assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         self.data
             .iter()
             .zip(&other.data)

@@ -24,7 +24,7 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
 
 /// C = A · B, writing into a preallocated output (hot-loop friendly).
 pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
-    assert_eq!(c.cols(), b.cols());
+    debug_assert_eq!(c.cols(), b.cols());
     matmul_window_into(a, b, 0, b.cols(), c);
 }
 
@@ -36,11 +36,12 @@ pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
 /// written. This is the minibatch-gradient shape: `Y[:, :tb] = W ·
 /// X[:, lo..lo+tb]` streamed into the front of a full-width workspace
 /// without materializing the column slice.
+// fica-lint: allow(float-accum) — serial i-k-j accumulation: the fixed k-order per output cell IS the bitwise matmul contract
 pub fn matmul_window_into(a: &Mat, b: &Mat, b_lo: usize, cols: usize, c: &mut Mat) {
-    assert_eq!(a.cols(), b.rows(), "matmul: inner dims");
-    assert!(b_lo + cols <= b.cols(), "matmul: column window out of range");
-    assert_eq!(c.rows(), a.rows());
-    assert!(c.cols() >= cols, "matmul: output narrower than the window");
+    debug_assert_eq!(a.cols(), b.rows(), "matmul: inner dims");
+    debug_assert!(b_lo + cols <= b.cols(), "matmul: column window out of range");
+    debug_assert_eq!(c.rows(), a.rows());
+    debug_assert!(c.cols() >= cols, "matmul: output narrower than the window");
     let (m, k) = (a.rows(), a.cols());
     for i in 0..m {
         c.row_mut(i)[..cols].fill(0.0);
@@ -74,7 +75,7 @@ pub fn matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
 
 /// C = A · Bᵀ into a preallocated output. Inner loop = contiguous dot.
 pub fn matmul_a_bt_into(a: &Mat, b: &Mat, c: &mut Mat) {
-    assert_eq!(a.cols(), b.cols(), "matmul_a_bt: inner dims");
+    debug_assert_eq!(a.cols(), b.cols(), "matmul_a_bt: inner dims");
     matmul_a_bt_window_into(a, b, a.cols(), c);
 }
 
@@ -83,10 +84,11 @@ pub fn matmul_a_bt_into(a: &Mat, b: &Mat, c: &mut Mat) {
 /// (bitwise-identical at full width). Used by the minibatch gradient,
 /// whose ψ/Y workspaces are full-width but only their leading `tb`
 /// columns hold the batch.
+// fica-lint: allow(float-accum) — the 4-lane unrolled dot with fixed (acc0+acc1)+(acc2+acc3) combine: this exact order is the bitwise contract shared by every backend
 pub fn matmul_a_bt_window_into(a: &Mat, b: &Mat, cols: usize, c: &mut Mat) {
-    assert!(cols <= a.cols() && cols <= b.cols(), "matmul_a_bt: window too wide");
-    assert_eq!(c.rows(), a.rows());
-    assert_eq!(c.cols(), b.rows());
+    debug_assert!(cols <= a.cols() && cols <= b.cols(), "matmul_a_bt: window too wide");
+    debug_assert_eq!(c.rows(), a.rows());
+    debug_assert_eq!(c.cols(), b.rows());
     let k = cols;
     for i in 0..a.rows() {
         let arow = &a.row(i)[..k];
@@ -115,8 +117,9 @@ pub fn matmul_a_bt_window_into(a: &Mat, b: &Mat, cols: usize, c: &mut Mat) {
 }
 
 /// C = Aᵀ · B where A is k×m and B is k×n.
+// fica-lint: allow(float-accum) — serial rank-1 accumulation in fixed k-order; zero-skip only skips terms that contribute exactly +0.0
 pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
-    assert_eq!(a.rows(), b.rows(), "matmul_at_b: inner dims");
+    debug_assert_eq!(a.rows(), b.rows(), "matmul_at_b: inner dims");
     let (k, m, n) = (a.rows(), a.cols(), b.cols());
     let mut c = Mat::zeros(m, n);
     // Accumulate rank-1 updates row-by-row of A and B (contiguous).

@@ -4,14 +4,12 @@
 //! [`IcaModel`]) and `fica apply` (run a saved model on new data);
 //! `fica experiment` regenerates the paper's figures.
 
-use faster_ica::backend::{ComputeBackend, NativeBackend, SweepKernel};
+use faster_ica::backend::{ComputeBackend, NativeBackend};
 use faster_ica::bench::backends as bench_backends;
 use faster_ica::bench::{compare as bench_compare, defaults as bench_defaults};
 use faster_ica::cli::{Args, SolveFlags, USAGE};
-use faster_ica::data::{
-    convert_to, open_source, read_dense, Format, MemSource, DEFAULT_CHUNK_COLS,
-};
-use faster_ica::estimator::{BackendChoice, IcaModel, Picard};
+use faster_ica::data::{convert_to, open_source, Format, DEFAULT_CHUNK_COLS};
+use faster_ica::estimator::IcaModel;
 use faster_ica::experiments::{self, ExperimentId};
 use faster_ica::linalg::Mat;
 use faster_ica::runtime::{default_artifact_dir, Engine, Registry, XlaBackend};
@@ -489,135 +487,28 @@ fn cmd_bench(args: &Args) -> i32 {
 }
 
 /// `fica smoke --fixture tests/fixtures/tiny.bin`: the CI fixture flows —
-/// sharded, scalar-kernel, out-of-core, and warm-refit fits — driven by
-/// the shared `bench::defaults` constants so CI, tests, and local runs
-/// cannot drift apart on tolerances or chunk sizes.
+/// sharded, scalar-kernel, out-of-core, and warm-refit fits — delegated
+/// to [`faster_ica::cli::run_smoke`] so the flows (and their fail-closed
+/// handling of a missing or truncated fixture) are integration-testable.
 fn cmd_smoke(args: &Args) -> i32 {
     let fixture = args.get_or("fixture", "tests/fixtures/tiny.bin");
-    let tol = bench_defaults::FIXTURE_TOL;
-    let chunk = bench_defaults::FIXTURE_CHUNK;
-    let workers = bench_defaults::FIXTURE_WORKERS;
-    let split = bench_defaults::FIXTURE_REFIT_SPLIT;
-    println!(
-        "smoke: fixture {fixture} | tol {tol:.0e} | chunk {chunk} | workers {workers} \
-         (bench::defaults)"
-    );
-    let check = |what: &str, result: Result<IcaModel, faster_ica::IcaError>| -> Option<IcaModel> {
-        match result {
-            Ok(m) if m.fit_info().converged => {
-                println!(
-                    "ok   {what}: converged in {} iterations (backend {})",
-                    m.fit_info().iters,
-                    m.fit_info().backend
-                );
-                Some(m)
+    match faster_ica::cli::run_smoke(&fixture, args.get("scratch-dir")) {
+        Ok(out) => {
+            for line in &out.lines {
+                println!("{line}");
             }
-            Ok(m) => {
-                eprintln!("FAIL {what}: did not converge in {} iterations", m.fit_info().iters);
-                None
-            }
-            Err(e) => {
-                eprintln!("FAIL {what}: {e}");
-                None
+            if out.failed {
+                1
+            } else {
+                0
             }
         }
-    };
-    let open = || match open_source(fixture, Format::Bin) {
-        Ok(s) => Some(s),
         Err(e) => {
-            eprintln!("FAIL opening {fixture}: {e}");
-            None
+            eprintln!("error: smoke fixture {fixture}: {e}");
+            1
         }
-    };
-    let mut failed = false;
-    // 1. Sharded streamed fit.
-    if let Some(mut src) = open() {
-        let p = Picard::new()
-            .backend(BackendChoice::Sharded { workers })
-            .chunk_cols(chunk)
-            .tol(tol);
-        failed |= check("sharded fit", p.fit_source(src.as_mut())).is_none();
-    } else {
-        return 1;
-    }
-    // 2. Scalar-kernel (reference sweep) fit.
-    if let Some(mut src) = open() {
-        let p = Picard::new().kernel(SweepKernel::Scalar).chunk_cols(chunk).tol(tol);
-        failed |= check("scalar-kernel fit", p.fit_source(src.as_mut())).is_none();
-    } else {
-        failed = true;
-    }
-    // 3. Out-of-core fit (scratch must be cleaned up by RAII).
-    if let Some(mut src) = open() {
-        let mut p = Picard::new()
-            .out_of_core(true)
-            .backend(BackendChoice::Sharded { workers })
-            .chunk_cols(chunk)
-            .tol(tol);
-        if let Some(dir) = args.get("scratch-dir") {
-            p = p.scratch_dir(dir);
-        }
-        failed |= check("out-of-core fit", p.fit_source(src.as_mut())).is_none();
-    } else {
-        failed = true;
-    }
-    // 4. Warm refit: fit the first FIXTURE_REFIT_SPLIT samples, append
-    // the rest, and require strictly fewer warm iterations than a cold
-    // fit of the whole fixture — the PR's acceptance property.
-    if let Some(mut src) = open() {
-        let full = match read_dense(src.as_mut(), chunk) {
-            Ok(m) => m,
-            Err(e) => {
-                eprintln!("FAIL reading {fixture}: {e}");
-                return 1;
-            }
-        };
-        let (n, t) = (full.rows(), full.cols());
-        if split >= t {
-            eprintln!("FAIL fixture shape: {t} samples but refit split {split}");
-            return 1;
-        }
-        let base = Mat::from_fn(n, split, |i, j| full[(i, j)]);
-        let appended = Mat::from_fn(n, t - split, |i, j| full[(i, j + split)]);
-        let p = Picard::new().chunk_cols(chunk).tol(tol);
-        let cold = check("cold fit (full fixture)", p.fit_source(&mut MemSource::new(full)));
-        let m_base = check("base fit (first split)", p.fit_source(&mut MemSource::new(base)));
-        match (cold, m_base) {
-            (Some(cold), Some(m_base)) => {
-                let warm = check(
-                    "warm refit (appended samples)",
-                    p.warm_start(&m_base).fit_append(&mut MemSource::new(appended)),
-                );
-                match warm {
-                    Some(w) if w.fit_info().iters < cold.fit_info().iters => println!(
-                        "ok   refit iterations: warm {} < cold {}",
-                        w.fit_info().iters,
-                        cold.fit_info().iters
-                    ),
-                    Some(w) => {
-                        eprintln!(
-                            "FAIL refit iterations: warm {} !< cold {}",
-                            w.fit_info().iters,
-                            cold.fit_info().iters
-                        );
-                        failed = true;
-                    }
-                    None => failed = true,
-                }
-            }
-            _ => failed = true,
-        }
-    } else {
-        failed = true;
-    }
-    if failed {
-        1
-    } else {
-        println!("smoke: all fixture flows passed");
-        0
     }
 }
-
 fn cmd_experiment(args: &Args) -> i32 {
     let id = args.get_or("id", "");
     let seeds: usize = match args.get_parse("seeds", 10) {

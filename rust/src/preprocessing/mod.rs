@@ -121,6 +121,7 @@ impl Preprocessed {
         match &self.x {
             WhitenedData::InMemory(m) => m,
             WhitenedData::OutOfCore(_) => {
+                // fica-lint: allow(no-panic) — documented panicking accessor; callers are type-gated by the WhitenedData variant their preprocess path returns
                 panic!("whitened data is out-of-core; stream it instead of densifying")
             }
         }
@@ -132,6 +133,7 @@ impl Preprocessed {
         match self.x {
             WhitenedData::InMemory(m) => m,
             WhitenedData::OutOfCore(_) => {
+                // fica-lint: allow(no-panic) — documented panicking accessor; callers are type-gated by the WhitenedData variant their preprocess path returns
                 panic!("whitened data is out-of-core; stream it instead of densifying")
             }
         }

@@ -156,7 +156,7 @@ impl Sample for GaussianMixture {
 /// Marsaglia–Tsang Gamma(shape, 1) sampler; for shape < 1 uses the
 /// boost `Gamma(a) = Gamma(a+1) · U^{1/a}`.
 fn sample_gamma(rng: &mut Pcg64, shape: f64) -> f64 {
-    assert!(shape > 0.0);
+    debug_assert!(shape > 0.0);
     if shape < 1.0 {
         let g = sample_gamma(rng, shape + 1.0);
         let u = rng.next_f64_open();

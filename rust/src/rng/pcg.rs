@@ -66,7 +66,7 @@ impl Pcg64 {
 
     /// Uniform integer in [0, n) without modulo bias (Lemire's method).
     pub fn next_below(&mut self, n: u64) -> u64 {
-        assert!(n > 0, "next_below(0)");
+        debug_assert!(n > 0, "next_below(0)");
         let mut x = self.next_u64();
         let mut m = (x as u128) * (n as u128);
         let mut lo = m as u64;

@@ -14,6 +14,8 @@
 //!   three graphs.
 //! - Multi-output graphs return a tuple literal; single outputs are bare.
 
+// fica-lint: allow-file(nondeterminism) — the executable cache HashMap is lookup-only (never iterated), so hash order cannot leak into results
+
 use super::registry::{ArtifactKey, Registry};
 use crate::error::IcaError;
 use crate::linalg::Mat;

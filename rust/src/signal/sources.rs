@@ -98,7 +98,7 @@ pub fn experiment_b(n: usize, t: usize, seed: u64) -> Dataset {
 /// Experiment C: N=40 Gaussian-mixture sources with α linearly spaced
 /// from 0.5 to 1 and σ = 0.1, T=5000 (increasingly Gaussian tail).
 pub fn experiment_c(n: usize, t: usize, seed: u64) -> Dataset {
-    assert!(n >= 2);
+    debug_assert!(n >= 2);
     let kinds: Vec<SourceKind> = (0..n)
         .map(|i| {
             let alpha = 0.5 + 0.5 * i as f64 / (n - 1) as f64;

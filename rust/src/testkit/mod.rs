@@ -42,6 +42,7 @@ pub fn check<T: std::fmt::Debug>(
         let mut rng = root.split();
         let input = gen(&mut rng, case);
         if let Err(why) = prop(&input) {
+            // fica-lint: allow(no-panic) — test scaffolding: panicking with replay info IS the assertion mechanism property tests rely on
             panic!(
                 "property '{name}' failed at case {case}/{} (seed {:#x}):\n  {why}\n  input: {input:?}",
                 cfg.cases, cfg.seed

@@ -1,0 +1,77 @@
+//! CLI-layer regressions: `fica smoke`'s fixture flows must fail closed
+//! with a typed [`IcaError`] — never a panic — when the checked-in
+//! fixture is missing or truncated (ISSUE 6's R1/R4 dogfood).
+
+use faster_ica::cli::run_smoke;
+use faster_ica::IcaError;
+use std::path::PathBuf;
+
+fn fixture_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/tiny.bin")
+}
+
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fica_cli_test_{name}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create scratch dir");
+    dir
+}
+
+#[test]
+fn smoke_on_missing_fixture_is_a_typed_io_error() {
+    let err = run_smoke("tests/fixtures/does_not_exist.bin", None)
+        .expect_err("a missing fixture must be an error");
+    assert!(
+        matches!(err, IcaError::Io { .. }),
+        "expected IcaError::Io for a missing file, got: {err}"
+    );
+}
+
+#[test]
+fn smoke_on_truncated_fixture_is_a_typed_error_not_a_panic() {
+    let dir = scratch("truncated");
+    let full = std::fs::read(fixture_path()).expect("read checked-in fixture");
+    assert!(full.len() > 64, "fixture unexpectedly tiny");
+    // Keep the valid header but drop half the payload: the header's
+    // promised length no longer matches the file.
+    let cut = dir.join("truncated.bin");
+    std::fs::write(&cut, &full[..full.len() / 2]).expect("write truncated copy");
+    let err = run_smoke(cut.to_str().expect("utf-8 temp path"), None)
+        .expect_err("a truncated fixture must be rejected at open");
+    assert!(
+        matches!(err, IcaError::InvalidInput { .. }),
+        "expected IcaError::InvalidInput for a truncated file, got: {err}"
+    );
+    assert!(err.to_string().contains("length"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn smoke_on_garbage_fixture_is_rejected_by_magic() {
+    let dir = scratch("garbage");
+    let junk = dir.join("junk.bin");
+    std::fs::write(&junk, b"definitely not a FICA1 file, long enough for a header")
+        .expect("write junk");
+    let err = run_smoke(junk.to_str().expect("utf-8 temp path"), None)
+        .expect_err("garbage must be rejected");
+    assert!(
+        matches!(err, IcaError::InvalidInput { .. }),
+        "expected IcaError::InvalidInput for garbage, got: {err}"
+    );
+    assert!(err.to_string().contains("magic"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The happy path still works end to end through the library entry
+/// point (what `fica smoke` prints comes verbatim from these lines).
+#[test]
+fn smoke_on_checked_in_fixture_passes() {
+    let dir = scratch("ok");
+    let out = run_smoke(
+        fixture_path().to_str().expect("utf-8 fixture path"),
+        Some(dir.to_str().expect("utf-8 scratch path")),
+    )
+    .expect("smoke must run on the checked-in fixture");
+    assert!(!out.failed, "smoke flows failed:\n{}", out.lines.join("\n"));
+    assert!(out.lines.iter().any(|l| l.contains("all fixture flows passed")));
+    std::fs::remove_dir_all(&dir).ok();
+}

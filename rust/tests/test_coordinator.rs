@@ -39,7 +39,8 @@ fn every_job_runs_exactly_once() {
         },
         |&(n_jobs, workers)| {
             let jobs: Vec<Job> = (0..n_jobs).map(|i| quick_job(i, i as u64, 2)).collect();
-            let outcomes = run_jobs(jobs, PoolConfig { workers, queue_bound: 2 });
+            let outcomes = run_jobs(jobs, PoolConfig { workers, queue_bound: 2 })
+                .map_err(|e| e.to_string())?;
             if outcomes.len() != n_jobs {
                 return Err(format!("{} outcomes for {} jobs", outcomes.len(), n_jobs));
             }
@@ -62,6 +63,7 @@ fn deterministic_results_regardless_of_worker_count() {
     let run_with = |workers: usize| -> Vec<f64> {
         let jobs: Vec<Job> = (0..8).map(|i| quick_job(i, 42 + i as u64, 4)).collect();
         run_jobs(jobs, PoolConfig { workers, queue_bound: 3 })
+            .expect("run_jobs")
             .into_iter()
             .map(|o| match o {
                 JobOutcome::Done { result, .. } => result.trace.last().unwrap().grad_inf,
@@ -90,7 +92,7 @@ fn panicking_job_is_isolated() {
             w0: None,
         },
     );
-    let outcomes = run_jobs(jobs, PoolConfig { workers: 2, queue_bound: 2 });
+    let outcomes = run_jobs(jobs, PoolConfig { workers: 2, queue_bound: 2 }).expect("run_jobs");
     assert_eq!(outcomes.len(), 6);
     let panics: Vec<_> =
         outcomes.iter().filter(|o| matches!(o, JobOutcome::Panic { .. })).collect();
@@ -129,7 +131,7 @@ fn poisoned_jobs_do_not_stop_the_drain() {
             }
         })
         .collect();
-    let outcomes = run_jobs(jobs, PoolConfig { workers: 3, queue_bound: 2 });
+    let outcomes = run_jobs(jobs, PoolConfig { workers: 3, queue_bound: 2 }).expect("run_jobs");
     assert_eq!(outcomes.len(), 12, "every job must report exactly once");
     for (i, o) in outcomes.iter().enumerate() {
         assert_eq!(o.id(), i, "outcomes sorted by id");
@@ -161,7 +163,7 @@ fn custom_w0_is_respected() {
             .with_max_iters(0),
         w0: Some(w0.clone()),
     };
-    let outcomes = run_jobs(vec![job], PoolConfig { workers: 1, queue_bound: 1 });
+    let outcomes = run_jobs(vec![job], PoolConfig { workers: 1, queue_bound: 1 }).expect("run_jobs");
     match &outcomes[0] {
         JobOutcome::Done { result, .. } => {
             assert!(result.w.max_abs_diff(&w0) < 1e-15);
@@ -172,6 +174,14 @@ fn custom_w0_is_respected() {
 
 #[test]
 fn zero_jobs_is_fine() {
-    let outcomes = run_jobs(Vec::new(), PoolConfig { workers: 3, queue_bound: 1 });
+    let outcomes = run_jobs(Vec::new(), PoolConfig { workers: 3, queue_bound: 1 }).expect("run_jobs");
     assert!(outcomes.is_empty());
+}
+
+#[test]
+fn zero_workers_is_a_typed_error_not_a_panic() {
+    let jobs: Vec<Job> = (0..2).map(|i| quick_job(i, i as u64, 1)).collect();
+    let err = run_jobs(jobs, PoolConfig { workers: 0, queue_bound: 1 })
+        .expect_err("a zero-worker pool must be rejected");
+    assert!(err.to_string().contains("workers"), "{err}");
 }

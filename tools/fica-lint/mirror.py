@@ -1,0 +1,346 @@
+#!/usr/bin/env python3
+"""Toolchain-less mirror of the `fica-lint` rule engine.
+
+This script implements byte-for-byte the same semantics as the Rust
+crate in `src/` (scanner, `#[cfg(test)]` skipping, waiver grammar and
+scoping, rules R1-R4 + `bad-waiver`). It exists so the audit can be run
+in environments without a Rust toolchain; the Rust crate is the
+authoritative implementation and is what CI runs.
+
+Usage: python3 mirror.py [ROOT]   (default ROOT = ../../rust/src)
+Exit status: 0 if no unwaived violations, 1 otherwise.
+"""
+
+import os
+import re
+import sys
+
+RULES = ("no-panic", "float-accum", "nondeterminism", "fail-closed")
+SANCTIONED_FNS = {
+    # the fixed-order lane fold and pairwise tree reduction (backend/)
+    "fold_lanes", "tree_reduce", "combine", "combine_vec",
+    # the StreamingStats moment accumulators (data/stats.rs)
+    "absorb", "update", "partial",
+}
+DECODER_NAMES = ("parse", "decode", "open", "read", "load", "from_bytes", "next_chunk")
+
+
+def is_ident(c):
+    return c.isalnum() or c == "_"
+
+
+def strip_source(src):
+    """Blank comments and string/char-literal contents, preserving length
+    and newlines. Returns (code, comments) where comments is a list of
+    (byte_offset, text)."""
+    n = len(src)
+    out = list(src)
+    comments = []
+    i = 0
+
+    def blank(a, b):
+        for k in range(a, b):
+            if out[k] != "\n":
+                out[k] = " "
+
+    while i < n:
+        c = src[i]
+        nxt = src[i + 1] if i + 1 < n else ""
+        if c == "/" and nxt == "/":
+            j = i
+            while j < n and src[j] != "\n":
+                j += 1
+            comments.append((i, src[i:j]))
+            blank(i, j)
+            i = j
+        elif c == "/" and nxt == "*":
+            depth = 1
+            j = i + 2
+            while j < n and depth > 0:
+                if src[j] == "/" and j + 1 < n and src[j + 1] == "*":
+                    depth += 1
+                    j += 2
+                elif src[j] == "*" and j + 1 < n and src[j + 1] == "/":
+                    depth -= 1
+                    j += 2
+                else:
+                    j += 1
+            comments.append((i, src[i:j]))
+            blank(i, j)
+            i = j
+        elif c == '"':
+            j = i + 1
+            while j < n:
+                if src[j] == "\\":
+                    j += 2
+                elif src[j] == '"':
+                    j += 1
+                    break
+                else:
+                    j += 1
+            blank(i + 1, max(i + 1, j - 1))
+            i = j
+        elif c in ("r", "b") and (i == 0 or not is_ident(src[i - 1])):
+            # raw string r"..." / r#"..."# / byte string b"..." / br#"..."#
+            j = i + 1
+            raw = c == "r"
+            if c == "b" and j < n and src[j] == "r":
+                raw = True
+                j += 1
+            hashes = 0
+            while j < n and src[j] == "#":
+                hashes += 1
+                j += 1
+            if raw and j < n and src[j] == '"':
+                j += 1
+                end = '"' + "#" * hashes
+                k = src.find(end, j)
+                k = n if k == -1 else k + len(end)
+                blank(i + 1, max(i + 1, k - len(end)))
+                i = k
+            elif not raw and hashes == 0 and j < n and src[j] == '"':
+                # b"..." — same escape rules as a normal string
+                j += 1
+                while j < n:
+                    if src[j] == "\\":
+                        j += 2
+                    elif src[j] == '"':
+                        j += 1
+                        break
+                    else:
+                        j += 1
+                blank(i + 2, max(i + 2, j - 1))
+                i = j
+            else:
+                i += 1
+        elif c == "'":
+            # char literal vs lifetime
+            if nxt == "\\":
+                j = i + 2
+                while j < n and src[j] != "'":
+                    j += 1
+                j += 1
+                blank(i + 1, max(i + 1, j - 1))
+                i = j
+            elif i + 2 < n and src[i + 2] == "'" and nxt != "'":
+                blank(i + 1, i + 2)
+                i = i + 3
+            else:
+                i += 1  # lifetime
+        else:
+            i += 1
+    return "".join(out), comments
+
+
+def line_of(src, off):
+    return src.count("\n", 0, off) + 1
+
+
+def line_bounds(code, lineno):
+    """(start_offset, end_offset) of a 1-based line in code."""
+    lines = code.split("\n")
+    start = sum(len(l) + 1 for l in lines[: lineno - 1])
+    return start, start + len(lines[lineno - 1])
+
+
+def match_brace(code, open_idx):
+    """Index just past the `}` matching the `{` at open_idx (or len)."""
+    depth = 0
+    for j in range(open_idx, len(code)):
+        if code[j] == "{":
+            depth += 1
+        elif code[j] == "}":
+            depth -= 1
+            if depth == 0:
+                return j + 1
+    return len(code)
+
+
+def blank_cfg_test(code):
+    """Blank every item annotated #[cfg(test)] (to its closing brace or `;`)."""
+    out = list(code)
+    for m in re.finditer(r"#\[cfg\(test\)\]", code):
+        j = m.end()
+        # skip further attributes / whitespace / keywords up to `{` or `;`
+        while j < len(code) and code[j] not in "{;":
+            j += 1
+        end = match_brace(code, j) if j < len(code) and code[j] == "{" else j + 1
+        for k in range(m.start(), min(end, len(code))):
+            if out[k] != "\n":
+                out[k] = " "
+    return "".join(out)
+
+
+WAIVER_RE = re.compile(r"fica-lint:\s*allow(-file)?\(([^)]*)\)\s*(.*)", re.S)
+
+
+def parse_waivers(code, comments):
+    """Returns (waivers, file_waivers, bad) where waivers is a list of
+    (rule_set, line_start, line_end), file_waivers a set of rules, and
+    bad a list of (line, msg) for waivers lacking a justification."""
+    waivers, file_waivers, bad = [], set(), []
+    for off, text in comments:
+        m = WAIVER_RE.search(text)
+        if not m:
+            continue
+        lineno = line_of(code, off)
+        rules = {r.strip() for r in m.group(2).split(",") if r.strip()}
+        just = m.group(3).strip()
+        just = re.sub(r"^(—|–|--|-)\s*", "", just, count=1)
+        if not rules or not rules <= set(RULES):
+            bad.append((lineno, "waiver names unknown rule(s): %s" % m.group(2).strip()))
+            continue
+        if not just:
+            bad.append((lineno, "waiver without justification"))
+            continue
+        if m.group(1):  # allow-file
+            file_waivers |= rules
+            continue
+        ls, le = line_bounds(code, lineno)
+        before = code[ls:off]
+        if before.strip():  # trailing waiver: covers its own line
+            waivers.append((rules, lineno, lineno))
+        else:  # standalone: covers the next statement-or-item
+            j = le + 1
+            while j < len(code) and code[j].isspace():
+                j += 1
+            depth = 0
+            end = len(code)
+            k = j
+            while k < len(code):
+                ch = code[k]
+                if ch == "{":
+                    depth += 1
+                elif ch == "}":
+                    # depth 1→0 closes the statement's own brace group;
+                    # depth 0→-1 closes the *enclosing* block (the waived
+                    # code was a tail expression) — both end the scope.
+                    depth -= 1
+                    if depth <= 0:
+                        end = k + 1
+                        break
+                elif ch == ";" and depth <= 0:
+                    end = k + 1
+                    break
+                k += 1
+            waivers.append((rules, line_of(code, j), line_of(code, min(end, len(code) - 1))))
+    return waivers, file_waivers, bad
+
+
+def fn_ranges(code):
+    """[(name, start, end)] for every `fn name ... { ... }`."""
+    out = []
+    for m in re.finditer(r"\bfn\s+([A-Za-z0-9_]+)", code):
+        j = m.end()
+        while j < len(code) and code[j] not in "{;":
+            j += 1
+        if j < len(code) and code[j] == "{":
+            out.append((m.group(1), m.start(), match_brace(code, j)))
+    return out
+
+
+def enclosing_fn(ranges, off):
+    best = None
+    for name, a, b in ranges:
+        if a <= off < b and (best is None or a > best[1]):
+            best = (name, a)
+    return best[0] if best else None
+
+
+INT_LIT_RE = re.compile(r"^\d[\d_]*(u(8|16|32|64|size)|i(8|16|32|64|size))?$")
+
+
+def lint_file(rel, src):
+    code0, comments = strip_source(src)
+    waivers, file_waivers, bad = parse_waivers(code0, comments)
+    code = blank_cfg_test(code0)
+    ranges = fn_ranges(code)
+    viol = []  # (line, rule, msg)
+
+    def report(off, rule, msg):
+        viol.append((line_of(code, off), rule, msg))
+
+    # R1 no-panic — whole tree
+    for m in re.finditer(r"\.\s*(unwrap|expect)\s*\(", code):
+        report(m.start(), "no-panic", "`.%s()` in library code — use a typed `IcaError` path" % m.group(1))
+    for m in re.finditer(r"(?<![A-Za-z0-9_])(panic|assert|unreachable|todo|unimplemented)!\s*[\(\[{]", code):
+        report(m.start(), "no-panic", "`%s!` in library code — use `debug_assert!` or a typed error" % m.group(1))
+
+    # R2 float-accum — backend/, linalg/, data/stats.rs
+    if rel.startswith(("backend/", "linalg/")) or rel == "data/stats.rs":
+        for m in re.finditer(r"\+=", code):
+            ls, le = line_bounds(code, line_of(code, m.start()))
+            rhs = code[m.end():le].strip().rstrip(";").strip()
+            if INT_LIT_RE.match(rhs):
+                continue
+            fname = enclosing_fn(ranges, m.start())
+            if fname in SANCTIONED_FNS:
+                continue
+            report(m.start(), "float-accum", "raw `+=` accumulation outside sanctioned reduction helpers")
+        for m in re.finditer(r"\.\s*sum\s*(::\s*<[^>]*>\s*)?\(", code):
+            fname = enclosing_fn(ranges, m.start())
+            if fname in SANCTIONED_FNS:
+                continue
+            report(m.start(), "float-accum", "`.sum()` reduction outside sanctioned helpers — order must be pinned")
+
+    # R3 nondeterminism — everywhere except bench/
+    if not rel.startswith("bench/"):
+        for m in re.finditer(r"\bHashMap\b", code):
+            report(m.start(), "nondeterminism", "`HashMap` on a solver path — use `BTreeMap` or waive (lookup-only)")
+        for m in re.finditer(r"\b(SystemTime|Instant)\b", code):
+            report(m.start(), "nondeterminism", "`%s` outside bench/ — wall-clock on a solver path" % m.group(1))
+
+    # R4 fail-closed — data/ and util/json.rs
+    if rel.startswith("data/") or rel == "util/json.rs":
+        for m in re.finditer(r"\bpub\s+fn\s+([A-Za-z0-9_]+)", code):
+            name = m.group(1).lower()
+            if not any(d in name for d in DECODER_NAMES):
+                continue
+            j = m.end()
+            while j < len(code) and code[j] not in "{;":
+                j += 1
+            sig = code[m.start():j]
+            if "Result" not in sig:
+                report(m.start(), "fail-closed", "decoder `pub fn %s` must return `Result`" % m.group(1))
+
+    # Apply waivers
+    kept = []
+    for lineno, rule, msg in viol:
+        if rule in file_waivers:
+            continue
+        if any(rule in rules and a <= lineno <= b for rules, a, b in waivers):
+            continue
+        kept.append((lineno, rule, msg))
+    for lineno, msg in bad:
+        kept.append((lineno, "bad-waiver", msg))
+    kept.sort()
+    return kept
+
+
+def main():
+    root = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..", "..", "rust", "src")
+    root = os.path.normpath(root)
+    files = []
+    for dirpath, _, names in os.walk(root):
+        for nm in sorted(names):
+            if nm.endswith(".rs"):
+                files.append(os.path.join(dirpath, nm))
+    files.sort()
+    total = 0
+    for path in files:
+        rel = os.path.relpath(path, root).replace(os.sep, "/")
+        with open(path, encoding="utf-8") as fh:
+            src = fh.read()
+        for lineno, rule, msg in lint_file(rel, src):
+            print("%s:%d: [%s] %s" % (rel, lineno, rule, msg))
+            total += 1
+    if total:
+        print("fica-lint (mirror): %d violation(s)" % total)
+        return 1
+    print("fica-lint (mirror): clean (%d files)" % len(files))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,696 @@
+//! `fica-lint`: a dependency-free lint pass enforcing the determinism
+//! and safety contracts of the `faster-ica` solver core.
+//!
+//! The engine is a length-preserving source scanner (comments and
+//! string contents blanked, newlines kept so offsets map to line
+//! numbers), a `#[cfg(test)]`-item eraser, and four text rules:
+//!
+//! - **no-panic** — `.unwrap()` / `.expect()` / `panic!` / bare
+//!   `assert!` (plus `unreachable!`, `todo!`, `unimplemented!`) are
+//!   banned in non-test library code; typed [`IcaError`] paths or
+//!   `debug_assert!` are the sanctioned alternatives.
+//! - **float-accum** — raw `+=` / `.sum()` accumulation in `backend/`,
+//!   `linalg/` and `data/stats.rs` must live inside the sanctioned
+//!   fixed-order reduction helpers ([`SANCTIONED_FNS`]) so the bitwise
+//!   determinism contract stays auditable in one place.
+//! - **nondeterminism** — `HashMap`, `SystemTime` and `Instant` are
+//!   banned outside `bench/` (iteration order / wall-clock on a solver
+//!   path).
+//! - **fail-closed** — decoder-shaped `pub fn`s in `data/` and
+//!   `util/json.rs` must return `Result`.
+//!
+//! Violations are silenced by scoped waivers carrying a justification:
+//! `// fica-lint: allow(rule, ...) — why this one is sound`, either
+//! trailing (covers its own line) or standalone (covers the next
+//! statement or item), or `allow-file(rule)` for a whole file. A waiver
+//! without a justification, or naming an unknown rule, is itself a
+//! violation (`bad-waiver`).
+//!
+//! `tools/fica-lint/mirror.py` is a toolchain-less Python mirror of
+//! this engine (byte-for-byte the same semantics) for environments
+//! without cargo; this crate is what CI runs.
+//!
+//! [`IcaError`]: https://docs.rs/faster-ica
+
+use std::collections::BTreeSet;
+
+/// The four enforceable rules, in report order.
+pub const RULES: [&str; 4] = ["no-panic", "float-accum", "nondeterminism", "fail-closed"];
+
+/// Functions whose bodies may accumulate floats freely: the fixed-order
+/// lane fold and pairwise tree reduction (`backend/`), and the
+/// `StreamingStats` moment accumulators (`data/stats.rs`). Keeping the
+/// list tiny is the point — every float reduction order in the solver
+/// core is pinned inside one of these.
+pub const SANCTIONED_FNS: [&str; 7] =
+    ["fold_lanes", "tree_reduce", "combine", "combine_vec", "absorb", "update", "partial"];
+
+/// Substrings marking a `pub fn` as a decoder for the fail-closed rule.
+pub const DECODER_NAMES: [&str; 7] =
+    ["parse", "decode", "open", "read", "load", "from_bytes", "next_chunk"];
+
+const PANIC_MACROS: [&str; 5] = ["panic", "assert", "unreachable", "todo", "unimplemented"];
+
+/// One reported violation.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Violation {
+    /// 1-based source line.
+    pub line: usize,
+    /// Rule name (one of [`RULES`] or `bad-waiver`).
+    pub rule: &'static str,
+    /// Human-readable message.
+    pub msg: String,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+fn is_ascii_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+fn blank(out: &mut [char], a: usize, b: usize) {
+    for slot in out.iter_mut().take(b.min(out.len())).skip(a) {
+        if *slot != '\n' {
+            *slot = ' ';
+        }
+    }
+}
+
+fn find_chars(hay: &[char], from: usize, needle: &[char]) -> Option<usize> {
+    if needle.is_empty() || hay.len() < needle.len() {
+        return None;
+    }
+    (from..=hay.len() - needle.len()).find(|&i| &hay[i..i + needle.len()] == needle)
+}
+
+/// Blank comments and string/char-literal contents, preserving length
+/// and newlines. Returns `(code, comments)` where each comment is
+/// `(char_offset, text)`.
+pub fn strip_source(src: &str) -> (Vec<char>, Vec<(usize, String)>) {
+    let s: Vec<char> = src.chars().collect();
+    let n = s.len();
+    let mut out = s.clone();
+    let mut comments = Vec::new();
+    let mut i = 0;
+    while i < n {
+        let c = s[i];
+        let nxt = if i + 1 < n { s[i + 1] } else { '\0' };
+        if c == '/' && nxt == '/' {
+            let mut j = i;
+            while j < n && s[j] != '\n' {
+                j += 1;
+            }
+            comments.push((i, s[i..j].iter().collect()));
+            blank(&mut out, i, j);
+            i = j;
+        } else if c == '/' && nxt == '*' {
+            let mut depth = 1;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if s[j] == '/' && j + 1 < n && s[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if s[j] == '*' && j + 1 < n && s[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            comments.push((i, s[i..j].iter().collect()));
+            blank(&mut out, i, j);
+            i = j;
+        } else if c == '"' {
+            let mut j = i + 1;
+            while j < n {
+                if s[j] == '\\' {
+                    j += 2;
+                } else if s[j] == '"' {
+                    j += 1;
+                    break;
+                } else {
+                    j += 1;
+                }
+            }
+            blank(&mut out, i + 1, j.saturating_sub(1).max(i + 1));
+            i = j;
+        } else if (c == 'r' || c == 'b') && (i == 0 || !is_ident(s[i - 1])) {
+            // Raw string r"..." / r#"..."# / byte string b"..." / br#"..."#.
+            let mut j = i + 1;
+            let mut raw = c == 'r';
+            if c == 'b' && j < n && s[j] == 'r' {
+                raw = true;
+                j += 1;
+            }
+            let mut hashes = 0;
+            while j < n && s[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if raw && j < n && s[j] == '"' {
+                j += 1;
+                let mut end: Vec<char> = vec!['"'];
+                end.resize(1 + hashes, '#');
+                let k = match find_chars(&s, j, &end) {
+                    Some(k) => k + end.len(),
+                    None => n,
+                };
+                blank(&mut out, i + 1, (k - end.len().min(k)).max(i + 1));
+                i = k;
+            } else if !raw && hashes == 0 && j < n && s[j] == '"' {
+                // b"..." — same escape rules as a normal string.
+                j += 1;
+                while j < n {
+                    if s[j] == '\\' {
+                        j += 2;
+                    } else if s[j] == '"' {
+                        j += 1;
+                        break;
+                    } else {
+                        j += 1;
+                    }
+                }
+                blank(&mut out, i + 2, j.saturating_sub(1).max(i + 2));
+                i = j;
+            } else {
+                i += 1;
+            }
+        } else if c == '\'' {
+            // Char literal vs lifetime.
+            if nxt == '\\' {
+                let mut j = i + 2;
+                while j < n && s[j] != '\'' {
+                    j += 1;
+                }
+                j += 1;
+                blank(&mut out, i + 1, j.saturating_sub(1).max(i + 1));
+                i = j;
+            } else if i + 2 < n && s[i + 2] == '\'' && nxt != '\'' {
+                blank(&mut out, i + 1, i + 2);
+                i += 3;
+            } else {
+                i += 1; // lifetime
+            }
+        } else {
+            i += 1;
+        }
+    }
+    (out, comments)
+}
+
+/// 1-based line number of a char offset.
+pub fn line_of(code: &[char], off: usize) -> usize {
+    code.iter().take(off.min(code.len())).filter(|&&c| c == '\n').count() + 1
+}
+
+/// `(start, end)` char offsets of a 1-based line (end excludes the newline).
+fn line_bounds(code: &[char], lineno: usize) -> (usize, usize) {
+    let mut start = 0;
+    let mut line = 1;
+    for (i, &c) in code.iter().enumerate() {
+        if line == lineno && c == '\n' {
+            return (start, i);
+        }
+        if c == '\n' {
+            line += 1;
+            start = i + 1;
+        }
+    }
+    (start, code.len())
+}
+
+/// Index just past the `}` matching the `{` at `open_idx` (or `len`).
+fn match_brace(code: &[char], open_idx: usize) -> usize {
+    let mut depth = 0i64;
+    for (j, &c) in code.iter().enumerate().skip(open_idx) {
+        if c == '{' {
+            depth += 1;
+        } else if c == '}' {
+            depth -= 1;
+            if depth == 0 {
+                return j + 1;
+            }
+        }
+    }
+    code.len()
+}
+
+/// Blank every item annotated `#[cfg(test)]` (to its closing brace or `;`).
+pub fn blank_cfg_test(code: &mut [char]) {
+    let attr: Vec<char> = "#[cfg(test)]".chars().collect();
+    let mut starts = Vec::new();
+    let mut from = 0;
+    while let Some(i) = find_chars(code, from, &attr) {
+        starts.push(i);
+        from = i + attr.len();
+    }
+    for start in starts {
+        let mut j = start + attr.len();
+        while j < code.len() && code[j] != '{' && code[j] != ';' {
+            j += 1;
+        }
+        let end = if j < code.len() && code[j] == '{' { match_brace(code, j) } else { j + 1 };
+        let upper = end.min(code.len());
+        blank(code, start, upper);
+    }
+}
+
+/// A scoped waiver: which rules it silences, over which 1-based lines.
+#[derive(Debug, Clone)]
+pub struct Waiver {
+    rules: BTreeSet<String>,
+    line_start: usize,
+    line_end: usize,
+}
+
+/// Parsed waivers for one file.
+#[derive(Debug, Default)]
+pub struct Waivers {
+    scoped: Vec<Waiver>,
+    file_wide: BTreeSet<String>,
+    /// Malformed waivers: `(line, message)`.
+    bad: Vec<(usize, String)>,
+}
+
+fn parse_one_waiver(text: &str) -> Option<(bool, String, String)> {
+    // `fica-lint:` then ws, `allow` or `allow-file`, `(` rules `)`, rest.
+    let at = text.find("fica-lint:")?;
+    let rest = &text[at + "fica-lint:".len()..];
+    let rest = rest.trim_start();
+    let rest = rest.strip_prefix("allow")?;
+    let (file_wide, rest) = match rest.strip_prefix("-file") {
+        Some(r) => (true, r),
+        None => (false, rest),
+    };
+    let rest = rest.strip_prefix('(')?;
+    let close = rest.find(')')?;
+    let rules_raw = rest[..close].to_string();
+    let mut just = rest[close + 1..].trim().to_string();
+    for dash in ["—", "–", "--", "-"] {
+        if let Some(stripped) = just.strip_prefix(dash) {
+            just = stripped.trim_start().to_string();
+            break;
+        }
+    }
+    Some((file_wide, rules_raw, just))
+}
+
+/// Extract waivers from the comment list. `code` is the stripped source
+/// (used for line numbers and statement-scope resolution).
+pub fn parse_waivers(code: &[char], comments: &[(usize, String)]) -> Waivers {
+    let mut w = Waivers::default();
+    for (off, text) in comments {
+        let Some((file_wide, rules_raw, just)) = parse_one_waiver(text) else {
+            continue;
+        };
+        let lineno = line_of(code, *off);
+        let rules: BTreeSet<String> = rules_raw
+            .split(',')
+            .map(|r| r.trim().to_string())
+            .filter(|r| !r.is_empty())
+            .collect();
+        if rules.is_empty() || !rules.iter().all(|r| RULES.contains(&r.as_str())) {
+            w.bad.push((lineno, format!("waiver names unknown rule(s): {}", rules_raw.trim())));
+            continue;
+        }
+        if just.is_empty() {
+            w.bad.push((lineno, "waiver without justification".to_string()));
+            continue;
+        }
+        if file_wide {
+            w.file_wide.extend(rules);
+            continue;
+        }
+        let (ls, le) = line_bounds(code, lineno);
+        let trailing = code[ls..(*off).min(code.len())].iter().any(|c| !c.is_whitespace());
+        if trailing {
+            // Trailing waiver: covers its own line.
+            w.scoped.push(Waiver { rules, line_start: lineno, line_end: lineno });
+            continue;
+        }
+        // Standalone: covers the next statement-or-item. Scan from the
+        // first code char after the waiver line; the scope ends at a `;`
+        // at depth <= 0, or at the `}` that brings depth to <= 0 — the
+        // `<= 0` (not `== 0`) matters when the waived code is a match
+        // arm or tail expression, where the first `}` seen closes the
+        // *enclosing* block.
+        let mut j = le + 1;
+        while j < code.len() && code[j].is_whitespace() {
+            j += 1;
+        }
+        let mut depth = 0i64;
+        let mut end = code.len();
+        let mut k = j;
+        while k < code.len() {
+            let ch = code[k];
+            if ch == '{' {
+                depth += 1;
+            } else if ch == '}' {
+                depth -= 1;
+                if depth <= 0 {
+                    end = k + 1;
+                    break;
+                }
+            } else if ch == ';' && depth <= 0 {
+                end = k + 1;
+                break;
+            }
+            k += 1;
+        }
+        w.scoped.push(Waiver {
+            rules,
+            line_start: line_of(code, j),
+            line_end: line_of(code, end.min(code.len().saturating_sub(1))),
+        });
+    }
+    w
+}
+
+/// `(name, start, end)` char ranges of every `fn name ... { ... }`.
+fn fn_ranges(code: &[char]) -> Vec<(String, usize, usize)> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    let n = code.len();
+    while i < n {
+        // Word-boundary `fn` followed by whitespace and an identifier.
+        if code[i] == 'f'
+            && i + 1 < n
+            && code[i + 1] == 'n'
+            && (i == 0 || !is_ascii_ident(code[i - 1]))
+            && (i + 2 >= n || !is_ascii_ident(code[i + 2]))
+        {
+            let mut j = i + 2;
+            let ws_start = j;
+            while j < n && code[j].is_whitespace() {
+                j += 1;
+            }
+            if j > ws_start && j < n && is_ascii_ident(code[j]) {
+                let name_start = j;
+                while j < n && is_ascii_ident(code[j]) {
+                    j += 1;
+                }
+                let name: String = code[name_start..j].iter().collect();
+                while j < n && code[j] != '{' && code[j] != ';' {
+                    j += 1;
+                }
+                if j < n && code[j] == '{' {
+                    out.push((name, i, match_brace(code, j)));
+                }
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Name of the innermost function whose body contains `off`.
+fn enclosing_fn<'a>(ranges: &'a [(String, usize, usize)], off: usize) -> Option<&'a str> {
+    ranges
+        .iter()
+        .filter(|(_, a, b)| *a <= off && off < *b)
+        .max_by_key(|(_, a, _)| *a)
+        .map(|(name, _, _)| name.as_str())
+}
+
+/// Whether `s` is a plain integer literal (optionally suffixed), e.g.
+/// `1`, `2_000`, `1usize` — the float-accum exemption for counters.
+fn is_int_literal(s: &str) -> bool {
+    let body = ["u8", "u16", "u32", "u64", "usize", "i8", "i16", "i32", "i64", "isize"]
+        .iter()
+        .find_map(|suf| s.strip_suffix(suf))
+        .unwrap_or(s);
+    let mut chars = body.chars();
+    matches!(chars.next(), Some(c) if c.is_ascii_digit())
+        && chars.all(|c| c.is_ascii_digit() || c == '_')
+}
+
+/// Maximal ASCII identifier starting at `i` (empty if none).
+fn ident_at(code: &[char], i: usize) -> (usize, String) {
+    let mut j = i;
+    while j < code.len() && is_ascii_ident(code[j]) {
+        j += 1;
+    }
+    (j, code[i..j].iter().collect())
+}
+
+fn skip_ws(code: &[char], mut i: usize) -> usize {
+    while i < code.len() && code[i].is_whitespace() {
+        i += 1;
+    }
+    i
+}
+
+struct RuleSink {
+    viol: Vec<Violation>,
+}
+
+impl RuleSink {
+    fn report(&mut self, code: &[char], off: usize, rule: &'static str, msg: String) {
+        self.viol.push(Violation { line: line_of(code, off), rule, msg });
+    }
+}
+
+fn rule_no_panic(code: &[char], sink: &mut RuleSink) {
+    let n = code.len();
+    let mut i = 0;
+    while i < n {
+        if code[i] == '.' {
+            let j = skip_ws(code, i + 1);
+            let (k, name) = ident_at(code, j);
+            if (name == "unwrap" || name == "expect") && code.get(skip_ws(code, k)) == Some(&'(') {
+                sink.report(
+                    code,
+                    i,
+                    "no-panic",
+                    format!("`.{name}()` in library code — use a typed `IcaError` path"),
+                );
+            }
+        }
+        if is_ascii_ident(code[i]) && (i == 0 || !is_ascii_ident(code[i - 1])) {
+            let (j, name) = ident_at(code, i);
+            if PANIC_MACROS.contains(&name.as_str()) && code.get(j) == Some(&'!') {
+                let k = skip_ws(code, j + 1);
+                if matches!(code.get(k), Some('(') | Some('[') | Some('{')) {
+                    sink.report(
+                        code,
+                        i,
+                        "no-panic",
+                        format!("`{name}!` in library code — use `debug_assert!` or a typed error"),
+                    );
+                }
+            }
+            i = j;
+            continue;
+        }
+        i += 1;
+    }
+}
+
+fn rule_float_accum(code: &[char], ranges: &[(String, usize, usize)], sink: &mut RuleSink) {
+    let n = code.len();
+    let mut i = 0;
+    while i + 1 < n {
+        if code[i] == '+' && code[i + 1] == '=' {
+            let (_, le) = line_bounds(code, line_of(code, i));
+            let rhs: String = code[(i + 2).min(le)..le].iter().collect();
+            let rhs = rhs.trim().trim_end_matches(';').trim();
+            let sanctioned =
+                enclosing_fn(ranges, i).is_some_and(|f| SANCTIONED_FNS.contains(&f));
+            if !is_int_literal(rhs) && !sanctioned {
+                sink.report(
+                    code,
+                    i,
+                    "float-accum",
+                    "raw `+=` accumulation outside sanctioned reduction helpers".to_string(),
+                );
+            }
+            i += 2;
+            continue;
+        }
+        if code[i] == '.' {
+            let j = skip_ws(code, i + 1);
+            let (mut k, name) = ident_at(code, j);
+            if name == "sum" {
+                k = skip_ws(code, k);
+                // Optional turbofish `::<T>`.
+                if code.get(k) == Some(&':') && code.get(k + 1) == Some(&':') {
+                    let t = skip_ws(code, k + 2);
+                    if code.get(t) == Some(&'<') {
+                        if let Some(gt) = (t..n).find(|&p| code[p] == '>') {
+                            k = skip_ws(code, gt + 1);
+                        }
+                    }
+                }
+                if code.get(k) == Some(&'(') {
+                    let sanctioned =
+                        enclosing_fn(ranges, i).is_some_and(|f| SANCTIONED_FNS.contains(&f));
+                    if !sanctioned {
+                        sink.report(
+                            code,
+                            i,
+                            "float-accum",
+                            "`.sum()` reduction outside sanctioned helpers — order must be pinned"
+                                .to_string(),
+                        );
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+}
+
+fn rule_nondeterminism(code: &[char], sink: &mut RuleSink) {
+    let mut i = 0;
+    while i < code.len() {
+        if is_ascii_ident(code[i]) && (i == 0 || !is_ascii_ident(code[i - 1])) {
+            let (j, name) = ident_at(code, i);
+            match name.as_str() {
+                "HashMap" => sink.report(
+                    code,
+                    i,
+                    "nondeterminism",
+                    "`HashMap` on a solver path — use `BTreeMap` or waive (lookup-only)"
+                        .to_string(),
+                ),
+                "SystemTime" | "Instant" => sink.report(
+                    code,
+                    i,
+                    "nondeterminism",
+                    format!("`{name}` outside bench/ — wall-clock on a solver path"),
+                ),
+                _ => {}
+            }
+            i = j;
+            continue;
+        }
+        i += 1;
+    }
+}
+
+fn rule_fail_closed(code: &[char], sink: &mut RuleSink) {
+    let n = code.len();
+    let mut i = 0;
+    while i < n {
+        if code[i] == 'p'
+            && (i == 0 || !is_ascii_ident(code[i - 1]))
+            && code[i..].starts_with(&['p', 'u', 'b'])
+            && code.get(i + 3).is_some_and(|c| c.is_whitespace())
+        {
+            let j = skip_ws(code, i + 3);
+            if code[j..].starts_with(&['f', 'n'])
+                && code.get(j + 2).is_some_and(|c| c.is_whitespace())
+            {
+                let k = skip_ws(code, j + 2);
+                let (mut e, name) = ident_at(code, k);
+                if !name.is_empty() {
+                    let lower = name.to_lowercase();
+                    if DECODER_NAMES.iter().any(|d| lower.contains(d)) {
+                        while e < n && code[e] != '{' && code[e] != ';' {
+                            e += 1;
+                        }
+                        let sig: String = code[i..e].iter().collect();
+                        if !sig.contains("Result") {
+                            sink.report(
+                                code,
+                                i,
+                                "fail-closed",
+                                format!("decoder `pub fn {name}` must return `Result`"),
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+}
+
+/// Lint one file. `rel` is the path relative to the lint root, with `/`
+/// separators (rule applicability is path-scoped).
+pub fn lint_file(rel: &str, src: &str) -> Vec<Violation> {
+    let (code0, comments) = strip_source(src);
+    let waivers = parse_waivers(&code0, &comments);
+    let mut code = code0;
+    blank_cfg_test(&mut code);
+    let ranges = fn_ranges(&code);
+    let mut sink = RuleSink { viol: Vec::new() };
+
+    rule_no_panic(&code, &mut sink);
+    if rel.starts_with("backend/") || rel.starts_with("linalg/") || rel == "data/stats.rs" {
+        rule_float_accum(&code, &ranges, &mut sink);
+    }
+    if !rel.starts_with("bench/") {
+        rule_nondeterminism(&code, &mut sink);
+    }
+    if rel.starts_with("data/") || rel == "util/json.rs" {
+        rule_fail_closed(&code, &mut sink);
+    }
+
+    let mut kept: Vec<Violation> = sink
+        .viol
+        .into_iter()
+        .filter(|v| !waivers.file_wide.contains(v.rule))
+        .filter(|v| {
+            !waivers.scoped.iter().any(|w| {
+                w.rules.contains(v.rule) && w.line_start <= v.line && v.line <= w.line_end
+            })
+        })
+        .collect();
+    for (line, msg) in waivers.bad {
+        kept.push(Violation { line, rule: "bad-waiver", msg });
+    }
+    kept.sort();
+    kept
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_are_blanked() {
+        let src = "let s = \"panic!(\"; // .unwrap()\nlet c = '\\'';";
+        let (code, comments) = strip_source(src);
+        let text: String = code.iter().collect();
+        assert!(!text.contains("panic"));
+        assert!(!text.contains("unwrap"));
+        assert_eq!(comments.len(), 1);
+        assert_eq!(text.matches('\n').count(), src.matches('\n').count());
+    }
+
+    #[test]
+    fn raw_strings_preserve_length() {
+        let src = "let s = r#\"has .unwrap() inside\"#; x.unwrap();";
+        let (code, _) = strip_source(src);
+        assert_eq!(code.len(), src.chars().count());
+        let text: String = code.iter().collect();
+        assert_eq!(text.matches("unwrap").count(), 1);
+    }
+
+    #[test]
+    fn int_literals() {
+        assert!(is_int_literal("1"));
+        assert!(is_int_literal("2_000"));
+        assert!(is_int_literal("7usize"));
+        assert!(!is_int_literal("x"));
+        assert!(!is_int_literal("1.0"));
+        assert!(!is_int_literal(""));
+    }
+
+    #[test]
+    fn lifetime_is_not_a_char_literal() {
+        let src = "fn f<'a>(x: &'a str) { x.expect(\"e\"); }";
+        let v = lint_file("x.rs", src);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "no-panic");
+    }
+
+    #[test]
+    fn assert_eq_is_not_bare_assert() {
+        let v = lint_file("x.rs", "fn f() { assert_eq!(1, 1); debug_assert!(true); }");
+        assert!(v.is_empty(), "{v:?}");
+    }
+}

@@ -1,0 +1,72 @@
+//! CLI driver: walk a source root (default `rust/src`, the workspace
+//! layout) and report every unwaived violation.
+//!
+//! Exit status 0 when clean, 1 when violations were found, 2 on I/O
+//! problems. Output format is `path:line: [rule] message`, one per line
+//! — greppable and editor-clickable.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn collect_rs_files(root: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<_> = std::fs::read_dir(root)?.collect::<Result<Vec<_>, _>>()?;
+    entries.sort_by_key(|e| e.path());
+    for entry in entries {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn run() -> Result<bool, String> {
+    let root = std::env::args().nth(1).unwrap_or_else(|| "rust/src".to_string());
+    let root = PathBuf::from(root);
+    if !root.is_dir() {
+        return Err(format!(
+            "lint root {} is not a directory (run from the workspace root, or pass the source root as the first argument)",
+            root.display()
+        ));
+    }
+    let mut files = Vec::new();
+    collect_rs_files(&root, &mut files).map_err(|e| format!("walking {}: {e}", root.display()))?;
+    files.sort();
+
+    let mut total = 0usize;
+    for path in &files {
+        let rel: String = path
+            .strip_prefix(&root)
+            .unwrap_or(path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        for v in fica_lint::lint_file(&rel, &src) {
+            println!("{rel}:{}: [{}] {}", v.line, v.rule, v.msg);
+            total += 1;
+        }
+    }
+    if total > 0 {
+        println!("fica-lint: {total} violation(s)");
+        Ok(false)
+    } else {
+        println!("fica-lint: clean ({} files)", files.len());
+        Ok(true)
+    }
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::from(1),
+        Err(e) => {
+            eprintln!("fica-lint: error: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

@@ -1,0 +1,7 @@
+//! Fixture: a file-wide waiver silences every occurrence of its rule,
+//! and only its rule.
+
+// fica-lint: allow-file(nondeterminism) — fixture: lookup-only caches, never iterated
+
+pub type Cache = std::collections::HashMap<u64, u64>;
+pub type OtherCache = std::collections::HashMap<u64, Vec<u64>>;

@@ -1,0 +1,17 @@
+//! Fixture: a clean file. Typed errors, debug asserts, BTreeMap, and
+//! string/comment text that would trip every rule if the scanner failed
+//! to blank it: panic!("no"), x.unwrap(), HashMap, Instant, a += b.
+
+use std::collections::BTreeMap;
+
+pub fn lookup(map: &BTreeMap<String, f64>, key: &str) -> Result<f64, String> {
+    map.get(key).copied().ok_or_else(|| format!("missing key {key}"))
+}
+
+pub fn clamp_positive(x: f64) -> f64 {
+    debug_assert!(!x.is_nan());
+    let decoy = "panic!(\"inside a string\") .unwrap() HashMap Instant";
+    let raw_decoy = r#"assert!(also inside a string) SystemTime"#;
+    let _ = (decoy, raw_decoy);
+    x.max(0.0)
+}

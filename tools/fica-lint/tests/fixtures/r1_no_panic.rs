@@ -1,0 +1,33 @@
+//! Fixture: the `no-panic` rule fires exactly once — on the `.unwrap()`
+//! in `bad`. Everything else is a sanctioned alternative.
+
+/// Fine: typed error path.
+pub fn good(v: Option<u32>) -> Result<u32, String> {
+    v.ok_or_else(|| "empty".to_string())
+}
+
+/// Fine: `debug_assert!` and the `_eq`/`_ne` assert family are allowed.
+pub fn also_good(n: usize) {
+    debug_assert!(n < usize::MAX);
+    assert_eq!(n, n);
+    assert_ne!(n, n + 1);
+}
+
+/// Fine: `unwrap_or_else` is not `unwrap`.
+pub fn still_good(v: Option<u32>) -> u32 {
+    v.unwrap_or_else(|| 0)
+}
+
+pub fn bad(v: Option<u32>) -> u32 {
+    v.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn panics_in_test_code_are_fine() {
+        assert!(super::bad(Some(1)) == 1);
+        let _ = Some(2).unwrap();
+        panic!("test code is exempt");
+    }
+}

@@ -1,0 +1,35 @@
+//! Fixture: the `float-accum` rule fires exactly once — on the raw `+=`
+//! in `bad_mean`. Sanctioned helpers and integer counters are exempt.
+
+/// Sanctioned by name: accumulation order is pinned here.
+pub(crate) fn fold_lanes(xs: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    for &x in xs {
+        acc += x;
+    }
+    acc
+}
+
+/// Sanctioned by name: `.sum()` inside a reduction helper is fine.
+pub(crate) fn tree_reduce(xs: &[f64]) -> f64 {
+    xs.iter().sum()
+}
+
+/// Integer-literal RHS: a counter, not a float reduction.
+pub fn count(xs: &[f64]) -> usize {
+    let mut n = 0;
+    for x in xs {
+        if x.is_finite() {
+            n += 1;
+        }
+    }
+    n
+}
+
+pub fn bad_mean(xs: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    for &x in xs {
+        acc += x;
+    }
+    acc / xs.len() as f64
+}

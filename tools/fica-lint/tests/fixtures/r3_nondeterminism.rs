@@ -1,0 +1,13 @@
+//! Fixture: the `nondeterminism` rule fires exactly once — on the
+//! `HashMap` type alias. A BTreeMap is the sanctioned container, and
+//! mentions of Instant or SystemTime in comments are blanked before the
+//! rules run.
+
+use std::collections::BTreeMap;
+
+/// Fine: deterministic iteration order.
+pub fn ordered() -> BTreeMap<String, u32> {
+    BTreeMap::new()
+}
+
+pub type Cache = std::collections::HashMap<u64, u64>;

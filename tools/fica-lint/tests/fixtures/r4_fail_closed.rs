@@ -1,0 +1,24 @@
+//! Fixture: the `fail-closed` rule fires exactly once — on the
+//! Result-less `decode_header`. Decoder-shaped names must return
+//! `Result`; non-decoder names are not checked.
+
+pub struct Header {
+    pub rows: usize,
+}
+
+/// Fine: decoder returning Result.
+pub fn parse_header(bytes: &[u8]) -> Result<Header, String> {
+    if bytes.len() < 8 {
+        return Err("short header".to_string());
+    }
+    Ok(Header { rows: bytes.len() })
+}
+
+/// Fine: not decoder-named, plain return is allowed.
+pub fn rows_hint(h: &Header) -> usize {
+    h.rows
+}
+
+pub fn decode_header(bytes: &[u8]) -> Header {
+    Header { rows: bytes.len() }
+}

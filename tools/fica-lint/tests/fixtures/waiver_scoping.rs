@@ -1,0 +1,42 @@
+//! Fixture: waiver grammar and scoping. Silenced: the trailing waiver's
+//! own line, the standalone waiver's next statement, and the waived
+//! match arm. Still firing: the expect outside the standalone scope,
+//! plus the two unwraps under malformed waivers (each of which also
+//! reports `bad-waiver`).
+
+/// Trailing waiver silences its own line only.
+pub fn trailing(v: Option<u32>) -> u32 {
+    v.unwrap() // fica-lint: allow(no-panic) — fixture: trailing waiver covers this line
+}
+
+/// Standalone waiver covers exactly the next statement.
+pub fn standalone(v: Option<u32>, w: Option<u32>) -> u32 {
+    // fica-lint: allow(no-panic) — fixture: standalone waiver covers the next statement
+    let a = v.unwrap();
+    let b = w.expect("fires: outside the waiver scope");
+    a + b
+}
+
+pub enum Kind {
+    A,
+    B,
+}
+
+/// Standalone waiver above a match arm ends at the enclosing block close.
+pub fn match_arm(k: Kind, v: Option<u32>) -> u32 {
+    match k {
+        // fica-lint: allow(no-panic) — fixture: waiver above a match arm
+        Kind::A => v.unwrap(),
+        Kind::B => 0,
+    }
+}
+
+/// A waiver without a justification is itself a violation.
+pub fn missing_justification(v: Option<u32>) -> u32 {
+    v.unwrap() // fica-lint: allow(no-panic)
+}
+
+/// A waiver naming an unknown rule is itself a violation.
+pub fn unknown_rule(v: Option<u32>) -> u32 {
+    v.unwrap() // fica-lint: allow(no-panics) — typo'd rule name does not silence
+}

@@ -1,0 +1,140 @@
+//! Fixture-driven integration tests: each rule fires exactly once on its
+//! fixture, the clean fixture is clean, and waiver scoping (trailing,
+//! standalone, match-arm, file-wide, malformed) behaves as documented.
+
+use fica_lint::{lint_file, Violation};
+
+fn fixture(name: &str) -> String {
+    let path = format!("{}/tests/fixtures/{name}", env!("CARGO_MANIFEST_DIR"));
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("read {path}: {e}"))
+}
+
+/// 1-based line of the first source line containing `needle`.
+fn line_containing(src: &str, needle: &str) -> usize {
+    src.lines()
+        .position(|l| l.contains(needle))
+        .unwrap_or_else(|| panic!("fixture drifted: no line contains {needle:?}"))
+        + 1
+}
+
+fn lines_for(violations: &[Violation], rule: &str) -> Vec<usize> {
+    violations.iter().filter(|v| v.rule == rule).map(|v| v.line).collect()
+}
+
+#[test]
+fn no_panic_fires_exactly_once() {
+    let src = fixture("r1_no_panic.rs");
+    // R1 applies everywhere; pick a core-solver path.
+    let v = lint_file("ica/fixture.rs", &src);
+    assert_eq!(v.len(), 1, "expected exactly one violation, got {v:?}");
+    assert_eq!(v[0].rule, "no-panic");
+    assert_eq!(v[0].line, line_containing(&src, "v.unwrap()"));
+}
+
+#[test]
+fn float_accum_fires_exactly_once_in_scoped_paths() {
+    let src = fixture("r2_float_accum.rs");
+    let v = lint_file("backend/fixture.rs", &src);
+    assert_eq!(v.len(), 1, "expected exactly one violation, got {v:?}");
+    assert_eq!(v[0].rule, "float-accum");
+    // The raw += inside bad_mean, not the sanctioned fold_lanes copy.
+    let bad_mean_start = line_containing(&src, "fn bad_mean");
+    assert!(v[0].line > bad_mean_start, "fired at {} before bad_mean ({bad_mean_start})", v[0].line);
+}
+
+#[test]
+fn float_accum_is_scoped_to_reduction_paths() {
+    let src = fixture("r2_float_accum.rs");
+    // Outside backend/, linalg/, data/stats.rs the rule does not apply.
+    let v = lint_file("experiments/fixture.rs", &src);
+    assert!(v.is_empty(), "float-accum leaked outside its path scope: {v:?}");
+}
+
+#[test]
+fn nondeterminism_fires_exactly_once() {
+    let src = fixture("r3_nondeterminism.rs");
+    let v = lint_file("coordinator/fixture.rs", &src);
+    assert_eq!(v.len(), 1, "expected exactly one violation, got {v:?}");
+    assert_eq!(v[0].rule, "nondeterminism");
+    assert_eq!(v[0].line, line_containing(&src, "pub type Cache"));
+}
+
+#[test]
+fn nondeterminism_is_exempt_under_bench() {
+    let src = fixture("r3_nondeterminism.rs");
+    let v = lint_file("bench/fixture.rs", &src);
+    assert!(v.is_empty(), "bench/ should be exempt from nondeterminism: {v:?}");
+}
+
+#[test]
+fn fail_closed_fires_exactly_once() {
+    let src = fixture("r4_fail_closed.rs");
+    let v = lint_file("data/fixture.rs", &src);
+    assert_eq!(v.len(), 1, "expected exactly one violation, got {v:?}");
+    assert_eq!(v[0].rule, "fail-closed");
+    assert_eq!(v[0].line, line_containing(&src, "pub fn decode_header"));
+    assert!(v[0].msg.contains("decode_header"), "msg should name the fn: {}", v[0].msg);
+}
+
+#[test]
+fn fail_closed_is_scoped_to_decoder_paths() {
+    let src = fixture("r4_fail_closed.rs");
+    let v = lint_file("ica/fixture.rs", &src);
+    assert!(v.is_empty(), "fail-closed leaked outside data/ and util/json.rs: {v:?}");
+}
+
+#[test]
+fn clean_file_is_clean() {
+    let src = fixture("clean.rs");
+    // Lint it under the strictest path scope: all four rules active.
+    let v = lint_file("data/stats.rs", &src);
+    assert!(v.is_empty(), "clean fixture reported violations: {v:?}");
+}
+
+#[test]
+fn waiver_scoping() {
+    let src = fixture("waiver_scoping.rs");
+    let v = lint_file("ica/fixture.rs", &src);
+
+    // Silenced: trailing waiver line, standalone-covered statement, waived
+    // match arm. Firing: the expect after the standalone scope ends, plus
+    // the two unwraps whose waivers are malformed.
+    // The waiver with no justification text is the only line that *ends*
+    // with the bare `allow(no-panic)`.
+    let missing_justification = src
+        .lines()
+        .position(|l| l.trim_end().ends_with("allow(no-panic)"))
+        .expect("fixture drifted: no bare allow(no-panic) line")
+        + 1;
+    let no_panic = lines_for(&v, "no-panic");
+    assert_eq!(
+        no_panic,
+        vec![
+            line_containing(&src, "w.expect"),
+            missing_justification,
+            line_containing(&src, "allow(no-panics)"),
+        ],
+        "unexpected no-panic lines: {v:?}"
+    );
+
+    // Both malformed waivers are themselves reported.
+    let bad = lines_for(&v, "bad-waiver");
+    assert_eq!(bad.len(), 2, "expected two bad-waiver reports: {v:?}");
+    assert_eq!(v.len(), no_panic.len() + bad.len(), "unexpected extra rules: {v:?}");
+}
+
+#[test]
+fn allow_file_silences_whole_file_for_its_rule_only() {
+    let src = fixture("allow_file.rs");
+    let v = lint_file("coordinator/fixture.rs", &src);
+    assert!(v.is_empty(), "allow-file should silence both HashMaps: {v:?}");
+
+    // The same file without its waiver line fires twice.
+    let stripped: String = src
+        .lines()
+        .filter(|l| !l.contains("fica-lint:"))
+        .map(|l| format!("{l}\n"))
+        .collect();
+    let v = lint_file("coordinator/fixture.rs", &stripped);
+    assert_eq!(lines_for(&v, "nondeterminism").len(), 2, "expected both HashMaps to fire: {v:?}");
+}
