@@ -190,6 +190,7 @@ impl ChunkedBackend {
         let mut dispatched = 0usize;
         while lo < end {
             let want = self.chunk_cols.min(end - lo);
+            let read = crate::obs::stamp();
             let chunk = match self.src.next_chunk(want) {
                 Ok(Some(c)) => c,
                 // fica-lint: allow(no-panic) — same contract as `die`: a scratch file that ends early mid-solve cannot be surfaced through the infallible ComputeBackend trait
@@ -201,6 +202,11 @@ impl ChunkedBackend {
             };
             assert_eq!(chunk.rows(), self.n, "scratch changed shape mid-solve");
             let cols = chunk.cols();
+            if crate::obs::enabled() {
+                crate::obs::hist_observe("chunked.read_s", read.elapsed_s());
+                crate::obs::counter_add("chunked.chunks", 1);
+                crate::obs::counter_add("chunked.bytes", (8 * self.n * cols) as u64);
+            }
             let job = Arc::clone(&job);
             let ws = Arc::clone(&self.workspaces[dispatched % self.workspaces.len()]);
             dispatched += 1;

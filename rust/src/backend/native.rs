@@ -68,6 +68,7 @@ impl ComputeBackend for NativeBackend {
     fn stats(&mut self, w: &Mat, level: StatsLevel) -> IcaStats {
         let (n, t) = (self.n(), self.t());
         assert_eq!((w.rows(), w.cols()), (n, n));
+        crate::obs::counter_add("native.sweeps", 1);
         self.compute_y(w);
         let tf = t as f64;
 

@@ -44,6 +44,7 @@ impl WorkerPool {
     /// Spawn `workers` (clamped to >= 1) persistent worker threads.
     pub fn new(workers: usize) -> Self {
         let workers = workers.max(1);
+        crate::obs::gauge_set("pool.workers", workers as f64);
         let mut tx = Vec::with_capacity(workers);
         let mut handles = Vec::with_capacity(workers);
         for _ in 0..workers {
@@ -70,10 +71,19 @@ impl WorkerPool {
         slot: usize,
         job: impl FnOnce() -> R + Send + 'static,
     ) -> Ticket<R> {
+        crate::obs::counter_add("pool.jobs_submitted", 1);
+        let queued = crate::obs::stamp();
         let (rtx, rrx) = channel();
         let task: Task = Box::new(move || {
+            crate::obs::hist_observe("pool.wait_s", queued.elapsed_s());
+            let exec = crate::obs::stamp();
+            let r = job();
+            crate::obs::hist_observe("pool.exec_s", exec.elapsed_s());
+            // Completion is counted before the send, so a caller that has
+            // waited on every Ticket observes the full completed count.
+            crate::obs::counter_add("pool.jobs_completed", 1);
             // A dropped Ticket just discards the result.
-            let _ = rtx.send(job());
+            let _ = rtx.send(r);
         });
         // fica-lint: allow(no-panic) — the command channel only closes when a worker thread panicked out of its loop; the pool is unrecoverable and the message makes the failure diagnosable
         self.tx[slot % self.tx.len()]

@@ -116,6 +116,7 @@ pub(super) fn stats_partial(
     ysq: &mut Mat,
 ) -> Partial {
     let n = x.rows();
+    crate::obs::counter_add("shard.partials", 1);
     matmul_into(w, x, y);
     let loss_acc = sweep::loss_psi_sweep(y, psi, kernel);
     let need_h = level >= StatsLevel::H1;

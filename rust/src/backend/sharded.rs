@@ -73,6 +73,7 @@ impl ShardedBackend {
         &self,
         job: impl Fn(&mut Shard) -> Partial + Send + Sync + 'static,
     ) -> Partial {
+        crate::obs::counter_add("sharded.rounds", 1);
         let job = Arc::new(job);
         let tickets: Vec<Ticket<Partial>> = self
             .shards

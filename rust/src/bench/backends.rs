@@ -469,8 +469,11 @@ pub fn run_refits(cfg: &BackendBenchConfig) -> Vec<RefitTiming> {
     out
 }
 
-/// Build the stable `fica.bench_backend/v3` report (see
-/// `docs/BENCH_SCHEMA.md` for the field-by-field contract).
+/// Build the stable `fica.bench_backend/v4` report (see
+/// `docs/BENCH_SCHEMA.md` for the field-by-field contract). v4 adds a
+/// `meta` block — host cpu count, build profile, kernel/backend
+/// defaults — so a baseline records the machine and build that
+/// produced it; `compare` ignores it (absent in v3 baselines).
 pub fn report_json(
     cfg: &BackendBenchConfig,
     timings: &[SweepTiming],
@@ -587,8 +590,23 @@ pub fn report_json(
             Json::Obj(obj)
         })
         .collect();
+    let cpus = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let mut meta = BTreeMap::new();
+    meta.insert("cpus".into(), Json::Num(cpus as f64));
+    meta.insert(
+        "profile".into(),
+        Json::Str(if cfg!(debug_assertions) { "debug" } else { "release" }.into()),
+    );
+    meta.insert(
+        "default_kernel".into(),
+        Json::Str(SweepKernel::default().id().to_string()),
+    );
+    meta.insert("default_backend".into(), Json::Str("native".into()));
     let mut root = BTreeMap::new();
-    root.insert("schema".into(), Json::Str("fica.bench_backend/v3".into()));
+    root.insert("schema".into(), Json::Str("fica.bench_backend/v4".into()));
+    root.insert("meta".into(), Json::Obj(meta));
     root.insert("level".into(), Json::Str("h2".into()));
     root.insert(
         "kernels".into(),
@@ -651,8 +669,14 @@ mod tests {
         let report = report_json(&cfg, &timings, &fits, &refits);
         assert_eq!(
             report.get("schema").and_then(|s| s.as_str()),
-            Some("fica.bench_backend/v3")
+            Some("fica.bench_backend/v4")
         );
+        let meta = report.get("meta").expect("v4 report carries a meta block");
+        assert!(meta.get("cpus").unwrap().as_usize().unwrap() >= 1);
+        let profile = meta.get("profile").unwrap().as_str().unwrap();
+        assert!(profile == "debug" || profile == "release");
+        assert_eq!(meta.get("default_kernel").unwrap().as_str(), Some("vector"));
+        assert_eq!(meta.get("default_backend").unwrap().as_str(), Some("native"));
         let results = report.get("results").unwrap().as_arr().unwrap();
         assert_eq!(results.len(), 4);
         for r in results {

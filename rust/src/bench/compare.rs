@@ -315,6 +315,30 @@ mod tests {
         assert_eq!(out.unmatched, 1); // the vector row has no v1 counterpart
     }
 
+    /// v4 adds a `meta` root block (and a `metrics` snapshot); v3
+    /// baselines carry neither. The gate must ignore unknown root keys
+    /// on either side — pinned here so a future key-sensitive rewrite
+    /// cannot silently break old baselines.
+    #[test]
+    fn v3_baseline_without_meta_compares_clean_against_v4() {
+        let base = report(&[("native", "scalar", 1, 32, 100000, 0.5)]); // v3: no meta
+        let current = Json::parse(
+            r#"{"schema":"fica.bench_backend/v4","smoke":false,
+                "meta":{"cpus":8,"profile":"release","default_kernel":"vector","default_backend":"native"},
+                "metrics":{"counters":{"pool.jobs_submitted":12}},
+                "results":[{"backend":"native","kernel":"scalar","workers":1,"n":32,"t":100000,"median_s":0.5}],
+                "fit_results":[]}"#,
+        )
+        .unwrap();
+        let out = compare_reports(&current, &base).unwrap();
+        assert_eq!(out.compared.len(), 1);
+        assert!(!out.regressed());
+        assert_eq!(out.unmatched, 0);
+        // Both directions: a v4 baseline against a v3 current run too.
+        let out = compare_reports(&base, &current).unwrap();
+        assert!(!out.regressed());
+    }
+
     #[test]
     fn non_reports_are_rejected() {
         let r = report(&[("native", "scalar", 1, 32, 100000, 0.5)]);

@@ -25,6 +25,9 @@ pub struct Args {
     pub flags: BTreeMap<String, String>,
     /// Bare `--switch` tokens, in order of appearance.
     pub switches: Vec<String>,
+    /// Positional tokens after the command (e.g. `fica trace summarize
+    /// FILE`), in order. Commands that take none must reject leftovers.
+    pub positionals: Vec<String>,
 }
 
 impl Args {
@@ -40,7 +43,8 @@ impl Args {
         }
         while let Some(tok) = it.next() {
             let Some(name) = tok.strip_prefix("--") else {
-                return Err(format!("unexpected positional argument: {tok}"));
+                args.positionals.push(tok.clone());
+                continue;
             };
             if name.is_empty() {
                 return Err("empty flag name".into());
@@ -118,6 +122,10 @@ pub struct SolveFlags {
     pub seed: u64,
     /// Synthetic dataset scale in (0, 1] (`--scale`, default 0.25).
     pub scale: f64,
+    /// Write a `fica.trace/v1` JSONL event stream here (`--trace-out`).
+    pub trace_out: Option<String>,
+    /// Which events the trace file keeps (`--trace-level`, default all).
+    pub trace_level: crate::obs::TraceLevel,
 }
 
 impl SolveFlags {
@@ -183,6 +191,19 @@ impl SolveFlags {
         if scratch_dir.is_some() && !out_of_core {
             return Err("--scratch-dir only applies together with --out-of-core".into());
         }
+        let trace_out = args.get("trace-out").map(str::to_string);
+        let trace_level = match args.get("trace-level") {
+            None => crate::obs::TraceLevel::All,
+            Some(id) => {
+                if trace_out.is_none() {
+                    return Err(
+                        "--trace-level only applies together with --trace-out".into()
+                    );
+                }
+                crate::obs::TraceLevel::from_id(id)
+                    .ok_or_else(|| format!("unknown --trace-level {id} (span|metric|all)"))?
+            }
+        };
         Ok(SolveFlags {
             algo,
             whitener,
@@ -195,6 +216,8 @@ impl SolveFlags {
             max_iters: args.get_parse("max-iters", 200)?,
             seed: args.get_parse("seed", 0)?,
             scale: args.get_parse("scale", 0.25)?,
+            trace_out,
+            trace_level,
         })
     }
 
@@ -408,6 +431,11 @@ COMMANDS:
         --seed <u64>             dataset / solver seed (default 0)
         --scale <f64>            synthetic dataset scale 0<s<=1 (default 0.25)
         --trace                  print the per-iteration convergence trace
+        --trace-out <path>       write a structured fica.trace/v1 JSONL event
+                                 stream (spans + metrics) of the whole fit;
+                                 inspect with `fica trace summarize <path>`
+        --trace-level <id>       span|metric|all (default all): which event
+                                 kinds --trace-out keeps
     refit                        Warm-start refit of a saved model on appended samples
         --model <path>           model JSON produced by `fica fit` (must carry
                                  stored moments, i.e. schema v2)
@@ -417,7 +445,8 @@ COMMANDS:
         --format <id>            json|bin|csv (default: inferred)
         --model-out <path>       write the refitted model JSON here
         plus the `fit` solver flags (--algo/--backend/--kernel/--workers/
-        --chunk/--out-of-core/--scratch-dir/--tol/--max-iters/--trace);
+        --chunk/--out-of-core/--scratch-dir/--tol/--max-iters/--trace/
+        --trace-out/--trace-level);
         --whitener defaults to the model's whitener and may not differ
     apply                        Run a saved model on new data
         --model <path>           model JSON produced by `fica fit`
@@ -445,6 +474,12 @@ COMMANDS:
         --fixture <path>         FICA1 fixture (default
                                  tests/fixtures/tiny.bin)
         --scratch-dir <path>     out-of-core scratch dir (default: temp dir)
+    trace                        Inspect fica.trace/v1 files from --trace-out
+        summarize <path>         per-phase/per-span time table, solver
+                                 iteration provenance (direction, line-search
+                                 evals), worker-pool utilization
+        validate <path>          fail-closed schema check; exits non-zero and
+                                 names the offending line on any deviation
     info                         Library, artifact and platform summary
     run                          (deprecated) alias of `fit --data ...`
     experiment                   Regenerate a paper figure
@@ -541,6 +576,43 @@ mod tests {
         assert!(decode(&["fit", "--workers", "many"]).is_err());
         assert!(decode(&["fit", "--backend", "gpu"]).is_err());
         assert!(decode(&["fit", "--chunk", "-3"]).is_err());
+    }
+
+    #[test]
+    fn positionals_are_collected_not_rejected() {
+        let a = parse(&["trace", "summarize", "/tmp/t.jsonl"]);
+        assert_eq!(a.command, "trace");
+        assert_eq!(a.positionals, vec!["summarize", "/tmp/t.jsonl"]);
+        // Flags and positionals can interleave.
+        let a = parse(&["trace", "validate", "--chunk", "8", "f.jsonl"]);
+        assert_eq!(a.positionals, vec!["validate", "f.jsonl"]);
+        assert_eq!(a.get("chunk"), Some("8"));
+    }
+
+    #[test]
+    fn trace_flags_decode_and_validate() {
+        use crate::obs::TraceLevel;
+        let f = decode(&["fit"]).unwrap();
+        assert!(f.trace_out.is_none());
+        assert_eq!(f.trace_level, TraceLevel::All);
+        let f = decode(&["fit", "--trace-out", "/tmp/t.jsonl"]).unwrap();
+        assert_eq!(f.trace_out.as_deref(), Some("/tmp/t.jsonl"));
+        assert_eq!(f.trace_level, TraceLevel::All);
+        let f = decode(&[
+            "fit", "--trace-out", "/tmp/t.jsonl", "--trace-level", "span",
+        ])
+        .unwrap();
+        assert_eq!(f.trace_level, TraceLevel::Span);
+        // Level without an output file is contradictory.
+        let err = decode(&["fit", "--trace-level", "all"])
+            .expect_err("level without --trace-out");
+        assert!(err.contains("--trace-out"), "{err}");
+        // Unknown level ids are hard errors naming the choices.
+        let err = decode(&[
+            "fit", "--trace-out", "/tmp/t.jsonl", "--trace-level", "debug",
+        ])
+        .expect_err("unknown level");
+        assert!(err.contains("span|metric|all"), "{err}");
     }
 
     #[test]

@@ -97,7 +97,7 @@ mod tests {
     fn trace(grads: &[f64], dt: f64) -> Trace {
         let mut t = Trace::default();
         for (i, &g) in grads.iter().enumerate() {
-            t.push(IterRecord { iter: i, time: i as f64 * dt, grad_inf: g, loss: 0.0 });
+            t.push(IterRecord::state(i, i as f64 * dt, g, 0.0));
         }
         t
     }

@@ -45,6 +45,9 @@ pub enum IcaError {
     /// A serialized [`crate::estimator::IcaModel`] failed fail-closed
     /// validation (bad schema, dims, non-finite entries, parse error).
     InvalidModel { reason: String },
+    /// A `fica.trace/v1` file failed fail-closed validation (bad schema,
+    /// truncation, malformed event, inconsistent footer counts).
+    InvalidTrace { reason: String },
     /// Filesystem failure while loading/saving models or matrices.
     Io {
         /// The path or operation that failed.
@@ -64,6 +67,11 @@ impl IcaError {
     /// Shorthand for [`IcaError::InvalidModel`].
     pub fn invalid_model(reason: impl Into<String>) -> Self {
         IcaError::InvalidModel { reason: reason.into() }
+    }
+
+    /// Shorthand for [`IcaError::InvalidTrace`].
+    pub fn invalid_trace(reason: impl Into<String>) -> Self {
+        IcaError::InvalidTrace { reason: reason.into() }
     }
 
     /// Shorthand for [`IcaError::Runtime`].
@@ -104,6 +112,7 @@ impl fmt::Display for IcaError {
                 write!(f, "unknown whitener id {id:?} (expected sphering|pca)")
             }
             IcaError::InvalidModel { reason } => write!(f, "invalid model file: {reason}"),
+            IcaError::InvalidTrace { reason } => write!(f, "invalid trace file: {reason}"),
             IcaError::Io { what, source } => write!(f, "io error ({what}): {source}"),
             IcaError::Runtime { reason } => write!(f, "runtime error: {reason}"),
         }

@@ -388,6 +388,7 @@ impl Picard {
     /// rank-deficient covariance, invalid configuration, or an
     /// unavailable backend.
     pub fn fit(&self, x: &Mat) -> Result<IcaModel, IcaError> {
+        let _fit_span = crate::obs::span("fit");
         let cfg = self.solver_config();
         // try_solve re-validates; this early call (same single source of
         // truth) just fails before the O(N²T) whitening pass.
@@ -399,10 +400,16 @@ impl Picard {
             // pipeline `fit_source` uses (borrowed, not cloned), so the
             // whitened data goes straight to the scratch file.
             let mut src = MatSource::new(x);
-            let pre = preprocess_source_with(&mut src, self.whitener, &self.stream_options())?;
+            let pre = {
+                let _pre_span = crate::obs::span("preprocess");
+                preprocess_source_with(&mut src, self.whitener, &self.stream_options())?
+            };
             return self.fit_preprocessed(pre, cfg);
         }
-        let pre = preprocess(x, self.whitener)?;
+        let pre = {
+            let _pre_span = crate::obs::span("preprocess");
+            preprocess(x, self.whitener)?
+        };
         self.fit_preprocessed(pre, cfg)
     }
 
@@ -413,11 +420,15 @@ impl Picard {
     /// materialized. With [`Picard::out_of_core`], the *whitened* matrix
     /// is not materialized either.
     pub fn fit_source(&self, src: &mut dyn DataSource) -> Result<IcaModel, IcaError> {
+        let _fit_span = crate::obs::span("fit");
         let cfg = self.solver_config();
         cfg.validate()?;
         self.check_out_of_core_backend()?;
         Self::check_shape(src.rows(), src.cols())?;
-        let pre = preprocess_source_with(src, self.whitener, &self.stream_options())?;
+        let pre = {
+            let _pre_span = crate::obs::span("preprocess");
+            preprocess_source_with(src, self.whitener, &self.stream_options())?
+        };
         self.fit_preprocessed(pre, cfg)
     }
 
@@ -490,13 +501,12 @@ impl Picard {
                 src.cols()
             )));
         }
+        let _fit_span = crate::obs::span("fit");
         let seed = StreamingStats::from_snapshot(snap)?;
-        let pre = preprocess_source_seeded(
-            src,
-            self.whitener,
-            &self.stream_options(),
-            Some(seed),
-        )?;
+        let pre = {
+            let _pre_span = crate::obs::span("preprocess");
+            preprocess_source_seeded(src, self.whitener, &self.stream_options(), Some(seed))?
+        };
         self.fit_preprocessed(pre, cfg)
     }
 
@@ -548,7 +558,14 @@ impl Picard {
                 (Box::new(be), "chunked", None)
             }
         };
-        let result = try_solve_warm(backend.as_mut(), &w0, &cfg, warm_memory)?;
+        let result = {
+            let mut solve_span = crate::obs::span("solve");
+            if solve_span.is_recording() {
+                solve_span.field_str("backend", backend_name);
+                solve_span.field_u64("n", n as u64);
+            }
+            try_solve_warm(backend.as_mut(), &w0, &cfg, warm_memory)?
+        };
         let final_grad_inf =
             result.trace.last().map(|r| r.grad_inf).unwrap_or(f64::NAN);
         let u = matmul(&result.w, &k);

@@ -84,15 +84,19 @@ pub fn golden_section(
 
 /// Oracle line search for a descent direction `dir` at `w`: minimizes
 /// `α ↦ loss((I + α·dir)·W)` over (0, α_max] by bracketed golden section.
-/// `loss_at` evaluates the full loss at a candidate W.
+/// `loss_at` evaluates the full loss at a candidate W. Returns
+/// `(α*, f(α*), evals)` where `evals` counts objective evaluations —
+/// the (off-clock) work the oracle spent, reported in traces.
 pub fn oracle(
     w: &Mat,
     dir: &Mat,
     alpha_max: f64,
     mut loss_at: impl FnMut(&Mat) -> f64,
-) -> (f64, f64) {
+) -> (f64, f64, usize) {
     let n = w.rows();
+    let evals = std::cell::Cell::new(0usize);
     let mut eval = |alpha: f64| {
+        evals.set(evals.get() + 1);
         let mut step = Mat::eye(n);
         step.add_scaled_inplace(alpha, dir);
         loss_at(&crate::linalg::matmul(&step, w))
@@ -117,7 +121,8 @@ pub fn oracle(
         }
     }
     let upper = (hi * 2.0).min(alpha_max);
-    golden_section(0.0, upper, 1e-4 * upper.max(1e-12), eval)
+    let (alpha, f_alpha) = golden_section(0.0, upper, 1e-4 * upper.max(1e-12), eval);
+    (alpha, f_alpha, evals.get())
 }
 
 #[cfg(test)]
@@ -173,10 +178,11 @@ mod tests {
         // ‖(1+α)I - 2I‖² is α = 1.
         let w = Mat::eye(3);
         let dir = Mat::eye(3);
-        let (alpha, _) = oracle(&w, &dir, 10.0, |m| {
+        let (alpha, _, evals) = oracle(&w, &dir, 10.0, |m| {
             let d = m.sub(&Mat::eye(3).scale(2.0));
             d.fro_norm().powi(2)
         });
         assert!((alpha - 1.0).abs() < 1e-3, "alpha={alpha}");
+        assert!(evals > 2, "bracketing + golden section spends evals, got {evals}");
     }
 }

@@ -12,7 +12,7 @@ pub mod solver;
 pub use amari::amari_distance;
 pub use hessian::{BlockDiagHessian, HessianApprox};
 pub use lbfgs::LbfgsMemory;
-pub use monitor::{IterRecord, Trace};
+pub use monitor::{DirectionKind, IterRecord, Trace};
 #[allow(deprecated)]
 pub use solver::solve;
 pub use solver::{

@@ -54,6 +54,35 @@ impl Stopwatch {
     }
 }
 
+/// Which search direction produced the step an [`IterRecord`] describes
+/// — the per-iteration answer to "why was this iteration cheap/slow"
+/// that the run-total `gradient_fallbacks` counter cannot give.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DirectionKind {
+    /// Plain (relative) gradient descent step.
+    Gradient,
+    /// Direct solve against the block-diagonal Hessian approximation
+    /// (the elementary quasi-Newton methods, paper Alg. 2).
+    Newton,
+    /// (Preconditioned) L-BFGS two-loop direction (paper Alg. 3).
+    Lbfgs,
+    /// Gradient fallback after the primary direction's line search
+    /// failed — the expensive rescue path.
+    Fallback,
+}
+
+impl DirectionKind {
+    /// Stable id used in traces and reports.
+    pub fn id(&self) -> &'static str {
+        match self {
+            DirectionKind::Gradient => "gd",
+            DirectionKind::Newton => "newton",
+            DirectionKind::Lbfgs => "l-bfgs",
+            DirectionKind::Fallback => "fallback",
+        }
+    }
+}
+
 /// One per-iteration record.
 #[derive(Clone, Copy, Debug)]
 pub struct IterRecord {
@@ -65,6 +94,34 @@ pub struct IterRecord {
     pub grad_inf: f64,
     /// Full loss (incl. logdet term).
     pub loss: f64,
+    /// Objective evaluations the line search spent producing this state
+    /// (0 for the initial record and solvers without a line search).
+    pub ls_evals: usize,
+    /// Direction kind of the step that produced this state (`None` for
+    /// the initial record and solvers without a direction choice).
+    pub direction: Option<DirectionKind>,
+}
+
+impl IterRecord {
+    /// A record of the current state only — no step information.
+    /// Initial records, Infomax passes and the full-Newton ablation use
+    /// this; the main solver attaches step provenance via [`Self::with_step`].
+    pub fn state(iter: usize, time: f64, grad_inf: f64, loss: f64) -> Self {
+        IterRecord { iter, time, grad_inf, loss, ls_evals: 0, direction: None }
+    }
+
+    /// A record carrying the line-search cost and direction kind of the
+    /// step that produced this state.
+    pub fn with_step(
+        iter: usize,
+        time: f64,
+        grad_inf: f64,
+        loss: f64,
+        ls_evals: usize,
+        direction: Option<DirectionKind>,
+    ) -> Self {
+        IterRecord { iter, time, grad_inf, loss, ls_evals, direction }
+    }
 }
 
 /// A convergence trace for one run.
@@ -171,7 +228,7 @@ mod tests {
     fn mk_trace() -> Trace {
         let mut t = Trace::default();
         for (i, g) in [1.0, 0.5, 0.01, 1e-5].iter().enumerate() {
-            t.push(IterRecord { iter: i, time: i as f64 * 0.1, grad_inf: *g, loss: -(i as f64) });
+            t.push(IterRecord::state(i, i as f64 * 0.1, *g, -(i as f64)));
         }
         t
     }

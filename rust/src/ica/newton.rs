@@ -112,7 +112,7 @@ pub fn solve_newton(
             - Lu::new(&w).map(|lu| lu.log_abs_det()).unwrap_or(f64::NEG_INFINITY);
         let grad_inf = stats.g.inf_norm();
         sw.pause();
-        trace.push(IterRecord { iter: k, time: sw.elapsed(), grad_inf, loss });
+        trace.push(IterRecord::state(k, sw.elapsed(), grad_inf, loss));
         sw.resume();
         if grad_inf <= tol {
             converged = true;

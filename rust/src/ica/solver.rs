@@ -9,10 +9,11 @@
 use super::hessian::{BlockDiagHessian, HessianApprox};
 use super::lbfgs::{LbfgsMemory, Seed};
 use super::linesearch;
-use super::monitor::{IterRecord, Stopwatch, Trace};
+use super::monitor::{DirectionKind, IterRecord, Stopwatch, Trace};
 use crate::backend::{ComputeBackend, StatsLevel};
 use crate::error::IcaError;
 use crate::linalg::{matmul, Lu, Mat};
+use crate::obs;
 
 /// Infomax hyper-parameters (EEGLab defaults, paper §2.3.2 / §3.2).
 #[derive(Clone, Copy, Debug)]
@@ -331,11 +332,15 @@ fn solve_full_batch<B: ComputeBackend + ?Sized>(
     let mut fallbacks = 0;
     let mut converged = false;
     let mut iters = 0;
+    // Step provenance of the *previous* iteration: the record pushed at
+    // the top of iteration k describes the state that step produced.
+    let mut last_evals = 0usize;
+    let mut last_dir: Option<DirectionKind> = None;
 
     for k in 0..cfg.max_iters {
         let grad_inf = stats.g.inf_norm();
         sw.pause();
-        trace.push(IterRecord { iter: k, time: sw.elapsed(), grad_inf, loss });
+        trace.push(IterRecord::with_step(k, sw.elapsed(), grad_inf, loss, last_evals, last_dir));
         sw.resume();
         if grad_inf <= cfg.tol {
             converged = true;
@@ -345,8 +350,21 @@ fn solve_full_batch<B: ComputeBackend + ?Sized>(
             break;
         }
         iters = k + 1;
+        // Per-iteration observability span: clock reads and counters
+        // only — never feeds the arithmetic (traced fits stay bitwise
+        // identical to untraced ones, pinned in tests/test_obs.rs).
+        let mut iter_span = obs::span("solve.iter");
+        let charged0 = if iter_span.is_recording() { sw.elapsed() } else { 0.0 };
+        iter_span.field_u64("iter", k as u64);
 
         // --- Search direction -------------------------------------------------
+        // Routed here only for the full-batch algorithms (Infomax has
+        // its own driver), so the Infomax arm is dead.
+        let mut dir_kind = match cfg.algo {
+            Algorithm::GradientDescent { .. } | Algorithm::Infomax(_) => DirectionKind::Gradient,
+            Algorithm::QuasiNewton { .. } => DirectionKind::Newton,
+            Algorithm::Lbfgs { .. } => DirectionKind::Lbfgs,
+        };
         let p = match cfg.algo {
             Algorithm::GradientDescent { .. } => stats.g.scale(-1.0),
             Algorithm::QuasiNewton { approx } => {
@@ -372,31 +390,33 @@ fn solve_full_batch<B: ComputeBackend + ?Sized>(
 
         // --- Line search -------------------------------------------------------
         let oracle = matches!(cfg.algo, Algorithm::GradientDescent { oracle_ls: true });
-        let (mut alpha, mut new_loss, mut used_dir) = if oracle {
+        let (mut alpha, mut new_loss, mut ls_evals, mut used_dir) = if oracle {
             // Paper's GD baseline: near-exact line search, cost off-clock.
-            let (a, l) = sw.off_clock(|| {
+            let (a, l, ev) = sw.off_clock(|| {
                 linesearch::oracle(&w, &p, 64.0, |cand| {
                     backend.loss_data(cand) - log_abs_det_or_inf(cand)
                 })
             });
-            (a, l, p.clone())
+            (a, l, ev, p.clone())
         } else {
             let r = linesearch::backtracking(loss, cfg.ls_attempts, |a| {
                 let cand = relative_update(&w, &p, a);
                 backend.loss_data(&cand) - log_abs_det_or_inf(&cand)
             });
-            (r.alpha, r.loss, p.clone())
+            (r.alpha, r.loss, r.evals, p.clone())
         };
 
         if alpha == 0.0 || !new_loss.is_finite() {
             // §2.5: pathological direction — fall back to the plain
             // gradient, along which the objective is smooth.
             fallbacks += 1;
+            dir_kind = DirectionKind::Fallback;
             let g_dir = stats.g.scale(-1.0);
             let r = linesearch::backtracking(loss, cfg.ls_attempts + 10, |a| {
                 let cand = relative_update(&w, &g_dir, a);
                 backend.loss_data(&cand) - log_abs_det_or_inf(&cand)
             });
+            ls_evals += r.evals;
             if !r.success {
                 // No descent anywhere we looked: numerically stuck.
                 break;
@@ -421,12 +441,32 @@ fn solve_full_batch<B: ComputeBackend + ?Sized>(
         w = w_new;
         stats = new_stats;
         loss = new_loss;
+        last_evals = ls_evals;
+        last_dir = Some(dir_kind);
+        if iter_span.is_recording() {
+            iter_span.field_str("direction", dir_kind.id());
+            iter_span.field_u64("ls_evals", ls_evals as u64);
+            if let Some(mem) = memory.as_ref() {
+                iter_span.field_u64("lbfgs_len", mem.len() as u64);
+            }
+            // Mirror the stopwatch: the span's charged time excludes
+            // off-clock work (the GD oracle line search), exactly like
+            // the paper's time axis.
+            iter_span.set_charged_s(sw.elapsed() - charged0);
+        }
 
         if k + 1 == cfg.max_iters {
             // Record the state after the final step.
             let grad_inf = stats.g.inf_norm();
             sw.pause();
-            trace.push(IterRecord { iter: k + 1, time: sw.elapsed(), grad_inf, loss });
+            trace.push(IterRecord::with_step(
+                k + 1,
+                sw.elapsed(),
+                grad_inf,
+                loss,
+                ls_evals,
+                Some(dir_kind),
+            ));
             converged = grad_inf <= cfg.tol;
         }
     }
@@ -463,7 +503,7 @@ fn solve_infomax<B: ComputeBackend + ?Sized>(
         let s = backend.stats(&w, StatsLevel::Basic);
         (s.g.inf_norm(), s.loss_data - log_abs_det_or_inf(&w))
     });
-    trace.push(IterRecord { iter: 0, time: sw.elapsed(), grad_inf: g0, loss: l0 });
+    trace.push(IterRecord::state(0, sw.elapsed(), g0, l0));
     if g0 <= cfg.tol {
         converged = true;
     }
@@ -525,7 +565,7 @@ fn solve_infomax<B: ComputeBackend + ?Sized>(
             (s.g.inf_norm(), s.loss_data - log_abs_det_or_inf(&w))
         });
         sw.pause();
-        trace.push(IterRecord { iter: pass + 1, time: sw.elapsed(), grad_inf: ginf, loss });
+        trace.push(IterRecord::state(pass + 1, sw.elapsed(), ginf, loss));
         sw.resume();
         if ginf <= cfg.tol {
             converged = true;
@@ -681,6 +721,42 @@ mod tests {
             .with_max_iters(10);
         let res = try_solve(&mut be, &Mat::eye(4), &cfg).unwrap();
         assert_eq!(res.directions.len(), res.iters);
+    }
+
+    /// Satellite of the observability PR: per-iteration records carry
+    /// the step's line-search cost and direction kind, not just the
+    /// run-total fallback counter.
+    #[test]
+    fn iter_records_carry_step_provenance() {
+        let r = check_converges(
+            Algorithm::Lbfgs { precond: Some(HessianApprox::H2), memory: 7 },
+            1e-8,
+            100,
+        );
+        let recs = &r.trace.records;
+        assert!(recs.len() >= 2, "expected at least one step");
+        // The initial record describes w0: no step produced it.
+        assert_eq!(recs[0].ls_evals, 0);
+        assert!(recs[0].direction.is_none());
+        for rec in &recs[1..] {
+            assert!(rec.ls_evals >= 1, "iter {} recorded no line-search evals", rec.iter);
+            assert!(
+                matches!(rec.direction, Some(DirectionKind::Lbfgs | DirectionKind::Fallback)),
+                "iter {}: unexpected direction {:?}",
+                rec.iter,
+                rec.direction
+            );
+        }
+        // The GD oracle search reports its (off-clock) evaluation count too.
+        let (mut be, _) = laplace_problem(4, 600, 17);
+        let cfg = SolverConfig::new(Algorithm::GradientDescent { oracle_ls: true })
+            .with_tol(0.0)
+            .with_max_iters(3);
+        let res = try_solve(&mut be, &Mat::eye(4), &cfg).unwrap();
+        for rec in &res.trace.records[1..] {
+            assert!(rec.ls_evals > 2, "oracle search spends many evals, got {}", rec.ls_evals);
+            assert_eq!(rec.direction, Some(DirectionKind::Gradient));
+        }
     }
 
     #[test]

@@ -83,6 +83,7 @@ pub mod signal;
 pub mod bench;
 pub mod ica;
 pub mod linalg;
+pub mod obs;
 pub mod rng;
 pub mod testkit;
 pub mod runtime;

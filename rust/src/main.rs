@@ -12,9 +12,11 @@ use faster_ica::data::{convert_to, open_source, Format, DEFAULT_CHUNK_COLS};
 use faster_ica::estimator::IcaModel;
 use faster_ica::experiments::{self, ExperimentId};
 use faster_ica::linalg::Mat;
+use faster_ica::obs::{self, JsonlSink, MemRecorder, Recorder};
 use faster_ica::runtime::{default_artifact_dir, Engine, Registry, XlaBackend};
 use faster_ica::util::{read_matrix_json, write_matrix_json, Json};
 use std::rc::Rc;
+use std::sync::Arc;
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -25,6 +27,14 @@ fn main() {
             std::process::exit(2);
         }
     };
+    // Only `trace` takes positional operands; everywhere else a stray
+    // token is the hard error it has always been.
+    if args.command != "trace" {
+        if let Some(tok) = args.positionals.first() {
+            eprintln!("error: unexpected positional argument: {tok}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
     let code = match args.command.as_str() {
         "" | "help" => {
             println!("{USAGE}");
@@ -37,6 +47,7 @@ fn main() {
         "convert" => cmd_convert(&args),
         "bench" => cmd_bench(&args),
         "smoke" => cmd_smoke(&args),
+        "trace" => cmd_trace(&args),
         "run" => {
             eprintln!(
                 "note: `fica run` is deprecated; use `fica fit` \
@@ -108,6 +119,18 @@ fn cmd_fit(args: &Args, legacy_run: bool) -> i32 {
             flags.kernel.id()
         );
     };
+    let trace_sink = match &flags.trace_out {
+        None => None,
+        Some(path) => match JsonlSink::create(path, flags.trace_level) {
+            Ok(s) => Some(Arc::new(s)),
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        },
+    };
+    let trace_guard =
+        trace_sink.as_ref().map(|s| obs::install(Arc::clone(s) as Arc<dyn Recorder>));
     let fitted = if let Some(path) = args.get("input") {
         // bin/csv inputs stream through the data plane in column chunks;
         // json (not streamable) is loaded whole and keeps the batch
@@ -163,11 +186,24 @@ fn cmd_fit(args: &Args, legacy_run: bool) -> i32 {
     };
     let model = match fitted {
         Ok(m) => m,
+        // On a failed fit the install guard drops on return and the
+        // footer is never written — `fica trace validate` will reject
+        // the partial file (fail-closed).
         Err(e) => {
             eprintln!("fit failed: {e}");
             return 1;
         }
     };
+    drop(trace_guard);
+    if let Some(sink) = &trace_sink {
+        if let Err(e) = sink.finish() {
+            eprintln!("error: {e}");
+            return 1;
+        }
+        if let Some(path) = &flags.trace_out {
+            println!("trace written to {path}");
+        }
+    }
     let info = model.fit_info();
     if let Some(reason) = &info.backend_fallback {
         eprintln!("note: xla unavailable, fell back to native: {reason}");
@@ -270,6 +306,18 @@ fn cmd_refit(args: &Args) -> i32 {
         flags.whitener.id(),
         flags.backend.id()
     );
+    let trace_sink = match &flags.trace_out {
+        None => None,
+        Some(path) => match JsonlSink::create(path, flags.trace_level) {
+            Ok(s) => Some(Arc::new(s)),
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        },
+    };
+    let trace_guard =
+        trace_sink.as_ref().map(|s| obs::install(Arc::clone(s) as Arc<dyn Recorder>));
     let refitted = match flags.picard().warm_start(&model).fit_append(src.as_mut()) {
         Ok(m) => m,
         Err(e) => {
@@ -277,6 +325,16 @@ fn cmd_refit(args: &Args) -> i32 {
             return 1;
         }
     };
+    drop(trace_guard);
+    if let Some(sink) = &trace_sink {
+        if let Err(e) = sink.finish() {
+            eprintln!("error: {e}");
+            return 1;
+        }
+        if let Some(path) = &flags.trace_out {
+            println!("trace written to {path}");
+        }
+    }
     let info = refitted.fit_info();
     if args.has("trace") {
         for r in &info.trace.records {
@@ -440,6 +498,10 @@ fn cmd_bench(args: &Args) -> i32 {
         cfg.workers,
         if cfg.smoke { " | SMOKE" } else { "" }
     );
+    // Aggregate pool/backend metrics across the whole bench run; the
+    // snapshot lands in the report as a `metrics` block (schema v4).
+    let recorder = Arc::new(MemRecorder::new());
+    let obs_guard = obs::install(Arc::clone(&recorder) as Arc<dyn Recorder>);
     let timings = bench_backends::run(&cfg);
     println!(
         "bench: full fits ({} iters) | N in {:?} | T = {} | in-memory vs out-of-core",
@@ -451,7 +513,11 @@ fn cmd_bench(args: &Args) -> i32 {
         bench_defaults::REFIT_TOL, cfg.fit_sizes, cfg.refit_t, cfg.refit_append
     );
     let refits = bench_backends::run_refits(&cfg);
-    let report = bench_backends::report_json(&cfg, &timings, &fits, &refits);
+    drop(obs_guard);
+    let mut report = bench_backends::report_json(&cfg, &timings, &fits, &refits);
+    if let Json::Obj(ref mut m) = report {
+        m.insert("metrics".to_string(), recorder.snapshot_json());
+    }
     if let Err(e) = bench_backends::write_report(&out, &report) {
         eprintln!("error: {e}");
         return 1;
@@ -509,6 +575,59 @@ fn cmd_smoke(args: &Args) -> i32 {
         }
     }
 }
+/// `fica trace <summarize|validate> FILE.jsonl`: fail-closed reader over
+/// a `fica.trace/v1` stream. `validate` parses the whole file (schema,
+/// footer counts, per-line invariants) and reports what it holds;
+/// `summarize` renders per-phase times, per-iteration line-search
+/// counts, and pool utilization.
+fn cmd_trace(args: &Args) -> i32 {
+    let (Some(verb), Some(path)) = (args.positionals.first(), args.positionals.get(1)) else {
+        eprintln!("error: trace needs a verb and a file: fica trace <summarize|validate> FILE.jsonl\n\n{USAGE}");
+        return 2;
+    };
+    if args.positionals.len() > 2 {
+        eprintln!(
+            "error: unexpected positional argument: {}\n\n{USAGE}",
+            args.positionals[2]
+        );
+        return 2;
+    }
+    match verb.as_str() {
+        "validate" => match obs::read_trace(path) {
+            Ok(tf) => {
+                println!(
+                    "{path}: valid {schema} (level {level}, {spans} spans, {counters} counters, {gauges} gauges, {hists} hists)",
+                    schema = obs::TRACE_SCHEMA,
+                    level = tf.level.id(),
+                    spans = tf.spans.len(),
+                    counters = tf.counters.len(),
+                    gauges = tf.gauges.len(),
+                    hists = tf.hists.len(),
+                );
+                0
+            }
+            Err(e) => {
+                eprintln!("error: {path}: {e}");
+                1
+            }
+        },
+        "summarize" => match obs::read_trace(path) {
+            Ok(tf) => {
+                print!("{}", obs::summarize(&tf));
+                0
+            }
+            Err(e) => {
+                eprintln!("error: {path}: {e}");
+                1
+            }
+        },
+        other => {
+            eprintln!("error: unknown trace verb: {other} (summarize|validate)\n\n{USAGE}");
+            2
+        }
+    }
+}
+
 fn cmd_experiment(args: &Args) -> i32 {
     let id = args.get_or("id", "");
     let seeds: usize = match args.get_parse("seeds", 10) {

@@ -1,0 +1,647 @@
+//! `fica-obs`: structured tracing and metrics across the solve pipeline.
+//!
+//! A std-only, zero-dependency observability subsystem with two kinds of
+//! telemetry:
+//!
+//! - **Spans** — hierarchical timed regions (`preprocess.pass1`,
+//!   `solve.iter`, ...) with a monotonic start offset, duration, parent
+//!   id and a small set of typed fields. Span nesting is tracked with a
+//!   thread-local stack, so the span tree mirrors the call tree of the
+//!   thread that opened them.
+//! - **Metrics** — a process-wide registry of named counters, gauges and
+//!   fixed-bucket latency histograms (enough for p50/p99), fed from any
+//!   thread (worker-pool jobs included).
+//!
+//! Both flow through one [`Recorder`] trait. No recorder is installed by
+//! default; the disabled cost of every instrumentation site is a single
+//! branch on an atomic flag backed by a `OnceLock`'d handle (see
+//! [`enabled`]). Installing a recorder ([`install`]) returns an RAII
+//! [`InstallGuard`] that uninstalls on drop, so recording windows are
+//! scoped and test-friendly.
+//!
+//! The **hard contract** of this module is that observation never changes
+//! arithmetic: instrumentation sites only read clocks and bump counters —
+//! a traced fit is bitwise identical to an untraced fit (pinned by
+//! `rust/tests/test_obs.rs` across all three CPU backends). Monotonic
+//! clock reads are confined to this module behind the opaque [`Stamp`]
+//! type, keeping the `nondeterminism` lint rule's sanctioned surface
+//! small.
+//!
+//! Sinks: [`JsonlSink`] streams a fail-closed, versioned `fica.trace/v1`
+//! event file (see `docs/TRACE_SCHEMA.md`); [`MemRecorder`] aggregates
+//! metrics in memory for benches and tests. [`read_trace`] /
+//! [`summarize`] (the `fica trace` subcommand) consume the files.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
+use std::time::Instant;
+
+mod report;
+mod sink;
+
+pub use report::{read_trace, summarize, HistSnapshot, SpanEvent, TraceFile};
+pub use sink::{JsonlSink, TRACE_SCHEMA};
+
+use crate::util::Json;
+
+/// How much of the event stream a sink keeps (`--trace-level`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceLevel {
+    /// Span events only.
+    Span,
+    /// Metric events only (counters, gauges, histograms).
+    Metric,
+    /// Everything (the default).
+    All,
+}
+
+impl TraceLevel {
+    /// Decode a CLI id (`span` | `metric` | `all`).
+    pub fn from_id(id: &str) -> Option<TraceLevel> {
+        match id {
+            "span" => Some(TraceLevel::Span),
+            "metric" => Some(TraceLevel::Metric),
+            "all" => Some(TraceLevel::All),
+            _ => None,
+        }
+    }
+
+    /// The stable CLI / schema id of this level.
+    pub fn id(&self) -> &'static str {
+        match self {
+            TraceLevel::Span => "span",
+            TraceLevel::Metric => "metric",
+            TraceLevel::All => "all",
+        }
+    }
+
+    /// Whether span events are kept at this level.
+    pub fn keeps_spans(&self) -> bool {
+        matches!(self, TraceLevel::Span | TraceLevel::All)
+    }
+
+    /// Whether metric events are kept at this level.
+    pub fn keeps_metrics(&self) -> bool {
+        matches!(self, TraceLevel::Metric | TraceLevel::All)
+    }
+}
+
+/// A typed span field value (kept small and static on purpose: field
+/// names are `&'static str` and string values are too, so building a
+/// span allocates only the field `Vec`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FieldValue {
+    /// An unsigned integer field (iteration number, memory depth, ...).
+    U64(u64),
+    /// A floating-point field.
+    F64(f64),
+    /// A static string field (direction kind, backend name, ...).
+    Str(&'static str),
+}
+
+/// One finished span, as handed to [`Recorder::span`] when the guard
+/// drops.
+#[derive(Clone, Debug)]
+pub struct SpanRecord {
+    /// Process-unique span id (monotonically assigned, starts at 1).
+    pub id: u64,
+    /// Id of the enclosing span on the opening thread, if any.
+    pub parent: Option<u64>,
+    /// Static span name (`fit`, `solve.iter`, `preprocess.pass1`, ...).
+    pub name: &'static str,
+    /// Monotonic start offset in seconds since the process trace epoch.
+    pub start_s: f64,
+    /// Wall-clock duration in seconds.
+    pub dur_s: f64,
+    /// Charged duration in seconds, when the instrumented code tracks a
+    /// paper-style stopwatch ([`crate::ica::monitor::Stopwatch`]) whose
+    /// off-clock segments must be excluded; `None` means charged == wall.
+    pub charged_s: Option<f64>,
+    /// Typed fields attached while the span was open.
+    pub fields: Vec<(&'static str, FieldValue)>,
+}
+
+/// Telemetry consumer: spans stream in as they close, metrics are
+/// monotone updates. Implementations must be cheap and thread-safe —
+/// worker-pool jobs report from their own threads.
+pub trait Recorder: Send + Sync {
+    /// A span finished (guard dropped) on some thread.
+    fn span(&self, rec: &SpanRecord);
+    /// Add `v` to the named counter.
+    fn counter_add(&self, name: &str, v: u64);
+    /// Set the named gauge to `v`.
+    fn gauge_set(&self, name: &str, v: f64);
+    /// Record one observation (seconds) into the named histogram.
+    fn hist_observe(&self, name: &str, v: f64);
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static RECORDER: OnceLock<RwLock<Option<Arc<dyn Recorder>>>> = OnceLock::new();
+static NEXT_SPAN_ID: AtomicU64 = AtomicU64::new(1);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+thread_local! {
+    static SPAN_STACK: RefCell<Vec<u64>> = const { RefCell::new(Vec::new()) };
+}
+
+fn cell() -> &'static RwLock<Option<Arc<dyn Recorder>>> {
+    RECORDER.get_or_init(|| RwLock::new(None))
+}
+
+fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Whether a recorder is currently installed. This is the one branch
+/// every instrumentation site pays when tracing is off.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Uninstalls the recorder installed by [`install`] when dropped.
+#[must_use = "dropping the guard uninstalls the recorder"]
+pub struct InstallGuard {
+    _priv: (),
+}
+
+impl Drop for InstallGuard {
+    fn drop(&mut self) {
+        ENABLED.store(false, Ordering::SeqCst);
+        if let Ok(mut g) = cell().write() {
+            *g = None;
+        }
+    }
+}
+
+/// Install `r` as the process-wide recorder until the returned guard
+/// drops. Installing while another recorder is live replaces it (last
+/// install wins); tests that install must serialize on their own lock.
+pub fn install(r: Arc<dyn Recorder>) -> InstallGuard {
+    // Touch the epoch so every span offset in this recording window is
+    // relative to a single fixed instant.
+    let _ = epoch();
+    if let Ok(mut g) = cell().write() {
+        *g = Some(r);
+    }
+    ENABLED.store(true, Ordering::SeqCst);
+    InstallGuard { _priv: () }
+}
+
+fn with_recorder(f: impl FnOnce(&dyn Recorder)) {
+    if !enabled() {
+        return;
+    }
+    if let Ok(g) = cell().read() {
+        if let Some(r) = g.as_ref() {
+            f(r.as_ref());
+        }
+    }
+}
+
+/// Add `v` to the named counter (no-op when disabled).
+#[inline]
+pub fn counter_add(name: &str, v: u64) {
+    if enabled() {
+        with_recorder(|r| r.counter_add(name, v));
+    }
+}
+
+/// Set the named gauge (no-op when disabled).
+#[inline]
+pub fn gauge_set(name: &str, v: f64) {
+    if enabled() {
+        with_recorder(|r| r.gauge_set(name, v));
+    }
+}
+
+/// Record one histogram observation in seconds (no-op when disabled).
+#[inline]
+pub fn hist_observe(name: &str, v: f64) {
+    if enabled() {
+        with_recorder(|r| r.hist_observe(name, v));
+    }
+}
+
+/// An opaque monotonic timestamp: the *only* way instrumented modules
+/// read the clock, so the `Instant` identifier (and the nondeterminism
+/// lint's sanctioned surface) stays confined to `obs/`. When tracing is
+/// disabled a stamp is inert and [`Stamp::elapsed_s`] returns 0.
+#[derive(Clone, Copy, Debug)]
+pub struct Stamp(Option<Instant>);
+
+impl Stamp {
+    /// Seconds since this stamp was taken (0.0 for an inert stamp).
+    pub fn elapsed_s(&self) -> f64 {
+        match self.0 {
+            Some(t) => t.elapsed().as_secs_f64(),
+            None => 0.0,
+        }
+    }
+}
+
+/// Take a monotonic stamp, or an inert one when tracing is disabled.
+#[inline]
+pub fn stamp() -> Stamp {
+    if enabled() {
+        Stamp(Some(Instant::now()))
+    } else {
+        Stamp(None)
+    }
+}
+
+struct SpanInner {
+    id: u64,
+    parent: Option<u64>,
+    name: &'static str,
+    start: Instant,
+    start_s: f64,
+    charged_s: Option<f64>,
+    fields: Vec<(&'static str, FieldValue)>,
+}
+
+/// RAII guard for an open span: records duration and emits the
+/// [`SpanRecord`] on drop. Inert (all methods no-ops) when tracing was
+/// disabled at open time.
+pub struct SpanGuard {
+    inner: Option<SpanInner>,
+}
+
+/// Open a span named `name` as a child of the innermost open span on
+/// this thread. Returns an inert guard when tracing is disabled.
+pub fn span(name: &'static str) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { inner: None };
+    }
+    let id = NEXT_SPAN_ID.fetch_add(1, Ordering::Relaxed);
+    let parent = SPAN_STACK.with(|s| {
+        let mut s = s.borrow_mut();
+        let p = s.last().copied();
+        s.push(id);
+        p
+    });
+    let ep = epoch();
+    SpanGuard {
+        inner: Some(SpanInner {
+            id,
+            parent,
+            name,
+            start: Instant::now(),
+            start_s: ep.elapsed().as_secs_f64(),
+            charged_s: None,
+            fields: Vec::new(),
+        }),
+    }
+}
+
+impl SpanGuard {
+    /// Whether this guard is live (tracing was enabled at open time).
+    /// Use to gate field computations that would otherwise allocate.
+    pub fn is_recording(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Attach an unsigned integer field.
+    pub fn field_u64(&mut self, name: &'static str, v: u64) {
+        if let Some(inner) = self.inner.as_mut() {
+            inner.fields.push((name, FieldValue::U64(v)));
+        }
+    }
+
+    /// Attach a floating-point field.
+    pub fn field_f64(&mut self, name: &'static str, v: f64) {
+        if let Some(inner) = self.inner.as_mut() {
+            inner.fields.push((name, FieldValue::F64(v)));
+        }
+    }
+
+    /// Attach a static string field.
+    pub fn field_str(&mut self, name: &'static str, v: &'static str) {
+        if let Some(inner) = self.inner.as_mut() {
+            inner.fields.push((name, FieldValue::Str(v)));
+        }
+    }
+
+    /// Record the charged (on-stopwatch) duration of this span, mirroring
+    /// [`crate::ica::monitor::Stopwatch`] pause/resume: off-clock work
+    /// (the paper's free oracle line search) is excluded from the charge.
+    pub fn set_charged_s(&mut self, v: f64) {
+        if let Some(inner) = self.inner.as_mut() {
+            inner.charged_s = Some(v);
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(inner) = self.inner.take() {
+            SPAN_STACK.with(|s| {
+                let mut s = s.borrow_mut();
+                if s.last() == Some(&inner.id) {
+                    s.pop();
+                } else {
+                    // Out-of-order drop (guards moved across scopes):
+                    // remove just this id, keeping ancestors intact.
+                    s.retain(|&x| x != inner.id);
+                }
+            });
+            let rec = SpanRecord {
+                id: inner.id,
+                parent: inner.parent,
+                name: inner.name,
+                start_s: inner.start_s,
+                dur_s: inner.start.elapsed().as_secs_f64(),
+                charged_s: inner.charged_s,
+                fields: inner.fields,
+            };
+            with_recorder(|r| r.span(&rec));
+        }
+    }
+}
+
+/// Fixed histogram bucket upper bounds in seconds: decades from 1µs to
+/// 10s. Latencies on the solve path (chunk reads, pool jobs, whiten
+/// passes) all land comfortably inside; the overflow bucket catches the
+/// rest.
+pub const HIST_BOUNDS: [f64; 8] = [1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 1e-1, 1.0, 10.0];
+
+/// A fixed-bucket histogram over [`HIST_BOUNDS`] plus an overflow
+/// bucket. Good enough for p50/p99 at decade resolution — what the
+/// future `fica serve` daemon needs, and what `fica trace summarize`
+/// reports today.
+#[derive(Clone, Debug)]
+pub struct Hist {
+    /// Per-bucket observation counts; `counts[i]` is observations
+    /// `<= HIST_BOUNDS[i]`, the last slot is the overflow bucket.
+    pub counts: [u64; HIST_BOUNDS.len() + 1],
+    /// Total number of observations.
+    pub count: u64,
+    /// Sum of all observed values in seconds.
+    pub sum: f64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist { counts: [0; HIST_BOUNDS.len() + 1], count: 0, sum: 0.0 }
+    }
+}
+
+impl Hist {
+    /// Record one observation (seconds).
+    pub fn observe(&mut self, v: f64) {
+        let idx = HIST_BOUNDS.iter().position(|&b| v <= b).unwrap_or(HIST_BOUNDS.len());
+        self.counts[idx] += 1;
+        self.count += 1;
+        self.sum += v;
+    }
+
+    /// Upper bound of the bucket holding the `q`-quantile observation
+    /// (`q` in [0, 1]); `f64::INFINITY` for the overflow bucket, 0.0
+    /// when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).max(1);
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return if i < HIST_BOUNDS.len() { HIST_BOUNDS[i] } else { f64::INFINITY };
+            }
+        }
+        f64::INFINITY
+    }
+}
+
+/// Thread-safe registry of counters, gauges and histograms — the metric
+/// half of a recorder, shared by [`MemRecorder`] and [`JsonlSink`].
+#[derive(Default)]
+pub struct MetricsRegistry {
+    counters: Mutex<BTreeMap<String, u64>>,
+    gauges: Mutex<BTreeMap<String, f64>>,
+    hists: Mutex<BTreeMap<String, Hist>>,
+}
+
+impl MetricsRegistry {
+    /// An empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `v` to the named counter (created at 0 on first touch).
+    pub fn counter_add(&self, name: &str, v: u64) {
+        if let Ok(mut g) = self.counters.lock() {
+            *g.entry(name.to_string()).or_insert(0) += v;
+        }
+    }
+
+    /// Set the named gauge.
+    pub fn gauge_set(&self, name: &str, v: f64) {
+        if let Ok(mut g) = self.gauges.lock() {
+            g.insert(name.to_string(), v);
+        }
+    }
+
+    /// Record one observation into the named histogram.
+    pub fn hist_observe(&self, name: &str, v: f64) {
+        if let Ok(mut g) = self.hists.lock() {
+            g.entry(name.to_string()).or_default().observe(v);
+        }
+    }
+
+    /// Current value of the named counter (0 if never touched).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.lock().ok().and_then(|g| g.get(name).copied()).unwrap_or(0)
+    }
+
+    /// Snapshot of all counters.
+    pub fn counters(&self) -> BTreeMap<String, u64> {
+        self.counters.lock().map(|g| g.clone()).unwrap_or_default()
+    }
+
+    /// Snapshot of all gauges.
+    pub fn gauges(&self) -> BTreeMap<String, f64> {
+        self.gauges.lock().map(|g| g.clone()).unwrap_or_default()
+    }
+
+    /// Snapshot of all histograms.
+    pub fn hists(&self) -> BTreeMap<String, Hist> {
+        self.hists.lock().map(|g| g.clone()).unwrap_or_default()
+    }
+
+    /// Deterministic JSON snapshot:
+    /// `{"counters": {...}, "gauges": {...}, "hists": {name: {count,
+    /// sum, bounds, counts}}}` — the shape embedded into
+    /// `BENCH_backend.json` rows and the `fica.trace/v1` footer.
+    pub fn snapshot_json(&self) -> Json {
+        let mut counters = BTreeMap::new();
+        for (k, v) in self.counters() {
+            counters.insert(k, Json::Num(v as f64));
+        }
+        let mut gauges = BTreeMap::new();
+        for (k, v) in self.gauges() {
+            gauges.insert(k, Json::Num(v));
+        }
+        let mut hists = BTreeMap::new();
+        for (k, h) in self.hists() {
+            hists.insert(k, hist_json(&h));
+        }
+        let mut root = BTreeMap::new();
+        root.insert("counters".to_string(), Json::Obj(counters));
+        root.insert("gauges".to_string(), Json::Obj(gauges));
+        root.insert("hists".to_string(), Json::Obj(hists));
+        Json::Obj(root)
+    }
+}
+
+/// JSON shape of one histogram (shared by the bench snapshot and the
+/// trace sink).
+pub(crate) fn hist_json(h: &Hist) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("count".to_string(), Json::Num(h.count as f64));
+    obj.insert("sum".to_string(), Json::Num(h.sum));
+    obj.insert(
+        "bounds".to_string(),
+        Json::Arr(HIST_BOUNDS.iter().map(|&b| Json::Num(b)).collect()),
+    );
+    obj.insert(
+        "counts".to_string(),
+        Json::Arr(h.counts.iter().map(|&c| Json::Num(c as f64)).collect()),
+    );
+    Json::Obj(obj)
+}
+
+/// In-memory metrics-only recorder for benches and tests: spans are
+/// counted but not stored, metrics aggregate in a [`MetricsRegistry`].
+#[derive(Default)]
+pub struct MemRecorder {
+    metrics: MetricsRegistry,
+    spans: AtomicU64,
+}
+
+impl MemRecorder {
+    /// An empty recorder.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of spans that closed while this recorder was installed.
+    pub fn spans(&self) -> u64 {
+        self.spans.load(Ordering::Relaxed)
+    }
+
+    /// Current value of the named counter (0 if never touched).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.metrics.counter(name)
+    }
+
+    /// Snapshot of all counters.
+    pub fn counters(&self) -> BTreeMap<String, u64> {
+        self.metrics.counters()
+    }
+
+    /// Deterministic JSON snapshot (see
+    /// [`MetricsRegistry::snapshot_json`]).
+    pub fn snapshot_json(&self) -> Json {
+        self.metrics.snapshot_json()
+    }
+}
+
+impl Recorder for MemRecorder {
+    fn span(&self, _rec: &SpanRecord) {
+        self.spans.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn counter_add(&self, name: &str, v: u64) {
+        self.metrics.counter_add(name, v);
+    }
+
+    fn gauge_set(&self, name: &str, v: f64) {
+        self.metrics.gauge_set(name, v);
+    }
+
+    fn hist_observe(&self, name: &str, v: f64) {
+        self.metrics.hist_observe(name, v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Global-install behavior is tested in `rust/tests/test_obs.rs`
+    // (its own process, serialized): the lib unit tests here stay off
+    // the global handle so they can run in parallel with everything.
+
+    #[test]
+    fn trace_level_ids_round_trip() {
+        for l in [TraceLevel::Span, TraceLevel::Metric, TraceLevel::All] {
+            assert_eq!(TraceLevel::from_id(l.id()), Some(l));
+        }
+        assert_eq!(TraceLevel::from_id("verbose"), None);
+        assert!(TraceLevel::All.keeps_spans() && TraceLevel::All.keeps_metrics());
+        assert!(TraceLevel::Span.keeps_spans() && !TraceLevel::Span.keeps_metrics());
+        assert!(!TraceLevel::Metric.keeps_spans() && TraceLevel::Metric.keeps_metrics());
+    }
+
+    #[test]
+    fn disabled_sites_are_inert() {
+        // No recorder installed: spans are inert, stamps read as zero.
+        let mut s = span("test.inert");
+        assert!(!s.is_recording());
+        s.field_u64("n", 3);
+        s.set_charged_s(1.0);
+        drop(s);
+        assert_eq!(stamp().elapsed_s(), 0.0);
+        counter_add("test.counter", 1); // must not panic
+    }
+
+    #[test]
+    fn registry_counters_and_gauges() {
+        let m = MetricsRegistry::new();
+        m.counter_add("a", 2);
+        m.counter_add("a", 3);
+        m.gauge_set("g", 4.0);
+        m.gauge_set("g", 5.0);
+        assert_eq!(m.counter("a"), 5);
+        assert_eq!(m.counter("missing"), 0);
+        assert_eq!(m.gauges().get("g"), Some(&5.0));
+    }
+
+    #[test]
+    fn hist_buckets_and_quantiles() {
+        let mut h = Hist::default();
+        for _ in 0..98 {
+            h.observe(5e-4); // bucket <= 1e-3
+        }
+        h.observe(0.5); // bucket <= 1.0
+        h.observe(100.0); // overflow
+        assert_eq!(h.count, 100);
+        assert_eq!(h.quantile(0.5), 1e-3);
+        assert_eq!(h.quantile(0.98), 1e-3);
+        assert_eq!(h.quantile(0.99), 1.0);
+        assert_eq!(h.quantile(1.0), f64::INFINITY);
+        assert_eq!(Hist::default().quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn snapshot_json_is_deterministic() {
+        let m = MemRecorder::new();
+        m.counter_add("z", 1);
+        m.counter_add("a", 2);
+        m.hist_observe("lat", 1e-5);
+        m.gauge_set("w", 2.0);
+        let s = m.snapshot_json().to_string_compact();
+        assert_eq!(s, m.snapshot_json().to_string_compact());
+        assert!(s.contains("\"counters\""), "{s}");
+        assert!(s.contains("\"hists\""), "{s}");
+        let parsed = Json::parse(&s).expect("snapshot parses");
+        assert_eq!(
+            parsed.get("counters").and_then(|c| c.get("a")).and_then(Json::as_usize),
+            Some(2)
+        );
+    }
+}

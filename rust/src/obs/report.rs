@@ -1,0 +1,548 @@
+//! Reading, validating and summarizing `fica.trace/v1` files
+//! (the `fica trace validate` / `fica trace summarize` subcommands).
+//!
+//! Validation is **fail-closed**, mirroring the model/bench readers: the
+//! file must start with a versioned `header` line, end with an `end`
+//! footer whose event counts match what was actually read, and every
+//! line in between must be a well-formed event of a known kind with all
+//! required fields in range. Anything else — truncation, unknown kinds,
+//! a span charged longer than its duration, a histogram whose bucket
+//! counts disagree with its total — is a typed
+//! [`IcaError::InvalidTrace`](crate::error::IcaError) naming the line.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::sink::TRACE_SCHEMA;
+use super::TraceLevel;
+use crate::error::IcaError;
+use crate::util::Json;
+
+/// One span event decoded from a trace file.
+#[derive(Clone, Debug)]
+pub struct SpanEvent {
+    /// Process-unique span id.
+    pub id: u64,
+    /// Parent span id, if the span was nested.
+    pub parent: Option<u64>,
+    /// Span name (`fit`, `solve.iter`, ...).
+    pub name: String,
+    /// Start offset in seconds since the trace epoch.
+    pub start_s: f64,
+    /// Wall-clock duration in seconds.
+    pub dur_s: f64,
+    /// Charged (on-stopwatch) duration, when recorded.
+    pub charged_s: Option<f64>,
+    /// Typed fields attached to the span, as raw JSON values.
+    pub fields: BTreeMap<String, Json>,
+}
+
+/// One histogram decoded from a trace file.
+#[derive(Clone, Debug)]
+pub struct HistSnapshot {
+    /// Total number of observations.
+    pub count: u64,
+    /// Sum of all observations in seconds.
+    pub sum: f64,
+    /// Bucket upper bounds in seconds.
+    pub bounds: Vec<f64>,
+    /// Per-bucket counts; one longer than `bounds` (overflow last).
+    pub counts: Vec<u64>,
+}
+
+impl HistSnapshot {
+    /// Upper bound of the bucket holding the `q`-quantile observation;
+    /// `f64::INFINITY` for the overflow bucket, 0.0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).max(1);
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return match self.bounds.get(i) {
+                    Some(&b) => b,
+                    None => f64::INFINITY,
+                };
+            }
+        }
+        f64::INFINITY
+    }
+}
+
+/// A fully validated `fica.trace/v1` file.
+#[derive(Clone, Debug)]
+pub struct TraceFile {
+    /// Level the file was recorded at (from the header).
+    pub level: TraceLevel,
+    /// Span events in stream (close) order.
+    pub spans: Vec<SpanEvent>,
+    /// Final counter values.
+    pub counters: BTreeMap<String, u64>,
+    /// Final gauge values.
+    pub gauges: BTreeMap<String, f64>,
+    /// Final histograms.
+    pub hists: BTreeMap<String, HistSnapshot>,
+}
+
+fn bad(line: usize, why: impl Into<String>) -> IcaError {
+    IcaError::invalid_trace(format!("line {line}: {}", why.into()))
+}
+
+fn req_str(obj: &Json, key: &str, line: usize) -> Result<String, IcaError> {
+    obj.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| bad(line, format!("missing or non-string `{key}`")))
+}
+
+fn req_f64(obj: &Json, key: &str, line: usize) -> Result<f64, IcaError> {
+    obj.get(key)
+        .and_then(Json::as_f64)
+        .filter(|v| v.is_finite())
+        .ok_or_else(|| bad(line, format!("missing or non-finite `{key}`")))
+}
+
+fn req_u64(obj: &Json, key: &str, line: usize) -> Result<u64, IcaError> {
+    obj.get(key)
+        .and_then(Json::as_f64)
+        .filter(|v| v.is_finite() && *v >= 0.0 && v.fract() == 0.0)
+        .map(|v| v as u64)
+        .ok_or_else(|| bad(line, format!("missing or non-integer `{key}`")))
+}
+
+fn parse_span(obj: &Json, line: usize) -> Result<SpanEvent, IcaError> {
+    let id = req_u64(obj, "id", line)?;
+    if id == 0 {
+        return Err(bad(line, "span id must be >= 1"));
+    }
+    let parent = match obj.get("parent") {
+        None | Some(Json::Null) => None,
+        Some(p) => Some(
+            p.as_f64()
+                .filter(|v| v.is_finite() && *v >= 1.0 && v.fract() == 0.0)
+                .map(|v| v as u64)
+                .ok_or_else(|| bad(line, "`parent` must be null or a span id"))?,
+        ),
+    };
+    let name = req_str(obj, "name", line)?;
+    if name.is_empty() {
+        return Err(bad(line, "span `name` is empty"));
+    }
+    let start_s = req_f64(obj, "start_s", line)?;
+    let dur_s = req_f64(obj, "dur_s", line)?;
+    if start_s < 0.0 || dur_s < 0.0 {
+        return Err(bad(line, "span times must be non-negative"));
+    }
+    let charged_s = match obj.get("charged_s") {
+        None => None,
+        Some(c) => {
+            let v = c
+                .as_f64()
+                .filter(|v| v.is_finite() && *v >= 0.0)
+                .ok_or_else(|| bad(line, "`charged_s` must be a non-negative number"))?;
+            if v > dur_s + 1e-6 {
+                return Err(bad(line, format!("charged_s {v} exceeds dur_s {dur_s}")));
+            }
+            Some(v)
+        }
+    };
+    let fields = match obj.get("fields") {
+        None => BTreeMap::new(),
+        Some(Json::Obj(m)) => m.clone(),
+        Some(_) => return Err(bad(line, "`fields` must be an object")),
+    };
+    Ok(SpanEvent { id, parent, name, start_s, dur_s, charged_s, fields })
+}
+
+fn parse_hist(obj: &Json, line: usize) -> Result<HistSnapshot, IcaError> {
+    let count = req_u64(obj, "count", line)?;
+    let sum = req_f64(obj, "sum", line)?;
+    let bounds: Vec<f64> = obj
+        .get("bounds")
+        .and_then(Json::as_arr)
+        .map(|a| a.iter().filter_map(Json::as_f64).collect())
+        .ok_or_else(|| bad(line, "missing `bounds` array"))?;
+    let counts: Vec<u64> = obj
+        .get("counts")
+        .and_then(Json::as_arr)
+        .map(|a| {
+            a.iter()
+                .filter_map(|v| {
+                    v.as_f64()
+                        .filter(|x| x.is_finite() && *x >= 0.0 && x.fract() == 0.0)
+                        .map(|x| x as u64)
+                })
+                .collect()
+        })
+        .ok_or_else(|| bad(line, "missing `counts` array"))?;
+    if counts.len() != bounds.len() + 1 {
+        return Err(bad(
+            line,
+            format!("hist has {} counts for {} bounds (want bounds+1)", counts.len(), bounds.len()),
+        ));
+    }
+    if bounds.windows(2).any(|w| w[1] <= w[0]) {
+        return Err(bad(line, "hist `bounds` must be strictly increasing"));
+    }
+    let total: u64 = counts.iter().sum();
+    if total != count {
+        return Err(bad(line, format!("hist bucket counts sum to {total}, `count` says {count}")));
+    }
+    Ok(HistSnapshot { count, sum, bounds, counts })
+}
+
+/// Parse and validate an in-memory `fica.trace/v1` stream.
+fn parse_trace(text: &str) -> Result<TraceFile, IcaError> {
+    let lines: Vec<&str> = text.lines().collect();
+    let Some(first) = lines.first() else {
+        return Err(IcaError::invalid_trace("empty file"));
+    };
+    let header =
+        Json::parse(first).map_err(|e| bad(1, format!("header is not valid JSON: {e}")))?;
+    if req_str(&header, "kind", 1)? != "header" {
+        return Err(bad(1, "first line must have kind `header`"));
+    }
+    let schema = req_str(&header, "schema", 1)?;
+    if schema != TRACE_SCHEMA {
+        return Err(bad(1, format!("unknown schema `{schema}` (expected `{TRACE_SCHEMA}`)")));
+    }
+    let level_id = req_str(&header, "level", 1)?;
+    let level = TraceLevel::from_id(&level_id)
+        .ok_or_else(|| bad(1, format!("unknown level `{level_id}`")))?;
+
+    let mut spans = Vec::new();
+    let mut counters = BTreeMap::new();
+    let mut gauges = BTreeMap::new();
+    let mut hists = BTreeMap::new();
+    let mut metric_lines = 0u64;
+    let mut end: Option<(u64, u64)> = None; // (spans, metrics) declared by the footer
+
+    for (i, raw) in lines.iter().enumerate().skip(1) {
+        let line = i + 1;
+        if end.is_some() {
+            return Err(bad(line, "content after `end` record"));
+        }
+        let obj = Json::parse(raw).map_err(|e| bad(line, format!("not valid JSON: {e}")))?;
+        let kind = req_str(&obj, "kind", line)?;
+        match kind.as_str() {
+            "span" => {
+                if !level.keeps_spans() {
+                    return Err(bad(line, format!("span event in a `{level_id}`-level trace")));
+                }
+                spans.push(parse_span(&obj, line)?);
+            }
+            "counter" => {
+                let name = req_str(&obj, "name", line)?;
+                let value = req_u64(&obj, "value", line)?;
+                if counters.insert(name.clone(), value).is_some() {
+                    return Err(bad(line, format!("duplicate counter `{name}`")));
+                }
+                metric_lines += 1;
+            }
+            "gauge" => {
+                let name = req_str(&obj, "name", line)?;
+                let value = req_f64(&obj, "value", line)?;
+                if gauges.insert(name.clone(), value).is_some() {
+                    return Err(bad(line, format!("duplicate gauge `{name}`")));
+                }
+                metric_lines += 1;
+            }
+            "hist" => {
+                let name = req_str(&obj, "name", line)?;
+                let h = parse_hist(&obj, line)?;
+                if hists.insert(name.clone(), h).is_some() {
+                    return Err(bad(line, format!("duplicate hist `{name}`")));
+                }
+                metric_lines += 1;
+            }
+            "end" => {
+                end = Some((req_u64(&obj, "spans", line)?, req_u64(&obj, "metrics", line)?));
+            }
+            other => return Err(bad(line, format!("unknown event kind `{other}`"))),
+        }
+        if metric_lines > 0 && !level.keeps_metrics() {
+            return Err(bad(line, format!("metric event in a `{level_id}`-level trace")));
+        }
+    }
+
+    let Some((end_spans, end_metrics)) = end else {
+        return Err(IcaError::invalid_trace("truncated trace: no `end` record"));
+    };
+    if end_spans != spans.len() as u64 {
+        return Err(IcaError::invalid_trace(format!(
+            "footer declares {end_spans} spans, file has {}",
+            spans.len()
+        )));
+    }
+    if end_metrics != metric_lines {
+        return Err(IcaError::invalid_trace(format!(
+            "footer declares {end_metrics} metric events, file has {metric_lines}"
+        )));
+    }
+    Ok(TraceFile { level, spans, counters, gauges, hists })
+}
+
+/// Read and fully validate a `fica.trace/v1` file. Every deviation from
+/// the schema is a typed [`IcaError::InvalidTrace`](crate::error::IcaError)
+/// naming the offending line — this is the engine behind
+/// `fica trace validate`.
+pub fn read_trace(path: impl AsRef<Path>) -> Result<TraceFile, IcaError> {
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| IcaError::io(path.display().to_string(), e))?;
+    parse_trace(&text)
+}
+
+fn fmt_s(v: f64) -> String {
+    format!("{v:>10.6}")
+}
+
+fn fmt_bound(v: f64) -> String {
+    if v.is_infinite() {
+        ">10".to_string()
+    } else {
+        format!("{v:.0e}")
+    }
+}
+
+/// Render a human-readable summary of a validated trace: per-phase and
+/// per-span time tables, per-iteration solver lines (direction and
+/// line-search evaluations), worker-pool utilization, and counters.
+pub fn summarize(tf: &TraceFile) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("trace summary ({TRACE_SCHEMA}, level {})\n", tf.level.id()));
+
+    // Phases: top-level (parentless) spans, in stream order.
+    let phases: Vec<&SpanEvent> = tf.spans.iter().filter(|s| s.parent.is_none()).collect();
+    if !phases.is_empty() {
+        out.push_str("\nphases (top-level spans):\n");
+        for p in &phases {
+            out.push_str(&format!("  {:<24} {}s", p.name, fmt_s(p.dur_s)));
+            if let Some(c) = p.charged_s {
+                out.push_str(&format!("  charged {}s", fmt_s(c)));
+            }
+            out.push('\n');
+        }
+    }
+
+    // Per-name aggregates: count, total, mean, total charged.
+    if !tf.spans.is_empty() {
+        let mut agg: BTreeMap<&str, (u64, f64, f64, bool)> = BTreeMap::new();
+        for s in &tf.spans {
+            let e = agg.entry(s.name.as_str()).or_insert((0, 0.0, 0.0, false));
+            e.0 += 1;
+            e.1 += s.dur_s;
+            if let Some(c) = s.charged_s {
+                e.2 += c;
+                e.3 = true;
+            }
+        }
+        out.push_str(&format!(
+            "\nspans:\n  {:<24} {:>6} {:>10} {:>10} {:>10}\n",
+            "name", "count", "total_s", "mean_s", "charged_s"
+        ));
+        for (name, (count, total, charged, has_charged)) in &agg {
+            let mean = total / *count as f64;
+            let charged_col =
+                if *has_charged { format!("{charged:>10.6}") } else { format!("{:>10}", "-") };
+            out.push_str(&format!(
+                "  {name:<24} {count:>6} {total:>10.6} {mean:>10.6} {charged_col}\n"
+            ));
+        }
+    }
+
+    // Solver iterations: direction kind and line-search eval counts.
+    let iters: Vec<&SpanEvent> = tf.spans.iter().filter(|s| s.name == "solve.iter").collect();
+    if !iters.is_empty() {
+        out.push_str(&format!(
+            "\nsolver iterations:\n  {:>6} {:<10} {:>8} {:>10} {:>10}\n",
+            "iter", "direction", "ls_evals", "dur_s", "charged_s"
+        ));
+        const MAX_ITER_LINES: usize = 50;
+        for s in iters.iter().take(MAX_ITER_LINES) {
+            let iter = s
+                .fields
+                .get("iter")
+                .and_then(Json::as_usize)
+                .map(|v| v.to_string())
+                .unwrap_or_else(|| "?".to_string());
+            let dir = s
+                .fields
+                .get("direction")
+                .and_then(Json::as_str)
+                .unwrap_or("?")
+                .to_string();
+            let evals = s
+                .fields
+                .get("ls_evals")
+                .and_then(Json::as_usize)
+                .map(|v| v.to_string())
+                .unwrap_or_else(|| "?".to_string());
+            let charged = match s.charged_s {
+                Some(c) => format!("{c:>10.6}"),
+                None => format!("{:>10}", "-"),
+            };
+            out.push_str(&format!(
+                "  {iter:>6} {dir:<10} {evals:>8} {:>10.6} {charged}\n",
+                s.dur_s
+            ));
+        }
+        if iters.len() > MAX_ITER_LINES {
+            out.push_str(&format!("  ... ({} more)\n", iters.len() - MAX_ITER_LINES));
+        }
+    }
+
+    // Worker pool: job counts, wait/exec quantiles, utilization.
+    let submitted = tf.counters.get("pool.jobs_submitted").copied();
+    let completed = tf.counters.get("pool.jobs_completed").copied();
+    if submitted.is_some() || completed.is_some() {
+        out.push_str("\nworker pool:\n");
+        out.push_str(&format!(
+            "  jobs: {} submitted, {} completed",
+            submitted.unwrap_or(0),
+            completed.unwrap_or(0)
+        ));
+        if let Some(w) = tf.gauges.get("pool.workers") {
+            out.push_str(&format!(", workers {w:.0}"));
+        }
+        out.push('\n');
+        if let Some(h) = tf.hists.get("pool.wait_s") {
+            out.push_str(&format!(
+                "  queue wait  p50/p99 <= {} / {} s\n",
+                fmt_bound(h.quantile(0.5)),
+                fmt_bound(h.quantile(0.99))
+            ));
+        }
+        if let Some(h) = tf.hists.get("pool.exec_s") {
+            out.push_str(&format!(
+                "  execute     p50/p99 <= {} / {} s\n",
+                fmt_bound(h.quantile(0.5)),
+                fmt_bound(h.quantile(0.99))
+            ));
+            let window: f64 = phases.iter().map(|p| p.dur_s).sum();
+            if let Some(&w) = tf.gauges.get("pool.workers") {
+                if w >= 1.0 && window > 0.0 {
+                    let util = (h.sum / (w * window)).clamp(0.0, 1.0);
+                    out.push_str(&format!(
+                        "  utilization: {:.1}% (exec-time share of {w:.0} workers over {window:.3}s of top-level spans)\n",
+                        util * 100.0
+                    ));
+                }
+            }
+        }
+    }
+
+    if !tf.counters.is_empty() {
+        out.push_str("\ncounters:\n");
+        for (name, v) in &tf.counters {
+            out.push_str(&format!("  {name:<28} {v}\n"));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn valid_trace() -> String {
+        [
+            r#"{"kind":"header","level":"all","schema":"fica.trace/v1"}"#,
+            r#"{"kind":"span","dur_s":0.5,"id":2,"name":"solve.iter","parent":1,"start_s":0.1,"charged_s":0.4,"fields":{"direction":"l-bfgs","iter":0,"ls_evals":1}}"#,
+            r#"{"kind":"span","dur_s":1.0,"id":1,"name":"fit","parent":null,"start_s":0.0}"#,
+            r#"{"kind":"counter","name":"pool.jobs_submitted","value":8}"#,
+            r#"{"kind":"counter","name":"pool.jobs_completed","value":8}"#,
+            r#"{"kind":"gauge","name":"pool.workers","value":4}"#,
+            r#"{"kind":"hist","name":"pool.exec_s","count":2,"sum":0.011,"bounds":[1e-6,1e-5,1e-4,1e-3,1e-2,1e-1,1.0,10.0],"counts":[0,0,0,1,1,0,0,0,0]}"#,
+            r#"{"kind":"end","metrics":4,"spans":2}"#,
+        ]
+        .join("\n")
+    }
+
+    #[test]
+    fn valid_stream_parses() {
+        let tf = parse_trace(&valid_trace()).expect("valid trace");
+        assert_eq!(tf.level, TraceLevel::All);
+        assert_eq!(tf.spans.len(), 2);
+        assert_eq!(tf.spans[0].parent, Some(1));
+        assert_eq!(tf.spans[0].charged_s, Some(0.4));
+        assert_eq!(tf.counters.get("pool.jobs_submitted"), Some(&8));
+        assert_eq!(tf.hists.get("pool.exec_s").map(|h| h.count), Some(2));
+    }
+
+    #[test]
+    fn truncation_and_malformed_lines_are_rejected() {
+        // Empty.
+        assert!(parse_trace("").is_err());
+        let full = valid_trace();
+        let lines: Vec<String> = full.lines().map(str::to_string).collect();
+        // Missing footer.
+        let no_end = lines[..lines.len() - 1].join("\n");
+        let err = parse_trace(&no_end).unwrap_err();
+        assert!(format!("{err}").contains("truncated"), "{err}");
+        // Footer count mismatch.
+        let mut wrong = lines[..lines.len() - 1].to_vec();
+        wrong.push(r#"{"kind":"end","metrics":4,"spans":99}"#.to_string());
+        assert!(parse_trace(&wrong.join("\n")).is_err());
+        // Garbage line.
+        let mut garbage = lines.clone();
+        garbage.insert(2, "not json at all".to_string());
+        assert!(parse_trace(&garbage.join("\n")).is_err());
+        // Unknown kind.
+        let mut unknown = lines.clone();
+        unknown.insert(2, r#"{"kind":"mystery"}"#.to_string());
+        assert!(parse_trace(&unknown.join("\n")).is_err());
+        // Bad schema.
+        let swapped = full.replace("fica.trace/v1", "fica.trace/v999");
+        assert!(parse_trace(&swapped).is_err());
+        // Charged > dur.
+        let over = full.replace("\"charged_s\":0.4", "\"charged_s\":9.4");
+        assert!(parse_trace(&over).is_err());
+    }
+
+    #[test]
+    fn hist_internal_consistency_is_enforced() {
+        // counts summing to the wrong total.
+        let broken = valid_trace().replace("\"count\":2", "\"count\":3");
+        let err = parse_trace(&broken).unwrap_err();
+        assert!(format!("{err}").contains("bucket counts"), "{err}");
+        // wrong counts length.
+        let short = valid_trace().replace("[0,0,0,1,1,0,0,0,0]", "[1,1]");
+        assert!(parse_trace(&short).is_err());
+    }
+
+    #[test]
+    fn level_mismatch_is_rejected() {
+        // A span event inside a metric-level trace.
+        let t = valid_trace().replace("\"level\":\"all\"", "\"level\":\"metric\"");
+        assert!(parse_trace(&t).is_err());
+    }
+
+    #[test]
+    fn summarize_reports_phases_iters_and_pool() {
+        let tf = parse_trace(&valid_trace()).expect("valid trace");
+        let s = summarize(&tf);
+        assert!(s.contains("phases (top-level spans)"), "{s}");
+        assert!(s.contains("fit"), "{s}");
+        assert!(s.contains("solver iterations"), "{s}");
+        assert!(s.contains("l-bfgs"), "{s}");
+        assert!(s.contains("worker pool"), "{s}");
+        assert!(s.contains("8 submitted, 8 completed"), "{s}");
+        assert!(s.contains("utilization"), "{s}");
+    }
+
+    #[test]
+    fn hist_snapshot_quantiles() {
+        let h = HistSnapshot {
+            count: 4,
+            sum: 0.4,
+            bounds: vec![1e-3, 1e-2],
+            counts: vec![3, 0, 1],
+        };
+        assert_eq!(h.quantile(0.5), 1e-3);
+        assert_eq!(h.quantile(1.0), f64::INFINITY);
+    }
+}

@@ -1,0 +1,208 @@
+//! [`JsonlSink`]: the `fica.trace/v1` JSONL event-stream sink.
+//!
+//! One JSON object per line, serialized with the crate's deterministic
+//! [`Json`] writer (sorted keys, compact). The stream is **fail-closed**:
+//! a well-formed file starts with a `header` line carrying the schema id
+//! and ends with an `end` line carrying event counts — readers reject
+//! anything truncated, malformed or unversioned (see
+//! [`super::read_trace`]). Span events stream out as their guards drop;
+//! metrics aggregate in memory and are flushed as `counter` / `gauge` /
+//! `hist` lines by [`JsonlSink::finish`], which writes the footer.
+//!
+//! The first write error sticks: later events are dropped and the error
+//! surfaces from `finish()` — so a full disk yields a typed error and an
+//! invalid (footer-less) file, never a silently half-written "valid" one.
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{self, BufWriter, Write};
+use std::path::Path;
+use std::sync::Mutex;
+
+use super::{hist_json, FieldValue, MetricsRegistry, Recorder, SpanRecord, TraceLevel};
+use crate::error::IcaError;
+use crate::util::Json;
+
+/// Schema id on the header line of every trace file.
+pub const TRACE_SCHEMA: &str = "fica.trace/v1";
+
+struct SinkState {
+    out: BufWriter<File>,
+    spans: u64,
+    err: Option<io::Error>,
+    finished: bool,
+}
+
+/// Streaming JSONL recorder writing the versioned `fica.trace/v1` format
+/// (documented field-by-field in `docs/TRACE_SCHEMA.md`).
+///
+/// Usage: create, [`super::install`] (an `Arc` of it), run the traced
+/// work, drop the install guard, then call [`JsonlSink::finish`] — a
+/// file without the footer `finish` writes fails validation, by design.
+pub struct JsonlSink {
+    level: TraceLevel,
+    state: Mutex<SinkState>,
+    metrics: MetricsRegistry,
+    path: String,
+}
+
+fn span_json(rec: &SpanRecord) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("kind".to_string(), Json::Str("span".to_string()));
+    obj.insert("id".to_string(), Json::Num(rec.id as f64));
+    obj.insert(
+        "parent".to_string(),
+        match rec.parent {
+            Some(p) => Json::Num(p as f64),
+            None => Json::Null,
+        },
+    );
+    obj.insert("name".to_string(), Json::Str(rec.name.to_string()));
+    obj.insert("start_s".to_string(), Json::Num(rec.start_s));
+    obj.insert("dur_s".to_string(), Json::Num(rec.dur_s));
+    if let Some(c) = rec.charged_s {
+        obj.insert("charged_s".to_string(), Json::Num(c));
+    }
+    if !rec.fields.is_empty() {
+        let mut fields = BTreeMap::new();
+        for (k, v) in &rec.fields {
+            let jv = match v {
+                FieldValue::U64(u) => Json::Num(*u as f64),
+                FieldValue::F64(x) => Json::Num(*x),
+                FieldValue::Str(s) => Json::Str(s.to_string()),
+            };
+            fields.insert(k.to_string(), jv);
+        }
+        obj.insert("fields".to_string(), Json::Obj(fields));
+    }
+    Json::Obj(obj)
+}
+
+impl JsonlSink {
+    /// Create (truncate) `path` and write the `fica.trace/v1` header
+    /// line. `level` selects which event kinds the file keeps.
+    pub fn create(path: impl AsRef<Path>, level: TraceLevel) -> Result<JsonlSink, IcaError> {
+        let path = path.as_ref();
+        let display = path.display().to_string();
+        let file = File::create(path).map_err(|e| IcaError::io(display.clone(), e))?;
+        let mut out = BufWriter::new(file);
+        let mut header = BTreeMap::new();
+        header.insert("kind".to_string(), Json::Str("header".to_string()));
+        header.insert("level".to_string(), Json::Str(level.id().to_string()));
+        header.insert("schema".to_string(), Json::Str(TRACE_SCHEMA.to_string()));
+        writeln!(out, "{}", Json::Obj(header).to_string_compact())
+            .map_err(|e| IcaError::io(display.clone(), e))?;
+        Ok(JsonlSink {
+            level,
+            state: Mutex::new(SinkState { out, spans: 0, err: None, finished: false }),
+            metrics: MetricsRegistry::new(),
+            path: display,
+        })
+    }
+
+    /// Flush aggregated metrics and the fail-closed `end` footer, then
+    /// flush the writer. Returns the first write error the sink hit at
+    /// any point (in which case the file has no footer and will fail
+    /// `fica trace validate` — that is the fail-closed contract).
+    pub fn finish(&self) -> Result<(), IcaError> {
+        let Ok(mut st) = self.state.lock() else {
+            return Err(IcaError::runtime("trace sink lock poisoned"));
+        };
+        if st.finished {
+            return Err(IcaError::runtime(format!(
+                "trace sink for {} already finished",
+                self.path
+            )));
+        }
+        st.finished = true;
+        if let Some(e) = st.err.take() {
+            return Err(IcaError::io(self.path.clone(), e));
+        }
+        let mut res: io::Result<()> = Ok(());
+        let mut metrics_written = 0u64;
+        if self.level.keeps_metrics() {
+            for (name, v) in self.metrics.counters() {
+                if res.is_err() {
+                    break;
+                }
+                let mut obj = BTreeMap::new();
+                obj.insert("kind".to_string(), Json::Str("counter".to_string()));
+                obj.insert("name".to_string(), Json::Str(name));
+                obj.insert("value".to_string(), Json::Num(v as f64));
+                res = writeln!(st.out, "{}", Json::Obj(obj).to_string_compact());
+                if res.is_ok() {
+                    metrics_written += 1;
+                }
+            }
+            for (name, v) in self.metrics.gauges() {
+                if res.is_err() {
+                    break;
+                }
+                let mut obj = BTreeMap::new();
+                obj.insert("kind".to_string(), Json::Str("gauge".to_string()));
+                obj.insert("name".to_string(), Json::Str(name));
+                obj.insert("value".to_string(), Json::Num(v));
+                res = writeln!(st.out, "{}", Json::Obj(obj).to_string_compact());
+                if res.is_ok() {
+                    metrics_written += 1;
+                }
+            }
+            for (name, h) in self.metrics.hists() {
+                if res.is_err() {
+                    break;
+                }
+                let mut obj = match hist_json(&h) {
+                    Json::Obj(m) => m,
+                    _ => BTreeMap::new(),
+                };
+                obj.insert("kind".to_string(), Json::Str("hist".to_string()));
+                obj.insert("name".to_string(), Json::Str(name));
+                res = writeln!(st.out, "{}", Json::Obj(obj).to_string_compact());
+                if res.is_ok() {
+                    metrics_written += 1;
+                }
+            }
+        }
+        if res.is_ok() {
+            let mut end = BTreeMap::new();
+            end.insert("kind".to_string(), Json::Str("end".to_string()));
+            end.insert("metrics".to_string(), Json::Num(metrics_written as f64));
+            end.insert("spans".to_string(), Json::Num(st.spans as f64));
+            res = writeln!(st.out, "{}", Json::Obj(end).to_string_compact());
+        }
+        if res.is_ok() {
+            res = st.out.flush();
+        }
+        res.map_err(|e| IcaError::io(self.path.clone(), e))
+    }
+}
+
+impl Recorder for JsonlSink {
+    fn span(&self, rec: &SpanRecord) {
+        if !self.level.keeps_spans() {
+            return;
+        }
+        if let Ok(mut st) = self.state.lock() {
+            if st.err.is_some() || st.finished {
+                return;
+            }
+            let line = span_json(rec).to_string_compact();
+            match writeln!(st.out, "{line}") {
+                Ok(()) => st.spans += 1,
+                Err(e) => st.err = Some(e),
+            }
+        }
+    }
+
+    fn counter_add(&self, name: &str, v: u64) {
+        self.metrics.counter_add(name, v);
+    }
+
+    fn gauge_set(&self, name: &str, v: f64) {
+        self.metrics.gauge_set(name, v);
+    }
+
+    fn hist_observe(&self, name: &str, v: f64) {
+        self.metrics.hist_observe(name, v);
+    }
+}

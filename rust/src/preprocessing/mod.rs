@@ -410,21 +410,30 @@ pub fn preprocess_source_seeded(
     let mut stats = seed.unwrap_or_else(|| StreamingStats::new(n));
     let base_count = stats.count();
     src.reset()?;
+    let mut pass1_span = crate::obs::span("preprocess.pass1");
     match &pool {
-        None => {
-            while let Some(chunk) = src.next_chunk(chunk_cols)? {
-                check_rows(&chunk, n, src)?;
-                if check_finite && !chunk.as_slice().iter().all(|v| v.is_finite()) {
-                    return Err(IcaError::NonFinite {
-                        what: format!("input data from {label}"),
-                    });
-                }
-                stats.update(&chunk);
+        None => loop {
+            let read = crate::obs::stamp();
+            let Some(chunk) = src.next_chunk(chunk_cols)? else { break };
+            crate::obs::hist_observe("preprocess.read_s", read.elapsed_s());
+            crate::obs::counter_add("preprocess.chunks", 1);
+            crate::obs::counter_add("preprocess.bytes", (8 * n * chunk.cols()) as u64);
+            check_rows(&chunk, n, src)?;
+            if check_finite && !chunk.as_slice().iter().all(|v| v.is_finite()) {
+                return Err(IcaError::NonFinite {
+                    what: format!("input data from {label}"),
+                });
             }
-        }
+            stats.update(&chunk);
+        },
         Some(pool) => {
             let mut pipe = Pipeline::new(pool);
-            while let Some(chunk) = src.next_chunk(chunk_cols)? {
+            loop {
+                let read = crate::obs::stamp();
+                let Some(chunk) = src.next_chunk(chunk_cols)? else { break };
+                crate::obs::hist_observe("preprocess.read_s", read.elapsed_s());
+                crate::obs::counter_add("preprocess.chunks", 1);
+                crate::obs::counter_add("preprocess.bytes", (8 * n * chunk.cols()) as u64);
                 check_rows(&chunk, n, src)?;
                 if chunk.cols() == 0 {
                     continue;
@@ -452,6 +461,11 @@ pub fn preprocess_source_seeded(
     let c = stats.covariance()?;
     let k = whitening_from_cov(&c, whitener)?;
     let moments = stats.snapshot();
+    if pass1_span.is_recording() {
+        pass1_span.field_u64("samples", t as u64);
+        pass1_span.field_u64("chunk_cols", chunk_cols as u64);
+    }
+    drop(pass1_span);
 
     // Pass 2: center + whiten chunk by chunk into the sink. The scratch
     // file (if any) is guarded by an RAII [`ScratchFile`], so an error
@@ -473,13 +487,21 @@ pub fn preprocess_source_seeded(
         WhitenSink::Mem { xw: Mat::zeros(n, t), off: 0 }
     };
     src.reset()?;
+    let mut pass2_span = crate::obs::span("preprocess.pass2");
     match &pool {
         None => {
             // Reusable whitened-chunk buffer (reallocated only for the
             // final short chunk).
             let mut wchunk = Mat::zeros(0, 0);
-            while let Some(chunk) = src.next_chunk(chunk_cols)? {
+            loop {
+                let read = crate::obs::stamp();
+                let Some(chunk) = src.next_chunk(chunk_cols)? else { break };
+                crate::obs::hist_observe("preprocess.read_s", read.elapsed_s());
+                crate::obs::counter_add("preprocess.chunks", 1);
+                crate::obs::counter_add("preprocess.bytes", (8 * n * chunk.cols()) as u64);
+                let whiten = crate::obs::stamp();
                 whiten_chunk_into(chunk, &k, &means, check_finite, n, &label, &mut wchunk)?;
+                crate::obs::hist_observe("preprocess.whiten_s", whiten.elapsed_s());
                 sink.push(&wchunk, src)?;
             }
         }
@@ -487,11 +509,18 @@ pub fn preprocess_source_seeded(
             let k = Arc::new(k.clone());
             let means = Arc::new(means.clone());
             let mut pipe = Pipeline::new(pool);
-            while let Some(chunk) = src.next_chunk(chunk_cols)? {
+            loop {
+                let read = crate::obs::stamp();
+                let Some(chunk) = src.next_chunk(chunk_cols)? else { break };
+                crate::obs::hist_observe("preprocess.read_s", read.elapsed_s());
+                crate::obs::counter_add("preprocess.chunks", 1);
+                crate::obs::counter_add("preprocess.bytes", (8 * n * chunk.cols()) as u64);
                 let (k, means, label) = (Arc::clone(&k), Arc::clone(&means), label.clone());
                 if let Some(wchunk) = pipe.submit(move || {
                     let mut out = Mat::zeros(0, 0);
+                    let whiten = crate::obs::stamp();
                     whiten_chunk_into(chunk, &k, &means, check_finite, n, &label, &mut out)?;
+                    crate::obs::hist_observe("preprocess.whiten_s", whiten.elapsed_s());
                     Ok::<Mat, IcaError>(out)
                 }) {
                     sink.push(&wchunk?, src)?;
@@ -503,6 +532,10 @@ pub fn preprocess_source_seeded(
         }
     }
     let x = sink.finish(n, t, src)?;
+    if pass2_span.is_recording() {
+        pass2_span.field_str("sink", if opts.out_of_core { "scratch" } else { "mem" });
+    }
+    drop(pass2_span);
     Ok(Preprocessed { x, k, means, moments })
 }
 

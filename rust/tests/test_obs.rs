@@ -1,0 +1,267 @@
+//! Integration tests for the fica-obs tracing layer (ISSUE 7):
+//!
+//! - the hard contract: a traced fit is **bitwise identical** to an
+//!   untraced fit on every backend (native, sharded, chunked
+//!   out-of-core) — instrumentation reads clocks and bumps counters,
+//!   never touches the numerics,
+//! - a `JsonlSink` stream survives the `read_trace` round-trip
+//!   (validate-clean) and `summarize` reports phases, solver
+//!   iterations, and pool utilization from it,
+//! - malformed / truncated streams are typed [`IcaError::InvalidTrace`]
+//!   errors, never panics (fail-closed),
+//! - pool counters are exact: jobs submitted == jobs completed == jobs
+//!   the caller waited on, for 1 and 4 workers,
+//! - `--trace-level` filtering holds at the sink: a `metric` trace
+//!   carries no spans, a `span` trace no metrics.
+//!
+//! The recorder is process-global, so every test that installs one
+//! serializes on [`OBS_LOCK`] (untraced control fits run inside the
+//! lock too, guaranteeing no recorder is live for them).
+
+use faster_ica::backend::WorkerPool;
+use faster_ica::bench::defaults;
+use faster_ica::data::{read_dense, BinSource, MemSource};
+use faster_ica::error::IcaError;
+use faster_ica::estimator::{BackendChoice, IcaModel, Picard};
+use faster_ica::linalg::Mat;
+use faster_ica::obs::{self, JsonlSink, MemRecorder, Recorder, TraceLevel};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+const FIXTURE: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/tiny.bin");
+
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+/// Serialize recorder installs across this binary's test threads. A
+/// poisoned lock just means another test failed while holding it.
+fn obs_serial() -> MutexGuard<'static, ()> {
+    OBS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tmp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("fica_obs_{}_{tag}.jsonl", std::process::id()))
+}
+
+fn fixture_matrix() -> Mat {
+    let mut src = BinSource::open(FIXTURE).expect("fixture present");
+    read_dense(&mut src, defaults::FIXTURE_CHUNK).expect("fixture readable")
+}
+
+fn fixture_picard() -> Picard {
+    Picard::new().chunk_cols(defaults::FIXTURE_CHUNK).tol(defaults::FIXTURE_TOL)
+}
+
+/// The three CPU execution paths the bitwise contract must cover.
+fn traced_configs() -> Vec<(&'static str, Picard)> {
+    vec![
+        ("native", fixture_picard()),
+        ("sharded", fixture_picard().backend(BackendChoice::Sharded { workers: 2 })),
+        ("chunked", fixture_picard().out_of_core(true)),
+    ]
+}
+
+fn assert_models_bitwise_equal(a: &IcaModel, b: &IcaModel, what: &str) {
+    assert!(
+        a.w().max_abs_diff(b.w()) == 0.0,
+        "{what}: unmixing matrices must match bitwise"
+    );
+    assert!(
+        a.whitening_matrix().max_abs_diff(b.whitening_matrix()) == 0.0,
+        "{what}: whitening matrices must match bitwise"
+    );
+    assert_eq!(a.row_means(), b.row_means(), "{what}: row means");
+    assert_eq!(a.fit_info().iters, b.fit_info().iters, "{what}: iteration counts");
+}
+
+/// The acceptance contract: tracing must not perturb a single bit of
+/// the fit on any backend.
+#[test]
+fn traced_fit_is_bitwise_identical_to_untraced() {
+    let _serial = obs_serial();
+    let full = fixture_matrix();
+    for (name, p) in traced_configs() {
+        let untraced = p
+            .fit_source(&mut MemSource::new(full.clone()))
+            .expect("untraced fit");
+        let path = tmp_path(&format!("bitwise_{name}"));
+        let sink = Arc::new(JsonlSink::create(&path, TraceLevel::All).expect("sink"));
+        let guard = obs::install(Arc::clone(&sink) as Arc<dyn Recorder>);
+        let traced = p
+            .fit_source(&mut MemSource::new(full.clone()))
+            .expect("traced fit");
+        drop(guard);
+        sink.finish().expect("finish");
+        assert_models_bitwise_equal(&traced, &untraced, name);
+        // And the stream it left behind is validate-clean.
+        obs::read_trace(&path).expect("traced fit must leave a valid trace");
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+/// A full fit's JSONL stream round-trips through the fail-closed reader
+/// and summarize reports every section the CLI promises.
+#[test]
+fn jsonl_stream_roundtrips_and_summarizes() {
+    let _serial = obs_serial();
+    let path = tmp_path("roundtrip");
+    let sink = Arc::new(JsonlSink::create(&path, TraceLevel::All).expect("sink"));
+    let guard = obs::install(Arc::clone(&sink) as Arc<dyn Recorder>);
+    let model = fixture_picard()
+        .backend(BackendChoice::Sharded { workers: 2 })
+        .fit_source(&mut MemSource::new(fixture_matrix()))
+        .expect("traced fit");
+    drop(guard);
+    sink.finish().expect("finish");
+    assert!(model.fit_info().converged);
+
+    let tf = obs::read_trace(&path).expect("stream must validate");
+    assert_eq!(tf.level, TraceLevel::All);
+    let names: Vec<&str> = tf.spans.iter().map(|s| s.name.as_str()).collect();
+    for expected in ["fit", "preprocess", "preprocess.pass1", "preprocess.pass2", "solve", "solve.iter"] {
+        assert!(names.contains(&expected), "missing span {expected:?} in {names:?}");
+    }
+    // Every span closed inside the `fit` window is parented.
+    let fit_id = tf.spans.iter().find(|s| s.name == "fit").map(|s| s.id).expect("fit span");
+    assert!(
+        tf.spans.iter().any(|s| s.parent == Some(fit_id)),
+        "fit must have child spans"
+    );
+    // Per-iteration line-search counts rode along as span fields.
+    let iters: Vec<_> = tf.spans.iter().filter(|s| s.name == "solve.iter").collect();
+    assert_eq!(iters.len(), model.fit_info().iters, "one span per solver iteration");
+    for it in &iters {
+        let ls = it.fields.get("ls_evals").and_then(|v| v.as_f64()).expect("ls_evals field");
+        assert!(ls >= 1.0, "every iteration evaluates the loss at least once");
+        assert!(it.fields.contains_key("direction"), "direction field present");
+    }
+    // The sharded pool accounted for every job it ran.
+    let submitted = tf.counters.get("pool.jobs_submitted").copied().unwrap_or(0);
+    let completed = tf.counters.get("pool.jobs_completed").copied().unwrap_or(0);
+    assert!(submitted > 0, "a sharded fit submits pool jobs");
+    assert_eq!(submitted, completed, "all submitted jobs completed");
+    assert_eq!(tf.gauges.get("pool.workers").copied(), Some(2.0));
+
+    let summary = obs::summarize(&tf);
+    for expected in [
+        "phases (top-level spans)",
+        "fit",
+        "solver iterations",
+        "worker pool",
+        "utilization",
+    ] {
+        assert!(summary.contains(expected), "summary missing {expected:?}:\n{summary}");
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+/// `--trace-level` filtering holds at the sink: `metric` keeps the
+/// stream span-free, `span` keeps it metric-free, and both still
+/// validate (level is recorded in the header).
+#[test]
+fn trace_level_filters_at_the_sink() {
+    let _serial = obs_serial();
+    for (level, tag) in [(TraceLevel::Metric, "metric"), (TraceLevel::Span, "span")] {
+        let path = tmp_path(&format!("level_{tag}"));
+        let sink = Arc::new(JsonlSink::create(&path, level).expect("sink"));
+        let guard = obs::install(Arc::clone(&sink) as Arc<dyn Recorder>);
+        fixture_picard()
+            .backend(BackendChoice::Sharded { workers: 2 })
+            .fit_source(&mut MemSource::new(fixture_matrix()))
+            .expect("traced fit");
+        drop(guard);
+        sink.finish().expect("finish");
+        let tf = obs::read_trace(&path).expect("filtered stream must validate");
+        assert_eq!(tf.level, level);
+        match level {
+            TraceLevel::Metric => {
+                assert!(tf.spans.is_empty(), "metric level must drop spans");
+                assert!(!tf.counters.is_empty(), "metric level keeps counters");
+            }
+            _ => {
+                assert!(!tf.spans.is_empty(), "span level keeps spans");
+                assert!(tf.counters.is_empty(), "span level must drop metrics");
+                assert!(tf.hists.is_empty(), "span level must drop histograms");
+            }
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+/// Fail-closed reading: garbage, schema drift, and truncation are all
+/// typed [`IcaError::InvalidTrace`] errors that name the problem.
+#[test]
+fn malformed_and_truncated_traces_are_typed_errors() {
+    let expect_invalid = |text: &str, needle: &str, what: &str| {
+        let path = tmp_path(&format!("bad_{what}"));
+        std::fs::write(&path, text).expect("write fixture");
+        match obs::read_trace(&path) {
+            Err(IcaError::InvalidTrace { reason }) => {
+                assert!(reason.contains(needle), "{what}: reason {reason:?} missing {needle:?}");
+            }
+            other => panic!("{what}: expected InvalidTrace, got {other:?}"),
+        }
+        let _ = std::fs::remove_file(&path);
+    };
+    expect_invalid("", "empty", "empty");
+    expect_invalid("not json\n", "line 1", "garbage");
+    expect_invalid(
+        "{\"kind\":\"header\",\"level\":\"all\",\"schema\":\"fica.trace/v9\"}\n",
+        "fica.trace",
+        "schema",
+    );
+    // A real sink stream with its footer cut off must be rejected.
+    let path = tmp_path("truncated_src");
+    let sink = JsonlSink::create(&path, TraceLevel::All).expect("sink");
+    sink.finish().expect("finish");
+    let full = std::fs::read_to_string(&path).expect("read back");
+    let _ = std::fs::remove_file(&path);
+    obs_roundtrip_sanity(&full);
+    let without_footer: String = full
+        .lines()
+        .filter(|l| !l.contains("\"kind\":\"end\""))
+        .map(|l| format!("{l}\n"))
+        .collect();
+    expect_invalid(&without_footer, "truncated", "truncated");
+}
+
+/// The untruncated stream from the test above must itself be valid —
+/// guards the truncation test against testing a vacuously-broken input.
+fn obs_roundtrip_sanity(full: &str) {
+    let path = tmp_path("truncated_ref");
+    std::fs::write(&path, full).expect("write");
+    obs::read_trace(&path).expect("untruncated stream is valid");
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Pool accounting is exact for 1 and 4 workers: every submitted job is
+/// counted completed once by the time its ticket has been waited on.
+#[test]
+fn pool_counters_sum_to_job_count() {
+    let _serial = obs_serial();
+    for workers in [1usize, 4] {
+        let recorder = Arc::new(MemRecorder::new());
+        let guard = obs::install(Arc::clone(&recorder) as Arc<dyn Recorder>);
+        let pool = WorkerPool::new(workers);
+        const JOBS: usize = 16;
+        let tickets: Vec<_> = (0..JOBS)
+            .map(|i| pool.submit(i, move || i * i))
+            .collect();
+        let mut sum = 0usize;
+        for t in tickets {
+            sum += t.wait();
+        }
+        drop(pool);
+        drop(guard);
+        assert_eq!(sum, (0..JOBS).map(|i| i * i).sum::<usize>());
+        assert_eq!(
+            recorder.counter("pool.jobs_submitted"),
+            JOBS as u64,
+            "workers {workers}"
+        );
+        assert_eq!(
+            recorder.counter("pool.jobs_completed"),
+            JOBS as u64,
+            "workers {workers}: completed must equal submitted once all tickets resolved"
+        );
+    }
+}

@@ -283,12 +283,12 @@ def lint_file(rel, src):
                 continue
             report(m.start(), "float-accum", "`.sum()` reduction outside sanctioned helpers — order must be pinned")
 
-    # R3 nondeterminism — everywhere except bench/
-    if not rel.startswith("bench/"):
+    # R3 nondeterminism — everywhere except bench/ and obs/
+    if not (rel.startswith("bench/") or rel.startswith("obs/")):
         for m in re.finditer(r"\bHashMap\b", code):
             report(m.start(), "nondeterminism", "`HashMap` on a solver path — use `BTreeMap` or waive (lookup-only)")
         for m in re.finditer(r"\b(SystemTime|Instant)\b", code):
-            report(m.start(), "nondeterminism", "`%s` outside bench/ — wall-clock on a solver path" % m.group(1))
+            report(m.start(), "nondeterminism", "`%s` outside bench/ or obs/ — wall-clock on a solver path" % m.group(1))
 
     # R4 fail-closed — data/ and util/json.rs
     if rel.startswith("data/") or rel == "util/json.rs":

@@ -14,8 +14,9 @@
 //!   fixed-order reduction helpers ([`SANCTIONED_FNS`]) so the bitwise
 //!   determinism contract stays auditable in one place.
 //! - **nondeterminism** — `HashMap`, `SystemTime` and `Instant` are
-//!   banned outside `bench/` (iteration order / wall-clock on a solver
-//!   path).
+//!   banned outside `bench/` and `obs/` (iteration order / wall-clock
+//!   on a solver path; the observability layer's whole job is reading
+//!   the clock, and its output never feeds the numerics).
 //! - **fail-closed** — decoder-shaped `pub fn`s in `data/` and
 //!   `util/json.rs` must return `Result`.
 //!
@@ -559,7 +560,7 @@ fn rule_nondeterminism(code: &[char], sink: &mut RuleSink) {
                     code,
                     i,
                     "nondeterminism",
-                    format!("`{name}` outside bench/ — wall-clock on a solver path"),
+                    format!("`{name}` outside bench/ or obs/ — wall-clock on a solver path"),
                 ),
                 _ => {}
             }
@@ -622,7 +623,7 @@ pub fn lint_file(rel: &str, src: &str) -> Vec<Violation> {
     if rel.starts_with("backend/") || rel.starts_with("linalg/") || rel == "data/stats.rs" {
         rule_float_accum(&code, &ranges, &mut sink);
     }
-    if !rel.starts_with("bench/") {
+    if !(rel.starts_with("bench/") || rel.starts_with("obs/")) {
         rule_nondeterminism(&code, &mut sink);
     }
     if rel.starts_with("data/") || rel == "util/json.rs" {

@@ -66,6 +66,17 @@ fn nondeterminism_is_exempt_under_bench() {
     assert!(v.is_empty(), "bench/ should be exempt from nondeterminism: {v:?}");
 }
 
+/// The observability layer reads the clock by design; its output never
+/// feeds the numerics. The exemption must be path-exact — the same
+/// fixture still fires everywhere else (pinned by
+/// `nondeterminism_fires_exactly_once` above).
+#[test]
+fn nondeterminism_is_exempt_under_obs() {
+    let src = fixture("r3_nondeterminism.rs");
+    let v = lint_file("obs/fixture.rs", &src);
+    assert!(v.is_empty(), "obs/ should be exempt from nondeterminism: {v:?}");
+}
+
 #[test]
 fn fail_closed_fires_exactly_once() {
     let src = fixture("r4_fail_closed.rs");
