@@ -132,6 +132,7 @@ impl super::DataSource for BinSource {
             ))
         })?;
         let mut chunk = Mat::zeros(self.n, c);
+        // fica-lint: allow(unchecked-arith) — bounded: c·n·8 passed checked_mul above, so n·8 cannot overflow
         for (j, frame) in buf.chunks_exact(self.n * 8).enumerate() {
             for (i, bytes) in frame.chunks_exact(8).enumerate() {
                 let mut word = [0u8; 8];

@@ -350,7 +350,7 @@ impl WritePromise {
                 got: (chunk.rows(), chunk.cols()),
             });
         }
-        if self.written + chunk.cols() > self.cols {
+        if self.written.checked_add(chunk.cols()).map_or(true, |total| total > self.cols) {
             return Err(IcaError::invalid_input(format!(
                 "{}: chunk overruns the declared {} samples",
                 self.label, self.cols
@@ -381,18 +381,21 @@ pub(crate) fn copy_columns(
     chunk: &Mat,
     src: &dyn DataSource,
 ) -> Result<(), IcaError> {
-    if chunk.rows() != dst.rows() || off + chunk.cols() > dst.cols() {
-        return Err(IcaError::invalid_input(format!(
-            "source {} yielded a mis-shaped chunk ({}x{} at column {off} of a {}x{} stream)",
-            src.label(),
-            chunk.rows(),
-            chunk.cols(),
-            dst.rows(),
-            dst.cols()
-        )));
-    }
+    let end = match off.checked_add(chunk.cols()) {
+        Some(end) if chunk.rows() == dst.rows() && end <= dst.cols() => end,
+        _ => {
+            return Err(IcaError::invalid_input(format!(
+                "source {} yielded a mis-shaped chunk ({}x{} at column {off} of a {}x{} stream)",
+                src.label(),
+                chunk.rows(),
+                chunk.cols(),
+                dst.rows(),
+                dst.cols()
+            )));
+        }
+    };
     for i in 0..dst.rows() {
-        dst.row_mut(i)[off..off + chunk.cols()].copy_from_slice(chunk.row(i));
+        dst.row_mut(i)[off..end].copy_from_slice(chunk.row(i));
     }
     Ok(())
 }

@@ -1,150 +1,199 @@
 #!/usr/bin/env python3
-"""Toolchain-less mirror of the `fica-lint` rule engine.
+"""Toolchain-less mirror of the fica-lint / fica-audit engine.
 
-This script implements byte-for-byte the same semantics as the Rust
-crate in `src/` (scanner, `#[cfg(test)]` skipping, waiver grammar and
-scoping, rules R1-R4 + `bad-waiver`). It exists so the audit can be run
-in environments without a Rust toolchain; the Rust crate is the
-authoritative implementation and is what CI runs.
+This is a 1:1 port of ``tools/fica-lint/src/{lib,items,audit,main}.rs``:
+same scanner, same nine rules, same waiver engine, same workspace
+model, same report — byte-for-byte, which the CI parity gate proves by
+diffing ``mirror.py --json`` against ``cargo run -p fica-lint -- --json``
+over the whole tree. Keep the two in lockstep: every semantic change
+lands in both implementations in the same commit.
 
-Usage: python3 mirror.py [ROOT]   (default ROOT = ../../rust/src)
-Exit status: 0 if no unwaived violations, 1 otherwise.
+Usage (mirrors the Rust CLI, plus one extra mode):
+
+    mirror.py [--root DIR] [--json] [--self]
+    mirror.py [--json] --lint-file REL PATH   # single-file fixture mode
+
+Exit status: 0 clean (no unwaived violations), 1 violations found,
+2 usage or I/O error.
 """
 
 import os
-import re
 import sys
 
-RULES = ("no-panic", "float-accum", "nondeterminism", "fail-closed")
-SANCTIONED_FNS = {
-    # the fixed-order lane fold and pairwise tree reduction (backend/)
-    "fold_lanes", "tree_reduce", "combine", "combine_vec",
-    # the StreamingStats moment accumulators (data/stats.rs)
-    "absorb", "update", "partial",
-}
-DECODER_NAMES = ("parse", "decode", "open", "read", "load", "from_bytes", "next_chunk")
+RULES = [
+    "no-panic",
+    "float-accum",
+    "nondeterminism",
+    "fail-closed",
+    "unchecked-arith",
+    "lock-hygiene",
+    "schema-drift",
+    "contract-coverage",
+    "stale-waiver",
+]
+
+WAIVABLE = RULES[:6]
+
+SANCTIONED_FNS = ["fold_lanes", "tree_reduce", "combine", "combine_vec", "absorb", "update", "partial"]
+
+DECODER_NAMES = ["parse", "decode", "open", "read", "load", "from_bytes", "next_chunk"]
+
+SIZE_MARKERS = [
+    "bytes", "cap", "chunk", "cols", "count", "idx", "len", "n", "nbytes", "off", "offset", "pos",
+    "rows", "size", "stride", "written",
+]
+
+CHANNEL_METHODS = ["recv", "recv_timeout", "send", "send_timeout", "try_recv", "try_send"]
+
+PANIC_MACROS = ["panic", "assert", "unreachable", "todo", "unimplemented"]
+
+CONTRACT_HEADER = "| paths compared | guarantee | why | pinned by |"
+
+
+def is_digit(c):
+    return "0" <= c <= "9"
 
 
 def is_ident(c):
     return c.isalnum() or c == "_"
 
 
+def is_ascii_ident(c):
+    return ("a" <= c <= "z") or ("A" <= c <= "Z") or is_digit(c) or c == "_"
+
+
+def blank(out, a, b):
+    for k in range(a, min(b, len(out))):
+        if out[k] != "\n":
+            out[k] = " "
+
+
+def find_chars(hay, start, needle):
+    if not needle or len(hay) < len(needle):
+        return None
+    at = "".join(hay).find("".join(needle), start)
+    return None if at < 0 else at
+
+
 def strip_source(src):
-    """Blank comments and string/char-literal contents, preserving length
-    and newlines. Returns (code, comments) where comments is a list of
-    (byte_offset, text)."""
-    n = len(src)
-    out = list(src)
+    """-> (code: list[char], comments: [(off, text)], strings: [(off, content)])."""
+    s = list(src)
+    n = len(s)
+    out = list(s)
     comments = []
+    strings = []
     i = 0
-
-    def blank(a, b):
-        for k in range(a, b):
-            if out[k] != "\n":
-                out[k] = " "
-
     while i < n:
-        c = src[i]
-        nxt = src[i + 1] if i + 1 < n else ""
+        c = s[i]
+        nxt = s[i + 1] if i + 1 < n else "\0"
         if c == "/" and nxt == "/":
             j = i
-            while j < n and src[j] != "\n":
+            while j < n and s[j] != "\n":
                 j += 1
-            comments.append((i, src[i:j]))
-            blank(i, j)
+            comments.append((i, "".join(s[i:j])))
+            blank(out, i, j)
             i = j
         elif c == "/" and nxt == "*":
             depth = 1
             j = i + 2
             while j < n and depth > 0:
-                if src[j] == "/" and j + 1 < n and src[j + 1] == "*":
+                if s[j] == "/" and j + 1 < n and s[j + 1] == "*":
                     depth += 1
                     j += 2
-                elif src[j] == "*" and j + 1 < n and src[j + 1] == "/":
+                elif s[j] == "*" and j + 1 < n and s[j + 1] == "/":
                     depth -= 1
                     j += 2
                 else:
                     j += 1
-            comments.append((i, src[i:j]))
-            blank(i, j)
+            comments.append((i, "".join(s[i:j])))
+            blank(out, i, j)
             i = j
         elif c == '"':
             j = i + 1
             while j < n:
-                if src[j] == "\\":
+                if s[j] == "\\":
                     j += 2
-                elif src[j] == '"':
+                elif s[j] == '"':
                     j += 1
                     break
                 else:
                     j += 1
-            blank(i + 1, max(i + 1, j - 1))
+            content_end = max(j - 1, i + 1)
+            strings.append((i + 1, "".join(s[i + 1 : min(content_end, n)])))
+            blank(out, i + 1, content_end)
             i = j
-        elif c in ("r", "b") and (i == 0 or not is_ident(src[i - 1])):
-            # raw string r"..." / r#"..."# / byte string b"..." / br#"..."#
+        elif c in ("r", "b") and (i == 0 or not is_ident(s[i - 1])):
+            # Raw string r"..." / r#"..."# / byte string b"..." / br#"..."#.
             j = i + 1
             raw = c == "r"
-            if c == "b" and j < n and src[j] == "r":
+            if c == "b" and j < n and s[j] == "r":
                 raw = True
                 j += 1
             hashes = 0
-            while j < n and src[j] == "#":
+            while j < n and s[j] == "#":
                 hashes += 1
                 j += 1
-            if raw and j < n and src[j] == '"':
+            if raw and j < n and s[j] == '"':
                 j += 1
-                end = '"' + "#" * hashes
-                k = src.find(end, j)
-                k = n if k == -1 else k + len(end)
-                blank(i + 1, max(i + 1, k - len(end)))
+                end = list('"' + "#" * hashes)
+                k = find_chars(s, j, end)
+                k = n if k is None else k + len(end)
+                content_end = max(k - min(len(end), k), i + 1)
+                if c == "r":
+                    strings.append((j, "".join(s[j : min(content_end, n)])))
+                blank(out, i + 1, content_end)
                 i = k
-            elif not raw and hashes == 0 and j < n and src[j] == '"':
-                # b"..." — same escape rules as a normal string
+            elif (not raw) and hashes == 0 and j < n and s[j] == '"':
+                # b"..." — same escape rules as a normal string.
                 j += 1
                 while j < n:
-                    if src[j] == "\\":
+                    if s[j] == "\\":
                         j += 2
-                    elif src[j] == '"':
+                    elif s[j] == '"':
                         j += 1
                         break
                     else:
                         j += 1
-                blank(i + 2, max(i + 2, j - 1))
+                blank(out, i + 2, max(j - 1, i + 2))
                 i = j
             else:
                 i += 1
         elif c == "'":
-            # char literal vs lifetime
+            # Char literal vs lifetime.
             if nxt == "\\":
                 j = i + 2
-                while j < n and src[j] != "'":
+                while j < n and s[j] != "'":
                     j += 1
                 j += 1
-                blank(i + 1, max(i + 1, j - 1))
+                blank(out, i + 1, max(j - 1, i + 1))
                 i = j
-            elif i + 2 < n and src[i + 2] == "'" and nxt != "'":
-                blank(i + 1, i + 2)
-                i = i + 3
+            elif i + 2 < n and s[i + 2] == "'" and nxt != "'":
+                blank(out, i + 1, i + 2)
+                i += 3
             else:
                 i += 1  # lifetime
         else:
             i += 1
-    return "".join(out), comments
+    return out, comments, strings
 
 
-def line_of(src, off):
-    return src.count("\n", 0, off) + 1
+def line_of(code, off):
+    return sum(1 for c in code[: min(off, len(code))] if c == "\n") + 1
 
 
 def line_bounds(code, lineno):
-    """(start_offset, end_offset) of a 1-based line in code."""
-    lines = code.split("\n")
-    start = sum(len(l) + 1 for l in lines[: lineno - 1])
-    return start, start + len(lines[lineno - 1])
+    start = 0
+    line = 1
+    for i, c in enumerate(code):
+        if line == lineno and c == "\n":
+            return start, i
+        if c == "\n":
+            line += 1
+            start = i + 1
+    return start, len(code)
 
 
 def match_brace(code, open_idx):
-    """Index just past the `}` matching the `{` at open_idx (or len)."""
     depth = 0
     for j in range(open_idx, len(code)):
         if code[j] == "{":
@@ -157,85 +206,176 @@ def match_brace(code, open_idx):
 
 
 def blank_cfg_test(code):
-    """Blank every item annotated #[cfg(test)] (to its closing brace or `;`)."""
-    out = list(code)
-    for m in re.finditer(r"#\[cfg\(test\)\]", code):
-        j = m.end()
-        # skip further attributes / whitespace / keywords up to `{` or `;`
-        while j < len(code) and code[j] not in "{;":
+    attr = list("#[cfg(test)]")
+    starts = []
+    frm = 0
+    while True:
+        i = find_chars(code, frm, attr)
+        if i is None:
+            break
+        starts.append(i)
+        frm = i + len(attr)
+    regions = []
+    for start in starts:
+        j = start + len(attr)
+        while j < len(code) and code[j] != "{" and code[j] != ";":
             j += 1
-        end = match_brace(code, j) if j < len(code) and code[j] == "{" else j + 1
-        for k in range(m.start(), min(end, len(code))):
-            if out[k] != "\n":
-                out[k] = " "
-    return "".join(out)
+        end = match_brace(code, j) if (j < len(code) and code[j] == "{") else j + 1
+        upper = min(end, len(code))
+        blank(code, start, upper)
+        regions.append((start, upper))
+    return regions
 
 
-WAIVER_RE = re.compile(r"fica-lint:\s*allow(-file)?\(([^)]*)\)\s*(.*)", re.S)
+class Waiver:
+    def __init__(self, rules, line_start, line_end, line, span, file_wide):
+        self.rules = rules
+        self.line_start = line_start
+        self.line_end = line_end
+        self.line = line
+        self.span = span
+        self.file_wide = file_wide
+        self.used = [False] * len(rules)
 
 
-def parse_waivers(code, comments):
-    """Returns (waivers, file_waivers, bad) where waivers is a list of
-    (rule_set, line_start, line_end), file_waivers a set of rules, and
-    bad a list of (line, msg) for waivers lacking a justification."""
-    waivers, file_waivers, bad = [], set(), []
+class Waivers:
+    def __init__(self):
+        self.scoped = []
+        self.file_wide = []
+        self.lock_orders = []  # (names, line, span)
+        self.bad = []  # (line, span, msg)
+
+
+def parse_directive(text):
+    at = text.find("fica-lint:")
+    if at < 0:
+        return None
+    rest = text[at + len("fica-lint:") :].lstrip()
+    if rest.startswith("lock-order"):
+        rest = rest[len("lock-order") :]
+        if not rest.startswith("("):
+            return None
+        rest = rest[1:]
+        close = rest.find(")")
+        if close < 0:
+            return None
+        return ("lock-order", rest[:close], None)
+    if not rest.startswith("allow"):
+        return None
+    rest = rest[len("allow") :]
+    file_wide = False
+    if rest.startswith("-file"):
+        file_wide = True
+        rest = rest[len("-file") :]
+    if not rest.startswith("("):
+        return None
+    rest = rest[1:]
+    close = rest.find(")")
+    if close < 0:
+        return None
+    rules_raw = rest[:close]
+    just = rest[close + 1 :].strip()
+    for dash in ["—", "–", "--", "-"]:
+        if just.startswith(dash):
+            just = just[len(dash) :].lstrip()
+            break
+    return ("allow-file" if file_wide else "allow", rules_raw, just)
+
+
+def scan_waivers(code, comments):
+    w = Waivers()
     for off, text in comments:
-        m = WAIVER_RE.search(text)
-        if not m:
-            continue
         lineno = line_of(code, off)
-        rules = {r.strip() for r in m.group(2).split(",") if r.strip()}
-        just = m.group(3).strip()
-        just = re.sub(r"^(—|–|--|-)\s*", "", just, count=1)
-        if not rules or not rules <= set(RULES):
-            bad.append((lineno, "waiver names unknown rule(s): %s" % m.group(2).strip()))
+        span = (off, off + len(text))
+        d = parse_directive(text)
+        if d is None:
+            continue
+        kind, raw, just = d
+        if kind == "lock-order":
+            names = [r.strip() for r in raw.split(",") if r.strip()]
+            if not names:
+                w.bad.append((lineno, span, "lock-order declaration names no locks"))
+            else:
+                w.lock_orders.append((names, lineno, span))
+            continue
+        rules = sorted(set(r.strip() for r in raw.split(",") if r.strip()))
+        if not rules or not all(r in WAIVABLE for r in rules):
+            w.bad.append(
+                (lineno, span, "waiver names unknown or unwaivable rule(s): %s" % raw.strip())
+            )
             continue
         if not just:
-            bad.append((lineno, "waiver without justification"))
+            w.bad.append((lineno, span, "waiver without justification"))
             continue
-        if m.group(1):  # allow-file
-            file_waivers |= rules
+        if kind == "allow-file":
+            w.file_wide.append(Waiver(rules, 0, 1 << 62, lineno, span, True))
             continue
         ls, le = line_bounds(code, lineno)
-        before = code[ls:off]
-        if before.strip():  # trailing waiver: covers its own line
-            waivers.append((rules, lineno, lineno))
-        else:  # standalone: covers the next statement-or-item
-            j = le + 1
-            while j < len(code) and code[j].isspace():
-                j += 1
-            depth = 0
-            end = len(code)
-            k = j
-            while k < len(code):
-                ch = code[k]
-                if ch == "{":
-                    depth += 1
-                elif ch == "}":
-                    # depth 1→0 closes the statement's own brace group;
-                    # depth 0→-1 closes the *enclosing* block (the waived
-                    # code was a tail expression) — both end the scope.
-                    depth -= 1
-                    if depth <= 0:
-                        end = k + 1
-                        break
-                elif ch == ";" and depth <= 0:
+        trailing = any(not c.isspace() for c in code[ls : min(off, len(code))])
+        if trailing:
+            # Trailing waiver: covers its own line.
+            w.scoped.append(Waiver(rules, lineno, lineno, lineno, span, False))
+            continue
+        # Standalone: covers the next statement-or-item (depth <= 0 close,
+        # matching the Rust engine — see lib.rs for why).
+        j = le + 1
+        while j < len(code) and code[j].isspace():
+            j += 1
+        depth = 0
+        end = len(code)
+        k = j
+        while k < len(code):
+            ch = code[k]
+            if ch == "{":
+                depth += 1
+            elif ch == "}":
+                depth -= 1
+                if depth <= 0:
                     end = k + 1
                     break
-                k += 1
-            waivers.append((rules, line_of(code, j), line_of(code, min(end, len(code) - 1))))
-    return waivers, file_waivers, bad
+            elif ch == ";" and depth <= 0:
+                end = k + 1
+                break
+            k += 1
+        w.scoped.append(
+            Waiver(
+                rules,
+                line_of(code, j),
+                line_of(code, min(end, max(len(code) - 1, 0))),
+                lineno,
+                span,
+                False,
+            )
+        )
+    return w
 
 
 def fn_ranges(code):
-    """[(name, start, end)] for every `fn name ... { ... }`."""
     out = []
-    for m in re.finditer(r"\bfn\s+([A-Za-z0-9_]+)", code):
-        j = m.end()
-        while j < len(code) and code[j] not in "{;":
-            j += 1
-        if j < len(code) and code[j] == "{":
-            out.append((m.group(1), m.start(), match_brace(code, j)))
+    i = 0
+    n = len(code)
+    while i < n:
+        if (
+            code[i] == "f"
+            and i + 1 < n
+            and code[i + 1] == "n"
+            and (i == 0 or not is_ascii_ident(code[i - 1]))
+            and (i + 2 >= n or not is_ascii_ident(code[i + 2]))
+        ):
+            j = i + 2
+            ws_start = j
+            while j < n and code[j].isspace():
+                j += 1
+            if j > ws_start and j < n and is_ascii_ident(code[j]):
+                name_start = j
+                while j < n and is_ascii_ident(code[j]):
+                    j += 1
+                name = "".join(code[name_start:j])
+                while j < n and code[j] != "{" and code[j] != ";":
+                    j += 1
+                if j < n and code[j] == "{":
+                    out.append((name, i, match_brace(code, j)))
+        i += 1
     return out
 
 
@@ -247,100 +387,1113 @@ def enclosing_fn(ranges, off):
     return best[0] if best else None
 
 
-INT_LIT_RE = re.compile(r"^\d[\d_]*(u(8|16|32|64|size)|i(8|16|32|64|size))?$")
+def is_int_literal(s):
+    for suf in ["u8", "u16", "u32", "u64", "usize", "i8", "i16", "i32", "i64", "isize"]:
+        if s.endswith(suf):
+            s = s[: -len(suf)]
+            break
+    return bool(s) and is_digit(s[0]) and all(is_digit(c) or c == "_" for c in s[1:])
+
+
+def ident_at(code, i):
+    j = i
+    while j < len(code) and is_ascii_ident(code[j]):
+        j += 1
+    return j, "".join(code[i:j])
+
+
+def skip_ws(code, i):
+    while i < len(code) and code[i].isspace():
+        i += 1
+    return i
+
+
+def viol(code, start, end, rule, msg):
+    return {
+        "path": "",
+        "line": line_of(code, start),
+        "span": (start, end),
+        "rule": rule,
+        "msg": msg,
+        "waived": False,
+    }
+
+
+def rule_no_panic(code, sink):
+    n = len(code)
+    i = 0
+    while i < n:
+        if code[i] == ".":
+            j = skip_ws(code, i + 1)
+            k, name = ident_at(code, j)
+            kk = skip_ws(code, k)
+            if name in ("unwrap", "expect") and kk < n and code[kk] == "(":
+                sink.append(
+                    viol(code, i, k, "no-panic", "`.%s()` in library code — use a typed `IcaError` path" % name)
+                )
+        if is_ascii_ident(code[i]) and (i == 0 or not is_ascii_ident(code[i - 1])):
+            j, name = ident_at(code, i)
+            if name in PANIC_MACROS and j < n and code[j] == "!":
+                k = skip_ws(code, j + 1)
+                if k < n and code[k] in "([{":
+                    sink.append(
+                        viol(code, i, j + 1, "no-panic", "`%s!` in library code — use `debug_assert!` or a typed error" % name)
+                    )
+            i = j
+            continue
+        i += 1
+
+
+def rule_float_accum(code, ranges, sink):
+    n = len(code)
+    i = 0
+    while i + 1 < n:
+        if code[i] == "+" and code[i + 1] == "=":
+            _, le = line_bounds(code, line_of(code, i))
+            rhs = "".join(code[min(i + 2, le) : le]).strip().rstrip(";").strip()
+            fn = enclosing_fn(ranges, i)
+            sanctioned = fn is not None and fn in SANCTIONED_FNS
+            if not is_int_literal(rhs) and not sanctioned:
+                sink.append(
+                    viol(code, i, i + 2, "float-accum", "raw `+=` accumulation outside sanctioned reduction helpers")
+                )
+            i += 2
+            continue
+        if code[i] == ".":
+            j = skip_ws(code, i + 1)
+            name_end, name = ident_at(code, j)
+            if name == "sum":
+                k = skip_ws(code, name_end)
+                # Optional turbofish `::<T>`.
+                if k + 1 < n and code[k] == ":" and code[k + 1] == ":":
+                    t = skip_ws(code, k + 2)
+                    if t < n and code[t] == "<":
+                        gt = None
+                        for p in range(t, n):
+                            if code[p] == ">":
+                                gt = p
+                                break
+                        if gt is not None:
+                            k = skip_ws(code, gt + 1)
+                if k < n and code[k] == "(":
+                    fn = enclosing_fn(ranges, i)
+                    sanctioned = fn is not None and fn in SANCTIONED_FNS
+                    if not sanctioned:
+                        sink.append(
+                            viol(code, i, name_end, "float-accum", "`.sum()` reduction outside sanctioned helpers — order must be pinned")
+                        )
+        i += 1
+
+
+def rule_nondeterminism(code, sink):
+    i = 0
+    while i < len(code):
+        if is_ascii_ident(code[i]) and (i == 0 or not is_ascii_ident(code[i - 1])):
+            j, name = ident_at(code, i)
+            if name == "HashMap":
+                sink.append(
+                    viol(code, i, j, "nondeterminism", "`HashMap` on a solver path — use `BTreeMap` or waive (lookup-only)")
+                )
+            elif name in ("SystemTime", "Instant"):
+                sink.append(
+                    viol(code, i, j, "nondeterminism", "`%s` outside bench/ or obs/ — wall-clock on a solver path" % name)
+                )
+            i = j
+            continue
+        i += 1
+
+
+def rule_fail_closed(code, sink):
+    n = len(code)
+    i = 0
+    while i < n:
+        if (
+            code[i] == "p"
+            and (i == 0 or not is_ascii_ident(code[i - 1]))
+            and "".join(code[i : i + 3]) == "pub"
+            and i + 3 < n
+            and code[i + 3].isspace()
+        ):
+            j = skip_ws(code, i + 3)
+            if "".join(code[j : j + 2]) == "fn" and j + 2 < n and code[j + 2].isspace():
+                k = skip_ws(code, j + 2)
+                name_end, name = ident_at(code, k)
+                if name:
+                    lower = name.lower()
+                    if any(d in lower for d in DECODER_NAMES):
+                        e = name_end
+                        while e < n and code[e] != "{" and code[e] != ";":
+                            e += 1
+                        sig = "".join(code[i:e])
+                        if "Result" not in sig:
+                            sink.append(
+                                viol(code, i, name_end, "fail-closed", "decoder `pub fn %s` must return `Result`" % name)
+                            )
+        i += 1
+
+
+def marker_name(name):
+    if not name:
+        return False
+    for m in SIZE_MARKERS:
+        if name == m:
+            return True
+        if len(name) > len(m) + 1 and (
+            (name.endswith(m) and name[len(name) - len(m) - 1] == "_")
+            or (name.startswith(m) and name[len(m)] == "_")
+        ):
+            return True
+    return False
+
+
+def float_ident(name):
+    return name in ("f32", "f64") or name.endswith("f32") or name.endswith("f64")
+
+
+def left_operand(code, op):
+    """-> (name, is_float, skip_op)."""
+    p = op
+    while p > 0 and code[p - 1].isspace():
+        p -= 1
+    if p == 0:
+        return "", False, True
+    last = code[p - 1]
+    if last in (")", "]"):
+        opn = "(" if last == ")" else "["
+        depth = 1
+        q = p - 1
+        while q > 0:
+            q -= 1
+            if code[q] == last:
+                depth += 1
+            elif code[q] == opn:
+                depth -= 1
+                if depth == 0:
+                    break
+        if q > 0 and is_ascii_ident(code[q - 1]):
+            s = q - 1
+            while s > 0 and is_ascii_ident(code[s - 1]):
+                s -= 1
+            return "".join(code[s:q]), False, False
+        return "", False, False
+    if is_ascii_ident(last):
+        s = p - 1
+        while s > 0 and is_ascii_ident(code[s - 1]):
+            s -= 1
+        name = "".join(code[s:p])
+        if s > 0 and code[s - 1] == "'":
+            return "", False, True  # lifetime — type context
+        if is_digit(name[0]):
+            if float_ident(name) or (s > 1 and code[s - 1] == "." and is_digit(code[s - 2])):
+                return "", True, False
+            return "", False, False  # literal: never a size marker
+        if float_ident(name):
+            return "", True, False  # `as f64 *` — float arithmetic
+        return name, False, False
+    return "", False, False
+
+
+def right_operand(code, after_op):
+    """-> (name, is_float)."""
+    n = len(code)
+    q = skip_ws(code, after_op)
+    if q >= n or not is_ascii_ident(code[q]):
+        return "", False
+    r, name = ident_at(code, q)
+    if is_digit(name[0]):
+        if float_ident(name) or (r + 1 < n and code[r] == "." and is_digit(code[r + 1])):
+            return "", True
+        return "", False
+    if float_ident(name):
+        return "", True
+    # Chase the path to its decisive last segment: `self.n`, `chunk.cols()`.
+    while True:
+        t = skip_ws(code, r)
+        if t < n and code[t] == ".":
+            u = skip_ws(code, t + 1)
+            if u < n and is_ascii_ident(code[u]):
+                r2, seg = ident_at(code, u)
+                if is_digit(seg[0]):
+                    break  # tuple index — stop
+                name = seg
+                r = r2
+                continue
+        break
+    return name, False
+
+
+def rule_unchecked_arith(code, sink):
+    n = len(code)
+    for i in range(n):
+        opch = code[i]
+        if opch != "*" and opch != "+":
+            continue
+        if i + 1 < n and code[i + 1] == "=":
+            continue  # compound assignment: float-accum's turf
+        p = i
+        while p > 0 and code[p - 1].isspace():
+            p -= 1
+        if p == 0:
+            continue
+        prev = code[p - 1]
+        if not (is_ascii_ident(prev) or prev == ")" or prev == "]"):
+            continue  # unary deref/plus, reference, range, cast, …
+        lname, lfloat, lskip = left_operand(code, i)
+        rname, rfloat = right_operand(code, i + 1)
+        if lskip or lfloat or rfloat:
+            continue
+        if (lname and "A" <= lname[0] <= "Z") or (rname and "A" <= rname[0] <= "Z"):
+            continue  # trait bound / type sum, not value arithmetic
+        lm = marker_name(lname)
+        rm = marker_name(rname)
+        fires = (lm or rm) if opch == "*" else (lm and rm)
+        if fires:
+            opword = "mul" if opch == "*" else "add"
+            ls = lname if lname else "?"
+            rs = rname if rname else "?"
+            sink.append(
+                viol(
+                    code,
+                    i,
+                    i + 1,
+                    "unchecked-arith",
+                    "unchecked `%s` on size arithmetic (%s %s %s) — use checked_%s/saturating_%s or a waiver"
+                    % (opch, ls, opch, rs, opword, opword),
+                )
+            )
+
+
+def lock_sites(code):
+    n = len(code)
+    out = []
+    i = 0
+    while i < n:
+        if code[i] != ".":
+            i += 1
+            continue
+        j = skip_ws(code, i + 1)
+        k, name = ident_at(code, j)
+        kk = skip_ws(code, k)
+        if name not in ("lock", "try_lock") or kk >= n or code[kk] != "(":
+            i += 1
+            continue
+        # Mutex name: the ident (or call result) just before the dot.
+        p = i
+        while p > 0 and code[p - 1].isspace():
+            p -= 1
+        lock_name = ""
+        if p > 0:
+            last = code[p - 1]
+            if last in (")", "]"):
+                opn = "(" if last == ")" else "["
+                depth = 1
+                q = p - 1
+                while q > 0:
+                    q -= 1
+                    if code[q] == last:
+                        depth += 1
+                    elif code[q] == opn:
+                        depth -= 1
+                        if depth == 0:
+                            break
+                if q > 0 and is_ascii_ident(code[q - 1]):
+                    s = q - 1
+                    while s > 0 and is_ascii_ident(code[s - 1]):
+                        s -= 1
+                    lock_name = "".join(code[s:q])
+            elif is_ascii_ident(last):
+                s = p - 1
+                while s > 0 and is_ascii_ident(code[s - 1]):
+                    s -= 1
+                lock_name = "".join(code[s:p])
+        # Binding: `let NAME = ….lock()…` extends the guard to the end
+        # of the enclosing block (or `drop(NAME)`); an inline temporary
+        # lives to the end of its statement.
+        stmt_start = 0
+        q = i
+        while q > 0:
+            q -= 1
+            if code[q] in (";", "{", "}"):
+                stmt_start = q + 1
+                break
+        s0 = skip_ws(code, stmt_start)
+        after_let, kw = ident_at(code, s0)
+        binding = None
+        if kw == "let":
+            b0 = skip_ws(code, after_let)
+            b1, b = ident_at(code, b0)
+            if b == "mut":
+                b2 = skip_ws(code, b1)
+                _, b = ident_at(code, b2)
+            binding = b
+        end = n
+        depth = 0
+        m = k
+        while m < n:
+            ch = code[m]
+            if ch == "{":
+                depth += 1
+            elif ch == "}":
+                if depth == 0:
+                    end = m
+                    break
+                depth -= 1
+            elif ch == ";" and depth == 0 and binding is None:
+                end = m
+                break
+            elif binding is not None:
+                if is_ascii_ident(ch) and (m == 0 or not is_ascii_ident(code[m - 1])) and depth >= 0:
+                    m2, word = ident_at(code, m)
+                    if word == "drop":
+                        a = skip_ws(code, m2)
+                        if a < n and code[a] == "(":
+                            _, arg = ident_at(code, skip_ws(code, a + 1))
+                            if arg == binding:
+                                end = m
+                                break
+                    m = m2
+                    continue
+            m += 1
+        out.append({"dot": i, "name_end": k, "lock_name": lock_name, "end": end})
+        i = k
+    return out
+
+
+def rule_lock_hygiene(code, orders, sink):
+    sites = lock_sites(code)
+    if not sites:
+        for _names, _line, span in orders[1:]:
+            sink.append(viol(code, span[0], span[1], "lock-hygiene", "duplicate lock-order declaration"))
+        return
+    if not orders:
+        first = sites[0]
+        sink.append(
+            viol(
+                code,
+                first["dot"],
+                first["name_end"],
+                "lock-hygiene",
+                "file acquires locks but declares no canonical order — add a lock-order header comment",
+            )
+        )
+        return
+    for _names, _line, span in orders[1:]:
+        sink.append(viol(code, span[0], span[1], "lock-hygiene", "duplicate lock-order declaration"))
+    order = orders[0][0]
+
+    def idx_of(name):
+        return order.index(name) if name in order else None
+
+    for site in sites:
+        if idx_of(site["lock_name"]) is None:
+            sink.append(
+                viol(
+                    code,
+                    site["dot"],
+                    site["name_end"],
+                    "lock-hygiene",
+                    "lock `%s` is not in the declared lock-order" % site["lock_name"],
+                )
+            )
+    n = len(code)
+    for outer in sites:
+        # Channel traffic while the guard is live.
+        j = outer["name_end"]
+        while j < min(outer["end"], n):
+            if code[j] != ".":
+                j += 1
+                continue
+            a = skip_ws(code, j + 1)
+            b, m = ident_at(code, a)
+            bb = skip_ws(code, b)
+            if m in CHANNEL_METHODS and bb < n and code[bb] == "(":
+                sink.append(
+                    viol(
+                        code,
+                        j,
+                        b,
+                        "lock-hygiene",
+                        "channel `.%s()` while holding lock `%s` — drop the guard first" % (m, outer["lock_name"]),
+                    )
+                )
+            j = max(b, j + 1)
+        # Nested acquisition against the declared order.
+        for inner in sites:
+            if inner["dot"] <= outer["dot"] or inner["dot"] >= outer["end"]:
+                continue
+            oi = idx_of(outer["lock_name"])
+            ii = idx_of(inner["lock_name"])
+            if oi is not None and ii is not None and ii <= oi:
+                sink.append(
+                    viol(
+                        code,
+                        inner["dot"],
+                        inner["name_end"],
+                        "lock-hygiene",
+                        "lock `%s` acquired while holding `%s` violates the declared lock-order"
+                        % (inner["lock_name"], outer["lock_name"]),
+                    )
+                )
+
+
+def apply_waivers(violations, waivers):
+    for v in violations:
+        hit = False
+        for w in waivers.scoped:
+            if w.line_start <= v["line"] <= w.line_end and v["rule"] in w.rules:
+                v["waived"] = True
+                w.used[w.rules.index(v["rule"])] = True
+                hit = True
+                break
+        if hit:
+            continue
+        for w in waivers.file_wide:
+            if v["rule"] in w.rules:
+                v["waived"] = True
+                w.used[w.rules.index(v["rule"])] = True
+                break
+
+
+def stale_violations(waivers, out):
+    for w in waivers.scoped + waivers.file_wide:
+        for ix, rule in enumerate(w.rules):
+            if w.used[ix]:
+                continue
+            if w.file_wide:
+                msg = "stale waiver: allow-file(%s) no longer suppresses anything in this file — delete it" % rule
+            else:
+                msg = "stale waiver: allow(%s) no longer suppresses anything at its site — delete it" % rule
+            out.append({"path": "", "line": w.line, "span": w.span, "rule": "stale-waiver", "msg": msg, "waived": False})
+
+
+def sort_key(v):
+    return (v["path"], v["line"], v["span"][0], v["span"][1], v["rule"], v["msg"], v["waived"])
+
+
+def lint_impl(rel, src, self_mode):
+    code, comments, _strings = strip_source(src)
+    waivers = scan_waivers(code, comments)
+    blank_cfg_test(code)
+    ranges = fn_ranges(code)
+    sink = []
+
+    rule_no_panic(code, sink)
+    if self_mode:
+        rule_fail_closed(code, sink)
+    else:
+        if rel.startswith("backend/") or rel.startswith("linalg/") or rel == "data/stats.rs":
+            rule_float_accum(code, ranges, sink)
+        if not (rel.startswith("bench/") or rel.startswith("obs/")):
+            rule_nondeterminism(code, sink)
+        if rel.startswith("data/") or rel == "util/json.rs":
+            rule_fail_closed(code, sink)
+        if (rel.startswith("data/") and rel != "data/stats.rs") or rel == "util/json.rs":
+            rule_unchecked_arith(code, sink)
+        if rel == "backend/pool.rs" or rel.startswith("coordinator/") or rel.startswith("daemon/"):
+            rule_lock_hygiene(code, waivers.lock_orders, sink)
+
+    apply_waivers(sink, waivers)
+    for line, span, msg in waivers.bad:
+        sink.append({"path": "", "line": line, "span": span, "rule": "bad-waiver", "msg": msg, "waived": False})
+    stale_violations(waivers, sink)
+    for v in sink:
+        v["path"] = rel
+    sink.sort(key=sort_key)
+    return sink
+
+
+def lint_file_full(rel, src):
+    return lint_impl(rel, src, False)
 
 
 def lint_file(rel, src):
-    code0, comments = strip_source(src)
-    waivers, file_waivers, bad = parse_waivers(code0, comments)
-    code = blank_cfg_test(code0)
-    ranges = fn_ranges(code)
-    viol = []  # (line, rule, msg)
+    return [v for v in lint_file_full(rel, src) if not v["waived"]]
 
-    def report(off, rule, msg):
-        viol.append((line_of(code, off), rule, msg))
 
-    # R1 no-panic — whole tree
-    for m in re.finditer(r"\.\s*(unwrap|expect)\s*\(", code):
-        report(m.start(), "no-panic", "`.%s()` in library code — use a typed `IcaError` path" % m.group(1))
-    for m in re.finditer(r"(?<![A-Za-z0-9_])(panic|assert|unreachable|todo|unimplemented)!\s*[\(\[{]", code):
-        report(m.start(), "no-panic", "`%s!` in library code — use `debug_assert!` or a typed error" % m.group(1))
+def lint_self_file(rel, src):
+    return lint_impl(rel, src, True)
 
-    # R2 float-accum — backend/, linalg/, data/stats.rs
-    if rel.startswith(("backend/", "linalg/")) or rel == "data/stats.rs":
-        for m in re.finditer(r"\+=", code):
-            ls, le = line_bounds(code, line_of(code, m.start()))
-            rhs = code[m.end():le].strip().rstrip(";").strip()
-            if INT_LIT_RE.match(rhs):
-                continue
-            fname = enclosing_fn(ranges, m.start())
-            if fname in SANCTIONED_FNS:
-                continue
-            report(m.start(), "float-accum", "raw `+=` accumulation outside sanctioned reduction helpers")
-        for m in re.finditer(r"\.\s*sum\s*(::\s*<[^>]*>\s*)?\(", code):
-            fname = enclosing_fn(ranges, m.start())
-            if fname in SANCTIONED_FNS:
-                continue
-            report(m.start(), "float-accum", "`.sum()` reduction outside sanctioned helpers — order must be pinned")
 
-    # R3 nondeterminism — everywhere except bench/ and obs/
-    if not (rel.startswith("bench/") or rel.startswith("obs/")):
-        for m in re.finditer(r"\bHashMap\b", code):
-            report(m.start(), "nondeterminism", "`HashMap` on a solver path — use `BTreeMap` or waive (lookup-only)")
-        for m in re.finditer(r"\b(SystemTime|Instant)\b", code):
-            report(m.start(), "nondeterminism", "`%s` outside bench/ or obs/ — wall-clock on a solver path" % m.group(1))
+# ------------------------------------------------------------------ items
 
-    # R4 fail-closed — data/ and util/json.rs
-    if rel.startswith("data/") or rel == "util/json.rs":
-        for m in re.finditer(r"\bpub\s+fn\s+([A-Za-z0-9_]+)", code):
-            name = m.group(1).lower()
-            if not any(d in name for d in DECODER_NAMES):
-                continue
-            j = m.end()
-            while j < len(code) and code[j] not in "{;":
-                j += 1
-            sig = code[m.start():j]
-            if "Result" not in sig:
-                report(m.start(), "fail-closed", "decoder `pub fn %s` must return `Result`" % m.group(1))
+ITEM_KEYWORDS = {
+    "fn": "fn",
+    "struct": "struct",
+    "enum": "enum",
+    "trait": "trait",
+    "impl": "impl",
+    "mod": "mod",
+    "use": "use",
+    "const": "const",
+    "static": "static",
+    "type": "type",
+}
 
-    # Apply waivers
-    kept = []
-    for lineno, rule, msg in viol:
-        if rule in file_waivers:
+
+def in_regions(regions, off):
+    return any(a <= off < b for a, b in regions)
+
+
+def item_end(code, frm, brace_bodied):
+    n = len(code)
+    j = frm
+    while j < n:
+        if code[j] == "{":
+            if brace_bodied:
+                return match_brace(code, j)
+            j = match_brace(code, j)
+        elif code[j] == ";":
+            return j + 1
+        else:
+            j += 1
+    return n
+
+
+def impl_name(code, j):
+    n = len(code)
+    j = skip_ws(code, j)
+    if j < n and code[j] == "<":
+        depth = 0
+        while j < n:
+            if code[j] == "<":
+                depth += 1
+            elif code[j] == ">":
+                depth -= 1
+                if depth == 0:
+                    j += 1
+                    break
+            j += 1
+        j = skip_ws(code, j)
+    k, name = ident_at(code, j)
+    # `impl Trait for Type` — the item is named after Type.
+    while True:
+        w = skip_ws(code, k)
+        if w < n and is_ascii_ident(code[w]):
+            k2, word = ident_at(code, w)
+            if word == "for":
+                t = skip_ws(code, k2)
+                k3, tyname = ident_at(code, t)
+                if tyname:
+                    name = tyname
+                    k = k3
+                break
+        if w < n and (code[w] == ":" or code[w] == "<"):
+            k = w + 1
             continue
-        if any(rule in rules and a <= lineno <= b for rules, a, b in waivers):
+        break
+    return k, name
+
+
+def scan_items(code, test_regions):
+    n = len(code)
+    out = []
+    i = 0
+    while i < n:
+        if not is_ascii_ident(code[i]) or (i > 0 and is_ascii_ident(code[i - 1])):
+            i += 1
             continue
-        kept.append((lineno, rule, msg))
-    for lineno, msg in bad:
-        kept.append((lineno, "bad-waiver", msg))
-    kept.sort()
-    return kept
+        j, word = ident_at(code, i)
+        kind = ITEM_KEYWORDS.get(word)
+        if kind is None:
+            i = j
+            continue
+        if kind == "impl":
+            _, name = impl_name(code, j)
+            if name:
+                end = item_end(code, j, True)
+                out.append({"kind": kind, "name": name, "start": i, "end": end, "in_test": in_regions(test_regions, i)})
+        elif kind == "use":
+            end = item_end(code, j, False)
+            name = "".join(code[skip_ws(code, j) : max(end - 1, j)]).strip()
+            if name:
+                out.append({"kind": kind, "name": name, "start": i, "end": end, "in_test": in_regions(test_regions, i)})
+        elif kind in ("const", "static"):
+            # A const/static *item* always reads `const NAME :`.
+            k = skip_ws(code, j)
+            after, name = ident_at(code, k)
+            if name == "mut":
+                k2 = skip_ws(code, after)
+                after, name = ident_at(code, k2)
+            colon = skip_ws(code, after)
+            if name and name != "fn" and colon < n and code[colon] == ":":
+                end = item_end(code, after, False)
+                out.append({"kind": kind, "name": name, "start": i, "end": end, "in_test": in_regions(test_regions, i)})
+        else:
+            k = skip_ws(code, j)
+            if k > j:
+                after, name = ident_at(code, k)
+                if name:
+                    end = item_end(code, after, True)
+                    out.append({"kind": kind, "name": name, "start": i, "end": end, "in_test": in_regions(test_regions, i)})
+        i = j
+    return out
 
 
-def main():
-    root = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
-        os.path.dirname(os.path.abspath(__file__)), "..", "..", "rust", "src")
-    root = os.path.normpath(root)
-    files = []
-    for dirpath, _, names in os.walk(root):
-        for nm in sorted(names):
-            if nm.endswith(".rs"):
-                files.append(os.path.join(dirpath, nm))
-    files.sort()
-    total = 0
+def scan_calls(code):
+    not_calls = ["fn", "if", "while", "match", "for", "loop", "return", "in", "move"]
+    n = len(code)
+    out = []
+    i = 0
+    prev_word = ""
+    while i < n:
+        if is_ascii_ident(code[i]) and (i == 0 or not is_ascii_ident(code[i - 1])):
+            j, word = ident_at(code, i)
+            k = skip_ws(code, j)
+            if (
+                k < n
+                and code[k] == "("
+                and word not in not_calls
+                and prev_word != "fn"
+                and not is_digit(word[0])
+            ):
+                out.append((i, word))
+            prev_word = word
+            i = j
+            continue
+        i += 1
+    return out
+
+
+# ------------------------------------------------------------------ audit
+
+
+def walk_tree(dirpath, prefix, exts, out):
+    if not os.path.isdir(dirpath):
+        return
+    for name in sorted(os.listdir(dirpath)):
+        path = os.path.join(dirpath, name)
+        rel = "%s/%s" % (prefix, name)
+        if os.path.isdir(path):
+            walk_tree(path, rel, exts, out)
+        elif os.path.splitext(name)[1] in ["." + e for e in exts]:
+            with open(path, encoding="utf-8") as fh:
+                out[rel] = fh.read()
+
+
+def load_workspace(root):
+    if not os.path.isdir(os.path.join(root, "rust", "src")):
+        raise RuntimeError("%s has no rust/src — not a faster-ica workspace root" % root)
+    files = {}
+    walk_tree(os.path.join(root, "rust", "src"), "rust/src", ["rs"], files)
+    walk_tree(os.path.join(root, "rust", "tests"), "rust/tests", ["rs", "json"], files)
+    walk_tree(os.path.join(root, "docs"), "docs", ["md"], files)
+    for top in ["ARCHITECTURE.md", "README.md"]:
+        p = os.path.join(root, top)
+        if os.path.isfile(p):
+            with open(p, encoding="utf-8") as fh:
+                files[top] = fh.read()
+    return files
+
+
+def discover_root(start):
+    cur = os.path.abspath(start)
+    while True:
+        manifest = os.path.join(cur, "Cargo.toml")
+        if os.path.isfile(manifest):
+            with open(manifest, encoding="utf-8") as fh:
+                if "[workspace]" in fh.read():
+                    return cur
+        parent = os.path.dirname(cur)
+        if parent == cur:
+            return None
+        cur = parent
+
+
+def scan_tags(chars):
+    head = list("fica.")
+    n = len(chars)
+    out = []
+    i = 0
+    while i + len(head) < n:
+        if chars[i : i + len(head)] != head or (i > 0 and is_ascii_ident(chars[i - 1])):
+            i += 1
+            continue
+        j = i + len(head)
+        fam_start = j
+        while j < n and (("a" <= chars[j] <= "z") or is_digit(chars[j]) or chars[j] == "_"):
+            j += 1
+        if j == fam_start or j + 1 >= n or chars[j] != "/" or chars[j + 1] != "v":
+            i += 1
+            continue
+        fam = "".join(chars[fam_start:j])
+        k = j + 2
+        digits_start = k
+        ver = 0
+        while k < n and is_digit(chars[k]):
+            ver = ver * 10 + (ord(chars[k]) - ord("0"))
+            k += 1
+        if k == digits_start:
+            i += 1
+            continue
+        out.append((i, k, fam, ver))
+        i = k
+    return out
+
+
+def mk(path, chars, span, rule, msg):
+    return {"path": path, "line": line_of(chars, span[0]), "span": span, "rule": rule, "msg": msg, "waived": False}
+
+
+def backticked_idents(cell):
+    chars = list(cell)
+    out = []
+    i = 0
+    while i < len(chars):
+        if chars[i] != "`":
+            i += 1
+            continue
+        start = i + 1
+        j = start
+        while j < len(chars) and chars[j] != "`":
+            j += 1
+        if j >= len(chars):
+            break
+        tok = "".join(chars[start:j])
+        if tok and all(is_ascii_ident(c) for c in tok):
+            out.append(tok)
+        i = j + 1
+    return out
+
+
+def rule_schema_drift(files, violations):
+    code_versions = {}
+    code_sites = []
+    schema_consts = []
+    for path in sorted(files):
+        if not (path.startswith("rust/src/") and path.endswith(".rs")):
+            continue
+        src = files[path]
+        code, _comments, strings = strip_source(src)
+        erased = list(code)
+        regions = blank_cfg_test(erased)
+        tags_here = []
+        for off, content in strings:
+            if in_regions(regions, off):
+                continue
+            for a, b, fam, ver in scan_tags(list(content)):
+                tags_here.append((off + a, off + b, fam, ver))
+        for a, b, fam, ver in tags_here:
+            code_versions.setdefault(fam, set()).add(ver)
+            code_sites.append((path, (a, b), fam, ver))
+        # Schema-named consts must carry a tag in their initializer.
+        for item in scan_items(code, regions):
+            if item["kind"] == "const" and not item["in_test"] and "_SCHEMA" in item["name"]:
+                tagged = any(item["start"] <= a < item["end"] for a, _b, _f, _v in tags_here)
+                schema_consts.append((path, (item["start"], item["end"]), item["name"], tagged))
+
+    doc_tags = set()
+    doc_sites = []
+    for path in sorted(files):
+        is_doc = (path.startswith("docs/") and path.endswith(".md")) or path in ("ARCHITECTURE.md", "README.md")
+        if not is_doc:
+            continue
+        chars = list(files[path])
+        for a, b, fam, ver in scan_tags(chars):
+            doc_tags.add((fam, ver))
+            doc_sites.append((path, (a, b), fam, ver))
+
+    # (a) every code tag must be documented.
+    for path, span, fam, ver in code_sites:
+        if (fam, ver) not in doc_tags:
+            chars = list(files[path])
+            violations.append(
+                mk(path, chars, span, "schema-drift",
+                   "schema tag `fica.%s/v%d` in code is not documented under docs/ — update the schema docs" % (fam, ver))
+            )
+    # (b) no doc tag may outrun the code for a family the code writes.
+    for path, span, fam, ver in doc_sites:
+        if fam in code_versions:
+            mx = max(code_versions[fam]) if code_versions[fam] else 0
+            if ver > mx:
+                chars = list(files[path])
+                violations.append(
+                    mk(path, chars, span, "schema-drift",
+                       "documented schema tag `fica.%s/v%d` has no code writer (max code version is v%d) — docs and code have drifted" % (fam, ver, mx))
+                )
+    # (c) fixture tags must match a code tag exactly.
+    for path in sorted(files):
+        if not (path.startswith("rust/tests/fixtures/") and path.endswith(".json")):
+            continue
+        chars = list(files[path])
+        for a, b, fam, ver in scan_tags(chars):
+            known = fam in code_versions and ver in code_versions[fam]
+            if not known:
+                violations.append(
+                    mk(path, chars, (a, b), "schema-drift",
+                       "fixture schema tag `fica.%s/v%d` matches no code tag — regenerate or retire the fixture" % (fam, ver))
+                )
+    # (d) schema-named consts carry their tag.
+    for path, span, name, tagged in schema_consts:
+        if not tagged:
+            chars = list(files[path])
+            violations.append(
+                mk(path, chars, span, "schema-drift",
+                   "const `%s` is schema-named but contains no `fica.<family>/vN` tag" % name)
+            )
+
+
+def rule_contract_coverage(files, violations):
+    index = {}
+    for path in sorted(files):
+        if not path.endswith(".rs"):
+            continue
+        in_tests_tree = path.startswith("rust/tests/")
+        in_src_tree = path.startswith("rust/src/")
+        if not in_tests_tree and not in_src_tree:
+            continue
+        src = files[path]
+        raw = list(src)
+        code, _comments, _strings = strip_source(src)
+        erased = list(code)
+        regions = blank_cfg_test(erased)
+        for item in scan_items(code, regions):
+            if item["kind"] != "fn":
+                continue
+            if in_src_tree and not item["in_test"]:
+                continue
+            body = "".join(raw[item["start"] : min(item["end"], len(raw))])
+            index[item["name"]] = index.get(item["name"], "") + body + "\n"
+
+    arch_path = "ARCHITECTURE.md"
+    if arch_path not in files:
+        violations.append(
+            {"path": arch_path, "line": 1, "span": (0, 0), "rule": "contract-coverage",
+             "msg": "ARCHITECTURE.md not found — the equivalence-contract table is the coverage anchor",
+             "waived": False}
+        )
+        return
+    arch = files[arch_path]
+    chars = list(arch)
+    header_off = None
+    off = 0
+    for line in arch.split("\n"):
+        if line.strip() == CONTRACT_HEADER:
+            header_off = off
+            break
+        off += len(line) + 1
+    if header_off is None:
+        violations.append(
+            {"path": arch_path, "line": 1, "span": (0, 0), "rule": "contract-coverage",
+             "msg": "equivalence-contract table header `%s` not found in ARCHITECTURE.md" % CONTRACT_HEADER,
+             "waived": False}
+        )
+        return
+
+    # Rows: contiguous `|`-prefixed lines after the header.
+    tail = "".join(chars[header_off:])
+    row_off = header_off
+    first = True
+    for line in tail.split("\n"):
+        this_off = row_off
+        row_off += len(line) + 1
+        if first:
+            first = False  # the header line itself
+            continue
+        trimmed = line.strip()
+        if not trimmed.startswith("|"):
+            break
+        if all(c == "|" or c == "-" or c == ":" or c.isspace() for c in trimmed):
+            continue  # separator
+        span = (this_off, this_off + len(line))
+        cells = [c.strip() for c in trimmed.strip("|").split("|")]
+        if len(cells) < 4:
+            violations.append(
+                mk(arch_path, chars, span, "contract-coverage", "contract row is missing its `pinned by` cell")
+            )
+            continue
+        label = cells[0].replace("`", "")
+        pinned = backticked_idents(cells[3])
+        if not pinned:
+            violations.append(
+                mk(arch_path, chars, span, "contract-coverage",
+                   "contract row (%s) pins no test — name the covering test fns in its `pinned by` cell" % label)
+            )
+            continue
+        resolved = ""
+        for tok in pinned:
+            if tok in index:
+                resolved += index[tok]
+            else:
+                violations.append(
+                    mk(arch_path, chars, span, "contract-coverage",
+                       "contract row (%s) pins `%s` but no such test fn exists" % (label, tok))
+                )
+        if not resolved:
+            continue  # every pin dangled; already reported
+        for sym in backticked_idents(cells[0]):
+            if sym not in resolved:
+                violations.append(
+                    mk(arch_path, chars, span, "contract-coverage",
+                       "contract row (%s) is pinned by tests that never mention `%s`" % (label, sym))
+                )
+
+
+def audit(files):
+    violations = []
+    for path in sorted(files):
+        if not (path.startswith("rust/src/") and path.endswith(".rs")):
+            continue
+        rel = path[len("rust/src/") :]
+        for v in lint_file_full(rel, files[path]):
+            v["path"] = path
+            violations.append(v)
+    rule_schema_drift(files, violations)
+    rule_contract_coverage(files, violations)
+    violations.sort(key=sort_key)
+    return violations
+
+
+def render_text(violations, nfiles):
+    out = []
+    n = 0
+    for v in violations:
+        if v["waived"]:
+            continue
+        out.append("%s:%d: [%s] %s\n" % (v["path"], v["line"], v["rule"], v["msg"]))
+        n += 1
+    if n > 0:
+        out.append("fica-lint: %d violation(s)\n" % n)
+    else:
+        out.append("fica-lint: clean (%d files)\n" % nfiles)
+    return "".join(out)
+
+
+def json_escape(s):
+    out = []
+    for c in s:
+        if c == '"':
+            out.append('\\"')
+        elif c == "\\":
+            out.append("\\\\")
+        elif c == "\n":
+            out.append("\\n")
+        elif c == "\r":
+            out.append("\\r")
+        elif c == "\t":
+            out.append("\\t")
+        elif ord(c) < 0x20:
+            out.append("\\u%04x" % ord(c))
+        else:
+            out.append(c)
+    return "".join(out)
+
+
+def render_json(violations, nfiles):
+    out = ['{"schema":"fica.lint/v1","files":%d,"violations":[' % nfiles]
+    for ix, v in enumerate(violations):
+        if ix > 0:
+            out.append(",")
+        out.append(
+            '\n{"path":"%s","line":%d,"span":[%d,%d],"rule":"%s","waived":%s,"msg":"%s"}'
+            % (
+                json_escape(v["path"]),
+                v["line"],
+                v["span"][0],
+                v["span"][1],
+                v["rule"],
+                "true" if v["waived"] else "false",
+                json_escape(v["msg"]),
+            )
+        )
+    out.append("]}\n" if not violations else "\n]}\n")
+    return "".join(out)
+
+
+# ------------------------------------------------------------------- main
+
+
+def collect_rs_files(root):
+    out = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames.sort()
+        for name in sorted(filenames):
+            if name.endswith(".rs"):
+                out.append(os.path.join(dirpath, name))
+    out.sort()
+    return out
+
+
+def self_report(root):
+    src_root = os.path.join(root, "tools", "fica-lint", "src")
+    if not os.path.isdir(src_root):
+        raise RuntimeError("%s not found — not the workspace root?" % src_root)
+    files = collect_rs_files(src_root)
+    violations = []
     for path in files:
-        rel = os.path.relpath(path, root).replace(os.sep, "/")
+        rel = os.path.relpath(path, src_root).replace(os.sep, "/")
         with open(path, encoding="utf-8") as fh:
             src = fh.read()
-        for lineno, rule, msg in lint_file(rel, src):
-            print("%s:%d: [%s] %s" % (rel, lineno, rule, msg))
-            total += 1
-    if total:
-        print("fica-lint (mirror): %d violation(s)" % total)
-        return 1
-    print("fica-lint (mirror): clean (%d files)" % len(files))
-    return 0
+        for v in lint_self_file(rel, src):
+            v["path"] = "tools/fica-lint/src/%s" % rel
+            violations.append(v)
+    violations.sort(key=sort_key)
+    return violations, len(files)
+
+
+def main(argv):
+    root = None
+    as_json = False
+    self_mode = False
+    lint_one = None
+    i = 0
+    while i < len(argv):
+        a = argv[i]
+        if a == "--json":
+            as_json = True
+        elif a == "--self":
+            self_mode = True
+        elif a == "--root":
+            i += 1
+            if i >= len(argv):
+                sys.stderr.write("fica-lint: error: --root needs a directory argument\n")
+                return 2
+            root = argv[i]
+        elif a == "--lint-file":
+            if i + 2 >= len(argv):
+                sys.stderr.write("fica-lint: error: --lint-file needs REL and PATH arguments\n")
+                return 2
+            lint_one = (argv[i + 1], argv[i + 2])
+            i += 2
+        else:
+            sys.stderr.write(
+                "fica-lint: error: unknown argument %r (usage: mirror.py [--root DIR] [--json] [--self] [--lint-file REL PATH])\n" % a
+            )
+            return 2
+        i += 1
+
+    if lint_one is not None:
+        rel, path = lint_one
+        try:
+            with open(path, encoding="utf-8") as fh:
+                src = fh.read()
+        except OSError as e:
+            sys.stderr.write("fica-lint: error: %s\n" % e)
+            return 2
+        violations = lint_file_full(rel, src)
+        sys.stdout.write(render_json(violations, 1) if as_json else render_text(violations, 1))
+        return 0 if all(v["waived"] for v in violations) else 1
+
+    if root is None:
+        root = discover_root(os.getcwd())
+        if root is None:
+            sys.stderr.write(
+                "fica-lint: error: no workspace root found (no ancestor Cargo.toml with [workspace]); pass --root\n"
+            )
+            return 2
+
+    try:
+        if self_mode:
+            violations, nfiles = self_report(root)
+        else:
+            files = load_workspace(root)
+            nfiles = len(files)
+            violations = audit(files)
+    except (RuntimeError, OSError) as e:
+        sys.stderr.write("fica-lint: error: %s\n" % e)
+        return 2
+    sys.stdout.write(render_json(violations, nfiles) if as_json else render_text(violations, nfiles))
+    return 0 if all(v["waived"] for v in violations) else 1
 
 
 if __name__ == "__main__":
-    sys.exit(main())
+    sys.exit(main(sys.argv[1:]))

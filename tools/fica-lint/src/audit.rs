@@ -1,0 +1,631 @@
+//! Cross-file audit stage: load the whole workspace (solver sources,
+//! integration tests, fixtures, docs) into one model and run the rules
+//! no single file can check — `schema-drift`, `contract-coverage` —
+//! plus the per-file token rules over every solver source.
+//!
+//! The model is deliberately plain: a sorted `path -> content` map.
+//! Everything downstream (tag scans, the item graph, the test index)
+//! is derived per call; the whole tree is a few hundred kilobytes and
+//! the audit runs in milliseconds, so there is nothing to cache.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+
+use crate::{blank_cfg_test, lint_file_full, line_of, scan_items, strip_source, ItemKind, Violation};
+
+/// The loaded workspace: workspace-relative path (with `/` separators)
+/// to file content.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    /// `rust/src/**.rs`, `rust/tests/**.{rs,json}`, `docs/**.md`,
+    /// `ARCHITECTURE.md`, `README.md`.
+    pub files: BTreeMap<String, String>,
+}
+
+fn walk_tree(
+    dir: &Path,
+    prefix: &str,
+    exts: &[&str],
+    out: &mut BTreeMap<String, String>,
+) -> Result<(), String> {
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return Ok(()), // optional subtree
+    };
+    let mut paths: Vec<PathBuf> = Vec::new();
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("walking {}: {e}", dir.display()))?;
+        paths.push(entry.path());
+    }
+    paths.sort();
+    for path in paths {
+        let name = path.file_name().map(|n| n.to_string_lossy().into_owned());
+        let Some(name) = name else { continue };
+        let rel = format!("{prefix}/{name}");
+        if path.is_dir() {
+            walk_tree(&path, &rel, exts, out)?;
+        } else if path.extension().is_some_and(|e| exts.iter().any(|x| e == *x)) {
+            let src = std::fs::read_to_string(&path)
+                .map_err(|e| format!("reading {}: {e}", path.display()))?;
+            out.insert(rel, src);
+        }
+    }
+    Ok(())
+}
+
+impl Workspace {
+    /// Load every audited file under the workspace root. Fails closed
+    /// on unreadable files; `rust/src` must exist, everything else is
+    /// optional (and its absence is then `contract-coverage`'s problem).
+    pub fn load(root: &Path) -> Result<Workspace, String> {
+        if !root.join("rust/src").is_dir() {
+            return Err(format!(
+                "{} has no rust/src — not a faster-ica workspace root",
+                root.display()
+            ));
+        }
+        let mut files = BTreeMap::new();
+        walk_tree(&root.join("rust/src"), "rust/src", &["rs"], &mut files)?;
+        walk_tree(&root.join("rust/tests"), "rust/tests", &["rs", "json"], &mut files)?;
+        walk_tree(&root.join("docs"), "docs", &["md"], &mut files)?;
+        for top in ["ARCHITECTURE.md", "README.md"] {
+            if let Ok(src) = std::fs::read_to_string(root.join(top)) {
+                files.insert(top.to_string(), src);
+            }
+        }
+        Ok(Workspace { files })
+    }
+
+    /// Build a workspace directly from `(path, content)` pairs — the
+    /// unit-test entry point.
+    pub fn from_entries(entries: Vec<(String, String)>) -> Workspace {
+        Workspace { files: entries.into_iter().collect() }
+    }
+}
+
+/// Nearest ancestor of `start` whose `Cargo.toml` declares
+/// `[workspace]` — the root every rule scope is pinned to, so the CLI
+/// behaves identically from any invocation directory.
+pub fn discover_root(start: &Path) -> Option<PathBuf> {
+    start.ancestors().find_map(|dir| {
+        let manifest = dir.join("Cargo.toml");
+        match std::fs::read_to_string(&manifest) {
+            Ok(text) if text.contains("[workspace]") => Some(dir.to_path_buf()),
+            _ => None,
+        }
+    })
+}
+
+/// One `fica.<family>/vN` tag occurrence: `(start, end, family, version)`.
+type Tag = (usize, usize, String, u64);
+
+/// Scan text for schema tags `fica.<family>/vN`.
+fn scan_tags(chars: &[char]) -> Vec<Tag> {
+    let head: Vec<char> = "fica.".chars().collect();
+    let n = chars.len();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i + head.len() < n {
+        if chars[i..i + head.len()] != head[..]
+            || (i > 0 && (chars[i - 1].is_ascii_alphanumeric() || chars[i - 1] == '_'))
+        {
+            i += 1;
+            continue;
+        }
+        let mut j = i + head.len();
+        let fam_start = j;
+        while j < n && (chars[j].is_ascii_lowercase() || chars[j].is_ascii_digit() || chars[j] == '_')
+        {
+            j += 1;
+        }
+        if j == fam_start || j + 1 >= n || chars[j] != '/' || chars[j + 1] != 'v' {
+            i += 1;
+            continue;
+        }
+        let fam: String = chars[fam_start..j].iter().collect();
+        let mut k = j + 2;
+        let mut ver: u64 = 0;
+        let digits_start = k;
+        while k < n && chars[k].is_ascii_digit() {
+            ver = ver.saturating_mul(10).saturating_add(chars[k] as u64 - '0' as u64);
+            k += 1;
+        }
+        if k == digits_start {
+            i += 1;
+            continue;
+        }
+        out.push((i, k, fam, ver));
+        i = k;
+    }
+    out
+}
+
+fn in_regions(regions: &[(usize, usize)], off: usize) -> bool {
+    regions.iter().any(|&(a, b)| a <= off && off < b)
+}
+
+fn mk(path: &str, chars: &[char], span: (usize, usize), rule: &'static str, msg: String) -> Violation {
+    Violation { path: path.to_string(), line: line_of(chars, span.0), span, rule, msg, waived: false }
+}
+
+/// Backticked `identifier` tokens in a table cell (word-shaped only —
+/// paths and expressions are presentation, not contract symbols).
+fn backticked_idents(cell: &str) -> Vec<String> {
+    let chars: Vec<char> = cell.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < chars.len() {
+        if chars[i] != '`' {
+            i += 1;
+            continue;
+        }
+        let start = i + 1;
+        let mut j = start;
+        while j < chars.len() && chars[j] != '`' {
+            j += 1;
+        }
+        if j >= chars.len() {
+            break;
+        }
+        let tok: String = chars[start..j].iter().collect();
+        if !tok.is_empty() && tok.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+            out.push(tok);
+        }
+        i = j + 1;
+    }
+    out
+}
+
+const CONTRACT_HEADER: &str = "| paths compared | guarantee | why | pinned by |";
+
+fn rule_schema_drift(ws: &Workspace, viol: &mut Vec<Violation>) {
+    // Code tags: string literals in non-test rust/src code.
+    let mut code_versions: BTreeMap<String, BTreeSet<u64>> = BTreeMap::new();
+    let mut code_sites: Vec<(String, (usize, usize), String, u64)> = Vec::new();
+    let mut schema_consts: Vec<(String, (usize, usize), String, bool)> = Vec::new();
+    for (path, src) in &ws.files {
+        if !(path.starts_with("rust/src/") && path.ends_with(".rs")) {
+            continue;
+        }
+        let stripped = strip_source(src);
+        let mut erased = stripped.code.clone();
+        let regions = blank_cfg_test(&mut erased);
+        let mut tags_here: Vec<Tag> = Vec::new();
+        for (off, content) in &stripped.strings {
+            if in_regions(&regions, *off) {
+                continue;
+            }
+            let cchars: Vec<char> = content.chars().collect();
+            for (a, b, fam, ver) in scan_tags(&cchars) {
+                tags_here.push((off + a, off + b, fam, ver));
+            }
+        }
+        for (a, b, fam, ver) in &tags_here {
+            code_versions.entry(fam.clone()).or_default().insert(*ver);
+            code_sites.push((path.clone(), (*a, *b), fam.clone(), *ver));
+        }
+        // Schema-named consts must carry a tag in their initializer.
+        for item in scan_items(&stripped.code, &regions) {
+            if item.kind == ItemKind::Const && !item.in_test && item.name.contains("_SCHEMA") {
+                let tagged =
+                    tags_here.iter().any(|(a, _, _, _)| item.start <= *a && *a < item.end);
+                schema_consts.push((path.clone(), (item.start, item.end), item.name, tagged));
+            }
+        }
+    }
+
+    // Doc tags: docs/*.md plus the top-level narrative docs.
+    let mut doc_tags: BTreeSet<(String, u64)> = BTreeSet::new();
+    let mut doc_sites: Vec<(String, (usize, usize), String, u64)> = Vec::new();
+    for (path, src) in &ws.files {
+        let is_doc = (path.starts_with("docs/") && path.ends_with(".md"))
+            || path == "ARCHITECTURE.md"
+            || path == "README.md";
+        if !is_doc {
+            continue;
+        }
+        let chars: Vec<char> = src.chars().collect();
+        for (a, b, fam, ver) in scan_tags(&chars) {
+            doc_tags.insert((fam.clone(), ver));
+            doc_sites.push((path.clone(), (a, b), fam, ver));
+        }
+    }
+
+    // (a) every code tag must be documented.
+    for (path, span, fam, ver) in &code_sites {
+        if !doc_tags.contains(&(fam.clone(), *ver)) {
+            let chars: Vec<char> = ws.files[path].chars().collect();
+            viol.push(mk(
+                path,
+                &chars,
+                *span,
+                "schema-drift",
+                format!(
+                    "schema tag `fica.{fam}/v{ver}` in code is not documented under docs/ — update the schema docs"
+                ),
+            ));
+        }
+    }
+    // (b) no doc tag may outrun the code for a family the code writes.
+    for (path, span, fam, ver) in &doc_sites {
+        if let Some(vers) = code_versions.get(fam) {
+            let max = vers.iter().next_back().copied().unwrap_or(0);
+            if *ver > max {
+                let chars: Vec<char> = ws.files[path].chars().collect();
+                viol.push(mk(
+                    path,
+                    &chars,
+                    *span,
+                    "schema-drift",
+                    format!(
+                        "documented schema tag `fica.{fam}/v{ver}` has no code writer (max code version is v{max}) — docs and code have drifted"
+                    ),
+                ));
+            }
+        }
+    }
+    // (c) fixture tags must match a code tag exactly.
+    for (path, src) in &ws.files {
+        if !(path.starts_with("rust/tests/fixtures/") && path.ends_with(".json")) {
+            continue;
+        }
+        let chars: Vec<char> = src.chars().collect();
+        for (a, b, fam, ver) in scan_tags(&chars) {
+            let known = code_versions.get(&fam).is_some_and(|vs| vs.contains(&ver));
+            if !known {
+                viol.push(mk(
+                    path,
+                    &chars,
+                    (a, b),
+                    "schema-drift",
+                    format!(
+                        "fixture schema tag `fica.{fam}/v{ver}` matches no code tag — regenerate or retire the fixture"
+                    ),
+                ));
+            }
+        }
+    }
+    // (d) schema-named consts carry their tag.
+    for (path, span, name, tagged) in &schema_consts {
+        if !tagged {
+            let chars: Vec<char> = ws.files[path].chars().collect();
+            viol.push(mk(
+                path,
+                &chars,
+                *span,
+                "schema-drift",
+                format!("const `{name}` is schema-named but contains no `fica.<family>/vN` tag"),
+            ));
+        }
+    }
+}
+
+fn rule_contract_coverage(ws: &Workspace, viol: &mut Vec<Violation>) {
+    // Test index: every fn in rust/tests plus every #[cfg(test)] fn in
+    // rust/src, name -> concatenated raw body text.
+    let mut index: BTreeMap<String, String> = BTreeMap::new();
+    for (path, src) in &ws.files {
+        if !path.ends_with(".rs") {
+            continue;
+        }
+        let in_tests_tree = path.starts_with("rust/tests/");
+        let in_src_tree = path.starts_with("rust/src/");
+        if !in_tests_tree && !in_src_tree {
+            continue;
+        }
+        let raw: Vec<char> = src.chars().collect();
+        let stripped = strip_source(src);
+        let mut erased = stripped.code.clone();
+        let regions = blank_cfg_test(&mut erased);
+        for item in scan_items(&stripped.code, &regions) {
+            if item.kind != ItemKind::Fn {
+                continue;
+            }
+            if in_src_tree && !item.in_test {
+                continue;
+            }
+            let body: String = raw[item.start..item.end.min(raw.len())].iter().collect();
+            let slot = index.entry(item.name).or_default();
+            slot.push_str(&body);
+            slot.push('\n');
+        }
+    }
+
+    let arch_path = "ARCHITECTURE.md";
+    let Some(arch) = ws.files.get(arch_path) else {
+        viol.push(Violation {
+            path: arch_path.to_string(),
+            line: 1,
+            span: (0, 0),
+            rule: "contract-coverage",
+            msg: "ARCHITECTURE.md not found — the equivalence-contract table is the coverage anchor"
+                .to_string(),
+            waived: false,
+        });
+        return;
+    };
+    let chars: Vec<char> = arch.chars().collect();
+    let mut header_at: Option<usize> = None;
+    let mut off = 0;
+    for line in arch.split('\n') {
+        if line.trim() == CONTRACT_HEADER {
+            header_at = Some(off);
+            break;
+        }
+        off += line.chars().count() + 1;
+    }
+    let Some(header_off) = header_at else {
+        viol.push(Violation {
+            path: arch_path.to_string(),
+            line: 1,
+            span: (0, 0),
+            rule: "contract-coverage",
+            msg: format!(
+                "equivalence-contract table header `{CONTRACT_HEADER}` not found in ARCHITECTURE.md"
+            ),
+            waived: false,
+        });
+        return;
+    };
+
+    // Rows: contiguous `|`-prefixed lines after the header; the first
+    // is the separator.
+    let tail: String = chars[header_off..].iter().collect();
+    let mut row_off = header_off;
+    let mut first = true;
+    for line in tail.split('\n') {
+        let this_off = row_off;
+        row_off += line.chars().count() + 1;
+        if first {
+            first = false; // the header line itself
+            continue;
+        }
+        let trimmed = line.trim();
+        if !trimmed.starts_with('|') {
+            break;
+        }
+        if trimmed.chars().all(|c| c == '|' || c == '-' || c == ':' || c.is_whitespace()) {
+            continue; // separator
+        }
+        let span = (this_off, this_off + line.chars().count());
+        let cells: Vec<&str> = trimmed.trim_matches('|').split('|').map(|c| c.trim()).collect();
+        if cells.len() < 4 {
+            viol.push(mk(
+                arch_path,
+                &chars,
+                span,
+                "contract-coverage",
+                "contract row is missing its `pinned by` cell".to_string(),
+            ));
+            continue;
+        }
+        let label = cells[0].replace('`', "");
+        let pinned = backticked_idents(cells[3]);
+        if pinned.is_empty() {
+            viol.push(mk(
+                arch_path,
+                &chars,
+                span,
+                "contract-coverage",
+                format!("contract row ({label}) pins no test — name the covering test fns in its `pinned by` cell"),
+            ));
+            continue;
+        }
+        let mut resolved = String::new();
+        for tok in &pinned {
+            match index.get(tok) {
+                Some(body) => resolved.push_str(body),
+                None => viol.push(mk(
+                    arch_path,
+                    &chars,
+                    span,
+                    "contract-coverage",
+                    format!("contract row ({label}) pins `{tok}` but no such test fn exists"),
+                )),
+            }
+        }
+        if resolved.is_empty() {
+            continue; // every pin dangled; already reported
+        }
+        for sym in backticked_idents(cells[0]) {
+            if !resolved.contains(&sym) {
+                viol.push(mk(
+                    arch_path,
+                    &chars,
+                    span,
+                    "contract-coverage",
+                    format!("contract row ({label}) is pinned by tests that never mention `{sym}`"),
+                ));
+            }
+        }
+    }
+}
+
+/// Run the full audit: per-file token rules over every solver source,
+/// then the cross-file rules over the whole model. Returns every
+/// violation (waived ones flagged), sorted by (path, line, span, rule).
+pub fn audit(ws: &Workspace) -> Vec<Violation> {
+    let mut viol: Vec<Violation> = Vec::new();
+    for (path, src) in &ws.files {
+        if !(path.starts_with("rust/src/") && path.ends_with(".rs")) {
+            continue;
+        }
+        let rel = &path["rust/src/".len()..];
+        for mut v in lint_file_full(rel, src) {
+            v.path = path.clone();
+            viol.push(v);
+        }
+    }
+    rule_schema_drift(ws, &mut viol);
+    rule_contract_coverage(ws, &mut viol);
+    viol.sort();
+    viol
+}
+
+/// Human-readable report: unwaived violations as
+/// `path:line: [rule] msg` lines plus a summary line.
+pub fn render_text(viol: &[Violation], files: usize) -> String {
+    let mut out = String::new();
+    let mut n = 0usize;
+    for v in viol.iter().filter(|v| !v.waived) {
+        out.push_str(&format!("{}:{}: [{}] {}\n", v.path, v.line, v.rule, v.msg));
+        n += 1;
+    }
+    if n > 0 {
+        out.push_str(&format!("fica-lint: {n} violation(s)\n"));
+    } else {
+        out.push_str(&format!("fica-lint: clean ({files} files)\n"));
+    }
+    out
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::new();
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Machine-readable `fica.lint/v1` report, byte-identical between this
+/// crate and `mirror.py` (the CI parity gate diffs the two): every
+/// violation — including waived ones — with path, line, span, rule,
+/// waived flag and message.
+pub fn render_json(viol: &[Violation], files: usize) -> String {
+    let mut out = format!("{{\"schema\":\"fica.lint/v1\",\"files\":{files},\"violations\":[");
+    for (ix, v) in viol.iter().enumerate() {
+        if ix > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n{{\"path\":\"{}\",\"line\":{},\"span\":[{},{}],\"rule\":\"{}\",\"waived\":{},\"msg\":\"{}\"}}",
+            json_escape(&v.path),
+            v.line,
+            v.span.0,
+            v.span.1,
+            v.rule,
+            if v.waived { "true" } else { "false" },
+            json_escape(&v.msg)
+        ));
+    }
+    if viol.is_empty() {
+        out.push_str("]}\n");
+    } else {
+        out.push_str("\n]}\n");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ws(entries: &[(&str, &str)]) -> Workspace {
+        Workspace::from_entries(
+            entries.iter().map(|(p, c)| (p.to_string(), c.to_string())).collect(),
+        )
+    }
+
+    #[test]
+    fn schema_tags_are_scanned() {
+        let chars: Vec<char> = "x fica.trace/v1 y fica.bench_backend/v12 zfica.no/v1".chars().collect();
+        let tags = scan_tags(&chars);
+        assert_eq!(tags.len(), 2, "{tags:?}");
+        assert_eq!(tags[0].2, "trace");
+        assert_eq!(tags[0].3, 1);
+        assert_eq!(tags[1].2, "bench_backend");
+        assert_eq!(tags[1].3, 12);
+    }
+
+    #[test]
+    fn undocumented_code_tag_drifts() {
+        let w = ws(&[
+            ("rust/src/lib.rs", "pub const DEMO_SCHEMA: &str = \"fica.demo/v2\";\n"),
+            ("docs/DEMO.md", "The tag is `fica.demo/v1`.\n"),
+            ("ARCHITECTURE.md", &format!("{CONTRACT_HEADER}\n")),
+        ]);
+        let v = audit(&w);
+        let drift: Vec<&Violation> = v.iter().filter(|v| v.rule == "schema-drift").collect();
+        // v2 in code undocumented + v1 in docs newer than nothing? No:
+        // code has v2, docs have v1 <= 2 — only the undocumented v2 fires.
+        assert_eq!(drift.len(), 1, "{v:?}");
+        assert!(drift[0].msg.contains("fica.demo/v2"), "{}", drift[0].msg);
+        assert_eq!(drift[0].path, "rust/src/lib.rs");
+    }
+
+    #[test]
+    fn fixture_tag_must_match_code() {
+        let w = ws(&[
+            ("rust/src/lib.rs", "pub const DEMO_SCHEMA: &str = \"fica.demo/v1\";\n"),
+            ("docs/DEMO.md", "`fica.demo/v1`\n"),
+            ("rust/tests/fixtures/old.json", "{\"schema\":\"fica.demo/v9\"}\n"),
+            ("ARCHITECTURE.md", &format!("{CONTRACT_HEADER}\n")),
+        ]);
+        let v = audit(&w);
+        let drift: Vec<&Violation> = v.iter().filter(|v| v.rule == "schema-drift").collect();
+        assert_eq!(drift.len(), 1, "{v:?}");
+        assert_eq!(drift[0].path, "rust/tests/fixtures/old.json");
+    }
+
+    #[test]
+    fn contract_row_needs_a_live_test() {
+        let arch = format!(
+            "{CONTRACT_HEADER}\n|---|---|---|---|\n| `alpha` vs beta | bitwise | speed | `test_alpha` |\n| gamma | 1e-12 | robust | `test_gone` |\n"
+        );
+        let w = ws(&[
+            ("rust/src/lib.rs", "\n"),
+            ("rust/tests/t.rs", "#[test]\nfn test_alpha() { let _ = \"alpha\"; }\n"),
+            ("ARCHITECTURE.md", &arch),
+        ]);
+        let v = audit(&w);
+        let cov: Vec<&Violation> = v.iter().filter(|v| v.rule == "contract-coverage").collect();
+        assert_eq!(cov.len(), 1, "{v:?}");
+        assert!(cov[0].msg.contains("test_gone"), "{}", cov[0].msg);
+        assert_eq!(cov[0].line, 4);
+    }
+
+    #[test]
+    fn contract_row_symbols_must_appear_in_pinning_tests() {
+        let arch = format!(
+            "{CONTRACT_HEADER}\n|---|---|---|---|\n| `Missing` path | bitwise | x | `test_a` |\n"
+        );
+        let w = ws(&[
+            ("rust/src/lib.rs", "\n"),
+            ("rust/tests/t.rs", "fn test_a() { other(); }\n"),
+            ("ARCHITECTURE.md", &arch),
+        ]);
+        let v = audit(&w);
+        let cov: Vec<&Violation> = v.iter().filter(|v| v.rule == "contract-coverage").collect();
+        assert_eq!(cov.len(), 1, "{v:?}");
+        assert!(cov[0].msg.contains("`Missing`"), "{}", cov[0].msg);
+    }
+
+    #[test]
+    fn json_report_shape_is_stable() {
+        let v = vec![Violation {
+            path: "a.rs".to_string(),
+            line: 3,
+            span: (10, 12),
+            rule: "no-panic",
+            msg: "x \"y\"".to_string(),
+            waived: true,
+        }];
+        let json = render_json(&v, 2);
+        assert_eq!(
+            json,
+            "{\"schema\":\"fica.lint/v1\",\"files\":2,\"violations\":[\n{\"path\":\"a.rs\",\"line\":3,\"span\":[10,12],\"rule\":\"no-panic\",\"waived\":true,\"msg\":\"x \\\"y\\\"\"}\n]}\n"
+        );
+        assert_eq!(
+            render_json(&[], 5),
+            "{\"schema\":\"fica.lint/v1\",\"files\":5,\"violations\":[]}\n"
+        );
+    }
+}

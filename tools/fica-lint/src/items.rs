@@ -1,0 +1,262 @@
+//! Item-level source model: a lightweight parser that turns a stripped
+//! source buffer (see [`crate::strip_source`]) into a flat list of
+//! items — functions, types, impls, modules, imports, consts — each
+//! with a char span and a test/non-test flag. The cross-file audit
+//! stage ([`crate::audit`]) is built on this model: schema-drift walks
+//! `*_SCHEMA` consts, contract-coverage indexes test functions.
+//!
+//! This is deliberately not a full parser: it scans for item keywords
+//! at identifier boundaries in comment/string-blanked code and matches
+//! braces forward. That is exact enough for span and name extraction on
+//! the rustfmt-shaped code this workspace enforces, and it keeps the
+//! crate dependency-free.
+
+use crate::{ident_at, is_ascii_ident, match_brace, skip_ws};
+
+/// What kind of item a span covers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ItemKind {
+    /// `fn` (free, method, or trait method with a body).
+    Fn,
+    /// `struct`.
+    Struct,
+    /// `enum`.
+    Enum,
+    /// `trait`.
+    Trait,
+    /// `impl` block.
+    Impl,
+    /// `mod` (inline or declaration).
+    Mod,
+    /// `use` import.
+    Use,
+    /// `const` item (not `const fn`, not a const generic).
+    Const,
+    /// `static` item.
+    Static,
+    /// `type` alias.
+    TypeAlias,
+}
+
+impl ItemKind {
+    /// Stable lowercase name, shared with `mirror.py`.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ItemKind::Fn => "fn",
+            ItemKind::Struct => "struct",
+            ItemKind::Enum => "enum",
+            ItemKind::Trait => "trait",
+            ItemKind::Impl => "impl",
+            ItemKind::Mod => "mod",
+            ItemKind::Use => "use",
+            ItemKind::Const => "const",
+            ItemKind::Static => "static",
+            ItemKind::TypeAlias => "type",
+        }
+    }
+}
+
+/// One parsed item.
+#[derive(Debug, Clone)]
+pub struct Item {
+    /// Item kind.
+    pub kind: ItemKind,
+    /// Declared name (for `impl`: the implemented-on type's head ident;
+    /// for `use`: the imported path text).
+    pub name: String,
+    /// Char offset of the item keyword.
+    pub start: usize,
+    /// Char offset one past the closing `}` or `;`.
+    pub end: usize,
+    /// Whether the item starts inside a `#[cfg(test)]`-erased region.
+    pub in_test: bool,
+}
+
+const KEYWORDS: [(&str, ItemKind); 10] = [
+    ("fn", ItemKind::Fn),
+    ("struct", ItemKind::Struct),
+    ("enum", ItemKind::Enum),
+    ("trait", ItemKind::Trait),
+    ("impl", ItemKind::Impl),
+    ("mod", ItemKind::Mod),
+    ("use", ItemKind::Use),
+    ("const", ItemKind::Const),
+    ("static", ItemKind::Static),
+    ("type", ItemKind::TypeAlias),
+];
+
+fn in_regions(regions: &[(usize, usize)], off: usize) -> bool {
+    regions.iter().any(|&(a, b)| a <= off && off < b)
+}
+
+/// Offset one past the item's terminator: the `}` matching its first
+/// body brace, or its `;`. Brace groups before the terminator (e.g.
+/// `const X: Foo = Foo { a: 1 };`) are skipped as units.
+fn item_end(code: &[char], from: usize, brace_bodied: bool) -> usize {
+    let n = code.len();
+    let mut j = from;
+    while j < n {
+        match code[j] {
+            '{' if brace_bodied => return match_brace(code, j),
+            '{' => j = match_brace(code, j),
+            ';' => return j + 1,
+            _ => j += 1,
+        }
+    }
+    n
+}
+
+/// Name of an `impl` block: skip optional generics after `impl`, then
+/// take the head ident of the implemented type — the segment after
+/// `for` when the block is a trait impl.
+fn impl_name(code: &[char], mut j: usize) -> (usize, String) {
+    let n = code.len();
+    j = skip_ws(code, j);
+    if j < n && code[j] == '<' {
+        let mut depth = 0i64;
+        while j < n {
+            if code[j] == '<' {
+                depth += 1;
+            } else if code[j] == '>' {
+                depth -= 1;
+                if depth == 0 {
+                    j += 1;
+                    break;
+                }
+            }
+            j += 1;
+        }
+        j = skip_ws(code, j);
+    }
+    let (mut k, mut name) = ident_at(code, j);
+    // `impl Trait for Type` — the item is named after Type.
+    loop {
+        let w = skip_ws(code, k);
+        if w < n && is_ascii_ident(code[w]) {
+            let (k2, word) = ident_at(code, w);
+            if word == "for" {
+                let t = skip_ws(code, k2);
+                let (k3, tyname) = ident_at(code, t);
+                if !tyname.is_empty() {
+                    name = tyname;
+                    k = k3;
+                }
+                break;
+            }
+        }
+        if w < n && (code[w] == ':' || code[w] == '<') {
+            // Path segment or generic args; keep scanning for `for`.
+            k = w + 1;
+            continue;
+        }
+        break;
+    }
+    (k, name)
+}
+
+/// Parse every item in stripped, `#[cfg(test)]`-erased-aware code.
+/// `test_regions` are the erased spans from [`crate::blank_cfg_test`]
+/// run on an unerased copy — items are still parsed there, flagged
+/// `in_test`, so the audit stage can index test fns without re-reading.
+pub fn scan_items(code: &[char], test_regions: &[(usize, usize)]) -> Vec<Item> {
+    let n = code.len();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < n {
+        if !is_ascii_ident(code[i]) || (i > 0 && is_ascii_ident(code[i - 1])) {
+            i += 1;
+            continue;
+        }
+        let (j, word) = ident_at(code, i);
+        let Some(&(_, kind)) = KEYWORDS.iter().find(|(k, _)| *k == word) else {
+            i = j;
+            continue;
+        };
+        match kind {
+            ItemKind::Impl => {
+                let (_, name) = impl_name(code, j);
+                if !name.is_empty() {
+                    let end = item_end(code, j, true);
+                    out.push(Item { kind, name, start: i, end, in_test: in_regions(test_regions, i) });
+                }
+            }
+            ItemKind::Use => {
+                let end = item_end(code, j, false);
+                let name: String =
+                    code[skip_ws(code, j)..end.saturating_sub(1).max(j)].iter().collect();
+                let name = name.trim().to_string();
+                if !name.is_empty() {
+                    out.push(Item { kind, name, start: i, end, in_test: in_regions(test_regions, i) });
+                }
+            }
+            ItemKind::Const | ItemKind::Static => {
+                // `const fn` belongs to the Fn arm; `*const T` and
+                // `<const N: usize>` are type positions — a const/static
+                // *item* always reads `const NAME :`.
+                let k = skip_ws(code, j);
+                let (after, name) = ident_at(code, k);
+                let (after, name) = if name == "mut" {
+                    let k2 = skip_ws(code, after);
+                    ident_at(code, k2)
+                } else {
+                    (after, name)
+                };
+                let colon = skip_ws(code, after);
+                if !name.is_empty() && name != "fn" && code.get(colon) == Some(&':') {
+                    let end = item_end(code, after, false);
+                    out.push(Item { kind, name, start: i, end, in_test: in_regions(test_regions, i) });
+                }
+            }
+            _ => {
+                // fn / struct / enum / trait / mod / type: keyword, ws,
+                // name ident, body to `{...}` or `;`.
+                let k = skip_ws(code, j);
+                if k > j {
+                    let (after, name) = ident_at(code, k);
+                    if !name.is_empty() {
+                        let end = item_end(code, after, true);
+                        out.push(Item {
+                            kind,
+                            name,
+                            start: i,
+                            end,
+                            in_test: in_regions(test_regions, i),
+                        });
+                    }
+                }
+            }
+        }
+        i = j;
+    }
+    out
+}
+
+/// Every call site `name(` in stripped code: `(char_offset_of_name,
+/// name)`. Declarations (`fn name(`) and control-flow keywords are
+/// excluded; method calls are included under their method name.
+pub fn scan_calls(code: &[char]) -> Vec<(usize, String)> {
+    const NOT_CALLS: [&str; 9] =
+        ["fn", "if", "while", "match", "for", "loop", "return", "in", "move"];
+    let n = code.len();
+    let mut out = Vec::new();
+    let mut i = 0;
+    let mut prev_word = String::new();
+    while i < n {
+        if is_ascii_ident(code[i]) && (i == 0 || !is_ascii_ident(code[i - 1])) {
+            let (j, word) = ident_at(code, i);
+            let k = skip_ws(code, j);
+            if code.get(k) == Some(&'(')
+                && !NOT_CALLS.contains(&word.as_str())
+                && prev_word != "fn"
+                && !word.chars().next().is_some_and(|c| c.is_ascii_digit())
+            {
+                out.push((i, word.clone()));
+            }
+            prev_word = word;
+            i = j;
+            continue;
+        }
+        i += 1;
+    }
+    out
+}

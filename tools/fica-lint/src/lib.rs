@@ -1,42 +1,86 @@
-//! `fica-lint`: a dependency-free lint pass enforcing the determinism
-//! and safety contracts of the `faster-ica` solver core.
+//! `fica-lint` / **fica-audit**: a dependency-free static analysis pass
+//! enforcing the determinism, safety and cross-file consistency
+//! contracts of the `faster-ica` workspace.
 //!
-//! The engine is a length-preserving source scanner (comments and
-//! string contents blanked, newlines kept so offsets map to line
-//! numbers), a `#[cfg(test)]`-item eraser, and four text rules:
+//! The engine has two stages:
 //!
-//! - **no-panic** — `.unwrap()` / `.expect()` / `panic!` / bare
-//!   `assert!` (plus `unreachable!`, `todo!`, `unimplemented!`) are
-//!   banned in non-test library code; typed [`IcaError`] paths or
-//!   `debug_assert!` are the sanctioned alternatives.
-//! - **float-accum** — raw `+=` / `.sum()` accumulation in `backend/`,
-//!   `linalg/` and `data/stats.rs` must live inside the sanctioned
-//!   fixed-order reduction helpers ([`SANCTIONED_FNS`]) so the bitwise
-//!   determinism contract stays auditable in one place.
-//! - **nondeterminism** — `HashMap`, `SystemTime` and `Instant` are
-//!   banned outside `bench/` and `obs/` (iteration order / wall-clock
-//!   on a solver path; the observability layer's whole job is reading
-//!   the clock, and its output never feeds the numerics).
-//! - **fail-closed** — decoder-shaped `pub fn`s in `data/` and
-//!   `util/json.rs` must return `Result`.
+//! 1. **Token stage** (this module): a length-preserving source scanner
+//!    (comments and string contents blanked, newlines kept so offsets
+//!    map to line numbers), a `#[cfg(test)]`-item eraser, and the
+//!    per-file rules:
+//!    - **no-panic** — `.unwrap()` / `.expect()` / `panic!` / bare
+//!      `assert!` (plus `unreachable!`, `todo!`, `unimplemented!`) are
+//!      banned in non-test library code; typed [`IcaError`] paths or
+//!      `debug_assert!` are the sanctioned alternatives.
+//!    - **float-accum** — raw `+=` / `.sum()` accumulation in
+//!      `backend/`, `linalg/` and `data/stats.rs` must live inside the
+//!      sanctioned fixed-order reduction helpers ([`SANCTIONED_FNS`]).
+//!    - **nondeterminism** — `HashMap`, `SystemTime` and `Instant` are
+//!      banned outside `bench/` and `obs/`.
+//!    - **fail-closed** — decoder-shaped `pub fn`s in `data/` and
+//!      `util/json.rs` must return `Result`.
+//!    - **unchecked-arith** — raw `*` / `+` on size-typed operands in
+//!      the decoder paths (`data/` minus `data/stats.rs`, plus
+//!      `util/json.rs`) must use `checked_*` / `saturating_*` instead.
+//!    - **lock-hygiene** — in `backend/pool.rs`, `coordinator/` and
+//!      future `daemon/` code: every file that acquires locks declares
+//!      a canonical acquisition order in a `lock-order` header comment;
+//!      no channel call while a guard is live, no out-of-order nested
+//!      acquisition.
 //!
-//! Violations are silenced by scoped waivers carrying a justification:
-//! `// fica-lint: allow(rule, ...) — why this one is sound`, either
-//! trailing (covers its own line) or standalone (covers the next
-//! statement or item), or `allow-file(rule)` for a whole file. A waiver
-//! without a justification, or naming an unknown rule, is itself a
-//! violation (`bad-waiver`).
+//! 2. **Item-graph stage** ([`audit`], built on [`scan_items`]): the
+//!    whole workspace is loaded into one model and the cross-file rules
+//!    run — **schema-drift** (code / docs / fixture `fica.<family>/vN`
+//!    tags must agree), **contract-coverage** (every ARCHITECTURE.md
+//!    equivalence-contract row resolves to live test fns), and
+//!    **stale-waiver** (a waiver that no longer suppresses anything is
+//!    itself a violation).
+//!
+//! Violations are silenced by scoped waivers carrying a justification —
+//! an `allow` directive naming the waived rules in parentheses, then a
+//! dash, then why the site is sound (see `docs/LINT_RULES.md` for the
+//! grammar) — either trailing (covers its own line), standalone (covers
+//! the next statement or item), or `allow-file` for a whole file. A
+//! waiver without a justification, or naming an unknown or unwaivable
+//! rule, is itself a violation (`bad-waiver`); a waiver that suppresses
+//! nothing is reported by `stale-waiver`.
 //!
 //! `tools/fica-lint/mirror.py` is a toolchain-less Python mirror of
-//! this engine (byte-for-byte the same semantics) for environments
-//! without cargo; this crate is what CI runs.
+//! this engine (byte-for-byte the same report, proven by the CI parity
+//! gate); this crate is what the rust CI job runs.
 //!
 //! [`IcaError`]: https://docs.rs/faster-ica
 
-use std::collections::BTreeSet;
+pub mod audit;
+mod items;
 
-/// The four enforceable rules, in report order.
-pub const RULES: [&str; 4] = ["no-panic", "float-accum", "nondeterminism", "fail-closed"];
+pub use items::{scan_calls, scan_items, Item, ItemKind};
+
+/// The nine enforceable rules, in report order. `bad-waiver` is the
+/// implicit tenth: malformed waivers are always reported.
+pub const RULES: [&str; 9] = [
+    "no-panic",
+    "float-accum",
+    "nondeterminism",
+    "fail-closed",
+    "unchecked-arith",
+    "lock-hygiene",
+    "schema-drift",
+    "contract-coverage",
+    "stale-waiver",
+];
+
+/// The rules a waiver may name. The cross-file rules (`schema-drift`,
+/// `contract-coverage`) and the meta rule (`stale-waiver`) cannot be
+/// waived — drift is fixed at the source, not silenced.
+pub const WAIVABLE: [&str; 6] = [
+    "no-panic",
+    "float-accum",
+    "nondeterminism",
+    "fail-closed",
+    "unchecked-arith",
+    "lock-hygiene",
+];
 
 /// Functions whose bodies may accumulate floats freely: the fixed-order
 /// lane fold and pairwise tree reduction (`backend/`), and the
@@ -50,24 +94,43 @@ pub const SANCTIONED_FNS: [&str; 7] =
 pub const DECODER_NAMES: [&str; 7] =
     ["parse", "decode", "open", "read", "load", "from_bytes", "next_chunk"];
 
+/// Identifier heads/tails marking an operand as size-typed for the
+/// unchecked-arith rule: `len`, `self.pos`, `byte_off`, `n_cols`, …
+pub const SIZE_MARKERS: [&str; 16] = [
+    "bytes", "cap", "chunk", "cols", "count", "idx", "len", "n", "nbytes", "off", "offset", "pos",
+    "rows", "size", "stride", "written",
+];
+
+/// Channel methods that must not be called while a lock guard is live.
+pub const CHANNEL_METHODS: [&str; 6] =
+    ["recv", "recv_timeout", "send", "send_timeout", "try_recv", "try_send"];
+
 const PANIC_MACROS: [&str; 5] = ["panic", "assert", "unreachable", "todo", "unimplemented"];
 
-/// One reported violation.
+/// One reported violation. The derived ordering (path, line, span,
+/// rule, msg, waived) is the report order, identical in `mirror.py`.
 #[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
 pub struct Violation {
+    /// Report path (workspace-relative in audit mode).
+    pub path: String,
     /// 1-based source line.
     pub line: usize,
+    /// Char-offset span `[start, end)` within the file.
+    pub span: (usize, usize),
     /// Rule name (one of [`RULES`] or `bad-waiver`).
     pub rule: &'static str,
     /// Human-readable message.
     pub msg: String,
+    /// Whether a waiver silenced this violation (kept in `--json`
+    /// output; text output prints unwaived violations only).
+    pub waived: bool,
 }
 
 fn is_ident(c: char) -> bool {
     c.is_alphanumeric() || c == '_'
 }
 
-fn is_ascii_ident(c: char) -> bool {
+pub(crate) fn is_ascii_ident(c: char) -> bool {
     c.is_ascii_alphanumeric() || c == '_'
 }
 
@@ -86,14 +149,29 @@ fn find_chars(hay: &[char], from: usize, needle: &[char]) -> Option<usize> {
     (from..=hay.len() - needle.len()).find(|&i| &hay[i..i + needle.len()] == needle)
 }
 
+/// [`strip_source`] output: blanked code plus the comment and
+/// string-literal inventory (char offsets into the blanked buffer).
+#[derive(Debug, Default)]
+pub struct Stripped {
+    /// Source with comment and string/char contents blanked,
+    /// length-preserving (newlines kept).
+    pub code: Vec<char>,
+    /// `(char_offset, text)` of every comment.
+    pub comments: Vec<(usize, String)>,
+    /// `(content_char_offset, content)` of every string literal
+    /// (normal and raw; byte strings are skipped — they hold bytes,
+    /// not schema tags).
+    pub strings: Vec<(usize, String)>,
+}
+
 /// Blank comments and string/char-literal contents, preserving length
-/// and newlines. Returns `(code, comments)` where each comment is
-/// `(char_offset, text)`.
-pub fn strip_source(src: &str) -> (Vec<char>, Vec<(usize, String)>) {
+/// and newlines, collecting the comment and string inventories.
+pub fn strip_source(src: &str) -> Stripped {
     let s: Vec<char> = src.chars().collect();
     let n = s.len();
     let mut out = s.clone();
     let mut comments = Vec::new();
+    let mut strings = Vec::new();
     let mut i = 0;
     while i < n {
         let c = s[i];
@@ -135,7 +213,9 @@ pub fn strip_source(src: &str) -> (Vec<char>, Vec<(usize, String)>) {
                     j += 1;
                 }
             }
-            blank(&mut out, i + 1, j.saturating_sub(1).max(i + 1));
+            let content_end = j.saturating_sub(1).max(i + 1);
+            strings.push((i + 1, s[i + 1..content_end.min(n)].iter().collect()));
+            blank(&mut out, i + 1, content_end);
             i = j;
         } else if (c == 'r' || c == 'b') && (i == 0 || !is_ident(s[i - 1])) {
             // Raw string r"..." / r#"..."# / byte string b"..." / br#"..."#.
@@ -158,7 +238,11 @@ pub fn strip_source(src: &str) -> (Vec<char>, Vec<(usize, String)>) {
                     Some(k) => k + end.len(),
                     None => n,
                 };
-                blank(&mut out, i + 1, (k - end.len().min(k)).max(i + 1));
+                let content_end = (k - end.len().min(k)).max(i + 1);
+                if c == 'r' {
+                    strings.push((j, s[j..content_end.min(n)].iter().collect()));
+                }
+                blank(&mut out, i + 1, content_end);
                 i = k;
             } else if !raw && hashes == 0 && j < n && s[j] == '"' {
                 // b"..." — same escape rules as a normal string.
@@ -198,7 +282,7 @@ pub fn strip_source(src: &str) -> (Vec<char>, Vec<(usize, String)>) {
             i += 1;
         }
     }
-    (out, comments)
+    Stripped { code: out, comments, strings }
 }
 
 /// 1-based line number of a char offset.
@@ -223,7 +307,7 @@ fn line_bounds(code: &[char], lineno: usize) -> (usize, usize) {
 }
 
 /// Index just past the `}` matching the `{` at `open_idx` (or `len`).
-fn match_brace(code: &[char], open_idx: usize) -> usize {
+pub(crate) fn match_brace(code: &[char], open_idx: usize) -> usize {
     let mut depth = 0i64;
     for (j, &c) in code.iter().enumerate().skip(open_idx) {
         if c == '{' {
@@ -238,8 +322,9 @@ fn match_brace(code: &[char], open_idx: usize) -> usize {
     code.len()
 }
 
-/// Blank every item annotated `#[cfg(test)]` (to its closing brace or `;`).
-pub fn blank_cfg_test(code: &mut [char]) {
+/// Blank every item annotated `#[cfg(test)]` (to its closing brace or
+/// `;`), returning the erased `(start, end)` regions.
+pub fn blank_cfg_test(code: &mut [char]) -> Vec<(usize, usize)> {
     let attr: Vec<char> = "#[cfg(test)]".chars().collect();
     let mut starts = Vec::new();
     let mut from = 0;
@@ -247,6 +332,7 @@ pub fn blank_cfg_test(code: &mut [char]) {
         starts.push(i);
         from = i + attr.len();
     }
+    let mut regions = Vec::new();
     for start in starts {
         let mut j = start + attr.len();
         while j < code.len() && code[j] != '{' && code[j] != ';' {
@@ -255,31 +341,68 @@ pub fn blank_cfg_test(code: &mut [char]) {
         let end = if j < code.len() && code[j] == '{' { match_brace(code, j) } else { j + 1 };
         let upper = end.min(code.len());
         blank(code, start, upper);
+        regions.push((start, upper));
     }
+    regions
 }
 
-/// A scoped waiver: which rules it silences, over which 1-based lines.
+/// A scoped or file-wide waiver: which rules it silences, over which
+/// 1-based lines, plus per-rule usage tracking for `stale-waiver`.
 #[derive(Debug, Clone)]
 pub struct Waiver {
-    rules: BTreeSet<String>,
+    /// Waived rules, sorted and deduped.
+    rules: Vec<String>,
     line_start: usize,
     line_end: usize,
+    /// The waiver comment's own line and char span (where staleness is
+    /// reported).
+    line: usize,
+    span: (usize, usize),
+    file_wide: bool,
+    /// Parallel to `rules`: did this waiver silence at least one
+    /// violation of that rule?
+    used: Vec<bool>,
 }
 
-/// Parsed waivers for one file.
+/// A `lock-order` declaration: the canonical acquisition order for the
+/// lock-hygiene rule.
+#[derive(Debug, Clone)]
+pub struct LockOrder {
+    /// Declared lock names, in acquisition order.
+    pub names: Vec<String>,
+    /// Comment line and span (where duplicates are reported).
+    pub line: usize,
+    pub span: (usize, usize),
+}
+
+/// Parsed waivers and declarations for one file.
 #[derive(Debug, Default)]
 pub struct Waivers {
     scoped: Vec<Waiver>,
-    file_wide: BTreeSet<String>,
-    /// Malformed waivers: `(line, message)`.
-    bad: Vec<(usize, String)>,
+    file_wide: Vec<Waiver>,
+    /// `lock-order` declarations, in source order.
+    pub lock_orders: Vec<LockOrder>,
+    /// Malformed waivers: `(line, span, message)`.
+    bad: Vec<(usize, (usize, usize), String)>,
 }
 
-fn parse_one_waiver(text: &str) -> Option<(bool, String, String)> {
-    // `fica-lint:` then ws, `allow` or `allow-file`, `(` rules `)`, rest.
+enum Directive {
+    Allow { file_wide: bool, rules_raw: String, just: String },
+    DeclLockOrder { names_raw: String },
+}
+
+fn parse_directive(text: &str) -> Option<Directive> {
+    // `fica-lint:` then ws, then an `allow` / `allow-file` waiver with
+    // its parenthesized rule list and dash-separated justification, or
+    // a `lock-order` declaration with its parenthesized lock list.
     let at = text.find("fica-lint:")?;
     let rest = &text[at + "fica-lint:".len()..];
     let rest = rest.trim_start();
+    if let Some(rest) = rest.strip_prefix("lock-order") {
+        let rest = rest.strip_prefix('(')?;
+        let close = rest.find(')')?;
+        return Some(Directive::DeclLockOrder { names_raw: rest[..close].to_string() });
+    }
     let rest = rest.strip_prefix("allow")?;
     let (file_wide, rest) = match rest.strip_prefix("-file") {
         Some(r) => (true, r),
@@ -295,76 +418,123 @@ fn parse_one_waiver(text: &str) -> Option<(bool, String, String)> {
             break;
         }
     }
-    Some((file_wide, rules_raw, just))
+    Some(Directive::Allow { file_wide, rules_raw, just })
 }
 
-/// Extract waivers from the comment list. `code` is the stripped source
-/// (used for line numbers and statement-scope resolution).
-pub fn parse_waivers(code: &[char], comments: &[(usize, String)]) -> Waivers {
+/// Extract waivers and `lock-order` declarations from the comment list.
+/// `code` is the stripped source (used for line numbers and
+/// statement-scope resolution).
+pub fn scan_waivers(code: &[char], comments: &[(usize, String)]) -> Waivers {
     let mut w = Waivers::default();
     for (off, text) in comments {
-        let Some((file_wide, rules_raw, just)) = parse_one_waiver(text) else {
-            continue;
-        };
         let lineno = line_of(code, *off);
-        let rules: BTreeSet<String> = rules_raw
-            .split(',')
-            .map(|r| r.trim().to_string())
-            .filter(|r| !r.is_empty())
-            .collect();
-        if rules.is_empty() || !rules.iter().all(|r| RULES.contains(&r.as_str())) {
-            w.bad.push((lineno, format!("waiver names unknown rule(s): {}", rules_raw.trim())));
-            continue;
-        }
-        if just.is_empty() {
-            w.bad.push((lineno, "waiver without justification".to_string()));
-            continue;
-        }
-        if file_wide {
-            w.file_wide.extend(rules);
-            continue;
-        }
-        let (ls, le) = line_bounds(code, lineno);
-        let trailing = code[ls..(*off).min(code.len())].iter().any(|c| !c.is_whitespace());
-        if trailing {
-            // Trailing waiver: covers its own line.
-            w.scoped.push(Waiver { rules, line_start: lineno, line_end: lineno });
-            continue;
-        }
-        // Standalone: covers the next statement-or-item. Scan from the
-        // first code char after the waiver line; the scope ends at a `;`
-        // at depth <= 0, or at the `}` that brings depth to <= 0 — the
-        // `<= 0` (not `== 0`) matters when the waived code is a match
-        // arm or tail expression, where the first `}` seen closes the
-        // *enclosing* block.
-        let mut j = le + 1;
-        while j < code.len() && code[j].is_whitespace() {
-            j += 1;
-        }
-        let mut depth = 0i64;
-        let mut end = code.len();
-        let mut k = j;
-        while k < code.len() {
-            let ch = code[k];
-            if ch == '{' {
-                depth += 1;
-            } else if ch == '}' {
-                depth -= 1;
-                if depth <= 0 {
-                    end = k + 1;
-                    break;
+        let span = (*off, *off + text.chars().count());
+        match parse_directive(text) {
+            None => continue,
+            Some(Directive::DeclLockOrder { names_raw }) => {
+                let names: Vec<String> = names_raw
+                    .split(',')
+                    .map(|r| r.trim().to_string())
+                    .filter(|r| !r.is_empty())
+                    .collect();
+                if names.is_empty() {
+                    w.bad.push((lineno, span, "lock-order declaration names no locks".to_string()));
+                } else {
+                    w.lock_orders.push(LockOrder { names, line: lineno, span });
                 }
-            } else if ch == ';' && depth <= 0 {
-                end = k + 1;
-                break;
             }
-            k += 1;
+            Some(Directive::Allow { file_wide, rules_raw, just }) => {
+                let mut rules: Vec<String> = rules_raw
+                    .split(',')
+                    .map(|r| r.trim().to_string())
+                    .filter(|r| !r.is_empty())
+                    .collect();
+                rules.sort();
+                rules.dedup();
+                if rules.is_empty() || !rules.iter().all(|r| WAIVABLE.contains(&r.as_str())) {
+                    w.bad.push((
+                        lineno,
+                        span,
+                        format!(
+                            "waiver names unknown or unwaivable rule(s): {}",
+                            rules_raw.trim()
+                        ),
+                    ));
+                    continue;
+                }
+                if just.is_empty() {
+                    w.bad.push((lineno, span, "waiver without justification".to_string()));
+                    continue;
+                }
+                let used = vec![false; rules.len()];
+                if file_wide {
+                    w.file_wide.push(Waiver {
+                        rules,
+                        line_start: 0,
+                        line_end: usize::MAX,
+                        line: lineno,
+                        span,
+                        file_wide: true,
+                        used,
+                    });
+                    continue;
+                }
+                let (ls, le) = line_bounds(code, lineno);
+                let trailing =
+                    code[ls..(*off).min(code.len())].iter().any(|c| !c.is_whitespace());
+                if trailing {
+                    // Trailing waiver: covers its own line.
+                    w.scoped.push(Waiver {
+                        rules,
+                        line_start: lineno,
+                        line_end: lineno,
+                        line: lineno,
+                        span,
+                        file_wide: false,
+                        used,
+                    });
+                    continue;
+                }
+                // Standalone: covers the next statement-or-item. Scan from
+                // the first code char after the waiver line; the scope ends
+                // at a `;` at depth <= 0, or at the `}` that brings depth to
+                // <= 0 — the `<= 0` (not `== 0`) matters when the waived
+                // code is a match arm or tail expression, where the first
+                // `}` seen closes the *enclosing* block.
+                let mut j = le + 1;
+                while j < code.len() && code[j].is_whitespace() {
+                    j += 1;
+                }
+                let mut depth = 0i64;
+                let mut end = code.len();
+                let mut k = j;
+                while k < code.len() {
+                    let ch = code[k];
+                    if ch == '{' {
+                        depth += 1;
+                    } else if ch == '}' {
+                        depth -= 1;
+                        if depth <= 0 {
+                            end = k + 1;
+                            break;
+                        }
+                    } else if ch == ';' && depth <= 0 {
+                        end = k + 1;
+                        break;
+                    }
+                    k += 1;
+                }
+                w.scoped.push(Waiver {
+                    rules,
+                    line_start: line_of(code, j),
+                    line_end: line_of(code, end.min(code.len().saturating_sub(1))),
+                    line: lineno,
+                    span,
+                    file_wide: false,
+                    used,
+                });
+            }
         }
-        w.scoped.push(Waiver {
-            rules,
-            line_start: line_of(code, j),
-            line_end: line_of(code, end.min(code.len().saturating_sub(1))),
-        });
     }
     w
 }
@@ -428,7 +598,7 @@ fn is_int_literal(s: &str) -> bool {
 }
 
 /// Maximal ASCII identifier starting at `i` (empty if none).
-fn ident_at(code: &[char], i: usize) -> (usize, String) {
+pub(crate) fn ident_at(code: &[char], i: usize) -> (usize, String) {
     let mut j = i;
     while j < code.len() && is_ascii_ident(code[j]) {
         j += 1;
@@ -436,7 +606,7 @@ fn ident_at(code: &[char], i: usize) -> (usize, String) {
     (j, code[i..j].iter().collect())
 }
 
-fn skip_ws(code: &[char], mut i: usize) -> usize {
+pub(crate) fn skip_ws(code: &[char], mut i: usize) -> usize {
     while i < code.len() && code[i].is_whitespace() {
         i += 1;
     }
@@ -448,8 +618,22 @@ struct RuleSink {
 }
 
 impl RuleSink {
-    fn report(&mut self, code: &[char], off: usize, rule: &'static str, msg: String) {
-        self.viol.push(Violation { line: line_of(code, off), rule, msg });
+    fn report(
+        &mut self,
+        code: &[char],
+        start: usize,
+        end: usize,
+        rule: &'static str,
+        msg: String,
+    ) {
+        self.viol.push(Violation {
+            path: String::new(),
+            line: line_of(code, start),
+            span: (start, end),
+            rule,
+            msg,
+            waived: false,
+        });
     }
 }
 
@@ -464,6 +648,7 @@ fn rule_no_panic(code: &[char], sink: &mut RuleSink) {
                 sink.report(
                     code,
                     i,
+                    k,
                     "no-panic",
                     format!("`.{name}()` in library code — use a typed `IcaError` path"),
                 );
@@ -477,6 +662,7 @@ fn rule_no_panic(code: &[char], sink: &mut RuleSink) {
                     sink.report(
                         code,
                         i,
+                        j + 1,
                         "no-panic",
                         format!("`{name}!` in library code — use `debug_assert!` or a typed error"),
                     );
@@ -497,12 +683,12 @@ fn rule_float_accum(code: &[char], ranges: &[(String, usize, usize)], sink: &mut
             let (_, le) = line_bounds(code, line_of(code, i));
             let rhs: String = code[(i + 2).min(le)..le].iter().collect();
             let rhs = rhs.trim().trim_end_matches(';').trim();
-            let sanctioned =
-                enclosing_fn(ranges, i).is_some_and(|f| SANCTIONED_FNS.contains(&f));
+            let sanctioned = enclosing_fn(ranges, i).is_some_and(|f| SANCTIONED_FNS.contains(&f));
             if !is_int_literal(rhs) && !sanctioned {
                 sink.report(
                     code,
                     i,
+                    i + 2,
                     "float-accum",
                     "raw `+=` accumulation outside sanctioned reduction helpers".to_string(),
                 );
@@ -512,9 +698,9 @@ fn rule_float_accum(code: &[char], ranges: &[(String, usize, usize)], sink: &mut
         }
         if code[i] == '.' {
             let j = skip_ws(code, i + 1);
-            let (mut k, name) = ident_at(code, j);
+            let (name_end, name) = ident_at(code, j);
             if name == "sum" {
-                k = skip_ws(code, k);
+                let mut k = skip_ws(code, name_end);
                 // Optional turbofish `::<T>`.
                 if code.get(k) == Some(&':') && code.get(k + 1) == Some(&':') {
                     let t = skip_ws(code, k + 2);
@@ -531,6 +717,7 @@ fn rule_float_accum(code: &[char], ranges: &[(String, usize, usize)], sink: &mut
                         sink.report(
                             code,
                             i,
+                            name_end,
                             "float-accum",
                             "`.sum()` reduction outside sanctioned helpers — order must be pinned"
                                 .to_string(),
@@ -552,6 +739,7 @@ fn rule_nondeterminism(code: &[char], sink: &mut RuleSink) {
                 "HashMap" => sink.report(
                     code,
                     i,
+                    j,
                     "nondeterminism",
                     "`HashMap` on a solver path — use `BTreeMap` or waive (lookup-only)"
                         .to_string(),
@@ -559,6 +747,7 @@ fn rule_nondeterminism(code: &[char], sink: &mut RuleSink) {
                 "SystemTime" | "Instant" => sink.report(
                     code,
                     i,
+                    j,
                     "nondeterminism",
                     format!("`{name}` outside bench/ or obs/ — wall-clock on a solver path"),
                 ),
@@ -585,10 +774,11 @@ fn rule_fail_closed(code: &[char], sink: &mut RuleSink) {
                 && code.get(j + 2).is_some_and(|c| c.is_whitespace())
             {
                 let k = skip_ws(code, j + 2);
-                let (mut e, name) = ident_at(code, k);
+                let (name_end, name) = ident_at(code, k);
                 if !name.is_empty() {
                     let lower = name.to_lowercase();
                     if DECODER_NAMES.iter().any(|d| lower.contains(d)) {
+                        let mut e = name_end;
                         while e < n && code[e] != '{' && code[e] != ';' {
                             e += 1;
                         }
@@ -597,6 +787,7 @@ fn rule_fail_closed(code: &[char], sink: &mut RuleSink) {
                             sink.report(
                                 code,
                                 i,
+                                name_end,
                                 "fail-closed",
                                 format!("decoder `pub fn {name}` must return `Result`"),
                             );
@@ -609,42 +800,524 @@ fn rule_fail_closed(code: &[char], sink: &mut RuleSink) {
     }
 }
 
-/// Lint one file. `rel` is the path relative to the lint root, with `/`
-/// separators (rule applicability is path-scoped).
-pub fn lint_file(rel: &str, src: &str) -> Vec<Violation> {
-    let (code0, comments) = strip_source(src);
-    let waivers = parse_waivers(&code0, &comments);
-    let mut code = code0;
+/// One side of a `*`/`+`: its decisive identifier (last path segment),
+/// plus float-literal / lifetime-or-type context flags.
+#[derive(Debug, Default)]
+struct Operand {
+    name: String,
+    is_float: bool,
+    skip_op: bool,
+}
+
+fn marker_name(name: &str) -> bool {
+    !name.is_empty()
+        && SIZE_MARKERS.iter().any(|m| {
+            name == *m
+                || (name.len() > m.len() + 1
+                    && (name.ends_with(m) && name.as_bytes()[name.len() - m.len() - 1] == b'_'
+                        || name.starts_with(m) && name.as_bytes()[m.len()] == b'_'))
+        })
+}
+
+fn float_ident(name: &str) -> bool {
+    name == "f32" || name == "f64" || name.ends_with("f32") || name.ends_with("f64")
+}
+
+fn left_operand(code: &[char], op: usize) -> Operand {
+    let mut o = Operand::default();
+    let mut p = op;
+    while p > 0 && code[p - 1].is_whitespace() {
+        p -= 1;
+    }
+    if p == 0 {
+        o.skip_op = true;
+        return o;
+    }
+    let last = code[p - 1];
+    if last == ')' || last == ']' {
+        let open = if last == ')' { '(' } else { '[' };
+        let mut depth = 1i64;
+        let mut q = p - 1;
+        while q > 0 {
+            q -= 1;
+            if code[q] == last {
+                depth += 1;
+            } else if code[q] == open {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+        }
+        if q > 0 && is_ascii_ident(code[q - 1]) {
+            let mut s = q - 1;
+            while s > 0 && is_ascii_ident(code[s - 1]) {
+                s -= 1;
+            }
+            o.name = code[s..q].iter().collect();
+        }
+    } else if is_ascii_ident(last) {
+        let mut s = p - 1;
+        while s > 0 && is_ascii_ident(code[s - 1]) {
+            s -= 1;
+        }
+        let name: String = code[s..p].iter().collect();
+        if s > 0 && code[s - 1] == '\'' {
+            // Lifetime in a bound position — type context, not arithmetic.
+            o.skip_op = true;
+            return o;
+        }
+        if name.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+            // Numeric literal; float when it carries a fractional part
+            // or an f32/f64 suffix.
+            if float_ident(&name) || (s > 1 && code[s - 1] == '.' && code[s - 2].is_ascii_digit())
+            {
+                o.is_float = true;
+            }
+            return o; // literal: never a size marker
+        }
+        if float_ident(&name) {
+            // `as f64 *` — cast to float, float arithmetic.
+            o.is_float = true;
+            return o;
+        }
+        o.name = name;
+    }
+    o
+}
+
+fn right_operand(code: &[char], after_op: usize) -> Operand {
+    let mut o = Operand::default();
+    let n = code.len();
+    let q = skip_ws(code, after_op);
+    if q >= n || !is_ascii_ident(code[q]) {
+        return o;
+    }
+    let (mut r, mut name) = ident_at(code, q);
+    if name.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+        if float_ident(&name) || (r + 1 < n && code[r] == '.' && code[r + 1].is_ascii_digit()) {
+            o.is_float = true;
+        }
+        return o; // literal
+    }
+    if float_ident(&name) {
+        o.is_float = true;
+        return o;
+    }
+    // Chase the path to its decisive last segment: `self.n`, `chunk.cols()`.
+    loop {
+        let t = skip_ws(code, r);
+        if t < n && code[t] == '.' {
+            let u = skip_ws(code, t + 1);
+            if u < n && is_ascii_ident(code[u]) {
+                let (r2, seg) = ident_at(code, u);
+                if seg.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+                    break; // tuple index or digit segment — stop
+                }
+                name = seg;
+                r = r2;
+                continue;
+            }
+        }
+        break;
+    }
+    o.name = name;
+    o
+}
+
+fn rule_unchecked_arith(code: &[char], sink: &mut RuleSink) {
+    let n = code.len();
+    for i in 0..n {
+        let opch = code[i];
+        if opch != '*' && opch != '+' {
+            continue;
+        }
+        if i + 1 < n && code[i + 1] == '=' {
+            continue; // compound assignment: float-accum's turf
+        }
+        // Binary position: the previous non-ws char ends an expression.
+        let mut p = i;
+        while p > 0 && code[p - 1].is_whitespace() {
+            p -= 1;
+        }
+        if p == 0 {
+            continue;
+        }
+        let prev = code[p - 1];
+        if !(is_ascii_ident(prev) || prev == ')' || prev == ']') {
+            continue; // unary deref/plus, reference, range, cast, …
+        }
+        let l = left_operand(code, i);
+        let r = right_operand(code, i + 1);
+        if l.skip_op || l.is_float || r.is_float {
+            continue;
+        }
+        let type_ctx = |s: &str| s.chars().next().is_some_and(|c| c.is_ascii_uppercase());
+        if type_ctx(&l.name) || type_ctx(&r.name) {
+            continue; // trait bound / type sum, not value arithmetic
+        }
+        let lm = marker_name(&l.name);
+        let rm = marker_name(&r.name);
+        let fires = if opch == '*' { lm || rm } else { lm && rm };
+        if fires {
+            let opword = if opch == '*' { "mul" } else { "add" };
+            let show = |s: &str| if s.is_empty() { "?".to_string() } else { s.to_string() };
+            sink.report(
+                code,
+                i,
+                i + 1,
+                "unchecked-arith",
+                format!(
+                    "unchecked `{opch}` on size arithmetic ({} {opch} {}) — use checked_{opword}/saturating_{opword} or a waiver",
+                    show(&l.name),
+                    show(&r.name)
+                ),
+            );
+        }
+    }
+}
+
+/// A `.lock()` / `.try_lock()` acquisition site.
+struct LockSite {
+    /// Char offset of the `.` before `lock`.
+    dot: usize,
+    /// End of the `lock` ident.
+    name_end: usize,
+    /// The mutex's decisive name (`self.rx.lock()` → `rx`).
+    lock_name: String,
+    /// Guard liveness extent `[dot, end)`.
+    end: usize,
+}
+
+fn lock_sites(code: &[char]) -> Vec<LockSite> {
+    let n = code.len();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < n {
+        if code[i] != '.' {
+            i += 1;
+            continue;
+        }
+        let j = skip_ws(code, i + 1);
+        let (k, name) = ident_at(code, j);
+        if (name != "lock" && name != "try_lock") || code.get(skip_ws(code, k)) != Some(&'(') {
+            i += 1;
+            continue;
+        }
+        // Mutex name: the ident (or call result) just before the dot.
+        let mut p = i;
+        while p > 0 && code[p - 1].is_whitespace() {
+            p -= 1;
+        }
+        let mut lock_name = String::new();
+        if p > 0 {
+            let last = code[p - 1];
+            if last == ')' || last == ']' {
+                let open = if last == ')' { '(' } else { '[' };
+                let mut depth = 1i64;
+                let mut q = p - 1;
+                while q > 0 {
+                    q -= 1;
+                    if code[q] == last {
+                        depth += 1;
+                    } else if code[q] == open {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                }
+                if q > 0 && is_ascii_ident(code[q - 1]) {
+                    let mut s = q - 1;
+                    while s > 0 && is_ascii_ident(code[s - 1]) {
+                        s -= 1;
+                    }
+                    lock_name = code[s..q].iter().collect();
+                }
+            } else if is_ascii_ident(last) {
+                let mut s = p - 1;
+                while s > 0 && is_ascii_ident(code[s - 1]) {
+                    s -= 1;
+                }
+                lock_name = code[s..p].iter().collect();
+            }
+        }
+        // Binding: `let NAME = ….lock()…` extends the guard to the end
+        // of the enclosing block (or an explicit `drop(NAME)`); an
+        // inline temporary lives to the end of its statement.
+        let mut stmt_start = 0;
+        let mut q = i;
+        while q > 0 {
+            q -= 1;
+            if code[q] == ';' || code[q] == '{' || code[q] == '}' {
+                stmt_start = q + 1;
+                break;
+            }
+        }
+        let s0 = skip_ws(code, stmt_start);
+        let (after_let, kw) = ident_at(code, s0);
+        let binding = if kw == "let" {
+            let b0 = skip_ws(code, after_let);
+            let (b1, mut b) = ident_at(code, b0);
+            if b == "mut" {
+                let b2 = skip_ws(code, b1);
+                b = ident_at(code, b2).1;
+            }
+            Some(b)
+        } else {
+            None
+        };
+        let mut end = n;
+        let mut depth = 0i64;
+        let mut m = k;
+        while m < n {
+            let ch = code[m];
+            if ch == '{' {
+                depth += 1;
+            } else if ch == '}' {
+                if depth == 0 {
+                    end = m;
+                    break;
+                }
+                depth -= 1;
+            } else if ch == ';' && depth == 0 && binding.is_none() {
+                end = m;
+                break;
+            } else if let Some(b) = &binding {
+                if is_ascii_ident(ch)
+                    && (m == 0 || !is_ascii_ident(code[m - 1]))
+                    && depth >= 0
+                {
+                    let (m2, word) = ident_at(code, m);
+                    if word == "drop" {
+                        let a = skip_ws(code, m2);
+                        if code.get(a) == Some(&'(') {
+                            let (_, arg) = ident_at(code, skip_ws(code, a + 1));
+                            if &arg == b {
+                                end = m;
+                                break;
+                            }
+                        }
+                    }
+                    m = m2;
+                    continue;
+                }
+            }
+            m += 1;
+        }
+        out.push(LockSite { dot: i, name_end: k, lock_name, end });
+        i = k;
+    }
+    out
+}
+
+fn rule_lock_hygiene(code: &[char], orders: &[LockOrder], sink: &mut RuleSink) {
+    let sites = lock_sites(code);
+    if sites.is_empty() {
+        for extra in orders.iter().skip(1) {
+            sink.report(
+                code,
+                extra.span.0,
+                extra.span.1,
+                "lock-hygiene",
+                "duplicate lock-order declaration".to_string(),
+            );
+        }
+        return;
+    }
+    if orders.is_empty() {
+        let first = &sites[0];
+        sink.report(
+            code,
+            first.dot,
+            first.name_end,
+            "lock-hygiene",
+            "file acquires locks but declares no canonical order — add a lock-order header comment"
+                .to_string(),
+        );
+        return;
+    }
+    for extra in orders.iter().skip(1) {
+        sink.report(
+            code,
+            extra.span.0,
+            extra.span.1,
+            "lock-hygiene",
+            "duplicate lock-order declaration".to_string(),
+        );
+    }
+    let order = &orders[0].names;
+    let idx_of = |name: &str| order.iter().position(|n| n == name);
+    for site in &sites {
+        if idx_of(&site.lock_name).is_none() {
+            sink.report(
+                code,
+                site.dot,
+                site.name_end,
+                "lock-hygiene",
+                format!("lock `{}` is not in the declared lock-order", site.lock_name),
+            );
+        }
+    }
+    for outer in &sites {
+        // Channel traffic while the guard is live.
+        let mut j = outer.name_end;
+        while j < outer.end.min(code.len()) {
+            if code[j] != '.' {
+                j += 1;
+                continue;
+            }
+            let a = skip_ws(code, j + 1);
+            let (b, m) = ident_at(code, a);
+            if CHANNEL_METHODS.contains(&m.as_str()) && code.get(skip_ws(code, b)) == Some(&'(') {
+                sink.report(
+                    code,
+                    j,
+                    b,
+                    "lock-hygiene",
+                    format!(
+                        "channel `.{m}()` while holding lock `{}` — drop the guard first",
+                        outer.lock_name
+                    ),
+                );
+            }
+            j = b.max(j + 1);
+        }
+        // Nested acquisition against the declared order.
+        for inner in &sites {
+            if inner.dot <= outer.dot || inner.dot >= outer.end {
+                continue;
+            }
+            if let (Some(oi), Some(ii)) = (idx_of(&outer.lock_name), idx_of(&inner.lock_name)) {
+                if ii <= oi {
+                    sink.report(
+                        code,
+                        inner.dot,
+                        inner.name_end,
+                        "lock-hygiene",
+                        format!(
+                            "lock `{}` acquired while holding `{}` violates the declared lock-order",
+                            inner.lock_name, outer.lock_name
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+fn apply_waivers(viol: &mut [Violation], waivers: &mut Waivers) {
+    for v in viol.iter_mut() {
+        let mut hit = false;
+        for w in waivers.scoped.iter_mut() {
+            if w.line_start <= v.line && v.line <= w.line_end {
+                if let Some(ix) = w.rules.iter().position(|r| r == v.rule) {
+                    v.waived = true;
+                    w.used[ix] = true;
+                    hit = true;
+                    break;
+                }
+            }
+        }
+        if hit {
+            continue;
+        }
+        for w in waivers.file_wide.iter_mut() {
+            if let Some(ix) = w.rules.iter().position(|r| r == v.rule) {
+                v.waived = true;
+                w.used[ix] = true;
+                break;
+            }
+        }
+    }
+}
+
+fn stale_violations(waivers: &Waivers, out: &mut Vec<Violation>) {
+    for w in waivers.scoped.iter().chain(waivers.file_wide.iter()) {
+        for (ix, rule) in w.rules.iter().enumerate() {
+            if w.used[ix] {
+                continue;
+            }
+            let what = if w.file_wide {
+                format!("stale waiver: allow-file({rule}) no longer suppresses anything in this file — delete it")
+            } else {
+                format!(
+                    "stale waiver: allow({rule}) no longer suppresses anything at its site — delete it"
+                )
+            };
+            out.push(Violation {
+                path: String::new(),
+                line: w.line,
+                span: w.span,
+                rule: "stale-waiver",
+                msg: what,
+                waived: false,
+            });
+        }
+    }
+}
+
+fn lint_impl(rel: &str, src: &str, self_mode: bool) -> Vec<Violation> {
+    let stripped = strip_source(src);
+    let mut waivers = scan_waivers(&stripped.code, &stripped.comments);
+    let mut code = stripped.code;
     blank_cfg_test(&mut code);
     let ranges = fn_ranges(&code);
     let mut sink = RuleSink { viol: Vec::new() };
 
     rule_no_panic(&code, &mut sink);
-    if rel.starts_with("backend/") || rel.starts_with("linalg/") || rel == "data/stats.rs" {
-        rule_float_accum(&code, &ranges, &mut sink);
-    }
-    if !(rel.starts_with("bench/") || rel.starts_with("obs/")) {
-        rule_nondeterminism(&code, &mut sink);
-    }
-    if rel.starts_with("data/") || rel == "util/json.rs" {
+    if self_mode {
         rule_fail_closed(&code, &mut sink);
+    } else {
+        if rel.starts_with("backend/") || rel.starts_with("linalg/") || rel == "data/stats.rs" {
+            rule_float_accum(&code, &ranges, &mut sink);
+        }
+        if !(rel.starts_with("bench/") || rel.starts_with("obs/")) {
+            rule_nondeterminism(&code, &mut sink);
+        }
+        if rel.starts_with("data/") || rel == "util/json.rs" {
+            rule_fail_closed(&code, &mut sink);
+        }
+        if (rel.starts_with("data/") && rel != "data/stats.rs") || rel == "util/json.rs" {
+            rule_unchecked_arith(&code, &mut sink);
+        }
+        if rel == "backend/pool.rs" || rel.starts_with("coordinator/") || rel.starts_with("daemon/")
+        {
+            rule_lock_hygiene(&code, &waivers.lock_orders, &mut sink);
+        }
     }
 
-    let mut kept: Vec<Violation> = sink
-        .viol
-        .into_iter()
-        .filter(|v| !waivers.file_wide.contains(v.rule))
-        .filter(|v| {
-            !waivers.scoped.iter().any(|w| {
-                w.rules.contains(v.rule) && w.line_start <= v.line && v.line <= w.line_end
-            })
-        })
-        .collect();
-    for (line, msg) in waivers.bad {
-        kept.push(Violation { line, rule: "bad-waiver", msg });
+    let mut viol = sink.viol;
+    apply_waivers(&mut viol, &mut waivers);
+    for (line, span, msg) in waivers.bad.drain(..) {
+        viol.push(Violation { path: String::new(), line, span, rule: "bad-waiver", msg, waived: false });
     }
-    kept.sort();
-    kept
+    stale_violations(&waivers, &mut viol);
+    for v in viol.iter_mut() {
+        v.path = rel.to_string();
+    }
+    viol.sort();
+    viol
+}
+
+/// Lint one workspace source file under every rule its path is scoped
+/// to, returning **all** violations — waived ones carry `waived: true`.
+/// `rel` is the path relative to `rust/src`, with `/` separators.
+pub fn lint_file_full(rel: &str, src: &str) -> Vec<Violation> {
+    lint_impl(rel, src, false)
+}
+
+/// [`lint_file_full`] filtered to unwaived violations — the gate the
+/// CLI exit code and the fixture tests are built on.
+pub fn lint_file(rel: &str, src: &str) -> Vec<Violation> {
+    lint_file_full(rel, src).into_iter().filter(|v| !v.waived).collect()
+}
+
+/// Self-lint for the lint tool's own sources: `no-panic` and
+/// `fail-closed` (whole-file scope) plus the waiver machinery — the
+/// analyzer is held to its own fail-closed bar.
+pub fn lint_self_file(rel: &str, src: &str) -> Vec<Violation> {
+    lint_impl(rel, src, true)
 }
 
 #[cfg(test)]
@@ -654,21 +1327,25 @@ mod tests {
     #[test]
     fn strings_and_comments_are_blanked() {
         let src = "let s = \"panic!(\"; // .unwrap()\nlet c = '\\'';";
-        let (code, comments) = strip_source(src);
-        let text: String = code.iter().collect();
+        let st = strip_source(src);
+        let text: String = st.code.iter().collect();
         assert!(!text.contains("panic"));
         assert!(!text.contains("unwrap"));
-        assert_eq!(comments.len(), 1);
+        assert_eq!(st.comments.len(), 1);
+        assert_eq!(st.strings.len(), 1);
+        assert_eq!(st.strings[0].1, "panic!(");
         assert_eq!(text.matches('\n').count(), src.matches('\n').count());
     }
 
     #[test]
     fn raw_strings_preserve_length() {
         let src = "let s = r#\"has .unwrap() inside\"#; x.unwrap();";
-        let (code, _) = strip_source(src);
-        assert_eq!(code.len(), src.chars().count());
-        let text: String = code.iter().collect();
+        let st = strip_source(src);
+        assert_eq!(st.code.len(), src.chars().count());
+        let text: String = st.code.iter().collect();
         assert_eq!(text.matches("unwrap").count(), 1);
+        assert_eq!(st.strings.len(), 1);
+        assert!(st.strings[0].1.contains(".unwrap() inside"));
     }
 
     #[test]
@@ -687,11 +1364,104 @@ mod tests {
         let v = lint_file("x.rs", src);
         assert_eq!(v.len(), 1, "{v:?}");
         assert_eq!(v[0].rule, "no-panic");
+        assert!(v[0].span.0 < v[0].span.1);
     }
 
     #[test]
     fn assert_eq_is_not_bare_assert() {
         let v = lint_file("x.rs", "fn f() { assert_eq!(1, 1); debug_assert!(true); }");
         assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn unchecked_arith_needs_size_markers() {
+        // `*` with one size-typed side fires; `+` needs both sides.
+        let fire = "fn f(n: usize) -> usize { n * 8 }";
+        let v = lint_file("data/x.rs", fire);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "unchecked-arith");
+
+        let both = "fn f(off: usize, len: usize) -> usize { off + len }";
+        let v = lint_file("data/x.rs", both);
+        assert_eq!(v.len(), 1, "{v:?}");
+
+        let counter = "fn f(t: usize, j: usize) -> usize { t + j }";
+        assert!(lint_file("data/x.rs", counter).is_empty());
+
+        let float = "fn f(n: usize) -> f64 { n as f64 * 2.0 }";
+        assert!(lint_file("data/x.rs", float).is_empty());
+
+        let checked = "fn f(n: usize) -> Option<usize> { n.checked_mul(8) }";
+        assert!(lint_file("data/x.rs", checked).is_empty());
+
+        // Out of scope: not a decoder path.
+        assert!(lint_file("ica/x.rs", fire).is_empty());
+        assert!(lint_file("data/stats.rs", fire).is_empty());
+    }
+
+    #[test]
+    fn lock_hygiene_channel_under_guard() {
+        let src = "// fica-lint: lock-order(rx)\nfn f(rx: &M) { let g = rx.lock(); g.recv(); }\n";
+        let v = lint_file("coordinator/x.rs", src);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "lock-hygiene");
+        assert!(v[0].msg.contains("recv"), "{}", v[0].msg);
+    }
+
+    #[test]
+    fn lock_hygiene_requires_declaration() {
+        let src = "fn f(rx: &M) { let g = rx.lock(); }\n";
+        let v = lint_file("coordinator/x.rs", src);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].msg.contains("no canonical order"), "{}", v[0].msg);
+    }
+
+    #[test]
+    fn stale_waiver_fires_when_nothing_is_suppressed() {
+        let src = "// fica-lint: allow(no-panic) — nothing here panics anymore\nfn f() -> u32 { 1 }\n";
+        let v = lint_file("ica/x.rs", src);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "stale-waiver");
+        assert_eq!(v[0].line, 1);
+    }
+
+    #[test]
+    fn live_waiver_is_not_stale_and_is_kept_in_full_output() {
+        let src = "fn f(v: Option<u32>) -> u32 { v.unwrap() } // fica-lint: allow(no-panic) — fixture\n";
+        assert!(lint_file("ica/x.rs", src).is_empty());
+        let full = lint_file_full("ica/x.rs", src);
+        assert_eq!(full.len(), 1, "{full:?}");
+        assert!(full[0].waived);
+        assert_eq!(full[0].rule, "no-panic");
+    }
+
+    #[test]
+    fn waiving_an_unwaivable_rule_is_bad() {
+        let src = "// fica-lint: allow(schema-drift) — can't silence drift\nfn f() {}\n";
+        let v = lint_file("ica/x.rs", src);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "bad-waiver");
+    }
+
+    #[test]
+    fn items_are_scanned_with_spans() {
+        let src = "pub struct P(usize);\nimpl P { pub fn get(&self) -> usize { self.0 } }\nconst N_SCHEMA: &str = \"x\";\n";
+        let st = strip_source(src);
+        let items = scan_items(&st.code, &[]);
+        let kinds: Vec<&str> = items.iter().map(|i| i.kind.as_str()).collect();
+        assert_eq!(kinds, vec!["struct", "impl", "fn", "const"], "{items:?}");
+        assert_eq!(items[0].name, "P");
+        assert_eq!(items[1].name, "P");
+        assert_eq!(items[2].name, "get");
+        assert_eq!(items[3].name, "N_SCHEMA");
+        assert!(items[1].start < items[2].start && items[2].end <= items[1].end);
+    }
+
+    #[test]
+    fn calls_are_scanned() {
+        let src = "fn f() { g(); h.i(); if x { j() } }";
+        let st = strip_source(src);
+        let names: Vec<String> = scan_calls(&st.code).into_iter().map(|(_, n)| n).collect();
+        assert_eq!(names, vec!["g", "i", "j"]);
     }
 }

@@ -1,12 +1,58 @@
-//! CLI driver: walk a source root (default `rust/src`, the workspace
-//! layout) and report every unwaived violation.
+//! CLI driver for the two-stage lint/audit pass.
 //!
-//! Exit status 0 when clean, 1 when violations were found, 2 on I/O
-//! problems. Output format is `path:line: [rule] message`, one per line
-//! — greppable and editor-clickable.
+//! ```text
+//! fica-lint [--root DIR] [--json] [--self]
+//! ```
+//!
+//! With no flags: discover the workspace root (nearest ancestor whose
+//! `Cargo.toml` declares `[workspace]` — so `cargo run -p fica-lint`
+//! behaves identically from any directory), load the whole workspace
+//! model and run all nine rules. `--root DIR` pins the root explicitly.
+//! `--json` emits the machine-readable `fica.lint/v1` report (every
+//! violation, waived ones flagged) instead of the text report (unwaived
+//! only, `path:line: [rule] message`). `--self` lints the lint tool's
+//! own sources under `no-panic` / `fail-closed` instead of auditing the
+//! workspace.
+//!
+//! Exit status: 0 clean (no unwaived violations), 1 violations found,
+//! 2 usage or I/O error.
 
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
+
+use fica_lint::audit::{audit, discover_root, render_json, render_text, Workspace};
+use fica_lint::Violation;
+
+struct Opts {
+    root: Option<PathBuf>,
+    json: bool,
+    self_mode: bool,
+}
+
+fn parse_args(args: &[String]) -> Result<Opts, String> {
+    let mut opts = Opts { root: None, json: false, self_mode: false };
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--json" => opts.json = true,
+            "--self" => opts.self_mode = true,
+            "--root" => {
+                i += 1;
+                let dir = args
+                    .get(i)
+                    .ok_or_else(|| "--root needs a directory argument".to_string())?;
+                opts.root = Some(PathBuf::from(dir));
+            }
+            other => {
+                return Err(format!(
+                    "unknown argument {other:?} (usage: fica-lint [--root DIR] [--json] [--self])"
+                ))
+            }
+        }
+        i += 1;
+    }
+    Ok(opts)
+}
 
 fn collect_rs_files(root: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
     let mut entries: Vec<_> = std::fs::read_dir(root)?.collect::<Result<Vec<_>, _>>()?;
@@ -22,23 +68,20 @@ fn collect_rs_files(root: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> 
     Ok(())
 }
 
-fn run() -> Result<bool, String> {
-    let root = std::env::args().nth(1).unwrap_or_else(|| "rust/src".to_string());
-    let root = PathBuf::from(root);
-    if !root.is_dir() {
-        return Err(format!(
-            "lint root {} is not a directory (run from the workspace root, or pass the source root as the first argument)",
-            root.display()
-        ));
+/// Self-lint: the analyzer's own sources under no-panic / fail-closed.
+fn self_report(root: &Path) -> Result<(Vec<Violation>, usize), String> {
+    let src_root = root.join("tools/fica-lint/src");
+    if !src_root.is_dir() {
+        return Err(format!("{} not found — not the workspace root?", src_root.display()));
     }
     let mut files = Vec::new();
-    collect_rs_files(&root, &mut files).map_err(|e| format!("walking {}: {e}", root.display()))?;
+    collect_rs_files(&src_root, &mut files)
+        .map_err(|e| format!("walking {}: {e}", src_root.display()))?;
     files.sort();
-
-    let mut total = 0usize;
+    let mut viol = Vec::new();
     for path in &files {
         let rel: String = path
-            .strip_prefix(&root)
+            .strip_prefix(&src_root)
             .unwrap_or(path)
             .components()
             .map(|c| c.as_os_str().to_string_lossy())
@@ -46,18 +89,40 @@ fn run() -> Result<bool, String> {
             .join("/");
         let src = std::fs::read_to_string(path)
             .map_err(|e| format!("reading {}: {e}", path.display()))?;
-        for v in fica_lint::lint_file(&rel, &src) {
-            println!("{rel}:{}: [{}] {}", v.line, v.rule, v.msg);
-            total += 1;
+        for mut v in fica_lint::lint_self_file(&rel, &src) {
+            v.path = format!("tools/fica-lint/src/{rel}");
+            viol.push(v);
         }
     }
-    if total > 0 {
-        println!("fica-lint: {total} violation(s)");
-        Ok(false)
+    viol.sort();
+    Ok((viol, files.len()))
+}
+
+fn run() -> Result<bool, String> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let opts = parse_args(&args)?;
+    let root = match &opts.root {
+        Some(dir) => dir.clone(),
+        None => {
+            let cwd = std::env::current_dir().map_err(|e| format!("getting cwd: {e}"))?;
+            discover_root(&cwd).ok_or_else(|| {
+                "no workspace root found (no ancestor Cargo.toml with [workspace]); pass --root"
+                    .to_string()
+            })?
+        }
+    };
+
+    let (viol, files) = if opts.self_mode {
+        self_report(&root)?
     } else {
-        println!("fica-lint: clean ({} files)", files.len());
-        Ok(true)
-    }
+        let ws = Workspace::load(&root)?;
+        let n = ws.files.len();
+        (audit(&ws), n)
+    };
+    let rendered =
+        if opts.json { render_json(&viol, files) } else { render_text(&viol, files) };
+    print!("{rendered}");
+    Ok(viol.iter().all(|v| v.waived))
 }
 
 fn main() -> ExitCode {

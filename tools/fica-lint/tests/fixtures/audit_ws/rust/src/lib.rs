@@ -1,0 +1,14 @@
+//! Demo crate for the fica-audit workspace fixtures.
+
+/// Tag written at the head of every demo payload.
+pub const DEMO_SCHEMA: &str = "fica.demo/v1";
+
+/// Encode a demo payload: the schema tag, then the values.
+pub fn encode_demo(values: &[u64]) -> String {
+    let mut out = String::from(DEMO_SCHEMA);
+    for v in values {
+        out.push(' ');
+        out.push_str(&v.to_string());
+    }
+    out
+}

@@ -1,0 +1,9 @@
+//! Pins the demo contract row.
+
+use fica_demo::encode_demo;
+
+#[test]
+fn demo_roundtrip() {
+    let s = encode_demo(&[1, 2, 3]);
+    assert_eq!(s, "fica.demo/v1 1 2 3");
+}

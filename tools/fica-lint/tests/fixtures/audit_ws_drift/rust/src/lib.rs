@@ -1,0 +1,18 @@
+//! Demo crate, drifted: the schema tag moved to v2 without a docs
+//! update, and `AUX_SCHEMA` carries no tag at all.
+
+/// Tag written at the head of every demo payload.
+pub const DEMO_SCHEMA: &str = "fica.demo/v2";
+
+/// Schema-named, but its initializer embeds no tag.
+pub const AUX_SCHEMA: u32 = 3;
+
+/// Encode a demo payload: the schema tag, then the values.
+pub fn encode_demo(values: &[u64]) -> String {
+    let mut out = String::from(DEMO_SCHEMA);
+    for v in values {
+        out.push(' ');
+        out.push_str(&v.to_string());
+    }
+    out
+}

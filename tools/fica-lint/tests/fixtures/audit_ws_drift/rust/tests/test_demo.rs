@@ -1,0 +1,7 @@
+//! The roundtrip test was deleted in a refactor; only an unrelated
+//! check remains, so the contract row's pin dangles.
+
+#[test]
+fn unrelated_check() {
+    assert_eq!(2 + 2, 4);
+}

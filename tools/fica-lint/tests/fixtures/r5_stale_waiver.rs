@@ -1,0 +1,16 @@
+//! Fixture: the `stale-waiver` rule fires exactly once — on the waiver
+//! whose underlying violation was refactored away. The live waiver
+//! (still suppressing a real `no-panic` hit) stays silent.
+
+/// Fine: this waiver still suppresses a live violation.
+pub fn live(v: Option<usize>) -> usize {
+    // fica-lint: allow(no-panic) — fixture: deliberately waived unwrap
+    v.unwrap()
+}
+
+/// The expect this waiver used to cover became a fallback; the waiver
+/// now suppresses nothing and must be deleted.
+pub fn fixed(v: Option<usize>) -> usize {
+    // fica-lint: allow(no-panic) — stale: the expect below became a checked fallback
+    v.unwrap_or(0)
+}

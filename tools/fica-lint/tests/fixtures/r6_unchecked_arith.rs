@@ -1,0 +1,22 @@
+//! Fixture: the `unchecked-arith` rule fires exactly once — on the
+//! size-marked multiply in `frame_bytes`. Checked arithmetic, float
+//! math, and mixed `+` with an unmarked operand are not flagged.
+
+/// Fine: checked multiply is the sanctioned form.
+pub fn checked(rows: usize, cols: usize) -> Option<usize> {
+    rows.checked_mul(cols)
+}
+
+/// Fine: float arithmetic is out of scope.
+pub fn scale(x: f64) -> f64 {
+    x * 8.0
+}
+
+/// Fine: `+` only fires when BOTH operands are size-marked.
+pub fn shift(off: usize) -> usize {
+    off + 1
+}
+
+pub fn frame_bytes(rows: usize, cols: usize) -> usize {
+    rows * cols
+}

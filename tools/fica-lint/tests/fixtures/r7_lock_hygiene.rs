@@ -1,0 +1,30 @@
+//! Fixture: the `lock-hygiene` rule fires exactly once — on the nested
+//! acquisition in `reversed` that contradicts the declared order. The
+//! well-ordered pair in `ordered` stays silent.
+
+// fica-lint: lock-order(stats, results)
+
+use std::sync::Mutex;
+
+/// Two locks with a declared acquisition order.
+pub struct Shared {
+    /// Acquired first.
+    pub stats: Mutex<u64>,
+    /// Acquired second.
+    pub results: Mutex<u64>,
+}
+
+/// Fine: acquired in the declared order.
+pub fn ordered(s: &Shared) -> u64 {
+    let g1 = s.stats.lock();
+    let g2 = s.results.lock();
+    let total = g1.map(|a| *a).unwrap_or(0) + g2.map(|b| *b).unwrap_or(0);
+    total
+}
+
+pub fn reversed(s: &Shared) -> u64 {
+    let early = s.results.lock();
+    let late = s.stats.lock();
+    let total = late.map(|a| *a).unwrap_or(0) + early.map(|b| *b).unwrap_or(0);
+    total
+}
