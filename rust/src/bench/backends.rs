@@ -1,5 +1,5 @@
 //! Backend benchmark behind `fica bench`, reported as
-//! `BENCH_backend.json` with two sections:
+//! `BENCH_backend.json` with four sections:
 //!
 //! - `results` — per-sweep wall-clock of the full H̃² statistics sweep,
 //!   native vs sharded × scalar vs vector sweep kernel (so the report
@@ -12,6 +12,10 @@
 //!   grown `T + ΔT` recording vs a warm `Picard::fit_append` over only
 //!   the ΔT appended samples, with iteration counts for both (warm must
 //!   win), across the same backend × kernel matrix as `fit_results`.
+//! - `serve_results` — client-observed round-trip latency of transforms
+//!   served by an in-process `fica serve` daemon (loopback TCP, real
+//!   connection threads) at several concurrent client counts — see
+//!   [`crate::bench::serve`].
 //!
 //! The report schema is versioned so successive PRs can track the
 //! trajectory (`fica bench --compare BASE.json` gates it — see
@@ -84,6 +88,15 @@ pub struct BackendBenchConfig {
     pub refit_append: usize,
     /// Timed cold/warm fits per refit configuration.
     pub refit_samples: usize,
+    /// Concurrent client-connection counts for the serve benches.
+    pub serve_clients: Vec<usize>,
+    /// Round-trip transforms each serve client performs.
+    pub serve_transforms: usize,
+    /// Samples T per served transform request (and the cached model's
+    /// fit data).
+    pub serve_t: usize,
+    /// Worker threads the benched daemon runs.
+    pub serve_workers: usize,
 }
 
 impl BackendBenchConfig {
@@ -103,6 +116,10 @@ impl BackendBenchConfig {
             refit_t: 100_000,
             refit_append: 25_000,
             refit_samples: 2,
+            serve_clients: vec![1, 4],
+            serve_transforms: 8,
+            serve_t: 10_000,
+            serve_workers: 4,
         }
     }
 
@@ -122,6 +139,10 @@ impl BackendBenchConfig {
             refit_t: 2_000,
             refit_append: 500,
             refit_samples: 1,
+            serve_clients: vec![2],
+            serve_transforms: 3,
+            serve_t: 1_000,
+            serve_workers: 2,
         }
     }
 
@@ -469,16 +490,20 @@ pub fn run_refits(cfg: &BackendBenchConfig) -> Vec<RefitTiming> {
     out
 }
 
-/// Build the stable `fica.bench_backend/v4` report (see
-/// `docs/BENCH_SCHEMA.md` for the field-by-field contract). v4 adds a
+/// Build the stable `fica.bench_backend/v5` report (see
+/// `docs/BENCH_SCHEMA.md` for the field-by-field contract). v5 adds the
+/// `serve_results` section — client-observed round-trip latencies of
+/// transforms served by an in-process `fica serve` daemon; v4 added a
 /// `meta` block — host cpu count, build profile, kernel/backend
 /// defaults — so a baseline records the machine and build that
-/// produced it; `compare` ignores it (absent in v3 baselines).
+/// produced it; `compare` ignores sections a baseline lacks, so v4
+/// baselines still gate every section they carry.
 pub fn report_json(
     cfg: &BackendBenchConfig,
     timings: &[SweepTiming],
     fits: &[FitTiming],
     refits: &[RefitTiming],
+    serves: &[super::serve::ServeTiming],
 ) -> Json {
     // Native+scalar medians per N: the speedup baseline is the reference
     // arithmetic, so vector rows read as the vectorization gain.
@@ -590,6 +615,35 @@ pub fn report_json(
             Json::Obj(obj)
         })
         .collect();
+    // Serve rows: `median_s` is the client-observed round-trip median
+    // (the gated quantity); `kernel` records the default kernel the
+    // served fits/transforms dispatched, keying rows consistently with
+    // every other section.
+    let serve_results: Vec<Json> = serves
+        .iter()
+        .map(|s| {
+            let mut obj = BTreeMap::new();
+            obj.insert("backend".into(), Json::Str("serve".into()));
+            obj.insert("kernel".into(), Json::Str(SweepKernel::default().id().to_string()));
+            obj.insert("workers".into(), Json::Num(s.workers as f64));
+            obj.insert("n".into(), Json::Num(s.n as f64));
+            obj.insert("t".into(), Json::Num(s.t as f64));
+            obj.insert("clients".into(), Json::Num(s.clients as f64));
+            obj.insert(
+                "transforms_per_client".into(),
+                Json::Num(s.transforms_per_client as f64),
+            );
+            obj.insert("median_s".into(), Json::Num(s.median_s()));
+            obj.insert("p99_s".into(), Json::Num(s.p99_s()));
+            obj.insert("transforms_per_s".into(), Json::Num(s.transforms_per_s()));
+            obj.insert("wall_s".into(), Json::Num(s.wall_s));
+            obj.insert(
+                "samples".into(),
+                Json::Arr(s.latencies.iter().map(|&v| Json::Num(v)).collect()),
+            );
+            Json::Obj(obj)
+        })
+        .collect();
     let cpus = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1);
@@ -605,7 +659,7 @@ pub fn report_json(
     );
     meta.insert("default_backend".into(), Json::Str("native".into()));
     let mut root = BTreeMap::new();
-    root.insert("schema".into(), Json::Str("fica.bench_backend/v4".into()));
+    root.insert("schema".into(), Json::Str("fica.bench_backend/v5".into()));
     root.insert("meta".into(), Json::Obj(meta));
     root.insert("level".into(), Json::Str("h2".into()));
     root.insert(
@@ -629,6 +683,8 @@ pub fn report_json(
     root.insert("refit_t".into(), Json::Num(cfg.refit_t as f64));
     root.insert("refit_append".into(), Json::Num(cfg.refit_append as f64));
     root.insert("refit_results".into(), Json::Arr(refit_results));
+    root.insert("serve_t".into(), Json::Num(cfg.serve_t as f64));
+    root.insert("serve_results".into(), Json::Arr(serve_results));
     Json::Obj(root)
 }
 
@@ -659,6 +715,10 @@ mod tests {
             refit_t: 200,
             refit_append: 60,
             refit_samples: 1,
+            serve_clients: vec![2],
+            serve_transforms: 2,
+            serve_t: 150,
+            serve_workers: 2,
         };
         let timings = run(&cfg);
         assert_eq!(timings.len(), 4); // (native + sharded(2)) x 2 kernels
@@ -666,12 +726,14 @@ mod tests {
         assert_eq!(fits.len(), 5); // native x 2 kernels, sharded, chunked x2
         let refits = run_refits(&cfg);
         assert_eq!(refits.len(), 5); // same matrix as the fits
-        let report = report_json(&cfg, &timings, &fits, &refits);
+        let serves = crate::bench::serve::run_serve(&cfg);
+        assert_eq!(serves.len(), 1); // one row per client count
+        let report = report_json(&cfg, &timings, &fits, &refits, &serves);
         assert_eq!(
             report.get("schema").and_then(|s| s.as_str()),
-            Some("fica.bench_backend/v4")
+            Some("fica.bench_backend/v5")
         );
-        let meta = report.get("meta").expect("v4 report carries a meta block");
+        let meta = report.get("meta").expect("v5 report carries a meta block");
         assert!(meta.get("cpus").unwrap().as_usize().unwrap() >= 1);
         let profile = meta.get("profile").unwrap().as_str().unwrap();
         assert!(profile == "debug" || profile == "release");
@@ -718,6 +780,17 @@ mod tests {
             assert!(r.get("warm_iters").unwrap().as_usize().is_some());
             assert_eq!(r.get("t_base").unwrap().as_usize(), Some(200));
             assert_eq!(r.get("t_append").unwrap().as_usize(), Some(60));
+        }
+        let serve_results = report.get("serve_results").unwrap().as_arr().unwrap();
+        assert_eq!(serve_results.len(), 1);
+        for r in serve_results {
+            assert_eq!(r.get("backend").unwrap().as_str(), Some("serve"));
+            assert_eq!(r.get("clients").unwrap().as_usize(), Some(2));
+            assert!(r.get("median_s").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(r.get("p99_s").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(r.get("transforms_per_s").unwrap().as_f64().unwrap() > 0.0);
+            // clients × transforms_per_client pooled latency samples.
+            assert_eq!(r.get("samples").unwrap().as_arr().unwrap().len(), 4);
         }
         // The report survives its own serialization.
         let text = report.to_string_compact();

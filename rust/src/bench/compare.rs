@@ -29,10 +29,11 @@ use std::fmt::Write as _;
 
 /// The sections a report may carry, with the fields that identify a row
 /// within each (beyond the fields shared by every section).
-const SECTIONS: [(&str, &[&str]); 3] = [
+const SECTIONS: [(&str, &[&str]); 4] = [
     ("results", &[]),
     ("fit_results", &["out_of_core"]),
     ("refit_results", &["out_of_core", "t_base", "t_append"]),
+    ("serve_results", &["clients"]),
 ];
 
 /// Key fields every section shares.
@@ -336,6 +337,31 @@ mod tests {
         assert_eq!(out.unmatched, 0);
         // Both directions: a v4 baseline against a v3 current run too.
         let out = compare_reports(&base, &current).unwrap();
+        assert!(!out.regressed());
+    }
+
+    /// v5 adds `serve_results`, keyed by `clients` on top of the common
+    /// fields: matched serve rows gate like any other section, and a v4
+    /// baseline without the section compares clean.
+    #[test]
+    fn serve_rows_gate_and_v4_baselines_stay_clean() {
+        let serve_report = |median: f64| {
+            Json::parse(&format!(
+                r#"{{"schema":"fica.bench_backend/v5","smoke":false,"results":[],"fit_results":[],
+                    "serve_results":[{{"backend":"serve","kernel":"vector","workers":2,"n":8,"t":10000,"clients":4,"median_s":{median}}}]}}"#,
+            ))
+            .unwrap()
+        };
+        let base = serve_report(0.5);
+        let out = compare_reports(&serve_report(0.5), &base).unwrap();
+        assert_eq!(out.compared.len(), 1);
+        assert!(!out.regressed());
+        let out = compare_reports(&serve_report(1.1), &base).unwrap();
+        assert!(out.regressed());
+        assert!(out.regressions[0].key.contains("clients=4"));
+        // A v4 baseline has no serve_results: unmatched, never failed.
+        let v4 = report(&[("native", "scalar", 1, 32, 100000, 0.5)]);
+        let out = compare_reports(&serve_report(9.0), &v4).unwrap();
         assert!(!out.regressed());
     }
 

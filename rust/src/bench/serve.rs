@@ -1,0 +1,198 @@
+//! Served-transform latency benchmark: the `serve_results` section of
+//! `BENCH_backend.json` (schema v5).
+//!
+//! Each row spins up an in-process `fica serve` loop (real TCP sockets
+//! on a loopback port, real reader/writer threads — the same code path
+//! `fica serve` runs), fits one model into the daemon's cache, then
+//! hammers it with `clients` concurrent connections each performing
+//! `transforms_per_client` round-trip transforms against the cached
+//! model. The measured quantity is the client-observed round-trip
+//! latency — wire encode, queue wait, (possibly batched) matmul
+//! window, wire decode — which is exactly what a resident-daemon
+//! deployment saves or pays versus per-call `fica apply` process
+//! startup. Rows at several client counts expose the batching win:
+//! concurrent transforms of one model coalesce into shared matmul
+//! windows, so per-transform latency should grow sublinearly in the
+//! client count.
+
+use super::backends::BackendBenchConfig;
+use super::Measurement;
+use crate::daemon::{BindAddr, BoundServer, Client, CoreConfig, ServeOptions};
+use crate::linalg::Mat;
+use crate::util::{mat_to_json, Json};
+use std::collections::BTreeMap;
+
+/// One measured serve configuration: `clients` concurrent connections
+/// transforming against one cached model.
+#[derive(Clone, Debug)]
+pub struct ServeTiming {
+    /// Worker threads the daemon's pool ran.
+    pub workers: usize,
+    /// Signal count N of the cached model.
+    pub n: usize,
+    /// Samples T per transform request.
+    pub t: usize,
+    /// Concurrent client connections.
+    pub clients: usize,
+    /// Round-trip transforms each client performed.
+    pub transforms_per_client: usize,
+    /// Client-observed round-trip seconds, all clients pooled.
+    pub latencies: Vec<f64>,
+    /// Wall-clock seconds for the whole measured phase.
+    pub wall_s: f64,
+}
+
+impl ServeTiming {
+    fn measurement(&self) -> Measurement {
+        Measurement {
+            name: format!(
+                "serve w={} N={} clients={}",
+                self.workers, self.n, self.clients
+            ),
+            samples: self.latencies.clone(),
+        }
+    }
+
+    /// Median client-observed round-trip seconds (the gated quantity).
+    pub fn median_s(&self) -> f64 {
+        self.measurement().median()
+    }
+
+    /// 99th-percentile round-trip seconds (nearest-rank over the pooled
+    /// per-transform samples).
+    pub fn p99_s(&self) -> f64 {
+        let mut s = self.latencies.clone();
+        if s.is_empty() {
+            return 0.0;
+        }
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let rank = (s.len() as f64 * 0.99).ceil() as usize;
+        s[rank.saturating_sub(1).min(s.len() - 1)]
+    }
+
+    /// Completed transforms per wall-clock second across all clients.
+    pub fn transforms_per_s(&self) -> f64 {
+        let total = (self.clients * self.transforms_per_client) as f64;
+        if self.wall_s > 0.0 {
+            total / self.wall_s
+        } else {
+            0.0
+        }
+    }
+}
+
+fn transform_request(x: &Mat) -> Json {
+    let mut p = BTreeMap::new();
+    p.insert("data".to_string(), mat_to_json(x));
+    p.insert("model_id".to_string(), Json::Str("bench".into()));
+    Json::Obj(p)
+}
+
+/// Run the serve matrix: one in-process daemon per client count, one
+/// cached model, `clients × transforms_per_client` round trips.
+pub fn run_serve(cfg: &BackendBenchConfig) -> Vec<ServeTiming> {
+    let workers = cfg.serve_workers;
+    let n = cfg.fit_sizes.first().copied().unwrap_or(4);
+    let data = crate::signal::experiment_a(n, cfg.serve_t, cfg.seed ^ 0x5e7e);
+    let mut out = Vec::new();
+    for &clients in &cfg.serve_clients {
+        let opts = ServeOptions {
+            // fica-lint: allow(no-panic) — literal address, parse cannot fail
+            addr: BindAddr::parse("tcp:127.0.0.1:0").expect("literal addr"),
+            workers,
+            core: CoreConfig {
+                queue_bound: 64,
+                parallelism: workers,
+                cache_capacity: 8,
+            },
+        };
+        // fica-lint: allow(no-panic) — bench harness on loopback; aborting the run is the right failure mode
+        let bound = BoundServer::bind(&opts).expect("bench serve bind");
+        let addr = bound.local_addr().to_string();
+        let server = std::thread::spawn(move || bound.run());
+
+        // Seed the cache: one fit under the key every transform hits.
+        // fica-lint: allow(no-panic) — bench harness on loopback
+        let mut ctl = Client::connect(&addr).expect("bench serve connect");
+        let mut fit = BTreeMap::new();
+        fit.insert("data".to_string(), mat_to_json(&data.x));
+        fit.insert("model_id".to_string(), Json::Str("bench".into()));
+        fit.insert("tol".to_string(), Json::Num(0.0));
+        fit.insert("max_iters".to_string(), Json::Num(cfg.fit_iters as f64));
+        // fica-lint: allow(no-panic) — bench harness on synthetic inputs constructed valid
+        let sub = ctl.request("fit", Json::Obj(fit)).expect("bench fit submit");
+        // fica-lint: allow(no-panic) — the daemon always assigns a job id to an accepted fit
+        let job = sub.get("job").and_then(Json::as_usize).expect("fit job id") as u64;
+        // fica-lint: allow(no-panic) — bench harness on loopback
+        let done = ctl.wait_job(job).expect("bench fit completion");
+        // fica-lint: allow(no-panic) — a failed bench fit must abort the run, not publish rows
+        assert!(done.get("error").is_none(), "bench fit failed: {}", done.to_string_compact());
+
+        // One warmup round trip (first transform pays model touch +
+        // allocator warm; the measured rows should not).
+        let req = transform_request(&data.x);
+        // fica-lint: allow(no-panic) — bench harness on loopback
+        let warm = ctl.request("transform", req.clone()).expect("warmup submit");
+        // fica-lint: allow(no-panic) — accepted transform carries a job id
+        let wj = warm.get("job").and_then(Json::as_usize).expect("warmup job") as u64;
+        // fica-lint: allow(no-panic) — bench harness on loopback
+        ctl.wait_job(wj).expect("warmup completion");
+
+        let rounds = cfg.serve_transforms;
+        let t0 = std::time::Instant::now();
+        let handles: Vec<_> = (0..clients)
+            .map(|_| {
+                let addr = addr.clone();
+                let req = req.clone();
+                std::thread::spawn(move || -> Vec<f64> {
+                    // fica-lint: allow(no-panic) — bench harness on loopback
+                    let mut c = Client::connect(&addr).expect("bench client connect");
+                    (0..rounds)
+                        .map(|_| {
+                            let s0 = std::time::Instant::now();
+                            // fica-lint: allow(no-panic) — bench harness on loopback
+                            let sub = c.request("transform", req.clone()).expect("submit");
+                            // fica-lint: allow(no-panic) — accepted transform carries a job id
+                            let j = sub.get("job").and_then(Json::as_usize).expect("job") as u64;
+                            // fica-lint: allow(no-panic) — bench harness on loopback
+                            let done = c.wait_job(j).expect("completion");
+                            // fica-lint: allow(no-panic) — a failed bench transform must abort the run
+                            assert!(done.get("error").is_none(), "{}", done.to_string_compact());
+                            s0.elapsed().as_secs_f64()
+                        })
+                        .collect()
+                })
+            })
+            .collect();
+        let mut latencies = Vec::new();
+        for h in handles {
+            // fica-lint: allow(no-panic) — a panicked client thread already failed its own asserts
+            latencies.extend(h.join().expect("bench client thread"));
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+
+        // fica-lint: allow(no-panic) — bench harness on loopback
+        let drained = ctl.request("shutdown", Json::Obj(BTreeMap::new())).expect("shutdown");
+        // fica-lint: allow(no-panic) — an unacknowledged drain means leaked threads; abort loudly
+        assert!(drained.get("drained").is_some(), "{}", drained.to_string_compact());
+        // fica-lint: allow(no-panic) — run() returning proves the drain joined every thread
+        server.join().expect("bench server thread").expect("clean serve exit");
+
+        let timing = ServeTiming {
+            workers,
+            n,
+            t: cfg.serve_t,
+            clients,
+            transforms_per_client: rounds,
+            latencies,
+            wall_s,
+        };
+        timing.measurement().report();
+        println!(
+            "  serve throughput: {:.1} transforms/s (clients={clients})",
+            timing.transforms_per_s()
+        );
+        out.push(timing);
+    }
+    out
+}

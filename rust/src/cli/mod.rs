@@ -474,6 +474,34 @@ COMMANDS:
         --fixture <path>         FICA1 fixture (default
                                  tests/fixtures/tiny.bin)
         --scratch-dir <path>     out-of-core scratch dir (default: temp dir)
+    serve                        Run the resident ICA daemon (fica.wire/v1)
+        --listen <spec>          tcp:HOST:PORT or unix:PATH
+                                 (default tcp:127.0.0.1:0 — kernel-assigned
+                                 port, printed on the readiness line)
+        --workers <usize>        worker-pool threads (default 2)
+        --queue-bound <usize>    max queued jobs before queue-full rejection
+                                 (default 64)
+        --parallel <usize>       jobs running concurrently (default 2)
+        --cache <usize>          LRU model-cache capacity (default 8; pinned
+                                 models are never evicted)
+        --trace-out <path>       fica.trace/v1 stream of serve.* spans/metrics
+        --trace-level <id>       span|metric|all (default all)
+    client                       Wire-protocol shim over a running daemon
+        --connect <spec>         tcp:HOST:PORT or unix:PATH (required)
+        --connect-retries <n>    retry a refused connect n times (200ms apart)
+        ping | stats | shutdown  one-shot control verbs
+        cancel --job <id>        cancel a queued or running job
+        fit | refit              submit a solve; waits for completion unless
+                                 --detach; flags: --input <server-side path>
+                                 [--format json|bin|csv] [--tol] [--max-iters]
+                                 [--seed] [--algo id] [--model-id key]
+                                 [--return-model]
+        transform                submit a transform against --model-id (cached)
+                                 and/or --model-path (server-side file);
+                                 --input names the server-side data file;
+                                 --sources-out <path> writes the returned
+                                 sources as matrix JSON (byte-identical to
+                                 `fica apply` on the same model and input)
     trace                        Inspect fica.trace/v1 files from --trace-out
         summarize <path>         per-phase/per-span time table, solver
                                  iteration provenance (direction, line-search

@@ -1,0 +1,102 @@
+//! A minimal blocking client for the `fica.wire/v1` protocol.
+//!
+//! Used by `fica client` and the integration tests. One request at a
+//! time: [`Client::request`] sends a frame and reads until the response
+//! with the matching `id` arrives; job completion events that arrive in
+//! the meantime are stashed and later drained by [`Client::wait_job`].
+
+use super::server::{BindAddr, Stream};
+use super::wire::{self, WIRE_SCHEMA};
+use crate::error::IcaError;
+use crate::util::Json;
+use std::collections::{BTreeMap, VecDeque};
+
+/// A connected wire-protocol client.
+pub struct Client {
+    stream: Stream,
+    next_id: u64,
+    pending: VecDeque<Json>,
+}
+
+fn io_err(what: &str, e: std::io::Error) -> IcaError {
+    IcaError::io(what, e)
+}
+
+impl Client {
+    /// Connect to a daemon at a `tcp:HOST:PORT` / `unix:PATH` spec.
+    pub fn connect(spec: &str) -> Result<Client, IcaError> {
+        let addr = BindAddr::parse(spec)?;
+        let stream = Stream::connect(&addr).map_err(|e| io_err(&format!("connect {spec}"), e))?;
+        Ok(Client { stream, next_id: 0, pending: VecDeque::new() })
+    }
+
+    fn read_payload(&mut self) -> Result<Json, IcaError> {
+        let Some(bytes) = wire::read_frame(&mut self.stream)? else {
+            return Err(IcaError::invalid_wire("server closed the connection"));
+        };
+        let text = String::from_utf8(bytes)
+            .map_err(|_| IcaError::invalid_wire("response is not UTF-8"))?;
+        Json::parse(&text).map_err(|e| IcaError::invalid_wire(format!("response: {e}")))
+    }
+
+    /// Send one request and return the response payload with the
+    /// matching `id`. Job events seen while waiting are stashed for
+    /// [`Client::wait_job`].
+    pub fn request(&mut self, op: &str, params: Json) -> Result<Json, IcaError> {
+        self.next_id += 1;
+        let id = self.next_id;
+        let mut m = BTreeMap::new();
+        m.insert("schema".to_string(), Json::Str(WIRE_SCHEMA.to_string()));
+        m.insert("id".to_string(), Json::Num(id as f64));
+        m.insert("op".to_string(), Json::Str(op.to_string()));
+        m.insert("params".to_string(), params);
+        let payload = Json::Obj(m).to_string_compact();
+        let frame = wire::encode_frame(payload.as_bytes())?;
+        use std::io::Write;
+        self.stream
+            .write_all(&frame)
+            .and_then(|()| self.stream.flush())
+            .map_err(|e| io_err("send request", e))?;
+        loop {
+            let v = self.read_payload()?;
+            let matches = v
+                .get("id")
+                .and_then(Json::as_usize)
+                .map(|got| got as u64 == id)
+                .unwrap_or(false);
+            if matches {
+                return Ok(v);
+            }
+            self.pending.push_back(v);
+        }
+    }
+
+    /// Block until the completion event for `job` arrives (checking
+    /// stashed events first). Returns the event payload, whether it
+    /// reports success or a typed job error.
+    pub fn wait_job(&mut self, job: u64) -> Result<Json, IcaError> {
+        let is_job = |v: &Json| {
+            v.get("job")
+                .and_then(Json::as_usize)
+                .map(|got| got as u64 == job)
+                .unwrap_or(false)
+        };
+        if let Some(pos) = self.pending.iter().position(is_job) {
+            if let Some(v) = self.pending.remove(pos) {
+                return Ok(v);
+            }
+        }
+        loop {
+            let v = self.read_payload()?;
+            if is_job(&v) {
+                return Ok(v);
+            }
+            self.pending.push_back(v);
+        }
+    }
+}
+
+/// True when a response payload is a typed error (carries `"error"`).
+pub fn is_error(v: &Json) -> bool {
+    v.get("error").is_some()
+}

@@ -1,0 +1,1181 @@
+//! The daemon's deterministic core: a single-threaded state machine
+//! mapping protocol [`Event`]s onto [`Effect`]s.
+//!
+//! Everything that defines the serving semantics lives here — the
+//! bounded FIFO job queue, the scheduler slots, per-job cancellation,
+//! the graceful shutdown drain, and the pinned LRU model cache — and
+//! none of it touches a socket, a thread, or a clock. The production
+//! server ([`super::server`]) drives one `Core` from an event channel
+//! and executes the returned effects on real connections and the
+//! shared [`crate::backend::pool::WorkerPool`]; the deterministic test
+//! harness ([`crate::testkit::harness`]) drives the same `Core` from a
+//! script and executes job effects inline. Same events in, same
+//! effects out — byte for byte — which is what makes the concurrency
+//! semantics testable without sleeps.
+//!
+//! There are deliberately **no locks in `daemon/`**: the core owns all
+//! mutable state on one thread and the shell communicates with it by
+//! message passing only, so the `lock-hygiene` rule has nothing to
+//! declare here (the pool's and coordinator's own declarations cover
+//! the locks the daemon indirectly exercises).
+//!
+//! Observability: each job carries a `serve.job` span; queue depth,
+//! wait/exec latency and the submitted/completed/cancelled/rejected
+//! counters are emitted into the installed `fica.trace/v1` recorder
+//! (inert, as always, when tracing is off). Clock reads go through
+//! [`crate::obs::Stamp`] only — timing never feeds the responses, so
+//! transcripts stay byte-stable.
+
+use super::wire::{self, ErrorKind, Request};
+use crate::data::{open_source, read_dense, Format, DEFAULT_CHUNK_COLS};
+use crate::error::IcaError;
+use crate::estimator::{IcaModel, Picard};
+use crate::ica::{Algorithm, CancelToken};
+use crate::linalg::Mat;
+use crate::obs;
+use crate::util::{mat_from_json, mat_to_json, Json};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::sync::Arc;
+
+/// Connection identifier assigned by the server shell (or the script
+/// harness).
+pub type ConnId = u64;
+
+/// Job identifier assigned by the core, monotonically from 1.
+pub type JobId = u64;
+
+/// Sizing knobs for the core's queue, scheduler and model cache.
+#[derive(Clone, Copy, Debug)]
+pub struct CoreConfig {
+    /// Max jobs waiting (not running); further submissions are rejected
+    /// with a typed `queue-full` error.
+    pub queue_bound: usize,
+    /// Jobs allowed to run concurrently on the worker pool.
+    pub parallelism: usize,
+    /// LRU model-cache capacity in entries (clamped to >= 1). Entries
+    /// pinned by in-flight transforms are never evicted.
+    pub cache_capacity: usize,
+}
+
+impl Default for CoreConfig {
+    fn default() -> Self {
+        Self { queue_bound: 64, parallelism: 2, cache_capacity: 8 }
+    }
+}
+
+/// One input to the state machine.
+pub enum Event {
+    /// A client connected.
+    Connected(ConnId),
+    /// A well-framed payload arrived from a client.
+    Frame(ConnId, Vec<u8>),
+    /// The client's stream broke at the framing layer (truncated or
+    /// oversized frame): answer with a typed `bad-frame` error, then
+    /// close — the stream cannot be resynchronized.
+    FrameError(ConnId, IcaError),
+    /// A client disconnected.
+    Disconnected(ConnId),
+    /// A dispatched job finished on the worker pool (or inline, in the
+    /// test harness).
+    JobDone(JobId, JobResult),
+}
+
+/// One output of the state machine, to be executed by the shell.
+pub enum Effect {
+    /// Send this response payload (unframed) to a connection.
+    Respond(ConnId, Vec<u8>),
+    /// Run this job's work on a worker; feed the result back as
+    /// [`Event::JobDone`].
+    Run(JobId, JobWork),
+    /// Close a connection.
+    Close(ConnId),
+    /// The drain finished: stop accepting, join workers, exit.
+    ShutdownComplete,
+}
+
+/// A boxed, self-contained unit of work for one dispatched job. Owns
+/// its inputs and its [`CancelToken`] clone; pure apart from optional
+/// file loads for path-based requests.
+pub struct JobWork {
+    run: Box<dyn FnOnce() -> JobResult + Send + 'static>,
+}
+
+impl JobWork {
+    /// Execute the work, consuming it.
+    pub fn execute(self) -> JobResult {
+        (self.run)()
+    }
+}
+
+/// What a job produced, fed back via [`Event::JobDone`].
+pub enum JobResult {
+    /// A fit/refit finished (or failed, or was cancelled).
+    Fit {
+        /// The fitted model, or the typed failure.
+        model: Result<Arc<IcaModel>, IcaError>,
+    },
+    /// A transform batch finished; `outputs` is parallel to the batch
+    /// members, `loaded` carries a model freshly loaded from disk so
+    /// the core can cache it.
+    Transform {
+        /// Model loaded from `model_path` during execution, if any.
+        loaded: Option<Arc<IcaModel>>,
+        /// Per-member sources (or per-member typed failures).
+        outputs: Vec<Result<Mat, IcaError>>,
+    },
+}
+
+/// Counter snapshot exposed by the `stats` op and [`Core::counters`].
+/// Invariant (pinned by the soak test): `submitted == completed +
+/// cancelled + rejected` once the queue and scheduler are empty.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServeCounters {
+    /// Submissions received (including ones later rejected).
+    pub submitted: u64,
+    /// Jobs that ran to completion (successfully or with an error).
+    pub completed: u64,
+    /// Jobs cancelled while queued, or solves stopped by their token.
+    pub cancelled: u64,
+    /// Submissions refused (queue full, draining, malformed params).
+    pub rejected: u64,
+}
+
+enum DataSpec {
+    Inline(Mat),
+    Path(String, Option<Format>),
+}
+
+fn load_data(spec: DataSpec) -> Result<Mat, IcaError> {
+    match spec {
+        DataSpec::Inline(m) => Ok(m),
+        DataSpec::Path(path, format) => {
+            let format = match format {
+                Some(f) => f,
+                None => Format::infer(&path).ok_or_else(|| {
+                    IcaError::invalid_input(format!(
+                        "cannot infer data format from {path:?}; pass \"format\""
+                    ))
+                })?,
+            };
+            let mut src = open_source(&path, format)?;
+            read_dense(src.as_mut(), DEFAULT_CHUNK_COLS)
+        }
+    }
+}
+
+struct FitSpec {
+    data: DataSpec,
+    tol: Option<f64>,
+    max_iters: Option<usize>,
+    seed: Option<u64>,
+    algorithm: Option<Algorithm>,
+    model_id: Option<String>,
+    return_model: bool,
+    warm: Option<Arc<IcaModel>>,
+}
+
+enum Spec {
+    Fit(FitSpec),
+    Transform { key: String, model_path: Option<String>, data: DataSpec },
+}
+
+struct Queued {
+    job: JobId,
+    conn: ConnId,
+    op: &'static str,
+    spec: Spec,
+    cancel: CancelToken,
+    queued: obs::Stamp,
+}
+
+struct Running {
+    op: &'static str,
+    cancel: CancelToken,
+    /// Whether `cancel` can still stop the work (fit/refit check their
+    /// token at iteration boundaries; a dispatched transform window is
+    /// one matmul and always runs to completion).
+    cancellable: bool,
+    conn: ConnId,
+    model_id: Option<String>,
+    return_model: bool,
+    /// Transform batch members `(job, conn)`, lead first; empty for fits.
+    members: Vec<(JobId, ConnId)>,
+    /// Cache key pinned for the duration of this job, if any.
+    pinned: Option<String>,
+    #[allow(dead_code)]
+    span: obs::SpanGuard,
+    exec: obs::Stamp,
+}
+
+struct CacheEntry {
+    model: Arc<IcaModel>,
+    pins: usize,
+}
+
+/// LRU model cache with pin counts: eviction walks least-recently-used
+/// first, never evicts a pinned entry, and never evicts the
+/// most-recently-touched entry. Over-capacity states (everything else
+/// pinned) resolve as soon as a pin is released.
+struct ModelCache {
+    entries: BTreeMap<String, CacheEntry>,
+    lru: VecDeque<String>,
+    capacity: usize,
+}
+
+impl ModelCache {
+    fn new(capacity: usize) -> Self {
+        Self { entries: BTreeMap::new(), lru: VecDeque::new(), capacity: capacity.max(1) }
+    }
+
+    fn touch(&mut self, key: &str) {
+        self.lru.retain(|k| k != key);
+        self.lru.push_back(key.to_string());
+    }
+
+    fn get(&mut self, key: &str) -> Option<Arc<IcaModel>> {
+        let model = self.entries.get(key).map(|e| e.model.clone())?;
+        self.touch(key);
+        Some(model)
+    }
+
+    fn insert(&mut self, key: &str, model: Arc<IcaModel>) {
+        match self.entries.get_mut(key) {
+            Some(e) => e.model = model,
+            None => {
+                self.entries.insert(key.to_string(), CacheEntry { model, pins: 0 });
+            }
+        }
+        self.touch(key);
+        self.evict_excess();
+    }
+
+    fn pin(&mut self, key: &str) {
+        if let Some(e) = self.entries.get_mut(key) {
+            e.pins += 1;
+        }
+    }
+
+    fn unpin(&mut self, key: &str) {
+        if let Some(e) = self.entries.get_mut(key) {
+            e.pins = e.pins.saturating_sub(1);
+        }
+        self.evict_excess();
+    }
+
+    fn evict_excess(&mut self) {
+        while self.entries.len() > self.capacity {
+            // Candidates in LRU order, excluding the most recent entry.
+            let victim = self
+                .lru
+                .iter()
+                .take(self.lru.len().saturating_sub(1))
+                .find(|k| self.entries.get(k.as_str()).map(|e| e.pins == 0).unwrap_or(false))
+                .cloned();
+            match victim {
+                Some(k) => {
+                    self.entries.remove(&k);
+                    self.lru.retain(|x| x != &k);
+                }
+                None => break,
+            }
+        }
+    }
+
+    fn keys(&self) -> Vec<String> {
+        self.entries.keys().cloned().collect()
+    }
+
+    fn pin_count(&self, key: &str) -> usize {
+        self.entries.get(key).map(|e| e.pins).unwrap_or(0)
+    }
+}
+
+/// The daemon state machine. See the module docs for the design.
+pub struct Core {
+    cfg: CoreConfig,
+    /// `Some` once shutdown was requested; the inner option holds the
+    /// requester to answer when the drain finishes (cleared if they
+    /// disconnect first).
+    draining: Option<Option<(ConnId, u64)>>,
+    shutdown_sent: bool,
+    next_job: JobId,
+    queue: VecDeque<Queued>,
+    running: BTreeMap<JobId, Running>,
+    cache: ModelCache,
+    conns: BTreeSet<ConnId>,
+    counters: ServeCounters,
+}
+
+impl Core {
+    /// A fresh core with the given sizing.
+    pub fn new(cfg: CoreConfig) -> Self {
+        Self {
+            cfg,
+            draining: None,
+            shutdown_sent: false,
+            next_job: 0,
+            queue: VecDeque::new(),
+            running: BTreeMap::new(),
+            cache: ModelCache::new(cfg.cache_capacity),
+            conns: BTreeSet::new(),
+            counters: ServeCounters::default(),
+        }
+    }
+
+    /// Jobs waiting in the queue (not running).
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Dispatched jobs not yet reported done (a transform batch counts
+    /// once).
+    pub fn running_count(&self) -> usize {
+        self.running.len()
+    }
+
+    /// Whether a shutdown drain is in progress.
+    pub fn is_draining(&self) -> bool {
+        self.draining.is_some()
+    }
+
+    /// Counter snapshot.
+    pub fn counters(&self) -> ServeCounters {
+        self.counters
+    }
+
+    /// Keys currently held by the model cache (sorted).
+    pub fn cached_model_keys(&self) -> Vec<String> {
+        self.cache.keys()
+    }
+
+    /// In-flight transform pins on a cached model.
+    pub fn model_pin_count(&self, key: &str) -> usize {
+        self.cache.pin_count(key)
+    }
+
+    /// Advance the state machine by one event.
+    pub fn handle(&mut self, ev: Event) -> Vec<Effect> {
+        let mut effects = Vec::new();
+        match ev {
+            Event::Connected(conn) => {
+                self.conns.insert(conn);
+                obs::gauge_set("serve.connections", self.conns.len() as f64);
+            }
+            Event::Frame(conn, bytes) => self.on_frame(conn, &bytes, &mut effects),
+            Event::FrameError(conn, e) => {
+                obs::counter_add("serve.bad_frames", 1);
+                self.respond(
+                    conn,
+                    wire::error_response(None, ErrorKind::BadFrame, &e.to_string()),
+                    &mut effects,
+                );
+                self.conns.remove(&conn);
+                effects.push(Effect::Close(conn));
+            }
+            Event::Disconnected(conn) => {
+                self.conns.remove(&conn);
+                obs::gauge_set("serve.connections", self.conns.len() as f64);
+                if let Some(requester) = &mut self.draining {
+                    if requester.map(|(c, _)| c == conn).unwrap_or(false) {
+                        *requester = None;
+                    }
+                }
+            }
+            Event::JobDone(job, result) => self.on_job_done(job, result, &mut effects),
+        }
+        effects
+    }
+
+    fn respond(&self, conn: ConnId, payload: Vec<u8>, effects: &mut Vec<Effect>) {
+        if !self.conns.contains(&conn) {
+            return;
+        }
+        if payload.len() > wire::MAX_FRAME {
+            effects.push(Effect::Respond(
+                conn,
+                wire::error_response(
+                    None,
+                    ErrorKind::ResponseTooLarge,
+                    "response exceeds the frame cap; request less data per call",
+                ),
+            ));
+            return;
+        }
+        effects.push(Effect::Respond(conn, payload));
+    }
+
+    fn on_frame(&mut self, conn: ConnId, bytes: &[u8], effects: &mut Vec<Effect>) {
+        let req = match wire::decode_request(bytes) {
+            Err(e) => {
+                self.respond(
+                    conn,
+                    wire::error_response(e.id, ErrorKind::BadRequest, &e.message),
+                    effects,
+                );
+                return;
+            }
+            Ok(r) => r,
+        };
+        match req.op.as_str() {
+            "ping" => self.respond(
+                conn,
+                wire::response(req.id, vec![("pong", Json::Bool(true))]),
+                effects,
+            ),
+            "stats" => {
+                let payload = wire::response(req.id, vec![("serve", self.stats_json())]);
+                self.respond(conn, payload, effects);
+            }
+            "cancel" => self.on_cancel(conn, &req, effects),
+            "shutdown" => self.on_shutdown(conn, &req, effects),
+            "fit" => self.submit_fit(conn, req, false, effects),
+            "refit" => self.submit_fit(conn, req, true, effects),
+            "transform" => self.submit_transform(conn, req, effects),
+            other => self.respond(
+                conn,
+                wire::error_response(
+                    Some(req.id),
+                    ErrorKind::UnknownOp,
+                    &format!("unknown op {other:?}"),
+                ),
+                effects,
+            ),
+        }
+    }
+
+    fn stats_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("queue_depth".into(), Json::Num(self.queue.len() as f64));
+        m.insert("running".into(), Json::Num(self.running.len() as f64));
+        m.insert("submitted".into(), Json::Num(self.counters.submitted as f64));
+        m.insert("completed".into(), Json::Num(self.counters.completed as f64));
+        m.insert("cancelled".into(), Json::Num(self.counters.cancelled as f64));
+        m.insert("rejected".into(), Json::Num(self.counters.rejected as f64));
+        m.insert("models_cached".into(), Json::Num(self.cache.entries.len() as f64));
+        m.insert(
+            "state".into(),
+            Json::Str(if self.draining.is_some() { "draining" } else { "running" }.into()),
+        );
+        Json::Obj(m)
+    }
+
+    /// Reject a submission with a typed error (counts toward
+    /// `rejected`).
+    fn reject(
+        &mut self,
+        conn: ConnId,
+        id: u64,
+        kind: ErrorKind,
+        message: &str,
+        effects: &mut Vec<Effect>,
+    ) {
+        self.counters.rejected += 1;
+        obs::counter_add("serve.jobs_rejected", 1);
+        self.respond(conn, wire::error_response(Some(id), kind, message), effects);
+    }
+
+    /// Common admission control; returns false when the submission was
+    /// rejected.
+    fn admit(&mut self, conn: ConnId, id: u64, effects: &mut Vec<Effect>) -> bool {
+        self.counters.submitted += 1;
+        obs::counter_add("serve.jobs_submitted", 1);
+        if self.draining.is_some() {
+            self.reject(
+                conn,
+                id,
+                ErrorKind::ShuttingDown,
+                "daemon is draining for shutdown and refuses new jobs",
+                effects,
+            );
+            return false;
+        }
+        if self.queue.len() >= self.cfg.queue_bound {
+            self.reject(
+                conn,
+                id,
+                ErrorKind::QueueFull,
+                &format!("job queue is full ({} waiting)", self.queue.len()),
+                effects,
+            );
+            return false;
+        }
+        true
+    }
+
+    fn parse_data_spec(params: &Json, what: &str) -> Result<DataSpec, String> {
+        let format = match params.get("format") {
+            None => None,
+            Some(f) => match f.as_str().and_then(Format::from_id) {
+                Some(f) => Some(f),
+                None => return Err("\"format\" must be one of json|bin|csv".into()),
+            },
+        };
+        match (params.get("data"), params.get("path")) {
+            (Some(d), None) => match mat_from_json(d, what) {
+                Ok(m) => Ok(DataSpec::Inline(m)),
+                Err(e) => Err(e.to_string()),
+            },
+            (None, Some(p)) => match p.as_str() {
+                Some(s) => Ok(DataSpec::Path(s.to_string(), format)),
+                None => Err("\"path\" must be a string".into()),
+            },
+            _ => Err(format!("{what}: exactly one of \"data\" and \"path\" is required")),
+        }
+    }
+
+    fn parse_bool(params: &Json, key: &str) -> Result<bool, String> {
+        match params.get(key) {
+            None => Ok(false),
+            Some(Json::Bool(b)) => Ok(*b),
+            Some(_) => Err(format!("\"{key}\" must be a boolean")),
+        }
+    }
+
+    fn submit_fit(&mut self, conn: ConnId, req: Request, refit: bool, effects: &mut Vec<Effect>) {
+        if !self.admit(conn, req.id, effects) {
+            return;
+        }
+        let op = if refit { "refit" } else { "fit" };
+        let p = &req.params;
+        let parsed: Result<FitSpec, (ErrorKind, String)> = (|| {
+            let data = Self::parse_data_spec(p, op).map_err(|m| (ErrorKind::BadRequest, m))?;
+            let algorithm = match p.get("algorithm") {
+                None => None,
+                Some(a) => match a.as_str().and_then(Algorithm::from_id) {
+                    Some(algo) => Some(algo),
+                    None => {
+                        return Err((ErrorKind::BadRequest, "unknown \"algorithm\" id".into()))
+                    }
+                },
+            };
+            let model_id = p.get("model_id").and_then(Json::as_str).map(str::to_string);
+            let warm = if refit {
+                let key = model_id
+                    .as_deref()
+                    .ok_or((ErrorKind::BadRequest, "refit requires \"model_id\"".to_string()))?;
+                let model = self.cache.get(key).ok_or_else(|| {
+                    (ErrorKind::UnknownModel, format!("model {key:?} is not cached"))
+                })?;
+                Some(model)
+            } else {
+                None
+            };
+            Ok(FitSpec {
+                data,
+                tol: p.get("tol").and_then(Json::as_f64),
+                max_iters: p.get("max_iters").and_then(Json::as_usize),
+                seed: p.get("seed").and_then(Json::as_usize).map(|s| s as u64),
+                algorithm,
+                model_id,
+                return_model: Self::parse_bool(p, "return_model")
+                    .map_err(|m| (ErrorKind::BadRequest, m))?,
+                warm,
+            })
+        })();
+        let spec = match parsed {
+            Ok(s) => s,
+            Err((kind, msg)) => {
+                self.reject(conn, req.id, kind, &msg, effects);
+                return;
+            }
+        };
+        self.enqueue(conn, req.id, op, Spec::Fit(spec), effects);
+    }
+
+    fn submit_transform(&mut self, conn: ConnId, req: Request, effects: &mut Vec<Effect>) {
+        if !self.admit(conn, req.id, effects) {
+            return;
+        }
+        let p = &req.params;
+        let data = match Self::parse_data_spec(p, "transform") {
+            Ok(d) => d,
+            Err(m) => {
+                self.reject(conn, req.id, ErrorKind::BadRequest, &m, effects);
+                return;
+            }
+        };
+        let model_id = p.get("model_id").and_then(Json::as_str).map(str::to_string);
+        let model_path = p.get("model_path").and_then(Json::as_str).map(str::to_string);
+        let key = match model_id.or_else(|| model_path.clone()) {
+            Some(k) => k,
+            None => {
+                self.reject(
+                    conn,
+                    req.id,
+                    ErrorKind::BadRequest,
+                    "transform requires \"model_id\" and/or \"model_path\"",
+                    effects,
+                );
+                return;
+            }
+        };
+        if self.cache.get(&key).is_none() && model_path.is_none() {
+            self.reject(
+                conn,
+                req.id,
+                ErrorKind::UnknownModel,
+                &format!("model {key:?} is not cached and no \"model_path\" was given"),
+                effects,
+            );
+            return;
+        }
+        self.enqueue(conn, req.id, "transform", Spec::Transform { key, model_path, data }, effects);
+    }
+
+    fn enqueue(
+        &mut self,
+        conn: ConnId,
+        id: u64,
+        op: &'static str,
+        spec: Spec,
+        effects: &mut Vec<Effect>,
+    ) {
+        self.next_job += 1;
+        let job = self.next_job;
+        self.queue.push_back(Queued {
+            job,
+            conn,
+            op,
+            spec,
+            cancel: CancelToken::new(),
+            queued: obs::stamp(),
+        });
+        obs::gauge_set("serve.queue_depth", self.queue.len() as f64);
+        self.respond(
+            conn,
+            wire::response(
+                id,
+                vec![("job", Json::Num(job as f64)), ("queued", Json::Bool(true))],
+            ),
+            effects,
+        );
+        self.pump(effects);
+    }
+
+    /// FIFO dispatch onto free scheduler slots.
+    fn pump(&mut self, effects: &mut Vec<Effect>) {
+        while self.running.len() < self.cfg.parallelism.max(1) {
+            let Some(q) = self.queue.pop_front() else { break };
+            obs::hist_observe("serve.wait_s", q.queued.elapsed_s());
+            match q.spec {
+                Spec::Fit(spec) => self.dispatch_fit(q.job, q.conn, q.op, q.cancel, spec, effects),
+                Spec::Transform { key, model_path, data } => {
+                    self.dispatch_transform(q.job, q.conn, q.cancel, key, model_path, data, effects)
+                }
+            }
+        }
+        obs::gauge_set("serve.queue_depth", self.queue.len() as f64);
+    }
+
+    fn job_span(job: JobId, op: &'static str) -> obs::SpanGuard {
+        let mut span = obs::span("serve.job");
+        if span.is_recording() {
+            span.field_u64("job", job);
+            span.field_str("op", op);
+        }
+        span
+    }
+
+    fn dispatch_fit(
+        &mut self,
+        job: JobId,
+        conn: ConnId,
+        op: &'static str,
+        cancel: CancelToken,
+        spec: FitSpec,
+        effects: &mut Vec<Effect>,
+    ) {
+        let FitSpec { data, tol, max_iters, seed, algorithm, model_id, return_model, warm } = spec;
+        let token = cancel.clone();
+        let run = Box::new(move || {
+            let x = match load_data(data) {
+                Ok(m) => m,
+                Err(e) => return JobResult::Fit { model: Err(e) },
+            };
+            let mut picard = Picard::new().cancel_token(token);
+            if let Some(t) = tol {
+                picard = picard.tol(t);
+            }
+            if let Some(k) = max_iters {
+                picard = picard.max_iters(k);
+            }
+            if let Some(s) = seed {
+                picard = picard.seed(s);
+            }
+            if let Some(a) = algorithm {
+                picard = picard.algorithm(a);
+            }
+            if let Some(w) = &warm {
+                picard = picard.warm_start(w);
+            }
+            JobResult::Fit { model: picard.fit(&x).map(Arc::new) }
+        });
+        self.running.insert(
+            job,
+            Running {
+                op,
+                cancel,
+                cancellable: true,
+                conn,
+                model_id,
+                return_model,
+                members: Vec::new(),
+                pinned: None,
+                span: Self::job_span(job, op),
+                exec: obs::stamp(),
+            },
+        );
+        effects.push(Effect::Run(job, JobWork { run }));
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch_transform(
+        &mut self,
+        job: JobId,
+        conn: ConnId,
+        cancel: CancelToken,
+        key: String,
+        model_path: Option<String>,
+        data: DataSpec,
+        effects: &mut Vec<Effect>,
+    ) {
+        // Batch every queued transform against the same model into this
+        // dispatch: one matmul window serves them all.
+        let mut members = vec![(job, conn)];
+        let mut datas = vec![data];
+        let mut i = 0;
+        while i < self.queue.len() {
+            let same = matches!(
+                self.queue.get(i),
+                Some(Queued { spec: Spec::Transform { key: k, .. }, .. }) if *k == key
+            );
+            if same {
+                if let Some(q2) = self.queue.remove(i) {
+                    obs::hist_observe("serve.wait_s", q2.queued.elapsed_s());
+                    if let Spec::Transform { data, .. } = q2.spec {
+                        members.push((q2.job, q2.conn));
+                        datas.push(data);
+                    }
+                }
+            } else {
+                i += 1;
+            }
+        }
+        obs::counter_add("serve.transform_windows", 1);
+        obs::counter_add("serve.transforms_batched", members.len() as u64);
+
+        let cached = self.cache.get(&key);
+        let pinned = if cached.is_some() {
+            self.cache.pin(&key);
+            Some(key.clone())
+        } else {
+            None
+        };
+        let cache_key = key.clone();
+        let run = Box::new(move || transform_batch(cached, model_path, &key, datas));
+        let mut span = Self::job_span(job, "transform");
+        if span.is_recording() {
+            span.field_u64("batched", members.len() as u64);
+        }
+        self.running.insert(
+            job,
+            Running {
+                op: "transform",
+                cancel,
+                cancellable: false,
+                conn,
+                model_id: Some(cache_key),
+                return_model: false,
+                members,
+                pinned,
+                span,
+                exec: obs::stamp(),
+            },
+        );
+        effects.push(Effect::Run(job, JobWork { run }));
+    }
+
+    fn on_job_done(&mut self, job: JobId, result: JobResult, effects: &mut Vec<Effect>) {
+        let Some(run) = self.running.remove(&job) else {
+            return;
+        };
+        obs::hist_observe("serve.exec_s", run.exec.elapsed_s());
+        if let Some(key) = &run.pinned {
+            self.cache.unpin(key);
+        }
+        match result {
+            JobResult::Fit { model } => match model {
+                Ok(m) => {
+                    self.counters.completed += 1;
+                    obs::counter_add("serve.jobs_completed", 1);
+                    let mut fields = vec![(
+                        "converged",
+                        Json::Bool(m.fit_info().converged),
+                    )];
+                    if let Some(key) = &run.model_id {
+                        self.cache.insert(key, m.clone());
+                        fields.push(("model_id", Json::Str(key.clone())));
+                    }
+                    if run.return_model {
+                        match m.to_json() {
+                            Ok(j) => fields.push(("model", j)),
+                            Err(e) => fields.push(("model_error", Json::Str(e.to_string()))),
+                        }
+                    }
+                    self.respond(run.conn, wire::job_event(job, run.op, fields), effects);
+                }
+                Err(e) => {
+                    let kind = ErrorKind::from_error(&e);
+                    if kind == ErrorKind::Cancelled {
+                        self.counters.cancelled += 1;
+                        obs::counter_add("serve.jobs_cancelled", 1);
+                    } else {
+                        self.counters.completed += 1;
+                        obs::counter_add("serve.jobs_completed", 1);
+                    }
+                    self.respond(
+                        run.conn,
+                        wire::job_error(job, run.op, kind, &e.to_string()),
+                        effects,
+                    );
+                }
+            },
+            JobResult::Transform { loaded, outputs } => {
+                if let (Some(m), Some(key)) = (loaded, &run.model_id) {
+                    self.cache.insert(key, m);
+                }
+                for (idx, (member, conn)) in run.members.iter().enumerate() {
+                    self.counters.completed += 1;
+                    obs::counter_add("serve.jobs_completed", 1);
+                    let payload = match outputs.get(idx) {
+                        Some(Ok(y)) => wire::job_event(
+                            *member,
+                            "transform",
+                            vec![("sources", mat_to_json(y))],
+                        ),
+                        Some(Err(e)) => wire::job_error(
+                            *member,
+                            "transform",
+                            ErrorKind::from_error(e),
+                            &e.to_string(),
+                        ),
+                        None => wire::job_error(
+                            *member,
+                            "transform",
+                            ErrorKind::Solve,
+                            "internal: batch output missing",
+                        ),
+                    };
+                    self.respond(*conn, payload, effects);
+                }
+            }
+        }
+        obs::gauge_set("serve.models_cached", self.cache.entries.len() as f64);
+        self.pump(effects);
+        self.maybe_finish_drain(effects);
+    }
+
+    fn on_cancel(&mut self, conn: ConnId, req: &Request, effects: &mut Vec<Effect>) {
+        let Some(job) = req.params.get("job").and_then(Json::as_usize).map(|n| n as u64) else {
+            self.respond(
+                conn,
+                wire::error_response(
+                    Some(req.id),
+                    ErrorKind::BadRequest,
+                    "cancel requires a numeric \"job\"",
+                ),
+                effects,
+            );
+            return;
+        };
+        if let Some(pos) = self.queue.iter().position(|q| q.job == job) {
+            if let Some(q) = self.queue.remove(pos) {
+                self.counters.cancelled += 1;
+                obs::counter_add("serve.jobs_cancelled", 1);
+                obs::gauge_set("serve.queue_depth", self.queue.len() as f64);
+                self.respond(
+                    conn,
+                    wire::response(
+                        req.id,
+                        vec![
+                            ("job", Json::Num(job as f64)),
+                            ("state", Json::Str("queued".into())),
+                        ],
+                    ),
+                    effects,
+                );
+                self.respond(
+                    q.conn,
+                    wire::job_error(job, q.op, ErrorKind::Cancelled, "cancelled while queued"),
+                    effects,
+                );
+                self.maybe_finish_drain(effects);
+            }
+            return;
+        }
+        let running = self.running.get(&job).map(|r| (r.cancel.clone(), r.cancellable)).or_else(
+            || {
+                self.running
+                    .values()
+                    .find(|r| r.members.iter().any(|(j, _)| *j == job))
+                    .map(|r| (r.cancel.clone(), r.cancellable))
+            },
+        );
+        match running {
+            Some((token, cancellable)) => {
+                if cancellable {
+                    token.cancel();
+                }
+                self.respond(
+                    conn,
+                    wire::response(
+                        req.id,
+                        vec![
+                            ("job", Json::Num(job as f64)),
+                            ("state", Json::Str("running".into())),
+                        ],
+                    ),
+                    effects,
+                );
+            }
+            None => self.respond(
+                conn,
+                wire::error_response(
+                    Some(req.id),
+                    ErrorKind::UnknownJob,
+                    &format!("job {job} is neither queued nor running"),
+                ),
+                effects,
+            ),
+        }
+    }
+
+    fn on_shutdown(&mut self, conn: ConnId, req: &Request, effects: &mut Vec<Effect>) {
+        if self.draining.is_some() {
+            self.respond(
+                conn,
+                wire::error_response(
+                    Some(req.id),
+                    ErrorKind::ShuttingDown,
+                    "shutdown already in progress",
+                ),
+                effects,
+            );
+            return;
+        }
+        self.draining = Some(Some((conn, req.id)));
+        obs::counter_add("serve.shutdowns", 1);
+        self.maybe_finish_drain(effects);
+    }
+
+    fn maybe_finish_drain(&mut self, effects: &mut Vec<Effect>) {
+        if self.shutdown_sent || !self.queue.is_empty() || !self.running.is_empty() {
+            return;
+        }
+        let Some(requester) = self.draining else { return };
+        self.shutdown_sent = true;
+        if let Some((conn, id)) = requester {
+            self.respond(
+                conn,
+                wire::response(id, vec![("drained", Json::Bool(true))]),
+                effects,
+            );
+        }
+        effects.push(Effect::ShutdownComplete);
+    }
+}
+
+/// Execute one transform window over a batch: resolve the model
+/// (cached or loaded from disk), validate each member, stack the valid
+/// members' columns into a single matrix, run one `U·(x − μ)` window,
+/// and split the sources back per member.
+fn transform_batch(
+    cached: Option<Arc<IcaModel>>,
+    model_path: Option<String>,
+    key: &str,
+    datas: Vec<DataSpec>,
+) -> JobResult {
+    let (model, loaded) = match cached {
+        Some(m) => (m, None),
+        None => match model_path.as_deref().map(IcaModel::load) {
+            Some(Ok(m)) => {
+                let arc = Arc::new(m);
+                (arc.clone(), Some(arc))
+            }
+            Some(Err(e)) => {
+                let msg = format!("loading model {key:?}: {e}");
+                return JobResult::Transform {
+                    loaded: None,
+                    outputs: datas
+                        .iter()
+                        .map(|_| Err(IcaError::invalid_model(msg.clone())))
+                        .collect(),
+                };
+            }
+            None => {
+                return JobResult::Transform {
+                    loaded: None,
+                    outputs: datas
+                        .iter()
+                        .map(|_| {
+                            Err(IcaError::invalid_model(format!(
+                                "model {key:?} was evicted before dispatch and has no path"
+                            )))
+                        })
+                        .collect(),
+                }
+            }
+        },
+    };
+    let nf = model.n_features();
+    let mut outputs: Vec<Option<Result<Mat, IcaError>>> = Vec::new();
+    let mut valid: Vec<(usize, Mat)> = Vec::new();
+    for (i, spec) in datas.into_iter().enumerate() {
+        match load_data(spec) {
+            Err(e) => outputs.push(Some(Err(e))),
+            Ok(m) => {
+                if m.rows() != nf {
+                    outputs.push(Some(Err(IcaError::DimensionMismatch {
+                        what: "transform input".into(),
+                        expected: (nf, m.cols()),
+                        got: (m.rows(), m.cols()),
+                    })));
+                } else if !m.as_slice().iter().all(|v| v.is_finite()) {
+                    outputs.push(Some(Err(IcaError::NonFinite {
+                        what: "transform input".into(),
+                    })));
+                } else {
+                    outputs.push(None);
+                    valid.push((i, m));
+                }
+            }
+        }
+    }
+    if !valid.is_empty() {
+        let total: usize = valid.iter().map(|(_, m)| m.cols()).sum();
+        let mut big = Mat::zeros(nf, total);
+        let mut off = 0usize;
+        for (_, m) in &valid {
+            let w = m.cols();
+            for r in 0..nf {
+                big.row_mut(r)[off..off.saturating_add(w)].copy_from_slice(m.row(r));
+            }
+            off += w;
+        }
+        match model.transform(&big) {
+            Ok(y) => {
+                let nc = y.rows();
+                let mut off = 0usize;
+                for (i, m) in &valid {
+                    let w = m.cols();
+                    let mut part = Mat::zeros(nc, w);
+                    for r in 0..nc {
+                        part.row_mut(r)
+                            .copy_from_slice(&y.row(r)[off..off.saturating_add(w)]);
+                    }
+                    off += w;
+                    if let Some(slot) = outputs.get_mut(*i) {
+                        *slot = Some(Ok(part));
+                    }
+                }
+            }
+            Err(e) => {
+                let msg = format!("batched transform failed: {e}");
+                for (i, _) in &valid {
+                    if let Some(slot) = outputs.get_mut(*i) {
+                        *slot = Some(Err(IcaError::invalid_input(msg.clone())));
+                    }
+                }
+            }
+        }
+    }
+    JobResult::Transform {
+        loaded,
+        outputs: outputs
+            .into_iter()
+            .map(|o| {
+                o.unwrap_or_else(|| {
+                    Err(IcaError::invalid_input("internal: unassigned batch member"))
+                })
+            })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, op: &str, params: &str) -> Vec<u8> {
+        format!(
+            "{{\"schema\":\"fica.wire/v1\",\"id\":{id},\"op\":\"{op}\",\"params\":{params}}}"
+        )
+        .into_bytes()
+    }
+
+    fn texts(effects: &[Effect]) -> Vec<String> {
+        effects
+            .iter()
+            .filter_map(|e| match e {
+                Effect::Respond(_, p) => Some(String::from_utf8_lossy(p).into_owned()),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn ping_answers_and_unknown_op_is_typed() {
+        let mut core = Core::new(CoreConfig::default());
+        core.handle(Event::Connected(1));
+        let fx = core.handle(Event::Frame(1, req(1, "ping", "{}")));
+        assert!(texts(&fx)[0].contains("\"pong\":true"));
+        let fx = core.handle(Event::Frame(1, req(2, "frobnicate", "{}")));
+        assert!(texts(&fx)[0].contains("unknown-op"));
+    }
+
+    #[test]
+    fn queue_bound_rejects_with_queue_full() {
+        let mut core = Core::new(CoreConfig {
+            queue_bound: 1,
+            parallelism: 1,
+            cache_capacity: 2,
+        });
+        core.handle(Event::Connected(1));
+        let data = "{\"data\":{\"rows\":2,\"cols\":2,\"data\":[1,2,3,4]}}";
+        // First fills the one scheduler slot, second fills the queue,
+        // third is rejected.
+        core.handle(Event::Frame(1, req(1, "fit", data)));
+        core.handle(Event::Frame(1, req(2, "fit", data)));
+        let fx = core.handle(Event::Frame(1, req(3, "fit", data)));
+        assert!(texts(&fx)[0].contains("queue-full"));
+        let c = core.counters();
+        assert_eq!((c.submitted, c.rejected), (3, 1));
+    }
+
+    #[test]
+    fn responses_to_closed_connections_are_dropped() {
+        let mut core = Core::new(CoreConfig::default());
+        core.handle(Event::Connected(1));
+        core.handle(Event::Disconnected(1));
+        let fx = core.handle(Event::Frame(1, req(1, "ping", "{}")));
+        assert!(texts(&fx).is_empty());
+    }
+
+    #[test]
+    fn cache_eviction_skips_pinned_entries() {
+        let mut cache = ModelCache::new(1);
+        let m = Arc::new(test_model());
+        cache.insert("a", m.clone());
+        cache.pin("a");
+        cache.insert("b", m.clone());
+        // "a" is pinned, "b" is most recent: nothing evictable yet.
+        assert_eq!(cache.keys(), vec!["a".to_string(), "b".to_string()]);
+        cache.unpin("a");
+        assert_eq!(cache.keys(), vec!["b".to_string()]);
+    }
+
+    fn test_model() -> IcaModel {
+        let x = crate::signal::experiment_a(3, 400, 5).x;
+        Picard::new().max_iters(50).tol(1e-6).fit(&x).expect("fit test model")
+    }
+}

@@ -1,0 +1,33 @@
+//! `fica serve`: a resident ICA daemon.
+//!
+//! The daemon keeps the [`crate::backend::pool::WorkerPool`] warm and
+//! serves `fit` / `refit` / `transform` jobs over a length-prefixed
+//! line-JSON protocol (`fica.wire/v1`, [`wire::WIRE_SCHEMA`]) on a TCP
+//! or Unix-domain socket. The split is strict:
+//!
+//! * [`wire`] — frame codec and fail-closed request/response schema;
+//! * [`core`] — the deterministic state machine (queue, scheduler,
+//!   cancellation, drain, model cache) with **no I/O and no clocks in
+//!   its outputs**;
+//! * [`server`] — sockets and threads, mapping core effects onto real
+//!   connections;
+//! * [`client`] — the blocking client used by `fica client` and tests.
+//!
+//! **Locking policy:** `daemon/` holds *no locks at all*. The core owns
+//! every piece of mutable state on the event-loop thread, and the shell
+//! talks to it exclusively through `mpsc` channels; the only
+//! synchronization primitives are the channels themselves and the
+//! worker pool's own (declared) internals. This is why the
+//! `lock-hygiene` lint has nothing to declare in this tree, and why the
+//! deterministic harness in [`crate::testkit::harness`] can replay a
+//! scripted interleaving into a byte-identical transcript.
+
+pub mod client;
+pub mod core;
+pub mod server;
+pub mod wire;
+
+pub use self::client::Client;
+pub use self::core::{Core, CoreConfig, Effect, Event, JobResult, JobWork, ServeCounters};
+pub use self::server::{serve, BindAddr, BoundServer, ServeOptions, Stream};
+pub use self::wire::{ErrorKind, Request, MAX_FRAME, WIRE_SCHEMA};

@@ -1,0 +1,444 @@
+//! The daemon's I/O shell: sockets, threads, and the event loop that
+//! drives one [`Core`].
+//!
+//! The shell is intentionally dumb. Reader threads turn socket bytes
+//! into [`Event`]s, the single event-loop thread feeds them to the
+//! core, and the core's [`Effect`]s are executed right there: responses
+//! go to per-connection writer threads, jobs go to the shared
+//! [`WorkerPool`], and `ShutdownComplete` tears everything down in
+//! order (writers → listener → readers → workers) so a drained daemon
+//! leaves zero threads and, for Unix sockets, no stale socket file.
+//!
+//! No locks anywhere — all shared state is owned by the event loop and
+//! reached via `mpsc` channels (see the `daemon/` module docs).
+
+use super::core::{Core, CoreConfig, Effect, Event, JobId, JobWork};
+use super::wire;
+use crate::backend::pool::WorkerPool;
+use crate::error::IcaError;
+use crate::obs;
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+#[cfg(unix)]
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+
+/// Where the daemon listens. Specs are explicit and fail closed:
+/// `tcp:HOST:PORT` or `unix:PATH` — nothing is inferred.
+#[derive(Clone, Debug)]
+pub enum BindAddr {
+    /// A TCP listen address, e.g. `127.0.0.1:9477`.
+    Tcp(String),
+    /// A Unix-domain socket path.
+    #[cfg(unix)]
+    Unix(PathBuf),
+}
+
+impl BindAddr {
+    /// Parse a `tcp:HOST:PORT` / `unix:PATH` spec.
+    pub fn parse(spec: &str) -> Result<BindAddr, IcaError> {
+        if let Some(rest) = spec.strip_prefix("tcp:") {
+            if rest.is_empty() {
+                return Err(IcaError::invalid_input("tcp: spec needs HOST:PORT"));
+            }
+            return Ok(BindAddr::Tcp(rest.to_string()));
+        }
+        #[cfg(unix)]
+        if let Some(rest) = spec.strip_prefix("unix:") {
+            if rest.is_empty() {
+                return Err(IcaError::invalid_input("unix: spec needs a path"));
+            }
+            return Ok(BindAddr::Unix(PathBuf::from(rest)));
+        }
+        Err(IcaError::invalid_input(format!(
+            "listen spec {spec:?} must start with \"tcp:\" or \"unix:\""
+        )))
+    }
+}
+
+/// A connected client stream, TCP or Unix.
+pub enum Stream {
+    /// TCP transport.
+    Tcp(TcpStream),
+    /// Unix-domain transport.
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Stream {
+    /// Clone the underlying handle (shared file description).
+    pub fn try_clone(&self) -> std::io::Result<Stream> {
+        Ok(match self {
+            Stream::Tcp(s) => Stream::Tcp(s.try_clone()?),
+            #[cfg(unix)]
+            Stream::Unix(s) => Stream::Unix(s.try_clone()?),
+        })
+    }
+
+    /// Shut down both directions, unblocking any reader.
+    pub fn shutdown_both(&self) {
+        let _ = match self {
+            Stream::Tcp(s) => s.shutdown(std::net::Shutdown::Both),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.shutdown(std::net::Shutdown::Both),
+        };
+    }
+
+    /// Connect to a daemon at the given spec (client side).
+    pub fn connect(addr: &BindAddr) -> std::io::Result<Stream> {
+        Ok(match addr {
+            BindAddr::Tcp(host) => Stream::Tcp(TcpStream::connect(host.as_str())?),
+            #[cfg(unix)]
+            BindAddr::Unix(path) => Stream::Unix(UnixStream::connect(path)?),
+        })
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener, PathBuf),
+}
+
+impl Listener {
+    fn accept(&self) -> std::io::Result<Stream> {
+        Ok(match self {
+            Listener::Tcp(l) => Stream::Tcp(l.accept()?.0),
+            #[cfg(unix)]
+            Listener::Unix(l, _) => Stream::Unix(l.accept()?.0),
+        })
+    }
+}
+
+/// Options for [`serve`].
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Listen spec (see [`BindAddr::parse`]).
+    pub addr: BindAddr,
+    /// Worker threads in the shared pool.
+    pub workers: usize,
+    /// Core sizing (queue bound, scheduler parallelism, cache capacity).
+    pub core: CoreConfig,
+}
+
+/// A bound, not-yet-serving daemon. Splitting bind from [`run`] lets
+/// callers (the CLI, the CI smoke test) learn the resolved address —
+/// and print a readiness line — before the accept loop starts.
+///
+/// [`run`]: BoundServer::run
+pub struct BoundServer {
+    listener: Listener,
+    addr_str: String,
+    workers: usize,
+    core_cfg: CoreConfig,
+}
+
+impl BoundServer {
+    /// Bind the listen socket. For Unix sockets a stale socket file
+    /// from a crashed daemon is removed first.
+    pub fn bind(opts: &ServeOptions) -> Result<BoundServer, IcaError> {
+        let io = |what: &str, e: std::io::Error| IcaError::io(what, e);
+        let (listener, addr_str) = match &opts.addr {
+            BindAddr::Tcp(host) => {
+                let l = TcpListener::bind(host.as_str())
+                    .map_err(|e| io(&format!("bind tcp:{host}"), e))?;
+                let local = l
+                    .local_addr()
+                    .map_err(|e| io("local_addr", e))?;
+                (Listener::Tcp(l), format!("tcp:{local}"))
+            }
+            #[cfg(unix)]
+            BindAddr::Unix(path) => {
+                if path.exists() {
+                    std::fs::remove_file(path)
+                        .map_err(|e| io(&format!("remove stale socket {}", path.display()), e))?;
+                }
+                let l = UnixListener::bind(path)
+                    .map_err(|e| io(&format!("bind unix:{}", path.display()), e))?;
+                (
+                    Listener::Unix(l, path.clone()),
+                    format!("unix:{}", path.display()),
+                )
+            }
+        };
+        Ok(BoundServer {
+            listener,
+            addr_str,
+            workers: opts.workers,
+            core_cfg: opts.core,
+        })
+    }
+
+    /// The resolved listen address as a reconnectable spec
+    /// (`tcp:IP:PORT` / `unix:PATH`). For `tcp:HOST:0` this carries the
+    /// kernel-assigned port.
+    pub fn local_addr(&self) -> &str {
+        &self.addr_str
+    }
+
+    /// Serve until a `shutdown` request drains the core. Consumes the
+    /// server; on return all threads are joined and (for Unix) the
+    /// socket file is removed.
+    pub fn run(self) -> Result<(), IcaError> {
+        let BoundServer { listener, addr_str, workers, core_cfg } = self;
+        let pool = WorkerPool::new(workers);
+        let mut core = Core::new(core_cfg);
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let stop = Arc::new(AtomicBool::new(false));
+
+        // Accept loop: assign connection ids, hand streams to the
+        // event loop. Checks the stop flag after each accept so the
+        // wake-up connection made during shutdown terminates it.
+        let accept_tx = tx.clone();
+        let accept_stop = stop.clone();
+        let accept = thread::spawn(move || {
+            let mut next_conn: u64 = 0;
+            loop {
+                match listener.accept() {
+                    Ok(stream) => {
+                        if accept_stop.load(Ordering::Acquire) {
+                            return listener;
+                        }
+                        next_conn += 1;
+                        if accept_tx.send(Msg::Accepted(next_conn, stream)).is_err() {
+                            return listener;
+                        }
+                    }
+                    Err(_) => {
+                        if accept_stop.load(Ordering::Acquire) {
+                            return listener;
+                        }
+                    }
+                }
+            }
+        });
+
+        let mut conns: BTreeMap<u64, ConnHandles> = BTreeMap::new();
+        let mut slot: usize = 0;
+        let mut done = false;
+        while !done {
+            let Ok(msg) = rx.recv() else { break };
+            match msg {
+                Msg::Accepted(conn, stream) => {
+                    match spawn_conn(conn, stream, &tx) {
+                        Ok(handles) => {
+                            conns.insert(conn, handles);
+                            for fx in core.handle(Event::Connected(conn)) {
+                                done |= execute(fx, &mut conns, &pool, &tx, &mut slot);
+                            }
+                        }
+                        Err(_) => {
+                            obs::counter_add("serve.conn_spawn_failures", 1);
+                        }
+                    }
+                }
+                Msg::Ev(ev) => {
+                    if let Event::Disconnected(conn) = &ev {
+                        if let Some(h) = conns.remove(conn) {
+                            h.finish();
+                        }
+                    }
+                    for fx in core.handle(ev) {
+                        done |= execute(fx, &mut conns, &pool, &tx, &mut slot);
+                    }
+                }
+            }
+        }
+
+        // Teardown: close writers (their exit shuts the sockets down,
+        // unblocking readers), stop the accept loop with a self-
+        // connect, join everything, then drop the pool (joins its
+        // workers).
+        stop.store(true, Ordering::Release);
+        for (_, h) in std::mem::take(&mut conns) {
+            h.finish();
+        }
+        if let Ok(addr) = BindAddr::parse(&addr_str) {
+            drop(Stream::connect(&addr));
+        }
+        let listener = match accept.join() {
+            Ok(l) => Some(l),
+            Err(_) => None,
+        };
+        drop(rx);
+        drop(pool);
+        #[cfg(unix)]
+        if let Some(Listener::Unix(_, path)) = &listener {
+            let _ = std::fs::remove_file(path);
+        }
+        drop(listener);
+        Ok(())
+    }
+}
+
+/// Bind and run a daemon in one call.
+pub fn serve(opts: &ServeOptions) -> Result<(), IcaError> {
+    BoundServer::bind(opts)?.run()
+}
+
+enum Msg {
+    Accepted(u64, Stream),
+    Ev(Event),
+}
+
+struct ConnHandles {
+    writer_tx: mpsc::Sender<Vec<u8>>,
+    reader: thread::JoinHandle<()>,
+    writer: thread::JoinHandle<()>,
+}
+
+impl ConnHandles {
+    /// Close the writer channel and join both threads. The writer
+    /// shuts the socket down on exit, which unblocks the reader.
+    fn finish(self) {
+        let ConnHandles { writer_tx, reader, writer } = self;
+        drop(writer_tx);
+        let _ = writer.join();
+        let _ = reader.join();
+    }
+}
+
+fn spawn_conn(
+    conn: u64,
+    stream: Stream,
+    tx: &mpsc::Sender<Msg>,
+) -> std::io::Result<ConnHandles> {
+    let read_half = stream.try_clone()?;
+    let (writer_tx, writer_rx) = mpsc::channel::<Vec<u8>>();
+
+    let ev_tx = tx.clone();
+    let reader = thread::spawn(move || {
+        let mut r = read_half;
+        loop {
+            match wire::read_frame(&mut r) {
+                Ok(Some(payload)) => {
+                    if ev_tx.send(Msg::Ev(Event::Frame(conn, payload))).is_err() {
+                        return;
+                    }
+                }
+                Ok(None) => {
+                    let _ = ev_tx.send(Msg::Ev(Event::Disconnected(conn)));
+                    return;
+                }
+                Err(e) => {
+                    let _ = ev_tx.send(Msg::Ev(Event::FrameError(conn, e)));
+                    return;
+                }
+            }
+        }
+    });
+
+    let writer = thread::spawn(move || {
+        let mut w = stream;
+        while let Ok(payload) = writer_rx.recv() {
+            let Ok(frame) = wire::encode_frame(&payload) else { break };
+            if w.write_all(&frame).is_err() || w.flush().is_err() {
+                break;
+            }
+        }
+        // Unblocks the reader thread whether the channel closed or the
+        // peer went away mid-write.
+        w.shutdown_both();
+    });
+
+    Ok(ConnHandles { writer_tx, reader, writer })
+}
+
+/// Execute one core effect; returns true when the loop should exit.
+fn execute(
+    fx: Effect,
+    conns: &mut BTreeMap<u64, ConnHandles>,
+    pool: &WorkerPool,
+    tx: &mpsc::Sender<Msg>,
+    slot: &mut usize,
+) -> bool {
+    match fx {
+        Effect::Respond(conn, payload) => {
+            if let Some(h) = conns.get(&conn) {
+                let _ = h.writer_tx.send(payload);
+            }
+            false
+        }
+        Effect::Run(job, work) => {
+            run_job(job, work, pool, tx, slot);
+            false
+        }
+        Effect::Close(conn) => {
+            if let Some(h) = conns.remove(&conn) {
+                h.finish();
+            }
+            false
+        }
+        Effect::ShutdownComplete => true,
+    }
+}
+
+fn run_job(
+    job: JobId,
+    work: JobWork,
+    pool: &WorkerPool,
+    tx: &mpsc::Sender<Msg>,
+    slot: &mut usize,
+) {
+    let ev_tx = tx.clone();
+    // Round-robin over worker slots; each slot is a FIFO lane.
+    let s = *slot % pool.workers().max(1);
+    *slot = slot.wrapping_add(1);
+    // The Ticket is dropped deliberately: the result comes back through
+    // the event channel, and WorkerPool tolerates dropped tickets.
+    drop(pool.submit(s, move || {
+        let result = work.execute();
+        let _ = ev_tx.send(Msg::Ev(Event::JobDone(job, result)));
+    }));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bind_addr_parse_fails_closed() {
+        assert!(BindAddr::parse("tcp:127.0.0.1:0").is_ok());
+        assert!(BindAddr::parse("tcp:").is_err());
+        assert!(BindAddr::parse("127.0.0.1:9000").is_err());
+        assert!(BindAddr::parse("http:foo").is_err());
+        #[cfg(unix)]
+        {
+            assert!(BindAddr::parse("unix:/tmp/x.sock").is_ok());
+            assert!(BindAddr::parse("unix:").is_err());
+        }
+    }
+}

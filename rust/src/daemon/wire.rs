@@ -1,0 +1,378 @@
+//! `fica.wire/v1`: the daemon's length-prefixed line-JSON frame codec.
+//!
+//! A frame is a 4-byte little-endian `u32` length prefix followed by
+//! exactly that many bytes of UTF-8 JSON (one value, no newline
+//! required). Like every other decoder in the crate the codec fails
+//! closed: an oversized or truncated prefix, a non-UTF-8 body,
+//! malformed JSON, a wrong/missing schema tag, or a missing field is a
+//! typed error — never a guess. Length-prefix arithmetic goes through
+//! `checked_add`/`checked_mul` (the `unchecked-arith` lint scopes
+//! `daemon/`), so no frame size can wrap.
+//!
+//! Field-by-field schema: `docs/WIRE_SCHEMA.md` (cross-checked by the
+//! `schema-drift` lint rule).
+//!
+//! Three frame shapes share the tag:
+//!
+//! - **request** `{"schema","id","op","params"?}` — client → server;
+//! - **response** `{"schema","id","ok",...}` — answers the request
+//!   with the same `id`;
+//! - **job event** `{"schema","job","ok","op",...}` — a completion
+//!   pushed when a queued job finishes (no `id`: it answers a job, not
+//!   a request).
+
+use crate::error::IcaError;
+use crate::util::Json;
+use std::collections::BTreeMap;
+use std::io::Read;
+
+/// Schema tag carried by every `fica.wire/v1` frame, request and
+/// response alike. Decoders reject any other tag.
+pub const WIRE_SCHEMA: &str = "fica.wire/v1";
+
+/// Hard cap on one frame's payload size (16 MiB). A length prefix
+/// above this is refused before any allocation happens.
+pub const MAX_FRAME: usize = 1 << 24;
+
+/// Wrap `payload` in a length-prefixed frame, refusing payloads over
+/// [`MAX_FRAME`] with a typed error.
+pub fn encode_frame(payload: &[u8]) -> Result<Vec<u8>, IcaError> {
+    if payload.len() > MAX_FRAME {
+        return Err(IcaError::invalid_wire(format!(
+            "frame payload of {} bytes exceeds the {MAX_FRAME}-byte cap",
+            payload.len()
+        )));
+    }
+    let prefix = u32::try_from(payload.len()).map_err(|_| {
+        IcaError::invalid_wire("frame payload does not fit a u32 length prefix")
+    })?;
+    let total = 4usize
+        .checked_add(payload.len())
+        .ok_or_else(|| IcaError::invalid_wire("frame length overflows usize"))?;
+    let mut frame = Vec::with_capacity(total);
+    frame.extend_from_slice(&prefix.to_le_bytes());
+    frame.extend_from_slice(payload);
+    Ok(frame)
+}
+
+/// Read one frame's payload from `r`.
+///
+/// Returns `Ok(None)` on a clean end-of-stream (EOF exactly at a frame
+/// boundary). Any other irregularity — EOF inside the prefix or body,
+/// an oversized length, an I/O error — is an `Err`, after which the
+/// stream cannot be resynchronized and must be closed.
+pub fn read_frame(r: &mut dyn Read) -> Result<Option<Vec<u8>>, IcaError> {
+    let mut prefix = [0u8; 4];
+    let mut have = 0usize;
+    while have < prefix.len() {
+        match r.read(&mut prefix[have..]) {
+            Ok(0) => {
+                if have == 0 {
+                    return Ok(None);
+                }
+                return Err(IcaError::invalid_wire(format!(
+                    "truncated length prefix: got {have} of 4 bytes"
+                )));
+            }
+            Ok(got) => have += got,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(IcaError::io("wire frame length prefix", e)),
+        }
+    }
+    let body_len = u32::from_le_bytes(prefix) as usize;
+    if body_len > MAX_FRAME {
+        return Err(IcaError::invalid_wire(format!(
+            "oversized frame: {body_len} bytes exceeds the {MAX_FRAME}-byte cap"
+        )));
+    }
+    let mut body = vec![0u8; body_len];
+    let mut have = 0usize;
+    while have < body_len {
+        match r.read(&mut body[have..]) {
+            Ok(0) => {
+                return Err(IcaError::invalid_wire(format!(
+                    "truncated frame body: got {have} of {body_len} bytes"
+                )))
+            }
+            Ok(got) => have += got,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(IcaError::io("wire frame body", e)),
+        }
+    }
+    Ok(Some(body))
+}
+
+/// A decoded request frame.
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// Client-chosen request id, echoed verbatim in the response.
+    pub id: u64,
+    /// Operation name (`ping`, `fit`, `refit`, `transform`, `cancel`,
+    /// `stats`, `shutdown`).
+    pub op: String,
+    /// Operation parameters; an empty object when absent.
+    pub params: Json,
+}
+
+/// Why a request frame failed to decode. `id` is populated when the
+/// frame carried a recoverable id, so the error response can still be
+/// correlated.
+#[derive(Debug)]
+pub struct DecodeError {
+    /// The request id, when one could be recovered from the bad frame.
+    pub id: Option<u64>,
+    /// Human-readable description of the first decode failure.
+    pub message: String,
+}
+
+/// Decode a request payload, fail-closed.
+pub fn decode_request(bytes: &[u8]) -> Result<Request, DecodeError> {
+    let anon = |message: String| DecodeError { id: None, message };
+    let text = std::str::from_utf8(bytes)
+        .map_err(|_| anon("frame payload is not valid UTF-8".into()))?;
+    let v = Json::parse(text)
+        .map_err(|e| anon(format!("frame payload is not valid JSON: {e}")))?;
+    if !matches!(v, Json::Obj(_)) {
+        return Err(anon("frame payload must be a JSON object".into()));
+    }
+    // Recover the id first so later failures can still echo it.
+    let id = v.get("id").and_then(Json::as_usize).map(|n| n as u64);
+    let err = |message: String| DecodeError { id, message };
+    match v.get("schema").and_then(Json::as_str) {
+        Some(WIRE_SCHEMA) => {}
+        Some(other) => {
+            return Err(err(format!(
+                "unsupported wire schema {other:?} (expected {WIRE_SCHEMA:?})"
+            )))
+        }
+        None => {
+            return Err(err(format!(
+                "missing \"schema\" (expected {WIRE_SCHEMA:?})"
+            )))
+        }
+    }
+    let id = id.ok_or_else(|| DecodeError {
+        id: None,
+        message: "missing or invalid \"id\" (expected a non-negative integer)".into(),
+    })?;
+    let err = |message: String| DecodeError { id: Some(id), message };
+    let op = v
+        .get("op")
+        .and_then(Json::as_str)
+        .ok_or_else(|| err("missing or invalid \"op\" (expected a string)".into()))?
+        .to_string();
+    let params = match v.get("params") {
+        None => Json::Obj(BTreeMap::new()),
+        Some(p @ Json::Obj(_)) => p.clone(),
+        Some(_) => return Err(err("\"params\" must be a JSON object".into())),
+    };
+    Ok(Request { id, op, params })
+}
+
+/// Typed error kinds carried by `ok:false` frames (the `error.kind`
+/// field). Stable strings — clients dispatch on them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// The frame itself was unusable (bad length prefix / truncation);
+    /// the connection is closed after this error.
+    BadFrame,
+    /// The payload decoded but is not a valid request.
+    BadRequest,
+    /// The request's `op` is not one the daemon knows.
+    UnknownOp,
+    /// The bounded job queue is full; resubmit later.
+    QueueFull,
+    /// The daemon is draining for shutdown and refuses new jobs.
+    ShuttingDown,
+    /// `cancel` named a job id that is neither queued nor running.
+    UnknownJob,
+    /// `transform`/`refit` named a model that is not cached (and no
+    /// `model_path` was given to load it from).
+    UnknownModel,
+    /// The job was cancelled before completing.
+    Cancelled,
+    /// The job's inputs were rejected (shape/finiteness/parse errors).
+    InvalidInput,
+    /// The solve itself failed (singular matrices, runtime errors).
+    Solve,
+    /// A filesystem error while loading data or models.
+    Io,
+    /// The response the daemon built exceeds [`MAX_FRAME`].
+    ResponseTooLarge,
+}
+
+impl ErrorKind {
+    /// The stable wire string for this kind.
+    pub fn id(self) -> &'static str {
+        match self {
+            ErrorKind::BadFrame => "bad-frame",
+            ErrorKind::BadRequest => "bad-request",
+            ErrorKind::UnknownOp => "unknown-op",
+            ErrorKind::QueueFull => "queue-full",
+            ErrorKind::ShuttingDown => "shutting-down",
+            ErrorKind::UnknownJob => "unknown-job",
+            ErrorKind::UnknownModel => "unknown-model",
+            ErrorKind::Cancelled => "cancelled",
+            ErrorKind::InvalidInput => "invalid-input",
+            ErrorKind::Solve => "solve-error",
+            ErrorKind::Io => "io",
+            ErrorKind::ResponseTooLarge => "response-too-large",
+        }
+    }
+
+    /// Map a job-level [`IcaError`] onto its wire kind.
+    pub fn from_error(e: &IcaError) -> ErrorKind {
+        match e {
+            IcaError::Cancelled => ErrorKind::Cancelled,
+            IcaError::Io { .. } => ErrorKind::Io,
+            IcaError::SingularCovariance { .. }
+            | IcaError::SingularMatrix { .. }
+            | IcaError::Runtime { .. } => ErrorKind::Solve,
+            _ => ErrorKind::InvalidInput,
+        }
+    }
+}
+
+fn base(fields: Vec<(&'static str, Json)>) -> BTreeMap<String, Json> {
+    let mut m = BTreeMap::new();
+    m.insert("schema".to_string(), Json::Str(WIRE_SCHEMA.to_string()));
+    for (k, v) in fields {
+        m.insert(k.to_string(), v);
+    }
+    m
+}
+
+/// An `ok:true` response payload answering request `id`.
+pub fn response(id: u64, fields: Vec<(&'static str, Json)>) -> Vec<u8> {
+    let mut m = base(fields);
+    m.insert("id".to_string(), Json::Num(id as f64));
+    m.insert("ok".to_string(), Json::Bool(true));
+    Json::Obj(m).to_string_compact().into_bytes()
+}
+
+/// An `ok:false` response payload; `id: None` renders `"id":null` (the
+/// request was too malformed to recover an id).
+pub fn error_response(id: Option<u64>, kind: ErrorKind, message: &str) -> Vec<u8> {
+    let mut m = base(vec![("error", error_obj(kind, message))]);
+    m.insert(
+        "id".to_string(),
+        id.map(|n| Json::Num(n as f64)).unwrap_or(Json::Null),
+    );
+    m.insert("ok".to_string(), Json::Bool(false));
+    Json::Obj(m).to_string_compact().into_bytes()
+}
+
+/// An `ok:true` job-completion event payload for `job`.
+pub fn job_event(job: u64, op: &'static str, fields: Vec<(&'static str, Json)>) -> Vec<u8> {
+    let mut m = base(fields);
+    m.insert("job".to_string(), Json::Num(job as f64));
+    m.insert("ok".to_string(), Json::Bool(true));
+    m.insert("op".to_string(), Json::Str(op.to_string()));
+    Json::Obj(m).to_string_compact().into_bytes()
+}
+
+/// An `ok:false` job-completion event payload for `job`.
+pub fn job_error(job: u64, op: &'static str, kind: ErrorKind, message: &str) -> Vec<u8> {
+    let mut m = base(vec![("error", error_obj(kind, message))]);
+    m.insert("job".to_string(), Json::Num(job as f64));
+    m.insert("ok".to_string(), Json::Bool(false));
+    m.insert("op".to_string(), Json::Str(op.to_string()));
+    Json::Obj(m).to_string_compact().into_bytes()
+}
+
+fn error_obj(kind: ErrorKind, message: &str) -> Json {
+    let mut e = BTreeMap::new();
+    e.insert("kind".to_string(), Json::Str(kind.id().to_string()));
+    e.insert("message".to_string(), Json::Str(message.to_string()));
+    Json::Obj(e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn frame_of(text: &str) -> Vec<u8> {
+        encode_frame(text.as_bytes()).unwrap()
+    }
+
+    #[test]
+    fn roundtrip() {
+        let f = frame_of("{\"x\":1}");
+        let mut c = Cursor::new(f);
+        let body = read_frame(&mut c).unwrap().unwrap();
+        assert_eq!(body, b"{\"x\":1}");
+        assert!(read_frame(&mut c).unwrap().is_none(), "clean EOF after one frame");
+    }
+
+    #[test]
+    fn truncated_prefix_and_body_are_typed_errors() {
+        let mut c = Cursor::new(vec![1u8, 0]);
+        let e = read_frame(&mut c).unwrap_err().to_string();
+        assert!(e.contains("truncated length prefix"), "{e}");
+
+        let mut f = frame_of("{\"x\":1}");
+        f.truncate(6);
+        let mut c = Cursor::new(f);
+        let e = read_frame(&mut c).unwrap_err().to_string();
+        assert!(e.contains("truncated frame body"), "{e}");
+    }
+
+    #[test]
+    fn oversized_prefix_is_refused_before_allocation() {
+        let mut c = Cursor::new(u32::MAX.to_le_bytes().to_vec());
+        let e = read_frame(&mut c).unwrap_err().to_string();
+        assert!(e.contains("oversized frame"), "{e}");
+    }
+
+    #[test]
+    fn decode_rejects_every_malformation_with_a_message() {
+        for (payload, needle) in [
+            ("hello", "not valid JSON"),
+            ("[1,2]", "must be a JSON object"),
+            ("{\"id\":1}", "missing \"schema\""),
+            ("{\"schema\":\"fica.wire/v9\",\"id\":1}", "unsupported wire schema"),
+            ("{\"schema\":\"fica.wire/v1\",\"op\":\"ping\"}", "invalid \"id\""),
+            ("{\"schema\":\"fica.wire/v1\",\"id\":-2,\"op\":\"ping\"}", "invalid \"id\""),
+            ("{\"schema\":\"fica.wire/v1\",\"id\":1}", "invalid \"op\""),
+            ("{\"schema\":\"fica.wire/v1\",\"id\":1,\"op\":\"f\",\"params\":3}", "\"params\""),
+        ] {
+            let e = decode_request(payload.as_bytes()).unwrap_err();
+            assert!(e.message.contains(needle), "{payload}: {}", e.message);
+        }
+        assert!(decode_request(&[0xff, 0xfe]).unwrap_err().message.contains("UTF-8"));
+    }
+
+    #[test]
+    fn decode_recovers_id_for_correlatable_errors() {
+        let e = decode_request(b"{\"schema\":\"fica.wire/v1\",\"id\":7}").unwrap_err();
+        assert_eq!(e.id, Some(7));
+        let e = decode_request(b"{\"schema\":\"nope\",\"id\":7,\"op\":\"ping\"}").unwrap_err();
+        assert_eq!(e.id, Some(7));
+    }
+
+    #[test]
+    fn response_payloads_are_deterministic_sorted_json() {
+        let r = response(3, vec![("pong", Json::Bool(true))]);
+        assert_eq!(
+            String::from_utf8(r).unwrap(),
+            "{\"id\":3,\"ok\":true,\"pong\":true,\"schema\":\"fica.wire/v1\"}"
+        );
+        let r = error_response(None, ErrorKind::BadRequest, "nope");
+        assert_eq!(
+            String::from_utf8(r).unwrap(),
+            "{\"error\":{\"kind\":\"bad-request\",\"message\":\"nope\"},\
+             \"id\":null,\"ok\":false,\"schema\":\"fica.wire/v1\"}"
+        );
+    }
+
+    #[test]
+    fn request_roundtrips_through_decode() {
+        let req = decode_request(
+            b"{\"schema\":\"fica.wire/v1\",\"id\":4,\"op\":\"ping\",\"params\":{}}",
+        )
+        .unwrap();
+        assert_eq!(req.id, 4);
+        assert_eq!(req.op, "ping");
+    }
+}

@@ -56,6 +56,13 @@ pub enum IcaError {
     },
     /// Runtime/backend failure (PJRT unavailable, missing artifacts, ...).
     Runtime { reason: String },
+    /// The solve was cancelled through a [`crate::ica::CancelToken`]
+    /// before it converged (checked once per iteration, so cancellation
+    /// is visible within one solver iteration).
+    Cancelled,
+    /// A `fica.wire/v1` frame failed fail-closed validation (bad length
+    /// prefix, malformed JSON, wrong schema tag, missing field).
+    InvalidWire { reason: String },
 }
 
 impl IcaError {
@@ -82,6 +89,11 @@ impl IcaError {
     /// Wrap an I/O error with the path/operation it hit.
     pub fn io(what: impl Into<String>, source: std::io::Error) -> Self {
         IcaError::Io { what: what.into(), source }
+    }
+
+    /// Shorthand for [`IcaError::InvalidWire`].
+    pub fn invalid_wire(reason: impl Into<String>) -> Self {
+        IcaError::InvalidWire { reason: reason.into() }
     }
 }
 
@@ -115,6 +127,8 @@ impl fmt::Display for IcaError {
             IcaError::InvalidTrace { reason } => write!(f, "invalid trace file: {reason}"),
             IcaError::Io { what, source } => write!(f, "io error ({what}): {source}"),
             IcaError::Runtime { reason } => write!(f, "runtime error: {reason}"),
+            IcaError::Cancelled => write!(f, "cancelled before convergence"),
+            IcaError::InvalidWire { reason } => write!(f, "invalid wire frame: {reason}"),
         }
     }
 }

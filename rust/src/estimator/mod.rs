@@ -24,7 +24,7 @@ use crate::backend::{
 use crate::data::{DataSource, MatSource, MomentSnapshot, StreamingStats, DEFAULT_CHUNK_COLS};
 use crate::error::IcaError;
 use crate::ica::{
-    try_solve_warm, Algorithm, HessianApprox, LbfgsMemory, SolverConfig, Trace,
+    try_solve_with, Algorithm, CancelToken, HessianApprox, LbfgsMemory, SolverConfig, Trace,
 };
 use crate::linalg::{matmul, Lu, Mat};
 use crate::preprocessing::{
@@ -116,6 +116,9 @@ pub struct Picard {
     /// Shared PJRT engine (compile cache) for xla/auto backends; a
     /// fresh engine is created per fit when unset.
     engine: Option<Rc<Engine>>,
+    /// Cooperative cancellation flag checked at iteration boundaries;
+    /// `None` means the fit runs to completion. See [`Picard::cancel_token`].
+    cancel: Option<CancelToken>,
 }
 
 impl Default for Picard {
@@ -143,6 +146,7 @@ impl fmt::Debug for Picard {
             .field("w0", &self.w0)
             .field("warm_start", &self.warm.is_some())
             .field("shared_engine", &self.engine.is_some())
+            .field("cancel_token", &self.cancel.is_some())
             .finish()
     }
 }
@@ -166,7 +170,17 @@ impl Picard {
             w0: None,
             warm: None,
             engine: None,
+            cancel: None,
         }
+    }
+
+    /// Attach a cooperative [`CancelToken`]: the solve checks it at every
+    /// iteration boundary and fails with [`IcaError::Cancelled`] once it
+    /// is set, leaving no partial model behind. Clone the token before
+    /// handing it in to keep a handle for cancelling from another thread.
+    pub fn cancel_token(mut self, token: CancelToken) -> Self {
+        self.cancel = Some(token);
+        self
     }
 
     /// Which of the paper's algorithms drives the solve.
@@ -564,7 +578,7 @@ impl Picard {
                 solve_span.field_str("backend", backend_name);
                 solve_span.field_u64("n", n as u64);
             }
-            try_solve_warm(backend.as_mut(), &w0, &cfg, warm_memory)?
+            try_solve_with(backend.as_mut(), &w0, &cfg, warm_memory, self.cancel.as_ref())?
         };
         let final_grad_inf =
             result.trace.last().map(|r| r.grad_inf).unwrap_or(f64::NAN);

@@ -12,10 +12,10 @@ pub mod solver;
 pub use amari::amari_distance;
 pub use hessian::{BlockDiagHessian, HessianApprox};
 pub use lbfgs::LbfgsMemory;
-pub use monitor::{DirectionKind, IterRecord, Trace};
+pub use monitor::{CancelToken, DirectionKind, IterRecord, Trace};
 #[allow(deprecated)]
 pub use solver::solve;
 pub use solver::{
-    full_loss, relative_update, try_solve, try_solve_warm, Algorithm, InfomaxConfig, SolveResult,
-    SolverConfig,
+    full_loss, relative_update, try_solve, try_solve_warm, try_solve_with, Algorithm,
+    InfomaxConfig, SolveResult, SolverConfig,
 };

@@ -9,7 +9,37 @@
 
 // fica-lint: allow-file(nondeterminism) — wall-clock is this module's whole purpose: the paper's time-axis figures and `max_time` stopping need it. Time never feeds the arithmetic, only the stopping rule and the recorded curves.
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
+
+/// A cooperative cancellation flag shared between a solve and whoever
+/// wants to stop it (the daemon's cancel op, a ctrl-c handler, a test).
+///
+/// The solver checks the token once per iteration, at the top of the
+/// loop, and returns [`crate::error::IcaError::Cancelled`] — so a
+/// cancellation becomes visible within one iteration's worth of work
+/// and never leaves the unmixing matrix half-updated. Cancellation is
+/// sticky: once set the token stays cancelled.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    /// A fresh, not-yet-cancelled token.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Request cancellation (idempotent, callable from any thread).
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Release);
+    }
+
+    /// Whether cancellation has been requested.
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Acquire)
+    }
+}
 
 /// A stopwatch that can be paused while "free" work (oracle line search,
 /// a-posteriori diagnostics) runs.

@@ -9,7 +9,7 @@
 use super::hessian::{BlockDiagHessian, HessianApprox};
 use super::lbfgs::{LbfgsMemory, Seed};
 use super::linesearch;
-use super::monitor::{DirectionKind, IterRecord, Stopwatch, Trace};
+use super::monitor::{CancelToken, DirectionKind, IterRecord, Stopwatch, Trace};
 use crate::backend::{ComputeBackend, StatsLevel};
 use crate::error::IcaError;
 use crate::linalg::{matmul, Lu, Mat};
@@ -262,6 +262,23 @@ pub fn try_solve_warm<B: ComputeBackend + ?Sized>(
     cfg: &SolverConfig,
     warm_memory: Option<LbfgsMemory>,
 ) -> Result<SolveResult, IcaError> {
+    try_solve_with(backend, w0, cfg, warm_memory, None)
+}
+
+/// [`try_solve_warm`] with a cooperative [`CancelToken`]: the solver
+/// checks the token once per iteration (full-batch) or pass (Infomax),
+/// at the top of the loop, and returns [`IcaError::Cancelled`] as soon
+/// as it observes a set flag — so cancellation is visible within one
+/// iteration's worth of work. A run that has already converged when the
+/// flag is set still returns its `Ok` result. `cancel: None` behaves
+/// exactly like [`try_solve_warm`].
+pub fn try_solve_with<B: ComputeBackend + ?Sized>(
+    backend: &mut B,
+    w0: &Mat,
+    cfg: &SolverConfig,
+    warm_memory: Option<LbfgsMemory>,
+    cancel: Option<&CancelToken>,
+) -> Result<SolveResult, IcaError> {
     let n = backend.n();
     if (w0.rows(), w0.cols()) != (n, n) {
         return Err(IcaError::DimensionMismatch {
@@ -274,10 +291,10 @@ pub fn try_solve_warm<B: ComputeBackend + ?Sized>(
         return Err(IcaError::NonFinite { what: "initial unmixing matrix w0".into() });
     }
     cfg.validate()?;
-    Ok(match cfg.algo {
-        Algorithm::Infomax(ic) => solve_infomax(backend, w0, cfg, ic),
-        _ => solve_full_batch(backend, w0, cfg, warm_memory),
-    })
+    match cfg.algo {
+        Algorithm::Infomax(ic) => solve_infomax(backend, w0, cfg, ic, cancel),
+        _ => solve_full_batch(backend, w0, cfg, warm_memory, cancel),
+    }
 }
 
 /// Run the configured algorithm from `w0`.
@@ -301,7 +318,8 @@ fn solve_full_batch<B: ComputeBackend + ?Sized>(
     w0: &Mat,
     cfg: &SolverConfig,
     warm_memory: Option<LbfgsMemory>,
-) -> SolveResult {
+    cancel: Option<&CancelToken>,
+) -> Result<SolveResult, IcaError> {
     let n = backend.n();
     debug_assert_eq!((w0.rows(), w0.cols()), (n, n));
 
@@ -348,6 +366,12 @@ fn solve_full_batch<B: ComputeBackend + ?Sized>(
         }
         if sw.elapsed() > cfg.max_time {
             break;
+        }
+        // Iteration-boundary cancellation: a converged run above still
+        // returns Ok; otherwise a set token surfaces before any further
+        // work, so W is never left half-updated.
+        if cancel.is_some_and(CancelToken::is_cancelled) {
+            return Err(IcaError::Cancelled);
         }
         iters = k + 1;
         // Per-iteration observability span: clock reads and counters
@@ -471,7 +495,7 @@ fn solve_full_batch<B: ComputeBackend + ?Sized>(
         }
     }
 
-    SolveResult { w, trace, converged, iters, gradient_fallbacks: fallbacks, directions, memory }
+    Ok(SolveResult { w, trace, converged, iters, gradient_fallbacks: fallbacks, directions, memory })
 }
 
 /// Infomax: stochastic relative-gradient descent over mini-batches with
@@ -483,7 +507,8 @@ fn solve_infomax<B: ComputeBackend + ?Sized>(
     w0: &Mat,
     cfg: &SolverConfig,
     ic: InfomaxConfig,
-) -> SolveResult {
+    cancel: Option<&CancelToken>,
+) -> Result<SolveResult, IcaError> {
     let n = backend.n();
     let t = backend.t();
     let batch = ((t as f64 * ic.batch_frac).round() as usize).clamp(1, t);
@@ -511,6 +536,10 @@ fn solve_infomax<B: ComputeBackend + ?Sized>(
     'outer: for pass in 0..cfg.max_iters {
         if converged || sw.elapsed() > cfg.max_time {
             break;
+        }
+        // Pass-boundary cancellation, mirroring solve_full_batch.
+        if cancel.is_some_and(CancelToken::is_cancelled) {
+            return Err(IcaError::Cancelled);
         }
         iters = pass + 1;
         // Random batch visit order approximates the random split of the
@@ -572,7 +601,7 @@ fn solve_infomax<B: ComputeBackend + ?Sized>(
         }
     }
 
-    SolveResult {
+    Ok(SolveResult {
         w,
         trace,
         converged,
@@ -580,7 +609,7 @@ fn solve_infomax<B: ComputeBackend + ?Sized>(
         gradient_fallbacks: 0,
         directions: Vec::new(),
         memory: None,
-    }
+    })
 }
 
 #[cfg(test)]

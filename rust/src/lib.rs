@@ -65,6 +65,11 @@
 //!   request path).
 //! - **Reproduction** ([`experiments`], [`coordinator`]): the paper's
 //!   figure pipeline, driven by the `fica experiment` subcommand.
+//! - **Serving** ([`daemon`]): `fica serve` keeps a resident process
+//!   with a warm worker pool and an LRU model cache, speaking the
+//!   length-prefixed `fica.wire/v1` protocol over TCP or Unix sockets;
+//!   fit/refit/transform jobs run through a bounded queue with per-job
+//!   cancellation and graceful drain on shutdown.
 //!
 //! The layer map, the numerical-equivalence contracts between execution
 //! paths, and the out-of-core data flow are documented in
@@ -74,6 +79,7 @@
 pub mod backend;
 pub mod cli;
 pub mod coordinator;
+pub mod daemon;
 pub mod data;
 pub mod error;
 pub mod estimator;

@@ -8,6 +8,7 @@ use faster_ica::backend::{ComputeBackend, NativeBackend};
 use faster_ica::bench::backends as bench_backends;
 use faster_ica::bench::{compare as bench_compare, defaults as bench_defaults};
 use faster_ica::cli::{Args, SolveFlags, USAGE};
+use faster_ica::daemon::{self, BindAddr, BoundServer, Client, CoreConfig, ServeOptions};
 use faster_ica::data::{convert_to, open_source, Format, DEFAULT_CHUNK_COLS};
 use faster_ica::estimator::IcaModel;
 use faster_ica::experiments::{self, ExperimentId};
@@ -27,9 +28,9 @@ fn main() {
             std::process::exit(2);
         }
     };
-    // Only `trace` takes positional operands; everywhere else a stray
-    // token is the hard error it has always been.
-    if args.command != "trace" {
+    // Only `trace` and `client` take positional operands; everywhere
+    // else a stray token is the hard error it has always been.
+    if !matches!(args.command.as_str(), "trace" | "client") {
         if let Some(tok) = args.positionals.first() {
             eprintln!("error: unexpected positional argument: {tok}\n\n{USAGE}");
             std::process::exit(2);
@@ -47,6 +48,8 @@ fn main() {
         "convert" => cmd_convert(&args),
         "bench" => cmd_bench(&args),
         "smoke" => cmd_smoke(&args),
+        "serve" => cmd_serve(&args),
+        "client" => cmd_client(&args),
         "trace" => cmd_trace(&args),
         "run" => {
             eprintln!(
@@ -513,8 +516,16 @@ fn cmd_bench(args: &Args) -> i32 {
         bench_defaults::REFIT_TOL, cfg.fit_sizes, cfg.refit_t, cfg.refit_append
     );
     let refits = bench_backends::run_refits(&cfg);
+    println!(
+        "bench: served transforms | N = {} | T = {} | clients {:?} x {} round trips",
+        cfg.fit_sizes.first().copied().unwrap_or(4),
+        cfg.serve_t,
+        cfg.serve_clients,
+        cfg.serve_transforms
+    );
+    let serves = faster_ica::bench::serve::run_serve(&cfg);
     drop(obs_guard);
-    let mut report = bench_backends::report_json(&cfg, &timings, &fits, &refits);
+    let mut report = bench_backends::report_json(&cfg, &timings, &fits, &refits, &serves);
     if let Json::Obj(ref mut m) = report {
         m.insert("metrics".to_string(), recorder.snapshot_json());
     }
@@ -575,6 +586,240 @@ fn cmd_smoke(args: &Args) -> i32 {
         }
     }
 }
+/// `fica serve --listen tcp:HOST:PORT|unix:PATH`: run the resident ICA
+/// daemon until a wire `shutdown` request drains it. The readiness line
+/// (`fica serve: listening on <addr>`) is printed after bind and before
+/// the accept loop, so scripts can wait on it.
+fn cmd_serve(args: &Args) -> i32 {
+    let listen = args.get_or("listen", "tcp:127.0.0.1:0");
+    let addr = match BindAddr::parse(&listen) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            return 2;
+        }
+    };
+    let parse_usize = |name: &str, default: usize| args.get_parse(name, default);
+    let (workers, queue_bound, parallel, cache) = match (
+        parse_usize("workers", 2),
+        parse_usize("queue-bound", 64),
+        parse_usize("parallel", 2),
+        parse_usize("cache", 8),
+    ) {
+        (Ok(w), Ok(q), Ok(p), Ok(c)) => (w, q, p, c),
+        (Err(e), ..) | (_, Err(e), ..) | (_, _, Err(e), _) | (.., Err(e)) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            return 2;
+        }
+    };
+    let trace_out = args.get("trace-out").map(str::to_string);
+    let trace_level = match args.get("trace-level") {
+        None => obs::TraceLevel::All,
+        Some(id) => match obs::TraceLevel::from_id(id) {
+            Some(l) => l,
+            None => {
+                eprintln!("error: unknown --trace-level {id} (span|metric|all)");
+                return 2;
+            }
+        },
+    };
+    let trace_sink = match &trace_out {
+        None => None,
+        Some(path) => match JsonlSink::create(path, trace_level) {
+            Ok(s) => Some(Arc::new(s)),
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        },
+    };
+    let trace_guard =
+        trace_sink.as_ref().map(|s| obs::install(Arc::clone(s) as Arc<dyn Recorder>));
+    let opts = ServeOptions {
+        addr,
+        workers,
+        core: CoreConfig { queue_bound, parallelism: parallel, cache_capacity: cache },
+    };
+    let bound = match BoundServer::bind(&opts) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    println!("fica serve: listening on {}", bound.local_addr());
+    let outcome = bound.run();
+    drop(trace_guard);
+    if let Some(sink) = &trace_sink {
+        if let Err(e) = sink.finish() {
+            eprintln!("error: {e}");
+            return 1;
+        }
+        if let Some(path) = &trace_out {
+            println!("trace written to {path}");
+        }
+    }
+    match outcome {
+        Ok(()) => {
+            println!("fica serve: drained, exiting");
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+/// `fica client --connect SPEC <verb>`: a thin shim over the wire
+/// protocol for scripts and CI. Prints every received payload as one
+/// compact JSON line; exits 0 on success, 1 on a typed error response.
+fn cmd_client(args: &Args) -> i32 {
+    let Some(connect) = args.get("connect") else {
+        eprintln!("--connect tcp:HOST:PORT|unix:PATH is required\n\n{USAGE}");
+        return 2;
+    };
+    let Some(verb) = args.positionals.first().map(String::as_str) else {
+        eprintln!(
+            "error: client needs a verb: \
+             fica client --connect SPEC <ping|stats|fit|refit|transform|cancel|shutdown>\n\n{USAGE}"
+        );
+        return 2;
+    };
+    if args.positionals.len() > 1 {
+        eprintln!("error: unexpected positional argument: {}\n\n{USAGE}", args.positionals[1]);
+        return 2;
+    }
+    let retries: usize = match args.get_parse("connect-retries", 0) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let mut attempt = 0;
+    let mut client = loop {
+        match Client::connect(connect) {
+            Ok(c) => break c,
+            Err(_) if attempt < retries => {
+                attempt += 1;
+                std::thread::sleep(std::time::Duration::from_millis(200));
+            }
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        }
+    };
+    match client_verb(&mut client, verb, args) {
+        Ok(ok) => {
+            if ok {
+                0
+            } else {
+                1
+            }
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+/// Print a payload and report whether it is a success (no `"error"`).
+fn client_print(v: &faster_ica::util::Json) -> bool {
+    println!("{}", v.to_string_compact());
+    !daemon::client::is_error(v)
+}
+
+/// Build the params object for fit/refit/transform from the flags this
+/// shim exposes. Number flags are validated client-side so typos fail
+/// fast with the flag name.
+fn client_params(args: &Args) -> Result<faster_ica::util::Json, String> {
+    let mut m = std::collections::BTreeMap::new();
+    if let Some(path) = args.get("input") {
+        m.insert("path".to_string(), Json::Str(path.to_string()));
+    }
+    if let Some(f) = args.get("format") {
+        m.insert("format".to_string(), Json::Str(f.to_string()));
+    }
+    if args.get("tol").is_some() {
+        m.insert("tol".to_string(), Json::Num(args.get_parse("tol", 0.0)?));
+    }
+    if args.get("max-iters").is_some() {
+        let k: usize = args.get_parse("max-iters", 0)?;
+        m.insert("max_iters".to_string(), Json::Num(k as f64));
+    }
+    if args.get("seed").is_some() {
+        let s: u64 = args.get_parse("seed", 0)?;
+        m.insert("seed".to_string(), Json::Num(s as f64));
+    }
+    if let Some(a) = args.get("algo") {
+        m.insert("algorithm".to_string(), Json::Str(a.to_string()));
+    }
+    if let Some(id) = args.get("model-id") {
+        m.insert("model_id".to_string(), Json::Str(id.to_string()));
+    }
+    if let Some(p) = args.get("model-path") {
+        m.insert("model_path".to_string(), Json::Str(p.to_string()));
+    }
+    if args.has("return-model") {
+        m.insert("return_model".to_string(), Json::Bool(true));
+    }
+    Ok(Json::Obj(m))
+}
+
+/// Run one client verb; `Ok(true)` means every payload was a success.
+fn client_verb(client: &mut Client, verb: &str, args: &Args) -> Result<bool, String> {
+    let empty = || Json::Obj(std::collections::BTreeMap::new());
+    let run = |client: &mut Client, op: &str, params: Json| {
+        client.request(op, params).map_err(|e| e.to_string())
+    };
+    match verb {
+        "ping" | "stats" | "shutdown" => {
+            let v = run(client, verb, empty())?;
+            Ok(client_print(&v))
+        }
+        "cancel" => {
+            let job: u64 = args
+                .get_parse("job", 0u64)
+                .and_then(|j| if args.get("job").is_some() { Ok(j) } else { Err("cancel requires --job <id>".into()) })?;
+            let mut m = std::collections::BTreeMap::new();
+            m.insert("job".to_string(), Json::Num(job as f64));
+            let v = run(client, "cancel", Json::Obj(m))?;
+            Ok(client_print(&v))
+        }
+        "fit" | "refit" | "transform" => {
+            let params = client_params(args)?;
+            let v = run(client, verb, params)?;
+            let ok = client_print(&v);
+            if !ok || args.has("detach") {
+                return Ok(ok);
+            }
+            let Some(job) = v.get("job").and_then(Json::as_usize) else {
+                return Ok(ok);
+            };
+            let done = client.wait_job(job as u64).map_err(|e| e.to_string())?;
+            let ok = client_print(&done);
+            if ok {
+                if let Some(out) = args.get("sources-out") {
+                    let Some(sources) = done.get("sources") else {
+                        return Err("completion event carries no \"sources\"".into());
+                    };
+                    let y = faster_ica::util::mat_from_json(sources, "served sources")
+                        .map_err(|e| e.to_string())?;
+                    write_matrix_json(out, &y).map_err(|e| e.to_string())?;
+                    println!("sources written to {out}");
+                }
+            }
+            Ok(ok)
+        }
+        other => Err(format!(
+            "unknown client verb: {other} (ping|stats|fit|refit|transform|cancel|shutdown)"
+        )),
+    }
+}
+
 /// `fica trace <summarize|validate> FILE.jsonl`: fail-closed reader over
 /// a `fica.trace/v1` stream. `validate` parses the whole file (schema,
 /// footer counts, per-line invariants) and reports what it holds;

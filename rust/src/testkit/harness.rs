@@ -1,0 +1,222 @@
+//! Deterministic concurrency harness for the daemon core.
+//!
+//! Replays a scripted interleaving of client actions against a
+//! [`Core`] and records everything the core does into a plain-text
+//! transcript. There are no sockets, no threads, no sleeps and no real
+//! clocks: "time" advances only when the script says so
+//! ([`Step::Advance`]), and dispatched jobs run only when the script
+//! completes them ([`Step::Complete`] / [`Step::CompleteNext`]). The
+//! same script therefore always produces a **byte-identical
+//! transcript** — which is the property the concurrency tests pin.
+//!
+//! Raw byte steps ([`Step::Raw`]) are pushed through the exact framing
+//! path the production reader uses ([`wire::read_frame`]), so the
+//! fail-closed fixture corpus in `rust/tests/fixtures/wire/` exercises
+//! the same code over a cursor that it would over a socket.
+
+use crate::daemon::core::{Core, CoreConfig, Effect, Event, JobId, JobWork};
+use crate::daemon::wire;
+use crate::util::Json;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::io::Cursor;
+
+/// One scripted client action at a fixed point in the interleaving.
+pub enum Step {
+    /// Client `conn` connects.
+    Connect(u64),
+    /// Client `conn` sends one well-framed request payload (a complete
+    /// request object; see [`request`]).
+    Send(u64, Json),
+    /// Client `conn`'s socket delivers these raw bytes; they are run
+    /// through the production frame reader and may produce several
+    /// frames, a framing error, or a clean EOF.
+    Raw(u64, Vec<u8>),
+    /// Client `conn` disconnects.
+    Disconnect(u64),
+    /// Run the held (dispatched) job with this id to completion, inline.
+    Complete(u64),
+    /// Run the lowest-id held job to completion, inline.
+    CompleteNext,
+    /// Advance the virtual clock by this many milliseconds (affects
+    /// only transcript timestamps — the core never reads it).
+    Advance(u64),
+}
+
+/// Build a complete `fica.wire/v1` request object for [`Step::Send`].
+pub fn request(id: u64, op: &str, params: Json) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("schema".to_string(), Json::Str(wire::WIRE_SCHEMA.to_string()));
+    m.insert("id".to_string(), Json::Num(id as f64));
+    m.insert("op".to_string(), Json::Str(op.to_string()));
+    m.insert("params".to_string(), params);
+    Json::Obj(m)
+}
+
+/// Script runner: one [`Core`] plus a ledger of dispatched-but-not-run
+/// jobs and the growing transcript.
+pub struct Harness {
+    core: Core,
+    held: BTreeMap<JobId, JobWork>,
+    clock_ms: u64,
+    transcript: String,
+    shutdown_complete: bool,
+}
+
+impl Harness {
+    /// A fresh harness around a core with the given sizing.
+    pub fn new(cfg: CoreConfig) -> Self {
+        Self {
+            core: Core::new(cfg),
+            held: BTreeMap::new(),
+            clock_ms: 0,
+            transcript: String::new(),
+            shutdown_complete: false,
+        }
+    }
+
+    /// Introspect the core (queue depth, counters, cache keys, ...).
+    pub fn core(&self) -> &Core {
+        &self.core
+    }
+
+    /// Ids of dispatched jobs the script has not completed yet.
+    pub fn held_jobs(&self) -> Vec<JobId> {
+        self.held.keys().copied().collect()
+    }
+
+    /// Whether the core signalled `ShutdownComplete`.
+    pub fn is_shut_down(&self) -> bool {
+        self.shutdown_complete
+    }
+
+    /// The transcript so far.
+    pub fn transcript(&self) -> &str {
+        &self.transcript
+    }
+
+    fn line(&mut self, text: &str) {
+        let _ = writeln!(self.transcript, "[{:>6}ms] {text}", self.clock_ms);
+    }
+
+    fn apply_effects(&mut self, effects: Vec<Effect>) {
+        for fx in effects {
+            match fx {
+                Effect::Respond(conn, payload) => {
+                    let text = String::from_utf8_lossy(&payload).into_owned();
+                    self.line(&format!("< conn {conn} {text}"));
+                }
+                Effect::Run(job, work) => {
+                    self.line(&format!("! dispatch job {job}"));
+                    self.held.insert(job, work);
+                }
+                Effect::Close(conn) => self.line(&format!(". close conn {conn}")),
+                Effect::ShutdownComplete => {
+                    self.shutdown_complete = true;
+                    self.line("* shutdown complete");
+                }
+            }
+        }
+    }
+
+    fn event(&mut self, ev: Event) {
+        let effects = self.core.handle(ev);
+        self.apply_effects(effects);
+    }
+
+    fn complete(&mut self, job: JobId) {
+        match self.held.remove(&job) {
+            Some(work) => {
+                self.line(&format!("! run job {job}"));
+                let result = work.execute();
+                self.event(Event::JobDone(job, result));
+            }
+            None => self.line(&format!("! no held job {job}")),
+        }
+    }
+
+    /// Execute one step.
+    pub fn step(&mut self, step: Step) {
+        match step {
+            Step::Connect(conn) => {
+                self.line(&format!("> conn {conn} connect"));
+                self.event(Event::Connected(conn));
+            }
+            Step::Send(conn, payload) => {
+                let text = payload.to_string_compact();
+                self.line(&format!("> conn {conn} {text}"));
+                self.event(Event::Frame(conn, text.into_bytes()));
+            }
+            Step::Raw(conn, bytes) => {
+                self.line(&format!("> conn {conn} raw {} bytes", bytes.len()));
+                let mut cur = Cursor::new(bytes);
+                loop {
+                    match wire::read_frame(&mut cur) {
+                        Ok(Some(payload)) => self.event(Event::Frame(conn, payload)),
+                        Ok(None) => break,
+                        Err(e) => {
+                            self.event(Event::FrameError(conn, e));
+                            break;
+                        }
+                    }
+                }
+            }
+            Step::Disconnect(conn) => {
+                self.line(&format!("> conn {conn} disconnect"));
+                self.event(Event::Disconnected(conn));
+            }
+            Step::Complete(job) => self.complete(job),
+            Step::CompleteNext => match self.held.keys().next().copied() {
+                Some(job) => self.complete(job),
+                None => self.line("! no held jobs"),
+            },
+            Step::Advance(ms) => {
+                self.clock_ms += ms;
+                self.line(&format!("# advance {ms}ms"));
+            }
+        }
+    }
+
+    /// Execute a whole script and return the final transcript.
+    pub fn run(&mut self, script: Vec<Step>) -> &str {
+        for s in script {
+            self.step(s);
+        }
+        self.transcript()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transcripts_are_byte_identical_across_runs() {
+        let script = || {
+            vec![
+                Step::Connect(1),
+                Step::Send(1, request(1, "ping", Json::Obj(BTreeMap::new()))),
+                Step::Advance(5),
+                Step::Send(1, request(2, "stats", Json::Obj(BTreeMap::new()))),
+                Step::Disconnect(1),
+            ]
+        };
+        let mut a = Harness::new(CoreConfig::default());
+        let mut b = Harness::new(CoreConfig::default());
+        let ta = a.run(script()).to_string();
+        let tb = b.run(script()).to_string();
+        assert_eq!(ta, tb);
+        assert!(ta.contains("\"pong\":true"));
+    }
+
+    #[test]
+    fn raw_bytes_go_through_the_production_frame_reader() {
+        let mut h = Harness::new(CoreConfig::default());
+        h.step(Step::Connect(1));
+        // A truncated length prefix must surface as a framing error and
+        // close the connection.
+        h.step(Step::Raw(1, vec![0x00, 0x01]));
+        assert!(h.transcript().contains("bad-frame"));
+        assert!(h.transcript().contains(". close conn 1"));
+    }
+}

@@ -7,6 +7,8 @@
 //! "smallest-first" schedules: generators draw structure sizes from a
 //! ramp, so the first failing case is usually already small.
 
+pub mod harness;
+
 use crate::rng::Pcg64;
 
 /// Configuration for a property run.

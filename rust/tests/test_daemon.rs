@@ -1,0 +1,548 @@
+//! Daemon tests: the fail-closed wire corpus, the deterministic
+//! concurrency semantics (FIFO, cancel, drain, cache pinning,
+//! transform batching), end-to-end serving over real sockets, and the
+//! nightly soak (`--ignored`).
+//!
+//! The concurrency tests run on [`faster_ica::testkit::harness`]: a
+//! scripted interleaving against the daemon core with no sockets, no
+//! sleeps and no real clocks, so every run of the same script produces
+//! a byte-identical transcript.
+
+use faster_ica::daemon::core::CoreConfig;
+use faster_ica::daemon::{self, Client};
+use faster_ica::estimator::Picard;
+use faster_ica::ica::CancelToken;
+use faster_ica::linalg::Mat;
+use faster_ica::rng::Pcg64;
+use faster_ica::testkit::gen;
+use faster_ica::testkit::harness::{request, Harness, Step};
+use faster_ica::util::{mat_to_json, Json};
+use faster_ica::IcaError;
+use std::collections::BTreeMap;
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in pairs {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+fn empty() -> Json {
+    obj(vec![])
+}
+
+/// Small heavy-tailed mixture every solve in this file uses; seeded, so
+/// every run sees the same bytes.
+fn tiny_data() -> Mat {
+    let mut rng = Pcg64::new(7);
+    gen::sources(&mut rng, 3, 400)
+}
+
+fn fit_params(data: &Mat, model_id: Option<&str>) -> Json {
+    let mut pairs = vec![
+        ("data", mat_to_json(data)),
+        ("tol", Json::Num(1e-6)),
+        ("max_iters", Json::Num(60.0)),
+    ];
+    if let Some(id) = model_id {
+        pairs.push(("model_id", Json::Str(id.to_string())));
+    }
+    obj(pairs)
+}
+
+fn transform_params(data: &Mat, model_id: &str) -> Json {
+    obj(vec![
+        ("data", mat_to_json(data)),
+        ("model_id", Json::Str(model_id.to_string())),
+    ])
+}
+
+/// Fit the reference model the way the daemon does (same defaults, same
+/// inputs) for bitwise comparisons.
+fn local_model(data: &Mat) -> faster_ica::IcaModel {
+    Picard::new().tol(1e-6).max_iters(60).fit(data).expect("local fit")
+}
+
+// ---------------------------------------------------------------------
+// Satellite 1: fail-closed corpus over the checked-in fixtures.
+// ---------------------------------------------------------------------
+
+/// Frames that cannot be resynchronized: the daemon answers `bad-frame`
+/// and closes that connection, but keeps serving new ones.
+const FRAMING_FIXTURES: &[&str] =
+    &["oversized.bin", "truncated_body.bin", "truncated_prefix.bin"];
+
+#[test]
+fn wire_corpus_every_fixture_fails_closed() {
+    let dir = std::path::Path::new("tests/fixtures/wire");
+    let mut names: Vec<String> = std::fs::read_dir(dir)
+        .expect("fixture dir")
+        .map(|e| e.expect("entry").file_name().to_string_lossy().into_owned())
+        .collect();
+    names.sort();
+    assert!(names.len() >= 10, "corpus went missing: {names:?}");
+    for name in &names {
+        let bytes = std::fs::read(dir.join(name)).expect("read fixture");
+        let mut h = Harness::new(CoreConfig::default());
+        h.step(Step::Connect(1));
+        h.step(Step::Raw(1, bytes));
+        let t = h.transcript();
+        if FRAMING_FIXTURES.contains(&name.as_str()) {
+            assert!(t.contains("bad-frame"), "{name}: expected bad-frame in:\n{t}");
+            assert!(t.contains(". close conn 1"), "{name}: connection must close:\n{t}");
+            // The daemon itself stays healthy: a new connection works.
+            h.step(Step::Connect(2));
+            h.step(Step::Send(2, request(1, "ping", empty())));
+            assert!(h.transcript().contains("\"pong\":true"), "{name}: daemon wedged");
+        } else {
+            let expected = if name == "unknown_op.bin" { "unknown-op" } else { "bad-request" };
+            assert!(
+                t.contains(expected),
+                "{name}: expected a typed {expected} response in:\n{t}"
+            );
+            assert!(!t.contains(". close conn"), "{name}: decode errors must not close:\n{t}");
+            // Same connection still usable after the typed error.
+            h.step(Step::Send(1, request(99, "ping", empty())));
+            assert!(h.transcript().contains("\"pong\":true"), "{name}: connection wedged");
+        }
+        // No submissions happened: counters must all be zero.
+        assert_eq!(h.core().counters(), Default::default(), "{name}: counter leak");
+    }
+}
+
+#[test]
+fn wire_error_responses_recover_the_request_id() {
+    // bad_params.bin carries id 9; the typed error must echo it so the
+    // client can correlate.
+    let bytes = std::fs::read("tests/fixtures/wire/bad_params.bin").expect("fixture");
+    let mut h = Harness::new(CoreConfig::default());
+    h.step(Step::Connect(1));
+    h.step(Step::Raw(1, bytes));
+    assert!(h.transcript().contains("\"id\":9"), "{}", h.transcript());
+}
+
+// ---------------------------------------------------------------------
+// Satellite 2: concurrency semantics on the deterministic harness.
+// ---------------------------------------------------------------------
+
+#[test]
+fn queue_is_fifo_and_dispatch_order_matches_submission_order() {
+    let mut h = Harness::new(CoreConfig { queue_bound: 8, parallelism: 1, cache_capacity: 2 });
+    let data = tiny_data();
+    h.step(Step::Connect(1));
+    for id in 1..=3u64 {
+        h.step(Step::Send(1, request(id, "fit", fit_params(&data, None))));
+    }
+    // One slot: job 1 dispatched, 2 and 3 queued in order.
+    assert_eq!(h.held_jobs(), vec![1]);
+    assert_eq!(h.core().queue_depth(), 2);
+    h.step(Step::CompleteNext);
+    assert_eq!(h.held_jobs(), vec![2], "job 2 must dispatch before job 3");
+    h.step(Step::CompleteNext);
+    assert_eq!(h.held_jobs(), vec![3]);
+    h.step(Step::CompleteNext);
+    assert_eq!(h.core().queue_depth(), 0);
+    let c = h.core().counters();
+    assert_eq!((c.submitted, c.completed, c.cancelled, c.rejected), (3, 3, 0, 0));
+    // Completion events came back in dispatch order 1, 2, 3.
+    let t = h.transcript();
+    let p1 = t.find("\"job\":1,\"op\":\"fit\"").expect("job 1 event");
+    let p2 = t.find("\"job\":2,\"op\":\"fit\"").expect("job 2 event");
+    let p3 = t.find("\"job\":3,\"op\":\"fit\"").expect("job 3 event");
+    assert!(p1 < p2 && p2 < p3, "completions out of order:\n{t}");
+}
+
+#[test]
+fn cancelling_a_queued_job_removes_it_and_informs_the_submitter() {
+    let mut h = Harness::new(CoreConfig { queue_bound: 8, parallelism: 1, cache_capacity: 2 });
+    let data = tiny_data();
+    h.step(Step::Connect(1));
+    h.step(Step::Connect(2));
+    h.step(Step::Send(1, request(1, "fit", fit_params(&data, None))));
+    h.step(Step::Send(1, request(2, "fit", fit_params(&data, None))));
+    assert_eq!(h.core().queue_depth(), 1);
+    // A different connection cancels the queued job 2.
+    h.step(Step::Send(2, request(1, "cancel", obj(vec![("job", Json::Num(2.0))]))));
+    let t = h.transcript();
+    assert!(t.contains("\"state\":\"queued\""), "{t}");
+    assert!(t.contains("\"kind\":\"cancelled\""), "submitter must get a typed event:\n{t}");
+    assert_eq!(h.core().queue_depth(), 0);
+    h.step(Step::CompleteNext);
+    let c = h.core().counters();
+    assert_eq!((c.submitted, c.completed, c.cancelled, c.rejected), (2, 1, 1, 0));
+    // Cancelling an unknown job is a typed error, not a panic.
+    h.step(Step::Send(2, request(2, "cancel", obj(vec![("job", Json::Num(42.0))]))));
+    assert!(h.transcript().contains("unknown-job"));
+}
+
+#[test]
+fn cancelling_a_running_fit_stops_it_within_one_iteration() {
+    let mut h = Harness::new(CoreConfig { queue_bound: 8, parallelism: 1, cache_capacity: 2 });
+    let data = tiny_data();
+    // A fit that cannot converge quickly on its own: tiny tol, big cap.
+    let params = obj(vec![
+        ("data", mat_to_json(&data)),
+        ("tol", Json::Num(1e-300)),
+        ("max_iters", Json::Num(1_000_000.0)),
+    ]);
+    h.step(Step::Connect(1));
+    h.step(Step::Send(1, request(1, "fit", params)));
+    assert_eq!(h.held_jobs(), vec![1]);
+    // Cancel while "running" (dispatched, not yet executed): the token
+    // is set now, and the very first iteration-boundary check stops the
+    // solve. If cancellation were broken this test would grind through
+    // a million iterations instead of returning promptly.
+    h.step(Step::Send(1, request(2, "cancel", obj(vec![("job", Json::Num(1.0))]))));
+    assert!(h.transcript().contains("\"state\":\"running\""));
+    h.step(Step::Complete(1));
+    let t = h.transcript();
+    assert!(t.contains("\"kind\":\"cancelled\""), "{t}");
+    let c = h.core().counters();
+    assert_eq!((c.submitted, c.completed, c.cancelled, c.rejected), (1, 0, 1, 0));
+}
+
+#[test]
+fn solver_cancellation_is_checked_at_iteration_boundaries() {
+    // Pinned contract: a pre-cancelled token makes `Picard::fit` return
+    // `IcaError::Cancelled` after at most one iteration, not run to
+    // `max_iters`.
+    let token = CancelToken::new();
+    token.cancel();
+    let r = Picard::new()
+        .cancel_token(token)
+        .tol(1e-300)
+        .max_iters(1_000_000)
+        .fit(&tiny_data());
+    assert!(matches!(r, Err(IcaError::Cancelled)), "got {r:?}");
+}
+
+#[test]
+fn shutdown_drains_in_flight_work_and_rejects_new_submissions() {
+    let mut h = Harness::new(CoreConfig { queue_bound: 8, parallelism: 1, cache_capacity: 2 });
+    let data = tiny_data();
+    h.step(Step::Connect(1));
+    h.step(Step::Connect(2));
+    h.step(Step::Send(1, request(1, "fit", fit_params(&data, None))));
+    h.step(Step::Send(1, request(2, "fit", fit_params(&data, None))));
+    h.step(Step::Send(2, request(1, "shutdown", empty())));
+    assert!(h.core().is_draining());
+    assert!(!h.is_shut_down(), "must drain the queue before completing shutdown");
+    // New submissions are refused with a typed response.
+    h.step(Step::Send(1, request(3, "fit", fit_params(&data, None))));
+    assert!(h.transcript().contains("shutting-down"));
+    // A second shutdown is a typed error too.
+    h.step(Step::Send(2, request(2, "shutdown", empty())));
+    // Drain: both queued/running jobs still complete.
+    h.step(Step::CompleteNext);
+    assert!(!h.is_shut_down());
+    h.step(Step::CompleteNext);
+    assert!(h.is_shut_down(), "drain must finish once the last job completes");
+    let t = h.transcript();
+    assert!(t.contains("\"drained\":true"), "requester must see the drain finish:\n{t}");
+    let c = h.core().counters();
+    assert_eq!((c.submitted, c.completed, c.cancelled, c.rejected), (3, 2, 0, 1));
+}
+
+#[test]
+fn cache_eviction_never_drops_a_model_with_inflight_transforms() {
+    let mut h = Harness::new(CoreConfig { queue_bound: 8, parallelism: 2, cache_capacity: 1 });
+    let data = tiny_data();
+    h.step(Step::Connect(1));
+    h.step(Step::Send(1, request(1, "fit", fit_params(&data, Some("a")))));
+    h.step(Step::CompleteNext);
+    assert_eq!(h.core().cached_model_keys(), vec!["a".to_string()]);
+    // Transform against "a" dispatches and pins it.
+    h.step(Step::Send(1, request(2, "transform", transform_params(&data, "a"))));
+    let transform_job = h.held_jobs();
+    assert_eq!(h.core().model_pin_count("a"), 1);
+    // A second fit lands model "b" while the transform is in flight:
+    // capacity is 1, but the pinned "a" must survive.
+    h.step(Step::Send(1, request(3, "fit", fit_params(&data, Some("b")))));
+    h.step(Step::Complete(*h.held_jobs().iter().find(|j| !transform_job.contains(j)).unwrap()));
+    let keys = h.core().cached_model_keys();
+    assert!(keys.contains(&"a".to_string()), "pinned model evicted: {keys:?}");
+    assert!(keys.contains(&"b".to_string()), "{keys:?}");
+    // Transform completes, releasing the pin: the over-capacity cache
+    // now evicts the least recently used entry.
+    h.step(Step::Complete(transform_job[0]));
+    assert_eq!(h.core().model_pin_count("a"), 0);
+    assert_eq!(h.core().cached_model_keys(), vec!["b".to_string()]);
+    // The served sources are real: the event carries a matrix.
+    assert!(h.transcript().contains("\"sources\""));
+}
+
+#[test]
+fn queued_transforms_of_the_same_model_batch_into_one_window() {
+    let mut h = Harness::new(CoreConfig { queue_bound: 8, parallelism: 1, cache_capacity: 2 });
+    let data = tiny_data();
+    h.step(Step::Connect(1));
+    h.step(Step::Send(1, request(1, "fit", fit_params(&data, Some("m")))));
+    // Occupy the single slot with another fit so the transforms queue up.
+    h.step(Step::CompleteNext);
+    h.step(Step::Send(1, request(2, "fit", fit_params(&data, None))));
+    let mut rng = Pcg64::new(11);
+    let x2 = gen::sources(&mut rng, 3, 50);
+    let x3 = gen::sources(&mut rng, 3, 70);
+    h.step(Step::Send(1, request(3, "transform", transform_params(&data, "m"))));
+    h.step(Step::Send(1, request(4, "transform", transform_params(&x2, "m"))));
+    h.step(Step::Send(1, request(5, "transform", transform_params(&x3, "m"))));
+    assert_eq!(h.core().queue_depth(), 3);
+    // Finishing the fit frees the slot; all three transforms dispatch
+    // as ONE batched job (one matmul window).
+    h.step(Step::CompleteNext);
+    assert_eq!(h.held_jobs().len(), 1, "transforms must coalesce into one dispatch");
+    assert_eq!(h.core().queue_depth(), 0);
+    h.step(Step::CompleteNext);
+    // All three completion events arrive, each with its own sources of
+    // the right width.
+    let model = local_model(&data);
+    for (x, job) in [(&data, 3u64), (&x2, 4), (&x3, 5)] {
+        let want = model.transform(x).expect("transform");
+        let line = format!(
+            "{{\"job\":{job},\"ok\":true,\"op\":\"transform\",\"schema\":\"fica.wire/v1\",\"sources\":{}}}",
+            mat_to_json(&want).to_string_compact()
+        );
+        assert!(
+            h.transcript().contains(&line),
+            "job {job}: batched result differs from the solo transform"
+        );
+    }
+    let c = h.core().counters();
+    assert_eq!((c.submitted, c.completed), (5, 5));
+}
+
+#[test]
+fn served_transform_is_bitwise_equal_to_local_apply() {
+    let data = tiny_data();
+    let mut h = Harness::new(CoreConfig::default());
+    h.step(Step::Connect(1));
+    h.step(Step::Send(1, request(1, "fit", fit_params(&data, Some("m")))));
+    h.step(Step::CompleteNext);
+    h.step(Step::Send(1, request(2, "transform", transform_params(&data, "m"))));
+    h.step(Step::CompleteNext);
+    // The same fit and transform done locally, with the same settings.
+    let want = local_model(&data).transform(&data).expect("transform");
+    let want_json = mat_to_json(&want).to_string_compact();
+    assert!(
+        h.transcript().contains(&want_json),
+        "served sources differ from IcaModel::transform on the same model"
+    );
+}
+
+#[test]
+fn queue_full_rejections_are_typed_and_counted() {
+    let mut h = Harness::new(CoreConfig { queue_bound: 1, parallelism: 1, cache_capacity: 2 });
+    let data = tiny_data();
+    h.step(Step::Connect(1));
+    h.step(Step::Send(1, request(1, "fit", fit_params(&data, None))));
+    h.step(Step::Send(1, request(2, "fit", fit_params(&data, None))));
+    h.step(Step::Send(1, request(3, "fit", fit_params(&data, None))));
+    assert!(h.transcript().contains("queue-full"));
+    h.step(Step::CompleteNext);
+    h.step(Step::CompleteNext);
+    let c = h.core().counters();
+    assert_eq!(c.submitted, c.completed + c.cancelled + c.rejected);
+    assert_eq!((c.completed, c.rejected), (2, 1));
+}
+
+#[test]
+fn scripted_interleaving_transcripts_are_byte_identical() {
+    let data = tiny_data();
+    let script = |data: &Mat| {
+        vec![
+            Step::Connect(1),
+            Step::Connect(2),
+            Step::Send(1, request(1, "fit", fit_params(data, Some("m")))),
+            Step::Advance(3),
+            Step::Send(2, request(1, "stats", empty())),
+            Step::CompleteNext,
+            Step::Send(2, request(2, "transform", transform_params(data, "m"))),
+            Step::Send(1, request(2, "fit", fit_params(data, None))),
+            Step::Advance(10),
+            Step::Send(1, request(3, "cancel", obj(vec![("job", Json::Num(3.0))]))),
+            Step::CompleteNext,
+            Step::Send(2, request(3, "shutdown", empty())),
+            Step::CompleteNext,
+            Step::Disconnect(1),
+            Step::Disconnect(2),
+        ]
+    };
+    let mut a = Harness::new(CoreConfig { queue_bound: 4, parallelism: 1, cache_capacity: 2 });
+    let mut b = Harness::new(CoreConfig { queue_bound: 4, parallelism: 1, cache_capacity: 2 });
+    let ta = a.run(script(&data)).to_string();
+    let tb = b.run(script(&data)).to_string();
+    assert_eq!(ta, tb, "same script must replay to a byte-identical transcript");
+    assert!(a.is_shut_down());
+    let c = a.core().counters();
+    assert_eq!(c.submitted, c.completed + c.cancelled + c.rejected);
+}
+
+// ---------------------------------------------------------------------
+// End-to-end over real sockets: fit, transform, drain, zero leaks.
+// ---------------------------------------------------------------------
+
+#[test]
+fn server_end_to_end_fit_transform_shutdown() {
+    let data = tiny_data();
+    let opts = daemon::ServeOptions {
+        addr: daemon::BindAddr::parse("tcp:127.0.0.1:0").unwrap(),
+        workers: 2,
+        core: CoreConfig { queue_bound: 8, parallelism: 2, cache_capacity: 2 },
+    };
+    let bound = daemon::BoundServer::bind(&opts).expect("bind");
+    let addr = bound.local_addr().to_string();
+    let server = std::thread::spawn(move || bound.run());
+
+    let mut c = Client::connect(&addr).expect("connect");
+    let pong = c.request("ping", empty()).expect("ping");
+    assert!(pong.get("pong").is_some());
+
+    let sub = c.request("fit", fit_params(&data, Some("m"))).expect("submit fit");
+    let job = sub.get("job").and_then(Json::as_usize).expect("job id") as u64;
+    let done = c.wait_job(job).expect("fit completion");
+    assert!(done.get("error").is_none(), "{}", done.to_string_compact());
+    assert_eq!(done.get("model_id").and_then(Json::as_str), Some("m"));
+
+    let sub = c.request("transform", transform_params(&data, "m")).expect("submit transform");
+    let job = sub.get("job").and_then(Json::as_usize).expect("job id") as u64;
+    let done = c.wait_job(job).expect("transform completion");
+    let served = done.get("sources").expect("sources");
+    let want = local_model(&data).transform(&data).expect("transform");
+    assert_eq!(
+        served.to_string_compact(),
+        mat_to_json(&want).to_string_compact(),
+        "served transform must be bitwise-equal to the local one"
+    );
+
+    let drained = c.request("shutdown", empty()).expect("shutdown");
+    assert!(drained.get("drained").is_some(), "{}", drained.to_string_compact());
+    // run() returning proves the drain joined every thread.
+    server.join().expect("server thread").expect("clean exit");
+    // The listener is gone: a fresh connect must fail.
+    assert!(Client::connect(&addr).is_err(), "socket must be closed after drain");
+}
+
+// ---------------------------------------------------------------------
+// Satellite 3: seeded-random soak (nightly: `cargo test -- --ignored`).
+// ---------------------------------------------------------------------
+
+/// Random interleavings over several virtual clients: submissions,
+/// cancels of arbitrary job ids, stats probes, disconnects and random
+/// job completions. Afterwards every held job is completed and the
+/// books must balance: `submitted == completed + cancelled + rejected`,
+/// nothing queued, nothing running — and each script, replayed,
+/// produces a byte-identical transcript.
+#[test]
+#[ignore = "soak: run explicitly or in the nightly CI job"]
+fn soak_random_interleavings_balance_counters_and_replay_identically() {
+    let cases: usize = std::env::var("FICA_SOAK_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(12);
+    let data = tiny_data();
+    for case in 0..cases {
+        let seed = 0x50a8_u64.wrapping_add(case as u64);
+        let script = build_soak_script(seed, &data);
+        let run_once = || {
+            let mut h =
+                Harness::new(CoreConfig { queue_bound: 6, parallelism: 2, cache_capacity: 2 });
+            for step in script_steps(&script, &data) {
+                h.step(step);
+            }
+            // Drain: complete whatever is still held.
+            while !h.held_jobs().is_empty() {
+                h.step(Step::CompleteNext);
+            }
+            let transcript = h.transcript().to_string();
+            let c = h.core().counters();
+            assert_eq!(
+                c.submitted,
+                c.completed + c.cancelled + c.rejected,
+                "case {case}: counters leak: {c:?}"
+            );
+            assert_eq!(h.core().queue_depth(), 0, "case {case}");
+            assert_eq!(h.core().running_count(), 0, "case {case}");
+            transcript
+        };
+        let a = run_once();
+        let b = run_once();
+        assert_eq!(a, b, "case {case}: soak transcript not deterministic");
+    }
+}
+
+/// A compact, clonable action plan (so the same plan can be replayed).
+enum SoakAction {
+    Connect(u64),
+    Fit { conn: u64, id: u64, model: Option<u8> },
+    Transform { conn: u64, id: u64, model: u8 },
+    Cancel { conn: u64, id: u64, job: u64 },
+    Stats { conn: u64, id: u64 },
+    Disconnect(u64),
+    Complete,
+}
+
+fn build_soak_script(seed: u64, _data: &Mat) -> Vec<SoakAction> {
+    let mut rng = Pcg64::new(seed);
+    let clients = 2 + (rng.next_u64() % 3) as u64;
+    let mut plan = Vec::new();
+    for c in 1..=clients {
+        plan.push(SoakAction::Connect(c));
+    }
+    // Seed one cached model per run so transforms can hit.
+    plan.push(SoakAction::Fit { conn: 1, id: 1, model: Some(0) });
+    plan.push(SoakAction::Complete);
+    let jobs_per_client = 4 + (rng.next_u64() % 4);
+    let mut next_id = 2u64;
+    for _ in 0..(clients * jobs_per_client) {
+        let conn = 1 + rng.next_u64() % clients;
+        let id = next_id;
+        next_id += 1;
+        match rng.next_u64() % 10 {
+            0..=3 => plan.push(SoakAction::Fit {
+                conn,
+                id,
+                model: if rng.next_u64() % 2 == 0 { Some((rng.next_u64() % 2) as u8) } else { None },
+            }),
+            4..=6 => {
+                plan.push(SoakAction::Transform { conn, id, model: (rng.next_u64() % 2) as u8 })
+            }
+            7 => plan.push(SoakAction::Cancel { conn, id, job: 1 + rng.next_u64() % 12 }),
+            8 => plan.push(SoakAction::Stats { conn, id }),
+            _ => plan.push(SoakAction::Complete),
+        }
+        if rng.next_u64() % 4 == 0 {
+            plan.push(SoakAction::Complete);
+        }
+    }
+    for c in 2..=clients {
+        if rng.next_u64() % 2 == 0 {
+            plan.push(SoakAction::Disconnect(c));
+        }
+    }
+    plan
+}
+
+fn script_steps(plan: &[SoakAction], data: &Mat) -> Vec<Step> {
+    let model_key = |m: u8| format!("m{m}");
+    plan.iter()
+        .map(|a| match a {
+            SoakAction::Connect(c) => Step::Connect(*c),
+            SoakAction::Fit { conn, id, model } => Step::Send(
+                *conn,
+                request(*id, "fit", fit_params(data, model.map(model_key).as_deref())),
+            ),
+            SoakAction::Transform { conn, id, model } => Step::Send(
+                *conn,
+                request(*id, "transform", transform_params(data, &model_key(*model))),
+            ),
+            SoakAction::Cancel { conn, id, job } => Step::Send(
+                *conn,
+                request(*id, "cancel", obj(vec![("job", Json::Num(*job as f64))])),
+            ),
+            SoakAction::Stats { conn, id } => Step::Send(*conn, request(*id, "stats", empty())),
+            SoakAction::Disconnect(c) => Step::Disconnect(*c),
+            SoakAction::Complete => Step::CompleteNext,
+        })
+        .collect()
+}

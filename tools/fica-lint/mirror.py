@@ -887,7 +887,11 @@ def lint_impl(rel, src, self_mode):
             rule_nondeterminism(code, sink)
         if rel.startswith("data/") or rel == "util/json.rs":
             rule_fail_closed(code, sink)
-        if (rel.startswith("data/") and rel != "data/stats.rs") or rel == "util/json.rs":
+        if (
+            (rel.startswith("data/") and rel != "data/stats.rs")
+            or rel == "util/json.rs"
+            or rel.startswith("daemon/")
+        ):
             rule_unchecked_arith(code, sink)
         if rel == "backend/pool.rs" or rel.startswith("coordinator/") or rel.startswith("daemon/"):
             rule_lock_hygiene(code, waivers.lock_orders, sink)

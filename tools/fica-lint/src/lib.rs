@@ -21,9 +21,10 @@
 //!      `util/json.rs` must return `Result`.
 //!    - **unchecked-arith** — raw `*` / `+` on size-typed operands in
 //!      the decoder paths (`data/` minus `data/stats.rs`, plus
-//!      `util/json.rs`) must use `checked_*` / `saturating_*` instead.
+//!      `util/json.rs` and the wire decoders in `daemon/`) must use
+//!      `checked_*` / `saturating_*` instead.
 //!    - **lock-hygiene** — in `backend/pool.rs`, `coordinator/` and
-//!      future `daemon/` code: every file that acquires locks declares
+//!      `daemon/` code: every file that acquires locks declares
 //!      a canonical acquisition order in a `lock-order` header comment;
 //!      no channel call while a guard is live, no out-of-order nested
 //!      acquisition.
@@ -1278,7 +1279,10 @@ fn lint_impl(rel: &str, src: &str, self_mode: bool) -> Vec<Violation> {
         if rel.starts_with("data/") || rel == "util/json.rs" {
             rule_fail_closed(&code, &mut sink);
         }
-        if (rel.starts_with("data/") && rel != "data/stats.rs") || rel == "util/json.rs" {
+        if (rel.starts_with("data/") && rel != "data/stats.rs")
+            || rel == "util/json.rs"
+            || rel.starts_with("daemon/")
+        {
             rule_unchecked_arith(&code, &mut sink);
         }
         if rel == "backend/pool.rs" || rel.starts_with("coordinator/") || rel.starts_with("daemon/")
@@ -1397,6 +1401,13 @@ mod tests {
         // Out of scope: not a decoder path.
         assert!(lint_file("ica/x.rs", fire).is_empty());
         assert!(lint_file("data/stats.rs", fire).is_empty());
+
+        // The daemon's wire decoders are in scope: frame-length
+        // arithmetic must be checked.
+        let v = lint_file("daemon/wire.rs", fire);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "unchecked-arith");
+        assert!(lint_file("daemon/core.rs", checked).is_empty());
     }
 
     #[test]
