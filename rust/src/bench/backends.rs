@@ -97,6 +97,10 @@ pub struct BackendBenchConfig {
     pub serve_t: usize,
     /// Worker threads the benched daemon runs.
     pub serve_workers: usize,
+    /// Lineage-chain depth (manifest entries) for the registry benches.
+    pub registry_entries: usize,
+    /// Timed iterations per registry operation.
+    pub registry_samples: usize,
 }
 
 impl BackendBenchConfig {
@@ -120,6 +124,8 @@ impl BackendBenchConfig {
             serve_transforms: 8,
             serve_t: 10_000,
             serve_workers: 4,
+            registry_entries: 3,
+            registry_samples: 5,
         }
     }
 
@@ -143,6 +149,8 @@ impl BackendBenchConfig {
             serve_transforms: 3,
             serve_t: 1_000,
             serve_workers: 2,
+            registry_entries: 3,
+            registry_samples: 2,
         }
     }
 
@@ -490,13 +498,15 @@ pub fn run_refits(cfg: &BackendBenchConfig) -> Vec<RefitTiming> {
     out
 }
 
-/// Build the stable `fica.bench_backend/v5` report (see
-/// `docs/BENCH_SCHEMA.md` for the field-by-field contract). v5 adds the
+/// Build the stable `fica.bench_backend/v6` report (see
+/// `docs/BENCH_SCHEMA.md` for the field-by-field contract). v6 adds the
+/// `registry_results` section — verifying-resolver timings (`open` /
+/// `resolve` / `verify`) over a refit lineage chain; v5 added the
 /// `serve_results` section — client-observed round-trip latencies of
 /// transforms served by an in-process `fica serve` daemon; v4 added a
 /// `meta` block — host cpu count, build profile, kernel/backend
 /// defaults — so a baseline records the machine and build that
-/// produced it; `compare` ignores sections a baseline lacks, so v4
+/// produced it; `compare` ignores sections a baseline lacks, so v4/v5
 /// baselines still gate every section they carry.
 pub fn report_json(
     cfg: &BackendBenchConfig,
@@ -504,6 +514,7 @@ pub fn report_json(
     fits: &[FitTiming],
     refits: &[RefitTiming],
     serves: &[super::serve::ServeTiming],
+    registries: &[super::registry::RegistryTiming],
 ) -> Json {
     // Native+scalar medians per N: the speedup baseline is the reference
     // arithmetic, so vector rows read as the vectorization gain.
@@ -644,6 +655,29 @@ pub fn report_json(
             Json::Obj(obj)
         })
         .collect();
+    // Registry rows: the verifying-resolver tax a `--registry` daemon
+    // pays per cache miss (`open` + `resolve`) and per audit (`verify`);
+    // `entries` is the lineage depth the manifest walk covers.
+    let registry_results: Vec<Json> = registries
+        .iter()
+        .map(|r| {
+            let mut obj = BTreeMap::new();
+            obj.insert("backend".into(), Json::Str("registry".into()));
+            obj.insert("kernel".into(), Json::Str(SweepKernel::default().id().to_string()));
+            obj.insert("workers".into(), Json::Num(1.0));
+            obj.insert("n".into(), Json::Num(r.n as f64));
+            obj.insert("t".into(), Json::Num(r.t as f64));
+            obj.insert("op".into(), Json::Str(r.op.to_string()));
+            obj.insert("entries".into(), Json::Num(r.entries as f64));
+            obj.insert("median_s".into(), Json::Num(r.median_s()));
+            obj.insert("mean_s".into(), Json::Num(r.mean_s()));
+            obj.insert(
+                "samples".into(),
+                Json::Arr(r.samples.iter().map(|&v| Json::Num(v)).collect()),
+            );
+            Json::Obj(obj)
+        })
+        .collect();
     let cpus = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1);
@@ -659,7 +693,7 @@ pub fn report_json(
     );
     meta.insert("default_backend".into(), Json::Str("native".into()));
     let mut root = BTreeMap::new();
-    root.insert("schema".into(), Json::Str("fica.bench_backend/v5".into()));
+    root.insert("schema".into(), Json::Str("fica.bench_backend/v6".into()));
     root.insert("meta".into(), Json::Obj(meta));
     root.insert("level".into(), Json::Str("h2".into()));
     root.insert(
@@ -685,6 +719,8 @@ pub fn report_json(
     root.insert("refit_results".into(), Json::Arr(refit_results));
     root.insert("serve_t".into(), Json::Num(cfg.serve_t as f64));
     root.insert("serve_results".into(), Json::Arr(serve_results));
+    root.insert("registry_entries".into(), Json::Num(cfg.registry_entries as f64));
+    root.insert("registry_results".into(), Json::Arr(registry_results));
     Json::Obj(root)
 }
 
@@ -719,6 +755,8 @@ mod tests {
             serve_transforms: 2,
             serve_t: 150,
             serve_workers: 2,
+            registry_entries: 2,
+            registry_samples: 1,
         };
         let timings = run(&cfg);
         assert_eq!(timings.len(), 4); // (native + sharded(2)) x 2 kernels
@@ -728,10 +766,12 @@ mod tests {
         assert_eq!(refits.len(), 5); // same matrix as the fits
         let serves = crate::bench::serve::run_serve(&cfg);
         assert_eq!(serves.len(), 1); // one row per client count
-        let report = report_json(&cfg, &timings, &fits, &refits, &serves);
+        let registries = crate::bench::registry::run_registry(&cfg);
+        assert_eq!(registries.len(), 3); // open / resolve / verify
+        let report = report_json(&cfg, &timings, &fits, &refits, &serves, &registries);
         assert_eq!(
             report.get("schema").and_then(|s| s.as_str()),
-            Some("fica.bench_backend/v5")
+            Some("fica.bench_backend/v6")
         );
         let meta = report.get("meta").expect("v5 report carries a meta block");
         assert!(meta.get("cpus").unwrap().as_usize().unwrap() >= 1);
@@ -791,6 +831,16 @@ mod tests {
             assert!(r.get("transforms_per_s").unwrap().as_f64().unwrap() > 0.0);
             // clients × transforms_per_client pooled latency samples.
             assert_eq!(r.get("samples").unwrap().as_arr().unwrap().len(), 4);
+        }
+        let registry_results = report.get("registry_results").unwrap().as_arr().unwrap();
+        assert_eq!(registry_results.len(), 3);
+        for r in registry_results {
+            assert_eq!(r.get("backend").unwrap().as_str(), Some("registry"));
+            assert_eq!(r.get("entries").unwrap().as_usize(), Some(2));
+            let op = r.get("op").unwrap().as_str().unwrap();
+            assert!(op == "open" || op == "resolve" || op == "verify");
+            assert!(r.get("median_s").unwrap().as_f64().unwrap() >= 0.0);
+            assert_eq!(r.get("samples").unwrap().as_arr().unwrap().len(), 1);
         }
         // The report survives its own serialization.
         let text = report.to_string_compact();

@@ -29,11 +29,12 @@ use std::fmt::Write as _;
 
 /// The sections a report may carry, with the fields that identify a row
 /// within each (beyond the fields shared by every section).
-const SECTIONS: [(&str, &[&str]); 4] = [
+const SECTIONS: [(&str, &[&str]); 5] = [
     ("results", &[]),
     ("fit_results", &["out_of_core"]),
     ("refit_results", &["out_of_core", "t_base", "t_append"]),
     ("serve_results", &["clients"]),
+    ("registry_results", &["op", "entries"]),
 ];
 
 /// Key fields every section shares.
@@ -362,6 +363,36 @@ mod tests {
         // A v4 baseline has no serve_results: unmatched, never failed.
         let v4 = report(&[("native", "scalar", 1, 32, 100000, 0.5)]);
         let out = compare_reports(&serve_report(9.0), &v4).unwrap();
+        assert!(!out.regressed());
+    }
+
+    /// v6 adds `registry_results`, keyed by `op` + `entries` on top of
+    /// the common fields: rows for different operations never match each
+    /// other, matched rows gate, and a v5 baseline without the section
+    /// compares clean.
+    #[test]
+    fn registry_rows_gate_and_v5_baselines_stay_clean() {
+        let registry_report = |op: &str, median: f64| {
+            Json::parse(&format!(
+                r#"{{"schema":"fica.bench_backend/v6","smoke":false,"results":[],
+                    "registry_results":[{{"backend":"registry","kernel":"vector","workers":1,"n":4,"t":1000,"op":"{op}","entries":3,"median_s":{median}}}]}}"#,
+            ))
+            .unwrap()
+        };
+        let base = registry_report("resolve", 0.5);
+        let out = compare_reports(&registry_report("resolve", 0.5), &base).unwrap();
+        assert_eq!(out.compared.len(), 1);
+        assert!(!out.regressed());
+        let out = compare_reports(&registry_report("resolve", 1.1), &base).unwrap();
+        assert!(out.regressed());
+        assert!(out.regressions[0].key.contains("op=resolve"));
+        // A different op is a different row: unmatched, not compared.
+        let out = compare_reports(&registry_report("verify", 1.1), &base).unwrap();
+        assert!(out.compared.is_empty());
+        assert!(!out.regressed());
+        // A v5 baseline has no registry_results: unmatched, never failed.
+        let v5 = report(&[("native", "scalar", 1, 32, 100000, 0.5)]);
+        let out = compare_reports(&registry_report("verify", 9.0), &v5).unwrap();
         assert!(!out.regressed());
     }
 

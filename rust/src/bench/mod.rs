@@ -8,6 +8,7 @@
 pub mod backends;
 pub mod compare;
 pub mod defaults;
+pub mod registry;
 pub mod serve;
 
 use std::time::{Duration, Instant};

@@ -1,0 +1,148 @@
+//! Registry-resolve benches behind `fica bench` (`registry_results`,
+//! schema v6).
+//!
+//! Serving a deployed model through `fica serve --registry` pays the
+//! verifying-resolver path on every cache miss: manifest parse +
+//! invariant validation (`open`), artifact read + SHA-256 re-hash +
+//! fail-closed model parse (`resolve`), and — for operational audits —
+//! the full `verify` walk. These benches time those three operations
+//! against a throwaway registry holding a [`BackendBenchConfig`]-sized
+//! refit lineage chain, so the report tracks the integrity tax next to
+//! the solver timings it protects.
+
+use super::backends::BackendBenchConfig;
+use super::{black_box, Measurement};
+use crate::estimator::Picard;
+use crate::registry::{Registry, Resolver};
+use std::time::Instant;
+
+/// One timed registry operation.
+#[derive(Clone, Debug)]
+pub struct RegistryTiming {
+    /// Operation id: `open` | `resolve` | `verify`.
+    pub op: &'static str,
+    /// Manifest entries in the benched registry (the lineage depth).
+    pub entries: usize,
+    /// Signal count N of the pushed model.
+    pub n: usize,
+    /// Sample count T the pushed model was fitted on.
+    pub t: usize,
+    /// Raw per-operation wall-clock samples in seconds.
+    pub samples: Vec<f64>,
+}
+
+impl RegistryTiming {
+    fn measurement(&self) -> Measurement {
+        Measurement {
+            name: format!("registry {} entries={} N={}", self.op, self.entries, self.n),
+            samples: self.samples.clone(),
+        }
+    }
+
+    /// Median seconds per operation.
+    pub fn median_s(&self) -> f64 {
+        self.measurement().median()
+    }
+
+    /// Mean seconds per operation.
+    pub fn mean_s(&self) -> f64 {
+        self.measurement().mean()
+    }
+}
+
+fn time_op<R>(samples: usize, mut f: impl FnMut() -> R) -> Vec<f64> {
+    black_box(f()); // warmup (page cache, allocator)
+    (0..samples)
+        .map(|_| {
+            let t0 = Instant::now();
+            black_box(f());
+            t0.elapsed().as_secs_f64()
+        })
+        .collect()
+}
+
+/// Build a throwaway registry holding a `registry_entries`-deep refit
+/// chain of one fitted model and time `open` / `resolve` / `verify`.
+/// Prints one line per operation; the scratch registry lives in the
+/// system temp dir and is removed before returning.
+pub fn run_registry(cfg: &BackendBenchConfig) -> Vec<RegistryTiming> {
+    let n = cfg.fit_sizes.first().copied().unwrap_or(4);
+    let t = cfg.serve_t;
+    let entries = cfg.registry_entries.max(1);
+    let samples = cfg.registry_samples.max(1);
+    let dir = std::env::temp_dir().join(format!("fica_bench_registry_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    // fica-lint: allow(no-panic) — bench harness over a scratch dir;
+    // aborting the bench run is the right failure mode.
+    std::fs::create_dir_all(&dir).expect("bench registry scratch dir");
+    let data = crate::signal::experiment_a(n, t, cfg.seed ^ 0x4e67);
+    // fica-lint: allow(no-panic) — bench harness, see above
+    let model = Picard::new().max_iters(20).fit(&data.x).expect("bench registry fit");
+    let artifact = dir.join("model.json");
+    // fica-lint: allow(no-panic) — bench harness, see above
+    model.save(&artifact).expect("bench registry save");
+    // fica-lint: allow(no-panic) — bench harness, see above
+    let reg = Registry::open_or_init(&dir).expect("bench registry init");
+    // fica-lint: allow(no-panic) — bench harness, see above
+    reg.push("bench", &artifact, None).expect("bench registry push");
+    for version in 1..entries {
+        // Same artifact bytes each time (content addressing dedups the
+        // file); what grows is the manifest and the lineage chain.
+        // fica-lint: allow(no-panic) — bench harness, see above
+        reg.push("bench", &artifact, Some(("bench".to_string(), version as u64)))
+            .expect("bench registry lineage push");
+    }
+
+    let open_samples = time_op(samples, || {
+        // fica-lint: allow(no-panic) — bench harness, see above
+        Resolver::open(&dir).expect("bench registry open")
+    });
+    // fica-lint: allow(no-panic) — bench harness, see above
+    let resolver = Resolver::open(&dir).expect("bench registry open");
+    let deepest = entries as u64;
+    let resolve_samples = time_op(samples, || {
+        // fica-lint: allow(no-panic) — bench harness, see above
+        resolver.resolve("bench", deepest).expect("bench registry resolve")
+    });
+    let verify_samples = time_op(samples, || {
+        // fica-lint: allow(no-panic) — bench harness, see above
+        reg.verify().expect("bench registry verify")
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let out: Vec<RegistryTiming> = [
+        ("open", open_samples),
+        ("resolve", resolve_samples),
+        ("verify", verify_samples),
+    ]
+    .into_iter()
+    .map(|(op, samples)| RegistryTiming { op, entries, n, t, samples })
+    .collect();
+    for timing in &out {
+        timing.measurement().report();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_registry_times_all_three_operations() {
+        let mut cfg = BackendBenchConfig::smoke();
+        cfg.fit_sizes = vec![3];
+        cfg.serve_t = 200;
+        cfg.registry_entries = 2;
+        cfg.registry_samples = 1;
+        let timings = run_registry(&cfg);
+        let ops: Vec<&str> = timings.iter().map(|r| r.op).collect();
+        assert_eq!(ops, ["open", "resolve", "verify"]);
+        for r in &timings {
+            assert_eq!(r.entries, 2);
+            assert_eq!(r.n, 3);
+            assert_eq!(r.samples.len(), 1);
+            assert!(r.median_s() >= 0.0);
+        }
+    }
+}

@@ -105,6 +105,7 @@ pub fn run_serve(cfg: &BackendBenchConfig) -> Vec<ServeTiming> {
                 parallelism: workers,
                 cache_capacity: 8,
             },
+            registry: None,
         };
         // fica-lint: allow(no-panic) — bench harness on loopback; aborting the run is the right failure mode
         let bound = BoundServer::bind(&opts).expect("bench serve bind");

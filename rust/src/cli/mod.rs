@@ -444,6 +444,12 @@ COMMANDS:
                                  pass over them — O(N^2 x dT), not O(N^2 x T)
         --format <id>            json|bin|csv (default: inferred)
         --model-out <path>       write the refitted model JSON here
+        --registry <dir>         resolve --model-ref through this registry and
+                                 auto-push the saved refit under the parent's
+                                 id with a lineage link (requires --model-ref
+                                 and --model-out)
+        --model-ref <id@ver>     registry entry to refit from (instead of
+                                 --model; loaded via the verifying resolver)
         plus the `fit` solver flags (--algo/--backend/--kernel/--workers/
         --chunk/--out-of-core/--scratch-dir/--tol/--max-iters/--trace/
         --trace-out/--trace-level);
@@ -484,6 +490,11 @@ COMMANDS:
         --parallel <usize>       jobs running concurrently (default 2)
         --cache <usize>          LRU model-cache capacity (default 8; pinned
                                  models are never evicted)
+        --registry <dir>         model registry for `model_ref` transform
+                                 requests (fail-closed: a broken registry
+                                 refuses to start; without this flag
+                                 `model_ref` gets a typed invalid-registry
+                                 error)
         --trace-out <path>       fica.trace/v1 stream of serve.* spans/metrics
         --trace-level <id>       span|metric|all (default all)
     client                       Wire-protocol shim over a running daemon
@@ -496,12 +507,31 @@ COMMANDS:
                                  [--format json|bin|csv] [--tol] [--max-iters]
                                  [--seed] [--algo id] [--model-id key]
                                  [--return-model]
-        transform                submit a transform against --model-id (cached)
-                                 and/or --model-path (server-side file);
+        transform                submit a transform against --model-id (cached),
+                                 --model-path (server-side file, loaded through
+                                 the verifying registry path), or --model-ref
+                                 <id@ver> (resolved through the daemon's
+                                 --registry with hash + schema verification);
                                  --input names the server-side data file;
                                  --sources-out <path> writes the returned
                                  sources as matrix JSON (byte-identical to
                                  `fica apply` on the same model and input)
+    registry                     Versioned model registry with integrity-checked
+                                 artifacts (fica.registry_manifest/v1; see
+                                 docs/REGISTRY_SCHEMA.md). All verbs take
+                                 --dir <dir>: the registry directory
+        push --id <id> --model <path> [--parent <id@ver>]
+                                 content-address the model file, assign the
+                                 next version of <id>, and record lineage
+                                 from the parent's moment snapshot
+        pull --ref <id@ver> --out <path>
+                                 write the verified artifact bytes (re-hashed
+                                 against the manifest digest) to --out
+        verify                   re-hash every artifact, re-parse every model,
+                                 re-derive every lineage digest, walk every
+                                 chain to a root; any violation is a typed
+                                 error and a non-zero exit
+        log                      print the refit-lineage forest
     trace                        Inspect fica.trace/v1 files from --trace-out
         summarize <path>         per-phase/per-span time table, solver
                                  iteration provenance (direction, line-search

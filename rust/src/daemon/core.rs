@@ -33,8 +33,10 @@ use crate::estimator::{IcaModel, Picard};
 use crate::ica::{Algorithm, CancelToken};
 use crate::linalg::Mat;
 use crate::obs;
+use crate::registry::{self, Resolver};
 use crate::util::{mat_from_json, mat_to_json, Json};
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::path::PathBuf;
 use std::sync::Arc;
 
 /// Connection identifier assigned by the server shell (or the script
@@ -174,9 +176,28 @@ struct FitSpec {
     warm: Option<Arc<IcaModel>>,
 }
 
+/// Disk fallback for a transform whose model is not already cached.
+/// Every variant that touches disk routes through the verifying
+/// registry path — nothing in the daemon parses model bytes whose
+/// integrity has not been checked first.
+enum ModelSource {
+    /// No fallback: the model must be in the cache at execution time.
+    CacheOnly,
+    /// A loose artifact path, loaded via
+    /// [`registry::load_model_checked`] (content-address re-hash when
+    /// the file name is a digest, then the fail-closed model parse).
+    Path(String),
+    /// An `id@version` reference resolved through the verifying
+    /// [`Resolver`] of the daemon's configured registry.
+    Registry {
+        id: String,
+        version: u64,
+    },
+}
+
 enum Spec {
     Fit(FitSpec),
-    Transform { key: String, model_path: Option<String>, data: DataSpec },
+    Transform { key: String, source: ModelSource, data: DataSpec },
 }
 
 struct Queued {
@@ -304,10 +325,14 @@ pub struct Core {
     cache: ModelCache,
     conns: BTreeSet<ConnId>,
     counters: ServeCounters,
+    /// Registry directory `model_ref` requests resolve through; `None`
+    /// means `model_ref` is refused with a typed `invalid-registry`
+    /// error.
+    registry: Option<PathBuf>,
 }
 
 impl Core {
-    /// A fresh core with the given sizing.
+    /// A fresh core with the given sizing (no registry configured).
     pub fn new(cfg: CoreConfig) -> Self {
         Self {
             cfg,
@@ -319,7 +344,21 @@ impl Core {
             cache: ModelCache::new(cfg.cache_capacity),
             conns: BTreeSet::new(),
             counters: ServeCounters::default(),
+            registry: None,
         }
+    }
+
+    /// Configure the registry directory `model_ref` transform requests
+    /// resolve through (`fica serve --registry DIR`). The directory is
+    /// opened lazily per job inside the worker closure; the core itself
+    /// stays free of file I/O.
+    pub fn set_registry(&mut self, dir: Option<PathBuf>) {
+        self.registry = dir;
+    }
+
+    /// The configured registry directory, if any.
+    pub fn registry_dir(&self) -> Option<&PathBuf> {
+        self.registry.as_ref()
     }
 
     /// Jobs waiting in the queue (not running).
@@ -596,20 +635,59 @@ impl Core {
         };
         let model_id = p.get("model_id").and_then(Json::as_str).map(str::to_string);
         let model_path = p.get("model_path").and_then(Json::as_str).map(str::to_string);
-        let key = match model_id.or_else(|| model_path.clone()) {
-            Some(k) => k,
-            None => {
+        let model_ref = p.get("model_ref").and_then(Json::as_str).map(str::to_string);
+        let (key, source) = if let Some(r) = model_ref {
+            if model_id.is_some() || model_path.is_some() {
                 self.reject(
                     conn,
                     req.id,
                     ErrorKind::BadRequest,
-                    "transform requires \"model_id\" and/or \"model_path\"",
+                    "\"model_ref\" cannot be combined with \"model_id\" or \"model_path\"",
                     effects,
                 );
                 return;
             }
+            if self.registry.is_none() {
+                self.reject(
+                    conn,
+                    req.id,
+                    ErrorKind::Registry,
+                    "no registry configured: start the daemon with --registry DIR \
+                     to resolve \"model_ref\"",
+                    effects,
+                );
+                return;
+            }
+            match registry::parse_model_ref(&r) {
+                Ok((id, version)) => {
+                    (format!("{id}@{version}"), ModelSource::Registry { id, version })
+                }
+                Err(e) => {
+                    self.reject(conn, req.id, ErrorKind::Registry, &e.to_string(), effects);
+                    return;
+                }
+            }
+        } else {
+            let key = match model_id.or_else(|| model_path.clone()) {
+                Some(k) => k,
+                None => {
+                    self.reject(
+                        conn,
+                        req.id,
+                        ErrorKind::BadRequest,
+                        "transform requires \"model_ref\", \"model_id\" and/or \"model_path\"",
+                        effects,
+                    );
+                    return;
+                }
+            };
+            let source = match model_path {
+                Some(path) => ModelSource::Path(path),
+                None => ModelSource::CacheOnly,
+            };
+            (key, source)
         };
-        if self.cache.get(&key).is_none() && model_path.is_none() {
+        if self.cache.get(&key).is_none() && matches!(source, ModelSource::CacheOnly) {
             self.reject(
                 conn,
                 req.id,
@@ -619,7 +697,7 @@ impl Core {
             );
             return;
         }
-        self.enqueue(conn, req.id, "transform", Spec::Transform { key, model_path, data }, effects);
+        self.enqueue(conn, req.id, "transform", Spec::Transform { key, source, data }, effects);
     }
 
     fn enqueue(
@@ -659,8 +737,8 @@ impl Core {
             obs::hist_observe("serve.wait_s", q.queued.elapsed_s());
             match q.spec {
                 Spec::Fit(spec) => self.dispatch_fit(q.job, q.conn, q.op, q.cancel, spec, effects),
-                Spec::Transform { key, model_path, data } => {
-                    self.dispatch_transform(q.job, q.conn, q.cancel, key, model_path, data, effects)
+                Spec::Transform { key, source, data } => {
+                    self.dispatch_transform(q.job, q.conn, q.cancel, key, source, data, effects)
                 }
             }
         }
@@ -735,7 +813,7 @@ impl Core {
         conn: ConnId,
         cancel: CancelToken,
         key: String,
-        model_path: Option<String>,
+        source: ModelSource,
         data: DataSpec,
         effects: &mut Vec<Effect>,
     ) {
@@ -772,7 +850,8 @@ impl Core {
             None
         };
         let cache_key = key.clone();
-        let run = Box::new(move || transform_batch(cached, model_path, &key, datas));
+        let registry_dir = self.registry.clone();
+        let run = Box::new(move || transform_batch(cached, source, registry_dir, &key, datas));
         let mut span = Self::job_span(job, "transform");
         if span.is_recording() {
             span.field_u64("batched", members.len() as u64);
@@ -986,46 +1065,64 @@ impl Core {
 }
 
 /// Execute one transform window over a batch: resolve the model
-/// (cached or loaded from disk), validate each member, stack the valid
-/// members' columns into a single matrix, run one `U·(x − μ)` window,
-/// and split the sources back per member.
+/// (cached, loaded through the verifying registry path, or resolved by
+/// `id@version`), validate each member, stack the valid members'
+/// columns into a single matrix, run one `U·(x − μ)` window, and split
+/// the sources back per member.
 fn transform_batch(
     cached: Option<Arc<IcaModel>>,
-    model_path: Option<String>,
+    source: ModelSource,
+    registry_dir: Option<PathBuf>,
     key: &str,
     datas: Vec<DataSpec>,
 ) -> JobResult {
     let (model, loaded) = match cached {
         Some(m) => (m, None),
-        None => match model_path.as_deref().map(IcaModel::load) {
-            Some(Ok(m)) => {
-                let arc = Arc::new(m);
-                (arc.clone(), Some(arc))
-            }
-            Some(Err(e)) => {
-                let msg = format!("loading model {key:?}: {e}");
-                return JobResult::Transform {
-                    loaded: None,
-                    outputs: datas
-                        .iter()
-                        .map(|_| Err(IcaError::invalid_model(msg.clone())))
-                        .collect(),
-                };
-            }
-            None => {
-                return JobResult::Transform {
-                    loaded: None,
-                    outputs: datas
-                        .iter()
-                        .map(|_| {
-                            Err(IcaError::invalid_model(format!(
-                                "model {key:?} was evicted before dispatch and has no path"
-                            )))
-                        })
-                        .collect(),
+        None => {
+            let resolved = match source {
+                ModelSource::CacheOnly => Err(IcaError::invalid_model(format!(
+                    "model {key:?} was evicted before dispatch and has no path"
+                ))),
+                // Loose paths go through the same verifying loader as
+                // `fica client --model-path`: content-address re-hash
+                // for digest-named files, then the fail-closed parse.
+                ModelSource::Path(path) => registry::load_model_checked(&path),
+                ModelSource::Registry { id, version } => match registry_dir {
+                    Some(dir) => {
+                        Resolver::open(dir).and_then(|r| r.resolve(&id, version))
+                    }
+                    None => Err(IcaError::invalid_registry(format!(
+                        "model {key:?} needs a registry but none is configured"
+                    ))),
+                },
+            };
+            match resolved {
+                Ok(m) => {
+                    let arc = Arc::new(m);
+                    (arc.clone(), Some(arc))
+                }
+                Err(e) => {
+                    // Preserve the registry error type across the
+                    // per-member fan-out so the wire kind stays
+                    // `invalid-registry` for integrity refusals.
+                    let registry_err = matches!(e, IcaError::InvalidRegistry { .. });
+                    let msg = format!("loading model {key:?}: {e}");
+                    return JobResult::Transform {
+                        loaded: None,
+                        outputs: datas
+                            .iter()
+                            .map(|_| {
+                                Err(if registry_err {
+                                    IcaError::invalid_registry(msg.clone())
+                                } else {
+                                    IcaError::invalid_model(msg.clone())
+                                })
+                            })
+                            .collect(),
+                    };
                 }
             }
-        },
+        }
     };
     let nf = model.n_features();
     let mut outputs: Vec<Option<Result<Mat, IcaError>>> = Vec::new();
@@ -1177,5 +1274,69 @@ mod tests {
     fn test_model() -> IcaModel {
         let x = crate::signal::experiment_a(3, 400, 5).x;
         Picard::new().max_iters(50).tol(1e-6).fit(&x).expect("fit test model")
+    }
+
+    const DATA_2X2: &str = "\"data\":{\"rows\":2,\"cols\":2,\"data\":[1,2,3,4]}";
+
+    #[test]
+    fn model_ref_without_registry_is_typed_invalid_registry() {
+        let mut core = Core::new(CoreConfig::default());
+        core.handle(Event::Connected(1));
+        let params = format!("{{{DATA_2X2},\"model_ref\":\"m@1\"}}");
+        let fx = core.handle(Event::Frame(1, req(1, "transform", &params)));
+        let text = &texts(&fx)[0];
+        assert!(text.contains("invalid-registry"), "got: {text}");
+        assert!(text.contains("--registry"), "got: {text}");
+        assert_eq!(core.counters().rejected, 1);
+    }
+
+    #[test]
+    fn malformed_model_ref_is_typed_invalid_registry() {
+        let mut core = Core::new(CoreConfig::default());
+        core.set_registry(Some(PathBuf::from("/nonexistent-registry")));
+        assert!(core.registry_dir().is_some());
+        core.handle(Event::Connected(1));
+        for bad in ["m", "m@", "@1", "m@zero", "M@1", "m@0"] {
+            let params = format!("{{{DATA_2X2},\"model_ref\":\"{bad}\"}}");
+            let fx = core.handle(Event::Frame(1, req(1, "transform", &params)));
+            let text = &texts(&fx)[0];
+            assert!(text.contains("invalid-registry"), "{bad}: {text}");
+        }
+    }
+
+    #[test]
+    fn model_ref_is_exclusive_of_other_model_params() {
+        let mut core = Core::new(CoreConfig::default());
+        core.set_registry(Some(PathBuf::from("/nonexistent-registry")));
+        core.handle(Event::Connected(1));
+        let params = format!("{{{DATA_2X2},\"model_ref\":\"m@1\",\"model_id\":\"m\"}}");
+        let fx = core.handle(Event::Frame(1, req(1, "transform", &params)));
+        assert!(texts(&fx)[0].contains("bad-request"));
+    }
+
+    #[test]
+    fn model_ref_resolution_failure_is_typed_per_member() {
+        // The registry dir is configured but empty: dispatch succeeds
+        // and the job itself fails with a typed registry error.
+        let dir = std::env::temp_dir()
+            .join(format!("fica_core_reg_test_{}", std::process::id()));
+        crate::registry::Registry::open_or_init(&dir).expect("init registry");
+        let mut core = Core::new(CoreConfig::default());
+        core.set_registry(Some(dir.clone()));
+        core.handle(Event::Connected(1));
+        let params = format!("{{{DATA_2X2},\"model_ref\":\"m@1\"}}");
+        let fx = core.handle(Event::Frame(1, req(1, "transform", &params)));
+        let run = fx
+            .into_iter()
+            .find_map(|e| match e {
+                Effect::Run(job, work) => Some((job, work)),
+                _ => None,
+            })
+            .expect("transform dispatched");
+        let result = run.1.execute();
+        let fx = core.handle(Event::JobDone(run.0, result));
+        let text = &texts(&fx)[0];
+        assert!(text.contains("invalid-registry"), "got: {text}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

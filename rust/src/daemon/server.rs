@@ -22,7 +22,6 @@ use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 #[cfg(unix)]
 use std::os::unix::net::{UnixListener, UnixStream};
-#[cfg(unix)]
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
@@ -152,6 +151,10 @@ pub struct ServeOptions {
     pub workers: usize,
     /// Core sizing (queue bound, scheduler parallelism, cache capacity).
     pub core: CoreConfig,
+    /// Registry directory `model_ref` transform requests resolve
+    /// through (`--registry DIR`); `None` refuses `model_ref` with a
+    /// typed `invalid-registry` error.
+    pub registry: Option<PathBuf>,
 }
 
 /// A bound, not-yet-serving daemon. Splitting bind from [`run`] lets
@@ -164,6 +167,7 @@ pub struct BoundServer {
     addr_str: String,
     workers: usize,
     core_cfg: CoreConfig,
+    registry: Option<PathBuf>,
 }
 
 impl BoundServer {
@@ -199,6 +203,7 @@ impl BoundServer {
             addr_str,
             workers: opts.workers,
             core_cfg: opts.core,
+            registry: opts.registry.clone(),
         })
     }
 
@@ -213,9 +218,10 @@ impl BoundServer {
     /// server; on return all threads are joined and (for Unix) the
     /// socket file is removed.
     pub fn run(self) -> Result<(), IcaError> {
-        let BoundServer { listener, addr_str, workers, core_cfg } = self;
+        let BoundServer { listener, addr_str, workers, core_cfg, registry } = self;
         let pool = WorkerPool::new(workers);
         let mut core = Core::new(core_cfg);
+        core.set_registry(registry);
         let (tx, rx) = mpsc::channel::<Msg>();
         let stop = Arc::new(AtomicBool::new(false));
 

@@ -199,6 +199,10 @@ pub enum ErrorKind {
     Io,
     /// The response the daemon built exceeds [`MAX_FRAME`].
     ResponseTooLarge,
+    /// A registry failure: no registry configured for a `model_ref`
+    /// request, a malformed reference, an unknown `id@version`, or an
+    /// artifact whose bytes fail integrity verification.
+    Registry,
 }
 
 impl ErrorKind {
@@ -217,6 +221,7 @@ impl ErrorKind {
             ErrorKind::Solve => "solve-error",
             ErrorKind::Io => "io",
             ErrorKind::ResponseTooLarge => "response-too-large",
+            ErrorKind::Registry => "invalid-registry",
         }
     }
 
@@ -225,6 +230,7 @@ impl ErrorKind {
         match e {
             IcaError::Cancelled => ErrorKind::Cancelled,
             IcaError::Io { .. } => ErrorKind::Io,
+            IcaError::InvalidRegistry { .. } => ErrorKind::Registry,
             IcaError::SingularCovariance { .. }
             | IcaError::SingularMatrix { .. }
             | IcaError::Runtime { .. } => ErrorKind::Solve,

@@ -15,6 +15,8 @@
 
 use crate::error::IcaError;
 use crate::linalg::{matmul_a_bt_into, Mat};
+use crate::util::{mat_to_json, Json};
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 /// A serializable copy of an accumulator's raw sums: the sufficient
@@ -76,6 +78,26 @@ impl MomentSnapshot {
             ));
         }
         Ok(())
+    }
+
+    /// The canonical JSON form of the snapshot — sorted keys, compact,
+    /// shortest-roundtrip floats. This is byte-for-byte the `stats`
+    /// section a schema-v2 model serializes, and the exact bytes
+    /// `crate::registry` hashes into a lineage link, so the two views of
+    /// "which moments seeded this refit" can never drift apart.
+    pub fn canonical_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("count".to_string(), Json::Num(self.count as f64));
+        obj.insert(
+            "pivot".to_string(),
+            Json::Arr(self.pivot.iter().map(|&v| Json::Num(v)).collect()),
+        );
+        obj.insert(
+            "sum".to_string(),
+            Json::Arr(self.sum.iter().map(|&v| Json::Num(v)).collect()),
+        );
+        obj.insert("outer".to_string(), mat_to_json(&self.outer));
+        Json::Obj(obj)
     }
 }
 

@@ -63,6 +63,10 @@ pub enum IcaError {
     /// A `fica.wire/v1` frame failed fail-closed validation (bad length
     /// prefix, malformed JSON, wrong schema tag, missing field).
     InvalidWire { reason: String },
+    /// A `fica.registry_manifest/v1` registry failed fail-closed
+    /// validation (bad schema tag, duplicate id/version, malformed or
+    /// mismatched sha256, dangling or cyclic lineage, missing artifact).
+    InvalidRegistry { reason: String },
 }
 
 impl IcaError {
@@ -94,6 +98,11 @@ impl IcaError {
     /// Shorthand for [`IcaError::InvalidWire`].
     pub fn invalid_wire(reason: impl Into<String>) -> Self {
         IcaError::InvalidWire { reason: reason.into() }
+    }
+
+    /// Shorthand for [`IcaError::InvalidRegistry`].
+    pub fn invalid_registry(reason: impl Into<String>) -> Self {
+        IcaError::InvalidRegistry { reason: reason.into() }
     }
 }
 
@@ -129,6 +138,9 @@ impl fmt::Display for IcaError {
             IcaError::Runtime { reason } => write!(f, "runtime error: {reason}"),
             IcaError::Cancelled => write!(f, "cancelled before convergence"),
             IcaError::InvalidWire { reason } => write!(f, "invalid wire frame: {reason}"),
+            IcaError::InvalidRegistry { reason } => {
+                write!(f, "invalid registry: {reason}")
+            }
         }
     }
 }

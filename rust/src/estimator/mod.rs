@@ -816,18 +816,10 @@ impl IcaModel {
         obj.insert("unmixing_w".to_string(), mat_to_json(&self.w));
         obj.insert("fit".to_string(), Json::Obj(fit));
         if let Some(s) = &self.stats {
-            let mut st = BTreeMap::new();
-            st.insert("count".to_string(), Json::Num(s.count as f64));
-            st.insert(
-                "pivot".to_string(),
-                Json::Arr(s.pivot.iter().map(|&v| Json::Num(v)).collect()),
-            );
-            st.insert(
-                "sum".to_string(),
-                Json::Arr(s.sum.iter().map(|&v| Json::Num(v)).collect()),
-            );
-            st.insert("outer".to_string(), mat_to_json(&s.outer));
-            obj.insert("stats".to_string(), Json::Obj(st));
+            // The canonical snapshot form is shared with the registry's
+            // lineage hashing: what the artifact stores is byte-for-byte
+            // what `registry::snapshot_sha256` digests.
+            obj.insert("stats".to_string(), s.canonical_json());
         }
         Ok(Json::Obj(obj))
     }

@@ -70,6 +70,12 @@
 //!   length-prefixed `fica.wire/v1` protocol over TCP or Unix sockets;
 //!   fit/refit/transform jobs run through a bounded queue with per-job
 //!   cancellation and graceful drain on shutdown.
+//! - **Registry** ([`registry`]): versioned, integrity-checked model
+//!   artifacts — a fail-closed `fica.registry_manifest/v1` manifest,
+//!   content-addressed artifact storage (SHA-256 of the exact bytes),
+//!   auditable `fit_append` refit lineage, and the verifying
+//!   [`registry::Resolver`] the daemon and CLI load deployed models
+//!   through.
 //!
 //! The layer map, the numerical-equivalence contracts between execution
 //! paths, and the out-of-core data flow are documented in
@@ -90,6 +96,7 @@ pub mod bench;
 pub mod ica;
 pub mod linalg;
 pub mod obs;
+pub mod registry;
 pub mod rng;
 pub mod testkit;
 pub mod runtime;

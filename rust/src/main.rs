@@ -28,9 +28,10 @@ fn main() {
             std::process::exit(2);
         }
     };
-    // Only `trace` and `client` take positional operands; everywhere
-    // else a stray token is the hard error it has always been.
-    if !matches!(args.command.as_str(), "trace" | "client") {
+    // Only `trace`, `client` and `registry` take positional operands;
+    // everywhere else a stray token is the hard error it has always
+    // been.
+    if !matches!(args.command.as_str(), "trace" | "client" | "registry") {
         if let Some(tok) = args.positionals.first() {
             eprintln!("error: unexpected positional argument: {tok}\n\n{USAGE}");
             std::process::exit(2);
@@ -51,6 +52,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "client" => cmd_client(&args),
         "trace" => cmd_trace(&args),
+        "registry" => cmd_registry(&args),
         "run" => {
             eprintln!(
                 "note: `fica run` is deprecated; use `fica fit` \
@@ -250,21 +252,57 @@ fn cmd_fit(args: &Args, legacy_run: bool) -> i32 {
 /// incremental refit — merge the model's stored moments with the appended
 /// samples, re-derive the whitener, and refine `W` from the previous fit.
 fn cmd_refit(args: &Args) -> i32 {
-    let Some(model_path) = args.get("model") else {
-        eprintln!("--model is required\n\n{USAGE}");
-        return 2;
-    };
     let Some(input) = args.get("input") else {
         eprintln!("--input is required (the appended samples)\n\n{USAGE}");
         return 2;
     };
-    let model = match IcaModel::load(model_path) {
-        Ok(m) => m,
-        Err(e) => {
-            eprintln!("error: {e}");
-            return 1;
+    let registry_dir = args.get("registry");
+    // The parent comes either from a loose file (--model PATH) or from
+    // a registry (--registry DIR --model-ref id@version); the latter
+    // loads through the verifying resolver and remembers the parent
+    // entry so the refitted artifact can be pushed with lineage.
+    let (model, parent) = match (args.get("model"), args.get("model-ref")) {
+        (Some(_), Some(_)) => {
+            eprintln!("--model and --model-ref are mutually exclusive\n\n{USAGE}");
+            return 2;
+        }
+        (Some(model_path), None) => match IcaModel::load(model_path) {
+            Ok(m) => (m, None),
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        },
+        (None, Some(model_ref)) => {
+            let Some(dir) = registry_dir else {
+                eprintln!("--model-ref requires --registry DIR\n\n{USAGE}");
+                return 2;
+            };
+            let resolved = faster_ica::registry::parse_model_ref(model_ref).and_then(|(id, v)| {
+                faster_ica::registry::Resolver::open(dir)
+                    .and_then(|r| r.resolve(&id, v))
+                    .map(|m| (m, (id, v)))
+            });
+            match resolved {
+                Ok((m, p)) => (m, Some(p)),
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return 1;
+                }
+            }
+        }
+        (None, None) => {
+            eprintln!("--model (or --registry + --model-ref) is required\n\n{USAGE}");
+            return 2;
         }
     };
+    if registry_dir.is_some() && parent.is_none() {
+        eprintln!(
+            "--registry auto-push needs the parent's registry entry: \
+             name it with --model-ref id@version instead of --model\n\n{USAGE}"
+        );
+        return 2;
+    }
     let mut flags = match SolveFlags::from_args(args) {
         Ok(f) => f,
         Err(e) => {
@@ -359,16 +397,48 @@ fn cmd_refit(args: &Args) -> i32 {
             .map(|c| c.to_string())
             .unwrap_or_else(|| "?".into()),
     );
-    if let Some(out) = args.get("model-out") {
-        match refitted.save(out) {
-            Ok(()) => println!("model saved to {out}"),
+    let out = match args.get("model-out") {
+        Some(out) => match refitted.save(out) {
+            Ok(()) => {
+                println!("model saved to {out}");
+                Some(out)
+            }
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        },
+        None => {
+            if registry_dir.is_some() {
+                eprintln!("--registry auto-push requires --model-out\n\n{USAGE}");
+                return 2;
+            }
+            println!("(no --model-out: refitted model discarded)");
+            None
+        }
+    };
+    // Auto-push: the saved refit lands in the registry under the
+    // parent's id, with a lineage link to the exact parent version (and
+    // its moment-snapshot digest, recorded by `Registry::push`).
+    if let (Some(dir), Some(out), Some((pid, pver))) = (registry_dir, out, parent) {
+        let reg = match faster_ica::registry::Registry::open(dir) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        };
+        match reg.push(&pid, out, Some((pid.clone(), pver))) {
+            Ok(entry) => println!(
+                "pushed {}  sha256:{}  refit-of:{pid}@{pver}",
+                entry.reference(),
+                entry.sha256
+            ),
             Err(e) => {
                 eprintln!("error: {e}");
                 return 1;
             }
         }
-    } else {
-        println!("(no --model-out: refitted model discarded)");
     }
     if info.converged {
         0
@@ -524,8 +594,14 @@ fn cmd_bench(args: &Args) -> i32 {
         cfg.serve_transforms
     );
     let serves = faster_ica::bench::serve::run_serve(&cfg);
+    println!(
+        "bench: registry resolve | {} lineage entries | open/resolve/verify x {} samples",
+        cfg.registry_entries, cfg.registry_samples
+    );
+    let registries = faster_ica::bench::registry::run_registry(&cfg);
     drop(obs_guard);
-    let mut report = bench_backends::report_json(&cfg, &timings, &fits, &refits, &serves);
+    let mut report =
+        bench_backends::report_json(&cfg, &timings, &fits, &refits, &serves, &registries);
     if let Json::Obj(ref mut m) = report {
         m.insert("metrics".to_string(), recorder.snapshot_json());
     }
@@ -635,10 +711,26 @@ fn cmd_serve(args: &Args) -> i32 {
     };
     let trace_guard =
         trace_sink.as_ref().map(|s| obs::install(Arc::clone(s) as Arc<dyn Recorder>));
+    let registry = match args.get("registry") {
+        None => None,
+        Some(dir) => match faster_ica::registry::Registry::open(dir) {
+            // Fail-closed at startup: a daemon pointed at a broken
+            // registry refuses to start rather than failing per request.
+            Ok(r) => {
+                println!("fica serve: registry {}", r.dir().display());
+                Some(r.dir().to_path_buf())
+            }
+            Err(e) => {
+                eprintln!("error: --registry {dir}: {e}");
+                return 1;
+            }
+        },
+    };
     let opts = ServeOptions {
         addr,
         workers,
         core: CoreConfig { queue_bound, parallelism: parallel, cache_capacity: cache },
+        registry,
     };
     let bound = match BoundServer::bind(&opts) {
         Ok(b) => b,
@@ -763,6 +855,9 @@ fn client_params(args: &Args) -> Result<faster_ica::util::Json, String> {
     if let Some(p) = args.get("model-path") {
         m.insert("model_path".to_string(), Json::Str(p.to_string()));
     }
+    if let Some(r) = args.get("model-ref") {
+        m.insert("model_ref".to_string(), Json::Str(r.to_string()));
+    }
     if args.has("return-model") {
         m.insert("return_model".to_string(), Json::Bool(true));
     }
@@ -868,6 +963,123 @@ fn cmd_trace(args: &Args) -> i32 {
         },
         other => {
             eprintln!("error: unknown trace verb: {other} (summarize|validate)\n\n{USAGE}");
+            2
+        }
+    }
+}
+
+/// `fica registry <push|pull|verify|log> --dir DIR`: operate on a local
+/// versioned model registry — content-addressed artifacts under a
+/// fail-closed `fica.registry_manifest/v1` manifest (see
+/// `docs/REGISTRY_SCHEMA.md`). `verify` re-hashes every artifact,
+/// re-parses every model, re-derives every lineage digest and walks
+/// every chain to a root; any violation is a typed error and a non-zero
+/// exit.
+fn cmd_registry(args: &Args) -> i32 {
+    use faster_ica::registry::{parse_model_ref, Registry as ModelRegistry};
+    let Some(verb) = args.positionals.first().map(String::as_str) else {
+        eprintln!(
+            "error: registry needs a verb: \
+             fica registry <push|pull|verify|log> --dir DIR\n\n{USAGE}"
+        );
+        return 2;
+    };
+    if args.positionals.len() > 1 {
+        eprintln!("error: unexpected positional argument: {}\n\n{USAGE}", args.positionals[1]);
+        return 2;
+    }
+    let Some(dir) = args.get("dir") else {
+        eprintln!("error: --dir DIR is required\n\n{USAGE}");
+        return 2;
+    };
+    match verb {
+        "push" => {
+            let (Some(id), Some(model)) = (args.get("id"), args.get("model")) else {
+                eprintln!("error: push requires --id ID and --model FILE\n\n{USAGE}");
+                return 2;
+            };
+            let parent = match args.get("parent").map(parse_model_ref).transpose() {
+                Ok(p) => p,
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return 1;
+                }
+            };
+            let reg = match ModelRegistry::open_or_init(dir) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return 1;
+                }
+            };
+            match reg.push(id, model, parent) {
+                Ok(entry) => {
+                    let lineage = entry
+                        .lineage
+                        .as_ref()
+                        .map(|l| format!("  refit-of:{}@{}", l.parent_id, l.parent_version))
+                        .unwrap_or_default();
+                    println!("pushed {}  sha256:{}{lineage}", entry.reference(), entry.sha256);
+                    0
+                }
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    1
+                }
+            }
+        }
+        "pull" => {
+            let (Some(reference), Some(out)) = (args.get("ref"), args.get("out")) else {
+                eprintln!("error: pull requires --ref id@version and --out FILE\n\n{USAGE}");
+                return 2;
+            };
+            let pulled = parse_model_ref(reference).and_then(|(id, version)| {
+                ModelRegistry::open(dir).and_then(|reg| reg.pull(&id, version))
+            });
+            match pulled {
+                Ok(bytes) => {
+                    if let Err(e) = std::fs::write(out, &bytes) {
+                        eprintln!("error: cannot write {out}: {e}");
+                        return 1;
+                    }
+                    println!("pulled {reference} ({} bytes) to {out}", bytes.len());
+                    0
+                }
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    1
+                }
+            }
+        }
+        "verify" => match ModelRegistry::open(dir).and_then(|reg| reg.verify()) {
+            Ok(s) => {
+                println!(
+                    "registry {dir}: OK ({} entries, {} artifacts, {} roots)",
+                    s.entries, s.artifacts, s.roots
+                );
+                0
+            }
+            Err(e) => {
+                eprintln!("error: registry {dir}: {e}");
+                1
+            }
+        },
+        "log" => match ModelRegistry::open(dir).and_then(|reg| reg.log_tree()) {
+            Ok(tree) => {
+                if tree.is_empty() {
+                    println!("registry {dir}: empty");
+                } else {
+                    print!("{tree}");
+                }
+                0
+            }
+            Err(e) => {
+                eprintln!("error: registry {dir}: {e}");
+                1
+            }
+        },
+        other => {
+            eprintln!("error: unknown registry verb: {other} (push|pull|verify|log)\n\n{USAGE}");
             2
         }
     }

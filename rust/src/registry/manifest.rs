@@ -1,0 +1,534 @@
+//! The `fica.registry_manifest/v1` manifest: typed entries, fail-closed
+//! parsing, and the invariant validation every read and write runs.
+//!
+//! A manifest is the registry's single source of truth: one entry per
+//! published model version, each naming the content address (SHA-256 of
+//! the exact artifact bytes) and, for warm-start refits, the lineage it
+//! was created from. The codec is strict in both directions — see
+//! `docs/REGISTRY_SCHEMA.md` for the field-by-field contract — and every
+//! violation is a typed [`IcaError::InvalidRegistry`].
+
+use super::sha256::is_hex_digest;
+use crate::error::IcaError;
+use crate::util::Json;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Schema tag stamped into every manifest. The parser accepts exactly
+/// this tag — an unknown or missing tag is a typed error, never a guess.
+pub const REGISTRY_SCHEMA: &str = "fica.registry_manifest/v1";
+
+/// Where a model version came from: the parent model version whose `W`,
+/// L-BFGS memory and stored moments seeded the `fit_append` refit, plus
+/// the SHA-256 of the parent's moment snapshot (its canonical `stats`
+/// JSON) at refit time — the auditable link in a refit chain.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Lineage {
+    /// Model id of the parent entry.
+    pub parent_id: String,
+    /// Version of the parent entry.
+    pub parent_version: u64,
+    /// SHA-256 (64-hex) of the parent's canonical moment-snapshot JSON.
+    pub parent_snapshot_sha256: String,
+}
+
+/// One published model version.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ManifestEntry {
+    /// Model id: 1–128 chars of `[a-z0-9._-]` (no `@`, so `id@version`
+    /// refs parse unambiguously).
+    pub id: String,
+    /// Version, assigned by push as `max(existing) + 1`, starting at 1.
+    pub version: u64,
+    /// SHA-256 (64-hex) of the exact artifact file bytes.
+    pub sha256: String,
+    /// Refit provenance; `None` for root fits.
+    pub lineage: Option<Lineage>,
+}
+
+/// A parsed, not-yet-necessarily-valid manifest. [`Manifest::validate`]
+/// checks the cross-entry invariants; [`Manifest::parse_str`] runs it
+/// automatically, so a manifest obtained from bytes is always valid.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Manifest {
+    /// All published entries.
+    pub entries: Vec<ManifestEntry>,
+}
+
+/// `true` iff `id` is a legal model id: 1–128 chars of `[a-z0-9._-]`.
+pub fn is_valid_id(id: &str) -> bool {
+    !id.is_empty()
+        && id.len() <= 128
+        && id
+            .bytes()
+            .all(|b| b.is_ascii_lowercase() || b.is_ascii_digit() || matches!(b, b'.' | b'_' | b'-'))
+}
+
+/// Parse an `id@version` reference (e.g. `eeg-frontal@3`). Fail-closed:
+/// the id must be legal, the version a base-10 integer ≥ 1.
+pub fn parse_model_ref(s: &str) -> Result<(String, u64), IcaError> {
+    let Some((id, ver)) = s.rsplit_once('@') else {
+        return Err(IcaError::invalid_registry(format!(
+            "model ref {s:?} must be id@version"
+        )));
+    };
+    if !is_valid_id(id) {
+        return Err(IcaError::invalid_registry(format!(
+            "model ref {s:?}: id must be 1-128 chars of [a-z0-9._-]"
+        )));
+    }
+    let version: u64 = ver.parse().map_err(|_| {
+        IcaError::invalid_registry(format!("model ref {s:?}: version is not an integer"))
+    })?;
+    if version == 0 {
+        return Err(IcaError::invalid_registry(format!(
+            "model ref {s:?}: versions start at 1"
+        )));
+    }
+    Ok((id.to_string(), version))
+}
+
+fn bad(reason: impl Into<String>) -> IcaError {
+    IcaError::invalid_registry(reason)
+}
+
+fn require_u64(v: &Json, what: &str) -> Result<u64, IcaError> {
+    let x = v
+        .as_f64()
+        .ok_or_else(|| bad(format!("{what} is not a number")))?;
+    if !(x.is_finite() && x >= 0.0 && x.fract() == 0.0 && x <= 9.007_199_254_740_992e15) {
+        return Err(bad(format!("{what} is not a non-negative integer")));
+    }
+    Ok(x as u64)
+}
+
+fn require_str<'a>(v: &'a Json, what: &str) -> Result<&'a str, IcaError> {
+    v.as_str().ok_or_else(|| bad(format!("{what} is not a string")))
+}
+
+fn require_keys(
+    obj: &BTreeMap<String, Json>,
+    allowed: &[&str],
+    what: &str,
+) -> Result<(), IcaError> {
+    for key in obj.keys() {
+        if !allowed.contains(&key.as_str()) {
+            return Err(bad(format!("{what}: unknown field {key:?}")));
+        }
+    }
+    Ok(())
+}
+
+impl Lineage {
+    fn from_json(v: &Json, what: &str) -> Result<Lineage, IcaError> {
+        let Json::Obj(obj) = v else {
+            return Err(bad(format!("{what} is not an object")));
+        };
+        require_keys(obj, &["parent_id", "parent_version", "parent_snapshot_sha256"], what)?;
+        let parent_id = require_str(
+            obj.get("parent_id").ok_or_else(|| bad(format!("{what}: missing \"parent_id\"")))?,
+            &format!("{what}.parent_id"),
+        )?
+        .to_string();
+        let parent_version = require_u64(
+            obj.get("parent_version")
+                .ok_or_else(|| bad(format!("{what}: missing \"parent_version\"")))?,
+            &format!("{what}.parent_version"),
+        )?;
+        let parent_snapshot_sha256 = require_str(
+            obj.get("parent_snapshot_sha256")
+                .ok_or_else(|| bad(format!("{what}: missing \"parent_snapshot_sha256\"")))?,
+            &format!("{what}.parent_snapshot_sha256"),
+        )?
+        .to_string();
+        Ok(Lineage { parent_id, parent_version, parent_snapshot_sha256 })
+    }
+
+    fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("parent_id".to_string(), Json::Str(self.parent_id.clone()));
+        obj.insert(
+            "parent_version".to_string(),
+            Json::Num(self.parent_version as f64),
+        );
+        obj.insert(
+            "parent_snapshot_sha256".to_string(),
+            Json::Str(self.parent_snapshot_sha256.clone()),
+        );
+        Json::Obj(obj)
+    }
+}
+
+impl ManifestEntry {
+    /// The entry's `id@version` reference string.
+    pub fn reference(&self) -> String {
+        format!("{}@{}", self.id, self.version)
+    }
+
+    fn from_json(v: &Json, what: &str) -> Result<ManifestEntry, IcaError> {
+        let Json::Obj(obj) = v else {
+            return Err(bad(format!("{what} is not an object")));
+        };
+        require_keys(obj, &["id", "version", "sha256", "lineage"], what)?;
+        let id = require_str(
+            obj.get("id").ok_or_else(|| bad(format!("{what}: missing \"id\"")))?,
+            &format!("{what}.id"),
+        )?
+        .to_string();
+        let version = require_u64(
+            obj.get("version").ok_or_else(|| bad(format!("{what}: missing \"version\"")))?,
+            &format!("{what}.version"),
+        )?;
+        let sha256 = require_str(
+            obj.get("sha256").ok_or_else(|| bad(format!("{what}: missing \"sha256\"")))?,
+            &format!("{what}.sha256"),
+        )?
+        .to_string();
+        let lineage = match obj.get("lineage") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(Lineage::from_json(v, &format!("{what}.lineage"))?),
+        };
+        Ok(ManifestEntry { id, version, sha256, lineage })
+    }
+
+    fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("id".to_string(), Json::Str(self.id.clone()));
+        obj.insert("version".to_string(), Json::Num(self.version as f64));
+        obj.insert("sha256".to_string(), Json::Str(self.sha256.clone()));
+        if let Some(l) = &self.lineage {
+            obj.insert("lineage".to_string(), l.to_json());
+        }
+        Json::Obj(obj)
+    }
+}
+
+impl Manifest {
+    /// An empty manifest (what `push` starts from in a fresh registry).
+    pub fn new() -> Manifest {
+        Manifest { entries: Vec::new() }
+    }
+
+    /// Parse and validate a manifest from its JSON text. Fail-closed in
+    /// this order: JSON → object → exact schema tag → entries → the
+    /// cross-entry invariants of [`Manifest::validate`].
+    pub fn parse_str(s: &str) -> Result<Manifest, IcaError> {
+        let v = Json::parse(s).map_err(|e| bad(format!("manifest: {e}")))?;
+        Manifest::from_json(&v)
+    }
+
+    /// Parse and validate a manifest from a JSON value (see
+    /// [`Manifest::parse_str`]).
+    pub fn from_json(v: &Json) -> Result<Manifest, IcaError> {
+        let Json::Obj(obj) = v else {
+            return Err(bad("manifest is not a JSON object"));
+        };
+        require_keys(obj, &["schema", "entries"], "manifest")?;
+        let schema = require_str(
+            obj.get("schema").ok_or_else(|| bad("manifest: missing \"schema\""))?,
+            "manifest.schema",
+        )?;
+        if schema != REGISTRY_SCHEMA {
+            return Err(bad(format!(
+                "manifest schema {schema:?}, expected {REGISTRY_SCHEMA:?}"
+            )));
+        }
+        let arr = obj
+            .get("entries")
+            .and_then(|e| e.as_arr())
+            .ok_or_else(|| bad("manifest: missing/bad \"entries\""))?;
+        let mut entries = Vec::with_capacity(arr.len());
+        for (i, e) in arr.iter().enumerate() {
+            entries.push(ManifestEntry::from_json(e, &format!("entries[{i}]"))?);
+        }
+        let m = Manifest { entries };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Serialize to a JSON value with entries sorted by `(id, version)` —
+    /// the canonical order, so the on-disk manifest is byte-stable.
+    pub fn to_json(&self) -> Json {
+        let mut sorted: Vec<&ManifestEntry> = self.entries.iter().collect();
+        sorted.sort_by(|a, b| (&a.id, a.version).cmp(&(&b.id, b.version)));
+        let mut obj = BTreeMap::new();
+        obj.insert("schema".to_string(), Json::Str(REGISTRY_SCHEMA.to_string()));
+        obj.insert(
+            "entries".to_string(),
+            Json::Arr(sorted.iter().map(|e| e.to_json()).collect()),
+        );
+        Json::Obj(obj)
+    }
+
+    /// The canonical compact JSON text (sorted keys, sorted entries,
+    /// trailing newline) the registry writes to `manifest.json`.
+    pub fn to_json_string(&self) -> String {
+        let mut s = self.to_json().to_string_compact();
+        s.push('\n');
+        s
+    }
+
+    /// Cross-entry invariants, every one a typed
+    /// [`IcaError::InvalidRegistry`]:
+    ///
+    /// - legal ids, versions ≥ 1, well-formed 64-hex digests;
+    /// - no duplicate `(id, version)`;
+    /// - per id, versions are exactly `1..=max` (push never leaves gaps);
+    /// - every lineage parent exists (no dangling parents, no
+    ///   self-parents) and its snapshot digest is well-formed;
+    /// - every lineage chain terminates at a root (no cycles).
+    pub fn validate(&self) -> Result<(), IcaError> {
+        let mut seen: BTreeSet<(&str, u64)> = BTreeSet::new();
+        let mut per_id: BTreeMap<&str, Vec<u64>> = BTreeMap::new();
+        for e in &self.entries {
+            if !is_valid_id(&e.id) {
+                return Err(bad(format!(
+                    "entry id {:?} must be 1-128 chars of [a-z0-9._-]",
+                    e.id
+                )));
+            }
+            if e.version == 0 {
+                return Err(bad(format!("{}: versions start at 1", e.id)));
+            }
+            if !is_hex_digest(&e.sha256) {
+                return Err(bad(format!(
+                    "{}: sha256 {:?} is not 64 lowercase hex chars",
+                    e.reference(),
+                    e.sha256
+                )));
+            }
+            if !seen.insert((e.id.as_str(), e.version)) {
+                return Err(bad(format!("duplicate entry {}", e.reference())));
+            }
+            per_id.entry(e.id.as_str()).or_default().push(e.version);
+        }
+        for (id, mut versions) in per_id {
+            versions.sort_unstable();
+            for (i, v) in versions.iter().enumerate() {
+                if *v != (i as u64).wrapping_add(1) {
+                    return Err(bad(format!(
+                        "{id}: versions must be contiguous from 1, found gap before {v}"
+                    )));
+                }
+            }
+        }
+        for e in &self.entries {
+            let Some(l) = &e.lineage else { continue };
+            if !is_hex_digest(&l.parent_snapshot_sha256) {
+                return Err(bad(format!(
+                    "{}: lineage snapshot hash {:?} is not 64 lowercase hex chars",
+                    e.reference(),
+                    l.parent_snapshot_sha256
+                )));
+            }
+            if l.parent_id == e.id && l.parent_version == e.version {
+                return Err(bad(format!("{} is its own lineage parent", e.reference())));
+            }
+            if !seen.contains(&(l.parent_id.as_str(), l.parent_version)) {
+                return Err(bad(format!(
+                    "{}: dangling lineage parent {}@{}",
+                    e.reference(),
+                    l.parent_id,
+                    l.parent_version
+                )));
+            }
+        }
+        // Every chain must reach a root: walk each entry's parents with
+        // a visited set so a cycle is a typed error, not a hang.
+        for e in &self.entries {
+            self.walk_to_root(&e.id, e.version)?;
+        }
+        Ok(())
+    }
+
+    /// Look up one entry.
+    pub fn find(&self, id: &str, version: u64) -> Option<&ManifestEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.id == id && e.version == version)
+    }
+
+    /// The highest published version of `id`, if any.
+    pub fn latest(&self, id: &str) -> Option<&ManifestEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.id == id)
+            .max_by_key(|e| e.version)
+    }
+
+    /// The version `push` assigns next for `id`: `max + 1`, or 1.
+    pub fn next_version(&self, id: &str) -> u64 {
+        self.latest(id).map_or(1, |e| e.version.saturating_add(1))
+    }
+
+    /// Walk the lineage chain from `(id, version)` to its root. Returns
+    /// the chain root-first, ending at the queried entry. Dangling
+    /// parents and cycles are typed errors — this is the termination
+    /// guarantee `fica registry verify` relies on.
+    pub fn walk_to_root(&self, id: &str, version: u64) -> Result<Vec<&ManifestEntry>, IcaError> {
+        let mut chain: Vec<&ManifestEntry> = Vec::new();
+        let mut visited: BTreeSet<(&str, u64)> = BTreeSet::new();
+        let mut cur = self.find(id, version).ok_or_else(|| {
+            bad(format!("unknown entry {id}@{version}"))
+        })?;
+        loop {
+            if !visited.insert((cur.id.as_str(), cur.version)) {
+                return Err(bad(format!(
+                    "lineage cycle through {} (walk from {id}@{version})",
+                    cur.reference()
+                )));
+            }
+            chain.push(cur);
+            let Some(l) = &cur.lineage else { break };
+            cur = self.find(&l.parent_id, l.parent_version).ok_or_else(|| {
+                bad(format!(
+                    "{}: dangling lineage parent {}@{}",
+                    cur.reference(),
+                    l.parent_id,
+                    l.parent_version
+                ))
+            })?;
+        }
+        chain.reverse();
+        Ok(chain)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn digest(tag: &str) -> String {
+        super::super::sha256::sha256_hex(tag.as_bytes())
+    }
+
+    fn entry(id: &str, version: u64, blob: &str) -> ManifestEntry {
+        ManifestEntry { id: id.into(), version, sha256: digest(blob), lineage: None }
+    }
+
+    fn chained(id: &str, version: u64, blob: &str, parent: (&str, u64)) -> ManifestEntry {
+        ManifestEntry {
+            id: id.into(),
+            version,
+            sha256: digest(blob),
+            lineage: Some(Lineage {
+                parent_id: parent.0.into(),
+                parent_version: parent.1,
+                parent_snapshot_sha256: digest("snap"),
+            }),
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_byte_stable_and_sorted() {
+        let m = Manifest {
+            entries: vec![
+                chained("m", 2, "b", ("m", 1)),
+                entry("m", 1, "a"),
+                entry("aa", 1, "c"),
+            ],
+        };
+        m.validate().unwrap();
+        let s = m.to_json_string();
+        let back = Manifest::parse_str(&s).unwrap();
+        // Canonical order: (id, version) ascending.
+        assert_eq!(back.entries[0].id, "aa");
+        assert_eq!(back.entries[1].reference(), "m@1");
+        assert_eq!(back.entries[2].reference(), "m@2");
+        assert_eq!(back.to_json_string(), s);
+    }
+
+    #[test]
+    fn parse_fails_closed() {
+        let bad_cases: &[&str] = &[
+            "",
+            "[]",
+            "{}",
+            r#"{"schema":"fica.registry_manifest/v2","entries":[]}"#,
+            r#"{"schema":"fica.registry_manifest/v1"}"#,
+            r#"{"schema":"fica.registry_manifest/v1","entries":{}}"#,
+            r#"{"schema":"fica.registry_manifest/v1","entries":[],"extra":1}"#,
+            r#"{"schema":"fica.registry_manifest/v1","entries":[{"id":"m"}]}"#,
+        ];
+        for src in bad_cases {
+            assert!(
+                matches!(Manifest::parse_str(src), Err(IcaError::InvalidRegistry { .. })),
+                "accepted: {src}"
+            );
+        }
+    }
+
+    #[test]
+    fn invariants_reject_duplicates_gaps_and_bad_digests() {
+        let dup = Manifest { entries: vec![entry("m", 1, "a"), entry("m", 1, "b")] };
+        assert!(matches!(dup.validate(), Err(IcaError::InvalidRegistry { .. })));
+
+        let gap = Manifest { entries: vec![entry("m", 1, "a"), entry("m", 3, "b")] };
+        assert!(matches!(gap.validate(), Err(IcaError::InvalidRegistry { .. })));
+
+        let mut short = entry("m", 1, "a");
+        short.sha256.truncate(10);
+        let m = Manifest { entries: vec![short] };
+        assert!(matches!(m.validate(), Err(IcaError::InvalidRegistry { .. })));
+
+        let zero = Manifest {
+            entries: vec![ManifestEntry {
+                id: "m".into(),
+                version: 0,
+                sha256: digest("a"),
+                lineage: None,
+            }],
+        };
+        assert!(matches!(zero.validate(), Err(IcaError::InvalidRegistry { .. })));
+
+        let bad_id = Manifest {
+            entries: vec![ManifestEntry {
+                id: "M@x".into(),
+                version: 1,
+                sha256: digest("a"),
+                lineage: None,
+            }],
+        };
+        assert!(matches!(bad_id.validate(), Err(IcaError::InvalidRegistry { .. })));
+    }
+
+    #[test]
+    fn lineage_dangling_and_cycles_are_typed_errors() {
+        let dangling = Manifest { entries: vec![chained("m", 1, "a", ("ghost", 1))] };
+        assert!(matches!(dangling.validate(), Err(IcaError::InvalidRegistry { .. })));
+
+        // a@1 ← b@1 ← a@1: a two-entry cycle must terminate the walk
+        // with a typed error, not hang.
+        let cycle = Manifest {
+            entries: vec![chained("a", 1, "x", ("b", 1)), chained("b", 1, "y", ("a", 1))],
+        };
+        assert!(matches!(cycle.validate(), Err(IcaError::InvalidRegistry { .. })));
+    }
+
+    #[test]
+    fn walk_to_root_returns_root_first_chain() {
+        let m = Manifest {
+            entries: vec![
+                entry("m", 1, "a"),
+                chained("m", 2, "b", ("m", 1)),
+                chained("m", 3, "c", ("m", 2)),
+            ],
+        };
+        m.validate().unwrap();
+        let chain = m.walk_to_root("m", 3).unwrap();
+        let refs: Vec<String> = chain.iter().map(|e| e.reference()).collect();
+        assert_eq!(refs, ["m@1", "m@2", "m@3"]);
+        assert_eq!(m.next_version("m"), 4);
+        assert_eq!(m.next_version("fresh"), 1);
+    }
+
+    #[test]
+    fn model_refs_parse_fail_closed() {
+        assert_eq!(parse_model_ref("m@3").unwrap(), ("m".to_string(), 3));
+        for s in ["m", "m@", "@1", "m@0", "m@x", "M@1", "a@b@c"] {
+            assert!(
+                matches!(parse_model_ref(s), Err(IcaError::InvalidRegistry { .. })),
+                "accepted {s:?}"
+            );
+        }
+    }
+}

@@ -1,0 +1,34 @@
+//! Versioned, integrity-checked model artifacts with refit lineage.
+//!
+//! At fleet scale a fitted [`crate::estimator::IcaModel`] is a deployed
+//! artifact, not a loose JSON file. This module is the registry the
+//! `fica registry` CLI, `fica serve --registry`, and `fica refit
+//! --registry` operate on:
+//!
+//! * [`manifest`] — the pure core: `fica.registry_manifest/v1` typed
+//!   entries ([`Manifest`], [`ManifestEntry`], [`Lineage`]), fail-closed
+//!   parsing, and cross-entry invariant validation (duplicate
+//!   id/version, version gaps, malformed digests, dangling or cyclic
+//!   lineage — all typed [`crate::error::IcaError::InvalidRegistry`]);
+//! * [`sha256`] — dependency-free SHA-256 for content addressing;
+//! * [`store`] — the thin I/O shell: the `manifest.json` +
+//!   `artifacts/<sha256>.json` directory layout ([`Registry`]:
+//!   push/pull/verify/log) and the verifying [`Resolver`] that loads a
+//!   model only after its bytes re-hash to the manifest digest and pass
+//!   the fail-closed model parse.
+//!
+//! Lineage: each `fit_append` refit pushed with a parent records the
+//! parent's `id@version` plus the SHA-256 of the parent's moment
+//! snapshot, so a refit chain is auditable end to end (`fica registry
+//! log`) and `verify` can re-derive every link from the artifacts
+//! themselves. Field-by-field spec: `docs/REGISTRY_SCHEMA.md`.
+
+pub mod manifest;
+pub mod sha256;
+pub mod store;
+
+pub use self::manifest::{
+    is_valid_id, parse_model_ref, Lineage, Manifest, ManifestEntry, REGISTRY_SCHEMA,
+};
+pub use self::sha256::{is_hex_digest, sha256_file, sha256_hex};
+pub use self::store::{load_model_checked, snapshot_sha256, Registry, Resolver, VerifySummary};

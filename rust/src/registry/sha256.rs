@@ -1,0 +1,167 @@
+//! Dependency-free SHA-256 (FIPS 180-4) for artifact integrity.
+//!
+//! The registry content-addresses every artifact by the SHA-256 of its
+//! exact file bytes, so the implementation must be bit-exact and
+//! deterministic — no platform hashers, no feature gates. The
+//! compression function below is the textbook one; the test vectors at
+//! the bottom are the FIPS 180-4 examples plus a multi-block message.
+
+use crate::error::IcaError;
+use std::path::Path;
+
+/// Round constants: the first 32 bits of the fractional parts of the
+/// cube roots of the first 64 primes (FIPS 180-4 §4.2.2).
+const K: [u32; 64] = [
+    0x428a2f98, 0x71374491, 0xb5c0fbcf, 0xe9b5dba5, 0x3956c25b, 0x59f111f1, 0x923f82a4,
+    0xab1c5ed5, 0xd807aa98, 0x12835b01, 0x243185be, 0x550c7dc3, 0x72be5d74, 0x80deb1fe,
+    0x9bdc06a7, 0xc19bf174, 0xe49b69c1, 0xefbe4786, 0x0fc19dc6, 0x240ca1cc, 0x2de92c6f,
+    0x4a7484aa, 0x5cb0a9dc, 0x76f988da, 0x983e5152, 0xa831c66d, 0xb00327c8, 0xbf597fc7,
+    0xc6e00bf3, 0xd5a79147, 0x06ca6351, 0x14292967, 0x27b70a85, 0x2e1b2138, 0x4d2c6dfc,
+    0x53380d13, 0x650a7354, 0x766a0abb, 0x81c2c92e, 0x92722c85, 0xa2bfe8a1, 0xa81a664b,
+    0xc24b8b70, 0xc76c51a3, 0xd192e819, 0xd6990624, 0xf40e3585, 0x106aa070, 0x19a4c116,
+    0x1e376c08, 0x2748774c, 0x34b0bcb5, 0x391c0cb3, 0x4ed8aa4a, 0x5b9cca4f, 0x682e6ff3,
+    0x748f82ee, 0x78a5636f, 0x84c87814, 0x8cc70208, 0x90befffa, 0xa4506ceb, 0xbef9a3f7,
+    0xc67178f2,
+];
+
+/// Initial hash state: the first 32 bits of the fractional parts of the
+/// square roots of the first 8 primes (FIPS 180-4 §5.3.3).
+const H0: [u32; 8] = [
+    0x6a09e667, 0xbb67ae85, 0x3c6ef372, 0xa54ff53a, 0x510e527f, 0x9b05688c, 0x1f83d9ab,
+    0x5be0cd19,
+];
+
+/// Process one padded 64-byte block into the running state.
+fn compress(state: &mut [u32; 8], block: &[u8]) {
+    let mut w = [0u32; 64];
+    for (j, word) in block.chunks_exact(4).enumerate().take(16) {
+        w[j] = u32::from_be_bytes([word[0], word[1], word[2], word[3]]);
+    }
+    for j in 16..64 {
+        let s0 = w[j - 15].rotate_right(7) ^ w[j - 15].rotate_right(18) ^ (w[j - 15] >> 3);
+        let s1 = w[j - 2].rotate_right(17) ^ w[j - 2].rotate_right(19) ^ (w[j - 2] >> 10);
+        w[j] = w[j - 16]
+            .wrapping_add(s0)
+            .wrapping_add(w[j - 7])
+            .wrapping_add(s1);
+    }
+    let [mut a, mut b, mut c, mut d, mut e, mut f, mut g, mut h] = *state;
+    for j in 0..64 {
+        let big_s1 = e.rotate_right(6) ^ e.rotate_right(11) ^ e.rotate_right(25);
+        let ch = (e & f) ^ (!e & g);
+        let temp1 = h
+            .wrapping_add(big_s1)
+            .wrapping_add(ch)
+            .wrapping_add(K[j])
+            .wrapping_add(w[j]);
+        let big_s0 = a.rotate_right(2) ^ a.rotate_right(13) ^ a.rotate_right(22);
+        let maj = (a & b) ^ (a & c) ^ (b & c);
+        let temp2 = big_s0.wrapping_add(maj);
+        h = g;
+        g = f;
+        f = e;
+        e = d.wrapping_add(temp1);
+        d = c;
+        c = b;
+        b = a;
+        a = temp1.wrapping_add(temp2);
+    }
+    state[0] = state[0].wrapping_add(a);
+    state[1] = state[1].wrapping_add(b);
+    state[2] = state[2].wrapping_add(c);
+    state[3] = state[3].wrapping_add(d);
+    state[4] = state[4].wrapping_add(e);
+    state[5] = state[5].wrapping_add(f);
+    state[6] = state[6].wrapping_add(g);
+    state[7] = state[7].wrapping_add(h);
+}
+
+/// SHA-256 digest of `bytes` as a 64-character lowercase hex string —
+/// the exact form `fica.registry_manifest/v1` stores per artifact.
+pub fn sha256_hex(bytes: &[u8]) -> String {
+    // Bit length first: the message is capped well below 2^61 bytes by
+    // addressable memory, so the shift cannot lose bits.
+    let bit_len = (bytes.len() as u64) << 3;
+    let mut state = H0;
+    let mut tail: Vec<u8> = Vec::with_capacity(128);
+    let full_blocks = bytes.chunks_exact(64);
+    tail.extend_from_slice(full_blocks.remainder());
+    for block in full_blocks {
+        compress(&mut state, block);
+    }
+    tail.push(0x80);
+    while tail.len() % 64 != 56 {
+        tail.push(0);
+    }
+    tail.extend_from_slice(&bit_len.to_be_bytes());
+    for block in tail.chunks_exact(64) {
+        compress(&mut state, block);
+    }
+    let mut out = String::with_capacity(64);
+    for word in state {
+        for byte in word.to_be_bytes() {
+            out.push(hex_digit(byte >> 4));
+            out.push(hex_digit(byte & 0x0f));
+        }
+    }
+    out
+}
+
+/// SHA-256 of a file's exact bytes, hex-encoded.
+pub fn sha256_file(path: impl AsRef<Path>) -> Result<String, IcaError> {
+    let path = path.as_ref();
+    let bytes = std::fs::read(path)
+        .map_err(|e| IcaError::io(path.display().to_string(), e))?;
+    Ok(sha256_hex(&bytes))
+}
+
+fn hex_digit(nibble: u8) -> char {
+    match nibble {
+        0..=9 => (b'0' + nibble) as char,
+        _ => (b'a' + (nibble - 10)) as char,
+    }
+}
+
+/// `true` iff `s` is a well-formed digest: exactly 64 lowercase hex
+/// characters. Uppercase is rejected — one canonical spelling only, so
+/// digests compare as strings.
+pub fn is_hex_digest(s: &str) -> bool {
+    s.len() == 64
+        && s.bytes()
+            .all(|b| b.is_ascii_digit() || (b'a'..=b'f').contains(&b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// FIPS 180-4 appendix test vectors plus a multi-block message.
+    #[test]
+    fn fips_vectors() {
+        assert_eq!(
+            sha256_hex(b""),
+            "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855"
+        );
+        assert_eq!(
+            sha256_hex(b"abc"),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+        assert_eq!(
+            sha256_hex(b"abcdbcdecdefdefgefghfghighijhijkijkljklmklmnlmnomnopnopq"),
+            "248d6a61d20638b8e5c026930c3e6039a33ce45964ff2167f6ecedd419db06c1"
+        );
+        // 128 bytes: exercises the exact-two-block path (no tail bits).
+        assert_eq!(
+            sha256_hex(&[b'a'; 128]),
+            "6836cf13bac400e9105071cd6af47084dfacad4e5e302c94bfed24e013afb73e"
+        );
+    }
+
+    #[test]
+    fn digest_shape_check() {
+        assert!(is_hex_digest(&sha256_hex(b"x")));
+        assert!(!is_hex_digest("abc"));
+        assert!(!is_hex_digest(&"A".repeat(64)));
+        assert!(!is_hex_digest(&"g".repeat(64)));
+    }
+}

@@ -1,0 +1,397 @@
+//! The on-disk registry: `manifest.json` plus content-addressed
+//! artifacts, and the verifying [`Resolver`] everything loads through.
+//!
+//! Layout of a registry directory:
+//!
+//! ```text
+//! REGISTRY/
+//! ├── manifest.json            fica.registry_manifest/v1 (canonical JSON)
+//! └── artifacts/
+//!     └── <sha256>.json        exact model bytes, named by their digest
+//! ```
+//!
+//! The shell is thin: all schema and invariant logic lives in
+//! [`super::manifest`], all hashing in [`super::sha256`]. Nothing in the
+//! serving or CLI paths parses an artifact before its digest and schema
+//! have been checked — a flipped byte anywhere is a typed
+//! [`IcaError::InvalidRegistry`], never a silently served model.
+
+use super::manifest::{Lineage, Manifest, ManifestEntry};
+use super::sha256::{is_hex_digest, sha256_hex};
+use crate::data::MomentSnapshot;
+use crate::error::IcaError;
+use crate::estimator::IcaModel;
+use std::path::{Path, PathBuf};
+
+/// SHA-256 (64-hex) of a moment snapshot's canonical JSON — the digest
+/// registry lineage records. Byte-compatible with the `stats` section of
+/// the serialized model, so the lineage link can be re-checked against
+/// the parent artifact at any time.
+pub fn snapshot_sha256(snapshot: &MomentSnapshot) -> String {
+    sha256_hex(snapshot.canonical_json().to_string_compact().as_bytes())
+}
+
+/// Load a model file through the verifying path (the route `fica client
+/// --model-path` serves through). Two checks run before the fail-closed
+/// model parse:
+///
+/// - if the file name is content-addressed (`<64-hex>.json`, i.e. a
+///   registry artifact), the bytes are re-hashed and must match the
+///   name — a tampered artifact is a typed [`IcaError::InvalidRegistry`]
+///   refusal, not a silently served model;
+/// - the bytes must parse as a valid `fica.ica_model/v*` document
+///   (schema tag, dimensions, finiteness — [`IcaModel::from_json_str`]).
+pub fn load_model_checked(path: impl AsRef<Path>) -> Result<IcaModel, IcaError> {
+    let path = path.as_ref();
+    let bytes = std::fs::read(path)
+        .map_err(|e| IcaError::io(path.display().to_string(), e))?;
+    if let Some(stem) = path.file_stem().and_then(|s| s.to_str()) {
+        if is_hex_digest(stem) {
+            let got = sha256_hex(&bytes);
+            if got != stem {
+                return Err(IcaError::invalid_registry(format!(
+                    "artifact {} does not match its content address: bytes hash to {got}",
+                    path.display()
+                )));
+            }
+        }
+    }
+    let text = String::from_utf8(bytes).map_err(|_| {
+        IcaError::invalid_registry(format!("artifact {} is not UTF-8", path.display()))
+    })?;
+    IcaModel::from_json_str(&text)
+}
+
+/// What [`Registry::verify`] checked when it returned clean.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct VerifySummary {
+    /// Manifest entries validated.
+    pub entries: usize,
+    /// Distinct artifact files re-hashed.
+    pub artifacts: usize,
+    /// Root entries (no lineage) the chains terminate at.
+    pub roots: usize,
+}
+
+/// A local registry directory. Handles are cheap: every operation
+/// re-reads `manifest.json` fail-closed, so concurrent readers always
+/// see a validated manifest (the CLI is the only writer).
+#[derive(Clone, Debug)]
+pub struct Registry {
+    dir: PathBuf,
+}
+
+impl Registry {
+    /// Open an existing registry — `DIR/manifest.json` must exist and
+    /// validate.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Registry, IcaError> {
+        let reg = Registry { dir: dir.into() };
+        reg.manifest()?;
+        Ok(reg)
+    }
+
+    /// Open a registry, initializing an empty one (directory, empty
+    /// manifest, `artifacts/`) if the manifest does not exist yet.
+    pub fn open_or_init(dir: impl Into<PathBuf>) -> Result<Registry, IcaError> {
+        let reg = Registry { dir: dir.into() };
+        if !reg.manifest_path().exists() {
+            std::fs::create_dir_all(reg.artifacts_dir())
+                .map_err(|e| IcaError::io(reg.artifacts_dir().display().to_string(), e))?;
+            reg.write_manifest(&Manifest::new())?;
+        }
+        reg.manifest()?;
+        Ok(reg)
+    }
+
+    /// The registry directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn manifest_path(&self) -> PathBuf {
+        self.dir.join("manifest.json")
+    }
+
+    fn artifacts_dir(&self) -> PathBuf {
+        self.dir.join("artifacts")
+    }
+
+    /// The content-addressed path of an artifact digest.
+    pub fn artifact_path(&self, sha256: &str) -> PathBuf {
+        self.artifacts_dir().join(format!("{sha256}.json"))
+    }
+
+    /// Read and validate `manifest.json` (fail-closed).
+    pub fn manifest(&self) -> Result<Manifest, IcaError> {
+        let path = self.manifest_path();
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| IcaError::io(path.display().to_string(), e))?;
+        Manifest::parse_str(&text)
+    }
+
+    /// Write the manifest atomically (temp file + rename), in canonical
+    /// byte-stable form, after validating it.
+    fn write_manifest(&self, m: &Manifest) -> Result<(), IcaError> {
+        m.validate()?;
+        let path = self.manifest_path();
+        let tmp = self.dir.join("manifest.json.tmp");
+        std::fs::write(&tmp, m.to_json_string())
+            .map_err(|e| IcaError::io(tmp.display().to_string(), e))?;
+        std::fs::rename(&tmp, &path)
+            .map_err(|e| IcaError::io(path.display().to_string(), e))
+    }
+
+    /// Publish a model file under `id`.
+    ///
+    /// The file must parse as a valid model (fail-closed) before
+    /// anything is written. The artifact bytes are stored verbatim under
+    /// their SHA-256, the new entry gets version `max + 1`, and when
+    /// `parent` names an existing `(id, version)` the entry records a
+    /// lineage link carrying the digest of the **parent's** moment
+    /// snapshot — the moments a `fit_append` refit chain was seeded
+    /// from. A parent without stored moments (a legacy v1 artifact)
+    /// cannot anchor a lineage and is a typed error.
+    pub fn push(
+        &self,
+        id: &str,
+        model_path: impl AsRef<Path>,
+        parent: Option<(String, u64)>,
+    ) -> Result<ManifestEntry, IcaError> {
+        let model_path = model_path.as_ref();
+        let bytes = std::fs::read(model_path)
+            .map_err(|e| IcaError::io(model_path.display().to_string(), e))?;
+        let text = String::from_utf8(bytes.clone()).map_err(|_| {
+            IcaError::invalid_registry(format!(
+                "model file {} is not UTF-8",
+                model_path.display()
+            ))
+        })?;
+        // Junk never enters the registry: the artifact must be a valid
+        // model before its bytes are content-addressed.
+        IcaModel::from_json_str(&text)?;
+
+        let mut manifest = self.manifest()?;
+        let lineage = match parent {
+            None => None,
+            Some((pid, pver)) => {
+                let pentry = manifest.find(&pid, pver).ok_or_else(|| {
+                    IcaError::invalid_registry(format!(
+                        "push parent {pid}@{pver} is not in the registry"
+                    ))
+                })?;
+                let parent_model = self.load_verified(pentry)?;
+                let snap = parent_model.moments().ok_or_else(|| {
+                    IcaError::invalid_registry(format!(
+                        "push parent {pid}@{pver} carries no moment snapshot \
+                         (schema-v1 artifact) — it cannot anchor a refit lineage"
+                    ))
+                })?;
+                Some(Lineage {
+                    parent_id: pid,
+                    parent_version: pver,
+                    parent_snapshot_sha256: snapshot_sha256(snap),
+                })
+            }
+        };
+
+        let sha256 = sha256_hex(&bytes);
+        let artifact = self.artifact_path(&sha256);
+        if !artifact.exists() {
+            std::fs::create_dir_all(self.artifacts_dir())
+                .map_err(|e| IcaError::io(self.artifacts_dir().display().to_string(), e))?;
+            std::fs::write(&artifact, &bytes)
+                .map_err(|e| IcaError::io(artifact.display().to_string(), e))?;
+        }
+        let entry = ManifestEntry {
+            id: id.to_string(),
+            version: manifest.next_version(id),
+            sha256,
+            lineage,
+        };
+        manifest.entries.push(entry.clone());
+        self.write_manifest(&manifest)?;
+        Ok(entry)
+    }
+
+    /// The verified bytes of `(id, version)`'s artifact: read, re-hash,
+    /// compare against the manifest digest. A mismatch (or a missing
+    /// entry) is a typed [`IcaError::InvalidRegistry`].
+    pub fn pull(&self, id: &str, version: u64) -> Result<Vec<u8>, IcaError> {
+        let manifest = self.manifest()?;
+        let entry = manifest.find(id, version).ok_or_else(|| {
+            IcaError::invalid_registry(format!("unknown entry {id}@{version}"))
+        })?;
+        self.pull_entry(entry)
+    }
+
+    fn pull_entry(&self, entry: &ManifestEntry) -> Result<Vec<u8>, IcaError> {
+        let path = self.artifact_path(&entry.sha256);
+        let bytes = std::fs::read(&path)
+            .map_err(|e| IcaError::io(path.display().to_string(), e))?;
+        let got = sha256_hex(&bytes);
+        if got != entry.sha256 {
+            return Err(IcaError::invalid_registry(format!(
+                "artifact for {} is corrupt: manifest says {}, bytes hash to {got}",
+                entry.reference(),
+                entry.sha256
+            )));
+        }
+        Ok(bytes)
+    }
+
+    fn load_verified(&self, entry: &ManifestEntry) -> Result<IcaModel, IcaError> {
+        let bytes = self.pull_entry(entry)?;
+        let text = String::from_utf8(bytes).map_err(|_| {
+            IcaError::invalid_registry(format!(
+                "artifact for {} is not UTF-8",
+                entry.reference()
+            ))
+        })?;
+        IcaModel::from_json_str(&text)
+    }
+
+    /// Verify the whole registry: fail-closed manifest parse +
+    /// invariants, every artifact re-hashed against its manifest digest
+    /// and parsed as a valid model, every lineage chain walked to a root
+    /// (cycles and dangling parents are typed errors), and every lineage
+    /// snapshot digest re-checked against the parent artifact's actual
+    /// moment snapshot. Returns what it checked; the first violation
+    /// aborts with a typed [`IcaError::InvalidRegistry`].
+    pub fn verify(&self) -> Result<VerifySummary, IcaError> {
+        let manifest = self.manifest()?;
+        let mut summary = VerifySummary { entries: manifest.entries.len(), ..Default::default() };
+        let mut hashed: std::collections::BTreeSet<&str> = std::collections::BTreeSet::new();
+        for entry in &manifest.entries {
+            let model = self.load_verified(entry)?;
+            if hashed.insert(entry.sha256.as_str()) {
+                summary.artifacts = summary.artifacts.saturating_add(1);
+            }
+            if entry.lineage.is_none() {
+                summary.roots = summary.roots.saturating_add(1);
+            }
+            // The lineage snapshot digest must match the parent's actual
+            // stored moments — a re-published parent cannot silently
+            // change what a refit claims it was seeded from.
+            if let Some(l) = &entry.lineage {
+                let pentry = manifest.find(&l.parent_id, l.parent_version).ok_or_else(|| {
+                    IcaError::invalid_registry(format!(
+                        "{}: dangling lineage parent {}@{}",
+                        entry.reference(),
+                        l.parent_id,
+                        l.parent_version
+                    ))
+                })?;
+                let parent_model = self.load_verified(pentry)?;
+                let snap = parent_model.moments().ok_or_else(|| {
+                    IcaError::invalid_registry(format!(
+                        "{}: lineage parent {} carries no moment snapshot",
+                        entry.reference(),
+                        pentry.reference()
+                    ))
+                })?;
+                let got = snapshot_sha256(snap);
+                if got != l.parent_snapshot_sha256 {
+                    return Err(IcaError::invalid_registry(format!(
+                        "{}: lineage snapshot digest {} does not match parent {} \
+                         (actual {got})",
+                        entry.reference(),
+                        l.parent_snapshot_sha256,
+                        pentry.reference()
+                    )));
+                }
+            }
+            manifest.walk_to_root(&entry.id, entry.version)?;
+            drop(model);
+        }
+        Ok(summary)
+    }
+
+    /// Render the refit-lineage forest as text: one tree per root entry,
+    /// children indented under the parent they were refit from, each
+    /// line carrying `id@version` and a digest prefix. Deterministic
+    /// (sorted by `(id, version)` at every level).
+    pub fn log_tree(&self) -> Result<String, IcaError> {
+        let manifest = self.manifest()?;
+        let mut sorted: Vec<&ManifestEntry> = manifest.entries.iter().collect();
+        sorted.sort_by(|a, b| (&a.id, a.version).cmp(&(&b.id, b.version)));
+        let mut out = String::new();
+        for root in sorted.iter().filter(|e| e.lineage.is_none()) {
+            render_tree(&sorted, root, 0, &mut out);
+        }
+        Ok(out)
+    }
+}
+
+fn render_tree(all: &[&ManifestEntry], entry: &ManifestEntry, depth: usize, out: &mut String) {
+    for _ in 0..depth {
+        out.push_str("    ");
+    }
+    if depth > 0 {
+        // Replace the last indent step with the branch glyph.
+        out.truncate(out.len().saturating_sub(4));
+        out.push_str("└── ");
+    }
+    out.push_str(&entry.reference());
+    out.push_str("  sha256:");
+    out.push_str(entry.sha256.get(..12).unwrap_or(&entry.sha256));
+    if let Some(l) = &entry.lineage {
+        out.push_str("  refit-of:");
+        out.push_str(&l.parent_id);
+        out.push('@');
+        out.push_str(&l.parent_version.to_string());
+        out.push_str(" snapshot:");
+        out.push_str(
+            l.parent_snapshot_sha256
+                .get(..12)
+                .unwrap_or(&l.parent_snapshot_sha256),
+        );
+    }
+    out.push('\n');
+    for child in all.iter().filter(|c| {
+        c.lineage
+            .as_ref()
+            .is_some_and(|l| l.parent_id == entry.id && l.parent_version == entry.version)
+    }) {
+        render_tree(all, child, depth.saturating_add(1), out);
+    }
+}
+
+/// The verifying model loader the daemon and CLI resolve `id@version`
+/// references through. Opening a resolver parses and validates the
+/// manifest once; every [`Resolver::resolve`] then re-reads the artifact
+/// bytes, re-hashes them against the manifest digest, and only then
+/// hands the bytes to the fail-closed model parser.
+#[derive(Clone, Debug)]
+pub struct Resolver {
+    registry: Registry,
+    manifest: Manifest,
+}
+
+impl Resolver {
+    /// Open a registry for resolution (fail-closed manifest load).
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Resolver, IcaError> {
+        let registry = Registry::open(dir)?;
+        let manifest = registry.manifest()?;
+        Ok(Resolver { registry, manifest })
+    }
+
+    /// The validated manifest this resolver serves from.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Resolve `(id, version)` into a verified, parsed model.
+    pub fn resolve(&self, id: &str, version: u64) -> Result<IcaModel, IcaError> {
+        let entry = self.manifest.find(id, version).ok_or_else(|| {
+            IcaError::invalid_registry(format!("unknown entry {id}@{version}"))
+        })?;
+        self.registry.load_verified(entry)
+    }
+
+    /// Resolve an `id@version` reference string (see
+    /// [`super::manifest::parse_model_ref`]).
+    pub fn resolve_ref(&self, reference: &str) -> Result<IcaModel, IcaError> {
+        let (id, version) = super::manifest::parse_model_ref(reference)?;
+        self.resolve(&id, version)
+    }
+}

@@ -389,6 +389,7 @@ fn server_end_to_end_fit_transform_shutdown() {
         addr: daemon::BindAddr::parse("tcp:127.0.0.1:0").unwrap(),
         workers: 2,
         core: CoreConfig { queue_bound: 8, parallelism: 2, cache_capacity: 2 },
+        registry: None,
     };
     let bound = daemon::BoundServer::bind(&opts).expect("bind");
     let addr = bound.local_addr().to_string();

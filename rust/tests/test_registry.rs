@@ -1,0 +1,175 @@
+//! Integration tests for the versioned model registry (ISSUE 10):
+//!
+//! - the checked-in fixture registry (a 3-deep `fit_append` lineage
+//!   chain) verifies end to end — every artifact re-hashed, every
+//!   lineage digest re-checked, every chain walked to its root,
+//! - each seeded-bad fixture variant (flipped artifact byte, truncated
+//!   manifest, duplicate version, dangling lineage parent) is refused
+//!   with its exact typed `IcaError::InvalidRegistry`, never a panic,
+//! - a model pulled by `id@version` transforms bitwise-identically to
+//!   loading its artifact file directly,
+//! - `log_tree` / `walk_to_root` reconstruct the full refit lineage,
+//! - push round-trips through a scratch registry and records lineage.
+
+use faster_ica::error::IcaError;
+use faster_ica::estimator::IcaModel;
+use faster_ica::linalg::Mat;
+use faster_ica::registry::{
+    load_model_checked, parse_model_ref, Registry, Resolver,
+};
+use std::path::{Path, PathBuf};
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/registry").join(name)
+}
+
+/// The valid fixture's deepest artifact digest (see the manifest).
+const V3_SHA: &str = "cc20854c4d7d2338e2c1ea297181722ae18f2359950162199e77d0c63d09cd0b";
+
+fn assert_invalid_registry(err: IcaError, needle: &str) {
+    assert!(
+        matches!(err, IcaError::InvalidRegistry { .. }),
+        "expected InvalidRegistry, got {err:?}"
+    );
+    let msg = err.to_string();
+    assert!(msg.contains(needle), "error {msg:?} should mention {needle:?}");
+}
+
+/// Contract: `Registry::verify` round-trips the checked-in fixture —
+/// the manifest parses, every artifact's bytes re-hash to the digest
+/// `pull` serves under, and the summary counts 3 entries sharing one
+/// lineage root.
+#[test]
+fn fixture_registry_verify_round_trips() {
+    let reg = Registry::open(fixture("valid")).expect("valid fixture opens");
+    let summary = reg.verify().expect("valid fixture verifies");
+    assert_eq!(summary.entries, 3);
+    assert_eq!(summary.artifacts, 3);
+    assert_eq!(summary.roots, 1);
+    // pull serves exactly the artifact bytes the digest names.
+    let bytes = reg.pull("m", 3).expect("pull m@3");
+    let direct = std::fs::read(fixture("valid").join("artifacts").join(format!("{V3_SHA}.json")))
+        .expect("artifact file");
+    assert_eq!(bytes, direct);
+}
+
+/// Contract: a single flipped byte in any artifact is a typed
+/// corruption refusal — `verify` re-hashes the bytes against the
+/// manifest digest and refuses to treat the file as a model.
+#[test]
+fn flipped_artifact_byte_is_a_typed_corruption_error() {
+    let reg = Registry::open(fixture("tampered_artifact")).expect("manifest itself is intact");
+    let err = reg.verify().expect_err("tampered artifact must not verify");
+    assert_invalid_registry(err, "corrupt");
+    // The same refusal guards direct pulls of the tampered entry.
+    let err = reg.pull("m", 3).expect_err("tampered pull must fail");
+    assert_invalid_registry(err, "corrupt");
+    // And the verifying loose-file loader: the artifact is digest-named,
+    // so load_model_checked re-hashes and refuses it too.
+    let err = load_model_checked(
+        fixture("tampered_artifact").join("artifacts").join(format!("{V3_SHA}.json")),
+    )
+    .expect_err("tampered digest-named file must not load");
+    assert!(matches!(err, IcaError::InvalidRegistry { .. }), "{err:?}");
+}
+
+#[test]
+fn truncated_manifest_is_a_typed_parse_error() {
+    let err = Registry::open(fixture("truncated_manifest"))
+        .expect_err("truncated manifest must not open");
+    assert_invalid_registry(err, "manifest");
+}
+
+#[test]
+fn duplicate_version_is_a_typed_invariant_error() {
+    let err = Registry::open(fixture("duplicate_version"))
+        .expect_err("duplicate (id, version) must not open");
+    assert_invalid_registry(err, "duplicate entry m@1");
+}
+
+#[test]
+fn dangling_parent_is_a_typed_invariant_error() {
+    let err = Registry::open(fixture("dangling_parent"))
+        .expect_err("dangling lineage parent must not open");
+    assert_invalid_registry(err, "dangling lineage parent ghost@1");
+}
+
+/// A model resolved from the registry transforms bitwise-identically to
+/// the same artifact loaded straight off disk — the verifying path adds
+/// integrity checks, not arithmetic.
+#[test]
+fn pulled_model_transforms_bitwise_like_the_raw_artifact() {
+    let reg = Registry::open(fixture("valid")).expect("valid fixture opens");
+    let bytes = reg.pull("m", 3).expect("pull m@3");
+    let pulled = IcaModel::from_json_str(std::str::from_utf8(&bytes).expect("utf-8 artifact"))
+        .expect("pulled bytes parse");
+    let direct =
+        IcaModel::load(fixture("valid").join("artifacts").join(format!("{V3_SHA}.json")))
+            .expect("direct artifact load");
+    let resolved = Resolver::open(fixture("valid"))
+        .and_then(|r| r.resolve("m", 3))
+        .expect("resolver load");
+    let x = Mat::from_vec(2, 4, vec![1.0, -2.0, 0.5, 3.0, 0.25, 4.0, -1.5, 2.0]);
+    let a = pulled.transform(&x).expect("pulled transform");
+    let b = direct.transform(&x).expect("direct transform");
+    let c = resolved.transform(&x).expect("resolved transform");
+    assert_eq!(a.as_slice(), b.as_slice(), "pull and direct load must agree bitwise");
+    assert_eq!(a.as_slice(), c.as_slice(), "resolver and direct load must agree bitwise");
+}
+
+/// Contract: the lineage walk terminates at the root and `log_tree`
+/// renders the whole 3-deep refit chain — each refit indented under the
+/// parent whose moment snapshot seeded it.
+#[test]
+fn lineage_walk_reconstructs_the_three_deep_refit_chain() {
+    let reg = Registry::open(fixture("valid")).expect("valid fixture opens");
+    let manifest = reg.manifest().expect("manifest loads");
+    let chain = manifest.walk_to_root("m", 3).expect("walk terminates");
+    let refs: Vec<String> = chain.iter().map(|e| e.reference()).collect();
+    assert_eq!(refs, ["m@1", "m@2", "m@3"], "root-first chain");
+    let tree = reg.log_tree().expect("log renders");
+    assert!(tree.contains("m@1"), "{tree}");
+    assert!(tree.contains("└── m@2"), "{tree}");
+    assert!(tree.contains("refit-of:m@2"), "{tree}");
+    // Each level indents one step deeper than its parent.
+    assert!(tree.contains("    └── m@3"), "{tree}");
+}
+
+#[test]
+fn model_refs_parse_and_reject_malformed_input() {
+    assert_eq!(parse_model_ref("m@3").expect("valid ref"), ("m".to_string(), 3));
+    for bad in ["m", "m@", "@3", "m@0", "m@x", "M@1", ""] {
+        assert!(parse_model_ref(bad).is_err(), "{bad:?} must be rejected");
+    }
+}
+
+/// Push round-trip in a scratch registry: pushing the fixture's root
+/// artifact twice (the second time as a refit of the first) yields
+/// versions 1 and 2, a recorded lineage link, and a verifying registry.
+#[test]
+fn push_assigns_versions_and_records_lineage() {
+    let dir = std::env::temp_dir().join(format!("fica_registry_it_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let reg = Registry::open_or_init(&dir).expect("scratch registry");
+    let artifact = fixture("valid").join("artifacts").join(format!("{V3_SHA}.json"));
+    let e1 = reg.push("scratch", &artifact, None).expect("root push");
+    assert_eq!((e1.id.as_str(), e1.version), ("scratch", 1));
+    assert!(e1.lineage.is_none());
+    let e2 = reg
+        .push("scratch", &artifact, Some(("scratch".to_string(), 1)))
+        .expect("refit push");
+    assert_eq!(e2.version, 2);
+    let lineage = e2.lineage.as_ref().expect("refit push records lineage");
+    assert_eq!(lineage.parent_id, "scratch");
+    assert_eq!(lineage.parent_version, 1);
+    let summary = reg.verify().expect("scratch registry verifies");
+    assert_eq!(summary.entries, 2);
+    // Identical bytes are content-addressed: stored once.
+    assert_eq!(summary.artifacts, 1);
+    // A parent outside the registry is a typed refusal, not a push.
+    let err = reg
+        .push("scratch", &artifact, Some(("ghost".to_string(), 1)))
+        .expect_err("dangling push parent");
+    assert_invalid_registry(err, "ghost@1");
+    let _ = std::fs::remove_dir_all(&dir);
+}

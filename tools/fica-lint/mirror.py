@@ -885,12 +885,13 @@ def lint_impl(rel, src, self_mode):
             rule_float_accum(code, ranges, sink)
         if not (rel.startswith("bench/") or rel.startswith("obs/")):
             rule_nondeterminism(code, sink)
-        if rel.startswith("data/") or rel == "util/json.rs":
+        if rel.startswith("data/") or rel.startswith("registry/") or rel == "util/json.rs":
             rule_fail_closed(code, sink)
         if (
             (rel.startswith("data/") and rel != "data/stats.rs")
             or rel == "util/json.rs"
             or rel.startswith("daemon/")
+            or rel.startswith("registry/")
         ):
             rule_unchecked_arith(code, sink)
         if rel == "backend/pool.rs" or rel.startswith("coordinator/") or rel.startswith("daemon/"):

@@ -1276,12 +1276,13 @@ fn lint_impl(rel: &str, src: &str, self_mode: bool) -> Vec<Violation> {
         if !(rel.starts_with("bench/") || rel.starts_with("obs/")) {
             rule_nondeterminism(&code, &mut sink);
         }
-        if rel.starts_with("data/") || rel == "util/json.rs" {
+        if rel.starts_with("data/") || rel.starts_with("registry/") || rel == "util/json.rs" {
             rule_fail_closed(&code, &mut sink);
         }
         if (rel.starts_with("data/") && rel != "data/stats.rs")
             || rel == "util/json.rs"
             || rel.starts_with("daemon/")
+            || rel.starts_with("registry/")
         {
             rule_unchecked_arith(&code, &mut sink);
         }
@@ -1408,6 +1409,27 @@ mod tests {
         assert_eq!(v.len(), 1, "{v:?}");
         assert_eq!(v[0].rule, "unchecked-arith");
         assert!(lint_file("daemon/core.rs", checked).is_empty());
+    }
+
+    #[test]
+    fn registry_paths_are_decoder_scoped() {
+        // The registry parses manifests and artifacts off disk, so both
+        // decoder rules apply under registry/: size arithmetic must be
+        // checked and decoder-shaped pub fns must return Result.
+        let arith = "fn f(n: usize) -> usize { n * 8 }";
+        let v = lint_file("registry/manifest.rs", arith);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "unchecked-arith");
+
+        let infallible = "pub fn parse_manifest(s: &str) -> u32 { s.len() as u32 }\n";
+        let v = lint_file("registry/store.rs", infallible);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "fail-closed");
+        assert!(v[0].msg.contains("must return `Result`"), "{}", v[0].msg);
+
+        let fallible =
+            "pub fn parse_manifest(s: &str) -> Result<u32, E> { Ok(s.len() as u32) }\n";
+        assert!(lint_file("registry/store.rs", fallible).is_empty());
     }
 
     #[test]
